@@ -1,0 +1,29 @@
+//! P:D-ratio sweep (the Fig. 9 / §5.1.3 experiment as a standalone tool):
+//! prints SARATHI's end-to-end gain over the baseline across P:D ratios
+//! and chunk sizes for a chosen sequence length, and marks the analytic
+//! optimum P:D = C/(B−1).
+//!
+//!     cargo run --release --example pd_sweep [seq_len]
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, SchedulerConfig};
+use sarathi::figures::common::{run_engine, steady_population, tokens_per_ms};
+
+fn main() {
+    let l: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(1024);
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), l);
+    let b = d.max_batch_size();
+    println!("LLaMA-13B/A6000, L={l}, B={b} (capacity formula)\n");
+    println!("{:>6}  {:>10}  {:>9}  {:>9}  {:>9}", "P:D", "base tok/ms", "C=128", "C=256", "C=512");
+    for pd in [1.0f64, 2.0, 5.0, 10.0, 14.0, 20.0, 28.0, 50.0, 100.0, 200.0] {
+        let pop = steady_population(b, l, pd, 4);
+        let base = tokens_per_ms(&run_engine(&d, &SchedulerConfig::baseline(b), &pop));
+        print!("{pd:>6.0}  {base:>10.2}");
+        for chunk in [128usize, 256, 512] {
+            let t = tokens_per_ms(&run_engine(&d, &SchedulerConfig::sarathi(chunk, b), &pop));
+            print!("  {:>8.2}x", t / base);
+        }
+        println!();
+    }
+    println!("\nanalytic optimum per chunk: P:D = C/(B-1) = {:.0} / {:.0} / {:.0}",
+        128.0 / (b as f64 - 1.0), 256.0 / (b as f64 - 1.0), 512.0 / (b as f64 - 1.0));
+}

@@ -1,0 +1,38 @@
+//! Full-scale §5.3 reproduction: GPT-3 (96 layers, hidden 12288) on 64
+//! simulated A100s, 10 000 requests with Zipf(0.4) lengths in [1K, 4K] at
+//! P:D = 10, chunk 256 — the Fig. 12 experiment at the paper's size.
+//!
+//!     cargo run --release --example pipeline_sim [n_requests]
+
+use sarathi::figures::fig12_pipeline;
+use sarathi::util::Summary;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(10_000);
+    println!("simulating {n} requests on 64 A100s (TP8xPP8 vs 8xTP8)...");
+    let t0 = std::time::Instant::now();
+    let out = fig12_pipeline::simulate(n);
+    println!("wall time: {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let bubbles = |r: &sarathi::simulator::ClusterResult| {
+        let mut s = Summary::new();
+        for rep in &r.per_replica {
+            for &b in &rep.bubble_per_request {
+                s.add(b);
+            }
+        }
+        s
+    };
+    let bo = bubbles(&out.orca_pp);
+    let bs = bubbles(&out.sarathi_pp);
+    println!("Fig12a median bubble/request: orca {:.2}s  sarathi {:.2}s  ({:.2}x reduction; paper: 6.29x)",
+        bo.percentile(50.0), bs.percentile(50.0), bo.percentile(50.0) / bs.percentile(50.0).max(1e-9));
+    println!("Fig12b makespan: orca-pp {:.0}s  sarathi-pp {:.0}s  tp-only {:.0}s",
+        out.orca_pp.makespan, out.sarathi_pp.makespan, out.tp_only.makespan);
+    println!("  sarathi vs orca-pp:  {:.2}x (paper: 1.91x)",
+        out.orca_pp.makespan / out.sarathi_pp.makespan);
+    println!("  tp-only vs orca-pp:  {:.2}x (paper: 1.28x)",
+        out.orca_pp.makespan / out.tp_only.makespan);
+    println!("  sarathi vs tp-only:  {:.2}x (paper: 1.48x)",
+        out.tp_only.makespan / out.sarathi_pp.makespan);
+}

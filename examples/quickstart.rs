@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT-compiled tiny model through PJRT and generate
+//! text greedily — the smallest possible end-to-end use of the stack.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! The "tokenizer" is byte-level (vocab 256), so any ASCII prompt works;
+//! the model has synthetic weights, so the continuation is gibberish — the
+//! point is the full path: HLO text -> PJRT compile -> chunked prefill ->
+//! decode loop, all from rust.
+
+use std::path::PathBuf;
+
+use sarathi::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let mut rt = ModelRuntime::load(&dir)?;
+    println!(
+        "model: tiny ({} layers, hidden {}, vocab {}) on {}",
+        rt.manifest.model.layers,
+        rt.manifest.model.hidden,
+        rt.manifest.model.vocab,
+        rt.platform()
+    );
+
+    let prompt_text = "Chunked prefills let decodes piggyback for free.";
+    let prompt: Vec<i32> = prompt_text.bytes().map(|b| b as i32).collect();
+    println!("prompt: {prompt_text:?} ({} byte-tokens)", prompt.len());
+
+    let t0 = std::time::Instant::now();
+    let out = rt.generate_greedy(&prompt, 0, 24)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let text: String = out
+        .iter()
+        .map(|&t| {
+            let b = t as u8;
+            if b.is_ascii_graphic() || b == b' ' { b as char } else { '.' }
+        })
+        .collect();
+    println!("generated {} tokens in {:.3}s ({:.1} tok/s): {text:?}",
+        out.len(), dt, out.len() as f64 / dt);
+    println!("steps executed: {}", rt.steps);
+    Ok(())
+}

@@ -1,0 +1,139 @@
+"""AOT lowering: JAX step functions -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the rust runtime then loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and executes
+them on the PJRT CPU client. Python is never on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids.
+
+Artifacts emitted (shape buckets the scheduler is allowed to submit):
+  prefill_c{C}           one chunked-prefill iteration, chunk size C
+  decode_d{D}            one decode-only iteration over D lanes
+  hybrid_c{C}_d{D}       one decode-maximal iteration (1 chunk + D lanes)
+plus ``weights.npz`` (positional parameter order per configs.param_names)
+and ``manifest.txt`` describing every artifact for the rust loader.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import TinyConfig, init_params, kv_shape, param_names, param_shapes
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(cfg: TinyConfig):
+    f32, i32 = jnp.float32, jnp.int32
+    s = lambda shape, ty=f32: jax.ShapeDtypeStruct(shape, ty)
+    params = [s(param_shapes(cfg)[n]) for n in param_names(cfg)]
+    kv = s(kv_shape(cfg))
+    return params, kv, s, i32
+
+
+def lower_prefill(cfg: TinyConfig, chunk: int) -> str:
+    params, kv, s, i32 = _specs(cfg)
+
+    def fn(*args):
+        p = list(args[: len(params)])
+        k, v, tokens, slot, start, clen = args[len(params):]
+        return M.prefill_chunk_step(cfg, p, k, v, tokens, slot, start, clen)
+
+    lowered = jax.jit(fn).lower(
+        *params, kv, kv, s((chunk,), i32), s((), i32), s((), i32), s((), i32)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: TinyConfig, d: int) -> str:
+    params, kv, s, i32 = _specs(cfg)
+
+    def fn(*args):
+        p = list(args[: len(params)])
+        k, v, tokens, slots, positions = args[len(params):]
+        return M.decode_step(cfg, p, k, v, tokens, slots, positions)
+
+    lowered = jax.jit(fn).lower(
+        *params, kv, kv, s((d,), i32), s((d,), i32), s((d,), i32)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_hybrid(cfg: TinyConfig, chunk: int, d: int) -> str:
+    params, kv, s, i32 = _specs(cfg)
+
+    def fn(*args):
+        p = list(args[: len(params)])
+        (k, v, p_tokens, p_slot, p_start, p_len,
+         d_tokens, d_slots, d_positions) = args[len(params):]
+        return M.hybrid_step(cfg, p, k, v, p_tokens, p_slot, p_start, p_len,
+                             d_tokens, d_slots, d_positions)
+
+    lowered = jax.jit(fn).lower(
+        *params, kv, kv,
+        s((chunk,), i32), s((), i32), s((), i32), s((), i32),
+        s((d,), i32), s((d,), i32), s((d,), i32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = TinyConfig()
+    os.makedirs(args.out, exist_ok=True)
+
+    # weights (positional order is load-bearing; manifest records it)
+    params = init_params(cfg, seed=args.seed)
+    np.savez(os.path.join(args.out, "weights.npz"),
+             **{n: p for n, p in zip(param_names(cfg), params)})
+
+    manifest = [
+        "format 1",
+        f"model tiny vocab={cfg.vocab} hidden={cfg.hidden} heads={cfg.n_heads} "
+        f"layers={cfg.n_layers} ffn={cfg.ffn_hidden} max_len={cfg.max_len} "
+        f"kv_slots={cfg.kv_slots} decode_slots={cfg.decode_slots}",
+        "weights weights.npz " + " ".join(param_names(cfg)),
+    ]
+
+    def emit(name: str, text: str, line: str):
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(line)
+        print(f"  {name}: {len(text)} chars")
+
+    for c in cfg.chunk_sizes:
+        emit(f"prefill_c{c}", lower_prefill(cfg, c),
+             f"artifact name=prefill_c{c} kind=prefill chunk={c} file=prefill_c{c}.hlo.txt")
+    d = cfg.decode_slots
+    emit(f"decode_d{d}", lower_decode(cfg, d),
+         f"artifact name=decode_d{d} kind=decode dslots={d} file=decode_d{d}.hlo.txt")
+    for c in cfg.chunk_sizes:
+        emit(f"hybrid_c{c}_d{d}", lower_hybrid(cfg, c, d),
+             f"artifact name=hybrid_c{c}_d{d} kind=hybrid chunk={c} dslots={d} "
+             f"file=hybrid_c{c}_d{d}.hlo.txt")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest) - 3} artifacts + weights + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Model configuration shared by the L2 JAX model, the AOT lowering and tests.
+
+The repo serves a *tiny* LLaMA-style decoder end-to-end through PJRT on CPU
+(the large-model experiments of the paper run through the calibrated cost
+model on the rust side — see DESIGN.md §3). The tiny model is deliberately
+small so that the full three-layer stack (Pallas kernel -> JAX model -> HLO
+artifact -> rust PJRT runtime) stays fast enough to exercise hundreds of
+serving iterations in the integration tests.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """Architecture of the demo model served by the rust coordinator."""
+
+    vocab: int = 256          # byte-level tokenizer on the rust side
+    hidden: int = 128         # H
+    n_heads: int = 4
+    n_layers: int = 2
+    ffn_hidden: int = 512     # H2 (paper-style two-matmul FFN, Table 1)
+    max_len: int = 256        # maximum sequence length (P + D per request)
+    kv_slots: int = 8         # KV-cache rows; the last row is scratch
+    # Shape buckets lowered ahead-of-time. The scheduler only ever submits
+    # these shapes; shorter chunks are padded and masked.
+    chunk_sizes: tuple = (16, 32)
+    decode_slots: int = 4     # decode lanes in the decode/hybrid steps
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.n_heads == 0
+        return self.hidden // self.n_heads
+
+    @property
+    def scratch_slot(self) -> int:
+        """KV row used by padded (inactive) decode lanes."""
+        return self.kv_slots - 1
+
+    @property
+    def usable_slots(self) -> int:
+        return self.kv_slots - 1
+
+
+# Flat, ordered parameter list. The AOT manifest records this order and the
+# rust runtime feeds weights positionally, so order is load-bearing.
+def param_names(cfg: TinyConfig) -> List[str]:
+    names = ["embed"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.ln1",
+            f"l{l}.wqkv",
+            f"l{l}.wo",
+            f"l{l}.ln2",
+            f"l{l}.w1",
+            f"l{l}.w2",
+        ]
+    names.append("lnf")
+    return names
+
+
+def param_shapes(cfg: TinyConfig):
+    h, h2 = cfg.hidden, cfg.ffn_hidden
+    shapes = {"embed": (cfg.vocab, h), "lnf": (h,)}
+    for l in range(cfg.n_layers):
+        shapes[f"l{l}.ln1"] = (h,)
+        shapes[f"l{l}.wqkv"] = (h, 3 * h)
+        shapes[f"l{l}.wo"] = (h, h)
+        shapes[f"l{l}.ln2"] = (h,)
+        shapes[f"l{l}.w1"] = (h, h2)
+        shapes[f"l{l}.w2"] = (h2, h)
+    return shapes
+
+
+def init_params(cfg: TinyConfig, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic synthetic weights (the paper's techniques are
+    weight-agnostic; we only need a stable, non-degenerate model)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name in param_names(cfg):
+        shape = param_shapes(cfg)[name]
+        if name.endswith((".ln1", ".ln2")) or name == "lnf":
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+def kv_shape(cfg: TinyConfig):
+    """[layers, slots, max_len, n_heads, head_dim] — one row per request."""
+    return (cfg.n_layers, cfg.kv_slots, cfg.max_len, cfg.n_heads, cfg.head_dim)

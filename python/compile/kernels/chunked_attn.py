@@ -1,0 +1,92 @@
+"""Pallas chunked-prefill attention kernel (L1).
+
+The paper's chunked-prefills (§4.2) require the attention of a prefill chunk
+to cover (a) the KV of every *previous* chunk of the same request and (b) a
+causal prefix within the current chunk. Both are expressed with one
+per-query threshold vector: query i attends keys at positions
+``j <= thresholds[i]``.
+
+TPU adaptation (DESIGN.md §4): the kernel is written flash-style — the key
+dimension is streamed through VMEM in ``block_k`` tiles with a running
+(online-softmax) accumulator, which is the BlockSpec equivalent of the
+threadblock HBM->shared-memory schedule the paper's xformers kernel uses on
+GPU. ``interpret=True`` keeps the numerics exact on CPU-PJRT; on a real TPU
+the same BlockSpec drives the Mosaic lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(thr_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """Grid: one step per head. Streams K/V in `block_k` tiles.
+
+    q_ref: [C, d]; k_ref/v_ref: [T, d]; thr_ref: [C]; o_ref: [C, d].
+    """
+    q = q_ref[...]                                   # [C, d] in VMEM
+    c, d = q.shape
+    t = k_ref.shape[0]
+    scale = d ** -0.5
+    thr = thr_ref[...]                               # [C]
+
+    n_blocks = t // block_k
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = k_ref[pl.dslice(i * block_k, block_k), :]       # [bk, d]
+        v_tile = v_ref[pl.dslice(i * block_k, block_k), :]       # [bk, d]
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        key_pos = i * block_k + jax.lax.broadcasted_iota(jnp.int32, (c, block_k), 1)
+        s = jnp.where(key_pos <= thr[:, None], s, NEG_INF)
+        # online softmax update
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))              # [C]
+        p = jnp.exp(s - m_cur[:, None])                          # [C, bk]
+        alpha = jnp.exp(m_prev - m_cur)                          # [C]
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v_tile, preferred_element_type=jnp.float32)
+        return acc, m_cur, l_cur
+
+    init = (
+        jnp.zeros((c, d), jnp.float32),
+        jnp.full((c,), NEG_INF, jnp.float32),
+        jnp.zeros((c,), jnp.float32),
+    )
+    acc, _, l = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[...] = acc / l[:, None]
+
+
+def chunked_attention(q, k, v, thresholds, *, block_k: int = 64, interpret: bool = True):
+    """Pallas chunked-prefill attention.
+
+    Args:
+      q: [n_heads, C, head_dim] chunk queries.
+      k, v: [n_heads, T, head_dim] full KV row (T = max_len, multiple of
+        block_k; past-the-threshold entries are masked, so stale cache
+        contents are never observable).
+      thresholds: [C] int32, query i attends keys j <= thresholds[i].
+
+    Returns: [n_heads, C, head_dim] float32.
+    """
+    n_heads, c, d = q.shape
+    t = k.shape[1]
+    if t % block_k != 0:
+        raise ValueError(f"T={t} must be a multiple of block_k={block_k}")
+    kernel = functools.partial(_attn_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda h: (0,)),               # thresholds
+            pl.BlockSpec((None, c, d), lambda h: (h, 0, 0)),  # q, one head per step
+            pl.BlockSpec((None, t, d), lambda h: (h, 0, 0)),  # k
+            pl.BlockSpec((None, t, d), lambda h: (h, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, c, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, c, d), jnp.float32),
+        interpret=interpret,
+    )(thresholds, q, k, v)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is checked against the matching function here by `python/tests/test_kernels.py`
+(hypothesis sweeps over shapes) before anything is lowered to HLO.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention_ref(q, k, v, thresholds):
+    """Attention of a prefill chunk against the full KV row.
+
+    Args:
+      q:  [n_heads, C, head_dim]   queries of the chunk.
+      k:  [n_heads, T, head_dim]   full cached keys (T = max_len).
+      v:  [n_heads, T, head_dim]   full cached values.
+      thresholds: [C] int32 — query i may attend keys at positions
+        j <= thresholds[i]. For a chunk starting at `start`, thresholds[i] =
+        start + i (the paper's Fig. 6 mask: each query peeks at every token
+        preceding it, across chunk boundaries, never ahead).
+
+    Returns [n_heads, C, head_dim].
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("hcd,htd->hct", q, k) * scale        # [h, C, T]
+    key_pos = jnp.arange(k.shape[1])[None, None, :]          # [1, 1, T]
+    mask = key_pos <= thresholds[None, :, None]              # [1, C, T]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hct,htd->hcd", probs, v)
+
+
+def fused_linear_ref(x, w, b=None):
+    """Plain affine map over a (fused prefill-chunk + decode) token matrix.
+
+    x: [T, H_in], w: [H_in, H_out], b: [H_out] or None -> [T, H_out].
+    """
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,254 @@
+"""L2 — the JAX model: a LLaMA-style decoder with a slotted KV cache and the
+three step functions the rust coordinator schedules:
+
+* ``prefill_chunk_step`` — one chunked-prefill iteration (§4.2): processes a
+  fixed-size chunk of the prompt, with the attention mask offset so the chunk
+  attends to all previously-prefilled tokens of the same request.
+* ``decode_step``       — one batched decode-only iteration (the baseline).
+* ``hybrid_step``       — one decode-maximal iteration (§4.3): a single
+  prefill chunk plus piggybacked decode lanes; every *linear* operator runs
+  fused over the concatenated token matrix (one Pallas GEMM), while the
+  attention computations stay separate — exactly the paper's batching rule.
+
+All functions are pure (KV cache in, KV cache out) so they can be lowered
+once by ``aot.py`` to fixed-shape HLO text and executed from rust via PJRT.
+Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TinyConfig
+from .kernels.chunked_attn import chunked_attention
+from .kernels.fused_linear import fused_linear
+from .kernels.ref import chunked_attention_ref, fused_linear_ref
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * w
+
+
+def rope(x, positions):
+    """Rotary position embedding. x: [T, n_heads, head_dim], positions: [T]."""
+    t, nh, hd = x.shape
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]   # [T, half]
+    cos, sin = jnp.cos(angles)[:, None, :], jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _linear(x, w, use_pallas, block_t):
+    if use_pallas:
+        return fused_linear(x, w, block_t=block_t, block_o=128)
+    return fused_linear_ref(x, w)
+
+
+def _attn(q, k, v, thresholds, use_pallas):
+    if use_pallas:
+        return chunked_attention(q, k, v, thresholds, block_k=64)
+    return chunked_attention_ref(q, k, v, thresholds)
+
+
+def _unpack(cfg: TinyConfig, params):
+    it = iter(params)
+    p = {"embed": next(it), "layers": []}
+    for _ in range(cfg.n_layers):
+        p["layers"].append(
+            dict(
+                ln1=next(it), wqkv=next(it), wo=next(it),
+                ln2=next(it), w1=next(it), w2=next(it),
+            )
+        )
+    p["lnf"] = next(it)
+    return p
+
+
+def _block_t_for(t: int) -> int:
+    """Largest tile <=16 dividing the fused token count (the scheduler keeps
+    the token count tile-aligned, so this is 16 on the aligned path)."""
+    for bt in (16, 8, 4, 2, 1):
+        if t % bt == 0:
+            return bt
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# the transformer body over an arbitrary set of token rows
+# ---------------------------------------------------------------------------
+
+def _run_body(cfg, p, x, positions, kv_update, attention, use_pallas):
+    """Shared decoder body.
+
+    x: [T, H] token activations (fused prefill+decode rows for hybrid);
+    positions: [T] absolute positions (drives RoPE).
+    kv_update(layer, k_rows, v_rows, k_cache, v_cache) -> (k_cache, v_cache)
+      writes this step's K/V rows into the cache.
+    attention(layer, q, k_cache, v_cache) -> [T, n_heads, head_dim]
+      computes attention per the step's masking rule.
+
+    Returns a closure run(k_cache, v_cache) -> (x, k_cache, v_cache).
+    """
+    t = x.shape[0]
+    bt = _block_t_for(t)
+    nh, hd = cfg.n_heads, cfg.head_dim
+
+    def run(k_cache, v_cache, x=x):
+        for l, lp in enumerate(p["layers"]):
+            h = rms_norm(x, lp["ln1"])
+            qkv = _linear(h, lp["wqkv"], use_pallas, bt)            # fused preproj
+            q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+            q = rope(q.reshape(t, nh, hd), positions)
+            k_new = rope(k_new.reshape(t, nh, hd), positions)
+            v_new = v_new.reshape(t, nh, hd)
+            k_cache, v_cache = kv_update(l, k_new, v_new, k_cache, v_cache)
+            att = attention(l, q, k_cache, v_cache)                 # [T, nh, hd]
+            att = att.reshape(t, cfg.hidden)
+            x = x + _linear(att, lp["wo"], use_pallas, bt)          # fused postproj
+            h2 = rms_norm(x, lp["ln2"])
+            h2 = _linear(h2, lp["w1"], use_pallas, bt)              # fused ffn_ln1
+            h2 = jax.nn.gelu(h2)
+            x = x + _linear(h2, lp["w2"], use_pallas, bt)           # fused ffn_ln2
+        return rms_norm(x, p["lnf"]), k_cache, v_cache
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def prefill_chunk_step(cfg: TinyConfig, params, k_cache, v_cache,
+                       tokens, slot, start, chunk_len, *, use_pallas=True):
+    """One chunked-prefill iteration for a single request.
+
+    tokens: [C] int32 (padded past chunk_len); slot/start/chunk_len: scalars.
+    Returns (next_token_logits [vocab], k_cache, v_cache).
+    """
+    p = _unpack(cfg, params)
+    c = tokens.shape[0]
+    positions = start + jnp.arange(c, dtype=jnp.int32)
+    x = p["embed"][tokens]                                          # [C, H]
+
+    def kv_update(l, k_new, v_new, kc, vc):
+        kc = jax.lax.dynamic_update_slice(kc, k_new[None, None], (l, slot, start, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v_new[None, None], (l, slot, start, 0, 0))
+        return kc, vc
+
+    def attention(l, q, kc, vc):
+        krow = jax.lax.dynamic_index_in_dim(kc[l], slot, axis=0, keepdims=False)
+        vrow = jax.lax.dynamic_index_in_dim(vc[l], slot, axis=0, keepdims=False)
+        # [max_len, nh, hd] -> [nh, max_len, hd]
+        krow = krow.transpose(1, 0, 2)
+        vrow = vrow.transpose(1, 0, 2)
+        out = _attn(q.transpose(1, 0, 2), krow, vrow, positions, use_pallas)
+        return out.transpose(1, 0, 2)                               # [C, nh, hd]
+
+    run = _run_body(cfg, p, x, positions, kv_update, attention, use_pallas)
+    x, k_cache, v_cache = run(k_cache, v_cache)
+    last = jax.lax.dynamic_index_in_dim(x, chunk_len - 1, axis=0, keepdims=False)
+    logits = last @ p["embed"].T                                    # tied unembed
+    return logits, k_cache, v_cache
+
+
+def decode_step(cfg: TinyConfig, params, k_cache, v_cache,
+                tokens, slots, positions, *, use_pallas=True):
+    """One decode-only iteration over D lanes (the baseline decode batch).
+
+    tokens/slots/positions: [D] int32. Inactive lanes point at the scratch
+    slot with position 0. Returns (logits [D, vocab], k_cache, v_cache).
+    """
+    p = _unpack(cfg, params)
+    d = tokens.shape[0]
+    x = p["embed"][tokens]                                          # [D, H]
+
+    def kv_update(l, k_new, v_new, kc, vc):
+        kc = kc.at[l, slots, positions].set(k_new)
+        vc = vc.at[l, slots, positions].set(v_new)
+        return kc, vc
+
+    def attention(l, q, kc, vc):
+        krows = kc[l][slots].transpose(0, 2, 1, 3)                  # [D, nh, T, hd]
+        vrows = vc[l][slots].transpose(0, 2, 1, 3)
+        qd = q[:, None].transpose(0, 2, 1, 3)                       # [D, nh, 1, hd]
+        thr = positions[:, None]                                    # [D, 1]
+        fn = lambda qq, kk, vv, tt: _attn(qq, kk, vv, tt, use_pallas)
+        out = jax.vmap(fn)(qd, krows, vrows, thr)                   # [D, nh, 1, hd]
+        return out[:, :, 0].transpose(0, 1, 2).reshape(d, cfg.n_heads, cfg.head_dim)
+
+    run = _run_body(cfg, p, x, positions, kv_update, attention, use_pallas)
+    x, k_cache, v_cache = run(k_cache, v_cache)
+    logits = x @ p["embed"].T                                       # [D, vocab]
+    return logits, k_cache, v_cache
+
+
+def hybrid_step(cfg: TinyConfig, params, k_cache, v_cache,
+                p_tokens, p_slot, p_start, p_len,
+                d_tokens, d_slots, d_positions, *, use_pallas=True):
+    """One decode-maximal iteration (§4.3): ONE prefill chunk + D decode
+    lanes. Linear operators run fused over the concatenated ``[C+D, H]``
+    matrix (single Pallas GEMM — the piggybacking mechanism); the two
+    attention computations run separately, exactly as the paper prescribes.
+
+    Returns (p_logits [vocab], d_logits [D, vocab], k_cache, v_cache).
+    """
+    p = _unpack(cfg, params)
+    c = p_tokens.shape[0]
+    d = d_tokens.shape[0]
+    p_positions = p_start + jnp.arange(c, dtype=jnp.int32)
+    positions = jnp.concatenate([p_positions, d_positions])         # [C+D]
+    x = p["embed"][jnp.concatenate([p_tokens, d_tokens])]           # [C+D, H]
+
+    def kv_update(l, k_new, v_new, kc, vc):
+        kp, kd = k_new[:c], k_new[c:]
+        vp, vd = v_new[:c], v_new[c:]
+        kc = jax.lax.dynamic_update_slice(kc, kp[None, None], (l, p_slot, p_start, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vp[None, None], (l, p_slot, p_start, 0, 0))
+        kc = kc.at[l, d_slots, d_positions].set(kd)
+        vc = vc.at[l, d_slots, d_positions].set(vd)
+        return kc, vc
+
+    def attention(l, q, kc, vc):
+        # prefill-chunk attention (threshold mask across chunk boundaries)
+        qp = q[:c].transpose(1, 0, 2)                               # [nh, C, hd]
+        krow = jax.lax.dynamic_index_in_dim(kc[l], p_slot, 0, keepdims=False)
+        vrow = jax.lax.dynamic_index_in_dim(vc[l], p_slot, 0, keepdims=False)
+        outp = _attn(qp, krow.transpose(1, 0, 2), vrow.transpose(1, 0, 2),
+                     p_positions, use_pallas).transpose(1, 0, 2)    # [C, nh, hd]
+        # decode attention, batched over lanes
+        krows = kc[l][d_slots].transpose(0, 2, 1, 3)                # [D, nh, T, hd]
+        vrows = vc[l][d_slots].transpose(0, 2, 1, 3)
+        qd = q[c:][:, None].transpose(0, 2, 1, 3)                   # [D, nh, 1, hd]
+        fn = lambda qq, kk, vv, tt: _attn(qq, kk, vv, tt, use_pallas)
+        outd = jax.vmap(fn)(qd, krows, vrows, d_positions[:, None])[:, :, 0]
+        return jnp.concatenate([outp, outd], axis=0)                # [C+D, nh, hd]
+
+    run = _run_body(cfg, p, x, positions, kv_update, attention, use_pallas)
+    x, k_cache, v_cache = run(k_cache, v_cache)
+    last = jax.lax.dynamic_index_in_dim(x, p_len - 1, axis=0, keepdims=False)
+    p_logits = last @ p["embed"].T
+    d_logits = x[c:] @ p["embed"].T
+    return p_logits, d_logits, k_cache, v_cache
+
+
+def full_prefill_reference(cfg: TinyConfig, params, tokens, *, use_pallas=False):
+    """Un-chunked prefill of a whole prompt — the §4.2 mathematical-
+    equivalence oracle for chunked prefills (used only by tests)."""
+    import numpy as np
+
+    k_cache = jnp.zeros((cfg.n_layers, cfg.kv_slots, cfg.max_len,
+                         cfg.n_heads, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    logits, k_cache, v_cache = prefill_chunk_step(
+        cfg, params, k_cache, v_cache,
+        jnp.asarray(tokens, jnp.int32),
+        jnp.int32(0), jnp.int32(0), jnp.int32(len(np.asarray(tokens))),
+        use_pallas=use_pallas)
+    return logits, k_cache, v_cache

@@ -1,0 +1,89 @@
+"""AOT artifact sanity: manifest structure, HLO entry layouts, weight file.
+
+These run against the artifacts/ directory if `make artifacts` has produced
+it; otherwise they lower a single variant in-process and check the text.
+"""
+
+import os
+import re
+
+import numpy as np
+import pytest
+
+from compile.configs import TinyConfig, init_params, param_names, param_shapes
+from compile import aot
+
+CFG = TinyConfig()
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_param_names_match_shapes():
+    names = param_names(CFG)
+    shapes = param_shapes(CFG)
+    assert set(names) == set(shapes)
+    assert names[0] == "embed" and names[-1] == "lnf"
+    assert len(names) == 2 + 6 * CFG.n_layers
+
+
+def test_init_params_deterministic():
+    a = init_params(CFG, seed=3)
+    b = init_params(CFG, seed=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_lowered_prefill_has_expected_entry_layout():
+    text = aot.lower_prefill(CFG, CFG.chunk_sizes[0])
+    assert text.startswith("HloModule")
+    # entry layout must carry the chunked token input and the KV cache
+    assert f"s32[{CFG.chunk_sizes[0]}]" in text
+    assert f"f32[{CFG.n_layers},{CFG.kv_slots},{CFG.max_len},{CFG.n_heads},{CFG.head_dim}]" in text
+    # logits output
+    assert f"f32[{CFG.vocab}]" in text
+
+
+def test_lowered_hybrid_fuses_token_matrix():
+    c, d = CFG.chunk_sizes[0], CFG.decode_slots
+    text = aot.lower_hybrid(CFG, c, d)
+    # the fused [C+D, H] linear is the decode-maximal signature
+    assert f"f32[{c + d},{CFG.hidden}]" in text
+    assert f"f32[{d},{CFG.vocab}]" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.txt")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.txt")) as f:
+            return f.read().splitlines()
+
+    def test_manifest_header(self):
+        lines = self.manifest()
+        assert lines[0] == "format 1"
+        assert lines[1].startswith("model tiny ")
+        assert lines[2].startswith("weights weights.npz ")
+
+    def test_manifest_lists_every_bucket(self):
+        body = "\n".join(self.manifest())
+        for c in CFG.chunk_sizes:
+            assert f"name=prefill_c{c}" in body
+            assert f"name=hybrid_c{c}_d{CFG.decode_slots}" in body
+        assert f"name=decode_d{CFG.decode_slots}" in body
+
+    def test_artifact_files_exist_and_parse_header(self):
+        for line in self.manifest():
+            m = re.search(r"file=(\S+)", line)
+            if not m:
+                continue
+            path = os.path.join(ART, m.group(1))
+            assert os.path.exists(path), path
+            with open(path) as f:
+                assert f.readline().startswith("HloModule")
+
+    def test_weights_npz_round_trip(self):
+        data = np.load(os.path.join(ART, "weights.npz"))
+        names = param_names(CFG)
+        assert set(data.files) == set(names)
+        for n in names:
+            assert data[n].shape == param_shapes(CFG)[n]
+            assert data[n].dtype == np.float32

@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the core
+correctness signal gating the AOT step.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.chunked_attn import chunked_attention
+from compile.kernels.fused_linear import fused_linear
+from compile.kernels.ref import chunked_attention_ref, fused_linear_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_attn(nh, c, t, d, thr_fn):
+    q = RNG.normal(size=(nh, c, d)).astype(np.float32)
+    k = RNG.normal(size=(nh, t, d)).astype(np.float32)
+    v = RNG.normal(size=(nh, t, d)).astype(np.float32)
+    thr = thr_fn(c, t).astype(np.int32)
+    return q, k, v, thr
+
+
+class TestChunkedAttention:
+    def test_basic(self):
+        q, k, v, thr = _mk_attn(4, 16, 256, 32, lambda c, t: np.arange(c) + 10)
+        out = chunked_attention(q, k, v, thr)
+        assert_allclose(out, chunked_attention_ref(q, k, v, thr), atol=2e-5)
+
+    def test_first_chunk_pure_causal(self):
+        # chunk at start == plain causal attention within the chunk
+        q, k, v, thr = _mk_attn(2, 8, 64, 16, lambda c, t: np.arange(c))
+        out = chunked_attention(q, k, v, thr, block_k=32)
+        assert_allclose(out, chunked_attention_ref(q, k, v, thr), atol=2e-5)
+
+    def test_decode_shape_c1(self):
+        # C=1 is the decode lane configuration
+        q, k, v, thr = _mk_attn(4, 1, 128, 32, lambda c, t: np.array([100]))
+        out = chunked_attention(q, k, v, thr)
+        assert out.shape == (4, 1, 32)
+        assert_allclose(out, chunked_attention_ref(q, k, v, thr), atol=2e-5)
+
+    def test_threshold_zero_attends_only_first_key(self):
+        q, k, v, thr = _mk_attn(1, 1, 64, 8, lambda c, t: np.zeros(c))
+        out = chunked_attention(q, k, v, thr)
+        # with only key 0 visible, output == v[:, 0]
+        assert_allclose(out[:, 0], v[:, 0], atol=2e-5)
+
+    def test_stale_cache_is_masked(self):
+        # garbage beyond the threshold must not leak into the output
+        q, k, v, thr = _mk_attn(2, 4, 128, 16, lambda c, t: np.arange(c) + 3)
+        k2, v2 = k.copy(), v.copy()
+        k2[:, 8:] = 1e6  # poison everything past the largest threshold
+        v2[:, 8:] = -1e6
+        out = chunked_attention(q, k2, v2, thr)
+        assert_allclose(out, chunked_attention_ref(q, k, v, thr), atol=2e-5)
+
+    def test_block_k_invariance(self):
+        q, k, v, thr = _mk_attn(2, 8, 256, 32, lambda c, t: np.arange(c) + 57)
+        o64 = chunked_attention(q, k, v, thr, block_k=64)
+        o128 = chunked_attention(q, k, v, thr, block_k=128)
+        o256 = chunked_attention(q, k, v, thr, block_k=256)
+        assert_allclose(o64, o128, atol=2e-5)
+        assert_allclose(o64, o256, atol=2e-5)
+
+    def test_bad_block_k_raises(self):
+        q, k, v, thr = _mk_attn(1, 4, 100, 8, lambda c, t: np.arange(c))
+        with pytest.raises(ValueError):
+            chunked_attention(q, k, v, thr, block_k=64)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nh=st.sampled_from([1, 2, 4]),
+        c=st.sampled_from([1, 4, 8, 16, 32]),
+        t_blocks=st.integers(1, 4),
+        d=st.sampled_from([8, 16, 32]),
+        start=st.integers(0, 60),
+    )
+    def test_hypothesis_sweep(self, nh, c, t_blocks, d, start):
+        t = 64 * t_blocks
+        start = min(start, t - c)
+        q, k, v, thr = _mk_attn(nh, c, t, d, lambda cc, tt: np.arange(cc) + start)
+        out = chunked_attention(q, k, v, thr)
+        assert_allclose(out, chunked_attention_ref(q, k, v, thr), atol=3e-5)
+
+
+class TestFusedLinear:
+    def test_basic(self):
+        x = RNG.normal(size=(20, 128)).astype(np.float32)
+        w = RNG.normal(size=(128, 384)).astype(np.float32)
+        assert_allclose(fused_linear(x, w, block_t=4), fused_linear_ref(x, w),
+                        atol=1e-4)
+
+    def test_single_tile(self):
+        x = RNG.normal(size=(4, 64)).astype(np.float32)
+        w = RNG.normal(size=(64, 64)).astype(np.float32)
+        assert_allclose(fused_linear(x, w), fused_linear_ref(x, w), atol=1e-4)
+
+    def test_tile_mismatch_raises(self):
+        x = RNG.normal(size=(10, 16)).astype(np.float32)
+        w = RNG.normal(size=(16, 24)).astype(np.float32)
+        with pytest.raises(ValueError):
+            fused_linear(x, w, block_t=4, block_o=16)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t_tiles=st.integers(1, 6),
+        bt=st.sampled_from([2, 4, 8, 16]),
+        h_in=st.sampled_from([32, 64, 128]),
+        o_tiles=st.integers(1, 4),
+        bo=st.sampled_from([32, 64, 128]),
+    )
+    def test_hypothesis_sweep(self, t_tiles, bt, h_in, o_tiles, bo):
+        t, h_out = t_tiles * bt, o_tiles * bo
+        x = RNG.normal(size=(t, h_in)).astype(np.float32)
+        w = RNG.normal(size=(h_in, h_out)).astype(np.float32)
+        out = fused_linear(x, w, block_t=bt, block_o=bo)
+        assert_allclose(out, fused_linear_ref(x, w), atol=2e-4)

@@ -1,0 +1,213 @@
+"""L2 correctness: the step functions the rust coordinator schedules.
+
+The central claims verified here (both on the Pallas path and the ref path):
+  1. chunked prefill is mathematically equivalent to full prefill (§4.2);
+  2. a decode-maximal hybrid step produces exactly the same logits as running
+     the prefill chunk and the decode batch separately (§4.3) — fusion
+     changes cost, never values;
+  3. KV-cache state evolves identically under either schedule.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import TinyConfig, init_params, kv_shape
+from compile import model as M
+
+CFG = TinyConfig()
+PARAMS = init_params(CFG)
+RNG = np.random.default_rng(7)
+
+
+def fresh_kv():
+    k = jnp.zeros(kv_shape(CFG), jnp.float32)
+    return k, jnp.zeros_like(k)
+
+
+def prompt(n):
+    return RNG.integers(0, CFG.vocab, size=n).astype(np.int32)
+
+
+def run_chunked_prefill(tokens, slot, chunk, k, v, use_pallas=True):
+    """Prefill `tokens` into `slot` in chunks of size `chunk` (padded last)."""
+    logits = None
+    n = len(tokens)
+    for start in range(0, n, chunk):
+        piece = tokens[start:start + chunk]
+        clen = len(piece)
+        if clen < chunk:  # pad; mask ignores the padding
+            piece = np.concatenate([piece, np.zeros(chunk - clen, np.int32)])
+        logits, k, v = M.prefill_chunk_step(
+            CFG, PARAMS, k, v, jnp.asarray(piece),
+            jnp.int32(slot), jnp.int32(start), jnp.int32(clen))
+    return logits, k, v
+
+
+class TestChunkedPrefillEquivalence:
+    @pytest.mark.parametrize("n,chunk", [(48, 16), (48, 32), (64, 16), (40, 16)])
+    def test_chunked_equals_full(self, n, chunk):
+        toks = prompt(n)
+        full, kf, vf = M.full_prefill_reference(CFG, PARAMS, toks)
+        k, v = fresh_kv()
+        chunked, k, v = run_chunked_prefill(toks, 0, chunk, k, v)
+        np.testing.assert_allclose(chunked, full, atol=5e-5)
+        np.testing.assert_allclose(k[:, 0, :n], kf[:, 0, :n], atol=5e-5)
+        np.testing.assert_allclose(v[:, 0, :n], vf[:, 0, :n], atol=5e-5)
+
+    def test_partial_final_chunk_padding_is_harmless(self):
+        # 40 = 32 + 8: the final chunk is padded from 8 to 16 tokens; the
+        # logits must still match a full prefill of 40 tokens.
+        toks = prompt(40)
+        full, _, _ = M.full_prefill_reference(CFG, PARAMS, toks)
+        k, v = fresh_kv()
+        chunked, _, _ = run_chunked_prefill(toks, 0, 32, k, v)
+        np.testing.assert_allclose(chunked, full, atol=5e-5)
+
+    def test_pallas_and_ref_paths_agree(self):
+        toks = prompt(32)
+        k, v = fresh_kv()
+        lp, kp, vp = M.prefill_chunk_step(
+            CFG, PARAMS, k, v, jnp.asarray(toks), jnp.int32(2), jnp.int32(0),
+            jnp.int32(32), use_pallas=True)
+        lr, kr, vr = M.prefill_chunk_step(
+            CFG, PARAMS, k, v, jnp.asarray(toks), jnp.int32(2), jnp.int32(0),
+            jnp.int32(32), use_pallas=False)
+        np.testing.assert_allclose(lp, lr, atol=5e-5)
+        np.testing.assert_allclose(kp, kr, atol=5e-5)
+
+    def test_two_requests_in_different_slots_do_not_interfere(self):
+        ta, tb = prompt(32), prompt(32)
+        k, v = fresh_kv()
+        la_alone, _, _ = run_chunked_prefill(ta, 0, 16, *fresh_kv())
+        _, k, v = run_chunked_prefill(tb, 1, 16, k, v)
+        la, k, v = run_chunked_prefill(ta, 0, 16, k, v)
+        np.testing.assert_allclose(la, la_alone, atol=5e-5)
+
+
+class TestDecode:
+    def _prefilled(self, n=32, slot=0):
+        toks = prompt(n)
+        k, v = fresh_kv()
+        logits, k, v = run_chunked_prefill(toks, slot, 16, k, v)
+        return toks, logits, k, v
+
+    def test_decode_matches_prefill_extension(self):
+        # decoding token x at position n must equal prefilling prompt+x
+        toks, logits, k, v = self._prefilled(32)
+        nxt = int(np.argmax(logits))
+        slots = jnp.asarray([0, CFG.scratch_slot, CFG.scratch_slot, CFG.scratch_slot], jnp.int32)
+        pos = jnp.asarray([32, 0, 0, 0], jnp.int32)
+        dl, k, v = M.decode_step(CFG, PARAMS, k, v,
+                                 jnp.asarray([nxt, 0, 0, 0], jnp.int32), slots, pos)
+        ext = np.concatenate([toks, [nxt]]).astype(np.int32)
+        full, _, _ = M.full_prefill_reference(CFG, PARAMS, ext)
+        np.testing.assert_allclose(dl[0], full, atol=5e-5)
+
+    def test_greedy_generation_is_deterministic(self):
+        _, logits, k, v = self._prefilled(32)
+        seqs = []
+        for _ in range(2):
+            kk, vv, ll = jnp.array(k), jnp.array(v), logits
+            out = []
+            for i in range(8):
+                nxt = int(np.argmax(np.asarray(ll)[0] if np.asarray(ll).ndim == 2 else ll))
+                out.append(nxt)
+                ll, kk, vv = M.decode_step(
+                    CFG, PARAMS, kk, vv,
+                    jnp.asarray([nxt] * 4, jnp.int32),
+                    jnp.asarray([0] + [CFG.scratch_slot] * 3, jnp.int32),
+                    jnp.asarray([32 + i, 0, 0, 0], jnp.int32))
+            seqs.append(out)
+        assert seqs[0] == seqs[1]
+
+
+class TestHybridStep:
+    def test_hybrid_equals_separate_prefill_and_decode(self):
+        # state: request A fully prefilled (slot 0), request B's prompt to be
+        # chunk-prefilled into slot 1 while A decodes — the SARATHI batch.
+        ta = prompt(32)
+        _, la, k, v = (None, *run_chunked_prefill(ta, 0, 16, *fresh_kv()))
+        nxt = int(np.argmax(la))
+        tb = prompt(16)
+
+        d_tokens = jnp.asarray([nxt, 0, 0, 0], jnp.int32)
+        d_slots = jnp.asarray([0] + [CFG.scratch_slot] * 3, jnp.int32)
+        d_pos = jnp.asarray([32, 0, 0, 0], jnp.int32)
+
+        # separate execution
+        ks, vs = jnp.array(k), jnp.array(v)
+        pl_sep, ks, vs = M.prefill_chunk_step(
+            CFG, PARAMS, ks, vs, jnp.asarray(tb), jnp.int32(1), jnp.int32(0), jnp.int32(16))
+        dl_sep, ks, vs = M.decode_step(CFG, PARAMS, ks, vs, d_tokens, d_slots, d_pos)
+
+        # fused decode-maximal execution
+        pl_h, dl_h, kh, vh = M.hybrid_step(
+            CFG, PARAMS, k, v, jnp.asarray(tb), jnp.int32(1), jnp.int32(0),
+            jnp.int32(16), d_tokens, d_slots, d_pos)
+
+        np.testing.assert_allclose(pl_h, pl_sep, atol=5e-5)
+        np.testing.assert_allclose(dl_h[0], dl_sep[0], atol=5e-5)
+        np.testing.assert_allclose(kh, ks, atol=5e-5)
+        np.testing.assert_allclose(vh, vs, atol=5e-5)
+
+    def test_hybrid_chain_completes_both_requests(self):
+        # B prefills in two hybrid chunks while A decodes twice; final states
+        # must match the all-separate schedule.
+        ta, tb = prompt(32), prompt(32)
+        _, la, k, v = (None, *run_chunked_prefill(ta, 0, 16, *fresh_kv()))
+        a_tok = int(np.argmax(la))
+
+        ks, vs = jnp.array(k), jnp.array(v)
+        # separate: prefill B fully, then decode A twice
+        lb_sep, ks, vs = run_chunked_prefill(tb, 1, 16, ks, vs)
+        d_slots = jnp.asarray([0] + [CFG.scratch_slot] * 3, jnp.int32)
+        da1, ks, vs = M.decode_step(CFG, PARAMS, ks, vs,
+                                    jnp.asarray([a_tok] * 4, jnp.int32), d_slots,
+                                    jnp.asarray([32, 0, 0, 0], jnp.int32))
+        a2 = int(np.argmax(np.asarray(da1)[0]))
+        da2, ks, vs = M.decode_step(CFG, PARAMS, ks, vs,
+                                    jnp.asarray([a2] * 4, jnp.int32), d_slots,
+                                    jnp.asarray([33, 0, 0, 0], jnp.int32))
+
+        # hybrid: two decode-maximal batches
+        lb1, dh1, k, v = M.hybrid_step(
+            CFG, PARAMS, k, v, jnp.asarray(tb[:16]), jnp.int32(1), jnp.int32(0),
+            jnp.int32(16), jnp.asarray([a_tok] * 4, jnp.int32), d_slots,
+            jnp.asarray([32, 0, 0, 0], jnp.int32))
+        ah2 = int(np.argmax(np.asarray(dh1)[0]))
+        assert ah2 == a2
+        lb2, dh2, k, v = M.hybrid_step(
+            CFG, PARAMS, k, v, jnp.asarray(tb[16:]), jnp.int32(1), jnp.int32(16),
+            jnp.int32(16), jnp.asarray([ah2] * 4, jnp.int32), d_slots,
+            jnp.asarray([33, 0, 0, 0], jnp.int32))
+
+        np.testing.assert_allclose(lb2, lb_sep, atol=5e-5)
+        np.testing.assert_allclose(dh2[0], np.asarray(da2)[0], atol=5e-5)
+        np.testing.assert_allclose(k, ks, atol=5e-5)
+
+    def test_scratch_lane_does_not_corrupt_live_slots(self):
+        ta = prompt(32)
+        _, la, k, v = (None, *run_chunked_prefill(ta, 0, 16, *fresh_kv()))
+        k0 = np.asarray(k[:, 0]).copy()
+        # all-scratch decode lanes
+        _, k, v = M.decode_step(
+            CFG, PARAMS, k, v, jnp.asarray([1, 2, 3, 4], jnp.int32),
+            jnp.asarray([CFG.scratch_slot] * 4, jnp.int32),
+            jnp.asarray([0, 0, 0, 0], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(k[:, 0]), k0)
+
+
+class TestRope:
+    def test_rope_position_zero_is_identity(self):
+        x = RNG.normal(size=(3, 2, 16)).astype(np.float32)
+        out = M.rope(jnp.asarray(x), jnp.zeros(3, jnp.int32))
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+    def test_rope_is_rotation(self):
+        # norms are preserved per (head, pair)
+        x = RNG.normal(size=(5, 4, 32)).astype(np.float32)
+        out = M.rope(jnp.asarray(x), jnp.arange(5, dtype=jnp.int32) * 7)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(out), axis=-1),
+            np.linalg.norm(x, axis=-1), rtol=1e-5)

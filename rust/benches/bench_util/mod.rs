@@ -1,0 +1,47 @@
+//! Minimal bench harness (criterion is unavailable offline): warm up, run
+//! timed iterations, print mean/min ns per op in a stable format.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub iters: usize,
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to pass ~0.2 s.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    // estimate per-call time
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.2 / est) as usize).clamp(5, 100_000);
+    let mut min = f64::MAX;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t1 = Instant::now();
+        f();
+        min = min.min(t1.elapsed().as_secs_f64());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: total / iters as f64 * 1e9,
+        min_ns: min * 1e9,
+        iters,
+    };
+    println!(
+        "{:<44} {:>12.0} ns/op (min {:>12.0}, {} iters)",
+        r.name, r.mean_ns, r.min_ns, r.iters
+    );
+    r
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

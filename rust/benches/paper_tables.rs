@@ -1,0 +1,23 @@
+//! End-to-end benchmark: regenerate every paper table/figure and time each
+//! harness (one bench per paper artifact, per deliverable (d)). The printed
+//! rows double as the reproduction record consumed by EXPERIMENTS.md.
+
+mod bench_util;
+use bench_util::{bench, header};
+
+fn main() {
+    header("paper figure/table regeneration (one bench per artifact)");
+    for (name, f) in sarathi::figures::all() {
+        bench(name, || {
+            let tables = f();
+            assert!(!tables.is_empty());
+            std::hint::black_box(&tables);
+        });
+    }
+
+    header("rendered output (for the record)");
+    let out = std::path::Path::new("out");
+    for t in sarathi::figures::run_named("all", out).expect("figures") {
+        println!("{}", t.render());
+    }
+}

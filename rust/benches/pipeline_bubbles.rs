@@ -1,0 +1,20 @@
+//! Pipeline-simulator benchmark: the Fig.-12 cluster simulation at several
+//! scales (the §5.3 experiment is the heaviest harness in the repo — this
+//! bench tracks the simulator's own performance, reqs simulated per
+//! second of wall time).
+
+mod bench_util;
+use bench_util::{bench, header};
+
+use sarathi::figures::fig12_pipeline;
+
+fn main() {
+    header("fig12 cluster simulation (3 deployments per run)");
+    for n in [200usize, 1000, 4000] {
+        let r = bench(&format!("simulate {n} requests"), || {
+            std::hint::black_box(fig12_pipeline::simulate(n).sarathi_pp.makespan);
+        });
+        let reqs_per_s = n as f64 / (r.mean_ns / 1e9) * 3.0;
+        println!("    -> {reqs_per_s:.0} simulated requests/s of wall time");
+    }
+}

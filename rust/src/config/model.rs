@@ -1,0 +1,114 @@
+//! Model architectures (paper §4.5: LLaMA-13B, LLaMA-33B, GPT-3, plus the
+//! tiny model served for real through PJRT).
+
+/// Transformer decoder architecture in the paper's Table-1 shape language:
+/// preproj [H,3H], attn, postproj [H,H], ffn_ln1 [H,H2], ffn_ln2 [H2,H].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub hidden: usize,      // H
+    pub ffn_hidden: usize,  // H2
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    /// Bytes per weight element (fp16 on GPU deployments, f32 for tiny).
+    pub bytes_per_param: usize,
+}
+
+impl ModelConfig {
+    /// LLaMA-13B per the public architecture card (§4.5).
+    pub fn llama13b() -> Self {
+        ModelConfig { name: "llama-13b", hidden: 5120, ffn_hidden: 13824, n_layers: 40, n_heads: 40, vocab: 32000, bytes_per_param: 2 }
+    }
+
+    /// LLaMA-33B (§4.5: 60 layers, 52 heads, hidden 6656).
+    pub fn llama33b() -> Self {
+        ModelConfig { name: "llama-33b", hidden: 6656, ffn_hidden: 17920, n_layers: 60, n_heads: 52, vocab: 32000, bytes_per_param: 2 }
+    }
+
+    /// GPT-3 175B (§4.5: 96 layers, 96 heads, hidden 12288).
+    pub fn gpt3() -> Self {
+        ModelConfig { name: "gpt3-175b", hidden: 12288, ffn_hidden: 49152, n_layers: 96, n_heads: 96, vocab: 50257, bytes_per_param: 2 }
+    }
+
+    /// The tiny model actually served end-to-end through PJRT (matches
+    /// python/compile/configs.py).
+    pub fn tiny() -> Self {
+        ModelConfig { name: "tiny", hidden: 128, ffn_hidden: 512, n_layers: 2, n_heads: 4, vocab: 256, bytes_per_param: 4 }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    /// Parameter count from the Table-1 operator shapes (qkv 3H², out H²,
+    /// ffn 2·H·H2 per layer, plus embedding).
+    pub fn param_count(&self) -> f64 {
+        let h = self.hidden as f64;
+        let h2 = self.ffn_hidden as f64;
+        let per_layer = 4.0 * h * h + 2.0 * h * h2;
+        self.n_layers as f64 * per_layer + self.vocab as f64 * h
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.param_count() * self.bytes_per_param as f64
+    }
+
+    /// m_kv of §4.3.1: bytes of K+V cached per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.hidden * self.n_layers * self.bytes_per_param) as f64
+    }
+
+    /// Linear-operator FLOPs per token per layer (2·m·k·n with m=1):
+    /// preproj 6H² + postproj 2H² + ffn 4·H·H2.
+    pub fn linear_flops_per_token_per_layer(&self) -> f64 {
+        let h = self.hidden as f64;
+        let h2 = self.ffn_hidden as f64;
+        8.0 * h * h + 4.0 * h * h2
+    }
+
+    /// Linear-operator weight bytes streamed per layer (the quantity a
+    /// decode-only iteration is bound by).
+    pub fn linear_weight_bytes_per_layer(&self) -> f64 {
+        let h = self.hidden as f64;
+        let h2 = self.ffn_hidden as f64;
+        (4.0 * h * h + 2.0 * h * h2) * self.bytes_per_param as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_in_the_right_ballpark() {
+        // Table-1 shape params undercount vs. marketing names (gated FFN,
+        // biases...), but must be the right order: ~10B / ~25B / ~175B.
+        let p13 = ModelConfig::llama13b().param_count();
+        assert!((9.0e9..13.5e9).contains(&p13), "{p13}");
+        let p33 = ModelConfig::llama33b().param_count();
+        assert!((24.0e9..34.0e9).contains(&p33), "{p33}");
+        let p175 = ModelConfig::gpt3().param_count();
+        assert!((170.0e9..180.0e9).contains(&p175), "{p175}");
+    }
+
+    #[test]
+    fn kv_bytes_match_hand_calc_llama13b() {
+        // 2 (K,V) × 5120 × 40 layers × 2 bytes = 819200 B/token
+        assert_eq!(ModelConfig::llama13b().kv_bytes_per_token(), 819_200.0);
+    }
+
+    #[test]
+    fn linear_flops_match_hand_calc() {
+        // 8·H² + 4·H·H2 for LLaMA-13B = 8·5120² + 4·5120·13824
+        let f = ModelConfig::llama13b().linear_flops_per_token_per_layer();
+        assert_eq!(f, 8.0 * 5120.0 * 5120.0 + 4.0 * 5120.0 * 13824.0);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in [ModelConfig::llama13b(), ModelConfig::llama33b(), ModelConfig::gpt3(), ModelConfig::tiny()] {
+            assert_eq!(m.head_dim() * m.n_heads, m.hidden, "{}", m.name);
+        }
+    }
+}

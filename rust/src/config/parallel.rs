@@ -1,0 +1,48 @@
+//! Parallelism layout: tensor-parallel within a node, pipeline-parallel
+//! across nodes, independent replicas above both (§2.3, §5.3).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Tensor-parallel degree (shards every layer).
+    pub tp: usize,
+    /// Pipeline-parallel degree (splits layers into stages).
+    pub pp: usize,
+    /// Independent serving replicas (each replica is a tp×pp group).
+    pub replicas: usize,
+}
+
+impl ParallelConfig {
+    pub fn single() -> Self {
+        ParallelConfig { tp: 1, pp: 1, replicas: 1 }
+    }
+
+    pub fn tp_pp(tp: usize, pp: usize) -> Self {
+        ParallelConfig { tp, pp, replicas: 1 }
+    }
+
+    pub fn with_replicas(mut self, r: usize) -> Self {
+        self.replicas = r;
+        self
+    }
+
+    pub fn gpus_per_replica(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.gpus_per_replica() * self.replicas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_counts() {
+        // §5.3 deployment: 8-way TP × 8-way PP = 64 GPUs
+        assert_eq!(ParallelConfig::tp_pp(8, 8).total_gpus(), 64);
+        // alternative: 8 replicas of 8-way TP
+        assert_eq!(ParallelConfig::tp_pp(8, 1).with_replicas(8).total_gpus(), 64);
+    }
+}

@@ -1,0 +1,58 @@
+//! Scheduler policy configuration.
+
+/// Which batching policy the engine runs (§5's comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// FasterTransformer-style request-level scheduling: prefill-only then
+    /// decode-only batches, next batch only when the whole batch completes.
+    RequestLevel,
+    /// Orca iteration-level scheduling, best case (§5.2): one *full* prefill
+    /// may overlap running decodes each iteration.
+    OrcaBest,
+    /// Orca worst case: all requests enter/leave together — degenerates to
+    /// prefill-only/decode-only batches.
+    OrcaWorst,
+    /// SARATHI: chunked-prefills + decode-maximal batching.
+    Sarathi,
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::RequestLevel => "request-level",
+            SchedulerKind::OrcaBest => "orca-best",
+            SchedulerKind::OrcaWorst => "orca-worst",
+            SchedulerKind::Sarathi => "sarathi",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    pub kind: SchedulerKind,
+    /// SARATHI chunk size C (tokens). Ignored by other policies.
+    pub chunk_size: usize,
+    /// Tile size the fused token count is aligned to (§4.4: the prefill
+    /// chunk shrinks so chunk + piggybacked decodes is a tile multiple).
+    pub tile_align: usize,
+    /// Maximum batch size B (from the §4.3.1 capacity formula).
+    pub max_batch: usize,
+}
+
+impl SchedulerConfig {
+    pub fn sarathi(chunk_size: usize, max_batch: usize) -> Self {
+        SchedulerConfig { kind: SchedulerKind::Sarathi, chunk_size, tile_align: 128, max_batch }
+    }
+
+    pub fn baseline(max_batch: usize) -> Self {
+        SchedulerConfig { kind: SchedulerKind::RequestLevel, chunk_size: 0, tile_align: 128, max_batch }
+    }
+
+    pub fn orca_best(max_batch: usize) -> Self {
+        SchedulerConfig { kind: SchedulerKind::OrcaBest, chunk_size: 0, tile_align: 128, max_batch }
+    }
+
+    pub fn orca_worst(max_batch: usize) -> Self {
+        SchedulerConfig { kind: SchedulerKind::OrcaWorst, chunk_size: 0, tile_align: 128, max_batch }
+    }
+}

@@ -1,0 +1,201 @@
+//! Work items and batch composition.
+
+use super::pool::RequestPool;
+use super::request::RequestId;
+use crate::costmodel::BatchShape;
+
+/// One unit of scheduled work inside an iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkItem {
+    /// Prefill `len` prompt tokens of `req` starting at offset `start`.
+    PrefillChunk { req: RequestId, start: usize, len: usize },
+    /// Generate one token for `req`.
+    Decode { req: RequestId },
+}
+
+impl WorkItem {
+    pub fn request(&self) -> RequestId {
+        match *self {
+            WorkItem::PrefillChunk { req, .. } | WorkItem::Decode { req } => req,
+        }
+    }
+}
+
+/// The batch one iteration executes.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub items: Vec<WorkItem>,
+}
+
+impl Batch {
+    pub fn new(items: Vec<WorkItem>) -> Self {
+        Batch { items }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn prefill_items(&self) -> impl Iterator<Item = (RequestId, usize, usize)> + '_ {
+        self.items.iter().filter_map(|it| match *it {
+            WorkItem::PrefillChunk { req, start, len } => Some((req, start, len)),
+            _ => None,
+        })
+    }
+
+    pub fn decode_items(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.items.iter().filter_map(|it| match *it {
+            WorkItem::Decode { req } => Some(req),
+            _ => None,
+        })
+    }
+
+    pub fn n_prefill_chunks(&self) -> usize {
+        self.prefill_items().count()
+    }
+
+    pub fn n_decodes(&self) -> usize {
+        self.decode_items().count()
+    }
+
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill_items().map(|(_, _, len)| len).sum()
+    }
+
+    /// Rows of the fused linear-operator matrix this batch produces.
+    pub fn total_tokens(&self) -> usize {
+        self.prefill_tokens() + self.n_decodes()
+    }
+
+    /// Decode-maximal composition (§4.3): exactly one prefill chunk and at
+    /// least one piggybacked decode.
+    pub fn is_decode_maximal(&self) -> bool {
+        self.n_prefill_chunks() == 1 && self.n_decodes() > 0
+    }
+
+    /// Distinct requests touched (each request may appear at most once).
+    pub fn requests(&self) -> Vec<RequestId> {
+        self.items.iter().map(|it| it.request()).collect()
+    }
+
+    /// The compute shape the cost model / profiler consumes. `pool`
+    /// supplies per-request history and KV lengths.
+    pub fn shape(&self, pool: &RequestPool) -> BatchShape {
+        let mut shape = BatchShape::default();
+        for (req, start, len) in self.prefill_items() {
+            debug_assert_eq!(pool.get(req).prefilled, start);
+            shape.prefill.push(crate::costmodel::PrefillItem { chunk: len, history: start });
+        }
+        for req in self.decode_items() {
+            shape.decode.push(crate::costmodel::DecodeItem { kv_len: pool.get(req).kv_len() });
+        }
+        shape
+    }
+
+    /// Structural invariants every scheduler must uphold. Returns Err with
+    /// the violated rule; exercised heavily by the property tests.
+    pub fn validate(&self, pool: &RequestPool, max_batch: usize) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for it in &self.items {
+            if !seen.insert(it.request()) {
+                return Err(format!("request {} appears twice in one batch", it.request()));
+            }
+        }
+        if self.len() > max_batch {
+            return Err(format!("batch size {} exceeds B={}", self.len(), max_batch));
+        }
+        for (req, start, len) in self.prefill_items() {
+            let r = pool.get(req);
+            if r.slot.is_none() {
+                return Err(format!("prefill of unadmitted request {req}"));
+            }
+            if len == 0 {
+                return Err(format!("empty prefill chunk for request {req}"));
+            }
+            if start != r.prefilled {
+                return Err(format!(
+                    "chunk start {start} != prefilled {} for request {req}",
+                    r.prefilled
+                ));
+            }
+            if start + len > r.spec.prompt_len {
+                return Err(format!("chunk overruns prompt for request {req}"));
+            }
+        }
+        for req in self.decode_items() {
+            let r = pool.get(req);
+            if r.slot.is_none() {
+                return Err(format!("decode of unadmitted request {req}"));
+            }
+            if !r.is_decode_ready() {
+                return Err(format!("decode of request {req} still in prefill"));
+            }
+            if r.remaining_decode() == 0 {
+                return Err(format!("decode of completed request {req}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::RequestSpec;
+
+    fn pool() -> RequestPool {
+        let mut p = RequestPool::new();
+        // 0: mid-prefill, 1: decoding, 2: queued
+        p.push(RequestSpec { prompt_len: 100, decode_len: 5, arrival: 0.0 });
+        p.push(RequestSpec { prompt_len: 50, decode_len: 5, arrival: 0.0 });
+        p.push(RequestSpec { prompt_len: 10, decode_len: 5, arrival: 0.0 });
+        p.admit(0, 0, 0.0);
+        p.get_mut(0).prefilled = 32;
+        p.admit(1, 1, 0.0);
+        p.get_mut(1).prefilled = 50;
+        p.get_mut(1).decoded = 2;
+        p
+    }
+
+    #[test]
+    fn accounting_and_shape() {
+        let p = pool();
+        let b = Batch::new(vec![
+            WorkItem::PrefillChunk { req: 0, start: 32, len: 30 },
+            WorkItem::Decode { req: 1 },
+        ]);
+        assert!(b.is_decode_maximal());
+        assert_eq!(b.total_tokens(), 31);
+        let shape = b.shape(&p);
+        assert_eq!(shape.prefill[0].history, 32);
+        assert_eq!(shape.decode[0].kv_len, 51);
+        assert!(b.validate(&p, 4).is_ok());
+    }
+
+    #[test]
+    fn validation_catches_violations() {
+        let p = pool();
+        // duplicate request
+        let b = Batch::new(vec![WorkItem::Decode { req: 1 }, WorkItem::Decode { req: 1 }]);
+        assert!(b.validate(&p, 4).unwrap_err().contains("twice"));
+        // wrong chunk start
+        let b = Batch::new(vec![WorkItem::PrefillChunk { req: 0, start: 0, len: 10 }]);
+        assert!(b.validate(&p, 4).unwrap_err().contains("chunk start"));
+        // chunk overrun
+        let b = Batch::new(vec![WorkItem::PrefillChunk { req: 0, start: 32, len: 100 }]);
+        assert!(b.validate(&p, 4).unwrap_err().contains("overruns"));
+        // decode of request still prefilling
+        let b = Batch::new(vec![WorkItem::Decode { req: 0 }]);
+        assert!(b.validate(&p, 4).unwrap_err().contains("still in prefill"));
+        // unadmitted
+        let b = Batch::new(vec![WorkItem::Decode { req: 2 }]);
+        assert!(b.validate(&p, 4).unwrap_err().contains("unadmitted"));
+        // over capacity
+        let b = Batch::new(vec![WorkItem::Decode { req: 1 }]);
+        assert!(b.validate(&p, 0).unwrap_err().contains("exceeds"));
+    }
+}

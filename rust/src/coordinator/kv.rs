@@ -1,0 +1,88 @@
+//! KV-cache slot manager.
+//!
+//! Capacity comes from the §4.3.1 formula (see
+//! [`crate::config::Deployment::max_batch_size`]); this module owns the
+//! slot free-list and the invariants: a slot is held by at most one request,
+//! and every admitted request holds exactly one slot.
+
+#[derive(Clone, Debug)]
+pub struct KvManager {
+    capacity: usize,
+    free: Vec<usize>,
+    /// in_use[slot] = true while allocated.
+    in_use: Vec<bool>,
+}
+
+impl KvManager {
+    pub fn new(capacity: usize) -> Self {
+        KvManager { capacity, free: (0..capacity).rev().collect(), in_use: vec![false; capacity] }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    /// Allocate a slot, lowest-index first.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(!self.in_use[slot]);
+        self.in_use[slot] = true;
+        Some(slot)
+    }
+
+    /// Release a slot. Panics on double-free — that is a scheduler bug we
+    /// want loud.
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.in_use[slot], "double free of KV slot {slot}");
+        self.in_use[slot] = false;
+        self.free.push(slot);
+    }
+
+    pub fn is_allocated(&self, slot: usize) -> bool {
+        self.in_use[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut kv = KvManager::new(3);
+        assert_eq!(kv.available(), 3);
+        let a = kv.alloc().unwrap();
+        let b = kv.alloc().unwrap();
+        let c = kv.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert!(kv.alloc().is_none());
+        kv.release(b);
+        assert_eq!(kv.available(), 1);
+        assert_eq!(kv.alloc(), Some(b));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut kv = KvManager::new(2);
+        let a = kv.alloc().unwrap();
+        kv.release(a);
+        kv.release(a);
+    }
+
+    #[test]
+    fn lowest_index_first() {
+        let mut kv = KvManager::new(4);
+        assert_eq!(kv.alloc(), Some(0));
+        assert_eq!(kv.alloc(), Some(1));
+    }
+}

@@ -1,0 +1,162 @@
+//! Serving metrics: per-iteration records plus per-request latencies.
+//!
+//! Decode time attribution follows the paper's §5.1.1 methodology: for a
+//! decode-maximal batch the *marginal* decode time is the difference between
+//! the hybrid batch and a prefill-only batch with the same chunk; the figure
+//! harness derives decode throughput from these records.
+
+use crate::costmodel::{BatchShape, OpBreakdown};
+use crate::util::Summary;
+
+/// One executed iteration.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    pub started_at: f64,
+    pub elapsed: f64,
+    pub shape: BatchShape,
+    /// What the iteration would have cost with the decode lanes removed
+    /// (None for non-hybrid batches). `elapsed − prefill_alone` is the
+    /// marginal cost of the piggybacked decodes.
+    pub prefill_alone: Option<f64>,
+    /// Per-op split when the executor provides one (the simulator does).
+    pub breakdown: Option<OpBreakdown>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub iterations: Vec<IterationRecord>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, rec: IterationRecord) {
+        self.iterations.push(rec);
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.iterations.iter().map(|r| r.elapsed).sum()
+    }
+
+    pub fn total_prefill_tokens(&self) -> usize {
+        self.iterations.iter().map(|r| r.shape.prefill_tokens()).sum()
+    }
+
+    pub fn total_decode_tokens(&self) -> usize {
+        self.iterations.iter().map(|r| r.shape.decode_tokens()).sum()
+    }
+
+    /// End-to-end throughput, tokens per second (prefill + decode tokens —
+    /// the paper's normalized-throughput metric).
+    pub fn throughput(&self) -> f64 {
+        let t = self.total_time();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.total_prefill_tokens() + self.total_decode_tokens()) as f64 / t
+        }
+    }
+
+    /// Mean time to produce one decode token, §5.1.1 attribution:
+    /// decode-only iterations contribute elapsed/lanes; hybrid iterations
+    /// contribute their marginal cost over the prefill-alone run.
+    pub fn decode_time_per_token(&self) -> f64 {
+        let mut time = 0.0;
+        let mut tokens = 0usize;
+        for r in &self.iterations {
+            let d = r.shape.decode_tokens();
+            if d == 0 {
+                continue;
+            }
+            match r.prefill_alone {
+                Some(alone) => time += (r.elapsed - alone).max(0.0),
+                None if r.shape.prefill.is_empty() => time += r.elapsed,
+                None => time += r.elapsed, // hybrid without attribution: all-in
+            }
+            tokens += d;
+        }
+        if tokens == 0 {
+            0.0
+        } else {
+            time / tokens as f64
+        }
+    }
+
+    /// Decode throughput (tokens/s) under the same attribution.
+    pub fn decode_throughput(&self) -> f64 {
+        let t = self.decode_time_per_token();
+        if t == 0.0 {
+            0.0
+        } else {
+            1.0 / t
+        }
+    }
+
+    /// Aggregate per-op breakdown across all iterations.
+    pub fn op_totals(&self) -> OpBreakdown {
+        let mut acc = OpBreakdown::default();
+        for r in &self.iterations {
+            if let Some(b) = &r.breakdown {
+                acc.preproj += b.preproj;
+                acc.attn_prefill += b.attn_prefill;
+                acc.attn_decode += b.attn_decode;
+                acc.postproj += b.postproj;
+                acc.ffn_ln1 += b.ffn_ln1;
+                acc.ffn_ln2 += b.ffn_ln2;
+                acc.others += b.others;
+                acc.comm += b.comm;
+            }
+        }
+        acc
+    }
+
+    /// Iteration-time spread — uniform work units (SARATHI's goal) show a
+    /// tight distribution.
+    pub fn iteration_time_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for r in &self.iterations {
+            s.add(r.elapsed);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::BatchShape;
+
+    fn rec(elapsed: f64, shape: BatchShape, alone: Option<f64>) -> IterationRecord {
+        IterationRecord { started_at: 0.0, elapsed, shape, prefill_alone: alone, breakdown: None }
+    }
+
+    #[test]
+    fn throughput_counts_all_tokens() {
+        let mut m = Metrics::new();
+        m.record(rec(1.0, BatchShape::prefill_only(&[(100, 0)]), None));
+        m.record(rec(1.0, BatchShape::decode_only(&[10, 10]), None));
+        assert_eq!(m.total_prefill_tokens(), 100);
+        assert_eq!(m.total_decode_tokens(), 2);
+        assert!((m.throughput() - 51.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn marginal_attribution_for_hybrid() {
+        let mut m = Metrics::new();
+        // hybrid cost 1.2, prefill alone 1.0 -> 0.2 over 4 decodes = 0.05/tok
+        m.record(rec(1.2, BatchShape::hybrid(96, 0, &[5; 4]), Some(1.0)));
+        assert!((m.decode_time_per_token() - 0.05).abs() < 1e-9);
+        // decode-only batch: whole time attributed
+        m.record(rec(0.8, BatchShape::decode_only(&[5; 4]), None));
+        assert!((m.decode_time_per_token() - (0.2 + 0.8) / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.decode_time_per_token(), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`request`] / [`pool`] — request lifecycle and the request table.
+//! * [`kv`] — KV-cache slot manager (§4.3.1 capacity formula upstream in
+//!   [`crate::config::Deployment`]).
+//! * [`batch`] — work items and batch composition/validation.
+//! * [`sched`] — the batching policies under comparison: request-level
+//!   baseline, Orca best/worst iteration-level, and SARATHI
+//!   (chunked-prefills + decode-maximal batching).
+//! * [`engine`] — the serving loop: admission → schedule → execute →
+//!   advance, generic over simulated or real (PJRT) executors.
+//! * [`metrics`] — per-iteration and per-request accounting the figure
+//!   harness consumes.
+
+pub mod batch;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod pool;
+pub mod request;
+pub mod sched;
+
+pub use batch::{Batch, WorkItem};
+pub use engine::{Engine, Executor, SimExecutor, StepOutcome};
+pub use kv::KvManager;
+pub use metrics::{IterationRecord, Metrics};
+pub use pool::RequestPool;
+pub use request::{Phase, Request, RequestId};
+pub use sched::{make_scheduler, OrcaScheduler, RequestLevelScheduler, SarathiScheduler, Scheduler};

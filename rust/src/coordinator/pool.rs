@@ -1,0 +1,229 @@
+//! The request table: every request the system has seen, indexed by id.
+//!
+//! Perf note (EXPERIMENTS.md §Perf, L3 iteration 1): the pool maintains
+//! arrival-sorted `pending` and `active` index lists so the per-iteration
+//! scheduler queries are O(B + admissible) instead of O(total requests) —
+//! the difference between the Fig.-12 10K-request simulation scaling
+//! linearly vs quadratically. Admission and completion therefore go
+//! through [`RequestPool::admit`] / [`RequestPool::complete`], never by
+//! poking `slot`/`completed_at` directly.
+
+use super::request::{Phase, Request, RequestId};
+use crate::workload::RequestSpec;
+
+#[derive(Clone, Debug, Default)]
+pub struct RequestPool {
+    requests: Vec<Request>,
+    /// Not-yet-admitted ids, sorted by (arrival, id).
+    pending: Vec<RequestId>,
+    /// Cursor into `pending`: everything before it has been admitted.
+    pending_head: usize,
+    /// Admitted, not complete.
+    active: Vec<RequestId>,
+    n_complete: usize,
+}
+
+impl RequestPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_specs(specs: &[RequestSpec]) -> Self {
+        let mut p = Self::new();
+        for &s in specs {
+            p.push(s);
+        }
+        p
+    }
+
+    pub fn push(&mut self, spec: RequestSpec) -> RequestId {
+        let id = self.requests.len();
+        self.requests.push(Request::new(id, spec));
+        // insert keeping (arrival, id) order; typical workloads push in
+        // arrival order so this is O(1) amortized
+        let tail = &self.pending[self.pending_head..];
+        let pos = tail.partition_point(|&q| {
+            let a = self.requests[q].arrival;
+            a < spec.arrival || (a == spec.arrival && q < id)
+        });
+        self.pending.insert(self.pending_head + pos, id);
+        id
+    }
+
+    pub fn get(&self, id: RequestId) -> &Request {
+        &self.requests[id]
+    }
+
+    /// Mutable access for progress fields (`prefilled`, `decoded`, ...).
+    /// Admission/completion must use [`admit`](Self::admit) /
+    /// [`complete`](Self::complete) so the index lists stay coherent.
+    pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
+        &mut self.requests[id]
+    }
+
+    /// Admit a queued request with a KV slot.
+    pub fn admit(&mut self, id: RequestId, slot: usize, now: f64) {
+        let r = &mut self.requests[id];
+        debug_assert!(r.slot.is_none() && r.completed_at.is_none());
+        r.slot = Some(slot);
+        r.admitted_at = Some(now);
+        // ids are admitted FCFS from the pending head in practice; fall
+        // back to a scan for out-of-order admissions (tests).
+        if self.pending.get(self.pending_head) == Some(&id) {
+            self.pending_head += 1;
+        } else if let Some(pos) = self.pending[self.pending_head..].iter().position(|&q| q == id) {
+            self.pending.remove(self.pending_head + pos);
+        }
+        // keep `active` id-sorted so phase queries need no per-call sort
+        let pos = self.active.partition_point(|&a| a < id);
+        self.active.insert(pos, id);
+    }
+
+    /// Mark a request complete; returns its released KV slot.
+    pub fn complete(&mut self, id: RequestId, now: f64) -> usize {
+        let r = &mut self.requests[id];
+        debug_assert!(r.completed_at.is_none());
+        r.completed_at = Some(now);
+        let slot = r.slot.take().expect("completing request without slot");
+        let pos = self.active.binary_search(&id).expect("complete of inactive request");
+        self.active.remove(pos);
+        self.n_complete += 1;
+        slot
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.requests.iter()
+    }
+
+    /// Admitted ids in `phase` (Prefill or Decode), FCFS (id) order.
+    pub fn in_phase(&self, phase: Phase) -> Vec<RequestId> {
+        match phase {
+            Phase::Prefill | Phase::Decode => self
+                .active
+                .iter()
+                .copied()
+                .filter(|&id| self.requests[id].phase() == phase)
+                .collect(),
+            Phase::Queued => self.pending[self.pending_head..]
+                .iter()
+                .copied()
+                .filter(|&id| self.requests[id].phase() == Phase::Queued)
+                .collect(),
+            Phase::Complete => {
+                (0..self.requests.len()).filter(|&id| self.requests[id].phase() == Phase::Complete).collect()
+            }
+        }
+    }
+
+    /// Queued requests that have arrived by `now`, FCFS by arrival.
+    /// O(result) thanks to the arrival-sorted pending list.
+    pub fn arrived_queued(&self, now: f64) -> Vec<RequestId> {
+        self.pending[self.pending_head..]
+            .iter()
+            .copied()
+            .take_while(|&id| self.requests[id].arrival <= now)
+            .collect()
+    }
+
+    /// Lowest-id admitted request in `phase` without materializing the
+    /// whole list (the SARATHI/Orca schedulers only chunk ONE prefill per
+    /// iteration).
+    pub fn first_in_phase(&self, phase: Phase) -> Option<RequestId> {
+        self.active.iter().copied().find(|&id| self.requests[id].phase() == phase)
+    }
+
+    /// Next admissible request, if any — O(1) peek at the pending head
+    /// (admission loops use this instead of materializing
+    /// [`arrived_queued`](Self::arrived_queued), which is O(backlog)).
+    pub fn next_queued(&self, now: f64) -> Option<RequestId> {
+        let &id = self.pending.get(self.pending_head)?;
+        (self.requests[id].arrival <= now).then_some(id)
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.n_complete == self.requests.len()
+    }
+
+    /// True while any request is admitted (holds a slot).
+    pub fn any_active(&self) -> bool {
+        !self.active.is_empty()
+    }
+
+    /// Earliest arrival among still-queued requests (drives idle-advance).
+    pub fn next_arrival(&self, now: f64) -> Option<f64> {
+        self.pending[self.pending_head..]
+            .iter()
+            .map(|&id| self.requests[id].arrival)
+            .find(|&a| a > now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_order_and_phase_queries() {
+        let mut p = RequestPool::new();
+        for i in 0..3 {
+            p.push(RequestSpec { prompt_len: 10 * (i + 1), decode_len: 2, arrival: i as f64 });
+        }
+        assert_eq!(p.arrived_queued(0.5), vec![0]);
+        assert_eq!(p.arrived_queued(5.0), vec![0, 1, 2]);
+        p.admit(1, 0, 1.0);
+        assert_eq!(p.in_phase(Phase::Prefill), vec![1]);
+        // request 1 was admitted; the next *queued* arrival is request 2
+        assert_eq!(p.next_arrival(0.0), Some(2.0));
+        assert!(!p.all_complete());
+        assert_eq!(p.arrived_queued(5.0), vec![0, 2]);
+    }
+
+    #[test]
+    fn admit_complete_cycle_maintains_indexes() {
+        let mut p = RequestPool::new();
+        for _ in 0..4 {
+            p.push(RequestSpec { prompt_len: 8, decode_len: 1, arrival: 0.0 });
+        }
+        p.admit(0, 5, 0.0);
+        p.admit(1, 6, 0.0);
+        assert!(p.any_active());
+        assert_eq!(p.arrived_queued(0.0), vec![2, 3]);
+        p.get_mut(0).prefilled = 8;
+        p.get_mut(0).decoded = 1;
+        let slot = p.complete(0, 1.0);
+        assert_eq!(slot, 5);
+        assert_eq!(p.in_phase(Phase::Complete), vec![0]);
+        assert_eq!(p.in_phase(Phase::Prefill), vec![1]);
+        assert!(!p.all_complete());
+        p.get_mut(1).prefilled = 8;
+        p.get_mut(1).decoded = 1;
+        p.complete(1, 2.0);
+        p.admit(2, 0, 2.0);
+        p.admit(3, 1, 2.0);
+        for id in [2, 3] {
+            p.get_mut(id).prefilled = 8;
+            p.get_mut(id).decoded = 1;
+            p.complete(id, 3.0);
+        }
+        assert!(p.all_complete());
+        assert!(!p.any_active());
+    }
+
+    #[test]
+    fn unsorted_arrivals_are_served_in_arrival_order() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.5 });
+        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.1 });
+        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.3 });
+        assert_eq!(p.arrived_queued(1.0), vec![1, 2, 0]);
+        assert_eq!(p.next_arrival(0.2), Some(0.3));
+    }
+}

@@ -1,0 +1,129 @@
+//! Request lifecycle: Queued → Prefill → Decode → Complete.
+
+use crate::workload::RequestSpec;
+
+pub type RequestId = usize;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for admission (no KV slot yet).
+    Queued,
+    /// Admitted; prompt not fully prefilled.
+    Prefill,
+    /// Prompt prefilled; generating output tokens.
+    Decode,
+    /// All output tokens generated; slot released.
+    Complete,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub spec: RequestSpec,
+    /// Prompt tokens prefilled so far (chunked prefill advances this).
+    pub prefilled: usize,
+    /// Output tokens generated so far. The final prefill chunk produces the
+    /// first output token, so this becomes 1 when prefill completes.
+    pub decoded: usize,
+    /// KV slot while admitted.
+    pub slot: Option<usize>,
+    pub arrival: f64,
+    pub admitted_at: Option<f64>,
+    pub first_token_at: Option<f64>,
+    pub completed_at: Option<f64>,
+    /// Timestamp of every produced output token (first from the final
+    /// prefill chunk, rest from decode iterations) — drives the
+    /// time-between-tokens latency analysis (EXPERIMENTS.md §E14).
+    pub token_times: Vec<f64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, spec: RequestSpec) -> Self {
+        Request {
+            id,
+            spec,
+            prefilled: 0,
+            decoded: 0,
+            slot: None,
+            arrival: spec.arrival,
+            admitted_at: None,
+            first_token_at: None,
+            completed_at: None,
+            token_times: Vec::new(),
+        }
+    }
+
+    /// Gaps between consecutive output tokens (time-between-tokens); a long
+    /// gap is a decode stall caused by a scheduler running other work.
+    pub fn token_gaps(&self) -> Vec<f64> {
+        self.token_times.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    pub fn phase(&self) -> Phase {
+        if self.completed_at.is_some() {
+            Phase::Complete
+        } else if self.slot.is_none() {
+            Phase::Queued
+        } else if self.prefilled < self.spec.prompt_len {
+            Phase::Prefill
+        } else {
+            Phase::Decode
+        }
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn remaining_prompt(&self) -> usize {
+        self.spec.prompt_len - self.prefilled
+    }
+
+    /// Output tokens still to generate.
+    pub fn remaining_decode(&self) -> usize {
+        self.spec.decode_len.saturating_sub(self.decoded)
+    }
+
+    /// Tokens currently in the KV cache (context length for the *next*
+    /// decode step): full prompt + generated tokens except the one about to
+    /// be produced.
+    pub fn kv_len(&self) -> usize {
+        self.prefilled + self.decoded.saturating_sub(1)
+    }
+
+    pub fn is_decode_ready(&self) -> bool {
+        self.phase() == Phase::Decode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(p: usize, d: usize) -> RequestSpec {
+        RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0 }
+    }
+
+    #[test]
+    fn lifecycle_phases() {
+        let mut r = Request::new(0, spec(100, 10));
+        assert_eq!(r.phase(), Phase::Queued);
+        r.slot = Some(3);
+        assert_eq!(r.phase(), Phase::Prefill);
+        r.prefilled = 100;
+        r.decoded = 1; // first token from the final prefill chunk
+        assert_eq!(r.phase(), Phase::Decode);
+        r.completed_at = Some(1.0);
+        assert_eq!(r.phase(), Phase::Complete);
+    }
+
+    #[test]
+    fn accounting() {
+        let mut r = Request::new(0, spec(100, 10));
+        r.slot = Some(0);
+        r.prefilled = 60;
+        assert_eq!(r.remaining_prompt(), 40);
+        r.prefilled = 100;
+        r.decoded = 3;
+        assert_eq!(r.remaining_decode(), 7);
+        // kv holds the prompt + 2 generated tokens (3rd is being produced)
+        assert_eq!(r.kv_len(), 102);
+    }
+}

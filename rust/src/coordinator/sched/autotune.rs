@@ -1,0 +1,127 @@
+//! Chunk-size auto-tuner — the paper's §6 future-work item ("we leave it
+//! to future work to explore how to pick an optimal chunk size as it
+//! depends on the hardware, model characteristics, sequence length, and
+//! the composition of prefill-decode tokens").
+//!
+//! Given a deployment and an expected workload (sequence length, P:D
+//! ratio), the tuner sweeps tile-aligned candidate chunk sizes through the
+//! serving engine on the calibrated cost model and returns the
+//! throughput-maximizing one. Candidates are bounded below by the tile and
+//! above by the saturation point ×2 — outside that range §4.2/§4.4 already
+//! rule the chunk out.
+
+use crate::config::{Deployment, SchedulerConfig};
+use crate::coordinator::{make_scheduler, Engine, KvManager, RequestPool, SimExecutor};
+use crate::costmodel::CostModel;
+use crate::workload::uniform_population;
+
+#[derive(Clone, Debug)]
+pub struct ChunkTuneResult {
+    /// The winning chunk size.
+    pub chunk: usize,
+    /// Its end-to-end throughput (tokens/s) on the probe workload.
+    pub throughput: f64,
+    /// Every evaluated (chunk, throughput) pair, ascending chunk.
+    pub evaluated: Vec<(usize, f64)>,
+}
+
+/// Tile-aligned candidate chunk sizes for a deployment.
+pub fn candidate_chunks(d: &Deployment) -> Vec<usize> {
+    let cm = CostModel::for_deployment(d);
+    let tile = cm.gpu.tile;
+    let hi = (2 * cm.saturation_tokens()).min(d.max_seq_len);
+    let mut out = Vec::new();
+    let mut c = tile;
+    while c <= hi {
+        out.push(c);
+        c += tile;
+    }
+    if out.is_empty() {
+        out.push(tile);
+    }
+    out
+}
+
+/// Sweep candidates on a steady-state probe workload and return the best.
+pub fn tune_chunk_size(d: &Deployment, seq_len: usize, pd: f64, waves: usize) -> ChunkTuneResult {
+    let b = d.max_batch_size();
+    let pop = uniform_population(b * waves.max(2), seq_len, pd);
+    let cm = CostModel::for_deployment(d);
+    let mut evaluated = Vec::new();
+    let mut best = (0usize, 0.0f64);
+    for chunk in candidate_chunks(d) {
+        let cfg = SchedulerConfig::sarathi(chunk, b);
+        let mut engine = Engine::new(
+            RequestPool::from_specs(&pop),
+            KvManager::new(b),
+            make_scheduler(&cfg),
+            Box::new(SimExecutor::new(cm.clone())),
+        );
+        engine.run();
+        let thpt = engine.metrics.throughput();
+        evaluated.push((chunk, thpt));
+        if thpt > best.1 {
+            best = (chunk, thpt);
+        }
+    }
+    ChunkTuneResult { chunk: best.0, throughput: best.1, evaluated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, ModelConfig};
+
+    fn a6000_1k() -> Deployment {
+        Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 1024)
+    }
+
+    #[test]
+    fn candidates_are_tile_aligned_and_bounded() {
+        let d = a6000_1k();
+        let cs = candidate_chunks(&d);
+        assert!(!cs.is_empty());
+        assert!(cs.iter().all(|c| c % 128 == 0));
+        assert!(cs.windows(2).all(|w| w[0] < w[1]));
+        assert!(*cs.last().unwrap() <= 1024);
+    }
+
+    #[test]
+    fn tuner_picks_a_mid_range_chunk_at_balanced_pd() {
+        // at P:D = C/(B−1) ≈ 15 (B=18), §5.1.3 says 256 is optimal; the
+        // tuner must land in the 256–512 band, never at the tiny or huge
+        // extremes.
+        let d = a6000_1k();
+        let r = tune_chunk_size(&d, 1024, 15.0, 3);
+        assert!(
+            (256..=512).contains(&r.chunk),
+            "tuned chunk {} (evaluated {:?})",
+            r.chunk,
+            r.evaluated
+        );
+        assert!(r.throughput > 0.0);
+    }
+
+    #[test]
+    fn tuned_chunk_beats_extremes() {
+        let d = a6000_1k();
+        let r = tune_chunk_size(&d, 1024, 15.0, 3);
+        let at = |c: usize| r.evaluated.iter().find(|&&(cc, _)| cc == c).map(|&(_, t)| t);
+        if let Some(t128) = at(128) {
+            assert!(r.throughput >= t128);
+        }
+        if let Some(t1024) = at(1024) {
+            assert!(r.throughput >= t1024);
+        }
+    }
+
+    #[test]
+    fn higher_pd_prefers_bigger_chunks() {
+        // §5.1.3: the optimal P:D grows with chunk size — dually, a higher
+        // P:D workload tunes to a chunk at least as large.
+        let d = a6000_1k();
+        let low = tune_chunk_size(&d, 1024, 5.0, 3);
+        let high = tune_chunk_size(&d, 1024, 60.0, 3);
+        assert!(high.chunk >= low.chunk, "low {} high {}", low.chunk, high.chunk);
+    }
+}

@@ -1,0 +1,55 @@
+//! Batching policies under comparison (§5):
+//!
+//! * [`RequestLevelScheduler`] — FasterTransformer-style baseline.
+//! * [`OrcaScheduler`] — iteration-level scheduling, best/worst case.
+//! * [`SarathiScheduler`] — chunked-prefills + decode-maximal batching.
+
+pub mod autotune;
+mod orca;
+mod request_level;
+mod sarathi;
+
+pub use autotune::{candidate_chunks, tune_chunk_size, ChunkTuneResult};
+pub use orca::OrcaScheduler;
+pub use request_level::RequestLevelScheduler;
+pub use sarathi::SarathiScheduler;
+
+use super::batch::Batch;
+use super::kv::KvManager;
+use super::pool::RequestPool;
+use crate::config::{SchedulerConfig, SchedulerKind};
+
+/// A batching policy. Admission (KV-slot assignment) is part of the policy:
+/// request-level batching deliberately delays admission, iteration-level
+/// policies admit as soon as a slot frees.
+pub trait Scheduler {
+    /// Compose the next iteration's batch at time `now`. An empty batch
+    /// means the scheduler has nothing runnable (engine idles to the next
+    /// arrival).
+    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Admit arrived, queued requests FCFS while slots are free (the shared
+/// iteration-level admission rule).
+pub(crate) fn admit_fcfs(pool: &mut RequestPool, kv: &mut KvManager, now: f64) {
+    while let Some(id) = pool.next_queued(now) {
+        match kv.alloc() {
+            Some(slot) => pool.admit(id, slot, now),
+            None => break,
+        }
+    }
+}
+
+/// Build the policy named by a [`SchedulerConfig`].
+pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
+    match cfg.kind {
+        SchedulerKind::RequestLevel => Box::new(RequestLevelScheduler::new(cfg.max_batch)),
+        SchedulerKind::OrcaBest => Box::new(OrcaScheduler::best(cfg.max_batch)),
+        SchedulerKind::OrcaWorst => Box::new(OrcaScheduler::worst(cfg.max_batch)),
+        SchedulerKind::Sarathi => {
+            Box::new(SarathiScheduler::new(cfg.chunk_size, cfg.max_batch, cfg.tile_align))
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Orca iteration-level scheduling (§5.2's comparison points).
+//!
+//! Orca admits/retires requests at iteration granularity but always submits
+//! a request's *entire* prompt as one prefill. The paper evaluates two
+//! envelope cases:
+//!
+//! * **best case** — the full prefill of exactly one new request overlaps
+//!   the ongoing decodes in a mixed batch (a special case of SARATHI with
+//!   C = max sequence length, as §5.2 notes);
+//! * **worst case** — all requests begin and end together, so batches
+//!   degenerate to prefill-only / decode-only (no overlap).
+
+use super::super::batch::{Batch, WorkItem};
+use super::super::kv::KvManager;
+use super::super::pool::RequestPool;
+use super::super::request::Phase;
+use super::{admit_fcfs, Scheduler};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrcaMode {
+    Best,
+    Worst,
+}
+
+pub struct OrcaScheduler {
+    mode: OrcaMode,
+    max_batch: usize,
+}
+
+impl OrcaScheduler {
+    pub fn best(max_batch: usize) -> Self {
+        OrcaScheduler { mode: OrcaMode::Best, max_batch }
+    }
+
+    pub fn worst(max_batch: usize) -> Self {
+        OrcaScheduler { mode: OrcaMode::Worst, max_batch }
+    }
+}
+
+impl Scheduler for OrcaScheduler {
+    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch {
+        admit_fcfs(pool, kv, now);
+        let prefilling = pool.in_phase(Phase::Prefill);
+        let decoding: Vec<usize> = pool
+            .in_phase(Phase::Decode)
+            .into_iter()
+            .filter(|&id| pool.get(id).remaining_decode() > 0)
+            .collect();
+
+        let mut items = Vec::new();
+        match self.mode {
+            OrcaMode::Best => {
+                // one full prefill piggybacks on the running decodes
+                if let Some(&id) = prefilling.first() {
+                    // (whole list needed only in Worst mode; Best uses the
+                    // first — kept as a slice op since the list is ≤ B)
+                    let r = pool.get(id);
+                    items.push(WorkItem::PrefillChunk {
+                        req: id,
+                        start: r.prefilled,
+                        len: r.remaining_prompt(),
+                    });
+                }
+                for &id in decoding.iter().take(self.max_batch - items.len()) {
+                    items.push(WorkItem::Decode { req: id });
+                }
+            }
+            OrcaMode::Worst => {
+                // no overlap: drain prefills first, then decodes
+                if !prefilling.is_empty() {
+                    for &id in prefilling.iter().take(self.max_batch) {
+                        let r = pool.get(id);
+                        items.push(WorkItem::PrefillChunk {
+                            req: id,
+                            start: r.prefilled,
+                            len: r.remaining_prompt(),
+                        });
+                    }
+                } else {
+                    for &id in decoding.iter().take(self.max_batch) {
+                        items.push(WorkItem::Decode { req: id });
+                    }
+                }
+            }
+        }
+        Batch::new(items)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.mode {
+            OrcaMode::Best => "orca-best",
+            OrcaMode::Worst => "orca-worst",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::RequestSpec;
+
+    fn setup() -> (RequestPool, KvManager) {
+        let specs: Vec<RequestSpec> =
+            (0..4).map(|_| RequestSpec { prompt_len: 100, decode_len: 10, arrival: 0.0 }).collect();
+        let mut pool = RequestPool::from_specs(&specs);
+        let mut kv = KvManager::new(8);
+        // requests 0,1 already decoding
+        for id in 0..2 {
+            let slot = kv.alloc().unwrap();
+            pool.admit(id, slot, 0.0);
+            let r = pool.get_mut(id);
+            r.prefilled = 100;
+            r.decoded = 1;
+        }
+        (pool, kv)
+    }
+
+    #[test]
+    fn best_case_mixes_one_full_prefill_with_decodes() {
+        let (mut pool, mut kv) = setup();
+        let mut s = OrcaScheduler::best(8);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.n_prefill_chunks(), 1);
+        assert_eq!(b.prefill_tokens(), 100); // FULL prompt, not a chunk
+        assert_eq!(b.n_decodes(), 2);
+        assert!(b.validate(&pool, 8).is_ok());
+    }
+
+    #[test]
+    fn worst_case_never_mixes() {
+        let (mut pool, mut kv) = setup();
+        let mut s = OrcaScheduler::worst(8);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        // prefills pending -> prefill-only
+        assert!(b.n_prefill_chunks() > 0);
+        assert_eq!(b.n_decodes(), 0);
+    }
+
+    #[test]
+    fn best_case_decode_only_when_no_prefills() {
+        let (mut pool, mut kv) = setup();
+        // finish all prefills
+        for id in 2..4 {
+            let slot = kv.alloc().unwrap();
+            pool.admit(id, slot, 0.0);
+            let r = pool.get_mut(id);
+            r.prefilled = 100;
+            r.decoded = 1;
+        }
+        let mut s = OrcaScheduler::best(8);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.n_prefill_chunks(), 0);
+        assert_eq!(b.n_decodes(), 4);
+    }
+
+    #[test]
+    fn respects_batch_cap() {
+        let (mut pool, mut kv) = setup();
+        let mut s = OrcaScheduler::best(2);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert!(b.len() <= 2);
+    }
+}

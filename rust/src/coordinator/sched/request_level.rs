@@ -1,0 +1,121 @@
+//! FasterTransformer-style request-level scheduling (§4.1, §5.1 baseline):
+//! pick a batch of requests, run prefill-only then decode-only iterations,
+//! and admit the next batch only when *every* request in the current one
+//! has completed.
+
+use super::super::batch::{Batch, WorkItem};
+use super::super::kv::KvManager;
+use super::super::pool::RequestPool;
+use super::super::request::Phase;
+use super::Scheduler;
+
+pub struct RequestLevelScheduler {
+    max_batch: usize,
+    /// The ids of the batch currently being driven to completion.
+    running: Vec<usize>,
+}
+
+impl RequestLevelScheduler {
+    pub fn new(max_batch: usize) -> Self {
+        RequestLevelScheduler { max_batch, running: Vec::new() }
+    }
+}
+
+impl Scheduler for RequestLevelScheduler {
+    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch {
+        // retire the running set only when all of it has completed
+        self.running.retain(|&id| pool.get(id).phase() != Phase::Complete);
+
+        if self.running.is_empty() {
+            // request-level admission: a whole new batch at once
+            while self.running.len() < self.max_batch {
+                let Some(id) = pool.next_queued(now) else { break };
+                if let Some(slot) = kv.alloc() {
+                    pool.admit(id, slot, now);
+                    self.running.push(id);
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // prefill-only first: every un-prefilled request submits its FULL
+        // remaining prompt in one go (no chunking in the baseline).
+        let prefills: Vec<WorkItem> = self
+            .running
+            .iter()
+            .map(|&id| pool.get(id))
+            .filter(|r| r.phase() == Phase::Prefill)
+            .map(|r| WorkItem::PrefillChunk { req: r.id, start: r.prefilled, len: r.remaining_prompt() })
+            .collect();
+        if !prefills.is_empty() {
+            return Batch::new(prefills);
+        }
+
+        // then decode-only until the whole batch drains
+        let decodes: Vec<WorkItem> = self
+            .running
+            .iter()
+            .map(|&id| pool.get(id))
+            .filter(|r| r.is_decode_ready() && r.remaining_decode() > 0)
+            .map(|r| WorkItem::Decode { req: r.id })
+            .collect();
+        Batch::new(decodes)
+    }
+
+    fn name(&self) -> &'static str {
+        "request-level"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::RequestSpec;
+
+    fn setup(n: usize) -> (RequestPool, KvManager) {
+        let specs: Vec<RequestSpec> =
+            (0..n).map(|_| RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 }).collect();
+        (RequestPool::from_specs(&specs), KvManager::new(4))
+    }
+
+    #[test]
+    fn prefills_whole_prompts_then_decodes() {
+        let (mut pool, mut kv) = setup(2);
+        let mut s = RequestLevelScheduler::new(4);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.n_prefill_chunks(), 2);
+        assert_eq!(b.prefill_tokens(), 128); // full prompts, no chunking
+        assert!(b.validate(&pool, 4).is_ok());
+        // apply: both prefilled
+        let items: Vec<_> = b.prefill_items().collect();
+        for (req, _, len) in items {
+            let r = pool.get_mut(req);
+            r.prefilled += len;
+            r.decoded = 1;
+        }
+        let b = s.schedule(&mut pool, &mut kv, 1.0);
+        assert_eq!(b.n_prefill_chunks(), 0);
+        assert_eq!(b.n_decodes(), 2);
+    }
+
+    #[test]
+    fn no_admission_until_batch_drains() {
+        let (mut pool, mut kv) = setup(6);
+        let mut s = RequestLevelScheduler::new(4);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.n_prefill_chunks(), 4); // batch cap
+        // requests 4,5 stay queued even though a slot-less schedule happens
+        assert_eq!(pool.in_phase(Phase::Queued).len(), 2);
+        // finish the four
+        for id in 0..4 {
+            let r = pool.get_mut(id);
+            r.prefilled = 64;
+            r.decoded = 3;
+            let slot = pool.complete(id, 1.0);
+            kv.release(slot);
+        }
+        let b = s.schedule(&mut pool, &mut kv, 2.0);
+        assert_eq!(b.n_prefill_chunks(), 2); // the stragglers enter as a new batch
+    }
+}

@@ -1,0 +1,179 @@
+//! The SARATHI scheduler: chunked-prefills + decode-maximal batching (§4).
+//!
+//! Every iteration carries at most ONE prefill chunk, sized so the fused
+//! token count (chunk + piggybacked decodes) stays tile-aligned (§4.4), and
+//! fills the remaining batch slots with every ready decode (§4.3). Prefills
+//! are served FCFS, one request chunked to completion at a time.
+
+use super::super::batch::{Batch, WorkItem};
+use super::super::kv::KvManager;
+use super::super::pool::RequestPool;
+use super::super::request::Phase;
+use super::{admit_fcfs, Scheduler};
+
+pub struct SarathiScheduler {
+    /// Target chunk size C (tokens) — the tile-aligned budget for the fused
+    /// token count of a decode-maximal batch.
+    chunk_size: usize,
+    /// Max batch size B from the §4.3.1 capacity formula. At most B−1
+    /// decodes piggyback beside the chunk.
+    max_batch: usize,
+    /// Tile size for the §4.4 alignment rule.
+    tile: usize,
+}
+
+impl SarathiScheduler {
+    pub fn new(chunk_size: usize, max_batch: usize, tile: usize) -> Self {
+        assert!(chunk_size > 0, "chunk size must be positive");
+        SarathiScheduler { chunk_size, max_batch, tile }
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// §4.4's second rule: the chunk budget should be a tile multiple so
+    /// the fused matmul dimension stays tile-aligned. Misaligned chunks
+    /// (e.g. 320 with tile 128) pay the Fig.-7 quantization penalty —
+    /// Fig. 13c measures exactly that. The autotuner only proposes aligned
+    /// candidates; this flags hand-picked misaligned configurations.
+    pub fn is_tile_aligned(&self) -> bool {
+        self.chunk_size % self.tile == 0
+    }
+
+    /// §4.4: with n_d piggybacked decodes, shrink the chunk to C − n_d so
+    /// the fused matmul token dimension stays at the tile-aligned C.
+    fn chunk_budget(&self, n_decodes: usize) -> usize {
+        self.chunk_size.saturating_sub(n_decodes).max(1)
+    }
+}
+
+impl Scheduler for SarathiScheduler {
+    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch {
+        admit_fcfs(pool, kv, now);
+
+        // every ready decode piggybacks (up to B−1 when a chunk rides along)
+        let decoding: Vec<usize> = pool
+            .in_phase(Phase::Decode)
+            .into_iter()
+            .filter(|&id| pool.get(id).remaining_decode() > 0)
+            .collect();
+        let prefilling = pool.first_in_phase(Phase::Prefill);
+
+        let mut items = Vec::new();
+        if let Some(id) = prefilling {
+            let n_d = decoding.len().min(self.max_batch - 1);
+            let budget = self.chunk_budget(n_d);
+            let r = pool.get(id);
+            let len = budget.min(r.remaining_prompt());
+            items.push(WorkItem::PrefillChunk { req: id, start: r.prefilled, len });
+            for &d in decoding.iter().take(n_d) {
+                items.push(WorkItem::Decode { req: d });
+            }
+        } else {
+            // no prefill work: plain decode-only iteration
+            for &d in decoding.iter().take(self.max_batch) {
+                items.push(WorkItem::Decode { req: d });
+            }
+        }
+        Batch::new(items)
+    }
+
+    fn name(&self) -> &'static str {
+        "sarathi"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::RequestSpec;
+
+    fn setup(n_decoding: usize, prompt: usize) -> (RequestPool, KvManager) {
+        let mut pool = RequestPool::new();
+        let mut kv = KvManager::new(32);
+        for _ in 0..n_decoding {
+            let id = pool.push(RequestSpec { prompt_len: 64, decode_len: 20, arrival: 0.0 });
+            let slot = kv.alloc().unwrap();
+            pool.admit(id, slot, 0.0);
+            let r = pool.get_mut(id);
+            r.prefilled = 64;
+            r.decoded = 1;
+        }
+        pool.push(RequestSpec { prompt_len: prompt, decode_len: 20, arrival: 0.0 });
+        (pool, kv)
+    }
+
+    #[test]
+    fn decode_maximal_composition() {
+        let (mut pool, mut kv) = setup(3, 1000);
+        let mut s = SarathiScheduler::new(256, 8, 128);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert!(b.is_decode_maximal());
+        assert_eq!(b.n_decodes(), 3);
+        // §4.4 alignment: fused tokens == C exactly (chunk shrank by n_d)
+        assert_eq!(b.prefill_tokens(), 256 - 3);
+        assert_eq!(b.total_tokens(), 256);
+        assert!(b.validate(&pool, 8).is_ok());
+    }
+
+    #[test]
+    fn single_prefill_chunk_per_batch() {
+        // two requests awaiting prefill: only the first is chunked
+        let (mut pool, mut kv) = setup(0, 1000);
+        pool.push(RequestSpec { prompt_len: 500, decode_len: 5, arrival: 0.0 });
+        let mut s = SarathiScheduler::new(128, 8, 128);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.n_prefill_chunks(), 1);
+        assert_eq!(b.prefill_items().next().unwrap().0, 0);
+    }
+
+    #[test]
+    fn final_chunk_is_partial() {
+        let (mut pool, mut kv) = setup(0, 300);
+        let mut s = SarathiScheduler::new(256, 8, 128);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.prefill_tokens(), 256);
+        let (req, _, len) = b.prefill_items().next().unwrap();
+        pool.get_mut(req).prefilled += len;
+        let b2 = s.schedule(&mut pool, &mut kv, 0.1);
+        assert_eq!(b2.prefill_tokens(), 44); // 300 − 256
+    }
+
+    #[test]
+    fn decode_only_when_no_prefills_pending() {
+        let (mut pool, mut kv) = setup(4, 64);
+        // finish the prefill of the last request
+        let id = 4;
+        let slot = kv.alloc().unwrap();
+        pool.admit(id, slot, 0.0);
+        let r = pool.get_mut(id);
+        r.prefilled = 64;
+        r.decoded = 1;
+        let mut s = SarathiScheduler::new(256, 8, 128);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.n_prefill_chunks(), 0);
+        assert_eq!(b.n_decodes(), 5);
+    }
+
+    #[test]
+    fn piggyback_cap_is_b_minus_one() {
+        let (mut pool, mut kv) = setup(10, 1000);
+        let mut s = SarathiScheduler::new(256, 4, 128);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(b.n_decodes(), 3); // B − 1
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn chunk_budget_never_zero() {
+        let s = SarathiScheduler::new(16, 64, 128);
+        assert_eq!(s.chunk_budget(63), 1);
+    }
+
+    #[test]
+    fn tile_alignment_flag() {
+        assert!(SarathiScheduler::new(256, 8, 128).is_tile_aligned());
+        assert!(!SarathiScheduler::new(320, 8, 128).is_tile_aligned());
+    }
+}

@@ -1,0 +1,94 @@
+//! The compute shape of one scheduled iteration, as the cost model sees it.
+
+/// One prefill chunk: C new tokens whose queries attend to `history`
+/// already-cached tokens of the same request (plus the chunk itself,
+/// causally).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefillItem {
+    pub chunk: usize,
+    pub history: usize,
+}
+
+/// One decode lane: a single new token attending to `kv_len` cached tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeItem {
+    pub kv_len: usize,
+}
+
+/// The composition of one iteration's batch. Linear operators run over
+/// `total_tokens()` fused rows; attention is costed per item.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BatchShape {
+    pub prefill: Vec<PrefillItem>,
+    pub decode: Vec<DecodeItem>,
+}
+
+impl BatchShape {
+    /// `(chunk, history)` pairs.
+    pub fn prefill_only(items: &[(usize, usize)]) -> Self {
+        BatchShape {
+            prefill: items.iter().map(|&(c, h)| PrefillItem { chunk: c, history: h }).collect(),
+            decode: vec![],
+        }
+    }
+
+    /// KV lengths of the decode lanes.
+    pub fn decode_only(kv_lens: &[usize]) -> Self {
+        BatchShape {
+            prefill: vec![],
+            decode: kv_lens.iter().map(|&k| DecodeItem { kv_len: k }).collect(),
+        }
+    }
+
+    /// One chunk + decode lanes — the decode-maximal composition.
+    pub fn hybrid(chunk: usize, history: usize, kv_lens: &[usize]) -> Self {
+        BatchShape {
+            prefill: vec![PrefillItem { chunk, history }],
+            decode: kv_lens.iter().map(|&k| DecodeItem { kv_len: k }).collect(),
+        }
+    }
+
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill.iter().map(|p| p.chunk).sum()
+    }
+
+    pub fn decode_tokens(&self) -> usize {
+        self.decode.len()
+    }
+
+    /// Rows of the fused linear-operator matrix.
+    pub fn total_tokens(&self) -> usize {
+        self.prefill_tokens() + self.decode_tokens()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty()
+    }
+
+    /// A decode-maximal batch has exactly one prefill chunk (§4.3).
+    pub fn is_decode_maximal(&self) -> bool {
+        self.prefill.len() == 1 && !self.decode.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_accounting() {
+        let s = BatchShape::hybrid(256, 512, &[100, 200, 300]);
+        assert_eq!(s.prefill_tokens(), 256);
+        assert_eq!(s.decode_tokens(), 3);
+        assert_eq!(s.total_tokens(), 259);
+        assert!(s.is_decode_maximal());
+    }
+
+    #[test]
+    fn constructors() {
+        assert_eq!(BatchShape::prefill_only(&[(128, 0), (64, 128)]).prefill_tokens(), 192);
+        assert_eq!(BatchShape::decode_only(&[1, 2, 3]).decode_tokens(), 3);
+        assert!(BatchShape::default().is_empty());
+        assert!(!BatchShape::prefill_only(&[(8, 0), (8, 0)]).is_decode_maximal());
+    }
+}

@@ -1,0 +1,429 @@
+//! Roofline GPU cost model — the substrate standing in for the paper's
+//! physical A6000/A100 testbeds (DESIGN.md §3).
+//!
+//! Every operator of the Table-1 decoder block is costed as
+//! `max(flops / achieved_flops, bytes / achieved_bw) + launch_overhead`,
+//! with matmul token dimensions rounded up to the hardware tile (the
+//! Fig.-7 tile-quantization effect). The achieved-rate calibration
+//! constants live in `GpuConfig` and are fit to the paper's published
+//! measurements; all *structural* effects the paper builds on —
+//! memory-bound decodes, compute-saturated prefills, quadratic attention,
+//! chunking overhead from KV re-reads — fall out of the arithmetic.
+
+mod batch_shape;
+
+pub use batch_shape::{BatchShape, DecodeItem, PrefillItem};
+
+use crate::config::{Deployment, GpuConfig, ModelConfig};
+
+/// The six operator groups of the paper's §2.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    PreProj,
+    Attn,
+    PostProj,
+    FfnLn1,
+    FfnLn2,
+    Others,
+}
+
+pub const LINEAR_OPS: [Op; 4] = [Op::PreProj, Op::PostProj, Op::FfnLn1, Op::FfnLn2];
+
+/// Per-iteration time split by operator group, in seconds, for the layers
+/// owned by ONE pipeline stage (pp=1 ⇒ the whole model).
+#[derive(Clone, Debug, Default)]
+pub struct OpBreakdown {
+    pub preproj: f64,
+    pub attn_prefill: f64,
+    pub attn_decode: f64,
+    pub postproj: f64,
+    pub ffn_ln1: f64,
+    pub ffn_ln2: f64,
+    pub others: f64,
+    pub comm: f64,
+}
+
+impl OpBreakdown {
+    pub fn linear(&self) -> f64 {
+        self.preproj + self.postproj + self.ffn_ln1 + self.ffn_ln2
+    }
+
+    pub fn attn(&self) -> f64 {
+        self.attn_prefill + self.attn_decode
+    }
+
+    pub fn total(&self) -> f64 {
+        self.linear() + self.attn() + self.others + self.comm
+    }
+
+    pub fn op(&self, op: Op) -> f64 {
+        match op {
+            Op::PreProj => self.preproj,
+            Op::Attn => self.attn(),
+            Op::PostProj => self.postproj,
+            Op::FfnLn1 => self.ffn_ln1,
+            Op::FfnLn2 => self.ffn_ln2,
+            Op::Others => self.others,
+        }
+    }
+}
+
+/// Fraction of block runtime attributed to `others` (layernorms,
+/// activations, residuals) — the paper measures <5% (§3.1).
+const OTHERS_FRACTION: f64 = 0.04;
+
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub model: ModelConfig,
+    pub gpu: GpuConfig,
+    /// Tensor-parallel degree: shards flops/bytes of every op.
+    pub tp: usize,
+    /// Layers executed by one pipeline stage.
+    pub layers_per_stage: usize,
+}
+
+impl CostModel {
+    pub fn new(model: ModelConfig, gpu: GpuConfig) -> Self {
+        let layers = model.n_layers;
+        CostModel { model, gpu, tp: 1, layers_per_stage: layers }
+    }
+
+    pub fn for_deployment(d: &Deployment) -> Self {
+        let layers = d.model.n_layers / d.parallel.pp;
+        CostModel { model: d.model.clone(), gpu: d.gpu.clone(), tp: d.parallel.tp, layers_per_stage: layers }
+    }
+
+    fn bytes_per_el(&self) -> f64 {
+        self.model.bytes_per_param as f64
+    }
+
+    /// Round the matmul token dimension up to the hardware tile — thread
+    /// blocks past the boundary do wasted work (§4.4, Fig. 7).
+    pub fn tile_round_up(&self, tokens: usize) -> usize {
+        let t = self.gpu.tile;
+        tokens.div_ceil(t) * t
+    }
+
+    /// Fig.-4a saturation point: the token count at which linear matmuls
+    /// reach full utilization, scaled from the per-GPU reference (hidden
+    /// 5120) — wider layers saturate at fewer tokens (§4.2: GPT-3 peaks at
+    /// chunk 256 on A100 while LLaMA-13B needs 512 on A6000).
+    pub fn sat_tokens(&self) -> f64 {
+        let h = self.model.hidden as f64;
+        (self.gpu.sat_tokens_ref * (5120.0 / h).powi(2)).max(1.0)
+    }
+
+    /// Matmul utilization ramp below the saturation point (latency-bound
+    /// small GEMMs). util ∈ (alpha, 1].
+    fn mm_util(&self, tokens_padded: f64) -> f64 {
+        let a = self.gpu.sat_ramp_alpha;
+        (a + (1.0 - a) * tokens_padded / self.sat_tokens()).min(1.0)
+    }
+
+    /// One linear operator [k,n] applied to `tokens` rows, per layer.
+    fn linear_op_time(&self, tokens: usize, k: usize, n: usize) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let m = self.tile_round_up(tokens) as f64;
+        let (k, n) = (k as f64, n as f64 / self.tp as f64);
+        let b = self.bytes_per_el();
+        let flops = 2.0 * m * k * n;
+        let bytes = (k * n + m * (k + n)) * b; // weights + activations
+        let t_compute = flops / (self.gpu.matmul_flops() * self.mm_util(m));
+        let t_memory = bytes / self.gpu.weight_bw();
+        t_compute.max(t_memory) + self.gpu.kernel_overhead_s
+    }
+
+    /// Per-layer time of each linear op over a fused batch of `tokens` rows.
+    pub fn linear_layer_times(&self, tokens: usize) -> (f64, f64, f64, f64) {
+        let h = self.model.hidden;
+        let h2 = self.model.ffn_hidden;
+        (
+            self.linear_op_time(tokens, h, 3 * h), // preproj [H,3H]
+            self.linear_op_time(tokens, h, h),     // postproj [H,H]
+            self.linear_op_time(tokens, h, h2),    // ffn_ln1 [H,H2]
+            self.linear_op_time(tokens, h2, h),    // ffn_ln2 [H2,H]
+        )
+    }
+
+    /// Attention-kernel utilization ramp over the query count (few-query
+    /// chunks underutilize SMs — the second component of the §4.2 chunking
+    /// overhead, Fig. 13a).
+    fn attn_util(&self, queries: f64) -> f64 {
+        let a = self.gpu.attn_ramp_alpha;
+        (a + (1.0 - a) * queries / self.gpu.attn_sat_tokens).min(1.0)
+    }
+
+    /// Attention time for one prefill chunk (per layer): the chunk's C
+    /// queries attend to `history + C` keys — every chunk after the first
+    /// re-reads the whole KV prefix (the §4.2 chunking overhead).
+    pub fn attn_prefill_time(&self, chunk: usize, history: usize) -> f64 {
+        if chunk == 0 {
+            return 0.0;
+        }
+        let h = self.model.hidden as f64 / self.tp as f64;
+        let c = chunk as f64;
+        let hist = history as f64;
+        let b = self.bytes_per_el();
+        // QK^T + PV: 2 matmuls, each 2·H·(sum over queries of visible keys)
+        let visible = c * hist + c * (c + 1.0) / 2.0;
+        let flops = 4.0 * h * visible;
+        // KV prefix re-read + chunk q/k/v/out activations
+        let bytes = (hist + c) * 2.0 * h * b + 4.0 * c * h * b;
+        let t_compute = flops / (self.gpu.attn_flops() * self.attn_util(c));
+        let t = t_compute.max(bytes / self.gpu.attn_bw());
+        t + self.gpu.kernel_overhead_s
+    }
+
+    /// Attention time for a batch of decode lanes (per layer). Memory-bound:
+    /// each lane streams its whole KV row.
+    pub fn attn_decode_time(&self, kv_lens: &[usize]) -> f64 {
+        if kv_lens.is_empty() {
+            return 0.0;
+        }
+        let h = self.model.hidden as f64 / self.tp as f64;
+        let b = self.bytes_per_el();
+        let total_kv: f64 = kv_lens.iter().map(|&k| (k + 1) as f64).sum();
+        let flops = 4.0 * h * total_kv;
+        let bytes = total_kv * 2.0 * h * b;
+        let t = (flops / self.gpu.attn_flops()).max(bytes / self.gpu.attn_bw());
+        t + self.gpu.kernel_overhead_s
+    }
+
+    /// TP all-reduce time per layer (two per layer — §2.3), for `tokens`
+    /// rows of activations.
+    fn comm_time(&self, tokens: usize) -> f64 {
+        if self.tp == 1 || tokens == 0 {
+            return 0.0;
+        }
+        let bytes = 2.0 * tokens as f64 * self.model.hidden as f64 * self.bytes_per_el();
+        // ring all-reduce moves 2·(tp-1)/tp of the buffer per GPU
+        let factor = 2.0 * (self.tp as f64 - 1.0) / self.tp as f64;
+        bytes * factor / (self.gpu.allreduce_bw_gbps * 1e9)
+    }
+
+    /// Full iteration breakdown for one batch on one pipeline stage.
+    ///
+    /// Linear ops run over the *fused* token count (prefill chunks +
+    /// decode lanes together — decode-maximal fusion); attention runs
+    /// separately per phase, as the paper prescribes (§4.3.1).
+    pub fn iteration(&self, shape: &BatchShape) -> OpBreakdown {
+        let tokens = shape.total_tokens();
+        let layers = self.layers_per_stage as f64;
+        let (pre, post, f1, f2) = self.linear_layer_times(tokens);
+        let attn_p: f64 = shape
+            .prefill
+            .iter()
+            .map(|p| self.attn_prefill_time(p.chunk, p.history))
+            .sum();
+        let kv_lens: Vec<usize> = shape.decode.iter().map(|d| d.kv_len).collect();
+        let attn_d = self.attn_decode_time(&kv_lens);
+        let mut bd = OpBreakdown {
+            preproj: pre * layers,
+            attn_prefill: attn_p * layers,
+            attn_decode: attn_d * layers,
+            postproj: post * layers,
+            ffn_ln1: f1 * layers,
+            ffn_ln2: f2 * layers,
+            others: 0.0,
+            comm: self.comm_time(tokens) * layers,
+        };
+        bd.others = (bd.linear() + bd.attn()) * OTHERS_FRACTION;
+        bd
+    }
+
+    /// Total iteration time, seconds.
+    pub fn iteration_time(&self, shape: &BatchShape) -> f64 {
+        self.iteration(shape).total()
+    }
+
+    /// Time for the un-fused baseline to run the same work as a hybrid
+    /// batch: prefill-only batch then decode-only batch (two iterations).
+    pub fn split_time(&self, shape: &BatchShape) -> f64 {
+        let p = BatchShape { prefill: shape.prefill.clone(), decode: vec![] };
+        let d = BatchShape { prefill: vec![], decode: shape.decode.clone() };
+        let mut t = 0.0;
+        if !shape.prefill.is_empty() {
+            t += self.iteration_time(&p);
+        }
+        if !shape.decode.is_empty() {
+            t += self.iteration_time(&d);
+        }
+        t
+    }
+
+    /// Arithmetic intensity (FLOPs per byte of memory traffic) of one
+    /// operator for a batch processing `tokens` rows against `kv_len`
+    /// context (Fig. 4b). For linear ops the phase only enters through the
+    /// token count; for attention the phase changes the query count.
+    pub fn arithmetic_intensity(&self, op: Op, tokens: usize, kv_len: usize) -> f64 {
+        let h = self.model.hidden as f64;
+        let h2 = self.model.ffn_hidden as f64;
+        let b = self.bytes_per_el();
+        let t = tokens as f64;
+        let lin = |k: f64, n: f64| (2.0 * t * k * n) / ((k * n + t * (k + n)) * b);
+        match op {
+            Op::PreProj => lin(h, 3.0 * h),
+            Op::PostProj => lin(h, h),
+            Op::FfnLn1 => lin(h, h2),
+            Op::FfnLn2 => lin(h2, h),
+            Op::Attn => {
+                // queries = tokens, visible keys ≈ kv_len + tokens
+                let vis = t * (kv_len as f64 + (t + 1.0) / 2.0);
+                let flops = 4.0 * h * vis;
+                let bytes = ((kv_len as f64 + t) * 2.0 * h + 4.0 * t * h) * b;
+                flops / bytes
+            }
+            Op::Others => 1.0, // elementwise: O(1) flops per byte
+        }
+    }
+
+    /// Saturation point: smallest tile-aligned token count at which the
+    /// linear GEMMs run at full utilization (§4.2's "chunk size that
+    /// saturates the GPU").
+    pub fn saturation_tokens(&self) -> usize {
+        let t = self.sat_tokens().ceil() as usize;
+        t.div_ceil(self.gpu.tile) * self.gpu.tile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, ModelConfig};
+
+    fn cm() -> CostModel {
+        CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000())
+    }
+
+    /// Fig. 3: decode per-token cost at B=1 is ~200× prefill per-token.
+    #[test]
+    fn decode_to_prefill_ratio_at_b1() {
+        let m = cm();
+        let prefill = BatchShape::prefill_only(&[(1024, 0)]);
+        let t_prefill_per_tok = m.iteration_time(&prefill) / 1024.0;
+        let decode = BatchShape::decode_only(&[1024]);
+        let t_decode_per_tok = m.iteration_time(&decode);
+        let ratio = t_decode_per_tok / t_prefill_per_tok;
+        assert!((120.0..280.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    /// Fig. 3: at B=2 the ratio halves (~100×) — weight stream is shared.
+    #[test]
+    fn decode_cost_halves_at_b2() {
+        let m = cm();
+        let d1 = m.iteration_time(&BatchShape::decode_only(&[1024]));
+        let d2 = m.iteration_time(&BatchShape::decode_only(&[1024, 1024])) / 2.0;
+        let ratio = d1 / d2;
+        assert!((1.7..2.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    /// Prefill saturates at ~512 tokens for LLaMA-13B on A6000 (§3.1);
+    /// A100 needs more tokens (§5.1.2); wider models saturate earlier
+    /// (GPT-3 at ~256 on A100, §4.2).
+    #[test]
+    fn saturation_points() {
+        let a6000 = cm().saturation_tokens();
+        assert_eq!(a6000, 512, "a6000 sat={a6000}");
+        let a100 = CostModel::new(ModelConfig::llama13b(), GpuConfig::a100()).saturation_tokens();
+        assert!(a100 > a6000, "a100={a100} a6000={a6000}");
+        let gpt3 = CostModel::new(ModelConfig::gpt3(), GpuConfig::a100()).saturation_tokens();
+        assert!((128..=384).contains(&gpt3), "gpt3-on-a100 sat={gpt3}");
+    }
+
+    /// Fig. 4a: prefill per-token time is near-constant once saturated, and
+    /// a 256-token chunk loses only ~12.5% peak throughput (§4.2).
+    #[test]
+    fn chunk_256_loses_modest_prefill_efficiency() {
+        let m = cm();
+        let per_tok = |c: usize| m.iteration_time(&BatchShape::prefill_only(&[(c, 0)])) / c as f64;
+        let loss = per_tok(256) / per_tok(2048);
+        assert!((1.03..1.45).contains(&loss), "loss={loss}");
+        // chunk 64 is far worse (Fig. 13b shows ~5× overall prefill cost)
+        assert!(per_tok(64) / per_tok(2048) > 2.0);
+    }
+
+    /// Table 2 structure: piggybacked decodes cost ~an order of magnitude
+    /// less than decode-only ones.
+    #[test]
+    fn decode_maximal_marginal_cost() {
+        let m = cm();
+        // hybrid: one 1021-token chunk + 3 decodes at kv=1024
+        let hybrid = BatchShape {
+            prefill: vec![PrefillItem { chunk: 1021, history: 0 }],
+            decode: vec![DecodeItem { kv_len: 1024 }; 3],
+        };
+        let prefill_only = BatchShape::prefill_only(&[(1021, 0)]);
+        let marginal = (m.iteration_time(&hybrid) - m.iteration_time(&prefill_only)) / 3.0;
+        let decode_only = m.iteration_time(&BatchShape::decode_only(&[1024; 4])) / 4.0;
+        let speedup = decode_only / marginal;
+        assert!(speedup > 5.0, "speedup={speedup}");
+    }
+
+    /// Fig. 7: crossing a tile boundary by one token bumps iteration time.
+    #[test]
+    fn tile_quantization_jump() {
+        let m = cm();
+        let t256 = m.iteration_time(&BatchShape::prefill_only(&[(256, 0)]));
+        let t257 = m.iteration_time(&BatchShape::prefill_only(&[(257, 0)]));
+        let t384 = m.iteration_time(&BatchShape::prefill_only(&[(384, 0)]));
+        assert!(t257 > t256 * 1.05, "jump too small: {t256} -> {t257}");
+        // within the same tile bucket the cost is flat
+        assert!((t257 - t384).abs() / t384 < 0.02);
+    }
+
+    /// §4.2: chunking a prefill re-reads the KV prefix — N chunks cost more
+    /// attention time than one full prefill, and smaller chunks cost more.
+    #[test]
+    fn chunked_prefill_attention_overhead() {
+        let m = cm();
+        let full: f64 = m.attn_prefill_time(1024, 0);
+        let chunks_256: f64 = (0..4).map(|i| m.attn_prefill_time(256, i * 256)).sum();
+        let chunks_64: f64 = (0..16).map(|i| m.attn_prefill_time(64, i * 64)).sum();
+        assert!(chunks_256 > full);
+        assert!(chunks_64 > chunks_256);
+        // Fig. 13a: overhead at chunk 64 is large (~3× in the paper)
+        assert!(chunks_64 / full > 1.5, "ratio={}", chunks_64 / full);
+    }
+
+    /// Attention is a small fraction of a prefill-heavy iteration (Table 2).
+    #[test]
+    fn attention_is_small_fraction_of_prefill() {
+        let m = cm();
+        let bd = m.iteration(&BatchShape::prefill_only(&[(1024, 0); 4]));
+        assert!(bd.attn() / bd.total() < 0.25, "attn frac {}", bd.attn() / bd.total());
+    }
+
+    /// TP reduces per-GPU time but adds communication.
+    #[test]
+    fn tp_scaling() {
+        let mut m8 = CostModel::new(ModelConfig::gpt3(), GpuConfig::a100());
+        m8.tp = 8;
+        let m1 = CostModel::new(ModelConfig::gpt3(), GpuConfig::a100());
+        let shape = BatchShape::prefill_only(&[(512, 0)]);
+        let t8 = m8.iteration_time(&shape);
+        let t1 = m1.iteration_time(&shape);
+        assert!(t8 < t1, "tp8 {t8} < tp1 {t1}");
+        assert!(m8.iteration(&shape).comm > 0.0);
+    }
+
+    /// Fused hybrid beats running the same work split in two (the paper's
+    /// core claim, Table 2 / Fig. 8).
+    #[test]
+    fn fusion_beats_split() {
+        let m = cm();
+        let hybrid = BatchShape {
+            prefill: vec![PrefillItem { chunk: 256, history: 0 }],
+            decode: vec![DecodeItem { kv_len: 1024 }; 17],
+        };
+        assert!(m.iteration_time(&hybrid) < m.split_time(&hybrid));
+    }
+
+    #[test]
+    fn empty_batch_costs_nothing_but_overhead() {
+        let m = cm();
+        let t = m.iteration_time(&BatchShape::default());
+        assert!(t < 1e-3, "{t}");
+    }
+}

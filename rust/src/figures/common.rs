@@ -1,0 +1,41 @@
+//! Shared experiment plumbing: deployments, engine runs, derived metrics.
+
+use crate::config::{Deployment, GpuConfig, ModelConfig, SchedulerConfig};
+use crate::coordinator::{make_scheduler, Engine, KvManager, Metrics, RequestPool, SimExecutor};
+use crate::costmodel::CostModel;
+use crate::workload::{uniform_population, RequestSpec};
+
+/// LLaMA-13B on A6000 — the paper's primary single-GPU testbed.
+pub fn llama13b_a6000(max_seq: usize) -> Deployment {
+    Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), max_seq)
+}
+
+/// LLaMA-33B on A100 — the second single-GPU testbed.
+pub fn llama33b_a100(max_seq: usize) -> Deployment {
+    Deployment::new(ModelConfig::llama33b(), GpuConfig::a100(), max_seq)
+}
+
+/// Run one scheduler over a population on the simulated deployment;
+/// returns the metrics.
+pub fn run_engine(d: &Deployment, sched: &SchedulerConfig, pop: &[RequestSpec]) -> Metrics {
+    let cm = CostModel::for_deployment(d);
+    let mut engine = Engine::new(
+        RequestPool::from_specs(pop),
+        KvManager::new(sched.max_batch),
+        make_scheduler(sched),
+        Box::new(SimExecutor::new(cm)),
+    );
+    engine.run();
+    engine.metrics
+}
+
+/// Steady-state population (§5.1 style): `waves` × max-batch identical
+/// requests at `seq_len`/`pd`, enough to amortize warmup/tail.
+pub fn steady_population(b: usize, seq_len: usize, pd: f64, waves: usize) -> Vec<RequestSpec> {
+    uniform_population(b * waves, seq_len, pd)
+}
+
+/// Normalized throughput in tokens/ms (the paper's Fig. 9/11 unit).
+pub fn tokens_per_ms(m: &Metrics) -> f64 {
+    m.throughput() / 1e3
+}

@@ -1,0 +1,98 @@
+//! Fig. 10 — total time split by operator, baseline vs SARATHI, across
+//! batch sizes for chunk 256/512 at the balanced P:D (LLaMA-13B/A6000).
+//!
+//! Shapes to reproduce: the fused linear operators shrink (ffn most, up to
+//! ~1.6×); attention time *rises* slightly under SARATHI (chunked KV
+//! re-reads); the net is the end-to-end gain.
+
+use crate::config::SchedulerConfig;
+use crate::costmodel::OpBreakdown;
+use crate::figures::common::{llama13b_a6000, run_engine, steady_population};
+use crate::report::{ms, Table};
+
+fn fmt_row(scheme: &str, l: usize, c: usize, b: usize, bd: &OpBreakdown) -> Vec<String> {
+    vec![
+        scheme.into(),
+        l.to_string(),
+        c.to_string(),
+        b.to_string(),
+        ms(bd.preproj),
+        ms(bd.attn()),
+        ms(bd.postproj),
+        ms(bd.ffn_ln1 + bd.ffn_ln2),
+        ms(bd.total()),
+    ]
+}
+
+pub fn run() -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig10 op-time breakdown, baseline vs SARATHI (balanced P:D)",
+        &["scheme", "seq_len", "chunk", "batch", "preproj", "attn", "postproj", "ffn", "total"],
+    );
+    for chunk in [256usize, 512] {
+        for (l, b_max) in [(1024usize, 18usize), (2048, 9), (3072, 6)] {
+            for b in [6usize, 12, 18] {
+                if b > b_max {
+                    continue;
+                }
+                let d = llama13b_a6000(l);
+                let pd = chunk as f64 / (b as f64 - 1.0); // balanced (§5.1.4)
+                let pop = steady_population(b, l, pd, 3);
+                let base = run_engine(&d, &SchedulerConfig::baseline(b), &pop);
+                let sar = run_engine(&d, &SchedulerConfig::sarathi(chunk, b), &pop);
+                t.row(fmt_row("baseline", l, chunk, b, &base.op_totals()));
+                t.row(fmt_row("sarathi", l, chunk, b, &sar.op_totals()));
+            }
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Pair {
+        base: Vec<f64>,
+        sar: Vec<f64>,
+    }
+
+    fn pairs() -> Vec<Pair> {
+        let t = &run()[0];
+        t.rows
+            .chunks(2)
+            .map(|w| Pair {
+                base: w[0][4..].iter().map(|c| c.parse().unwrap()).collect(),
+                sar: w[1][4..].iter().map(|c| c.parse().unwrap()).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn linear_ops_shrink_under_sarathi() {
+        // ffn (index 3) and total (index 4) improve in most configurations
+        let mut ffn_wins = 0;
+        let all = pairs();
+        for p in &all {
+            if p.sar[3] < p.base[3] {
+                ffn_wins += 1;
+            }
+        }
+        assert!(ffn_wins * 3 >= all.len() * 2, "ffn shrank in only {ffn_wins}/{}", all.len());
+    }
+
+    #[test]
+    fn attention_rises_under_sarathi() {
+        // chunked prefills re-read the KV prefix → attention time up
+        let all = pairs();
+        let rises = all.iter().filter(|p| p.sar[1] > p.base[1]).count();
+        assert!(rises * 3 >= all.len() * 2, "attn rose in only {rises}/{}", all.len());
+    }
+
+    #[test]
+    fn totals_improve_at_balanced_pd() {
+        let all = pairs();
+        let wins = all.iter().filter(|p| p.sar[4] < p.base[4]).count();
+        assert!(wins * 3 >= all.len() * 2, "total improved in only {wins}/{}", all.len());
+    }
+}

@@ -1,0 +1,125 @@
+//! Fig. 13 — ablation of chunked-prefills (LLaMA-13B/A6000):
+//! (a) attention-time overhead of chunking vs chunk size,
+//! (b) total prefill-time overhead vs chunk size,
+//! (c) end-to-end throughput vs chunk size when combined with
+//!     decode-maximal batching.
+//!
+//! Shapes: chunk 64 ≈ 3× attention / ~5× prefill overhead; 256/512 keep
+//! prefill loss within ~20%/10%; e2e throughput peaks at 256 (tile
+//! multiples beat non-multiples like 320).
+
+use crate::config::SchedulerConfig;
+use crate::costmodel::{BatchShape, CostModel};
+use crate::figures::common::{llama13b_a6000, run_engine, steady_population, tokens_per_ms};
+use crate::report::{f3, Table};
+
+/// Total attention time of prefilling `l` tokens in chunks of `c`
+/// (per-layer units cancel in the ratios).
+fn chunked_attn_time(cm: &CostModel, l: usize, c: usize) -> f64 {
+    let mut t = 0.0;
+    let mut start = 0;
+    while start < l {
+        let len = c.min(l - start);
+        t += cm.attn_prefill_time(len, start);
+        start += len;
+    }
+    t
+}
+
+fn chunked_prefill_time(cm: &CostModel, l: usize, c: usize) -> f64 {
+    let mut t = 0.0;
+    let mut start = 0;
+    while start < l {
+        let len = c.min(l - start);
+        t += cm.iteration_time(&BatchShape::prefill_only(&[(len, start)]));
+        start += len;
+    }
+    t
+}
+
+pub fn run() -> Vec<Table> {
+    let cm = CostModel::for_deployment(&llama13b_a6000(3072));
+    let chunks = [64usize, 128, 256, 320, 512];
+
+    let mut ta = Table::new(
+        "Fig13a chunked-prefill attention overhead (ratio vs full prefill)",
+        &["chunk", "L=1024", "L=2048", "L=3072"],
+    );
+    let mut tb = Table::new(
+        "Fig13b chunked-prefill total overhead (ratio vs full prefill)",
+        &["chunk", "L=1024", "L=2048", "L=3072"],
+    );
+    for &c in &chunks {
+        let mut ra = vec![c.to_string()];
+        let mut rb = vec![c.to_string()];
+        for l in [1024usize, 2048, 3072] {
+            ra.push(f3(chunked_attn_time(&cm, l, c) / cm.attn_prefill_time(l, 0)));
+            rb.push(f3(
+                chunked_prefill_time(&cm, l, c)
+                    / cm.iteration_time(&BatchShape::prefill_only(&[(l, 0)])),
+            ));
+        }
+        ta.row(ra);
+        tb.row(rb);
+    }
+
+    // (c) end-to-end throughput vs chunk size with decode-maximal batching
+    let (l, b) = (1024usize, 18usize);
+    let d = llama13b_a6000(l);
+    let mut tc = Table::new(
+        "Fig13c end-to-end throughput vs chunk size (L=1K, B=18, tokens/ms)",
+        &["chunk", "throughput", "vs_baseline"],
+    );
+    let pd = 256.0 / (b as f64 - 1.0);
+    let pop = steady_population(b, l, pd, 4);
+    let base = tokens_per_ms(&run_engine(&d, &SchedulerConfig::baseline(b), &pop));
+    tc.row(vec!["baseline".into(), f3(base), "1.00x".into()]);
+    for &c in &chunks {
+        let thpt = tokens_per_ms(&run_engine(&d, &SchedulerConfig::sarathi(c, b), &pop));
+        tc.row(vec![c.to_string(), f3(thpt), format!("{:.2}x", thpt / base)]);
+    }
+    vec![ta, tb, tc]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_chunks_cost_more_attention() {
+        let t = &run()[0];
+        let at = |chunk: &str| -> f64 {
+            t.rows.iter().find(|r| r[0] == chunk).unwrap()[3].parse().unwrap()
+        };
+        // paper: chunk 64 ≈ 3× attention overhead; monotone in 1/chunk
+        assert!(at("64") > 2.0, "{}", at("64"));
+        assert!(at("64") > at("128") && at("128") > at("256") && at("256") > at("512"));
+        // chunking never reduces attention time
+        assert!(at("512") >= 1.0);
+    }
+
+    #[test]
+    fn prefill_overhead_bounds_match_paper() {
+        let t = &run()[1];
+        let at = |chunk: &str| -> f64 {
+            t.rows.iter().find(|r| r[0] == chunk).unwrap()[1].parse().unwrap()
+        };
+        // paper: 256 within ~20%, 512 within ~10%, 64 up to ~5×
+        assert!(at("256") < 1.35, "{}", at("256"));
+        assert!(at("512") < 1.20, "{}", at("512"));
+        assert!(at("64") > 1.8, "{}", at("64"));
+    }
+
+    #[test]
+    fn tile_multiple_beats_non_multiple() {
+        // Fig. 13c: chunk 256 (tile multiple) outperforms 320
+        let t = &run()[2];
+        let get = |chunk: &str| -> f64 {
+            t.rows.iter().find(|r| r[0] == chunk).unwrap()[1].parse().unwrap()
+        };
+        assert!(get("256") >= get("320"), "{} vs {}", get("256"), get("320"));
+        // and the best chunk beats the baseline end to end
+        let base = get("baseline");
+        assert!(get("256") > base, "{} !> {}", get("256"), base);
+    }
+}

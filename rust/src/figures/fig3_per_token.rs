@@ -1,0 +1,98 @@
+//! Fig. 3 — per-token prefill vs decode time across batch sizes, split by
+//! operator (LLaMA-13B on A6000, sequence length 1024).
+//!
+//! Paper's observations to reproduce: prefill per-token cost is ~flat in
+//! batch size; decode per-token cost is ~200×/100×/16.7× prefill at
+//! B = 1/2/18; linear decode ops amortize with batch while decode
+//! attention does not (memory-bound).
+
+use crate::costmodel::{BatchShape, CostModel};
+use crate::figures::common::llama13b_a6000;
+use crate::report::{f3, Table};
+
+pub fn run() -> Vec<Table> {
+    let d = llama13b_a6000(1024);
+    let cm = CostModel::for_deployment(&d);
+    let l = 1024usize;
+
+    let mut t = Table::new(
+        "Fig3 per-token time (ms), LLaMA-13B/A6000, L=1024",
+        &["batch", "phase", "preproj", "attn", "postproj", "ffn", "others", "total/tok", "decode:prefill"],
+    );
+
+    for b in [1usize, 2, 4, 8, 12, 18] {
+        let prefill = BatchShape::prefill_only(&vec![(l, 0); b]);
+        let bd_p = cm.iteration(&prefill);
+        let tokens_p = (b * l) as f64;
+        let per_tok_p = bd_p.total() / tokens_p;
+
+        let decode = BatchShape::decode_only(&vec![l; b]);
+        let bd_d = cm.iteration(&decode);
+        let per_tok_d = bd_d.total() / b as f64;
+
+        t.row(vec![
+            b.to_string(),
+            "prefill".into(),
+            f3(bd_p.preproj / tokens_p * 1e3),
+            f3(bd_p.attn() / tokens_p * 1e3),
+            f3(bd_p.postproj / tokens_p * 1e3),
+            f3((bd_p.ffn_ln1 + bd_p.ffn_ln2) / tokens_p * 1e3),
+            f3(bd_p.others / tokens_p * 1e3),
+            f3(per_tok_p * 1e3),
+            "-".into(),
+        ]);
+        t.row(vec![
+            b.to_string(),
+            "decode".into(),
+            f3(bd_d.preproj / b as f64 * 1e3),
+            f3(bd_d.attn() / b as f64 * 1e3),
+            f3(bd_d.postproj / b as f64 * 1e3),
+            f3((bd_d.ffn_ln1 + bd_d.ffn_ln2) / b as f64 * 1e3),
+            f3(bd_d.others / b as f64 * 1e3),
+            f3(per_tok_d * 1e3),
+            format!("{:.1}x", per_tok_d / per_tok_p),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_ratios() {
+        let t = &run()[0];
+        // decode rows carry the ratio in the last column
+        let ratio = |b: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == b && r[1] == "decode")
+                .unwrap()
+                .last()
+                .unwrap()
+                .trim_end_matches('x')
+                .parse()
+                .unwrap()
+        };
+        // paper: 200×, 100×, 16.7× at B = 1, 2, 18
+        assert!((120.0..280.0).contains(&ratio("1")), "{}", ratio("1"));
+        assert!((60.0..140.0).contains(&ratio("2")), "{}", ratio("2"));
+        assert!((10.0..30.0).contains(&ratio("18")), "{}", ratio("18"));
+        // ratio falls monotonically with batch size
+        assert!(ratio("1") > ratio("2") && ratio("2") > ratio("18"));
+    }
+
+    #[test]
+    fn prefill_per_token_flat_in_batch() {
+        let t = &run()[0];
+        let totals: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[1] == "prefill")
+            .map(|r| r[7].parse().unwrap())
+            .collect();
+        let (min, max) = totals.iter().fold((f64::MAX, 0.0f64), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+        assert!(max / min < 1.15, "prefill per-token varies: {min}..{max}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 4 — (a) prefill/decode throughput vs token count / batch size;
+//! (b) per-operator arithmetic intensity in the two phases.
+//!
+//! Shapes to reproduce: prefill throughput saturates near B×L ≈ 512 on
+//! A6000 (~180 tokens/ms for one layer); decode throughput grows ~linearly
+//! in batch and only approaches compute-bound at ~256 lanes; decode
+//! arithmetic intensity is orders of magnitude below prefill's.
+
+use crate::costmodel::{BatchShape, CostModel, Op};
+use crate::figures::common::llama13b_a6000;
+use crate::report::{f3, Table};
+
+pub fn run() -> Vec<Table> {
+    let d = llama13b_a6000(4096);
+    let cm = CostModel::for_deployment(&d);
+    let layers = cm.model.n_layers as f64;
+
+    // (a) prefill throughput vs total tokens (single layer, like the paper)
+    let mut ta = Table::new(
+        "Fig4a prefill/decode throughput (single LLaMA-13B layer, A6000)",
+        &["phase", "tokens_or_batch", "tokens/ms/layer"],
+    );
+    for tokens in [64usize, 128, 256, 512, 1024, 2048, 4096] {
+        // B×L composition like the paper: sequences cap at 1024 so the
+        // token axis scales batch, not quadratic attention
+        let seq = tokens.min(1024);
+        let reqs = vec![(seq, 0); tokens / seq];
+        let t_model = cm.iteration_time(&BatchShape::prefill_only(&reqs));
+        let per_layer = t_model / layers;
+        ta.row(vec![
+            "prefill".into(),
+            tokens.to_string(),
+            f3(tokens as f64 / (per_layer * 1e3)),
+        ]);
+    }
+    for b in [1usize, 4, 16, 64, 128, 256] {
+        // single-layer profile (the paper fits 40× larger decode batches by
+        // profiling one layer — §3.1)
+        let t_model = cm.iteration_time(&BatchShape::decode_only(&vec![1024; b]));
+        let per_layer = t_model / layers;
+        ta.row(vec!["decode".into(), b.to_string(), f3(b as f64 / (per_layer * 1e3))]);
+    }
+
+    // (b) arithmetic intensity per op, prefill (1024 tokens) vs decode (1)
+    let mut tb = Table::new(
+        "Fig4b arithmetic intensity (FLOPs/byte), 1K sequence",
+        &["op", "prefill", "decode"],
+    );
+    for (name, op) in [
+        ("preproj", Op::PreProj),
+        ("attn", Op::Attn),
+        ("postproj", Op::PostProj),
+        ("ffn_ln1", Op::FfnLn1),
+        ("ffn_ln2", Op::FfnLn2),
+    ] {
+        tb.row(vec![
+            name.into(),
+            f3(cm.arithmetic_intensity(op, 1024, 0)),
+            f3(cm.arithmetic_intensity(op, 1, 1024)),
+        ]);
+    }
+    vec![ta, tb]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(t: &Table, phase: &str) -> Vec<(usize, f64)> {
+        t.rows
+            .iter()
+            .filter(|r| r[0] == phase)
+            .map(|r| (r[1].parse().unwrap(), r[2].parse().unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn prefill_throughput_saturates() {
+        let tables = run();
+        let pre = col(&tables[0], "prefill");
+        let at = |n: usize| pre.iter().find(|&&(t, _)| t == n).unwrap().1;
+        // saturated regime ~flat: 1024 vs 4096 within 10%
+        assert!((at(1024) - at(4096)).abs() / at(4096) < 0.10);
+        // sub-saturated regime clearly lower
+        assert!(at(128) < 0.75 * at(1024), "{} vs {}", at(128), at(1024));
+        // ~180 tokens/ms/layer at saturation (paper §3.1) — allow ±35%
+        assert!((120.0..250.0).contains(&at(1024)), "{}", at(1024));
+    }
+
+    #[test]
+    fn decode_throughput_grows_with_batch() {
+        let tables = run();
+        let dec = col(&tables[0], "decode");
+        assert!(dec.windows(2).all(|w| w[1].1 > w[0].1), "{dec:?}");
+        // decode at B=1 is far below prefill saturation
+        let pre1024 = col(&tables[0], "prefill").iter().find(|&&(t, _)| t == 1024).unwrap().1;
+        assert!(dec[0].1 < pre1024 / 50.0);
+    }
+
+    #[test]
+    fn decode_ai_orders_of_magnitude_below_prefill() {
+        let tables = run();
+        for r in &tables[1].rows {
+            let p: f64 = r[1].parse().unwrap();
+            let d: f64 = r[2].parse().unwrap();
+            assert!(p > 50.0 * d, "{}: prefill {p} vs decode {d}", r[0]);
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Fig. 7 — the tile-quantization effect: one token past a multiple of the
+//! 128-wide tile bumps the whole iteration's cost (the paper measures
+//! 256→257 tokens: 69.8 → 92.33 ms, a 32% jump from a single token).
+
+use crate::costmodel::{BatchShape, CostModel};
+use crate::figures::common::llama13b_a6000;
+use crate::report::{ms, Table};
+
+pub fn run() -> Vec<Table> {
+    let cm = CostModel::for_deployment(&llama13b_a6000(1024));
+    let mut t = Table::new(
+        "Fig7 tile quantization of iteration time, LLaMA-13B/A6000",
+        &["seq_len", "iter_ms", "delta_vs_prev"],
+    );
+    let mut prev: Option<f64> = None;
+    for l in [128usize, 129, 192, 256, 257, 320, 384, 385, 448, 512] {
+        let time = cm.iteration_time(&BatchShape::prefill_only(&[(l, 0)]));
+        let delta = prev.map(|p| format!("{:+.1}%", (time / p - 1.0) * 100.0)).unwrap_or("-".into());
+        t.row(vec![l.to_string(), ms(time), delta]);
+        prev = Some(time);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::BatchShape;
+
+    #[test]
+    fn one_token_past_tile_boundary_jumps() {
+        let cm = CostModel::for_deployment(&llama13b_a6000(1024));
+        let t = |l: usize| cm.iteration_time(&BatchShape::prefill_only(&[(l, 0)]));
+        // crossing 256 -> 257 costs a visible jump (paper: +32%)
+        assert!(t(257) / t(256) > 1.10, "jump {:.3}", t(257) / t(256));
+        // within a bucket the cost is ~flat
+        assert!((t(257) - t(384)).abs() / t(384) < 0.03);
+        // doubling 128 -> 256 costs much less than 2× (paper: +27%)
+        let dbl = t(256) / t(128);
+        assert!((1.05..1.8).contains(&dbl), "128->256 ratio {dbl}");
+    }
+
+    #[test]
+    fn table_has_all_probe_points() {
+        let t = &run()[0];
+        assert_eq!(t.rows.len(), 10);
+        assert!(t.rows.iter().any(|r| r[0] == "257"));
+    }
+}

@@ -1,0 +1,79 @@
+//! Fig. 8 — decode-only speedup of SARATHI over the baseline vs batch
+//! size, for sequence lengths 1K/2K/3K (LLaMA-13B on A6000, chunk 256).
+//!
+//! Methodology follows §5.1.1 exactly: baseline decode time per token =
+//! decode-only iteration / B; SARATHI's = (hybrid − prefill-alone) / d with
+//! d = B−1 piggybacked lanes. Speedups fall with batch size and sequence
+//! length but stay in the 2.8–10× band.
+
+use crate::config::Deployment;
+use crate::costmodel::{BatchShape, CostModel};
+use crate::figures::common::llama13b_a6000;
+use crate::report::{x, Table};
+
+pub fn decode_speedup(d: &Deployment, chunk: usize, b: usize, kv: usize) -> f64 {
+    let cm = CostModel::for_deployment(d);
+    let lanes = b - 1;
+    // §4.4 tile alignment: chunk shrinks so chunk + lanes == C
+    let c_eff = chunk - lanes;
+    let hybrid = BatchShape::hybrid(c_eff, 0, &vec![kv; lanes]);
+    let alone = BatchShape::prefill_only(&[(c_eff, 0)]);
+    let marginal = (cm.iteration_time(&hybrid) - cm.iteration_time(&alone)) / lanes as f64;
+    let baseline = cm.iteration_time(&BatchShape::decode_only(&vec![kv; b])) / b as f64;
+    baseline / marginal
+}
+
+pub fn run() -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig8 decode speedup vs batch size (chunk=256), LLaMA-13B/A6000",
+        &["seq_len", "batch", "speedup"],
+    );
+    for (l, b_max) in [(1024usize, 18usize), (2048, 9), (3072, 6)] {
+        let d = llama13b_a6000(l);
+        for b in [2usize, 4, 6, 9, 12, 18] {
+            if b > b_max {
+                continue;
+            }
+            t.row(vec![l.to_string(), b.to_string(), x(decode_speedup(&d, 256, b, l))]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn speedups() -> Vec<(usize, usize, f64)> {
+        run()[0]
+            .rows
+            .iter()
+            .map(|r| {
+                (
+                    r[0].parse().unwrap(),
+                    r[1].parse().unwrap(),
+                    r[2].trim_end_matches('x').parse().unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn speedups_in_paper_band() {
+        // paper: 2.8×–10× across the sweep
+        for (l, b, s) in speedups() {
+            assert!(s > 1.5, "L={l} B={b}: speedup {s}");
+            assert!(s < 40.0, "L={l} B={b}: speedup {s} implausibly high");
+        }
+    }
+
+    #[test]
+    fn speedup_falls_with_batch_and_seq_len() {
+        let all = speedups();
+        let get = |l: usize, b: usize| all.iter().find(|&&(ll, bb, _)| ll == l && bb == b).map(|&(_, _, s)| s);
+        // larger batch → baseline amortizes → smaller speedup
+        assert!(get(1024, 2).unwrap() > get(1024, 18).unwrap());
+        // longer sequence → attention share grows → smaller speedup
+        assert!(get(1024, 4).unwrap() > get(3072, 4).unwrap());
+    }
+}

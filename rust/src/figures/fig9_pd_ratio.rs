@@ -1,0 +1,89 @@
+//! Fig. 9 — normalized throughput (tokens/ms) vs P:D ratio for chunk sizes
+//! 128/256/512 and sequence lengths 1K/2K/3K (LLaMA-13B on A6000, B = max
+//! fit per L).
+//!
+//! Shapes to reproduce: the SARATHI gain peaks near P:D = C/(B−1)
+//! (§5.1.3), the peak moves right as the chunk grows, and chunk 128 trails
+//! 256/512 because tiny chunks hurt prefill efficiency more than the extra
+//! piggybacking helps.
+
+use crate::config::SchedulerConfig;
+use crate::figures::common::{llama13b_a6000, run_engine, steady_population, tokens_per_ms};
+use crate::report::{f3, Table};
+
+const PD_GRID: [f64; 8] = [2.0, 5.0, 10.0, 14.0, 28.0, 50.0, 100.0, 200.0];
+
+pub fn run() -> Vec<Table> {
+    let mut out = Vec::new();
+    for (l, b) in [(1024usize, 18usize), (2048, 9), (3072, 6)] {
+        let d = llama13b_a6000(l);
+        let mut t = Table::new(
+            &format!("Fig9 normalized throughput vs P:D, L={l}, B={b}"),
+            &["P:D", "baseline", "chunk128", "chunk256", "chunk512", "best_gain"],
+        );
+        for &pd in &PD_GRID {
+            let pop = steady_population(b, l, pd, 4);
+            let base = tokens_per_ms(&run_engine(&d, &SchedulerConfig::baseline(b), &pop));
+            let mut cells = vec![format!("{pd:.0}"), f3(base)];
+            let mut best: f64 = 0.0;
+            for chunk in [128usize, 256, 512] {
+                let thpt = tokens_per_ms(&run_engine(&d, &SchedulerConfig::sarathi(chunk, b), &pop));
+                best = best.max(thpt / base);
+                cells.push(f3(thpt));
+            }
+            cells.push(format!("{best:.2}x"));
+            t.row(cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gains(table: &Table, col: usize) -> Vec<(f64, f64)> {
+        table
+            .rows
+            .iter()
+            .map(|r| {
+                let pd: f64 = r[0].parse().unwrap();
+                let base: f64 = r[1].parse().unwrap();
+                let v: f64 = r[col].parse().unwrap();
+                (pd, v / base)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunk256_peaks_near_c_over_b_minus_1() {
+        // L=1K, B=18 → C/(B−1) = 256/17 ≈ 15; the paper's peak is at P:D=14
+        let tables = run();
+        let g = gains(&tables[0], 3);
+        let peak = g.iter().cloned().fold((0.0, 0.0), |m, x| if x.1 > m.1 { x } else { m });
+        assert!((5.0..=50.0).contains(&peak.0), "peak at P:D={}", peak.0);
+        assert!(peak.1 > 1.1, "peak gain {}", peak.1);
+    }
+
+    #[test]
+    fn peak_moves_right_with_chunk_size() {
+        let tables = run();
+        let peak_pd = |col: usize| {
+            gains(&tables[0], col)
+                .into_iter()
+                .fold((0.0, 0.0), |m, x| if x.1 > m.1 { x } else { m })
+                .0
+        };
+        assert!(peak_pd(4) >= peak_pd(3), "512 peak {} < 256 peak {}", peak_pd(4), peak_pd(3));
+    }
+
+    #[test]
+    fn gains_hold_over_wide_pd_range() {
+        // paper: "improvements still around 10% over a large range"
+        let tables = run();
+        let g = gains(&tables[0], 3);
+        let above = g.iter().filter(|&&(_, gain)| gain > 1.05).count();
+        assert!(above >= g.len() / 2, "only {above}/{} P:D points gain >5%", g.len());
+    }
+}

@@ -1,0 +1,68 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (§3 and §5). Each submodule exposes `run() -> Vec<Table>`
+//! printing the same rows/series the paper reports; the CLI
+//! (`sarathi figures <name>|all`) renders them and writes CSVs to `out/`.
+//!
+//! Absolute milliseconds come from the calibrated cost model (DESIGN.md §3)
+//! — the *shape* of each result (who wins, by what factor, where the
+//! crossovers fall) is the reproduction target, recorded against the
+//! paper's numbers in EXPERIMENTS.md.
+
+pub mod common;
+pub mod ext_latency;
+pub mod fig11_orca;
+pub mod fig12_pipeline;
+pub mod fig13_ablation;
+pub mod fig3_per_token;
+pub mod fig4_throughput;
+pub mod fig5_bubbles;
+pub mod fig7_tile;
+pub mod fig8_decode_speedup;
+pub mod fig9_pd_ratio;
+pub mod fig10_breakdown;
+pub mod table2_batching;
+pub mod table4_peak;
+
+use crate::report::Table;
+
+/// All experiments, in paper order: (name, runner).
+pub fn all() -> Vec<(&'static str, fn() -> Vec<Table>)> {
+    vec![
+        ("fig3", fig3_per_token::run),
+        ("fig4", fig4_throughput::run),
+        ("fig5", fig5_bubbles::run),
+        ("table2", table2_batching::run),
+        ("fig7", fig7_tile::run),
+        ("fig8", fig8_decode_speedup::run),
+        ("table4", table4_peak::run),
+        ("fig9", fig9_pd_ratio::run),
+        ("fig10", fig10_breakdown::run),
+        ("fig11", fig11_orca::run),
+        ("fig12", fig12_pipeline::run),
+        ("fig13", fig13_ablation::run),
+        ("ext-latency", ext_latency::run),
+    ]
+}
+
+/// Run one experiment by name ("all" runs everything); returns rendered
+/// tables after writing CSVs under `out_dir`.
+pub fn run_named(name: &str, out_dir: &std::path::Path) -> anyhow::Result<Vec<Table>> {
+    let experiments = all();
+    let mut tables = Vec::new();
+    let mut matched = false;
+    for (n, f) in experiments {
+        if name == "all" || name == n {
+            matched = true;
+            for t in f() {
+                let fname = t.title.split_whitespace().next().unwrap_or("table").to_lowercase();
+                let fname = format!("{n}_{}", fname.replace(['/', ':'], "_"));
+                t.write_csv(out_dir, &fname)?;
+                tables.push(t);
+            }
+        }
+    }
+    if !matched {
+        anyhow::bail!("unknown experiment {name:?} (try: all, fig3..fig13, table2, table4)");
+    }
+    Ok(tables)
+}

@@ -1,0 +1,106 @@
+//! Table 2 — per-iteration operation times for the three batching schemes
+//! (LLaMA-13B on A6000): prefill-only (4 × 1024-token prompts),
+//! decode-only (4 lanes at KV 1024), and decode-maximal (one 1021-token
+//! chunk + 3 piggybacked decodes).
+//!
+//! The reproduction target is the relation the paper draws from the table:
+//! piggybacked decodes cost an order of magnitude less per token than
+//! decode-only ones (12.49 → 1.2 ms in the paper).
+
+use crate::costmodel::{BatchShape, CostModel, DecodeItem, PrefillItem};
+use crate::figures::common::llama13b_a6000;
+use crate::report::{f3, ms, Table};
+
+pub struct Rows {
+    pub prefill_per_tok: f64,
+    pub decode_only_per_tok: f64,
+    pub piggyback_per_tok: f64,
+}
+
+pub fn compute() -> (Table, Rows) {
+    let cm = CostModel::for_deployment(&llama13b_a6000(1024));
+
+    let mut t = Table::new(
+        "Table2 per-token prefill/decode time (ms), LLaMA-13B/A6000",
+        &["scheme", "linear_ms", "attn_ms", "total_ms", "prefill/tok", "decode/tok"],
+    );
+
+    // prefill-only: 4 prompts of 1024
+    let p = BatchShape::prefill_only(&[(1024, 0); 4]);
+    let bd_p = cm.iteration(&p);
+    let prefill_per_tok = bd_p.total() / 1024.0; // the paper divides by L
+    t.row(vec![
+        "prefill-only".into(),
+        ms(bd_p.linear()),
+        ms(bd_p.attn()),
+        ms(bd_p.total()),
+        f3(prefill_per_tok * 1e3),
+        "-".into(),
+    ]);
+
+    // decode-only: batch of 4 at sequence length 1024
+    let d = BatchShape::decode_only(&[1024; 4]);
+    let bd_d = cm.iteration(&d);
+    let decode_only_per_tok = bd_d.total() / 4.0;
+    t.row(vec![
+        "decode-only".into(),
+        ms(bd_d.linear()),
+        ms(bd_d.attn()),
+        ms(bd_d.total()),
+        "-".into(),
+        f3(decode_only_per_tok * 1e3),
+    ]);
+
+    // decode-maximal: 1021-token chunk + 3 decodes at KV 1024
+    let h = BatchShape {
+        prefill: vec![PrefillItem { chunk: 1021, history: 0 }],
+        decode: vec![DecodeItem { kv_len: 1024 }; 3],
+    };
+    let bd_h = cm.iteration(&h);
+    let alone = cm.iteration_time(&BatchShape::prefill_only(&[(1021, 0)]));
+    let piggyback_per_tok = (bd_h.total() - alone) / 3.0;
+    t.row(vec![
+        "decode-maximal".into(),
+        ms(bd_h.linear()),
+        ms(bd_h.attn()),
+        ms(bd_h.total()),
+        f3(alone / 1021.0 * 1e3),
+        f3(piggyback_per_tok * 1e3),
+    ]);
+
+    (t, Rows { prefill_per_tok, decode_only_per_tok, piggyback_per_tok })
+}
+
+pub fn run() -> Vec<Table> {
+    vec![compute().0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn piggybacked_decodes_are_order_of_magnitude_cheaper() {
+        let (_, r) = compute();
+        let speedup = r.decode_only_per_tok / r.piggyback_per_tok;
+        // paper: 12.49 / 1.2 ≈ 10.4×
+        assert!(speedup > 5.0, "speedup={speedup}");
+    }
+
+    #[test]
+    fn decode_only_to_prefill_ratio_matches_paper_scale() {
+        let (_, r) = compute();
+        // paper: 12.49 vs 0.229 ≈ 55× at B=4... our accounting divides the
+        // 4-prompt batch by L, same as the paper's convention
+        let ratio = r.decode_only_per_tok / r.prefill_per_tok;
+        assert!((10.0..120.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn attention_is_minor_for_prefill_heavy_rows() {
+        let (t, _) = compute();
+        let lin: f64 = t.rows[0][1].parse().unwrap();
+        let attn: f64 = t.rows[0][2].parse().unwrap();
+        assert!(attn < lin * 0.35, "attn {attn} vs linear {lin}");
+    }
+}

@@ -1,0 +1,27 @@
+//! # SARATHI — chunked-prefills + decode-maximal batching
+//!
+//! A reproduction of *"SARATHI: Efficient LLM Inference by Piggybacking
+//! Decodes with Chunked Prefills"* (Agrawal et al., 2023) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the coordinator: request routing, the SARATHI
+//!   scheduler (chunked prefills, decode-maximal batches), KV-cache slot
+//!   management, a pipeline-parallel discrete-event runtime simulator, and
+//!   the PJRT runtime that serves a real model from AOT-compiled HLO.
+//! * **L2/L1 (python/compile)** — the JAX model and Pallas kernels, lowered
+//!   once at build time to `artifacts/*.hlo.txt`; Python is never on the
+//!   request path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod figures;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod workload;

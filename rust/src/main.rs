@@ -1,0 +1,181 @@
+//! `sarathi` — CLI launcher for the SARATHI reproduction.
+//!
+//! Subcommands:
+//!   figures [all|fig3..fig13|table2|table4] [--out DIR]
+//!       regenerate the paper's tables/figures (prints rows, writes CSVs)
+//!   serve [--artifacts DIR] [--requests N] [--decode N] [--scheduler S]
+//!       serve the tiny model for real through PJRT with the chosen policy
+//!   simulate [--requests N]
+//!       run the §5.3 GPT-3 64-GPU cluster comparison at full scale
+//!   calibration
+//!       print the cost-model calibration summary
+
+use std::path::PathBuf;
+
+use sarathi::config::{SchedulerKind, SchedulerConfig};
+use sarathi::coordinator::{Engine, KvManager, RequestPool, make_scheduler};
+use sarathi::figures;
+use sarathi::runtime::{GenRequest, ModelRuntime, RealExecutor};
+use sarathi::util::Rng;
+use sarathi::workload::RequestSpec;
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("figures") => cmd_figures(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("calibration") => cmd_calibration(),
+        _ => {
+            eprintln!(
+                "usage: sarathi <figures|serve|simulate|calibration> [options]\n\
+                 \n\
+                 figures [all|fig3..fig13|table2|table4] [--out DIR]\n\
+                 serve [--artifacts DIR] [--requests N] [--decode N] [--scheduler sarathi|orca-best|orca-worst|baseline]\n\
+                 simulate [--requests N]\n\
+                 calibration"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_figures(args: &[String]) -> anyhow::Result<()> {
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let out = PathBuf::from(flag_value(args, "--out").unwrap_or_else(|| "out".into()));
+    let tables = figures::run_named(&name, &out)?;
+    for t in tables {
+        println!("{}", t.render());
+    }
+    println!("(CSV written to {})", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let dir = PathBuf::from(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(6);
+    let decode_len: usize = flag_value(args, "--decode").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let sched_name = flag_value(args, "--scheduler").unwrap_or_else(|| "sarathi".into());
+
+    let rt = ModelRuntime::load(&dir)?;
+    println!("loaded {} artifacts on {}", rt.manifest.artifacts.len(), rt.platform());
+    let slots = rt.manifest.model.usable_slots();
+    let vocab = rt.manifest.model.vocab;
+    let max_len = rt.manifest.model.max_len;
+
+    let mut rng = Rng::new(11);
+    let prompts: Vec<Vec<i32>> = (0..n)
+        .map(|i| {
+            let len = (24 + 13 * i) % (max_len - decode_len - 1).min(96) + 16;
+            (0..len).map(|_| rng.usize(0, vocab - 1) as i32).collect()
+        })
+        .collect();
+    let specs: Vec<RequestSpec> = prompts
+        .iter()
+        .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0 })
+        .collect();
+
+    let kind = match sched_name.as_str() {
+        "sarathi" => SchedulerKind::Sarathi,
+        "orca-best" => SchedulerKind::OrcaBest,
+        "orca-worst" => SchedulerKind::OrcaWorst,
+        "baseline" => SchedulerKind::RequestLevel,
+        other => anyhow::bail!("unknown scheduler {other}"),
+    };
+    let cfg = SchedulerConfig {
+        kind,
+        chunk_size: rt.manifest.max_chunk(),
+        tile_align: rt.manifest.max_chunk(),
+        max_batch: slots,
+    };
+
+    let gen_reqs: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
+    let exec = RealExecutor::new(rt, gen_reqs);
+    let mut engine = Engine::new(
+        RequestPool::from_specs(&specs),
+        KvManager::new(slots),
+        make_scheduler(&cfg),
+        Box::new(exec),
+    );
+    let t0 = std::time::Instant::now();
+    engine.run();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = &engine.metrics;
+    println!(
+        "scheduler={sched_name} requests={n} iterations={} wall={:.2}s",
+        m.iterations.len(),
+        wall
+    );
+    println!(
+        "prefill_tokens={} decode_tokens={} throughput={:.1} tok/s",
+        m.total_prefill_tokens(),
+        m.total_decode_tokens(),
+        (m.total_prefill_tokens() + m.total_decode_tokens()) as f64 / wall
+    );
+    let exec = engine.executor.as_any().downcast_ref::<RealExecutor>().unwrap();
+    if let Some(e) = &exec.error {
+        anyhow::bail!("runtime error: {e}");
+    }
+    for (i, g) in exec.requests.iter().enumerate().take(3) {
+        println!("request {i}: prompt {} tokens -> {:?}", g.prompt.len(), g.generated);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(10_000);
+    println!("GPT-3 on 64 simulated A100s, {n} requests (Zipf 0.4, P:D=10) ...");
+    let t0 = std::time::Instant::now();
+    let out = sarathi::figures::fig12_pipeline::simulate(n);
+    println!("simulated in {:.2}s", t0.elapsed().as_secs_f64());
+    println!(
+        "orca tp8-pp8:    makespan {:.1}s  (median bubble {:.2}s)",
+        out.orca_pp.makespan,
+        out.orca_pp.per_replica[0].bubble_summary().percentile(50.0)
+    );
+    println!(
+        "sarathi tp8-pp8: makespan {:.1}s  (median bubble {:.2}s)",
+        out.sarathi_pp.makespan,
+        out.sarathi_pp.per_replica[0].bubble_summary().percentile(50.0)
+    );
+    println!("tp8 x8 replicas: makespan {:.1}s", out.tp_only.makespan);
+    println!(
+        "sarathi speedup: {:.2}x vs orca-pp, {:.2}x vs tp-only",
+        out.orca_pp.makespan / out.sarathi_pp.makespan,
+        out.tp_only.makespan / out.sarathi_pp.makespan
+    );
+    Ok(())
+}
+
+fn cmd_calibration() -> anyhow::Result<()> {
+    use sarathi::config::{GpuConfig, ModelConfig};
+    use sarathi::costmodel::{BatchShape, CostModel};
+    for (m, g) in [
+        (ModelConfig::llama13b(), GpuConfig::a6000()),
+        (ModelConfig::llama33b(), GpuConfig::a100()),
+        (ModelConfig::gpt3(), GpuConfig::a100()),
+    ] {
+        let cm = CostModel::new(m.clone(), g.clone());
+        let prefill = cm.iteration_time(&BatchShape::prefill_only(&[(1024, 0)])) / 1024.0;
+        let decode = cm.iteration_time(&BatchShape::decode_only(&[1024]));
+        println!(
+            "{:<12} on {:<6}: prefill {:.3} ms/tok  decode(B=1) {:.2} ms/tok  ratio {:>5.0}x  saturation {} tok",
+            m.name,
+            g.name,
+            prefill * 1e3,
+            decode * 1e3,
+            decode / prefill,
+            cm.saturation_tokens(),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! `RealExecutor`: the engine's [`Executor`] backed by the PJRT model.
+//!
+//! The engine's batches carry only offsets/lengths; this adapter owns the
+//! actual token ids — prompts in, generated tokens out — and maps work
+//! items onto the AOT shape buckets:
+//!
+//! * `PrefillChunk` → `prefill_c{N}` (padded to the bucket),
+//! * `Decode` lanes → `decode_d{D}` in groups of D,
+//! * one chunk + lanes → `hybrid_c{N}_d{D}` — the decode-maximal step.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::model::ModelRuntime;
+use super::sampler::argmax;
+use crate::coordinator::{Batch, Executor, RequestPool, StepOutcome};
+
+/// Per-request generation state, indexed by the engine's request id.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Generated token ids (first produced by the final prefill chunk).
+    pub generated: Vec<i32>,
+}
+
+impl GenRequest {
+    pub fn new(prompt: Vec<i32>) -> Self {
+        GenRequest { prompt, generated: Vec::new() }
+    }
+
+    /// The token a decode step should feed (the last generated one).
+    fn last_token(&self) -> i32 {
+        *self.generated.last().expect("decode before first token")
+    }
+
+    /// Position of the next token to write into the KV cache.
+    fn next_pos(&self) -> usize {
+        self.prompt.len() + self.generated.len() - 1
+    }
+}
+
+pub struct RealExecutor {
+    pub model: ModelRuntime,
+    pub requests: Vec<GenRequest>,
+    /// Execution error, if any (the Executor trait is infallible; errors
+    /// are surfaced after the run).
+    pub error: Option<anyhow::Error>,
+}
+
+impl RealExecutor {
+    pub fn new(model: ModelRuntime, requests: Vec<GenRequest>) -> Self {
+        RealExecutor { model, requests, error: None }
+    }
+
+    pub fn into_requests(self) -> Vec<GenRequest> {
+        self.requests
+    }
+
+    fn exec(&mut self, batch: &Batch, pool: &RequestPool) -> Result<()> {
+        let prefill: Vec<(usize, usize, usize)> = batch.prefill_items().collect();
+        let decode_ids: Vec<usize> = batch.decode_items().collect();
+        let d_cap = self.model.manifest.model.decode_slots;
+
+        // Build decode lanes: (token, slot, position) per decoding request.
+        let lanes: Vec<(usize, (i32, usize, usize))> = decode_ids
+            .iter()
+            .map(|&id| {
+                let g = &self.requests[id];
+                let slot = pool.get(id).slot.expect("decode without slot");
+                (id, (g.last_token(), slot, g.next_pos()))
+            })
+            .collect();
+
+        let mut lane_logits: Vec<(usize, Vec<f32>)> = Vec::new();
+
+        match prefill.as_slice() {
+            [] => {
+                // decode-only iteration(s), in artifact-sized groups
+                for group in lanes.chunks(d_cap.max(1)) {
+                    let ls: Vec<_> = group.iter().map(|&(_, l)| l).collect();
+                    let out = self.model.decode(&ls)?;
+                    for (k, &(id, _)) in group.iter().enumerate() {
+                        lane_logits.push((id, out.logits[k].clone()));
+                    }
+                }
+            }
+            [(req, start, len)] if !lanes.is_empty() => {
+                // decode-maximal: one chunk + up to D piggybacked lanes. A
+                // chunk larger than the biggest hybrid bucket (Orca-best
+                // submits whole prompts) is split: the lanes ride the first
+                // sub-chunk, the rest prefills plain.
+                let (head, tail) = lanes.split_at(lanes.len().min(d_cap));
+                let slot = pool.get(*req).slot.expect("prefill without slot");
+                let max_hb = self
+                    .model
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.kind == super::manifest::ArtifactKind::Hybrid)
+                    .filter_map(|a| a.chunk)
+                    .max()
+                    .unwrap_or(0);
+                let first = (*len).min(max_hb.max(1));
+                let toks = self.requests[*req].prompt[*start..*start + first].to_vec();
+                let ls: Vec<_> = head.iter().map(|&(_, l)| l).collect();
+                let (p_out, d_out) = self.model.hybrid(&toks, slot, *start, &ls)?;
+                for (k, &(id, _)) in head.iter().enumerate() {
+                    lane_logits.push((id, d_out.logits[k].clone()));
+                }
+                // overflow lanes (beyond the artifact's D) go decode-only
+                for group in tail.chunks(d_cap.max(1)) {
+                    let ls: Vec<_> = group.iter().map(|&(_, l)| l).collect();
+                    let out = self.model.decode(&ls)?;
+                    for (k, &(id, _)) in group.iter().enumerate() {
+                        lane_logits.push((id, out.logits[k].clone()));
+                    }
+                }
+                let last = if first < *len {
+                    self.prefill_range(*req, slot, *start + first, *len - first)?
+                } else {
+                    p_out.logits
+                };
+                self.finish_prefill(*req, pool, *start, *len, last)?;
+            }
+            chunks => {
+                // prefill-only (possibly several requests — baseline mode)
+                for &(req, start, len) in chunks {
+                    let slot = pool.get(req).slot.expect("prefill without slot");
+                    let last = self.prefill_range(req, slot, start, len)?;
+                    self.finish_prefill(req, pool, start, len, last)?;
+                }
+            }
+        }
+
+        // sample decode outputs
+        for (id, logits) in lane_logits {
+            let tok = argmax(&logits) as i32;
+            self.requests[id].generated.push(tok);
+        }
+        Ok(())
+    }
+
+    /// Prefill `[start, start+len)` of a request's prompt through the
+    /// artifact buckets; returns the logits of the final sub-chunk.
+    fn prefill_range(&mut self, req: usize, slot: usize, start: usize, len: usize) -> Result<Vec<f32>> {
+        let max_chunk = self.model.manifest.max_chunk();
+        let mut s = start;
+        let mut last = None;
+        while s < start + len {
+            let e = (s + max_chunk).min(start + len);
+            let toks = self.requests[req].prompt[s..e].to_vec();
+            let out = self.model.prefill_chunk(&toks, slot, s)?;
+            last = Some(out.logits);
+            s = e;
+        }
+        Ok(last.expect("empty prefill range"))
+    }
+
+    /// If this chunk completes the prompt, its logits yield the first
+    /// output token.
+    fn finish_prefill(
+        &mut self,
+        req: usize,
+        pool: &RequestPool,
+        start: usize,
+        len: usize,
+        logits: Vec<f32>,
+    ) -> Result<()> {
+        let prompt_len = pool.get(req).spec.prompt_len;
+        if start + len == prompt_len {
+            let tok = argmax(&logits) as i32;
+            self.requests[req].generated.push(tok);
+        }
+        Ok(())
+    }
+}
+
+impl Executor for RealExecutor {
+    fn execute(&mut self, batch: &Batch, pool: &RequestPool) -> StepOutcome {
+        let t0 = Instant::now();
+        if self.error.is_none() {
+            if let Err(e) = self.exec(batch, pool) {
+                self.error = Some(e);
+            }
+        }
+        StepOutcome { elapsed: t0.elapsed().as_secs_f64(), prefill_alone: None, breakdown: None }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}

@@ -1,0 +1,223 @@
+//! Parse `artifacts/manifest.txt` (format written by python/compile/aot.py).
+//!
+//! ```text
+//! format 1
+//! model tiny vocab=256 hidden=128 heads=4 layers=2 ffn=512 max_len=256 kv_slots=8 decode_slots=4
+//! weights weights.npz embed l0.ln1 ...
+//! artifact name=prefill_c16 kind=prefill chunk=16 file=prefill_c16.hlo.txt
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Prefill,
+    Decode,
+    Hybrid,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Chunk size for prefill/hybrid artifacts.
+    pub chunk: Option<usize>,
+    /// Decode lanes for decode/hybrid artifacts.
+    pub dslots: Option<usize>,
+    pub file: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ffn: usize,
+    pub max_len: usize,
+    pub kv_slots: usize,
+    pub decode_slots: usize,
+}
+
+impl ModelInfo {
+    /// The last KV row is scratch for padded decode lanes.
+    pub fn scratch_slot(&self) -> usize {
+        self.kv_slots - 1
+    }
+
+    pub fn usable_slots(&self) -> usize {
+        self.kv_slots - 1
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub weights_file: PathBuf,
+    /// Parameter names in positional order (load-bearing).
+    pub param_order: Vec<String>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+fn kv_pairs(parts: &[&str]) -> HashMap<String, String> {
+    parts
+        .iter()
+        .filter_map(|p| p.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn get_usize(map: &HashMap<String, String>, key: &str) -> Result<usize> {
+    map.get(key)
+        .ok_or_else(|| anyhow!("missing key {key}"))?
+        .parse()
+        .with_context(|| format!("bad value for {key}"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        if header.trim() != "format 1" {
+            bail!("unsupported manifest format: {header:?}");
+        }
+
+        let mut model = None;
+        let mut weights_file = None;
+        let mut param_order = Vec::new();
+        let mut artifacts = Vec::new();
+
+        for line in lines {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.first().copied() {
+                Some("model") => {
+                    let kv = kv_pairs(&parts[2..]);
+                    model = Some(ModelInfo {
+                        vocab: get_usize(&kv, "vocab")?,
+                        hidden: get_usize(&kv, "hidden")?,
+                        heads: get_usize(&kv, "heads")?,
+                        layers: get_usize(&kv, "layers")?,
+                        ffn: get_usize(&kv, "ffn")?,
+                        max_len: get_usize(&kv, "max_len")?,
+                        kv_slots: get_usize(&kv, "kv_slots")?,
+                        decode_slots: get_usize(&kv, "decode_slots")?,
+                    });
+                }
+                Some("weights") => {
+                    weights_file = Some(dir.join(parts.get(1).ok_or_else(|| anyhow!("weights line missing file"))?));
+                    param_order = parts[2..].iter().map(|s| s.to_string()).collect();
+                }
+                Some("artifact") => {
+                    let kv = kv_pairs(&parts[1..]);
+                    let kind = match kv.get("kind").map(String::as_str) {
+                        Some("prefill") => ArtifactKind::Prefill,
+                        Some("decode") => ArtifactKind::Decode,
+                        Some("hybrid") => ArtifactKind::Hybrid,
+                        other => bail!("unknown artifact kind {other:?}"),
+                    };
+                    artifacts.push(ArtifactEntry {
+                        name: kv.get("name").cloned().ok_or_else(|| anyhow!("artifact missing name"))?,
+                        kind,
+                        chunk: kv.get("chunk").map(|c| c.parse()).transpose()?,
+                        dslots: kv.get("dslots").map(|c| c.parse()).transpose()?,
+                        file: dir.join(kv.get("file").ok_or_else(|| anyhow!("artifact missing file"))?),
+                    });
+                }
+                _ => bail!("unrecognized manifest line: {line:?}"),
+            }
+        }
+
+        let model = model.ok_or_else(|| anyhow!("manifest has no model line"))?;
+        let weights_file = weights_file.ok_or_else(|| anyhow!("manifest has no weights line"))?;
+        if param_order.is_empty() {
+            bail!("weights line lists no parameters");
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), model, weights_file, param_order, artifacts })
+    }
+
+    /// Smallest prefill chunk bucket that fits `len` tokens, if any.
+    pub fn prefill_bucket(&self, len: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Prefill && a.chunk.unwrap_or(0) >= len)
+            .min_by_key(|a| a.chunk.unwrap())
+    }
+
+    /// Hybrid artifact for `len` chunk tokens (smallest bucket that fits).
+    pub fn hybrid_bucket(&self, len: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Hybrid && a.chunk.unwrap_or(0) >= len)
+            .min_by_key(|a| a.chunk.unwrap())
+    }
+
+    pub fn decode_artifact(&self) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.kind == ArtifactKind::Decode)
+    }
+
+    /// Largest prefill chunk available (the scheduler's chunk size).
+    pub fn max_chunk(&self) -> usize {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Prefill)
+            .filter_map(|a| a.chunk)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+format 1
+model tiny vocab=256 hidden=128 heads=4 layers=2 ffn=512 max_len=256 kv_slots=8 decode_slots=4
+weights weights.npz embed l0.ln1 l0.wqkv lnf
+artifact name=prefill_c16 kind=prefill chunk=16 file=prefill_c16.hlo.txt
+artifact name=prefill_c32 kind=prefill chunk=32 file=prefill_c32.hlo.txt
+artifact name=decode_d4 kind=decode dslots=4 file=decode_d4.hlo.txt
+artifact name=hybrid_c16_d4 kind=hybrid chunk=16 dslots=4 file=hybrid_c16_d4.hlo.txt
+artifact name=hybrid_c32_d4 kind=hybrid chunk=32 dslots=4 file=hybrid_c32_d4.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.model.vocab, 256);
+        assert_eq!(m.model.scratch_slot(), 7);
+        assert_eq!(m.param_order.len(), 4);
+        assert_eq!(m.artifacts.len(), 5);
+        assert_eq!(m.max_chunk(), 32);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.prefill_bucket(10).unwrap().chunk, Some(16));
+        assert_eq!(m.prefill_bucket(16).unwrap().chunk, Some(16));
+        assert_eq!(m.prefill_bucket(17).unwrap().chunk, Some(32));
+        assert!(m.prefill_bucket(33).is_none());
+        assert_eq!(m.hybrid_bucket(20).unwrap().name, "hybrid_c32_d4");
+        assert_eq!(m.decode_artifact().unwrap().dslots, Some(4));
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(Path::new("/"), "format 2\n").is_err());
+        assert!(Manifest::parse(Path::new("/"), "").is_err());
+        assert!(Manifest::parse(Path::new("/"), "format 1\njunk line\n").is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! `weights.npz`, `manifest.txt`) produced by `python/compile/aot.py` and
+//! serves the tiny model for real on the PJRT CPU client. Python is never
+//! on this path.
+//!
+//! * [`manifest`] — artifact manifest parsing.
+//! * [`model`] — `ModelRuntime`: compiled executables + weights + the
+//!   functional KV-cache state, exposing the three step functions the
+//!   scheduler composes (prefill chunk / decode / decode-maximal hybrid).
+//! * [`executor`] — `RealExecutor`: adapts `ModelRuntime` to the engine's
+//!   [`crate::coordinator::Executor`] trait, carrying real token ids.
+//! * [`sampler`] — greedy / top-k sampling over returned logits.
+
+pub mod executor;
+pub mod manifest;
+pub mod model;
+pub mod sampler;
+
+pub use executor::{GenRequest, RealExecutor};
+pub use manifest::{ArtifactEntry, ArtifactKind, Manifest, ModelInfo};
+pub use model::ModelRuntime;
+pub use sampler::{argmax, top_k_deterministic};

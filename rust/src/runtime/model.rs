@@ -1,0 +1,296 @@
+//! `ModelRuntime`: the compiled model + weights + KV-cache state.
+//!
+//! Loads HLO **text** artifacts (`HloModuleProto::from_text_file` — see
+//! DESIGN.md §2 for why text, not serialized protos), compiles them once on
+//! the PJRT CPU client, and executes steps with the KV cache threaded
+//! through as a functional input/output (the multi-output jax functions
+//! come back as one tuple literal which we decompose host-side).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use xla::FromRawBytes;
+
+use super::manifest::Manifest;
+
+/// Result of a prefill-chunk step.
+pub struct PrefillOut {
+    /// Logits of the last *real* (unpadded) chunk token, [vocab].
+    pub logits: Vec<f32>,
+}
+
+/// Result of a decode step: per-lane logits.
+pub struct DecodeOut {
+    /// [lanes][vocab]
+    pub logits: Vec<Vec<f32>>,
+}
+
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Weights in manifest positional order.
+    weights: Vec<xla::Literal>,
+    /// Functional KV state, [layers, slots, max_len, heads, head_dim] f32.
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    /// Steps executed (observability / bench counters).
+    pub steps: usize,
+}
+
+fn i32_lit(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+impl ModelRuntime {
+    /// Load manifest + weights and compile every artifact.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+        // weights.npz → positional literal list
+        let named: Vec<(String, xla::Literal)> =
+            xla::Literal::read_npz(&manifest.weights_file, &())
+                .map_err(|e| anyhow!("reading {:?}: {e:?}", manifest.weights_file))?;
+        let mut by_name: HashMap<String, xla::Literal> = named.into_iter().collect();
+        let mut weights = Vec::with_capacity(manifest.param_order.len());
+        for name in &manifest.param_order {
+            let lit = by_name
+                .remove(name)
+                .ok_or_else(|| anyhow!("weights.npz missing parameter {name}"))?;
+            weights.push(lit);
+        }
+
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&art.file)
+                .map_err(|e| anyhow!("parsing {:?}: {e:?}", art.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", art.name))?;
+            executables.insert(art.name.clone(), exe);
+        }
+
+        let m = &manifest.model;
+        let kv_elems = m.layers * m.kv_slots * m.max_len * m.hidden;
+        let zeros = vec![0f32; kv_elems];
+        let dims: Vec<i64> = vec![
+            m.layers as i64,
+            m.kv_slots as i64,
+            m.max_len as i64,
+            m.heads as i64,
+            (m.hidden / m.heads) as i64,
+        ];
+        let k_cache = xla::Literal::vec1(&zeros)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("kv reshape: {e:?}"))?;
+        let v_cache = xla::Literal::vec1(&zeros)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("kv reshape: {e:?}"))?;
+
+        Ok(ModelRuntime { manifest, client, executables, weights, k_cache, v_cache, steps: 0 })
+    }
+
+    /// Clear the KV cache (fresh serving session).
+    pub fn reset_kv(&mut self) -> Result<()> {
+        let m = &self.manifest.model;
+        let kv_elems = m.layers * m.kv_slots * m.max_len * m.hidden;
+        let zeros = vec![0f32; kv_elems];
+        let dims: Vec<i64> = vec![
+            m.layers as i64,
+            m.kv_slots as i64,
+            m.max_len as i64,
+            m.heads as i64,
+            (m.hidden / m.heads) as i64,
+        ];
+        self.k_cache =
+            xla::Literal::vec1(&zeros).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+        self.v_cache =
+            xla::Literal::vec1(&zeros).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+        Ok(())
+    }
+
+    fn run(&mut self, name: &str, extra: Vec<xla::Literal>, n_extra_outputs: usize)
+        -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+        // inputs: params..., k, v, step inputs...
+        let mut inputs: Vec<&xla::Literal> = self.weights.iter().collect();
+        inputs.push(&self.k_cache);
+        inputs.push(&self.v_cache);
+        for lit in &extra {
+            inputs.push(lit);
+        }
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let mut parts = tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != n_extra_outputs + 2 {
+            bail!("{name}: expected {} outputs, got {}", n_extra_outputs + 2, parts.len());
+        }
+        // trailing two outputs are the updated KV state
+        self.v_cache = parts.pop().unwrap();
+        self.k_cache = parts.pop().unwrap();
+        self.steps += 1;
+        Ok(parts)
+    }
+
+    fn logits_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))
+    }
+
+    /// One chunked-prefill iteration: `tokens` (≤ bucket size) of the
+    /// request in `slot`, starting at prompt offset `start`. Returns the
+    /// logits of the last real token (meaningful only on the final chunk).
+    pub fn prefill_chunk(&mut self, tokens: &[i32], slot: usize, start: usize) -> Result<PrefillOut> {
+        let len = tokens.len();
+        let art = self
+            .manifest
+            .prefill_bucket(len)
+            .ok_or_else(|| anyhow!("no prefill bucket fits {len} tokens"))?;
+        let bucket = art.chunk.unwrap();
+        let name = art.name.clone();
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+        let extra = vec![
+            i32_lit(&padded),
+            scalar_i32(slot as i32),
+            scalar_i32(start as i32),
+            scalar_i32(len as i32),
+        ];
+        let parts = self.run(&name, extra, 1)?;
+        Ok(PrefillOut { logits: Self::logits_vec(&parts[0])? })
+    }
+
+    /// One decode-only iteration over up to `decode_slots` lanes.
+    /// Each lane: (token, slot, position). Missing lanes are padded to the
+    /// scratch slot. Returns per-real-lane logits.
+    pub fn decode(&mut self, lanes: &[(i32, usize, usize)]) -> Result<DecodeOut> {
+        let art = self
+            .manifest
+            .decode_artifact()
+            .ok_or_else(|| anyhow!("no decode artifact"))?;
+        let d = art.dslots.unwrap();
+        let name = art.name.clone();
+        if lanes.len() > d {
+            bail!("{} decode lanes exceed artifact capacity {d}", lanes.len());
+        }
+        let scratch = self.manifest.model.scratch_slot() as i32;
+        let mut toks = vec![0i32; d];
+        let mut slots = vec![scratch; d];
+        let mut pos = vec![0i32; d];
+        for (i, &(t, s, p)) in lanes.iter().enumerate() {
+            toks[i] = t;
+            slots[i] = s as i32;
+            pos[i] = p as i32;
+        }
+        let extra = vec![i32_lit(&toks), i32_lit(&slots), i32_lit(&pos)];
+        let parts = self.run(&name, extra, 1)?;
+        let flat = Self::logits_vec(&parts[0])?;
+        let vocab = self.manifest.model.vocab;
+        Ok(DecodeOut {
+            logits: (0..lanes.len()).map(|i| flat[i * vocab..(i + 1) * vocab].to_vec()).collect(),
+        })
+    }
+
+    /// One decode-maximal iteration: ONE prefill chunk plus piggybacked
+    /// decode lanes, fused through the hybrid artifact (§4.3).
+    pub fn hybrid(
+        &mut self,
+        p_tokens: &[i32],
+        p_slot: usize,
+        p_start: usize,
+        lanes: &[(i32, usize, usize)],
+    ) -> Result<(PrefillOut, DecodeOut)> {
+        let len = p_tokens.len();
+        let art = self
+            .manifest
+            .hybrid_bucket(len)
+            .ok_or_else(|| anyhow!("no hybrid bucket fits {len} tokens"))?;
+        let bucket = art.chunk.unwrap();
+        let d = art.dslots.unwrap();
+        let name = art.name.clone();
+        if lanes.len() > d {
+            bail!("{} decode lanes exceed hybrid capacity {d}", lanes.len());
+        }
+        let mut padded = p_tokens.to_vec();
+        padded.resize(bucket, 0);
+        let scratch = self.manifest.model.scratch_slot() as i32;
+        let mut toks = vec![0i32; d];
+        let mut slots = vec![scratch; d];
+        let mut pos = vec![0i32; d];
+        for (i, &(t, s, p)) in lanes.iter().enumerate() {
+            toks[i] = t;
+            slots[i] = s as i32;
+            pos[i] = p as i32;
+        }
+        let extra = vec![
+            i32_lit(&padded),
+            scalar_i32(p_slot as i32),
+            scalar_i32(p_start as i32),
+            scalar_i32(len as i32),
+            i32_lit(&toks),
+            i32_lit(&slots),
+            i32_lit(&pos),
+        ];
+        let parts = self.run(&name, extra, 2)?;
+        let p_logits = Self::logits_vec(&parts[0])?;
+        let flat = Self::logits_vec(&parts[1])?;
+        let vocab = self.manifest.model.vocab;
+        Ok((
+            PrefillOut { logits: p_logits },
+            DecodeOut {
+                logits: (0..lanes.len())
+                    .map(|i| flat[i * vocab..(i + 1) * vocab].to_vec())
+                    .collect(),
+            },
+        ))
+    }
+
+    /// Convenience: fully prefill a prompt into `slot` with chunked
+    /// prefills of the largest available bucket; returns final logits.
+    pub fn prefill_all(&mut self, prompt: &[i32], slot: usize) -> Result<Vec<f32>> {
+        let chunk = self.manifest.max_chunk();
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let mut out = None;
+        let mut start = 0;
+        while start < prompt.len() {
+            let end = (start + chunk).min(prompt.len());
+            let res = self.prefill_chunk(&prompt[start..end], slot, start)?;
+            out = Some(res.logits);
+            start = end;
+        }
+        Ok(out.unwrap())
+    }
+
+    /// Greedy generation for quickstart/demo: chunked prefill + decode-only
+    /// loop on one slot.
+    pub fn generate_greedy(&mut self, prompt: &[i32], slot: usize, n_tokens: usize) -> Result<Vec<i32>> {
+        let logits = self.prefill_all(prompt, slot)?;
+        let mut out = vec![super::sampler::argmax(&logits) as i32];
+        let mut pos = prompt.len();
+        while out.len() < n_tokens {
+            let last = *out.last().unwrap();
+            let res = self.decode(&[(last, slot, pos)])?;
+            out.push(super::sampler::argmax(&res.logits[0]) as i32);
+            pos += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,42 @@
+//! Sampling over returned logits (rust-side; the AOT graphs return raw
+//! logits so the serving policy stays in the coordinator).
+
+/// Greedy: index of the maximum logit.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Deterministic top-k "sampling": pick the `rank`-th largest logit
+/// (rank 0 = argmax). Used by tests to exercise non-greedy paths without a
+/// stochastic dependency.
+pub fn top_k_deterministic(logits: &[f32], rank: usize) -> usize {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx[rank.min(idx.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1); // first max wins
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn top_k_ranks() {
+        let l = [0.5, 2.0, 1.0];
+        assert_eq!(top_k_deterministic(&l, 0), 1);
+        assert_eq!(top_k_deterministic(&l, 1), 2);
+        assert_eq!(top_k_deterministic(&l, 2), 0);
+        assert_eq!(top_k_deterministic(&l, 99), 0); // clamped
+    }
+}

@@ -1,0 +1,139 @@
+//! Replica-level cluster simulation (§5.3's third scenario: 8 independent
+//! TP-8 replicas on the same 64 GPUs as the TP8×PP8 deployment).
+
+use super::pipeline::{PipelineResult, PipelineSim};
+use crate::config::Deployment;
+use crate::coordinator::Scheduler;
+use crate::costmodel::CostModel;
+use crate::profiler::Profiler;
+use crate::workload::RequestSpec;
+
+/// Result of a cluster run: merged view over all replicas.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterResult {
+    pub per_replica: Vec<PipelineResult>,
+    pub completions: Vec<f64>,
+    pub makespan: f64,
+}
+
+impl ClusterResult {
+    /// Sorted (requests completed, time) curve across all replicas —
+    /// Fig. 12b's x/y series.
+    pub fn completion_curve(&self) -> Vec<(usize, f64)> {
+        let mut c = self.completions.clone();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        c.into_iter().enumerate().map(|(i, t)| (i + 1, t)).collect()
+    }
+
+    /// Time at which `n` requests have completed.
+    pub fn time_to_complete(&self, n: usize) -> f64 {
+        let curve = self.completion_curve();
+        curve.get(n.saturating_sub(1)).map(|&(_, t)| t).unwrap_or(f64::NAN)
+    }
+}
+
+/// A deployment of `replicas` identical tp×pp groups sharing a workload
+/// round-robin.
+pub struct ClusterSim {
+    pub deployment: Deployment,
+    pub sims: Vec<PipelineSim>,
+}
+
+impl ClusterSim {
+    pub fn new(deployment: Deployment) -> Self {
+        let cm = CostModel::for_deployment(&deployment);
+        let profiler = Profiler::build(cm, deployment.max_seq_len, deployment.max_batch_size() + 1);
+        let sims = (0..deployment.parallel.replicas)
+            .map(|_| PipelineSim::new(profiler.clone(), deployment.parallel.pp))
+            .collect();
+        ClusterSim { deployment, sims }
+    }
+
+    /// Run the workload. Requests are assigned to replicas round-robin;
+    /// each replica runs its own pipeline with `make_sched` schedulers.
+    pub fn run<'a, F>(&self, specs: &[RequestSpec], mut make_sched: F) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + 'a>,
+    {
+        let r = self.sims.len();
+        let slots = self.deployment.max_batch_size();
+        let mut result = ClusterResult {
+            completions: vec![f64::NAN; specs.len()],
+            ..Default::default()
+        };
+        for (ri, sim) in self.sims.iter().enumerate() {
+            let mut local: Vec<RequestSpec> = Vec::new();
+            let mut globals: Vec<usize> = Vec::new();
+            for (g, &s) in specs.iter().enumerate() {
+                if g % r == ri {
+                    local.push(s);
+                    globals.push(g);
+                }
+            }
+            let res = sim.run(&local, slots, &mut make_sched);
+            for (li, &g) in globals.iter().enumerate() {
+                result.completions[g] = res.completions[li];
+            }
+            result.makespan = result.makespan.max(res.makespan);
+            result.per_replica.push(res);
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, ModelConfig, ParallelConfig};
+    use crate::coordinator::sched::{OrcaScheduler, SarathiScheduler};
+    use crate::util::Rng;
+    use crate::workload::zipf_population;
+
+    fn workload(n: usize) -> Vec<RequestSpec> {
+        let mut rng = Rng::new(7);
+        zipf_population(&mut rng, n, 0.4, 1024, 4096, 10.0)
+    }
+
+    fn tp_pp_deployment() -> Deployment {
+        Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+            .with_parallel(ParallelConfig::tp_pp(8, 8))
+            .with_batch_cap(27)
+    }
+
+    fn tp_only_deployment() -> Deployment {
+        Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+            .with_parallel(ParallelConfig::tp_pp(8, 1).with_replicas(8))
+            .with_batch_cap(11)
+    }
+
+    #[test]
+    fn all_requests_complete_across_replicas() {
+        let cluster = ClusterSim::new(tp_only_deployment());
+        let specs = workload(64);
+        let res = cluster.run(&specs, || Box::new(OrcaScheduler::best(11)));
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert_eq!(res.per_replica.len(), 8);
+        let curve = res.completion_curve();
+        assert_eq!(curve.len(), 64);
+        assert!(curve.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    /// §5.3's ordering: SARATHI TP-PP beats TP-only, which beats Orca TP-PP.
+    /// Needs a steady-state workload (requests ≫ in-flight capacity).
+    #[test]
+    fn fig12_scenario_ordering() {
+        let specs = workload(600);
+        let tp_pp = ClusterSim::new(tp_pp_deployment());
+        let orca = tp_pp.run(&specs, || Box::new(OrcaScheduler::best(27)));
+        let sarathi = tp_pp.run(&specs, || Box::new(SarathiScheduler::new(256, 27, 128)));
+        let tp_only = ClusterSim::new(tp_only_deployment())
+            .run(&specs, || Box::new(OrcaScheduler::best(11)));
+        assert!(
+            sarathi.makespan < tp_only.makespan && tp_only.makespan < orca.makespan,
+            "sarathi={} tp_only={} orca={}",
+            sarathi.makespan,
+            tp_only.makespan,
+            orca.makespan
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Multi-GPU runtime simulation (§5.3's methodology):
+//!
+//! * [`pipeline`] — discrete-event pipeline-parallel execution with
+//!   per-stage occupancy tracking and bubble accounting (PB1/PB2/PB3 of
+//!   Fig. 5 all emerge from micro-batch time variance).
+//! * [`cluster`] — replica-level deployment: R independent tp×pp groups
+//!   serving a shared workload (the Fig. 12 comparison set).
+
+pub mod cluster;
+pub mod pipeline;
+
+pub use cluster::{ClusterResult, ClusterSim};
+pub use pipeline::{PipelineResult, PipelineSim, TraceEvent};

@@ -1,0 +1,10 @@
+//! Small self-contained utilities: deterministic PRNG, statistics helpers,
+//! and a miniature property-testing driver (the offline crate set has no
+//! `rand`/`proptest`, so we carry our own).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{mean, percentile, Summary};

@@ -1,0 +1,87 @@
+//! Miniature property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` deterministic seeds; on
+//! failure it performs a simple halving shrink over the seed-derived size
+//! hint and panics with the seed so the case can be replayed exactly.
+
+use super::rng::Rng;
+
+/// A generated test case: the PRNG plus a size hint the generator may use to
+/// scale structure sizes. Shrinking lowers `size` first.
+pub struct Case {
+    pub rng: Rng,
+    pub size: usize,
+    pub seed: u64,
+}
+
+/// Run `f` for `cases` generated cases. `f` returns Err(msg) on property
+/// violation; panics with the failing seed (after shrinking the size hint).
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Case) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = 0x5EED_0000 + i as u64;
+        let size = 1 + (i % 50);
+        let mut case = Case { rng: Rng::new(seed), size, seed };
+        if let Err(msg) = f(&mut case) {
+            // shrink: retry with progressively smaller size hints to report
+            // the smallest reproduction.
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut c = Case { rng: Rng::new(seed), size: s, seed };
+                match f(&mut c) {
+                    Err(m) => {
+                        best = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivially true", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn case_rng_is_deterministic_per_seed() {
+        let mut first = Vec::new();
+        check("collect", 3, |c| {
+            first.push(c.rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("collect", 3, |c| {
+            second.push(c.rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

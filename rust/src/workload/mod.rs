@@ -1,0 +1,119 @@
+//! Workload generation: the request populations the paper evaluates on.
+//!
+//! §5.1 uses fixed (sequence length, P:D ratio) populations; §5.3 samples
+//! sequence lengths from Zipf(θ=0.4) over [1K, 4K] and splits each into
+//! prefill/decode at a fixed P:D ratio of 10.
+
+use crate::util::Rng;
+
+/// A request before it enters the system: prompt length and the number of
+/// output tokens it will generate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestSpec {
+    pub prompt_len: usize,
+    pub decode_len: usize,
+    /// Arrival time, seconds (0.0 ⇒ present at start).
+    pub arrival: f64,
+}
+
+impl RequestSpec {
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.decode_len
+    }
+
+    pub fn pd_ratio(&self) -> f64 {
+        self.prompt_len as f64 / self.decode_len.max(1) as f64
+    }
+}
+
+/// Split a total sequence length into (prefill, decode) tokens satisfying a
+/// target P:D ratio (decode ≥ 1, prefill ≥ 1).
+pub fn split_by_pd_ratio(total: usize, pd: f64) -> (usize, usize) {
+    let d = ((total as f64) / (pd + 1.0)).round().max(1.0) as usize;
+    let d = d.min(total - 1).max(1);
+    (total - d, d)
+}
+
+/// §5.1-style population: `n` identical requests of `seq_len` tokens at the
+/// given P:D ratio, all present at t=0.
+pub fn uniform_population(n: usize, seq_len: usize, pd: f64) -> Vec<RequestSpec> {
+    let (p, d) = split_by_pd_ratio(seq_len, pd);
+    (0..n).map(|_| RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0 }).collect()
+}
+
+/// §5.3-style population: sequence lengths from Zipf(θ) over
+/// [min_len, max_len], split at the fixed P:D ratio.
+pub fn zipf_population(
+    rng: &mut Rng,
+    n: usize,
+    theta: f64,
+    min_len: usize,
+    max_len: usize,
+    pd: f64,
+) -> Vec<RequestSpec> {
+    (0..n)
+        .map(|_| {
+            let total = rng.zipf(theta, min_len as u64, max_len as u64) as usize;
+            let (p, d) = split_by_pd_ratio(total, pd);
+            RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0 }
+        })
+        .collect()
+}
+
+/// Poisson arrivals at `rate` req/s layered over any population.
+pub fn with_poisson_arrivals(rng: &mut Rng, mut pop: Vec<RequestSpec>, rate: f64) -> Vec<RequestSpec> {
+    let mut t = 0.0;
+    for r in pop.iter_mut() {
+        t += rng.exp(rate);
+        r.arrival = t;
+    }
+    pop
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_respects_ratio() {
+        let (p, d) = split_by_pd_ratio(1024, 50.0);
+        assert_eq!(p + d, 1024);
+        let ratio = p as f64 / d as f64;
+        assert!((45.0..56.0).contains(&ratio), "p={p} d={d}");
+    }
+
+    #[test]
+    fn split_degenerate_cases() {
+        // tiny P:D still leaves at least one prefill token
+        let (p, d) = split_by_pd_ratio(16, 0.01);
+        assert!(p >= 1 && d >= 1 && p + d == 16);
+        // huge P:D leaves at least one decode token
+        let (p, d) = split_by_pd_ratio(16, 1e9);
+        assert_eq!((p, d), (15, 1));
+    }
+
+    #[test]
+    fn uniform_population_is_uniform() {
+        let pop = uniform_population(6, 1024, 10.0);
+        assert_eq!(pop.len(), 6);
+        assert!(pop.iter().all(|r| r.total_len() == 1024 && r.arrival == 0.0));
+        assert!(pop.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn zipf_population_within_bounds() {
+        let mut rng = Rng::new(1);
+        let pop = zipf_population(&mut rng, 500, 0.4, 1024, 4096, 10.0);
+        assert!(pop.iter().all(|r| (1024..=4096).contains(&r.total_len())));
+        // P:D ≈ 10 for every request
+        assert!(pop.iter().all(|r| (6.0..16.0).contains(&r.pd_ratio())));
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing() {
+        let mut rng = Rng::new(2);
+        let pop = with_poisson_arrivals(&mut rng, uniform_population(50, 512, 5.0), 10.0);
+        assert!(pop.windows(2).all(|w| w[0].arrival < w[1].arrival));
+        assert!(pop[0].arrival > 0.0);
+    }
+}

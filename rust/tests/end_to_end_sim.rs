@@ -1,0 +1,107 @@
+//! Cross-module integration over the simulated testbed: the paper's
+//! headline numbers, end to end — capacity formula → scheduler → engine →
+//! metrics → figure harness, plus profiler-vs-cost-model consistency on
+//! randomized batch shapes.
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, SchedulerConfig};
+use sarathi::costmodel::{BatchShape, CostModel, DecodeItem, PrefillItem};
+use sarathi::figures::common::{run_engine, steady_population};
+use sarathi::profiler::Profiler;
+use sarathi::util::prop::check;
+
+#[test]
+fn headline_llama13b_a6000_gain() {
+    // Table 4 row 1: L=1K, B=6, P:D=50 → paper gain 1.33×, decode 5.45×.
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 1024);
+    let pop = steady_population(6, 1024, 50.0, 8);
+    let base = run_engine(&d, &SchedulerConfig::baseline(6), &pop);
+    let sar = run_engine(&d, &SchedulerConfig::sarathi(256, 6), &pop);
+    let gain = sar.throughput() / base.throughput();
+    let dsp = base.decode_time_per_token() / sar.decode_time_per_token();
+    assert!((1.05..1.8).contains(&gain), "gain {gain} (paper 1.33)");
+    assert!(dsp > 2.0, "decode speedup {dsp} (paper 5.45)");
+}
+
+#[test]
+fn headline_llama33b_a100_gain() {
+    // Table 4 row 4: L=1K, B=10, P:D=28 → paper gain 1.25×, decode 3.83×.
+    let d = Deployment::new(ModelConfig::llama33b(), GpuConfig::a100(), 1024);
+    assert_eq!(d.max_batch_size(), 10, "capacity formula must give the paper's B");
+    let pop = steady_population(10, 1024, 28.0, 8);
+    let base = run_engine(&d, &SchedulerConfig::baseline(10), &pop);
+    let sar = run_engine(&d, &SchedulerConfig::sarathi(256, 10), &pop);
+    let gain = sar.throughput() / base.throughput();
+    assert!((1.03..1.7).contains(&gain), "gain {gain} (paper 1.25)");
+}
+
+#[test]
+fn optimal_pd_ratio_tracks_c_over_b_minus_1() {
+    // §5.1.3's analytic optimum: sweep P:D for (C=256, B=18) and check the
+    // best gain lands near 256/17 ≈ 15 rather than at the extremes.
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 1024);
+    let mut best = (0.0f64, 0.0f64);
+    for pd in [2.0f64, 5.0, 10.0, 15.0, 30.0, 60.0, 120.0, 200.0] {
+        let pop = steady_population(18, 1024, pd, 4);
+        let base = run_engine(&d, &SchedulerConfig::baseline(18), &pop);
+        let sar = run_engine(&d, &SchedulerConfig::sarathi(256, 18), &pop);
+        let gain = sar.throughput() / base.throughput();
+        if gain > best.1 {
+            best = (pd, gain);
+        }
+    }
+    assert!((5.0..=60.0).contains(&best.0), "optimum at P:D {}", best.0);
+    assert!(best.1 > 1.1, "peak gain {}", best.1);
+}
+
+#[test]
+fn profiler_tracks_cost_model_on_random_shapes() {
+    let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+    let prof = Profiler::build(cm.clone(), 4096, 32);
+    check("profiler-vs-model", 80, |case| {
+        let kind = case.rng.usize(0, 2);
+        let shape = match kind {
+            0 => {
+                let c = case.rng.usize(1, 2048);
+                let h = case.rng.usize(0, 2000);
+                BatchShape::prefill_only(&[(c, h)])
+            }
+            1 => {
+                let lanes = case.rng.usize(1, 32);
+                let kv = case.rng.usize(1, 4000);
+                BatchShape::decode_only(&vec![kv; lanes])
+            }
+            _ => {
+                let c = case.rng.usize(32, 512);
+                let lanes = case.rng.usize(1, 31);
+                let kv = case.rng.usize(64, 3500);
+                BatchShape {
+                    prefill: vec![PrefillItem { chunk: c, history: 0 }],
+                    decode: vec![DecodeItem { kv_len: kv }; lanes],
+                }
+            }
+        };
+        let truth = cm.iteration_time(&shape);
+        let pred = prof.predict(&shape);
+        let err = (pred - truth).abs() / truth;
+        // the paper validates its simulator within 5%; hybrids interpolate
+        // across two tables so allow slightly more there
+        let bound = if kind == 2 { 0.12 } else { 0.06 };
+        if err > bound {
+            return Err(format!("shape {shape:?}: err {err:.3}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn figures_harness_runs_clean() {
+    // every figure module must produce non-empty tables without panicking
+    // (this is the `figures all` path minus CSV output)
+    for (name, f) in sarathi::figures::all() {
+        let tables = f();
+        assert!(!tables.is_empty(), "{name} produced no tables");
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{name}: empty table {}", t.title);
+        }
+    }
+}

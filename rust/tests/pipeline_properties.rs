@@ -1,0 +1,161 @@
+//! Property tests over the pipeline-parallel simulator: randomized
+//! workloads, stage counts and schedulers; the discrete-event invariants
+//! must hold in every case.
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
+use sarathi::coordinator::sched::{OrcaScheduler, SarathiScheduler};
+use sarathi::coordinator::Scheduler;
+use sarathi::costmodel::CostModel;
+use sarathi::profiler::Profiler;
+use sarathi::simulator::{PipelineResult, PipelineSim};
+use sarathi::util::prop::{check, Case};
+use sarathi::workload::RequestSpec;
+
+fn rand_specs(case: &mut Case) -> Vec<RequestSpec> {
+    let n = 2 + case.rng.usize(0, 6 + case.size);
+    (0..n)
+        .map(|_| RequestSpec {
+            prompt_len: case.rng.usize(64, 2048),
+            decode_len: case.rng.usize(1, 64),
+            arrival: 0.0,
+        })
+        .collect()
+}
+
+fn rand_sim(case: &mut Case) -> (PipelineSim, usize) {
+    let pp = *case.rng.choose(&[1usize, 2, 4, 8]);
+    let d = Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+        .with_parallel(ParallelConfig::tp_pp(8, pp))
+        .with_batch_cap(16);
+    let profiler = Profiler::build(CostModel::for_deployment(&d), 4096, 17);
+    (PipelineSim::new(profiler, pp).with_trace(), pp)
+}
+
+fn rand_run(case: &mut Case) -> (PipelineResult, usize, usize) {
+    let (sim, pp) = rand_sim(case);
+    let specs = rand_specs(case);
+    let slots = case.rng.usize(2, 16);
+    let use_sarathi = case.rng.f64() < 0.5;
+    let res = if use_sarathi {
+        let chunk = *case.rng.choose(&[128usize, 256]);
+        sim.run(&specs, slots, || {
+            Box::new(SarathiScheduler::new(chunk, slots, 128)) as Box<dyn Scheduler>
+        })
+    } else {
+        sim.run(&specs, slots, || Box::new(OrcaScheduler::best(slots)) as Box<dyn Scheduler>)
+    };
+    (res, specs.len(), pp)
+}
+
+#[test]
+fn every_request_completes_exactly_once() {
+    check("pipeline completion", 40, |case| {
+        let (res, n, _pp) = rand_run(case);
+        if res.completions.len() != n {
+            return Err("completions length mismatch".into());
+        }
+        if res.completions.iter().any(|t| t.is_nan()) {
+            return Err("request never completed".into());
+        }
+        if res.completions.iter().any(|&t| t < 0.0 || t > res.makespan + 1e-9) {
+            return Err("completion outside [0, makespan]".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stage_executions_never_overlap() {
+    check("per-stage mutual exclusion", 40, |case| {
+        let (res, _n, pp) = rand_run(case);
+        for stage in 0..pp {
+            let mut evs: Vec<(f64, f64)> = res
+                .trace
+                .iter()
+                .filter(|e| e.stage == stage)
+                .map(|e| (e.start, e.end))
+                .collect();
+            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in evs.windows(2) {
+                if w[1].0 + 1e-12 < w[0].1 {
+                    return Err(format!(
+                        "stage {stage}: overlap {:?} then {:?}",
+                        w[0], w[1]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn micro_batches_flow_forward_through_stages() {
+    check("stage ordering per micro-batch", 40, |case| {
+        let (res, _n, pp) = rand_run(case);
+        if pp < 2 {
+            return Ok(());
+        }
+        use std::collections::HashMap;
+        let mut per_mb: HashMap<usize, Vec<(usize, f64)>> = HashMap::new();
+        for e in &res.trace {
+            per_mb.entry(e.micro_batch).or_default().push((e.stage, e.start));
+        }
+        for (mb, mut stages) in per_mb {
+            stages.sort_by_key(|&(s, _)| s);
+            if stages.len() != pp {
+                return Err(format!("mb {mb} visited {} stages, expected {pp}", stages.len()));
+            }
+            for w in stages.windows(2) {
+                if w[1].1 + 1e-12 < w[0].1 {
+                    return Err(format!("mb {mb}: stage {} starts before stage {}", w[1].0, w[0].0));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bubble_accounting_is_consistent() {
+    check("bubble bookkeeping", 40, |case| {
+        let (res, _n, pp) = rand_run(case);
+        if res.total_bubble < -1e-12 {
+            return Err("negative total bubble".into());
+        }
+        if res.bubble_per_request.iter().any(|&b| b < 0.0) {
+            return Err("negative per-request bubble".into());
+        }
+        // busy time == Σ stage executions; bounded by pp × makespan
+        let busy_from_trace: f64 = res.trace.iter().map(|e| e.end - e.start).sum();
+        if (busy_from_trace - res.total_busy).abs() > 1e-6 * res.total_busy.max(1.0) {
+            return Err(format!(
+                "busy mismatch: trace {busy_from_trace} vs {}",
+                res.total_busy
+            ));
+        }
+        if res.total_busy > pp as f64 * res.makespan + 1e-6 {
+            return Err("busy exceeds stages × makespan".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_stage_is_bubble_free() {
+    check("pp=1 has zero bubbles", 25, |case| {
+        let d = Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+            .with_parallel(ParallelConfig::tp_pp(8, 1))
+            .with_batch_cap(8);
+        let profiler = Profiler::build(CostModel::for_deployment(&d), 4096, 9);
+        let sim = PipelineSim::new(profiler, 1);
+        let specs = rand_specs(case);
+        let res = sim.run(&specs, 8, || {
+            Box::new(OrcaScheduler::best(8)) as Box<dyn Scheduler>
+        });
+        if res.total_bubble != 0.0 {
+            return Err(format!("pp=1 bubble {}", res.total_bubble));
+        }
+        Ok(())
+    });
+}

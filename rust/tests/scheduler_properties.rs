@@ -1,0 +1,222 @@
+//! Property tests over the coordinator: randomized workloads, every
+//! scheduler, checked against the structural invariants of §4 on every
+//! iteration (the hand-rolled prop driver stands in for proptest — see
+//! util::prop).
+
+use sarathi::config::{GpuConfig, ModelConfig};
+use sarathi::coordinator::sched::{OrcaScheduler, RequestLevelScheduler, SarathiScheduler};
+use sarathi::coordinator::{
+    Batch, Engine, Executor, KvManager, RequestPool, Scheduler, SimExecutor, StepOutcome,
+};
+use sarathi::costmodel::CostModel;
+use sarathi::util::prop::{check, Case};
+use sarathi::workload::RequestSpec;
+
+fn rand_workload(case: &mut Case) -> Vec<RequestSpec> {
+    let n = 1 + case.rng.usize(0, 3 + case.size);
+    (0..n)
+        .map(|_| RequestSpec {
+            prompt_len: case.rng.usize(1, 600),
+            decode_len: case.rng.usize(1, 40),
+            arrival: case.rng.f64() * 0.5,
+        })
+        .collect()
+}
+
+fn make_sched(case: &mut Case, max_batch: usize) -> (Box<dyn Scheduler>, &'static str) {
+    match case.rng.usize(0, 3) {
+        0 => (Box::new(RequestLevelScheduler::new(max_batch)), "request-level"),
+        1 => (Box::new(OrcaScheduler::best(max_batch)), "orca-best"),
+        2 => (Box::new(OrcaScheduler::worst(max_batch)), "orca-worst"),
+        _ => {
+            let chunk = *case.rng.choose(&[64usize, 128, 256, 512]);
+            (Box::new(SarathiScheduler::new(chunk, max_batch, 128)), "sarathi")
+        }
+    }
+}
+
+/// Executor wrapper that validates every scheduled batch before running it.
+struct ValidatingExec {
+    inner: SimExecutor,
+    max_batch: usize,
+    batches: Vec<(usize, usize, usize)>, // (chunks, prefill_tokens, decodes)
+}
+
+impl Executor for ValidatingExec {
+    fn execute(&mut self, batch: &Batch, pool: &RequestPool) -> StepOutcome {
+        batch.validate(pool, self.max_batch).expect("invalid batch");
+        self.batches.push((batch.n_prefill_chunks(), batch.prefill_tokens(), batch.n_decodes()));
+        self.inner.execute(batch, pool)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[test]
+fn every_scheduler_produces_only_valid_batches_and_completes() {
+    check("valid batches, full completion", 60, |case| {
+        let specs = rand_workload(case);
+        let max_batch = case.rng.usize(1, 8);
+        let (sched, _name) = make_sched(case, max_batch);
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let exec = ValidatingExec { inner: SimExecutor::new(cm), max_batch, batches: vec![] };
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::new(max_batch),
+            sched,
+            Box::new(exec),
+        );
+        e.run();
+        if !e.pool.all_complete() {
+            return Err("engine finished with incomplete requests".into());
+        }
+        // token conservation
+        let p_expect: usize = specs.iter().map(|s| s.prompt_len).sum();
+        let d_expect: usize = specs.iter().map(|s| s.decode_len - 1).sum();
+        if e.metrics.total_prefill_tokens() != p_expect {
+            return Err(format!(
+                "prefill tokens {} != {}",
+                e.metrics.total_prefill_tokens(),
+                p_expect
+            ));
+        }
+        if e.metrics.total_decode_tokens() != d_expect {
+            return Err(format!(
+                "decode tokens {} != {}",
+                e.metrics.total_decode_tokens(),
+                d_expect
+            ));
+        }
+        // every slot returned
+        if e.kv.available() != max_batch {
+            return Err("leaked KV slots".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sarathi_batches_are_decode_maximal_and_tile_bounded() {
+    check("sarathi composition invariants", 60, |case| {
+        let specs = rand_workload(case);
+        let max_batch = case.rng.usize(2, 10);
+        let chunk = *case.rng.choose(&[128usize, 256, 512]);
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let exec = ValidatingExec { inner: SimExecutor::new(cm), max_batch, batches: vec![] };
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::new(max_batch),
+            Box::new(SarathiScheduler::new(chunk, max_batch, 128)),
+            Box::new(exec),
+        );
+        e.run();
+        let exec = e.executor.as_any().downcast_ref::<ValidatingExec>().unwrap();
+        for &(chunks, p_tokens, decodes) in &exec.batches {
+            // §4.3: at most ONE prefill chunk per batch
+            if chunks > 1 {
+                return Err(format!("{chunks} prefill chunks in one batch"));
+            }
+            // §4.4: fused token count never exceeds the chunk budget C
+            if chunks == 1 && p_tokens + decodes > chunk {
+                return Err(format!(
+                    "fused tokens {} exceed chunk budget {chunk}",
+                    p_tokens + decodes
+                ));
+            }
+            // piggyback cap: decodes ≤ B−1 when a chunk is present
+            if chunks == 1 && decodes > max_batch - 1 {
+                return Err(format!("{decodes} piggybacked decodes with B={max_batch}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn orca_worst_never_mixes_phases() {
+    check("orca-worst phase separation", 40, |case| {
+        let specs = rand_workload(case);
+        let max_batch = case.rng.usize(1, 8);
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let exec = ValidatingExec { inner: SimExecutor::new(cm), max_batch, batches: vec![] };
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::new(max_batch),
+            Box::new(OrcaScheduler::worst(max_batch)),
+            Box::new(exec),
+        );
+        e.run();
+        let exec = e.executor.as_any().downcast_ref::<ValidatingExec>().unwrap();
+        for &(chunks, _p, decodes) in &exec.batches {
+            if chunks > 0 && decodes > 0 {
+                return Err("orca-worst mixed prefill and decode".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn completion_times_ordered_after_arrivals() {
+    check("completion after arrival, first token before completion", 40, |case| {
+        let specs = rand_workload(case);
+        let max_batch = case.rng.usize(1, 6);
+        let (sched, _n) = make_sched(case, max_batch);
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::new(max_batch),
+            sched,
+            Box::new(SimExecutor::new(cm)),
+        );
+        e.run();
+        for r in e.pool.iter() {
+            let done = r.completed_at.ok_or("missing completion")?;
+            let first = r.first_token_at.ok_or("missing first token")?;
+            if done + 1e-12 < r.arrival {
+                return Err(format!("completed {done} before arrival {}", r.arrival));
+            }
+            if first > done + 1e-12 {
+                return Err("first token after completion".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn metrics_attribution_is_nonnegative_and_bounded() {
+    check("marginal decode attribution sane", 40, |case| {
+        let specs = rand_workload(case);
+        let max_batch = case.rng.usize(2, 8);
+        let chunk = *case.rng.choose(&[128usize, 256]);
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::new(max_batch),
+            Box::new(SarathiScheduler::new(chunk, max_batch, 128)),
+            Box::new(SimExecutor::new(cm)),
+        );
+        e.run();
+        for rec in &e.metrics.iterations {
+            if rec.elapsed <= 0.0 {
+                return Err("non-positive iteration time".into());
+            }
+            if let Some(alone) = rec.prefill_alone {
+                if alone > rec.elapsed + 1e-12 {
+                    return Err(format!(
+                        "prefill-alone {alone} exceeds hybrid {}",
+                        rec.elapsed
+                    ));
+                }
+            }
+        }
+        let d = e.metrics.decode_time_per_token();
+        if d < 0.0 {
+            return Err("negative decode time per token".into());
+        }
+        Ok(())
+    });
+}
