@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Local CI gauntlet — mirrors .github/workflows/ci.yml.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== rustfmt =="
+cargo fmt --all -- --check
+
+echo "== clippy =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== build (tier 1) =="
+cargo build --release
+
+echo "== test (tier 1) =="
+cargo test -q
+
+echo "CI gauntlet passed."

@@ -1,7 +1,7 @@
 //! Quickstart: load the AOT-compiled tiny model through PJRT and generate
 //! text greedily — the smallest possible end-to-end use of the stack.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     make artifacts && cargo run --release --features pjrt --example quickstart
 //!
 //! The "tokenizer" is byte-level (vocab 256), so any ASCII prompt works;
 //! the model has synthetic weights, so the continuation is gibberish — the
@@ -11,8 +11,9 @@
 use std::path::PathBuf;
 
 use sarathi::runtime::ModelRuntime;
+use sarathi::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = PathBuf::from(
         std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
     );

@@ -2,7 +2,7 @@
 //! model through PJRT and serve a batched request trace under each
 //! scheduling policy, reporting real latency/throughput.
 //!
-//!     make artifacts && cargo run --release --example serve_trace
+//!     make artifacts && cargo run --release --features pjrt --example serve_trace
 //!
 //! All three layers compose here: Pallas kernels (inside the AOT HLO), the
 //! JAX model graph, and the rust coordinator scheduling real decode-maximal
@@ -13,10 +13,11 @@ use std::path::PathBuf;
 use sarathi::config::{SchedulerConfig, SchedulerKind};
 use sarathi::coordinator::{make_scheduler, Engine, KvManager, RequestPool};
 use sarathi::runtime::{GenRequest, ModelRuntime, RealExecutor};
+use sarathi::util::error::Result;
 use sarathi::util::{Rng, Summary};
 use sarathi::workload::RequestSpec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = PathBuf::from(
         std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
     );
@@ -53,7 +54,15 @@ fn main() -> anyhow::Result<()> {
         let rt = ModelRuntime::load(&dir)?;
         let slots = rt.manifest.model.usable_slots();
         let chunk = rt.manifest.max_chunk();
-        let cfg = SchedulerConfig { kind, chunk_size: chunk, tile_align: chunk, max_batch: slots };
+        let cfg = SchedulerConfig {
+            kind,
+            chunk_size: chunk,
+            tile_align: chunk,
+            max_batch: slots,
+            token_budget: chunk.max(slots),
+            block_size: 0,
+            watermark_blocks: 0,
+        };
         let gen: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
         let mut engine = Engine::new(
             RequestPool::from_specs(&specs),
@@ -82,7 +91,7 @@ fn main() -> anyhow::Result<()> {
 
         let exec = engine.executor.as_any().downcast_ref::<RealExecutor>().unwrap();
         if let Some(e) = &exec.error {
-            anyhow::bail!("runtime error under {}: {e}", cfg.kind.name());
+            sarathi::bail!("runtime error under {}: {e}", cfg.kind.name());
         }
         let outputs: Vec<Vec<i32>> = exec.requests.iter().map(|g| g.generated.clone()).collect();
         match &reference {

@@ -78,6 +78,31 @@ impl Deployment {
         let per_req = self.max_seq_len as f64 * self.kv_bytes_per_token_per_gpu();
         ((free * self.kv_mem_fraction / per_req).floor() as usize).max(1)
     }
+
+    /// Total KV capacity in **tokens** under the same memory budget the
+    /// §4.3.1 slot formula divides up. The paged allocator spends this
+    /// token pool directly instead of reserving `max_seq_len` per request,
+    /// which is why it admits strictly more concurrent requests whenever
+    /// actual sequences run shorter than the worst case. (With a
+    /// `batch_cap` override the pool is the cap's worst-case footprint, so
+    /// slot and paged accounting stay comparable.)
+    pub fn kv_capacity_tokens(&self) -> usize {
+        if let Some(cap) = self.batch_cap {
+            return cap * self.max_seq_len;
+        }
+        let free = self.gpu.mem_bytes - self.weight_bytes_per_gpu();
+        if free <= 0.0 {
+            return self.max_seq_len;
+        }
+        ((free * self.kv_mem_fraction / self.kv_bytes_per_token_per_gpu()).floor() as usize)
+            .max(self.max_seq_len)
+    }
+
+    /// Number of paged KV blocks of `block_size` tokens that fit the
+    /// deployment's KV memory budget.
+    pub fn kv_blocks(&self, block_size: usize) -> usize {
+        (self.kv_capacity_tokens() / block_size.max(1)).max(1)
+    }
 }
 
 #[cfg(test)]
@@ -129,5 +154,17 @@ mod tests {
         // GPT-3 never fits one A100 — formula must degrade gracefully.
         let d = Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 2048);
         assert_eq!(d.max_batch_size(), 1);
+    }
+
+    #[test]
+    fn token_pool_is_consistent_with_slot_formula() {
+        let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 1024);
+        let tokens = d.kv_capacity_tokens();
+        // the slot formula is exactly the token pool divided into
+        // worst-case reservations
+        assert_eq!(tokens / d.max_seq_len, d.max_batch_size());
+        // block pool covers the same memory
+        assert_eq!(d.kv_blocks(16), tokens / 16);
+        assert!(d.kv_blocks(16) * 16 <= tokens);
     }
 }

@@ -1,6 +1,8 @@
-//! Scheduler policy configuration.
+//! Scheduler policy configuration: which policy, its chunk/budget sizing,
+//! and the paged-KV knobs (block size, admission watermark).
 
-/// Which batching policy the engine runs (§5's comparison set).
+/// Which batching policy the engine runs (§5's comparison set plus the
+/// Sarathi-Serve-style hybrid).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedulerKind {
     /// FasterTransformer-style request-level scheduling: prefill-only then
@@ -12,8 +14,12 @@ pub enum SchedulerKind {
     /// Orca worst case: all requests enter/leave together — degenerates to
     /// prefill-only/decode-only batches.
     OrcaWorst,
-    /// SARATHI: chunked-prefills + decode-maximal batching.
+    /// SARATHI: chunked-prefills + decode-maximal batching (one prefill
+    /// chunk at a time).
     Sarathi,
+    /// Sarathi-Serve-style stall-free batching: per-iteration token budget
+    /// shared by all running prefill chunks + decodes, over paged KV.
+    Hybrid,
 }
 
 impl SchedulerKind {
@@ -23,7 +29,21 @@ impl SchedulerKind {
             SchedulerKind::OrcaBest => "orca-best",
             SchedulerKind::OrcaWorst => "orca-worst",
             SchedulerKind::Sarathi => "sarathi",
+            SchedulerKind::Hybrid => "hybrid",
         }
+    }
+
+    /// Parse a CLI name (the inverse of [`name`](Self::name); "baseline"
+    /// is accepted for request-level).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "request-level" | "baseline" => SchedulerKind::RequestLevel,
+            "orca-best" => SchedulerKind::OrcaBest,
+            "orca-worst" => SchedulerKind::OrcaWorst,
+            "sarathi" => SchedulerKind::Sarathi,
+            "hybrid" => SchedulerKind::Hybrid,
+            _ => return None,
+        })
     }
 }
 
@@ -35,24 +55,95 @@ pub struct SchedulerConfig {
     /// Tile size the fused token count is aligned to (§4.4: the prefill
     /// chunk shrinks so chunk + piggybacked decodes is a tile multiple).
     pub tile_align: usize,
-    /// Maximum batch size B (from the §4.3.1 capacity formula).
+    /// Maximum batch size B (from the §4.3.1 capacity formula for the slot
+    /// policies; a sequence cap for the hybrid policy).
     pub max_batch: usize,
+    /// Hybrid: per-iteration budget on fused tokens (prefill chunk tokens
+    /// + one per decode lane). Ignored by other policies.
+    pub token_budget: usize,
+    /// Paged-KV block size in tokens; 0 means the degenerate
+    /// whole-request-slot layout (the seed semantics).
+    pub block_size: usize,
+    /// Hybrid admission watermark: free blocks reserved for decode growth.
+    pub watermark_blocks: usize,
 }
 
 impl SchedulerConfig {
     pub fn sarathi(chunk_size: usize, max_batch: usize) -> Self {
-        SchedulerConfig { kind: SchedulerKind::Sarathi, chunk_size, tile_align: 128, max_batch }
+        SchedulerConfig {
+            kind: SchedulerKind::Sarathi,
+            chunk_size,
+            tile_align: 128,
+            max_batch,
+            token_budget: 0,
+            block_size: 0,
+            watermark_blocks: 0,
+        }
     }
 
     pub fn baseline(max_batch: usize) -> Self {
-        SchedulerConfig { kind: SchedulerKind::RequestLevel, chunk_size: 0, tile_align: 128, max_batch }
+        SchedulerConfig { kind: SchedulerKind::RequestLevel, ..Self::sarathi(0, max_batch) }
     }
 
     pub fn orca_best(max_batch: usize) -> Self {
-        SchedulerConfig { kind: SchedulerKind::OrcaBest, chunk_size: 0, tile_align: 128, max_batch }
+        SchedulerConfig { kind: SchedulerKind::OrcaBest, ..Self::sarathi(0, max_batch) }
     }
 
     pub fn orca_worst(max_batch: usize) -> Self {
-        SchedulerConfig { kind: SchedulerKind::OrcaWorst, chunk_size: 0, tile_align: 128, max_batch }
+        SchedulerConfig { kind: SchedulerKind::OrcaWorst, ..Self::sarathi(0, max_batch) }
+    }
+
+    /// Stall-free token-budget policy. Pair with a paged KV pool via
+    /// [`with_block_size`](Self::with_block_size) to lift admission above
+    /// the worst-case slot formula.
+    pub fn hybrid(token_budget: usize, max_batch: usize) -> Self {
+        SchedulerConfig {
+            kind: SchedulerKind::Hybrid,
+            chunk_size: 0,
+            tile_align: 128,
+            max_batch,
+            token_budget,
+            block_size: 0,
+            watermark_blocks: 0,
+        }
+    }
+
+    pub fn with_block_size(mut self, block_size: usize) -> Self {
+        self.block_size = block_size;
+        self
+    }
+
+    pub fn with_watermark(mut self, watermark_blocks: usize) -> Self {
+        self.watermark_blocks = watermark_blocks;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in [
+            SchedulerKind::RequestLevel,
+            SchedulerKind::OrcaBest,
+            SchedulerKind::OrcaWorst,
+            SchedulerKind::Sarathi,
+            SchedulerKind::Hybrid,
+        ] {
+            assert_eq!(SchedulerKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SchedulerKind::parse("baseline"), Some(SchedulerKind::RequestLevel));
+        assert_eq!(SchedulerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn hybrid_builder_sets_paging_knobs() {
+        let c = SchedulerConfig::hybrid(256, 16).with_block_size(32).with_watermark(2);
+        assert_eq!(c.kind, SchedulerKind::Hybrid);
+        assert_eq!(c.token_budget, 256);
+        assert_eq!(c.block_size, 32);
+        assert_eq!(c.watermark_blocks, 2);
     }
 }

@@ -110,7 +110,7 @@ impl Batch {
         }
         for (req, start, len) in self.prefill_items() {
             let r = pool.get(req);
-            if r.slot.is_none() {
+            if !r.is_admitted() {
                 return Err(format!("prefill of unadmitted request {req}"));
             }
             if len == 0 {
@@ -128,7 +128,7 @@ impl Batch {
         }
         for req in self.decode_items() {
             let r = pool.get(req);
-            if r.slot.is_none() {
+            if !r.is_admitted() {
                 return Err(format!("decode of unadmitted request {req}"));
             }
             if !r.is_decode_ready() {
@@ -153,9 +153,9 @@ mod tests {
         p.push(RequestSpec { prompt_len: 100, decode_len: 5, arrival: 0.0 });
         p.push(RequestSpec { prompt_len: 50, decode_len: 5, arrival: 0.0 });
         p.push(RequestSpec { prompt_len: 10, decode_len: 5, arrival: 0.0 });
-        p.admit(0, 0, 0.0);
+        p.admit(0, vec![0], 0.0);
         p.get_mut(0).prefilled = 32;
-        p.admit(1, 1, 0.0);
+        p.admit(1, vec![1], 0.0);
         p.get_mut(1).prefilled = 50;
         p.get_mut(1).decoded = 2;
         p

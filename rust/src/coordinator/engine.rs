@@ -3,6 +3,23 @@
 //! Generic over [`Executor`] so the same loop drives (a) the calibrated
 //! cost-model simulator for the paper's large-model experiments and (b) the
 //! real PJRT runtime serving the tiny model (rust/src/runtime).
+//!
+//! The engine owns the token-granular KV bookkeeping: after each iteration
+//! it grows every touched request's block table to cover the KV it now
+//! holds (plus a one-token lookahead for its next step), and when the pool
+//! runs dry it **preempts** — the most-recently-arrived admitted request is
+//! swapped out (blocks released, progress retained) and re-queued FCFS.
+//! Schedulers stay oblivious to growth; only their admission gate is
+//! memory-aware. Under the degenerate block size a request's single block
+//! always covers its sequence, so growth is a no-op and preemption never
+//! fires — the seed behavior.
+//!
+//! Modeling caveat: the swap itself is currently FREE in simulated time —
+//! a victim loses its blocks and later reclaims them with no transfer or
+//! recompute cost, so preemption-heavy runs understate the real penalty.
+//! Costing the swap (KV bytes over host bandwidth, or a recompute
+//! variant) is a ROADMAP open item; preemption counts in [`Metrics`] make
+//! the exposure visible per run.
 
 use super::batch::Batch;
 use super::kv::KvManager;
@@ -98,7 +115,6 @@ impl<'a> Engine<'a> {
 
     /// Run one iteration. Returns false when there is no work left at all.
     pub fn step(&mut self) -> bool {
-        let max_batch = self.kv.capacity();
         let batch = self.scheduler.schedule(&mut self.pool, &mut self.kv, self.now);
         if batch.is_empty() {
             // idle: jump to the next arrival if one exists
@@ -109,29 +125,44 @@ impl<'a> Engine<'a> {
             return false;
         }
         if self.validate {
-            if let Err(e) = batch.validate(&self.pool, max_batch.max(batch.len())) {
+            // a legal batch touches each ADMITTED request at most once, so
+            // the admitted count is the tight size bound in both the
+            // degenerate (slots == admitted cap) and paged layouts — the
+            // seed's kv.capacity() would be the meaningless block count
+            // under paging
+            let max_batch = self.pool.active_count();
+            if let Err(e) = batch.validate(&self.pool, max_batch) {
                 panic!("scheduler {} produced invalid batch: {e}", self.scheduler.name());
             }
         }
         let outcome = self.executor.execute(&batch, &self.pool);
         let shape = batch.shape(&self.pool);
-        self.apply(&batch);
+        // the iteration's tokens/completions land at now + elapsed — NOT at
+        // `now` (the seed stamped them one iteration early, skewing every
+        // latency sample)
+        let done_at = self.now + outcome.elapsed;
+        let preemptions = self.apply(&batch, done_at);
         self.metrics.record(IterationRecord {
             started_at: self.now,
             elapsed: outcome.elapsed,
             shape,
             prefill_alone: outcome.prefill_alone,
             breakdown: outcome.breakdown,
+            kv_blocks_in_use: self.kv.allocated(),
+            kv_blocks_total: self.kv.capacity(),
+            n_active: self.pool.active_count(),
+            preemptions,
+            kv_frag_tokens: self.kv.internal_fragmentation(self.pool.live_kv_tokens()),
         });
-        self.now += outcome.elapsed;
+        self.now = done_at;
         true
     }
 
-    /// Advance request state for an executed batch and release slots of
-    /// completed requests.
-    fn apply(&mut self, batch: &Batch) {
-        let done_at = self.now; // iteration results land at now + elapsed,
-                                // but relative ordering only needs monotone time
+    /// Advance request state for an executed batch: progress counters,
+    /// completions (blocks released), then token-granular KV growth with
+    /// preemption as the fallback when the pool runs dry. Returns the
+    /// number of preemption events.
+    fn apply(&mut self, batch: &Batch, done_at: f64) -> usize {
         for (req, _start, len) in batch.prefill_items() {
             let r = self.pool.get_mut(req);
             r.prefilled += len;
@@ -147,16 +178,57 @@ impl<'a> Engine<'a> {
             r.decoded += 1;
             r.token_times.push(done_at);
         }
+        // completions first: their blocks fund the growth below
         for req in batch.requests() {
             let r = self.pool.get(req);
             if r.completed_at.is_none()
                 && r.prefilled == r.spec.prompt_len
                 && r.decoded >= r.spec.decode_len
             {
-                let slot = self.pool.complete(req, done_at);
-                self.kv.release(slot);
+                let blocks = self.pool.complete(req, done_at);
+                self.kv.release_seq(blocks);
             }
         }
+        // token-granular growth: every surviving touched request's block
+        // table must cover its KV plus one token of lookahead for the next
+        // step. Degenerate blocks make this a no-op.
+        let mut preemptions = 0;
+        for req in batch.requests() {
+            loop {
+                let r = self.pool.get(req);
+                if !r.is_admitted() {
+                    break; // completed above, or preempted as a victim
+                }
+                let target = r.kv_len() + 1;
+                if self.kv.extend_to(&mut self.pool.get_mut(req).blocks, target) {
+                    break;
+                }
+                // out of blocks: preempt the most-recently-arrived OTHER
+                // admitted request (LIFO victims, FCFS resume); fall back
+                // to self-preemption when this request is the only one left
+                let victim = self
+                    .pool
+                    .active_ids()
+                    .iter()
+                    .copied()
+                    .filter(|&v| v != req)
+                    .max_by(|&a, &b| {
+                        let (ra, rb) = (self.pool.get(a), self.pool.get(b));
+                        ra.arrival
+                            .partial_cmp(&rb.arrival)
+                            .unwrap()
+                            .then(a.cmp(&b))
+                    })
+                    .unwrap_or(req);
+                let blocks = self.pool.preempt(victim, done_at);
+                self.kv.release_seq(blocks);
+                preemptions += 1;
+                if victim == req {
+                    break; // swapped itself out; it resumes via admission
+                }
+            }
+        }
+        preemptions
     }
 
     /// Drive to completion of every request.
@@ -181,7 +253,9 @@ impl<'a> Engine<'a> {
 mod tests {
     use super::*;
     use crate::config::{GpuConfig, ModelConfig};
-    use crate::coordinator::sched::{OrcaScheduler, RequestLevelScheduler, SarathiScheduler};
+    use crate::coordinator::sched::{
+        HybridScheduler, OrcaScheduler, RequestLevelScheduler, SarathiScheduler,
+    };
     use crate::workload::{uniform_population, RequestSpec};
 
     fn sim() -> Box<SimExecutor> {
@@ -203,10 +277,12 @@ mod tests {
         for r in e.pool.iter() {
             assert_eq!(r.decoded, r.spec.decode_len);
             assert_eq!(r.prefilled, r.spec.prompt_len);
-            assert!(r.slot.is_none());
+            assert!(r.blocks.is_empty());
         }
-        // all slots returned
+        // all blocks returned
         assert_eq!(e.kv.available(), 6);
+        // degenerate mode never preempts
+        assert_eq!(e.metrics.preemptions, 0);
     }
 
     #[test]
@@ -221,6 +297,7 @@ mod tests {
             Box::new(OrcaScheduler::best(4)),
             Box::new(OrcaScheduler::worst(4)),
             Box::new(SarathiScheduler::new(128, 4, 128)),
+            Box::new(HybridScheduler::new(128, 4, 0)),
         ] {
             let e = run_with(sched, &pop, 4);
             assert_eq!(e.metrics.total_prefill_tokens(), total_p);
@@ -288,5 +365,49 @@ mod tests {
             (s.percentile(95.0) - s.percentile(5.0)) / s.mean()
         };
         assert!(spread(&sar) < spread(&orca), "{} !< {}", spread(&sar), spread(&orca));
+    }
+
+    #[test]
+    fn tokens_are_stamped_at_iteration_end() {
+        // the satellite fix: a single request's first token must land at
+        // now + elapsed of the iteration that produced it, not at its start
+        let specs = [RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 }];
+        let e = run_with(Box::new(SarathiScheduler::new(128, 1, 128)), &specs, 1);
+        let r = e.pool.get(0);
+        let it0 = &e.metrics.iterations[0];
+        assert!((r.first_token_at.unwrap() - (it0.started_at + it0.elapsed)).abs() < 1e-12);
+        // completion coincides with the END of the last iteration
+        let last = e.metrics.iterations.last().unwrap();
+        assert!((r.completed_at.unwrap() - (last.started_at + last.elapsed)).abs() < 1e-12);
+        // and every token time is strictly positive (none at t=0)
+        assert!(r.token_times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn paged_engine_preempts_and_still_completes() {
+        // 4 requests × (32 prompt + 40 decode) = 288 peak KV tokens over a
+        // 12-block × 16-token pool (192 tokens): decode growth must force
+        // preemptions, yet everyone finishes and all blocks come back.
+        let specs: Vec<RequestSpec> = (0..4)
+            .map(|_| RequestSpec { prompt_len: 32, decode_len: 40, arrival: 0.0 })
+            .collect();
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::paged(12, 16),
+            Box::new(HybridScheduler::new(64, 8, 0)),
+            sim(),
+        );
+        e.run();
+        assert!(e.pool.all_complete());
+        assert!(e.metrics.preemptions > 0, "undersized pool must preempt");
+        assert_eq!(e.kv.available(), 12, "all blocks returned");
+        for r in e.pool.iter() {
+            assert_eq!(r.decoded, r.spec.decode_len);
+        }
+        // token conservation holds under preemption (swap, not recompute)
+        let total_p: usize = specs.iter().map(|s| s.prompt_len).sum();
+        let total_d: usize = specs.iter().map(|s| s.decode_len - 1).sum();
+        assert_eq!(e.metrics.total_prefill_tokens(), total_p);
+        assert_eq!(e.metrics.total_decode_tokens(), total_d);
     }
 }

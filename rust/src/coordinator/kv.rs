@@ -1,25 +1,69 @@
-//! KV-cache slot manager.
+//! Token-granular paged KV-cache block allocator.
 //!
-//! Capacity comes from the §4.3.1 formula (see
-//! [`crate::config::Deployment::max_batch_size`]); this module owns the
-//! slot free-list and the invariants: a slot is held by at most one request,
-//! and every admitted request holds exactly one slot.
+//! The seed reserved one whole-request *slot* per admitted request, sized
+//! for the worst-case sequence length (§4.3.1) — which caps concurrency at
+//! `B = M / (L_max · m_kv)` even when actual sequences are far shorter.
+//! This module replaces slots with fixed-size **blocks** of `block_size`
+//! tokens (vLLM-style paging): a request holds a growing block table,
+//! blocks are allocated as its KV actually grows (chunked prefill, then one
+//! token per decode), and released on completion or preemption.
+//!
+//! The old slot semantics are the degenerate case `block_size =
+//! DEGENERATE_BLOCK` (one block covers any sequence): [`KvManager::new`]
+//! builds exactly that, so every seed experiment reproduces unchanged.
+//!
+//! Invariants (enforced with loud panics, exercised by
+//! `tests/kv_properties.rs`):
+//! * a block is held by at most one owner at a time,
+//! * `allocated() + available() == capacity()` always,
+//! * releasing a free block (double free) panics.
+
+/// Block size that makes one block cover any sequence — the seed's
+/// whole-request slot semantics.
+pub const DEGENERATE_BLOCK: usize = usize::MAX;
 
 #[derive(Clone, Debug)]
 pub struct KvManager {
-    capacity: usize,
+    /// Tokens per block.
+    block_size: usize,
+    /// Total blocks in the pool.
+    num_blocks: usize,
+    /// Free block ids (stack; lowest ids on top).
     free: Vec<usize>,
-    /// in_use[slot] = true while allocated.
+    /// in_use[block] = true while allocated.
     in_use: Vec<bool>,
 }
 
 impl KvManager {
+    /// Degenerate (seed-compatible) pool: `capacity` whole-request slots,
+    /// i.e. blocks big enough that any sequence needs exactly one.
     pub fn new(capacity: usize) -> Self {
-        KvManager { capacity, free: (0..capacity).rev().collect(), in_use: vec![false; capacity] }
+        Self::paged(capacity, DEGENERATE_BLOCK)
     }
 
+    /// Paged pool: `num_blocks` blocks of `block_size` tokens each.
+    pub fn paged(num_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block size must be positive");
+        KvManager {
+            block_size,
+            num_blocks,
+            free: (0..num_blocks).rev().collect(),
+            in_use: vec![false; num_blocks],
+        }
+    }
+
+    /// Total blocks in the pool.
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.num_blocks
+    }
+
+    /// Total token capacity of the pool (saturating in degenerate mode).
+    pub fn capacity_tokens(&self) -> usize {
+        self.num_blocks.saturating_mul(self.block_size)
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
     }
 
     pub fn available(&self) -> usize {
@@ -27,27 +71,83 @@ impl KvManager {
     }
 
     pub fn allocated(&self) -> usize {
-        self.capacity - self.free.len()
+        self.num_blocks - self.free.len()
     }
 
-    /// Allocate a slot, lowest-index first.
+    /// Blocks required to hold `tokens` KV entries (0 for 0 tokens;
+    /// overflow-safe for the degenerate block size).
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        if tokens == 0 {
+            0
+        } else {
+            1 + (tokens - 1) / self.block_size
+        }
+    }
+
+    /// Allocate one block, lowest-index first.
     pub fn alloc(&mut self) -> Option<usize> {
-        let slot = self.free.pop()?;
-        debug_assert!(!self.in_use[slot]);
-        self.in_use[slot] = true;
-        Some(slot)
+        let block = self.free.pop()?;
+        debug_assert!(!self.in_use[block]);
+        self.in_use[block] = true;
+        Some(block)
     }
 
-    /// Release a slot. Panics on double-free — that is a scheduler bug we
-    /// want loud.
-    pub fn release(&mut self, slot: usize) {
-        assert!(self.in_use[slot], "double free of KV slot {slot}");
-        self.in_use[slot] = false;
-        self.free.push(slot);
+    /// Allocate `n` blocks all-or-nothing.
+    pub fn alloc_n(&mut self, n: usize) -> Option<Vec<usize>> {
+        if self.free.len() < n {
+            return None;
+        }
+        Some((0..n).map(|_| self.alloc().expect("checked free count")).collect())
     }
 
-    pub fn is_allocated(&self, slot: usize) -> bool {
-        self.in_use[slot]
+    /// Grow `blocks` until it covers `tokens` KV entries. All-or-nothing:
+    /// on failure the table is left untouched and `false` is returned.
+    pub fn extend_to(&mut self, blocks: &mut Vec<usize>, tokens: usize) -> bool {
+        let need = self.blocks_needed(tokens);
+        if blocks.len() >= need {
+            return true;
+        }
+        match self.alloc_n(need - blocks.len()) {
+            Some(more) => {
+                blocks.extend(more);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one block. Panics on double-free — that is a scheduler bug
+    /// we want loud.
+    pub fn release(&mut self, block: usize) {
+        assert!(self.in_use[block], "double free of KV block {block}");
+        self.in_use[block] = false;
+        self.free.push(block);
+    }
+
+    /// Release a whole block table (completion or preemption).
+    pub fn release_seq(&mut self, blocks: Vec<usize>) {
+        for b in blocks {
+            self.release(b);
+        }
+    }
+
+    pub fn is_allocated(&self, block: usize) -> bool {
+        self.in_use[block]
+    }
+
+    /// True for the seed-compatible whole-request-slot layout.
+    pub fn is_degenerate(&self) -> bool {
+        self.block_size == DEGENERATE_BLOCK
+    }
+
+    /// Internal fragmentation: tokens of allocated-but-unused capacity,
+    /// given the number of live KV tokens across all owners. Reports 0 in
+    /// degenerate mode — the sentinel block size is nominal, not memory.
+    pub fn internal_fragmentation(&self, live_tokens: usize) -> usize {
+        if self.is_degenerate() {
+            return 0;
+        }
+        self.allocated().saturating_mul(self.block_size).saturating_sub(live_tokens)
     }
 }
 
@@ -84,5 +184,69 @@ mod tests {
         let mut kv = KvManager::new(4);
         assert_eq!(kv.alloc(), Some(0));
         assert_eq!(kv.alloc(), Some(1));
+    }
+
+    #[test]
+    fn degenerate_needs_one_block_for_any_length() {
+        let kv = KvManager::new(4);
+        assert_eq!(kv.blocks_needed(0), 0);
+        assert_eq!(kv.blocks_needed(1), 1);
+        assert_eq!(kv.blocks_needed(1_000_000), 1);
+    }
+
+    #[test]
+    fn paged_block_arithmetic() {
+        let kv = KvManager::paged(8, 16);
+        assert_eq!(kv.blocks_needed(0), 0);
+        assert_eq!(kv.blocks_needed(1), 1);
+        assert_eq!(kv.blocks_needed(16), 1);
+        assert_eq!(kv.blocks_needed(17), 2);
+        assert_eq!(kv.blocks_needed(128), 8);
+        assert_eq!(kv.capacity_tokens(), 128);
+    }
+
+    #[test]
+    fn alloc_n_is_all_or_nothing() {
+        let mut kv = KvManager::paged(4, 16);
+        let got = kv.alloc_n(3).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(kv.available(), 1);
+        assert!(kv.alloc_n(2).is_none());
+        assert_eq!(kv.available(), 1, "failed alloc must not leak");
+        kv.release_seq(got);
+        assert_eq!(kv.available(), 4);
+    }
+
+    #[test]
+    fn extend_grows_table_token_granularly() {
+        let mut kv = KvManager::paged(4, 16);
+        let mut table = Vec::new();
+        assert!(kv.extend_to(&mut table, 10));
+        assert_eq!(table.len(), 1);
+        assert!(kv.extend_to(&mut table, 16)); // still fits the block
+        assert_eq!(table.len(), 1);
+        assert!(kv.extend_to(&mut table, 17)); // crosses a block boundary
+        assert_eq!(table.len(), 2);
+        assert!(kv.extend_to(&mut table, 64)); // grows to the whole pool
+        assert_eq!(table.len(), 4);
+        assert!(!kv.extend_to(&mut table, 65), "over capacity must fail");
+        assert_eq!(table.len(), 4, "failed extend must not change the table");
+        kv.release_seq(table);
+        assert_eq!(kv.available(), 4);
+    }
+
+    #[test]
+    fn fragmentation_accounting() {
+        let mut kv = KvManager::paged(8, 16);
+        let mut table = Vec::new();
+        assert!(kv.extend_to(&mut table, 20)); // 2 blocks = 32 tokens for 20 live
+        assert_eq!(kv.internal_fragmentation(20), 12);
+        assert!(kv.extend_to(&mut table, 32));
+        assert_eq!(kv.internal_fragmentation(32), 0);
+        kv.release_seq(table);
+        // degenerate slots are nominal reservations, not wasted memory
+        let kv = KvManager::new(2);
+        assert!(kv.is_degenerate());
+        assert_eq!(kv.internal_fragmentation(100), 0);
     }
 }

@@ -4,7 +4,18 @@
 //! decode-maximal batch the *marginal* decode time is the difference between
 //! the hybrid batch and a prefill-only batch with the same chunk; the figure
 //! harness derives decode throughput from these records.
+//!
+//! Per-request latency follows the DistServe/Sarathi-Serve evaluation
+//! frame (arXiv 2401.09670, 2403.02310): **TTFT** (time to first token),
+//! **TBT** (time between tokens) and **normalized latency** (end-to-end
+//! latency per output token) are first-class, percentile-queryable
+//! summaries — see [`LatencyReport`]. Preemptions (KV blocks ran out and a
+//! request was swapped out) are counted both per iteration and in total.
 
+use std::io::Write as _;
+use std::path::Path;
+
+use super::pool::RequestPool;
 use crate::costmodel::{BatchShape, OpBreakdown};
 use crate::util::Summary;
 
@@ -20,11 +31,73 @@ pub struct IterationRecord {
     pub prefill_alone: Option<f64>,
     /// Per-op split when the executor provides one (the simulator does).
     pub breakdown: Option<OpBreakdown>,
+    /// KV blocks in use after this iteration's growth/release.
+    pub kv_blocks_in_use: usize,
+    /// Total KV blocks in the pool.
+    pub kv_blocks_total: usize,
+    /// Admitted, incomplete requests after this iteration.
+    pub n_active: usize,
+    /// Requests preempted (swapped out) during this iteration.
+    pub preemptions: usize,
+    /// Internal fragmentation after this iteration: allocated-but-unused
+    /// KV tokens across all block tables (0 under degenerate slots).
+    pub kv_frag_tokens: usize,
+}
+
+impl IterationRecord {
+    /// Minimal record for tests/adapters that have no KV statistics.
+    pub fn bare(started_at: f64, elapsed: f64, shape: BatchShape) -> Self {
+        IterationRecord {
+            started_at,
+            elapsed,
+            shape,
+            prefill_alone: None,
+            breakdown: None,
+            kv_blocks_in_use: 0,
+            kv_blocks_total: 0,
+            n_active: 0,
+            preemptions: 0,
+            kv_frag_tokens: 0,
+        }
+    }
+}
+
+/// Percentile-queryable per-request latency summaries, computed from the
+/// request pool after (or during) a run.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyReport {
+    /// Time to first token: `first_token_at − arrival` per request.
+    pub ttft: Summary,
+    /// Time between tokens: every gap between consecutive output tokens.
+    pub tbt: Summary,
+    /// Normalized latency: `(completed_at − arrival) / decode_len`.
+    pub normalized: Summary,
+}
+
+impl LatencyReport {
+    /// Aggregate over every completed request in the pool.
+    pub fn from_pool(pool: &RequestPool) -> Self {
+        let mut rep = LatencyReport::default();
+        for r in pool.iter() {
+            if let Some(first) = r.first_token_at {
+                rep.ttft.add(first - r.arrival);
+            }
+            for g in r.token_gaps() {
+                rep.tbt.add(g);
+            }
+            if let Some(done) = r.completed_at {
+                rep.normalized.add((done - r.arrival) / r.spec.decode_len.max(1) as f64);
+            }
+        }
+        rep
+    }
 }
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub iterations: Vec<IterationRecord>,
+    /// Total preemption events across the run.
+    pub preemptions: usize,
 }
 
 impl Metrics {
@@ -33,6 +106,7 @@ impl Metrics {
     }
 
     pub fn record(&mut self, rec: IterationRecord) {
+        self.preemptions += rec.preemptions;
         self.iterations.push(rec);
     }
 
@@ -121,6 +195,45 @@ impl Metrics {
         }
         s
     }
+
+    /// Peak concurrently-admitted requests across the run.
+    pub fn peak_active(&self) -> usize {
+        self.iterations.iter().map(|r| r.n_active).max().unwrap_or(0)
+    }
+
+    /// Write one JSON object per iteration (JSON-Lines) — the simulator
+    /// trace idiom: shape, elapsed time, KV occupancy and preemptions per
+    /// record, consumable by any ad-hoc analysis script.
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for (i, r) in self.iterations.iter().enumerate() {
+            writeln!(
+                out,
+                "{{\"iter\":{},\"start\":{:.6},\"elapsed\":{:.6},\
+                 \"prefill_chunks\":{},\"prefill_tokens\":{},\"decodes\":{},\
+                 \"total_tokens\":{},\"kv_blocks_in_use\":{},\"kv_blocks_total\":{},\
+                 \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{}}}",
+                i,
+                r.started_at,
+                r.elapsed,
+                r.shape.prefill.len(),
+                r.shape.prefill_tokens(),
+                r.shape.decode_tokens(),
+                r.shape.total_tokens(),
+                r.kv_blocks_in_use,
+                r.kv_blocks_total,
+                r.kv_frag_tokens,
+                r.n_active,
+                r.preemptions,
+            )?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -129,7 +242,7 @@ mod tests {
     use crate::costmodel::BatchShape;
 
     fn rec(elapsed: f64, shape: BatchShape, alone: Option<f64>) -> IterationRecord {
-        IterationRecord { started_at: 0.0, elapsed, shape, prefill_alone: alone, breakdown: None }
+        IterationRecord { prefill_alone: alone, ..IterationRecord::bare(0.0, elapsed, shape) }
     }
 
     #[test]
@@ -158,5 +271,59 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.decode_time_per_token(), 0.0);
+        assert_eq!(m.preemptions, 0);
+        assert_eq!(m.peak_active(), 0);
+    }
+
+    #[test]
+    fn preemptions_accumulate() {
+        let mut m = Metrics::new();
+        let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+        r.preemptions = 2;
+        m.record(r);
+        let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+        r.preemptions = 1;
+        r.n_active = 7;
+        m.record(r);
+        assert_eq!(m.preemptions, 3);
+        assert_eq!(m.peak_active(), 7);
+    }
+
+    #[test]
+    fn latency_report_from_pool() {
+        use crate::workload::RequestSpec;
+        let mut pool = RequestPool::new();
+        pool.push(RequestSpec { prompt_len: 4, decode_len: 2, arrival: 1.0 });
+        pool.admit(0, vec![0], 1.0);
+        {
+            let r = pool.get_mut(0);
+            r.prefilled = 4;
+            r.decoded = 2;
+            r.first_token_at = Some(1.5);
+            r.token_times = vec![1.5, 1.7];
+        }
+        pool.complete(0, 1.7);
+        let rep = LatencyReport::from_pool(&pool);
+        assert_eq!(rep.ttft.count(), 1);
+        assert!((rep.ttft.mean() - 0.5).abs() < 1e-12);
+        assert_eq!(rep.tbt.count(), 1);
+        assert!((rep.tbt.mean() - 0.2).abs() < 1e-9);
+        assert!((rep.normalized.mean() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_writes_one_record_per_iteration() {
+        let mut m = Metrics::new();
+        m.record(rec(0.5, BatchShape::hybrid(96, 0, &[5; 2]), Some(0.4)));
+        m.record(rec(0.25, BatchShape::decode_only(&[6; 3]), None));
+        let path = std::env::temp_dir().join("sarathi_test_trace.jsonl");
+        m.write_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("{\"iter\":0,"));
+        assert!(lines[0].contains("\"prefill_tokens\":96"));
+        assert!(lines[1].contains("\"decodes\":3"));
+        assert!(lines[1].ends_with('}'));
     }
 }

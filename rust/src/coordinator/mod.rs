@@ -1,16 +1,23 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! * [`request`] / [`pool`] — request lifecycle and the request table.
-//! * [`kv`] — KV-cache slot manager (§4.3.1 capacity formula upstream in
+//! * [`request`] / [`pool`] — request lifecycle (with a preemption edge)
+//!   and the request table.
+//! * [`kv`] — token-granular paged KV block allocator; the seed's
+//!   whole-request slots are the degenerate `block_size = max_seq_len`
+//!   case (§4.3.1 capacity formula upstream in
 //!   [`crate::config::Deployment`]).
 //! * [`batch`] — work items and batch composition/validation.
-//! * [`sched`] — the batching policies under comparison: request-level
-//!   baseline, Orca best/worst iteration-level, and SARATHI
-//!   (chunked-prefills + decode-maximal batching).
+//! * [`sched`] — composable admission ([`sched::Admission`]) + batch
+//!   composition, and the policies under comparison: request-level
+//!   baseline, Orca best/worst iteration-level, SARATHI (chunked-prefills
+//!   + decode-maximal batching), and the Sarathi-Serve-style stall-free
+//!   [`sched::HybridScheduler`].
 //! * [`engine`] — the serving loop: admission → schedule → execute →
-//!   advance, generic over simulated or real (PJRT) executors.
-//! * [`metrics`] — per-iteration and per-request accounting the figure
-//!   harness consumes.
+//!   advance, with token-granular KV growth and a preemption path when
+//!   blocks run out; generic over simulated or real (PJRT) executors.
+//! * [`metrics`] — per-iteration and per-request accounting (throughput,
+//!   TTFT/TBT/normalized-latency percentiles, preemptions, JSONL traces)
+//!   the figure harness consumes.
 
 pub mod batch;
 pub mod engine;
@@ -22,8 +29,11 @@ pub mod sched;
 
 pub use batch::{Batch, WorkItem};
 pub use engine::{Engine, Executor, SimExecutor, StepOutcome};
-pub use kv::KvManager;
-pub use metrics::{IterationRecord, Metrics};
+pub use kv::{KvManager, DEGENERATE_BLOCK};
+pub use metrics::{IterationRecord, LatencyReport, Metrics};
 pub use pool::RequestPool;
 pub use request::{Phase, Request, RequestId};
-pub use sched::{make_scheduler, OrcaScheduler, RequestLevelScheduler, SarathiScheduler, Scheduler};
+pub use sched::{
+    make_scheduler, Admission, HybridScheduler, OrcaScheduler, RequestLevelScheduler,
+    SarathiScheduler, Scheduler,
+};

@@ -4,9 +4,10 @@
 //! arrival-sorted `pending` and `active` index lists so the per-iteration
 //! scheduler queries are O(B + admissible) instead of O(total requests) —
 //! the difference between the Fig.-12 10K-request simulation scaling
-//! linearly vs quadratically. Admission and completion therefore go
-//! through [`RequestPool::admit`] / [`RequestPool::complete`], never by
-//! poking `slot`/`completed_at` directly.
+//! linearly vs quadratically. Admission, completion and preemption
+//! therefore go through [`RequestPool::admit`] / [`RequestPool::complete`]
+//! / [`RequestPool::preempt`], never by poking `admitted`/`completed_at`
+//! directly.
 
 use super::request::{Phase, Request, RequestId};
 use crate::workload::RequestSpec;
@@ -14,11 +15,12 @@ use crate::workload::RequestSpec;
 #[derive(Clone, Debug, Default)]
 pub struct RequestPool {
     requests: Vec<Request>,
-    /// Not-yet-admitted ids, sorted by (arrival, id).
+    /// Not-yet-admitted ids, sorted by (arrival, id). Preempted requests
+    /// re-enter here at their original arrival position (FCFS resume).
     pending: Vec<RequestId>,
     /// Cursor into `pending`: everything before it has been admitted.
     pending_head: usize,
-    /// Admitted, not complete.
+    /// Admitted, not complete (id-sorted).
     active: Vec<RequestId>,
     n_complete: usize,
 }
@@ -36,17 +38,22 @@ impl RequestPool {
         p
     }
 
-    pub fn push(&mut self, spec: RequestSpec) -> RequestId {
-        let id = self.requests.len();
-        self.requests.push(Request::new(id, spec));
-        // insert keeping (arrival, id) order; typical workloads push in
-        // arrival order so this is O(1) amortized
+    /// Insert `id` into the pending tail keeping (arrival, id) order.
+    fn enqueue_pending(&mut self, id: RequestId) {
+        let arrival = self.requests[id].arrival;
         let tail = &self.pending[self.pending_head..];
         let pos = tail.partition_point(|&q| {
             let a = self.requests[q].arrival;
-            a < spec.arrival || (a == spec.arrival && q < id)
+            a < arrival || (a == arrival && q < id)
         });
         self.pending.insert(self.pending_head + pos, id);
+    }
+
+    pub fn push(&mut self, spec: RequestSpec) -> RequestId {
+        let id = self.requests.len();
+        self.requests.push(Request::new(id, spec));
+        // typical workloads push in arrival order so this is O(1) amortized
+        self.enqueue_pending(id);
         id
     }
 
@@ -55,18 +62,22 @@ impl RequestPool {
     }
 
     /// Mutable access for progress fields (`prefilled`, `decoded`, ...).
-    /// Admission/completion must use [`admit`](Self::admit) /
-    /// [`complete`](Self::complete) so the index lists stay coherent.
+    /// Admission/completion/preemption must use [`admit`](Self::admit) /
+    /// [`complete`](Self::complete) / [`preempt`](Self::preempt) so the
+    /// index lists stay coherent.
     pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
         &mut self.requests[id]
     }
 
-    /// Admit a queued request with a KV slot.
-    pub fn admit(&mut self, id: RequestId, slot: usize, now: f64) {
+    /// Admit a queued request, handing it its initial KV block table.
+    pub fn admit(&mut self, id: RequestId, blocks: Vec<usize>, now: f64) {
         let r = &mut self.requests[id];
-        debug_assert!(r.slot.is_none() && r.completed_at.is_none());
-        r.slot = Some(slot);
-        r.admitted_at = Some(now);
+        debug_assert!(!r.admitted && r.completed_at.is_none());
+        r.admitted = true;
+        r.blocks = blocks;
+        if r.admitted_at.is_none() {
+            r.admitted_at = Some(now);
+        }
         // ids are admitted FCFS from the pending head in practice; fall
         // back to a scan for out-of-order admissions (tests).
         if self.pending.get(self.pending_head) == Some(&id) {
@@ -79,16 +90,32 @@ impl RequestPool {
         self.active.insert(pos, id);
     }
 
-    /// Mark a request complete; returns its released KV slot.
-    pub fn complete(&mut self, id: RequestId, now: f64) -> usize {
+    /// Mark a request complete; returns its released KV block table.
+    pub fn complete(&mut self, id: RequestId, now: f64) -> Vec<usize> {
         let r = &mut self.requests[id];
         debug_assert!(r.completed_at.is_none());
         r.completed_at = Some(now);
-        let slot = r.slot.take().expect("completing request without slot");
+        r.admitted = false;
+        let blocks = std::mem::take(&mut r.blocks);
         let pos = self.active.binary_search(&id).expect("complete of inactive request");
         self.active.remove(pos);
         self.n_complete += 1;
-        slot
+        blocks
+    }
+
+    /// Preempt an active request: release its block table (returned to the
+    /// caller to free), keep its progress counters, and re-queue it at its
+    /// original arrival position so it resumes FCFS.
+    pub fn preempt(&mut self, id: RequestId, _now: f64) -> Vec<usize> {
+        let r = &mut self.requests[id];
+        debug_assert!(r.admitted && r.completed_at.is_none());
+        r.admitted = false;
+        r.preemptions += 1;
+        let blocks = std::mem::take(&mut r.blocks);
+        let pos = self.active.binary_search(&id).expect("preempt of inactive request");
+        self.active.remove(pos);
+        self.enqueue_pending(id);
+        blocks
     }
 
     pub fn len(&self) -> usize {
@@ -117,9 +144,9 @@ impl RequestPool {
                 .copied()
                 .filter(|&id| self.requests[id].phase() == Phase::Queued)
                 .collect(),
-            Phase::Complete => {
-                (0..self.requests.len()).filter(|&id| self.requests[id].phase() == Phase::Complete).collect()
-            }
+            Phase::Complete => (0..self.requests.len())
+                .filter(|&id| self.requests[id].phase() == Phase::Complete)
+                .collect(),
         }
     }
 
@@ -152,9 +179,25 @@ impl RequestPool {
         self.n_complete == self.requests.len()
     }
 
-    /// True while any request is admitted (holds a slot).
+    /// True while any request is admitted (holds KV blocks).
     pub fn any_active(&self) -> bool {
         !self.active.is_empty()
+    }
+
+    /// Number of admitted, incomplete requests.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Admitted, incomplete ids (id-sorted).
+    pub fn active_ids(&self) -> &[RequestId] {
+        &self.active
+    }
+
+    /// Live KV tokens across all admitted requests (for fragmentation
+    /// accounting).
+    pub fn live_kv_tokens(&self) -> usize {
+        self.active.iter().map(|&id| self.requests[id].kv_len()).sum()
     }
 
     /// Earliest arrival among still-queued requests (drives idle-advance).
@@ -178,7 +221,7 @@ mod tests {
         }
         assert_eq!(p.arrived_queued(0.5), vec![0]);
         assert_eq!(p.arrived_queued(5.0), vec![0, 1, 2]);
-        p.admit(1, 0, 1.0);
+        p.admit(1, vec![0], 1.0);
         assert_eq!(p.in_phase(Phase::Prefill), vec![1]);
         // request 1 was admitted; the next *queued* arrival is request 2
         assert_eq!(p.next_arrival(0.0), Some(2.0));
@@ -192,22 +235,23 @@ mod tests {
         for _ in 0..4 {
             p.push(RequestSpec { prompt_len: 8, decode_len: 1, arrival: 0.0 });
         }
-        p.admit(0, 5, 0.0);
-        p.admit(1, 6, 0.0);
+        p.admit(0, vec![5], 0.0);
+        p.admit(1, vec![6], 0.0);
         assert!(p.any_active());
+        assert_eq!(p.active_count(), 2);
         assert_eq!(p.arrived_queued(0.0), vec![2, 3]);
         p.get_mut(0).prefilled = 8;
         p.get_mut(0).decoded = 1;
-        let slot = p.complete(0, 1.0);
-        assert_eq!(slot, 5);
+        let blocks = p.complete(0, 1.0);
+        assert_eq!(blocks, vec![5]);
         assert_eq!(p.in_phase(Phase::Complete), vec![0]);
         assert_eq!(p.in_phase(Phase::Prefill), vec![1]);
         assert!(!p.all_complete());
         p.get_mut(1).prefilled = 8;
         p.get_mut(1).decoded = 1;
         p.complete(1, 2.0);
-        p.admit(2, 0, 2.0);
-        p.admit(3, 1, 2.0);
+        p.admit(2, vec![0], 2.0);
+        p.admit(3, vec![1], 2.0);
         for id in [2, 3] {
             p.get_mut(id).prefilled = 8;
             p.get_mut(id).decoded = 1;
@@ -225,5 +269,31 @@ mod tests {
         p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.3 });
         assert_eq!(p.arrived_queued(1.0), vec![1, 2, 0]);
         assert_eq!(p.next_arrival(0.2), Some(0.3));
+    }
+
+    #[test]
+    fn preempt_requeues_at_arrival_position() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0 });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.1 });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.2 });
+        p.admit(0, vec![0], 0.0);
+        p.admit(1, vec![1, 2], 0.1);
+        p.get_mut(1).prefilled = 8;
+        p.get_mut(1).decoded = 2;
+        // preempt the later request: its blocks come back, it rejoins the
+        // queue AHEAD of request 2 (earlier arrival), progress intact
+        let blocks = p.preempt(1, 0.5);
+        assert_eq!(blocks, vec![1, 2]);
+        assert_eq!(p.active_ids(), &[0]);
+        assert_eq!(p.arrived_queued(1.0), vec![1, 2]);
+        assert_eq!(p.get(1).kv_len(), 9);
+        assert_eq!(p.get(1).preemptions, 1);
+        // re-admission works through the normal path
+        p.admit(1, vec![3, 4], 0.6);
+        assert_eq!(p.active_ids(), &[0, 1]);
+        assert_eq!(p.arrived_queued(1.0), vec![2]);
+        // admitted_at keeps the FIRST admission time
+        assert_eq!(p.get(1).admitted_at, Some(0.1));
     }
 }

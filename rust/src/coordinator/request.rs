@@ -1,4 +1,5 @@
-//! Request lifecycle: Queued → Prefill → Decode → Complete.
+//! Request lifecycle: Queued → Prefill → Decode → Complete, with a
+//! preemption edge back to Queued (blocks released, progress retained).
 
 use crate::workload::RequestSpec;
 
@@ -6,13 +7,14 @@ pub type RequestId = usize;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
-    /// Waiting for admission (no KV slot yet).
+    /// Waiting for admission (no KV blocks). Includes preempted requests
+    /// waiting to be swapped back in.
     Queued,
     /// Admitted; prompt not fully prefilled.
     Prefill,
     /// Prompt prefilled; generating output tokens.
     Decode,
-    /// All output tokens generated; slot released.
+    /// All output tokens generated; blocks released.
     Complete,
 }
 
@@ -25,8 +27,14 @@ pub struct Request {
     /// Output tokens generated so far. The final prefill chunk produces the
     /// first output token, so this becomes 1 when prefill completes.
     pub decoded: usize,
-    /// KV slot while admitted.
-    pub slot: Option<usize>,
+    /// KV block table while admitted, in allocation order. Under the
+    /// degenerate block size this is exactly one block — the seed's "slot".
+    pub blocks: Vec<usize>,
+    /// True between admission and completion/preemption. Progress counters
+    /// survive preemption (swap-style: KV is released, not recomputed).
+    pub admitted: bool,
+    /// Times this request was preempted to free KV blocks.
+    pub preemptions: usize,
     pub arrival: f64,
     pub admitted_at: Option<f64>,
     pub first_token_at: Option<f64>,
@@ -44,7 +52,9 @@ impl Request {
             spec,
             prefilled: 0,
             decoded: 0,
-            slot: None,
+            blocks: Vec::new(),
+            admitted: false,
+            preemptions: 0,
             arrival: spec.arrival,
             admitted_at: None,
             first_token_at: None,
@@ -59,10 +69,20 @@ impl Request {
         self.token_times.windows(2).map(|w| w[1] - w[0]).collect()
     }
 
+    pub fn is_admitted(&self) -> bool {
+        self.admitted
+    }
+
+    /// First block of the table — the physical KV row under the degenerate
+    /// (one-block-per-request) layout the real PJRT runtime serves from.
+    pub fn slot(&self) -> Option<usize> {
+        self.blocks.first().copied()
+    }
+
     pub fn phase(&self) -> Phase {
         if self.completed_at.is_some() {
             Phase::Complete
-        } else if self.slot.is_none() {
+        } else if !self.admitted {
             Phase::Queued
         } else if self.prefilled < self.spec.prompt_len {
             Phase::Prefill
@@ -105,8 +125,10 @@ mod tests {
     fn lifecycle_phases() {
         let mut r = Request::new(0, spec(100, 10));
         assert_eq!(r.phase(), Phase::Queued);
-        r.slot = Some(3);
+        r.admitted = true;
+        r.blocks = vec![3];
         assert_eq!(r.phase(), Phase::Prefill);
+        assert_eq!(r.slot(), Some(3));
         r.prefilled = 100;
         r.decoded = 1; // first token from the final prefill chunk
         assert_eq!(r.phase(), Phase::Decode);
@@ -115,9 +137,26 @@ mod tests {
     }
 
     #[test]
+    fn preempted_request_looks_queued_but_keeps_progress() {
+        let mut r = Request::new(0, spec(100, 10));
+        r.admitted = true;
+        r.blocks = vec![0, 1];
+        r.prefilled = 100;
+        r.decoded = 4;
+        // swap out
+        r.admitted = false;
+        r.blocks.clear();
+        r.preemptions += 1;
+        assert_eq!(r.phase(), Phase::Queued);
+        assert_eq!(r.kv_len(), 103, "progress survives preemption");
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
     fn accounting() {
         let mut r = Request::new(0, spec(100, 10));
-        r.slot = Some(0);
+        r.admitted = true;
+        r.blocks = vec![0];
         r.prefilled = 60;
         assert_eq!(r.remaining_prompt(), 40);
         r.prefilled = 100;

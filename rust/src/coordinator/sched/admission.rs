@@ -1,0 +1,221 @@
+//! Memory-aware, watermark-based admission over the paged KV pool.
+//!
+//! Admission is the first half of every scheduling step (the second is
+//! batch composition — see [`super::Scheduler`]). The gate reserves the
+//! request's prompt footprint up front and its live KV on swap-in (see
+//! [`Admission::blocks_required`]); only decode growth extends the table
+//! later, which is what the watermark buffers. Under the degenerate block
+//! size everything collapses to the seed's one-slot-per-request rule, so
+//! the paper experiments reproduce unchanged.
+//!
+//! The watermark reserves free blocks for decode growth of already-running
+//! requests (vLLM-style): admitting greedily to zero free blocks would
+//! force a preemption on the very next decode step.
+
+use super::super::kv::KvManager;
+use super::super::pool::RequestPool;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Admission {
+    /// Free blocks kept in reserve for decode growth of running requests.
+    pub watermark_blocks: usize,
+    /// Cap on concurrently admitted sequences (Sarathi-Serve's
+    /// `max_num_seqs`). `None` bounds admission by memory alone — the seed
+    /// policies' behavior, where the slot pool itself is the cap.
+    pub max_active: Option<usize>,
+}
+
+impl Admission {
+    pub fn with_watermark(watermark_blocks: usize) -> Self {
+        Admission { watermark_blocks, max_active: None }
+    }
+
+    pub fn with_max_active(mut self, max_active: usize) -> Self {
+        self.max_active = Some(max_active);
+        self
+    }
+
+    /// Blocks request `id` needs to be admitted right now: the full prompt
+    /// is reserved up front (vLLM-style — prefill length is known, so a
+    /// running chunked prefill never has to grab blocks mid-flight and the
+    /// watermark only has to absorb decode growth); a swapped-out request
+    /// needs its whole KV footprint plus the next token back.
+    pub fn blocks_required(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> usize {
+        let r = pool.get(id);
+        kv.blocks_needed(r.spec.prompt_len.max(r.kv_len() + 1)).max(1)
+    }
+
+    /// Panics when `id` could never run to COMPLETION even in an empty
+    /// pool: its lifetime KV peak (`prompt + decode − 1` tokens, both known
+    /// in the spec) plus the watermark exceeds the pool. Shared by
+    /// [`can_admit`](Self::can_admit) and
+    /// [`try_admit_one`](Self::try_admit_one) so the two entry points
+    /// cannot disagree about an infeasible request.
+    fn assert_feasible(&self, pool: &RequestPool, kv: &KvManager, id: usize) {
+        let spec = pool.get(id).spec;
+        let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
+        let lifetime = kv.blocks_needed(peak.max(1));
+        assert!(
+            lifetime.saturating_add(self.watermark_blocks) <= kv.capacity(),
+            "request {id} can never complete: its KV peaks at {peak} tokens = {lifetime} blocks \
+             (+{} watermark) but the pool only has {} — undersized paged KV pool for this workload",
+            self.watermark_blocks,
+            kv.capacity()
+        );
+    }
+
+    /// True if the gate passes for `id` without allocating. Panics (like
+    /// [`try_admit_one`](Self::try_admit_one)) when the request could never
+    /// be admitted at all.
+    pub fn can_admit(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> bool {
+        if let Some(cap) = self.max_active {
+            if pool.active_count() >= cap {
+                return false;
+            }
+        }
+        self.assert_feasible(pool, kv, id);
+        let need = self.blocks_required(pool, kv, id);
+        kv.available() >= need.saturating_add(self.watermark_blocks)
+    }
+
+    /// Admit `id` if the gate passes, allocating its initial block table.
+    ///
+    /// Panics (loudly, like the allocator's double-free — see
+    /// [`assert_feasible`](Self::assert_feasible)) when the request could
+    /// never run to completion in this pool. Without that guard an
+    /// oversized request is admitted on its prompt footprint, grows to the
+    /// memory wall, preempts every co-running request, and only then
+    /// wedges the engine with no hint at the cause.
+    pub fn try_admit_one(
+        &self,
+        pool: &mut RequestPool,
+        kv: &mut KvManager,
+        id: usize,
+        now: f64,
+    ) -> bool {
+        if !self.can_admit(pool, kv, id) {
+            return false;
+        }
+        let need = self.blocks_required(pool, kv, id);
+        let blocks = kv.alloc_n(need).expect("admission gate checked availability");
+        pool.admit(id, blocks, now);
+        true
+    }
+
+    /// Admit arrived, queued requests FCFS while the gate passes (the
+    /// shared iteration-level admission rule). Returns how many were
+    /// admitted.
+    pub fn admit_fcfs(&self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> usize {
+        let mut admitted = 0;
+        while let Some(id) = pool.next_queued(now) {
+            if !self.try_admit_one(pool, kv, id, now) {
+                break;
+            }
+            admitted += 1;
+        }
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::RequestSpec;
+
+    fn pool_of(n: usize) -> RequestPool {
+        let specs: Vec<RequestSpec> =
+            (0..n).map(|_| RequestSpec { prompt_len: 64, decode_len: 8, arrival: 0.0 }).collect();
+        RequestPool::from_specs(&specs)
+    }
+
+    #[test]
+    fn degenerate_admission_is_one_slot_per_request() {
+        let mut pool = pool_of(5);
+        let mut kv = KvManager::new(3);
+        let n = Admission::default().admit_fcfs(&mut pool, &mut kv, 0.0);
+        assert_eq!(n, 3);
+        assert_eq!(kv.available(), 0);
+        assert_eq!(pool.active_count(), 3);
+        for id in 0..3 {
+            assert_eq!(pool.get(id).blocks.len(), 1);
+        }
+    }
+
+    #[test]
+    fn admission_reserves_the_full_prompt() {
+        let mut pool = pool_of(2);
+        let mut kv = KvManager::paged(8, 16);
+        let adm = Admission::default();
+        // 64-token prompt = 4 blocks reserved at admission, so chunked
+        // prefill never needs to allocate mid-flight
+        assert_eq!(adm.blocks_required(&pool, &kv, 0), 4);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert_eq!(pool.get(0).blocks.len(), 4);
+        let mut table = std::mem::take(&mut pool.get_mut(0).blocks);
+        assert!(kv.extend_to(&mut table, 64), "prefill growth is a no-op");
+        assert_eq!(table.len(), 4);
+        pool.get_mut(0).blocks = table;
+    }
+
+    #[test]
+    fn watermark_holds_back_headroom() {
+        let mut pool = pool_of(5);
+        let mut kv = KvManager::paged(8, 16);
+        // each 64-token prompt needs 4 blocks; with a 2-block watermark
+        // only one request fits (the second would leave < 2 free)
+        let n = Admission::with_watermark(2).admit_fcfs(&mut pool, &mut kv, 0.0);
+        assert_eq!(n, 1, "second admission would eat the growth headroom");
+        assert_eq!(kv.available(), 4);
+    }
+
+    #[test]
+    fn preempted_request_needs_its_full_footprint() {
+        let mut pool = pool_of(2);
+        let mut kv = KvManager::paged(8, 16);
+        let adm = Admission::default();
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        // progress past the prompt (64 prefilled + 9 decoded), then preempt
+        {
+            let r = pool.get_mut(0);
+            r.prefilled = 64;
+            r.decoded = 10;
+        }
+        assert!(kv.extend_to(&mut pool.get_mut(0).blocks, 73));
+        let blocks = pool.preempt(0, 1.0);
+        kv.release_seq(blocks);
+        // swap-in needs the whole live footprint: 74 tokens = 5 blocks
+        assert_eq!(adm.blocks_required(&pool, &kv, 0), 5);
+        // with only 2 free blocks the swap-in must NOT pass
+        let held = kv.alloc_n(6).unwrap();
+        assert!(!adm.can_admit(&pool, &kv, 0));
+        kv.release_seq(held);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 2.0));
+        assert_eq!(pool.get(0).blocks.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "undersized paged KV pool")]
+    fn oversized_request_is_rejected_loudly() {
+        // a 64-token prompt needs 4 blocks; a 3-block pool can never admit
+        // it — better an immediate, named panic than a silent engine wedge
+        let mut pool = pool_of(1);
+        let mut kv = KvManager::paged(3, 16);
+        Admission::default().try_admit_one(&mut pool, &mut kv, 0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "undersized paged KV pool")]
+    fn decode_heavy_request_that_cannot_complete_is_rejected_up_front() {
+        // tiny prompt, huge decode: the prompt footprint (2 blocks) fits a
+        // 12-block pool, but the lifetime peak (32 + 200 − 1 tokens = 15
+        // blocks) never will — reject at admission, not after burning the
+        // whole run and preempting every co-running request
+        let mut pool = RequestPool::from_specs(&[RequestSpec {
+            prompt_len: 32,
+            decode_len: 200,
+            arrival: 0.0,
+        }]);
+        let mut kv = KvManager::paged(12, 16);
+        Admission::default().try_admit_one(&mut pool, &mut kv, 0, 0.0);
+    }
+}

@@ -1,15 +1,29 @@
-//! Batching policies under comparison (§5):
+//! Batching policies under comparison (§5), over a composable
+//! admission + composition split:
 //!
 //! * [`RequestLevelScheduler`] — FasterTransformer-style baseline.
 //! * [`OrcaScheduler`] — iteration-level scheduling, best/worst case.
 //! * [`SarathiScheduler`] — chunked-prefills + decode-maximal batching.
+//! * [`HybridScheduler`] — Sarathi-Serve-style stall-free batching: a
+//!   per-iteration token budget shared by all running prefill chunks and
+//!   decodes, over the token-granular paged KV pool.
+//!
+//! A scheduling step has two halves: **admission** (which queued requests
+//! get KV blocks — see [`Admission`]) and **composition** (which admitted
+//! requests contribute work items to the next batch). The [`Scheduler`]
+//! trait separates them so policies can mix and match; `schedule()` is the
+//! provided glue the engine calls.
 
+pub mod admission;
 pub mod autotune;
+mod hybrid;
 mod orca;
 mod request_level;
 mod sarathi;
 
+pub use admission::Admission;
 pub use autotune::{candidate_chunks, tune_chunk_size, ChunkTuneResult};
+pub use hybrid::HybridScheduler;
 pub use orca::OrcaScheduler;
 pub use request_level::RequestLevelScheduler;
 pub use sarathi::SarathiScheduler;
@@ -19,27 +33,33 @@ use super::kv::KvManager;
 use super::pool::RequestPool;
 use crate::config::{SchedulerConfig, SchedulerKind};
 
-/// A batching policy. Admission (KV-slot assignment) is part of the policy:
-/// request-level batching deliberately delays admission, iteration-level
-/// policies admit as soon as a slot frees.
+/// A batching policy, split into composable admission + batch composition.
+/// Admission is part of the policy: request-level batching deliberately
+/// delays admission, iteration-level policies admit as soon as memory
+/// frees, the hybrid policy holds back a watermark for decode growth.
 pub trait Scheduler {
-    /// Compose the next iteration's batch at time `now`. An empty batch
-    /// means the scheduler has nothing runnable (engine idles to the next
-    /// arrival).
-    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch;
+    /// The admission gate this policy runs (memory-aware, watermark-based).
+    fn admission(&self) -> Admission {
+        Admission::default()
+    }
+
+    /// Admit arrived, queued requests. Default: FCFS while the gate passes.
+    fn admit(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) {
+        self.admission().admit_fcfs(pool, kv, now);
+    }
+
+    /// Compose the next iteration's batch from admitted requests at time
+    /// `now`. An empty batch means the scheduler has nothing runnable
+    /// (engine idles to the next arrival).
+    fn compose(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch;
+
+    /// One scheduling step = admission then composition.
+    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch {
+        self.admit(pool, kv, now);
+        self.compose(pool, kv, now)
+    }
 
     fn name(&self) -> &'static str;
-}
-
-/// Admit arrived, queued requests FCFS while slots are free (the shared
-/// iteration-level admission rule).
-pub(crate) fn admit_fcfs(pool: &mut RequestPool, kv: &mut KvManager, now: f64) {
-    while let Some(id) = pool.next_queued(now) {
-        match kv.alloc() {
-            Some(slot) => pool.admit(id, slot, now),
-            None => break,
-        }
-    }
 }
 
 /// Build the policy named by a [`SchedulerConfig`].
@@ -51,5 +71,12 @@ pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
         SchedulerKind::Sarathi => {
             Box::new(SarathiScheduler::new(cfg.chunk_size, cfg.max_batch, cfg.tile_align))
         }
+        // no silent clamping: a budget below max_batch is a config error
+        // and HybridScheduler::new rejects it loudly, so the label a
+        // harness prints from cfg.token_budget always matches what runs
+        SchedulerKind::Hybrid => Box::new(
+            HybridScheduler::new(cfg.token_budget, cfg.max_batch, cfg.watermark_blocks)
+                .with_tile(cfg.tile_align),
+        ),
     }
 }

@@ -14,7 +14,7 @@ use super::super::batch::{Batch, WorkItem};
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 use super::super::request::Phase;
-use super::{admit_fcfs, Scheduler};
+use super::Scheduler;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OrcaMode {
@@ -38,8 +38,7 @@ impl OrcaScheduler {
 }
 
 impl Scheduler for OrcaScheduler {
-    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch {
-        admit_fcfs(pool, kv, now);
+    fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         let prefilling = pool.in_phase(Phase::Prefill);
         let decoding: Vec<usize> = pool
             .in_phase(Phase::Decode)
@@ -107,7 +106,7 @@ mod tests {
         // requests 0,1 already decoding
         for id in 0..2 {
             let slot = kv.alloc().unwrap();
-            pool.admit(id, slot, 0.0);
+            pool.admit(id, vec![slot], 0.0);
             let r = pool.get_mut(id);
             r.prefilled = 100;
             r.decoded = 1;
@@ -142,7 +141,7 @@ mod tests {
         // finish all prefills
         for id in 2..4 {
             let slot = kv.alloc().unwrap();
-            pool.admit(id, slot, 0.0);
+            pool.admit(id, vec![slot], 0.0);
             let r = pool.get_mut(id);
             r.prefilled = 100;
             r.decoded = 1;

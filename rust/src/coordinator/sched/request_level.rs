@@ -7,7 +7,7 @@ use super::super::batch::{Batch, WorkItem};
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 use super::super::request::Phase;
-use super::Scheduler;
+use super::{Admission, Scheduler};
 
 pub struct RequestLevelScheduler {
     max_batch: usize,
@@ -22,23 +22,28 @@ impl RequestLevelScheduler {
 }
 
 impl Scheduler for RequestLevelScheduler {
-    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch {
-        // retire the running set only when all of it has completed
-        self.running.retain(|&id| pool.get(id).phase() != Phase::Complete);
-
-        if self.running.is_empty() {
-            // request-level admission: a whole new batch at once
-            while self.running.len() < self.max_batch {
-                let Some(id) = pool.next_queued(now) else { break };
-                if let Some(slot) = kv.alloc() {
-                    pool.admit(id, slot, now);
-                    self.running.push(id);
-                } else {
-                    break;
-                }
-            }
+    /// Request-level admission: a whole new batch at once, and only after
+    /// the previous batch fully drains — the policy's defining delay.
+    fn admit(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) {
+        // retire members that no longer hold KV: completed ones, and any
+        // preempted member (swapped back to Queued by the engine) — the
+        // latter is re-admitted FCFS with a later batch instead of wedging
+        // the loop as a permanently-queued "running" request
+        self.running.retain(|&id| pool.get(id).is_admitted());
+        if !self.running.is_empty() {
+            return;
         }
+        let gate = self.admission();
+        while self.running.len() < self.max_batch {
+            let Some(id) = pool.next_queued(now) else { break };
+            if !gate.try_admit_one(pool, kv, id, now) {
+                break;
+            }
+            self.running.push(id);
+        }
+    }
 
+    fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         // prefill-only first: every un-prefilled request submits its FULL
         // remaining prompt in one go (no chunking in the baseline).
         let prefills: Vec<WorkItem> = self
@@ -112,8 +117,8 @@ mod tests {
             let r = pool.get_mut(id);
             r.prefilled = 64;
             r.decoded = 3;
-            let slot = pool.complete(id, 1.0);
-            kv.release(slot);
+            let blocks = pool.complete(id, 1.0);
+            kv.release_seq(blocks);
         }
         let b = s.schedule(&mut pool, &mut kv, 2.0);
         assert_eq!(b.n_prefill_chunks(), 2); // the stragglers enter as a new batch

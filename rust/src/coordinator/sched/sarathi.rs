@@ -9,7 +9,7 @@ use super::super::batch::{Batch, WorkItem};
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 use super::super::request::Phase;
-use super::{admit_fcfs, Scheduler};
+use super::Scheduler;
 
 pub struct SarathiScheduler {
     /// Target chunk size C (tokens) — the tile-aligned budget for the fused
@@ -49,9 +49,7 @@ impl SarathiScheduler {
 }
 
 impl Scheduler for SarathiScheduler {
-    fn schedule(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> Batch {
-        admit_fcfs(pool, kv, now);
-
+    fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         // every ready decode piggybacks (up to B−1 when a chunk rides along)
         let decoding: Vec<usize> = pool
             .in_phase(Phase::Decode)
@@ -95,7 +93,7 @@ mod tests {
         for _ in 0..n_decoding {
             let id = pool.push(RequestSpec { prompt_len: 64, decode_len: 20, arrival: 0.0 });
             let slot = kv.alloc().unwrap();
-            pool.admit(id, slot, 0.0);
+            pool.admit(id, vec![slot], 0.0);
             let r = pool.get_mut(id);
             r.prefilled = 64;
             r.decoded = 1;
@@ -146,7 +144,7 @@ mod tests {
         // finish the prefill of the last request
         let id = 4;
         let slot = kv.alloc().unwrap();
-        pool.admit(id, slot, 0.0);
+        pool.admit(id, vec![slot], 0.0);
         let r = pool.get_mut(id);
         r.prefilled = 64;
         r.decoded = 1;

@@ -58,10 +58,13 @@ pub fn run() -> Vec<Table> {
         SchedulerConfig::orca_best(b),
         SchedulerConfig::sarathi(256, b),
         SchedulerConfig::sarathi(128, b),
+        SchedulerConfig::hybrid(256, b),
+        SchedulerConfig::hybrid(128, b),
     ] {
-        let name = match cfg.chunk_size {
-            0 => cfg.kind.name().to_string(),
-            c => format!("{} (C={c})", cfg.kind.name()),
+        let name = match (cfg.kind, cfg.chunk_size, cfg.token_budget) {
+            (crate::config::SchedulerKind::Hybrid, _, t) => format!("hybrid (T={t})"),
+            (_, 0, _) => cfg.kind.name().to_string(),
+            (_, c, _) => format!("{} (C={c})", cfg.kind.name()),
         };
         let s = tbt_summary(&cfg);
         t.row(vec![
@@ -102,6 +105,21 @@ mod tests {
         let c256 = tbt_summary(&SchedulerConfig::sarathi(256, b));
         let c128 = tbt_summary(&SchedulerConfig::sarathi(128, b));
         assert!(c128.max() <= c256.max() * 1.05, "{} vs {}", c128.max(), c256.max());
+    }
+
+    #[test]
+    fn hybrid_budget_bounds_stalls_below_a_bigger_chunk() {
+        // the token budget bounds EVERY iteration's fused token count, so a
+        // T=128 hybrid's worst decode stall sits below a C=256 SARATHI's
+        let b = 12usize;
+        let sar = tbt_summary(&SchedulerConfig::sarathi(256, b));
+        let hyb = tbt_summary(&SchedulerConfig::hybrid(128, b));
+        assert!(
+            hyb.max() < sar.max(),
+            "max stall: hybrid {} vs sarathi {}",
+            hyb.max(),
+            sar.max()
+        );
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod table2_batching;
 pub mod table4_peak;
 
 use crate::report::Table;
+use crate::util::error::Result;
 
 /// All experiments, in paper order: (name, runner).
 pub fn all() -> Vec<(&'static str, fn() -> Vec<Table>)> {
@@ -46,7 +47,7 @@ pub fn all() -> Vec<(&'static str, fn() -> Vec<Table>)> {
 
 /// Run one experiment by name ("all" runs everything); returns rendered
 /// tables after writing CSVs under `out_dir`.
-pub fn run_named(name: &str, out_dir: &std::path::Path) -> anyhow::Result<Vec<Table>> {
+pub fn run_named(name: &str, out_dir: &std::path::Path) -> Result<Vec<Table>> {
     let experiments = all();
     let mut tables = Vec::new();
     let mut matched = false;
@@ -62,7 +63,7 @@ pub fn run_named(name: &str, out_dir: &std::path::Path) -> anyhow::Result<Vec<Ta
         }
     }
     if !matched {
-        anyhow::bail!("unknown experiment {name:?} (try: all, fig3..fig13, table2, table4)");
+        crate::bail!("unknown experiment {name:?} (try: all, fig3..fig13, table2, table4)");
     }
     Ok(tables)
 }

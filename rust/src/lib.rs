@@ -5,9 +5,12 @@
 //! Rust + JAX + Pallas serving stack:
 //!
 //! * **L3 (this crate)** — the coordinator: request routing, the SARATHI
-//!   scheduler (chunked prefills, decode-maximal batches), KV-cache slot
-//!   management, a pipeline-parallel discrete-event runtime simulator, and
-//!   the PJRT runtime that serves a real model from AOT-compiled HLO.
+//!   scheduler (chunked prefills, decode-maximal batches) plus the
+//!   Sarathi-Serve-style stall-free token-budget `HybridScheduler`,
+//!   token-granular paged KV-cache management with preemption, a
+//!   pipeline-parallel discrete-event runtime simulator, and the PJRT
+//!   runtime that serves a real model from AOT-compiled HLO (cargo
+//!   feature `pjrt`).
 //! * **L2/L1 (python/compile)** — the JAX model and Pallas kernels, lowered
 //!   once at build time to `artifacts/*.hlo.txt`; Python is never on the
 //!   request path.

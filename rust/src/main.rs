@@ -3,27 +3,55 @@
 //! Subcommands:
 //!   figures [all|fig3..fig13|table2|table4] [--out DIR]
 //!       regenerate the paper's tables/figures (prints rows, writes CSVs)
-//!   serve [--artifacts DIR] [--requests N] [--decode N] [--scheduler S]
-//!       serve the tiny model for real through PJRT with the chosen policy
-//!   simulate [--requests N]
-//!       run the §5.3 GPT-3 64-GPU cluster comparison at full scale
+//!   serve [--requests N] [--decode N] [--scheduler S] [--json-out PATH]
+//!       serve a synthetic trace with the chosen policy. With the `pjrt`
+//!       feature the tiny model runs for real through PJRT
+//!       ([--artifacts DIR]); without it the calibrated cost model stands
+//!       in (LLaMA-13B on A6000).
+//!   simulate [--requests N] [--scheduler S] [--rate R] [--budget T]
+//!            [--block-size B] [--json-out PATH]
+//!       engine-level simulation at scale: Zipf(0.4) lengths, Poisson
+//!       arrivals, paged KV — prints throughput and TTFT/TBT/normalized
+//!       latency percentiles. (The §5.3 pipeline cluster comparison lives
+//!       under `figures fig12`.)
 //!   calibration
 //!       print the cost-model calibration summary
+//!
+//! Schedulers: sarathi | hybrid | orca-best | orca-worst | baseline.
+//! `--json-out` writes one JSON object per iteration (shape, elapsed, KV
+//! blocks in use, preemptions) — the simulator-trace idiom.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use sarathi::config::{SchedulerKind, SchedulerConfig};
-use sarathi::coordinator::{Engine, KvManager, RequestPool, make_scheduler};
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, SchedulerConfig, SchedulerKind};
+use sarathi::coordinator::{make_scheduler, Engine, KvManager, LatencyReport, RequestPool};
 use sarathi::figures;
-use sarathi::runtime::{GenRequest, ModelRuntime, RealExecutor};
+use sarathi::util::error::Result;
 use sarathi::util::Rng;
-use sarathi::workload::RequestSpec;
+use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
-fn main() -> anyhow::Result<()> {
+/// Parse `--name value`, erroring on a present-but-unparsable value — a
+/// silent fallback to the default would run a different experiment than
+/// the one the user asked for.
+fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Result<T> {
+    match flag_value(args, name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| sarathi::err!("invalid value {v:?} for {name}")),
+    }
+}
+
+fn scheduler_kind(args: &[String], default: &str) -> Result<SchedulerKind> {
+    let name = flag_value(args, "--scheduler").unwrap_or_else(|| default.to_string());
+    SchedulerKind::parse(&name).ok_or_else(|| {
+        sarathi::err!("unknown scheduler {name} (try: sarathi, hybrid, orca-best, orca-worst, baseline)")
+    })
+}
+
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("figures") => cmd_figures(&args[1..]),
@@ -35,8 +63,11 @@ fn main() -> anyhow::Result<()> {
                 "usage: sarathi <figures|serve|simulate|calibration> [options]\n\
                  \n\
                  figures [all|fig3..fig13|table2|table4] [--out DIR]\n\
-                 serve [--artifacts DIR] [--requests N] [--decode N] [--scheduler sarathi|orca-best|orca-worst|baseline]\n\
-                 simulate [--requests N]\n\
+                 serve [--artifacts DIR] [--requests N] [--decode N]\n\
+                 \x20      [--scheduler sarathi|hybrid|orca-best|orca-worst|baseline]\n\
+                 \x20      [--json-out PATH]\n\
+                 simulate [--requests N] [--scheduler S] [--rate R] [--budget T]\n\
+                 \x20      [--block-size B] [--json-out PATH]\n\
                  calibration"
             );
             std::process::exit(2);
@@ -44,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn cmd_figures(args: &[String]) -> anyhow::Result<()> {
+fn cmd_figures(args: &[String]) -> Result<()> {
     let name = args
         .iter()
         .find(|a| !a.starts_with("--"))
@@ -59,11 +90,47 @@ fn cmd_figures(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+/// Print the shared post-run report (throughput + latency percentiles +
+/// preemptions) and write the JSONL trace if requested.
+fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
+    let m = &engine.metrics;
+    println!(
+        "iterations={} prefill_tokens={} decode_tokens={} preemptions={} peak_active={}",
+        m.iterations.len(),
+        m.total_prefill_tokens(),
+        m.total_decode_tokens(),
+        m.preemptions,
+        m.peak_active(),
+    );
+    println!("throughput={:.1} tok/s (simulated time {:.2}s)", m.throughput(), m.total_time());
+    let lat = LatencyReport::from_pool(&engine.pool);
+    let pct = |s: &sarathi::util::Summary| {
+        (s.percentile(50.0) * 1e3, s.percentile(99.0) * 1e3)
+    };
+    let (t50, t99) = pct(&lat.ttft);
+    println!("ttft_ms p50={t50:.1} p99={t99:.1}");
+    let (b50, b99) = pct(&lat.tbt);
+    println!("tbt_ms p50={b50:.1} p99={b99:.1}");
+    let (n50, n99) = pct(&lat.normalized);
+    println!("normalized_latency_ms_per_token p50={n50:.1} p99={n99:.1}");
+    if let Some(path) = json_out {
+        m.write_jsonl(path)?;
+        println!("trace: {} iterations -> {}", m.iterations.len(), path.display());
+    }
+    Ok(())
+}
+
+/// Real PJRT serving (tiny model from AOT artifacts).
+#[cfg(feature = "pjrt")]
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use sarathi::runtime::{GenRequest, ModelRuntime, RealExecutor};
+    use sarathi::util::error::Context;
+
     let dir = PathBuf::from(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
-    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(6);
-    let decode_len: usize = flag_value(args, "--decode").and_then(|v| v.parse().ok()).unwrap_or(16);
-    let sched_name = flag_value(args, "--scheduler").unwrap_or_else(|| "sarathi".into());
+    let n: usize = parse_flag(args, "--requests", 6)?;
+    let decode_len: usize = parse_flag(args, "--decode", 16)?;
+    let kind = scheduler_kind(args, "sarathi")?;
+    let json_out = flag_value(args, "--json-out").map(PathBuf::from);
 
     let rt = ModelRuntime::load(&dir)?;
     println!("loaded {} artifacts on {}", rt.manifest.artifacts.len(), rt.platform());
@@ -83,18 +150,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0 })
         .collect();
 
-    let kind = match sched_name.as_str() {
-        "sarathi" => SchedulerKind::Sarathi,
-        "orca-best" => SchedulerKind::OrcaBest,
-        "orca-worst" => SchedulerKind::OrcaWorst,
-        "baseline" => SchedulerKind::RequestLevel,
-        other => anyhow::bail!("unknown scheduler {other}"),
-    };
+    // the real KV layout is one row per request — the degenerate block
+    // size; hybrid runs with its token budget over the same layout
     let cfg = SchedulerConfig {
         kind,
         chunk_size: rt.manifest.max_chunk(),
         tile_align: rt.manifest.max_chunk(),
         max_batch: slots,
+        token_budget: rt.manifest.max_chunk().max(slots),
+        block_size: 0,
+        watermark_blocks: 0,
     };
 
     let gen_reqs: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
@@ -109,21 +174,15 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     engine.run();
     let wall = t0.elapsed().as_secs_f64();
 
-    let m = &engine.metrics;
-    println!(
-        "scheduler={sched_name} requests={n} iterations={} wall={:.2}s",
-        m.iterations.len(),
-        wall
-    );
-    println!(
-        "prefill_tokens={} decode_tokens={} throughput={:.1} tok/s",
-        m.total_prefill_tokens(),
-        m.total_decode_tokens(),
-        (m.total_prefill_tokens() + m.total_decode_tokens()) as f64 / wall
-    );
-    let exec = engine.executor.as_any().downcast_ref::<RealExecutor>().unwrap();
+    println!("scheduler={} requests={n} wall={wall:.2}s", kind.name());
+    report_run(&engine, json_out.as_deref())?;
+    let exec = engine
+        .executor
+        .as_any()
+        .downcast_ref::<RealExecutor>()
+        .context("executor is RealExecutor")?;
     if let Some(e) = &exec.error {
-        anyhow::bail!("runtime error: {e}");
+        sarathi::bail!("runtime error: {e}");
     }
     for (i, g) in exec.requests.iter().enumerate().take(3) {
         println!("request {i}: prompt {} tokens -> {:?}", g.prompt.len(), g.generated);
@@ -131,33 +190,128 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
-    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(10_000);
-    println!("GPT-3 on 64 simulated A100s, {n} requests (Zipf 0.4, P:D=10) ...");
-    let t0 = std::time::Instant::now();
-    let out = sarathi::figures::fig12_pipeline::simulate(n);
-    println!("simulated in {:.2}s", t0.elapsed().as_secs_f64());
+/// Cost-model serving stand-in (no PJRT): same CLI, same report, LLaMA-13B
+/// on A6000 via the calibrated simulator.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use sarathi::coordinator::SimExecutor;
+    use sarathi::costmodel::CostModel;
+
+    let n: usize = parse_flag(args, "--requests", 6)?;
+    let decode_len: usize = parse_flag(args, "--decode", 16)?;
+    let kind = scheduler_kind(args, "sarathi")?;
+    let json_out = flag_value(args, "--json-out").map(PathBuf::from);
+    let block_size: usize = parse_flag(args, "--block-size", 0)?;
+
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
+    let b = d.max_batch_size();
     println!(
-        "orca tp8-pp8:    makespan {:.1}s  (median bubble {:.2}s)",
-        out.orca_pp.makespan,
-        out.orca_pp.per_replica[0].bubble_summary().percentile(50.0)
+        "pjrt feature off — serving the calibrated cost model (LLaMA-13B on A6000, B={b})"
     );
-    println!(
-        "sarathi tp8-pp8: makespan {:.1}s  (median bubble {:.2}s)",
-        out.sarathi_pp.makespan,
-        out.sarathi_pp.per_replica[0].bubble_summary().percentile(50.0)
+
+    let mut rng = Rng::new(11);
+    let specs: Vec<RequestSpec> = (0..n)
+        .map(|_| RequestSpec {
+            prompt_len: rng.usize(128, 1024),
+            decode_len,
+            arrival: 0.0,
+        })
+        .collect();
+
+    let budget: usize = parse_flag(args, "--budget", 256)?.max(2 * b);
+    // paging is meaningful only under the hybrid policy's memory-aware
+    // admission; the slot policies' uncapped FCFS gate would admit the
+    // whole queue one block at a time (same rule as cmd_simulate)
+    let paged = kind == SchedulerKind::Hybrid && block_size > 0;
+    let cfg = SchedulerConfig {
+        kind,
+        chunk_size: 256,
+        tile_align: 128,
+        max_batch: if kind == SchedulerKind::Hybrid { 2 * b } else { b },
+        token_budget: budget,
+        block_size: if paged { block_size } else { 0 },
+        watermark_blocks: if paged { 2 } else { 0 },
+    };
+    let kv = if paged {
+        KvManager::paged(d.kv_blocks(block_size), block_size)
+    } else {
+        KvManager::new(b)
+    };
+
+    let cm = CostModel::for_deployment(&d);
+    let mut engine = Engine::new(
+        RequestPool::from_specs(&specs),
+        kv,
+        make_scheduler(&cfg),
+        Box::new(SimExecutor::new(cm)),
     );
-    println!("tp8 x8 replicas: makespan {:.1}s", out.tp_only.makespan);
-    println!(
-        "sarathi speedup: {:.2}x vs orca-pp, {:.2}x vs tp-only",
-        out.orca_pp.makespan / out.sarathi_pp.makespan,
-        out.tp_only.makespan / out.sarathi_pp.makespan
-    );
-    Ok(())
+    engine.run();
+    println!("scheduler={} requests={n} effective_token_budget={}", kind.name(), cfg.token_budget);
+    report_run(&engine, json_out.as_deref())
 }
 
-fn cmd_calibration() -> anyhow::Result<()> {
-    use sarathi::config::{GpuConfig, ModelConfig};
+/// Engine-level simulation at scale: Zipf sequence lengths, Poisson
+/// arrivals, paged KV — the production-shaped testbed for the hybrid
+/// policy (the §5.3 pipeline cluster comparison is `figures fig12`).
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    use sarathi::coordinator::SimExecutor;
+    use sarathi::costmodel::CostModel;
+
+    let n: usize = parse_flag(args, "--requests", 2000)?;
+    let kind = scheduler_kind(args, "hybrid")?;
+    let rate: f64 = parse_flag(args, "--rate", 1.5)?;
+    let budget: usize = parse_flag(args, "--budget", 256)?;
+    let block_size: usize = parse_flag(args, "--block-size", 32)?;
+    let json_out = flag_value(args, "--json-out").map(PathBuf::from);
+
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
+    let b = d.max_batch_size();
+    let mut rng = Rng::new(7);
+    let pop = zipf_population(&mut rng, n, 0.4, 256, 2048, 10.0);
+    let pop = with_poisson_arrivals(&mut rng, pop, rate);
+
+    // slot policies get the §4.3.1 worst-case slots; the hybrid policy gets
+    // the same memory as a paged block pool
+    let paged = kind == SchedulerKind::Hybrid && block_size > 0;
+    let kv = if paged {
+        KvManager::paged(d.kv_blocks(block_size), block_size)
+    } else {
+        KvManager::new(b)
+    };
+    let cfg = SchedulerConfig {
+        kind,
+        chunk_size: 256,
+        tile_align: 128,
+        max_batch: if paged { 4 * b } else { b },
+        token_budget: budget.max(4 * b),
+        block_size: if paged { block_size } else { 0 },
+        watermark_blocks: if paged { 2 } else { 0 },
+    };
+
+    println!(
+        "LLaMA-13B on A6000: {n} requests, Zipf(0.4) in [256,2048], P:D=10, \
+         Poisson {rate} req/s, scheduler={} effective_token_budget={} {}",
+        kind.name(),
+        cfg.token_budget,
+        if paged {
+            format!("(paged KV: {} blocks x {block_size} tokens)", kv.capacity())
+        } else {
+            format!("(slot KV: B={b})")
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let mut engine = Engine::new(
+        RequestPool::from_specs(&pop),
+        kv,
+        make_scheduler(&cfg),
+        Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
+    );
+    engine.run();
+    println!("simulated in {:.2}s wall", t0.elapsed().as_secs_f64());
+    report_run(&engine, json_out.as_deref())
+}
+
+fn cmd_calibration() -> Result<()> {
     use sarathi::costmodel::{BatchShape, CostModel};
     for (m, g) in [
         (ModelConfig::llama13b(), GpuConfig::a6000()),

@@ -8,7 +8,7 @@
 //! * `Decode` lanes → `decode_d{D}` in groups of D,
 //! * one chunk + lanes → `hybrid_c{N}_d{D}` — the decode-maximal step.
 
-use anyhow::Result;
+use crate::util::error::{Error, Result};
 use std::time::Instant;
 
 use super::model::ModelRuntime;
@@ -45,7 +45,7 @@ pub struct RealExecutor {
     pub requests: Vec<GenRequest>,
     /// Execution error, if any (the Executor trait is infallible; errors
     /// are surfaced after the run).
-    pub error: Option<anyhow::Error>,
+    pub error: Option<Error>,
 }
 
 impl RealExecutor {
@@ -55,6 +55,24 @@ impl RealExecutor {
 
     pub fn into_requests(self) -> Vec<GenRequest> {
         self.requests
+    }
+
+    /// Run decode lanes through the decode artifact in capacity-sized
+    /// groups, collecting per-request logits.
+    fn decode_groups(
+        &mut self,
+        lanes: &[(usize, (i32, usize, usize))],
+        lane_logits: &mut Vec<(usize, Vec<f32>)>,
+    ) -> Result<()> {
+        let d_cap = self.model.manifest.model.decode_slots;
+        for group in lanes.chunks(d_cap.max(1)) {
+            let ls: Vec<_> = group.iter().map(|&(_, l)| l).collect();
+            let out = self.model.decode(&ls)?;
+            for (k, &(id, _)) in group.iter().enumerate() {
+                lane_logits.push((id, out.logits[k].clone()));
+            }
+        }
+        Ok(())
     }
 
     fn exec(&mut self, batch: &Batch, pool: &RequestPool) -> Result<()> {
@@ -67,7 +85,7 @@ impl RealExecutor {
             .iter()
             .map(|&id| {
                 let g = &self.requests[id];
-                let slot = pool.get(id).slot.expect("decode without slot");
+                let slot = pool.get(id).slot().expect("decode without slot");
                 (id, (g.last_token(), slot, g.next_pos()))
             })
             .collect();
@@ -77,13 +95,7 @@ impl RealExecutor {
         match prefill.as_slice() {
             [] => {
                 // decode-only iteration(s), in artifact-sized groups
-                for group in lanes.chunks(d_cap.max(1)) {
-                    let ls: Vec<_> = group.iter().map(|&(_, l)| l).collect();
-                    let out = self.model.decode(&ls)?;
-                    for (k, &(id, _)) in group.iter().enumerate() {
-                        lane_logits.push((id, out.logits[k].clone()));
-                    }
-                }
+                self.decode_groups(&lanes, &mut lane_logits)?;
             }
             [(req, start, len)] if !lanes.is_empty() => {
                 // decode-maximal: one chunk + up to D piggybacked lanes. A
@@ -91,7 +103,7 @@ impl RealExecutor {
                 // submits whole prompts) is split: the lanes ride the first
                 // sub-chunk, the rest prefills plain.
                 let (head, tail) = lanes.split_at(lanes.len().min(d_cap));
-                let slot = pool.get(*req).slot.expect("prefill without slot");
+                let slot = pool.get(*req).slot().expect("prefill without slot");
                 let max_hb = self
                     .model
                     .manifest
@@ -109,13 +121,7 @@ impl RealExecutor {
                     lane_logits.push((id, d_out.logits[k].clone()));
                 }
                 // overflow lanes (beyond the artifact's D) go decode-only
-                for group in tail.chunks(d_cap.max(1)) {
-                    let ls: Vec<_> = group.iter().map(|&(_, l)| l).collect();
-                    let out = self.model.decode(&ls)?;
-                    for (k, &(id, _)) in group.iter().enumerate() {
-                        lane_logits.push((id, out.logits[k].clone()));
-                    }
-                }
+                self.decode_groups(tail, &mut lane_logits)?;
                 let last = if first < *len {
                     self.prefill_range(*req, slot, *start + first, *len - first)?
                 } else {
@@ -124,9 +130,13 @@ impl RealExecutor {
                 self.finish_prefill(*req, pool, *start, *len, last)?;
             }
             chunks => {
-                // prefill-only (possibly several requests — baseline mode)
+                // several prefill chunks (baseline mode, or a hybrid-
+                // scheduler batch with multiple concurrent prefills): any
+                // decode lanes run decode-only first, then each chunk
+                // prefills plain
+                self.decode_groups(&lanes, &mut lane_logits)?;
                 for &(req, start, len) in chunks {
-                    let slot = pool.get(req).slot.expect("prefill without slot");
+                    let slot = pool.get(req).slot().expect("prefill without slot");
                     let last = self.prefill_range(req, slot, start, len)?;
                     self.finish_prefill(req, pool, start, len, last)?;
                 }

@@ -7,7 +7,8 @@
 //! artifact name=prefill_c16 kind=prefill chunk=16 file=prefill_c16.hlo.txt
 //! ```
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -72,7 +73,7 @@ fn kv_pairs(parts: &[&str]) -> HashMap<String, String> {
 
 fn get_usize(map: &HashMap<String, String>, key: &str) -> Result<usize> {
     map.get(key)
-        .ok_or_else(|| anyhow!("missing key {key}"))?
+        .ok_or_else(|| err!("missing key {key}"))?
         .parse()
         .with_context(|| format!("bad value for {key}"))
 }
@@ -86,7 +87,7 @@ impl Manifest {
 
     pub fn parse(dir: &Path, text: &str) -> Result<Self> {
         let mut lines = text.lines().filter(|l| !l.trim().is_empty());
-        let header = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        let header = lines.next().ok_or_else(|| err!("empty manifest"))?;
         if header.trim() != "format 1" {
             bail!("unsupported manifest format: {header:?}");
         }
@@ -113,7 +114,7 @@ impl Manifest {
                     });
                 }
                 Some("weights") => {
-                    weights_file = Some(dir.join(parts.get(1).ok_or_else(|| anyhow!("weights line missing file"))?));
+                    weights_file = Some(dir.join(parts.get(1).ok_or_else(|| err!("weights line missing file"))?));
                     param_order = parts[2..].iter().map(|s| s.to_string()).collect();
                 }
                 Some("artifact") => {
@@ -125,19 +126,19 @@ impl Manifest {
                         other => bail!("unknown artifact kind {other:?}"),
                     };
                     artifacts.push(ArtifactEntry {
-                        name: kv.get("name").cloned().ok_or_else(|| anyhow!("artifact missing name"))?,
+                        name: kv.get("name").cloned().ok_or_else(|| err!("artifact missing name"))?,
                         kind,
                         chunk: kv.get("chunk").map(|c| c.parse()).transpose()?,
                         dslots: kv.get("dslots").map(|c| c.parse()).transpose()?,
-                        file: dir.join(kv.get("file").ok_or_else(|| anyhow!("artifact missing file"))?),
+                        file: dir.join(kv.get("file").ok_or_else(|| err!("artifact missing file"))?),
                     });
                 }
                 _ => bail!("unrecognized manifest line: {line:?}"),
             }
         }
 
-        let model = model.ok_or_else(|| anyhow!("manifest has no model line"))?;
-        let weights_file = weights_file.ok_or_else(|| anyhow!("manifest has no weights line"))?;
+        let model = model.ok_or_else(|| err!("manifest has no model line"))?;
+        let weights_file = weights_file.ok_or_else(|| err!("manifest has no weights line"))?;
         if param_order.is_empty() {
             bail!("weights line lists no parameters");
         }

@@ -3,20 +3,31 @@
 //! serves the tiny model for real on the PJRT CPU client. Python is never
 //! on this path.
 //!
-//! * [`manifest`] — artifact manifest parsing.
-//! * [`model`] — `ModelRuntime`: compiled executables + weights + the
+//! * [`manifest`] — artifact manifest parsing (always built).
+//! * [`sampler`] — greedy / top-k sampling over returned logits (always
+//!   built).
+//! * `model` — `ModelRuntime`: compiled executables + weights + the
 //!   functional KV-cache state, exposing the three step functions the
 //!   scheduler composes (prefill chunk / decode / decode-maximal hybrid).
-//! * [`executor`] — `RealExecutor`: adapts `ModelRuntime` to the engine's
+//! * `executor` — `RealExecutor`: adapts `ModelRuntime` to the engine's
 //!   [`crate::coordinator::Executor`] trait, carrying real token ids.
-//! * [`sampler`] — greedy / top-k sampling over returned logits.
+//!
+//! `model`/`executor` depend on the external `xla` PJRT bindings, which
+//! the offline build environment does not ship — they are gated behind the
+//! `pjrt` cargo feature (see rust/Cargo.toml for how to enable it with a
+//! vendored `xla` crate). Everything else in the workspace, including the
+//! cost-model serving path, builds and runs without it.
 
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod model;
 pub mod sampler;
 
+#[cfg(feature = "pjrt")]
 pub use executor::{GenRequest, RealExecutor};
 pub use manifest::{ArtifactEntry, ArtifactKind, Manifest, ModelInfo};
+#[cfg(feature = "pjrt")]
 pub use model::ModelRuntime;
 pub use sampler::{argmax, top_k_deterministic};

@@ -6,7 +6,8 @@
 //! through as a functional input/output (the multi-output jax functions
 //! come back as one tuple literal which we decompose host-side).
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 use std::collections::HashMap;
 use std::path::Path;
 use xla::FromRawBytes;
@@ -50,29 +51,29 @@ impl ModelRuntime {
     /// Load manifest + weights and compile every artifact.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
 
         // weights.npz → positional literal list
         let named: Vec<(String, xla::Literal)> =
             xla::Literal::read_npz(&manifest.weights_file, &())
-                .map_err(|e| anyhow!("reading {:?}: {e:?}", manifest.weights_file))?;
+                .map_err(|e| err!("reading {:?}: {e:?}", manifest.weights_file))?;
         let mut by_name: HashMap<String, xla::Literal> = named.into_iter().collect();
         let mut weights = Vec::with_capacity(manifest.param_order.len());
         for name in &manifest.param_order {
             let lit = by_name
                 .remove(name)
-                .ok_or_else(|| anyhow!("weights.npz missing parameter {name}"))?;
+                .ok_or_else(|| err!("weights.npz missing parameter {name}"))?;
             weights.push(lit);
         }
 
         let mut executables = HashMap::new();
         for art in &manifest.artifacts {
             let proto = xla::HloModuleProto::from_text_file(&art.file)
-                .map_err(|e| anyhow!("parsing {:?}: {e:?}", art.file))?;
+                .map_err(|e| err!("parsing {:?}: {e:?}", art.file))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", art.name))?;
+                .map_err(|e| err!("compiling {}: {e:?}", art.name))?;
             executables.insert(art.name.clone(), exe);
         }
 
@@ -88,10 +89,10 @@ impl ModelRuntime {
         ];
         let k_cache = xla::Literal::vec1(&zeros)
             .reshape(&dims)
-            .map_err(|e| anyhow!("kv reshape: {e:?}"))?;
+            .map_err(|e| err!("kv reshape: {e:?}"))?;
         let v_cache = xla::Literal::vec1(&zeros)
             .reshape(&dims)
-            .map_err(|e| anyhow!("kv reshape: {e:?}"))?;
+            .map_err(|e| err!("kv reshape: {e:?}"))?;
 
         Ok(ModelRuntime { manifest, client, executables, weights, k_cache, v_cache, steps: 0 })
     }
@@ -109,9 +110,9 @@ impl ModelRuntime {
             (m.hidden / m.heads) as i64,
         ];
         self.k_cache =
-            xla::Literal::vec1(&zeros).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+            xla::Literal::vec1(&zeros).reshape(&dims).map_err(|e| err!("{e:?}"))?;
         self.v_cache =
-            xla::Literal::vec1(&zeros).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+            xla::Literal::vec1(&zeros).reshape(&dims).map_err(|e| err!("{e:?}"))?;
         Ok(())
     }
 
@@ -120,7 +121,7 @@ impl ModelRuntime {
         let exe = self
             .executables
             .get(name)
-            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+            .ok_or_else(|| err!("no artifact named {name}"))?;
         // inputs: params..., k, v, step inputs...
         let mut inputs: Vec<&xla::Literal> = self.weights.iter().collect();
         inputs.push(&self.k_cache);
@@ -130,11 +131,11 @@ impl ModelRuntime {
         }
         let result = exe
             .execute::<&xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+            .map_err(|e| err!("executing {name}: {e:?}"))?;
         let tuple = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        let mut parts = tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+            .map_err(|e| err!("fetch {name}: {e:?}"))?;
+        let mut parts = tuple.to_tuple().map_err(|e| err!("untuple {name}: {e:?}"))?;
         if parts.len() != n_extra_outputs + 2 {
             bail!("{name}: expected {} outputs, got {}", n_extra_outputs + 2, parts.len());
         }
@@ -146,7 +147,7 @@ impl ModelRuntime {
     }
 
     fn logits_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
-        lit.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))
+        lit.to_vec::<f32>().map_err(|e| err!("logits: {e:?}"))
     }
 
     /// One chunked-prefill iteration: `tokens` (≤ bucket size) of the
@@ -157,7 +158,7 @@ impl ModelRuntime {
         let art = self
             .manifest
             .prefill_bucket(len)
-            .ok_or_else(|| anyhow!("no prefill bucket fits {len} tokens"))?;
+            .ok_or_else(|| err!("no prefill bucket fits {len} tokens"))?;
         let bucket = art.chunk.unwrap();
         let name = art.name.clone();
         let mut padded = tokens.to_vec();
@@ -179,7 +180,7 @@ impl ModelRuntime {
         let art = self
             .manifest
             .decode_artifact()
-            .ok_or_else(|| anyhow!("no decode artifact"))?;
+            .ok_or_else(|| err!("no decode artifact"))?;
         let d = art.dslots.unwrap();
         let name = art.name.clone();
         if lanes.len() > d {
@@ -216,7 +217,7 @@ impl ModelRuntime {
         let art = self
             .manifest
             .hybrid_bucket(len)
-            .ok_or_else(|| anyhow!("no hybrid bucket fits {len} tokens"))?;
+            .ok_or_else(|| err!("no hybrid bucket fits {len} tokens"))?;
         let bucket = art.chunk.unwrap();
         let d = art.dslots.unwrap();
         let name = art.name.clone();

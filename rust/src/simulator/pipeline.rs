@@ -270,8 +270,8 @@ impl PipelineSim {
                 && r.prefilled == r.spec.prompt_len
                 && r.decoded >= r.spec.decode_len
             {
-                let slot = pool.complete(req, now);
-                kv.release(slot);
+                let blocks = pool.complete(req, now);
+                kv.release_seq(blocks);
                 finished.push(req);
             }
         }

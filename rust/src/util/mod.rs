@@ -1,10 +1,13 @@
 //! Small self-contained utilities: deterministic PRNG, statistics helpers,
-//! and a miniature property-testing driver (the offline crate set has no
-//! `rand`/`proptest`, so we carry our own).
+//! string-backed error plumbing, and a miniature property-testing driver
+//! (the offline crate set has no `rand`/`proptest`/`anyhow`, so we carry
+//! our own).
 
+pub mod error;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use error::{Context, Error, Result};
 pub use rng::Rng;
 pub use stats::{mean, percentile, Summary};

@@ -1,0 +1,138 @@
+//! Acceptance tests for the stall-free token-budget policy over paged KV
+//! (the Sarathi-Serve production form of SARATHI's batching, evaluated the
+//! DistServe way: TTFT/TBT as first-class metrics).
+//!
+//! Headline claims, asserted on the calibrated cost-model sim:
+//! * under Poisson arrivals the hybrid policy reaches a LOWER P99
+//!   time-between-tokens than the seed SarathiScheduler at equal-or-better
+//!   throughput;
+//! * on a Zipf-length population the paged KvManager admits strictly more
+//!   concurrent requests than the §4.3.1 worst-case slot formula;
+//! * preemption events are visible in `Metrics`.
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig};
+use sarathi::coordinator::sched::{HybridScheduler, SarathiScheduler};
+use sarathi::coordinator::{Engine, KvManager, LatencyReport, RequestPool, Scheduler, SimExecutor};
+use sarathi::costmodel::CostModel;
+use sarathi::util::Rng;
+use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
+
+/// The shared testbed: LLaMA-13B on A6000 at L=2048, Zipf(0.4) lengths in
+/// [256, 2048] at P:D = 5, Poisson arrivals. Decode-heavy enough that the
+/// §4.3.1 slot cap visibly starves the seed scheduler's decode phase.
+fn testbed() -> (Deployment, Vec<RequestSpec>) {
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
+    let mut rng = Rng::new(9);
+    let pop = zipf_population(&mut rng, 150, 0.4, 256, 2048, 5.0);
+    let pop = with_poisson_arrivals(&mut rng, pop, 1.2);
+    (d, pop)
+}
+
+fn run(d: &Deployment, pop: &[RequestSpec], kv: KvManager, sched: Box<dyn Scheduler>) -> Engine<'static> {
+    let mut e = Engine::new(
+        RequestPool::from_specs(pop),
+        kv,
+        sched,
+        Box::new(SimExecutor::new(CostModel::for_deployment(d))),
+    );
+    e.run();
+    assert!(e.pool.all_complete());
+    e
+}
+
+#[test]
+fn hybrid_beats_sarathi_p99_tbt_at_equal_or_better_throughput() {
+    let (d, pop) = testbed();
+    let b = d.max_batch_size(); // the seed's worst-case slot count
+
+    // seed configuration: slot KV (degenerate blocks), C=256, B slots
+    let sar = run(
+        &d,
+        &pop,
+        KvManager::new(b),
+        Box::new(SarathiScheduler::new(256, b, 128)),
+    );
+    // hybrid: same GPU memory as a paged block pool, token budget 128,
+    // up to 2B concurrent sequences, 2-block admission watermark
+    let hyb = run(
+        &d,
+        &pop,
+        KvManager::paged(d.kv_blocks(32), 32),
+        Box::new(HybridScheduler::new(128, 2 * b, 2)),
+    );
+
+    let sar_tbt = LatencyReport::from_pool(&sar.pool).tbt;
+    let hyb_tbt = LatencyReport::from_pool(&hyb.pool).tbt;
+    let (sp99, hp99) = (sar_tbt.percentile(99.0), hyb_tbt.percentile(99.0));
+    assert!(
+        hp99 < sp99 * 0.97,
+        "p99 TBT: hybrid {:.1}ms !< sarathi {:.1}ms",
+        hp99 * 1e3,
+        sp99 * 1e3
+    );
+
+    let (st, ht) = (sar.metrics.throughput(), hyb.metrics.throughput());
+    assert!(
+        ht >= st * 1.05,
+        "throughput: hybrid {ht:.0} tok/s !>= sarathi {st:.0} tok/s"
+    );
+}
+
+#[test]
+fn paged_kv_admits_more_than_worst_case_slot_formula() {
+    let (d, pop) = testbed();
+    let b = d.max_batch_size();
+    let hyb = run(
+        &d,
+        &pop,
+        KvManager::paged(d.kv_blocks(32), 32),
+        Box::new(HybridScheduler::new(128, 2 * b, 2)),
+    );
+    // the Zipf population's actual lengths run well under the 2048-token
+    // worst case, so block-granular accounting fits strictly more
+    // concurrent requests into the SAME memory than the slot formula
+    assert!(
+        hyb.metrics.peak_active() > b,
+        "peak concurrency {} !> worst-case B={b}",
+        hyb.metrics.peak_active()
+    );
+    // and the per-iteration records expose the occupancy that proves it
+    assert!(hyb.metrics.iterations.iter().any(|r| r.n_active > b));
+}
+
+#[test]
+fn preemption_events_are_visible_in_metrics() {
+    let (d, pop) = testbed();
+    let b = d.max_batch_size();
+    let hyb = run(
+        &d,
+        &pop,
+        KvManager::paged(d.kv_blocks(32), 32),
+        Box::new(HybridScheduler::new(128, 2 * b, 2)),
+    );
+    // admission runs close to the memory edge, so decode growth must
+    // occasionally preempt — and the metrics must show it, both in total
+    // and on the per-iteration records
+    assert!(hyb.metrics.preemptions > 0, "no preemptions recorded");
+    let per_iter: usize = hyb.metrics.iterations.iter().map(|r| r.preemptions).sum();
+    assert_eq!(per_iter, hyb.metrics.preemptions);
+    let per_req: usize = hyb.pool.iter().map(|r| r.preemptions).sum();
+    assert_eq!(per_req, hyb.metrics.preemptions);
+}
+
+#[test]
+fn hybrid_matches_sarathi_on_its_home_turf() {
+    // sanity guard against regressions in the seed policy's sweet spot: a
+    // steady uniform P:D=50 workload where decode-maximal batching shines.
+    // The hybrid policy (budget 256 = the chunk) must stay within 10% of
+    // SarathiScheduler's throughput under identical degenerate slots.
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 1024);
+    let pop: Vec<RequestSpec> = (0..24)
+        .map(|_| RequestSpec { prompt_len: 1004, decode_len: 20, arrival: 0.0 })
+        .collect();
+    let b = 6usize;
+    let sar = run(&d, &pop, KvManager::new(b), Box::new(SarathiScheduler::new(256, b, 128)));
+    let hyb = run(&d, &pop, KvManager::new(b), Box::new(HybridScheduler::new(256, b, 0)));
+    let ratio = hyb.metrics.throughput() / sar.metrics.throughput();
+    assert!(ratio > 0.9, "hybrid/sarathi throughput ratio {ratio}");
+}

@@ -1,0 +1,180 @@
+//! Property tests for the token-granular paged KV block allocator and the
+//! engine's preemption path (alongside scheduler_properties.rs):
+//!
+//! * alloc/extend/release churn never double-frees and never loses blocks,
+//! * allocated blocks never exceed capacity; failed calls change nothing,
+//! * under an undersized pool the engine preempts, yet every request
+//!   completes, token conservation holds, and every block comes back.
+
+use sarathi::coordinator::sched::HybridScheduler;
+use sarathi::coordinator::{Engine, KvManager, RequestPool, SimExecutor};
+use sarathi::config::{GpuConfig, ModelConfig};
+use sarathi::costmodel::CostModel;
+use sarathi::util::prop::check;
+use sarathi::workload::RequestSpec;
+
+#[test]
+fn churn_preserves_allocator_invariants() {
+    check("paged alloc/extend/release churn", 60, |case| {
+        let bs = *case.rng.choose(&[4usize, 8, 16, 64]);
+        let num_blocks = case.rng.usize(1, 40);
+        let mut kv = KvManager::paged(num_blocks, bs);
+        // model: live sequences as (tokens, table)
+        let mut seqs: Vec<(usize, Vec<usize>)> = Vec::new();
+        for _ in 0..200 {
+            match case.rng.usize(0, 2) {
+                // start a new sequence with a random initial footprint
+                0 => {
+                    let tokens = case.rng.usize(1, 3 * bs);
+                    let mut table = Vec::new();
+                    let before = kv.available();
+                    if kv.extend_to(&mut table, tokens) {
+                        if table.len() != kv.blocks_needed(tokens) {
+                            return Err("table size != blocks_needed".into());
+                        }
+                        seqs.push((tokens, table));
+                    } else {
+                        if kv.available() != before || !table.is_empty() {
+                            return Err("failed extend must be a no-op".into());
+                        }
+                    }
+                }
+                // grow a random sequence
+                1 if !seqs.is_empty() => {
+                    let i = case.rng.usize(0, seqs.len() - 1);
+                    let grow = case.rng.usize(1, 2 * bs);
+                    let target = seqs[i].0 + grow;
+                    let len_before = seqs[i].1.len();
+                    let avail_before = kv.available();
+                    if kv.extend_to(&mut seqs[i].1, target) {
+                        seqs[i].0 = target;
+                        if seqs[i].1.len() != kv.blocks_needed(target) {
+                            return Err("grown table size != blocks_needed".into());
+                        }
+                    } else if seqs[i].1.len() != len_before || kv.available() != avail_before {
+                        return Err("failed grow must be a no-op".into());
+                    }
+                }
+                // release a random sequence
+                _ if !seqs.is_empty() => {
+                    let i = case.rng.usize(0, seqs.len() - 1);
+                    let (_, table) = seqs.swap_remove(i);
+                    kv.release_seq(table); // double-free would panic
+                }
+                _ => {}
+            }
+            // global invariants after every operation
+            let held: usize = seqs.iter().map(|(_, t)| t.len()).sum();
+            if kv.allocated() != held {
+                return Err(format!("allocated {} != held {held}", kv.allocated()));
+            }
+            if kv.allocated() + kv.available() != kv.capacity() {
+                return Err("allocated + available != capacity".into());
+            }
+            // no block owned twice
+            let mut seen = std::collections::HashSet::new();
+            for (_, t) in &seqs {
+                for &b in t {
+                    if !seen.insert(b) {
+                        return Err(format!("block {b} owned twice"));
+                    }
+                }
+            }
+        }
+        for (_, t) in seqs.drain(..) {
+            kv.release_seq(t);
+        }
+        if kv.available() != kv.capacity() {
+            return Err("blocks leaked after full release".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn preempted_requests_eventually_complete_and_conserve_tokens() {
+    let mut total_preemptions = 0usize;
+    check("engine preemption under block pressure", 60, |case| {
+        let n = 1 + case.rng.usize(0, 3 + case.size);
+        let specs: Vec<RequestSpec> = (0..n)
+            .map(|_| RequestSpec {
+                prompt_len: case.rng.usize(16, 240),
+                decode_len: case.rng.usize(1, 24),
+                arrival: case.rng.f64() * 0.2,
+            })
+            .collect();
+        let bs = *case.rng.choose(&[8usize, 16, 32]);
+        let watermark = case.rng.usize(0, 2);
+        // pool sized to fit the single largest request plus the watermark
+        // (anything smaller trips the admission feasibility guard by
+        // design), plus a little random slack — tight enough that decode
+        // growth forces preemptions in a healthy share of cases
+        let peak = specs.iter().map(|s| s.prompt_len + s.decode_len).max().unwrap();
+        let probe = KvManager::paged(1, bs);
+        let num_blocks = probe.blocks_needed(peak + 1) + watermark + case.rng.usize(0, 6);
+        let max_batch = case.rng.usize(2, 8);
+        let budget = (*case.rng.choose(&[32usize, 64, 128])).max(max_batch);
+
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::paged(num_blocks, bs),
+            Box::new(HybridScheduler::new(budget, max_batch, watermark)),
+            Box::new(SimExecutor::new(cm)),
+        );
+        e.run();
+
+        if !e.pool.all_complete() {
+            return Err("incomplete requests".into());
+        }
+        // token conservation under preemption (swap semantics: progress is
+        // never recomputed, so scheduled tokens match the workload exactly)
+        let p_expect: usize = specs.iter().map(|s| s.prompt_len).sum();
+        let d_expect: usize = specs.iter().map(|s| s.decode_len - 1).sum();
+        if e.metrics.total_prefill_tokens() != p_expect {
+            return Err(format!(
+                "prefill tokens {} != {p_expect}",
+                e.metrics.total_prefill_tokens()
+            ));
+        }
+        if e.metrics.total_decode_tokens() != d_expect {
+            return Err(format!(
+                "decode tokens {} != {d_expect}",
+                e.metrics.total_decode_tokens()
+            ));
+        }
+        // every block returned
+        if e.kv.available() != num_blocks {
+            return Err("leaked KV blocks".into());
+        }
+        // metrics agree with per-request preemption counters
+        let per_req: usize = e.pool.iter().map(|r| r.preemptions).sum();
+        if e.metrics.preemptions != per_req {
+            return Err(format!(
+                "metrics preemptions {} != per-request {per_req}",
+                e.metrics.preemptions
+            ));
+        }
+        // timestamps: tokens are monotone, first token precedes completion
+        for r in e.pool.iter() {
+            if r.token_times.windows(2).any(|w| w[1] < w[0]) {
+                return Err(format!("request {} token times not monotone", r.id));
+            }
+            let first = r.first_token_at.ok_or("missing first token")?;
+            let done = r.completed_at.ok_or("missing completion")?;
+            if first > done + 1e-12 {
+                return Err("first token after completion".into());
+            }
+        }
+        total_preemptions += e.metrics.preemptions;
+        Ok(())
+    });
+    // the generator is tuned so block pressure actually bites: across the
+    // 60 cases a healthy number of preemption events must have fired
+    // (prompt-reserving admission makes preemption rare but decode growth
+    // past tight pools still triggers it — ~33 events at these seeds)
+    assert!(
+        total_preemptions > 10,
+        "only {total_preemptions} preemptions across all cases — pressure generator broken?"
+    );
+}

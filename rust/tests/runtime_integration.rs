@@ -2,8 +2,10 @@
 //! the tiny model, and verify the SARATHI scheduling invariants hold on the
 //! real execution path (not just the simulator).
 //!
-//! These require `make artifacts`; they are skipped (with a note) if the
-//! artifacts directory is missing.
+//! These require `make artifacts` and the `pjrt` cargo feature (the xla
+//! PJRT bindings are not available offline); they are skipped (with a
+//! note) if the artifacts directory is missing.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -4,7 +4,9 @@
 //! util::prop).
 
 use sarathi::config::{GpuConfig, ModelConfig};
-use sarathi::coordinator::sched::{OrcaScheduler, RequestLevelScheduler, SarathiScheduler};
+use sarathi::coordinator::sched::{
+    HybridScheduler, OrcaScheduler, RequestLevelScheduler, SarathiScheduler,
+};
 use sarathi::coordinator::{
     Batch, Engine, Executor, KvManager, RequestPool, Scheduler, SimExecutor, StepOutcome,
 };
@@ -24,10 +26,14 @@ fn rand_workload(case: &mut Case) -> Vec<RequestSpec> {
 }
 
 fn make_sched(case: &mut Case, max_batch: usize) -> (Box<dyn Scheduler>, &'static str) {
-    match case.rng.usize(0, 3) {
+    match case.rng.usize(0, 4) {
         0 => (Box::new(RequestLevelScheduler::new(max_batch)), "request-level"),
         1 => (Box::new(OrcaScheduler::best(max_batch)), "orca-best"),
         2 => (Box::new(OrcaScheduler::worst(max_batch)), "orca-worst"),
+        3 => {
+            let budget = *case.rng.choose(&[64usize, 128, 256]);
+            (Box::new(HybridScheduler::new(budget.max(max_batch), max_batch, 0)), "hybrid")
+        }
         _ => {
             let chunk = *case.rng.choose(&[64usize, 128, 256, 512]);
             (Box::new(SarathiScheduler::new(chunk, max_batch, 128)), "sarathi")
@@ -91,7 +97,7 @@ fn every_scheduler_produces_only_valid_batches_and_completes() {
         }
         // every slot returned
         if e.kv.available() != max_batch {
-            return Err("leaked KV slots".into());
+            return Err("leaked KV blocks".into());
         }
         Ok(())
     });
