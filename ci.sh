@@ -15,4 +15,15 @@ cargo build --release
 echo "== test (tier 1) =="
 cargo test -q
 
+echo "== smoke: quickstart example (cost-model path without pjrt) =="
+cargo run --release --example quickstart
+
+echo "== smoke: pipeline-mode simulate writes a non-empty JSONL trace =="
+TRACE="$(mktemp -t pipe_trace.XXXXXX.jsonl)"
+cargo run --release -- simulate --requests 80 --pp 4 --scheduler hybrid \
+    --block-size 64 --json-out "$TRACE"
+test -s "$TRACE" || { echo "empty JSONL trace"; exit 1; }
+head -c 200 "$TRACE"; echo
+rm -f "$TRACE"
+
 echo "CI gauntlet passed."

@@ -1,19 +1,27 @@
-//! Quickstart: load the AOT-compiled tiny model through PJRT and generate
-//! text greedily — the smallest possible end-to-end use of the stack.
+//! Quickstart: the smallest possible end-to-end use of the stack.
+//!
+//! With the `pjrt` feature (and `make artifacts`), the AOT-compiled tiny
+//! model loads through PJRT and generates text greedily (the "tokenizer"
+//! is byte-level, vocab 256, so any ASCII prompt works; the weights are
+//! synthetic, so the continuation is gibberish — the point is the full
+//! path HLO text -> PJRT compile -> chunked prefill -> decode loop):
 //!
 //!     make artifacts && cargo run --release --features pjrt --example quickstart
 //!
-//! The "tokenizer" is byte-level (vocab 256), so any ASCII prompt works;
-//! the model has synthetic weights, so the continuation is gibberish — the
-//! point is the full path: HLO text -> PJRT compile -> chunked prefill ->
-//! decode loop, all from rust.
+//! Without it (the default offline build), the calibrated cost-model
+//! simulator stands in: the same engine loop serves a small workload with
+//! the hybrid token-budget scheduler over a paged KV pool — the CI smoke
+//! path, no artifacts required:
+//!
+//!     cargo run --release --example quickstart
 
-use std::path::PathBuf;
-
-use sarathi::runtime::ModelRuntime;
 use sarathi::util::error::Result;
 
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
+    use sarathi::runtime::ModelRuntime;
+    use std::path::PathBuf;
+
     let dir = PathBuf::from(
         std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
     );
@@ -44,5 +52,40 @@ fn main() -> Result<()> {
     println!("generated {} tokens in {:.3}s ({:.1} tok/s): {text:?}",
         out.len(), dt, out.len() as f64 / dt);
     println!("steps executed: {}", rt.steps);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() -> Result<()> {
+    use sarathi::config::{Deployment, GpuConfig, ModelConfig, SchedulerConfig};
+    use sarathi::coordinator::{
+        make_scheduler, Engine, KvManager, LatencyReport, RequestPool, SimExecutor,
+    };
+    use sarathi::costmodel::CostModel;
+    use sarathi::workload::uniform_population;
+
+    println!("pjrt feature off — quickstart over the calibrated cost model");
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
+    let block_size = 32;
+    let cfg = SchedulerConfig::hybrid(256, 2 * d.max_batch_size()).with_block_size(block_size);
+    let pop = uniform_population(12, 1024, 10.0);
+    let mut engine = Engine::new(
+        RequestPool::from_specs(&pop),
+        KvManager::paged(d.kv_blocks(block_size), block_size),
+        make_scheduler(&cfg),
+        Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
+    );
+    engine.run();
+    let m = &engine.metrics;
+    let lat = LatencyReport::from_pool(&engine.pool);
+    println!(
+        "served {} requests in {} iterations: {:.0} tok/s, p99 TBT {:.1} ms, peak {} active",
+        pop.len(),
+        m.iterations.len(),
+        m.wall_throughput(),
+        lat.tbt.percentile(99.0) * 1e3,
+        m.peak_active(),
+    );
+    assert!(engine.pool.all_complete(), "quickstart must serve everything");
     Ok(())
 }

@@ -62,6 +62,8 @@ fn main() -> Result<()> {
             token_budget: chunk.max(slots),
             block_size: 0,
             watermark_blocks: 0,
+            preemption: sarathi::config::PreemptionMode::Swap,
+            reject_infeasible: false,
         };
         let gen: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
         let mut engine = Engine::new(

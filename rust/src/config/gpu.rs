@@ -43,6 +43,10 @@ pub struct GpuConfig {
     pub kernel_overhead_s: f64,
     /// Point-to-point inter-node link bandwidth for PP activations, GB/s.
     pub p2p_bw_gbps: f64,
+    /// Host link (PCIe) bandwidth for KV swap-out/swap-in, GB/s —
+    /// the DistServe-style price of preempting a request (arXiv
+    /// 2401.09670 charges KV movement at exactly this edge).
+    pub host_bw_gbps: f64,
     /// All-reduce effective bandwidth for TP collectives (NVLink), GB/s.
     pub allreduce_bw_gbps: f64,
 }
@@ -73,6 +77,8 @@ impl GpuConfig {
             attn_ramp_alpha: 0.22,
             kernel_overhead_s: 5.0e-6,
             p2p_bw_gbps: 25.0,
+            // PCIe 4.0 x16 ≈ 32 GB/s peak; ~25 effective for bulk copies
+            host_bw_gbps: 25.0,
             allreduce_bw_gbps: 300.0,
         }
     }
@@ -96,6 +102,7 @@ impl GpuConfig {
             attn_ramp_alpha: 0.22,
             kernel_overhead_s: 5.0e-6,
             p2p_bw_gbps: 25.0,
+            host_bw_gbps: 25.0,
             allreduce_bw_gbps: 300.0,
         }
     }

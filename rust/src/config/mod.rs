@@ -9,7 +9,7 @@ mod sched;
 pub use gpu::GpuConfig;
 pub use model::ModelConfig;
 pub use parallel::ParallelConfig;
-pub use sched::{SchedulerConfig, SchedulerKind};
+pub use sched::{PreemptionMode, SchedulerConfig, SchedulerKind};
 
 /// A full deployment: model × hardware × parallelism. The unit every
 /// experiment is parameterized by.

@@ -47,6 +47,37 @@ impl SchedulerKind {
     }
 }
 
+/// What happens to a preempted request's KV (Sarathi-Serve §B /
+/// DistServe, arXiv 2401.09670): swap it over the host link and back, or
+/// drop it and pay a recompute charge on resume. Priced by
+/// [`crate::coordinator::SwapCost`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PreemptionMode {
+    /// KV crosses the host link (PCIe) on swap-out AND swap-in.
+    #[default]
+    Swap,
+    /// KV is dropped for free; resume pays a recompute charge instead.
+    Recompute,
+}
+
+impl PreemptionMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptionMode::Swap => "swap",
+            PreemptionMode::Recompute => "recompute",
+        }
+    }
+
+    /// Parse a CLI name (the inverse of [`name`](Self::name)).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "swap" => PreemptionMode::Swap,
+            "recompute" => PreemptionMode::Recompute,
+            _ => return None,
+        })
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     pub kind: SchedulerKind,
@@ -66,6 +97,13 @@ pub struct SchedulerConfig {
     pub block_size: usize,
     /// Hybrid admission watermark: free blocks reserved for decode growth.
     pub watermark_blocks: usize,
+    /// How preempted KV is recovered (and therefore priced).
+    pub preemption: PreemptionMode,
+    /// Open-loop serving stance: reject infeasible requests into a
+    /// terminal state instead of panicking the whole run (see
+    /// [`crate::coordinator::InfeasiblePolicy`]). Figure-repro /
+    /// closed-loop runs keep the default loud panic.
+    pub reject_infeasible: bool,
 }
 
 impl SchedulerConfig {
@@ -78,6 +116,8 @@ impl SchedulerConfig {
             token_budget: 0,
             block_size: 0,
             watermark_blocks: 0,
+            preemption: PreemptionMode::Swap,
+            reject_infeasible: false,
         }
     }
 
@@ -104,17 +144,46 @@ impl SchedulerConfig {
             max_batch,
             token_budget,
             block_size: 0,
+            // 0 is right for the degenerate slot layout (no growth, so
+            // nothing to reserve); with_block_size raises it — under the
+            // costed swap path, admitting to zero free blocks forces a
+            // preemption on the very next decode step, and each one now
+            // pays KV-bytes-over-PCIe, so a small standing reserve is
+            // cheaper than the transfer churn.
             watermark_blocks: 0,
+            preemption: PreemptionMode::Swap,
+            reject_infeasible: false,
         }
     }
 
+    /// Default decode-growth reserve for paged pools (revisited against
+    /// the costed swap path — see `watermark_blocks` in
+    /// [`hybrid`](Self::hybrid)).
+    pub const PAGED_WATERMARK: usize = 2;
+
+    /// Switch to a paged KV pool of `block_size`-token blocks; raises the
+    /// admission watermark to [`Self::PAGED_WATERMARK`] when unset.
     pub fn with_block_size(mut self, block_size: usize) -> Self {
         self.block_size = block_size;
+        if block_size > 0 && self.watermark_blocks == 0 {
+            self.watermark_blocks = Self::PAGED_WATERMARK;
+        }
         self
     }
 
     pub fn with_watermark(mut self, watermark_blocks: usize) -> Self {
         self.watermark_blocks = watermark_blocks;
+        self
+    }
+
+    pub fn with_preemption(mut self, mode: PreemptionMode) -> Self {
+        self.preemption = mode;
+        self
+    }
+
+    /// Open-loop stance: reject infeasible requests instead of panicking.
+    pub fn with_reject_infeasible(mut self) -> Self {
+        self.reject_infeasible = true;
         self
     }
 }
@@ -145,5 +214,32 @@ mod tests {
         assert_eq!(c.token_budget, 256);
         assert_eq!(c.block_size, 32);
         assert_eq!(c.watermark_blocks, 2);
+    }
+
+    #[test]
+    fn paged_pools_get_a_default_watermark() {
+        // degenerate layout reserves nothing; switching to paged raises the
+        // watermark (costed swaps make zero-headroom admission expensive)
+        let c = SchedulerConfig::hybrid(256, 16);
+        assert_eq!(c.watermark_blocks, 0);
+        let c = c.with_block_size(32);
+        assert_eq!(c.watermark_blocks, SchedulerConfig::PAGED_WATERMARK);
+        // an explicit choice is never overridden
+        let c = SchedulerConfig::hybrid(256, 16).with_watermark(5).with_block_size(32);
+        assert_eq!(c.watermark_blocks, 5);
+    }
+
+    #[test]
+    fn preemption_mode_round_trips_and_flags_compose() {
+        for m in [PreemptionMode::Swap, PreemptionMode::Recompute] {
+            assert_eq!(PreemptionMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PreemptionMode::parse("nope"), None);
+        let c = SchedulerConfig::hybrid(256, 16)
+            .with_preemption(PreemptionMode::Recompute)
+            .with_reject_infeasible();
+        assert_eq!(c.preemption, PreemptionMode::Recompute);
+        assert!(c.reject_infeasible);
+        assert!(!SchedulerConfig::sarathi(256, 8).reject_infeasible);
     }
 }

@@ -4,28 +4,26 @@
 //! cost-model simulator for the paper's large-model experiments and (b) the
 //! real PJRT runtime serving the tiny model (rust/src/runtime).
 //!
-//! The engine owns the token-granular KV bookkeeping: after each iteration
-//! it grows every touched request's block table to cover the KV it now
-//! holds (plus a one-token lookahead for its next step), and when the pool
-//! runs dry it **preempts** — the most-recently-arrived admitted request is
-//! swapped out (blocks released, progress retained) and re-queued FCFS.
-//! Schedulers stay oblivious to growth; only their admission gate is
-//! memory-aware. Under the degenerate block size a request's single block
-//! always covers its sequence, so growth is a no-op and preemption never
-//! fires — the seed behavior.
+//! The state transition itself — progress counters, token stamping,
+//! completion release, token-granular block growth and LIFO preemption —
+//! lives in [`StepApplier`] (coordinator/step.rs), SHARED with the
+//! pipeline simulator so the two can never drift. Schedulers stay
+//! oblivious to growth; only their admission gate is memory-aware. Under
+//! the degenerate block size a request's single block always covers its
+//! sequence, so growth is a no-op and preemption never fires — the seed
+//! behavior.
 //!
-//! Modeling caveat: the swap itself is currently FREE in simulated time —
-//! a victim loses its blocks and later reclaims them with no transfer or
-//! recompute cost, so preemption-heavy runs understate the real penalty.
-//! Costing the swap (KV bytes over host bandwidth, or a recompute
-//! variant) is a ROADMAP open item; preemption counts in [`Metrics`] make
-//! the exposure visible per run.
+//! Preemption is costed through the applier's [`SwapCost`]: swap-out
+//! transfer time extends the iteration, and a resumed victim's swap-in
+//! (or recompute) charge delays the iteration that re-admits it. The
+//! default [`SwapCost::free`] keeps the seed's zero-cost semantics.
 
 use super::batch::Batch;
 use super::kv::KvManager;
 use super::metrics::{IterationRecord, Metrics};
 use super::pool::RequestPool;
 use super::sched::Scheduler;
+use super::step::{StepApplier, SwapCost};
 use crate::costmodel::CostModel;
 
 /// Result of executing one batch.
@@ -87,6 +85,9 @@ pub struct Engine<'a> {
     pub executor: Box<dyn Executor + 'a>,
     pub metrics: Metrics,
     pub now: f64,
+    /// The shared state transition (also driven by the pipeline
+    /// simulator); carries the preemption [`SwapCost`].
+    pub applier: StepApplier,
     /// Validate every batch against the structural invariants (cheap; on by
     /// default — a scheduler bug must not silently corrupt an experiment).
     pub validate: bool,
@@ -108,15 +109,29 @@ impl<'a> Engine<'a> {
             executor,
             metrics: Metrics::new(),
             now: 0.0,
+            applier: StepApplier::new(),
             validate: true,
             max_iterations: 10_000_000,
         }
     }
 
+    /// Price the preemption path (seed default: free swaps).
+    pub fn with_swap_cost(mut self, swap: SwapCost) -> Self {
+        self.applier = StepApplier::with_cost(swap);
+        self
+    }
+
     /// Run one iteration. Returns false when there is no work left at all.
     pub fn step(&mut self) -> bool {
         let batch = self.scheduler.schedule(&mut self.pool, &mut self.kv, self.now);
+        // admission may have rejected infeasible requests (open-loop
+        // policy) or swapped preempted victims back in — account for both.
+        // Rejections ride on this iteration's record (Metrics::record
+        // accumulates them); an idle step has no record, so count directly.
+        let rejections = self.pool.take_rejected_events();
+        let swap_in = self.applier.swap.swap_in_time(self.pool.take_swapped_in_tokens());
         if batch.is_empty() {
+            self.metrics.rejections += rejections;
             // idle: jump to the next arrival if one exists
             if let Some(t) = self.pool.next_arrival(self.now) {
                 self.now = t;
@@ -137,11 +152,18 @@ impl<'a> Engine<'a> {
         }
         let outcome = self.executor.execute(&batch, &self.pool);
         let shape = batch.shape(&self.pool);
-        // the iteration's tokens/completions land at now + elapsed — NOT at
-        // `now` (the seed stamped them one iteration early, skewing every
-        // latency sample)
-        let done_at = self.now + outcome.elapsed;
-        let preemptions = self.apply(&batch, done_at);
+        // the iteration's tokens/completions land at now + swap-in +
+        // elapsed — NOT at `now` (the seed stamped them one iteration
+        // early, skewing every latency sample); a resumed victim's KV must
+        // finish its host transfer before the batch can run
+        let done_at = self.now + swap_in + outcome.elapsed;
+        let effects = self.applier.apply(
+            std::slice::from_mut(&mut self.pool),
+            0,
+            &mut self.kv,
+            &batch,
+            done_at,
+        );
         self.metrics.record(IterationRecord {
             started_at: self.now,
             elapsed: outcome.elapsed,
@@ -151,84 +173,14 @@ impl<'a> Engine<'a> {
             kv_blocks_in_use: self.kv.allocated(),
             kv_blocks_total: self.kv.capacity(),
             n_active: self.pool.active_count(),
-            preemptions,
+            preemptions: effects.preemptions,
             kv_frag_tokens: self.kv.internal_fragmentation(self.pool.live_kv_tokens()),
+            swap_time: swap_in + effects.swap_time,
+            rejections,
         });
-        self.now = done_at;
+        // swap-out transfers of this iteration's victims delay the next
+        self.now = done_at + effects.swap_time;
         true
-    }
-
-    /// Advance request state for an executed batch: progress counters,
-    /// completions (blocks released), then token-granular KV growth with
-    /// preemption as the fallback when the pool runs dry. Returns the
-    /// number of preemption events.
-    fn apply(&mut self, batch: &Batch, done_at: f64) -> usize {
-        for (req, _start, len) in batch.prefill_items() {
-            let r = self.pool.get_mut(req);
-            r.prefilled += len;
-            if r.prefilled == r.spec.prompt_len {
-                // the final chunk's logits yield the first output token
-                r.decoded = 1;
-                r.first_token_at = Some(done_at);
-                r.token_times.push(done_at);
-            }
-        }
-        for req in batch.decode_items() {
-            let r = self.pool.get_mut(req);
-            r.decoded += 1;
-            r.token_times.push(done_at);
-        }
-        // completions first: their blocks fund the growth below
-        for req in batch.requests() {
-            let r = self.pool.get(req);
-            if r.completed_at.is_none()
-                && r.prefilled == r.spec.prompt_len
-                && r.decoded >= r.spec.decode_len
-            {
-                let blocks = self.pool.complete(req, done_at);
-                self.kv.release_seq(blocks);
-            }
-        }
-        // token-granular growth: every surviving touched request's block
-        // table must cover its KV plus one token of lookahead for the next
-        // step. Degenerate blocks make this a no-op.
-        let mut preemptions = 0;
-        for req in batch.requests() {
-            loop {
-                let r = self.pool.get(req);
-                if !r.is_admitted() {
-                    break; // completed above, or preempted as a victim
-                }
-                let target = r.kv_len() + 1;
-                if self.kv.extend_to(&mut self.pool.get_mut(req).blocks, target) {
-                    break;
-                }
-                // out of blocks: preempt the most-recently-arrived OTHER
-                // admitted request (LIFO victims, FCFS resume); fall back
-                // to self-preemption when this request is the only one left
-                let victim = self
-                    .pool
-                    .active_ids()
-                    .iter()
-                    .copied()
-                    .filter(|&v| v != req)
-                    .max_by(|&a, &b| {
-                        let (ra, rb) = (self.pool.get(a), self.pool.get(b));
-                        ra.arrival
-                            .partial_cmp(&rb.arrival)
-                            .unwrap()
-                            .then(a.cmp(&b))
-                    })
-                    .unwrap_or(req);
-                let blocks = self.pool.preempt(victim, done_at);
-                self.kv.release_seq(blocks);
-                preemptions += 1;
-                if victim == req {
-                    break; // swapped itself out; it resumes via admission
-                }
-            }
-        }
-        preemptions
     }
 
     /// Drive to completion of every request.
@@ -381,6 +333,69 @@ mod tests {
         assert!((r.completed_at.unwrap() - (last.started_at + last.elapsed)).abs() < 1e-12);
         // and every token time is strictly positive (none at t=0)
         assert!(r.token_times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn costed_preemption_charges_swap_time_and_stretches_the_clock() {
+        use crate::coordinator::step::{PreemptionMode, SwapCost};
+        let specs: Vec<RequestSpec> = (0..4)
+            .map(|_| RequestSpec { prompt_len: 32, decode_len: 40, arrival: 0.0 })
+            .collect();
+        let run = |swap: SwapCost| {
+            let mut e = Engine::new(
+                RequestPool::from_specs(&specs),
+                KvManager::paged(12, 16),
+                Box::new(HybridScheduler::new(64, 8, 0)),
+                sim(),
+            )
+            .with_swap_cost(swap);
+            e.run();
+            e
+        };
+        let free = run(SwapCost::free());
+        assert!(free.metrics.preemptions > 0);
+        assert_eq!(free.metrics.total_swap_time(), 0.0, "free swaps cost nothing");
+        let costed = run(SwapCost {
+            kv_bytes_per_token: 819_200.0, // llama-13b m_kv
+            host_bw: 25.0e9,
+            recompute_s_per_token: 0.0,
+            mode: PreemptionMode::Swap,
+        });
+        assert!(costed.metrics.preemptions > 0);
+        assert!(costed.metrics.total_swap_time() > 0.0, "swaps must be priced");
+        // the transfer time lands on the simulated clock
+        assert!(costed.now > free.now, "costed {} !> free {}", costed.now, free.now);
+        // and everyone still finishes with all blocks returned
+        assert!(costed.pool.all_complete());
+        assert_eq!(costed.kv.available(), 12);
+    }
+
+    #[test]
+    fn open_loop_rejects_oversized_requests_and_serves_the_rest() {
+        use crate::coordinator::sched::admission::InfeasiblePolicy;
+        // request 1 can never fit the 12-block pool (peak 32+200−1 = 15
+        // blocks); under the Reject policy it must not crash the engine or
+        // stall the co-running traffic behind it
+        let specs = [
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.0 },
+            RequestSpec { prompt_len: 32, decode_len: 200, arrival: 0.0 },
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.0 },
+        ];
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::paged(12, 16),
+            Box::new(
+                HybridScheduler::new(64, 8, 0).with_infeasible(InfeasiblePolicy::Reject),
+            ),
+            sim(),
+        );
+        e.run();
+        assert!(e.pool.all_complete(), "rejection is terminal");
+        assert_eq!(e.metrics.rejections, 1);
+        assert_eq!(e.pool.rejected_count(), 1);
+        assert!(e.pool.get(1).rejected_at.is_some());
+        assert!(e.pool.get(0).completed_at.is_some());
+        assert!(e.pool.get(2).completed_at.is_some());
     }
 
     #[test]

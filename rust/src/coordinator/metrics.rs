@@ -42,6 +42,16 @@ pub struct IterationRecord {
     /// Internal fragmentation after this iteration: allocated-but-unused
     /// KV tokens across all block tables (0 under degenerate slots).
     pub kv_frag_tokens: usize,
+    /// Preemption transfer time charged this iteration: swap-in of resumed
+    /// victims plus swap-out of evicted ones (KV bytes over the host link,
+    /// or the recompute charge — see [`crate::coordinator::SwapCost`]).
+    /// Not part of `elapsed` (pure execution time).
+    pub swap_time: f64,
+    /// Requests rejected as infeasible during this iteration's admission
+    /// (only under [`InfeasiblePolicy::Reject`]).
+    ///
+    /// [`InfeasiblePolicy::Reject`]: crate::coordinator::sched::admission::InfeasiblePolicy
+    pub rejections: usize,
 }
 
 impl IterationRecord {
@@ -58,7 +68,15 @@ impl IterationRecord {
             n_active: 0,
             preemptions: 0,
             kv_frag_tokens: 0,
+            swap_time: 0.0,
+            rejections: 0,
         }
+    }
+
+    /// End of this iteration on the simulated clock, including the swap
+    /// charge (the next iteration cannot start before the transfer ends).
+    pub fn ended_at(&self) -> f64 {
+        self.started_at + self.elapsed + self.swap_time
     }
 }
 
@@ -77,8 +95,15 @@ pub struct LatencyReport {
 impl LatencyReport {
     /// Aggregate over every completed request in the pool.
     pub fn from_pool(pool: &RequestPool) -> Self {
+        Self::from_pools(std::slice::from_ref(pool))
+    }
+
+    /// Aggregate across several pools (e.g. one per pipeline stream —
+    /// correct because token stamping is shared via
+    /// [`crate::coordinator::StepApplier`]).
+    pub fn from_pools(pools: &[RequestPool]) -> Self {
         let mut rep = LatencyReport::default();
-        for r in pool.iter() {
+        for r in pools.iter().flat_map(|p| p.iter()) {
             if let Some(first) = r.first_token_at {
                 rep.ttft.add(first - r.arrival);
             }
@@ -98,6 +123,8 @@ pub struct Metrics {
     pub iterations: Vec<IterationRecord>,
     /// Total preemption events across the run.
     pub preemptions: usize,
+    /// Total requests rejected as infeasible across the run.
+    pub rejections: usize,
 }
 
 impl Metrics {
@@ -107,11 +134,33 @@ impl Metrics {
 
     pub fn record(&mut self, rec: IterationRecord) {
         self.preemptions += rec.preemptions;
+        self.rejections += rec.rejections;
         self.iterations.push(rec);
     }
 
+    /// Busy time: sum of iteration execution times (idle gaps and swap
+    /// transfers excluded).
     pub fn total_time(&self) -> f64 {
         self.iterations.iter().map(|r| r.elapsed).sum()
+    }
+
+    /// Total preemption transfer time (swap-out + swap-in / recompute)
+    /// across the run.
+    pub fn total_swap_time(&self) -> f64 {
+        self.iterations.iter().map(|r| r.swap_time).sum()
+    }
+
+    /// Wall-clock span of the run on the simulated clock: first iteration
+    /// start to last iteration end, INCLUDING idle gaps (open-loop
+    /// arrivals) and swap transfers. This is the honest denominator for
+    /// serving throughput — [`total_time`](Self::total_time) counts only
+    /// busy iterations, so Poisson idle gaps would vanish from it and
+    /// overstate throughput.
+    pub fn wall_clock_span(&self) -> f64 {
+        match (self.iterations.first(), self.iterations.last()) {
+            (Some(first), Some(last)) => last.ended_at() - first.started_at,
+            _ => 0.0,
+        }
     }
 
     pub fn total_prefill_tokens(&self) -> usize {
@@ -122,10 +171,25 @@ impl Metrics {
         self.iterations.iter().map(|r| r.shape.decode_tokens()).sum()
     }
 
-    /// End-to-end throughput, tokens per second (prefill + decode tokens —
-    /// the paper's normalized-throughput metric).
+    /// Busy-time throughput, tokens per second over iteration time only
+    /// (prefill + decode tokens — the paper's normalized-throughput
+    /// metric for closed-loop, always-busy experiments).
     pub fn throughput(&self) -> f64 {
         let t = self.total_time();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.total_prefill_tokens() + self.total_decode_tokens()) as f64 / t
+        }
+    }
+
+    /// Wall-clock throughput: tokens over [`wall_clock_span`]
+    /// (idle gaps and swap transfers in the denominator) — the right
+    /// number for open-loop `serve`/`simulate` runs.
+    ///
+    /// [`wall_clock_span`]: Self::wall_clock_span
+    pub fn wall_throughput(&self) -> f64 {
+        let t = self.wall_clock_span();
         if t == 0.0 {
             0.0
         } else {
@@ -217,7 +281,8 @@ impl Metrics {
                 "{{\"iter\":{},\"start\":{:.6},\"elapsed\":{:.6},\
                  \"prefill_chunks\":{},\"prefill_tokens\":{},\"decodes\":{},\
                  \"total_tokens\":{},\"kv_blocks_in_use\":{},\"kv_blocks_total\":{},\
-                 \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{}}}",
+                 \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{},\
+                 \"swap_time\":{:.6},\"rejections\":{}}}",
                 i,
                 r.started_at,
                 r.elapsed,
@@ -230,6 +295,8 @@ impl Metrics {
                 r.kv_frag_tokens,
                 r.n_active,
                 r.preemptions,
+                r.swap_time,
+                r.rejections,
             )?;
         }
         Ok(())
@@ -287,6 +354,32 @@ mod tests {
         m.record(r);
         assert_eq!(m.preemptions, 3);
         assert_eq!(m.peak_active(), 7);
+    }
+
+    #[test]
+    fn wall_clock_span_includes_idle_and_swap_time() {
+        let mut m = Metrics::new();
+        // iteration 0: [0, 1], then a 3s idle gap, then [4, 5] + 0.5s swap
+        m.record(rec(1.0, BatchShape::prefill_only(&[(100, 0)]), None));
+        let mut r = rec(1.0, BatchShape::decode_only(&[10, 10]), None);
+        r.started_at = 4.0;
+        r.swap_time = 0.5;
+        m.record(r);
+        assert!((m.total_time() - 2.0).abs() < 1e-12, "busy time sums elapsed only");
+        assert!((m.wall_clock_span() - 5.5).abs() < 1e-12);
+        assert!((m.total_swap_time() - 0.5).abs() < 1e-12);
+        // 102 tokens: busy throughput 51/s, wall throughput pays idle+swap
+        assert!((m.throughput() - 51.0).abs() < 1e-9);
+        assert!((m.wall_throughput() - 102.0 / 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejections_accumulate() {
+        let mut m = Metrics::new();
+        let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+        r.rejections = 2;
+        m.record(r);
+        assert_eq!(m.rejections, 2);
     }
 
     #[test]

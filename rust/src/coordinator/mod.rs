@@ -12,9 +12,13 @@
 //!   baseline, Orca best/worst iteration-level, SARATHI (chunked-prefills
 //!   + decode-maximal batching), and the Sarathi-Serve-style stall-free
 //!   [`sched::HybridScheduler`].
+//! * [`step`] — the SHARED request-state transition ([`StepApplier`]):
+//!   progress, token stamping, completion release, token-granular KV
+//!   growth and costed LIFO preemption — driven by both the engine and
+//!   the pipeline simulator so they cannot drift.
 //! * [`engine`] — the serving loop: admission → schedule → execute →
-//!   advance, with token-granular KV growth and a preemption path when
-//!   blocks run out; generic over simulated or real (PJRT) executors.
+//!   advance (via [`StepApplier`]); generic over simulated or real (PJRT)
+//!   executors.
 //! * [`metrics`] — per-iteration and per-request accounting (throughput,
 //!   TTFT/TBT/normalized-latency percentiles, preemptions, JSONL traces)
 //!   the figure harness consumes.
@@ -26,6 +30,7 @@ pub mod metrics;
 pub mod pool;
 pub mod request;
 pub mod sched;
+pub mod step;
 
 pub use batch::{Batch, WorkItem};
 pub use engine::{Engine, Executor, SimExecutor, StepOutcome};
@@ -34,6 +39,7 @@ pub use metrics::{IterationRecord, LatencyReport, Metrics};
 pub use pool::RequestPool;
 pub use request::{Phase, Request, RequestId};
 pub use sched::{
-    make_scheduler, Admission, HybridScheduler, OrcaScheduler, RequestLevelScheduler,
-    SarathiScheduler, Scheduler,
+    make_scheduler, Admission, HybridScheduler, InfeasiblePolicy, OrcaScheduler,
+    RequestLevelScheduler, SarathiScheduler, Scheduler,
 };
+pub use step::{PreemptionMode, StepApplier, StepEffects, SwapCost};

@@ -22,7 +22,16 @@ pub struct RequestPool {
     pending_head: usize,
     /// Admitted, not complete (id-sorted).
     active: Vec<RequestId>,
-    n_complete: usize,
+    /// Terminal requests: completed + rejected (drives `all_complete`).
+    n_terminal: usize,
+    /// Requests rejected as infeasible (never admitted, never completed).
+    n_rejected: usize,
+    /// Rejection events since the last [`take_rejected_events`] drain.
+    rejected_events: usize,
+    /// Live KV tokens swapped back in by re-admissions since the last
+    /// [`take_swapped_in_tokens`] drain — the engine/pipeline charge the
+    /// swap-in transfer from this.
+    swapped_in_tokens: usize,
 }
 
 impl RequestPool {
@@ -71,8 +80,14 @@ impl RequestPool {
 
     /// Admit a queued request, handing it its initial KV block table.
     pub fn admit(&mut self, id: RequestId, blocks: Vec<usize>, now: f64) {
+        debug_assert!({
+            let r = &self.requests[id];
+            !r.admitted && r.completed_at.is_none() && r.rejected_at.is_none()
+        });
+        // a re-admitted preempted request carries live KV that must be
+        // swapped back in; expose the token count for the cost charge
+        self.swapped_in_tokens += self.requests[id].kv_len();
         let r = &mut self.requests[id];
-        debug_assert!(!r.admitted && r.completed_at.is_none());
         r.admitted = true;
         r.blocks = blocks;
         if r.admitted_at.is_none() {
@@ -99,8 +114,43 @@ impl RequestPool {
         let blocks = std::mem::take(&mut r.blocks);
         let pos = self.active.binary_search(&id).expect("complete of inactive request");
         self.active.remove(pos);
-        self.n_complete += 1;
+        self.n_terminal += 1;
         blocks
+    }
+
+    /// Reject a queued request that can never be served (its lifetime KV
+    /// footprint exceeds the pool — see
+    /// [`super::sched::Admission`]). Terminal: it leaves the queue, never
+    /// holds blocks, and counts toward [`all_complete`](Self::all_complete)
+    /// so open-loop serving drains instead of wedging on it.
+    pub fn reject(&mut self, id: RequestId, now: f64) {
+        let r = &mut self.requests[id];
+        debug_assert!(!r.admitted && r.completed_at.is_none() && r.rejected_at.is_none());
+        r.rejected_at = Some(now);
+        if self.pending.get(self.pending_head) == Some(&id) {
+            self.pending_head += 1;
+        } else if let Some(pos) = self.pending[self.pending_head..].iter().position(|&q| q == id) {
+            self.pending.remove(self.pending_head + pos);
+        }
+        self.n_terminal += 1;
+        self.n_rejected += 1;
+        self.rejected_events += 1;
+    }
+
+    /// Total requests rejected as infeasible so far.
+    pub fn rejected_count(&self) -> usize {
+        self.n_rejected
+    }
+
+    /// Rejection events since the last drain (metrics accounting).
+    pub fn take_rejected_events(&mut self) -> usize {
+        std::mem::take(&mut self.rejected_events)
+    }
+
+    /// Live KV tokens swapped back in by re-admissions since the last
+    /// drain (swap-in cost accounting).
+    pub fn take_swapped_in_tokens(&mut self) -> usize {
+        std::mem::take(&mut self.swapped_in_tokens)
     }
 
     /// Preempt an active request: release its block table (returned to the
@@ -144,8 +194,8 @@ impl RequestPool {
                 .copied()
                 .filter(|&id| self.requests[id].phase() == Phase::Queued)
                 .collect(),
-            Phase::Complete => (0..self.requests.len())
-                .filter(|&id| self.requests[id].phase() == Phase::Complete)
+            Phase::Complete | Phase::Rejected => (0..self.requests.len())
+                .filter(|&id| self.requests[id].phase() == phase)
                 .collect(),
         }
     }
@@ -175,8 +225,9 @@ impl RequestPool {
         (self.requests[id].arrival <= now).then_some(id)
     }
 
+    /// True when every request is terminal (completed or rejected).
     pub fn all_complete(&self) -> bool {
-        self.n_complete == self.requests.len()
+        self.n_terminal == self.requests.len()
     }
 
     /// True while any request is admitted (holds KV blocks).
@@ -269,6 +320,45 @@ mod tests {
         p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.3 });
         assert_eq!(p.arrived_queued(1.0), vec![1, 2, 0]);
         assert_eq!(p.next_arrival(0.2), Some(0.3));
+    }
+
+    #[test]
+    fn reject_is_terminal_and_leaves_the_queue() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 8, decode_len: 2, arrival: 0.0 });
+        p.push(RequestSpec { prompt_len: 1 << 20, decode_len: 2, arrival: 0.1 });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 2, arrival: 0.2 });
+        p.reject(1, 0.5);
+        assert_eq!(p.rejected_count(), 1);
+        assert_eq!(p.take_rejected_events(), 1);
+        assert_eq!(p.take_rejected_events(), 0, "events drain");
+        assert_eq!(p.in_phase(Phase::Rejected), vec![1]);
+        // the rejected request no longer blocks the FCFS queue
+        assert_eq!(p.arrived_queued(1.0), vec![0, 2]);
+        assert!(!p.all_complete());
+        for id in [0, 2] {
+            p.admit(id, vec![id], 1.0);
+            p.get_mut(id).prefilled = 8;
+            p.get_mut(id).decoded = 2;
+            p.complete(id, 2.0);
+        }
+        assert!(p.all_complete(), "rejected counts as terminal");
+        assert_eq!(p.get(1).rejected_at, Some(0.5));
+        assert!(p.get(1).completed_at.is_none());
+    }
+
+    #[test]
+    fn readmission_accumulates_swapped_in_tokens() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0 });
+        p.admit(0, vec![0], 0.0);
+        assert_eq!(p.take_swapped_in_tokens(), 0, "fresh admission moves no KV");
+        p.get_mut(0).prefilled = 8;
+        p.get_mut(0).decoded = 3;
+        p.preempt(0, 1.0);
+        p.admit(0, vec![1], 2.0);
+        assert_eq!(p.take_swapped_in_tokens(), 10, "kv_len at swap-in");
+        assert_eq!(p.take_swapped_in_tokens(), 0, "drained");
     }
 
     #[test]

@@ -16,6 +16,9 @@ pub enum Phase {
     Decode,
     /// All output tokens generated; blocks released.
     Complete,
+    /// Rejected at admission as infeasible for the pool — terminal, never
+    /// ran (open-loop serving counts these instead of crashing on them).
+    Rejected,
 }
 
 #[derive(Clone, Debug)]
@@ -39,6 +42,8 @@ pub struct Request {
     pub admitted_at: Option<f64>,
     pub first_token_at: Option<f64>,
     pub completed_at: Option<f64>,
+    /// Set when admission rejected the request as infeasible (terminal).
+    pub rejected_at: Option<f64>,
     /// Timestamp of every produced output token (first from the final
     /// prefill chunk, rest from decode iterations) — drives the
     /// time-between-tokens latency analysis (EXPERIMENTS.md §E14).
@@ -59,6 +64,7 @@ impl Request {
             admitted_at: None,
             first_token_at: None,
             completed_at: None,
+            rejected_at: None,
             token_times: Vec::new(),
         }
     }
@@ -80,7 +86,9 @@ impl Request {
     }
 
     pub fn phase(&self) -> Phase {
-        if self.completed_at.is_some() {
+        if self.rejected_at.is_some() {
+            Phase::Rejected
+        } else if self.completed_at.is_some() {
             Phase::Complete
         } else if !self.admitted {
             Phase::Queued

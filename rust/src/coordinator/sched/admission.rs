@@ -15,6 +15,24 @@
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 
+/// What the gate does with a request that could NEVER complete in this
+/// pool (its lifetime KV peak exceeds capacity even when empty).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InfeasiblePolicy {
+    /// Panic loudly — the right behavior for figure-repro / closed-loop
+    /// runs, where an undersized pool means the experiment itself is
+    /// misconfigured.
+    #[default]
+    Panic,
+    /// Reject the request into a terminal [`Rejected`] state
+    /// ([`RequestPool::reject`]) and keep serving co-running traffic —
+    /// the right behavior for `serve`/open-loop paths, where one oversized
+    /// request must not crash the server.
+    ///
+    /// [`Rejected`]: crate::coordinator::request::Phase::Rejected
+    Reject,
+}
+
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Admission {
     /// Free blocks kept in reserve for decode growth of running requests.
@@ -23,15 +41,22 @@ pub struct Admission {
     /// `max_num_seqs`). `None` bounds admission by memory alone — the seed
     /// policies' behavior, where the slot pool itself is the cap.
     pub max_active: Option<usize>,
+    /// Panic or reject on requests that can never fit the pool.
+    pub infeasible: InfeasiblePolicy,
 }
 
 impl Admission {
     pub fn with_watermark(watermark_blocks: usize) -> Self {
-        Admission { watermark_blocks, max_active: None }
+        Admission { watermark_blocks, ..Self::default() }
     }
 
     pub fn with_max_active(mut self, max_active: usize) -> Self {
         self.max_active = Some(max_active);
+        self
+    }
+
+    pub fn with_infeasible(mut self, policy: InfeasiblePolicy) -> Self {
+        self.infeasible = policy;
         self
     }
 
@@ -45,18 +70,29 @@ impl Admission {
         kv.blocks_needed(r.spec.prompt_len.max(r.kv_len() + 1)).max(1)
     }
 
-    /// Panics when `id` could never run to COMPLETION even in an empty
-    /// pool: its lifetime KV peak (`prompt + decode − 1` tokens, both known
-    /// in the spec) plus the watermark exceeds the pool. Shared by
+    /// True when `id` could run to COMPLETION in an empty pool: its
+    /// lifetime KV peak (`prompt + decode − 1` tokens, both known in the
+    /// spec) plus the watermark fits the pool. Shared by
     /// [`can_admit`](Self::can_admit) and
     /// [`try_admit_one`](Self::try_admit_one) so the two entry points
     /// cannot disagree about an infeasible request.
-    fn assert_feasible(&self, pool: &RequestPool, kv: &KvManager, id: usize) {
+    pub fn is_feasible(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> bool {
         let spec = pool.get(id).spec;
         let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
         let lifetime = kv.blocks_needed(peak.max(1));
-        assert!(
-            lifetime.saturating_add(self.watermark_blocks) <= kv.capacity(),
+        lifetime.saturating_add(self.watermark_blocks) <= kv.capacity()
+    }
+
+    /// Under [`InfeasiblePolicy::Panic`], panic loudly on an infeasible
+    /// request. Without that guard an oversized request is admitted on its
+    /// prompt footprint, grows to the memory wall, preempts every
+    /// co-running request, and only then wedges the engine with no hint at
+    /// the cause.
+    fn panic_infeasible(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> ! {
+        let spec = pool.get(id).spec;
+        let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
+        let lifetime = kv.blocks_needed(peak.max(1));
+        panic!(
             "request {id} can never complete: its KV peaks at {peak} tokens = {lifetime} blocks \
              (+{} watermark) but the pool only has {} — undersized paged KV pool for this workload",
             self.watermark_blocks,
@@ -66,26 +102,31 @@ impl Admission {
 
     /// True if the gate passes for `id` without allocating. Panics (like
     /// [`try_admit_one`](Self::try_admit_one)) when the request could never
-    /// be admitted at all.
+    /// be admitted at all and the policy is [`InfeasiblePolicy::Panic`];
+    /// under [`InfeasiblePolicy::Reject`] it returns false without
+    /// mutating anything.
     pub fn can_admit(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> bool {
         if let Some(cap) = self.max_active {
             if pool.active_count() >= cap {
                 return false;
             }
         }
-        self.assert_feasible(pool, kv, id);
+        if !self.is_feasible(pool, kv, id) {
+            match self.infeasible {
+                InfeasiblePolicy::Panic => self.panic_infeasible(pool, kv, id),
+                InfeasiblePolicy::Reject => return false,
+            }
+        }
         let need = self.blocks_required(pool, kv, id);
         kv.available() >= need.saturating_add(self.watermark_blocks)
     }
 
     /// Admit `id` if the gate passes, allocating its initial block table.
     ///
-    /// Panics (loudly, like the allocator's double-free — see
-    /// [`assert_feasible`](Self::assert_feasible)) when the request could
-    /// never run to completion in this pool. Without that guard an
-    /// oversized request is admitted on its prompt footprint, grows to the
-    /// memory wall, preempts every co-running request, and only then
-    /// wedges the engine with no hint at the cause.
+    /// An infeasible request panics under [`InfeasiblePolicy::Panic`]
+    /// (loudly, like the allocator's double-free); under
+    /// [`InfeasiblePolicy::Reject`] it is moved to the terminal
+    /// `Rejected` state and false is returned.
     pub fn try_admit_one(
         &self,
         pool: &mut RequestPool,
@@ -93,6 +134,10 @@ impl Admission {
         id: usize,
         now: f64,
     ) -> bool {
+        if self.infeasible == InfeasiblePolicy::Reject && !self.is_feasible(pool, kv, id) {
+            pool.reject(id, now);
+            return false;
+        }
         if !self.can_admit(pool, kv, id) {
             return false;
         }
@@ -104,11 +149,16 @@ impl Admission {
 
     /// Admit arrived, queued requests FCFS while the gate passes (the
     /// shared iteration-level admission rule). Returns how many were
-    /// admitted.
+    /// admitted. Under [`InfeasiblePolicy::Reject`], infeasible requests
+    /// are rejected and skipped so they never head-of-line-block the
+    /// co-running traffic behind them.
     pub fn admit_fcfs(&self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> usize {
         let mut admitted = 0;
         while let Some(id) = pool.next_queued(now) {
             if !self.try_admit_one(pool, kv, id, now) {
+                if pool.get(id).rejected_at.is_some() {
+                    continue; // rejected as infeasible: keep draining FCFS
+                }
                 break;
             }
             admitted += 1;
@@ -201,6 +251,31 @@ mod tests {
         let mut pool = pool_of(1);
         let mut kv = KvManager::paged(3, 16);
         Admission::default().try_admit_one(&mut pool, &mut kv, 0, 0.0);
+    }
+
+    #[test]
+    fn reject_policy_drops_the_oversized_request_and_serves_the_rest() {
+        // same oversized request as the panic test, but co-running traffic
+        // behind it must keep flowing in serve/open-loop mode
+        let mut pool = RequestPool::from_specs(&[
+            RequestSpec { prompt_len: 256, decode_len: 8, arrival: 0.0 }, // 16 blocks: never fits
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.1 },
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.2 },
+        ]);
+        let mut kv = KvManager::paged(8, 16);
+        let adm = Admission::default().with_infeasible(InfeasiblePolicy::Reject);
+        let n = adm.admit_fcfs(&mut pool, &mut kv, 1.0);
+        assert_eq!(n, 2, "feasible requests behind the rejected one are admitted");
+        assert_eq!(pool.rejected_count(), 1);
+        assert_eq!(pool.get(0).rejected_at, Some(1.0));
+        assert!(pool.get(1).is_admitted() && pool.get(2).is_admitted());
+        // can_admit on an infeasible id must not panic under Reject
+        let probe = RequestPool::from_specs(&[RequestSpec {
+            prompt_len: 256,
+            decode_len: 8,
+            arrival: 0.0,
+        }]);
+        assert!(!adm.can_admit(&probe, &kv, 0));
     }
 
     #[test]

@@ -21,6 +21,7 @@ use super::super::batch::{Batch, WorkItem};
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 use super::super::request::Phase;
+use super::admission::InfeasiblePolicy;
 use super::{Admission, Scheduler};
 
 pub struct HybridScheduler {
@@ -37,6 +38,9 @@ pub struct HybridScheduler {
     /// largest tile multiple ≤ budget so saturated iterations don't pay
     /// the Fig.-7 quantization padding.
     tile: usize,
+    /// Panic (closed-loop default) or reject (open-loop serving) requests
+    /// whose lifetime KV can never fit the pool.
+    infeasible: InfeasiblePolicy,
 }
 
 impl HybridScheduler {
@@ -47,11 +51,22 @@ impl HybridScheduler {
             token_budget >= max_batch,
             "token budget {token_budget} cannot cover {max_batch} decode lanes"
         );
-        HybridScheduler { token_budget, max_batch, watermark_blocks, tile: 0 }
+        HybridScheduler {
+            token_budget,
+            max_batch,
+            watermark_blocks,
+            tile: 0,
+            infeasible: InfeasiblePolicy::Panic,
+        }
     }
 
     pub fn with_tile(mut self, tile: usize) -> Self {
         self.tile = tile;
+        self
+    }
+
+    pub fn with_infeasible(mut self, policy: InfeasiblePolicy) -> Self {
+        self.infeasible = policy;
         self
     }
 
@@ -65,7 +80,9 @@ impl Scheduler for HybridScheduler {
     /// (Sarathi-Serve's `max_num_seqs`): admitting decodes the budget
     /// cannot serve each iteration would stall them, defeating the policy.
     fn admission(&self) -> Admission {
-        Admission::with_watermark(self.watermark_blocks).with_max_active(self.max_batch)
+        Admission::with_watermark(self.watermark_blocks)
+            .with_max_active(self.max_batch)
+            .with_infeasible(self.infeasible)
     }
 
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {

@@ -21,7 +21,7 @@ mod orca;
 mod request_level;
 mod sarathi;
 
-pub use admission::Admission;
+pub use admission::{Admission, InfeasiblePolicy};
 pub use autotune::{candidate_chunks, tune_chunk_size, ChunkTuneResult};
 pub use hybrid::HybridScheduler;
 pub use orca::OrcaScheduler;
@@ -45,7 +45,27 @@ pub trait Scheduler {
 
     /// Admit arrived, queued requests. Default: FCFS while the gate passes.
     fn admit(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) {
-        self.admission().admit_fcfs(pool, kv, now);
+        self.admit_capped(pool, kv, now, None);
+    }
+
+    /// [`admit`](Self::admit) with an EXTRA cap on concurrently-admitted
+    /// sequences — the pipeline simulator's per-stream bound when several
+    /// streams share one replica KV pool. This is the override point for
+    /// policies with custom admission (see `RequestLevelScheduler`), so
+    /// every driver — engine or pipeline — dispatches through the same
+    /// logic.
+    fn admit_capped(
+        &mut self,
+        pool: &mut RequestPool,
+        kv: &mut KvManager,
+        now: f64,
+        extra_cap: Option<usize>,
+    ) {
+        let mut adm = self.admission();
+        if let Some(cap) = extra_cap {
+            adm.max_active = Some(adm.max_active.map_or(cap, |m| m.min(cap)));
+        }
+        adm.admit_fcfs(pool, kv, now);
     }
 
     /// Compose the next iteration's batch from admitted requests at time
@@ -62,21 +82,38 @@ pub trait Scheduler {
     fn name(&self) -> &'static str;
 }
 
-/// Build the policy named by a [`SchedulerConfig`].
+/// Build the policy named by a [`SchedulerConfig`]. When
+/// `cfg.reject_infeasible` is set (the `serve`/open-loop stance), every
+/// policy's admission gate REJECTS requests that could never fit the pool
+/// — terminal `Rejected` state plus a `Metrics` counter — instead of
+/// panicking; figure-repro / closed-loop runs keep the loud panic.
 pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
+    let infeasible = if cfg.reject_infeasible {
+        InfeasiblePolicy::Reject
+    } else {
+        InfeasiblePolicy::Panic
+    };
     match cfg.kind {
-        SchedulerKind::RequestLevel => Box::new(RequestLevelScheduler::new(cfg.max_batch)),
-        SchedulerKind::OrcaBest => Box::new(OrcaScheduler::best(cfg.max_batch)),
-        SchedulerKind::OrcaWorst => Box::new(OrcaScheduler::worst(cfg.max_batch)),
-        SchedulerKind::Sarathi => {
-            Box::new(SarathiScheduler::new(cfg.chunk_size, cfg.max_batch, cfg.tile_align))
+        SchedulerKind::RequestLevel => {
+            Box::new(RequestLevelScheduler::new(cfg.max_batch).with_infeasible(infeasible))
         }
+        SchedulerKind::OrcaBest => {
+            Box::new(OrcaScheduler::best(cfg.max_batch).with_infeasible(infeasible))
+        }
+        SchedulerKind::OrcaWorst => {
+            Box::new(OrcaScheduler::worst(cfg.max_batch).with_infeasible(infeasible))
+        }
+        SchedulerKind::Sarathi => Box::new(
+            SarathiScheduler::new(cfg.chunk_size, cfg.max_batch, cfg.tile_align)
+                .with_infeasible(infeasible),
+        ),
         // no silent clamping: a budget below max_batch is a config error
         // and HybridScheduler::new rejects it loudly, so the label a
         // harness prints from cfg.token_budget always matches what runs
         SchedulerKind::Hybrid => Box::new(
             HybridScheduler::new(cfg.token_budget, cfg.max_batch, cfg.watermark_blocks)
-                .with_tile(cfg.tile_align),
+                .with_tile(cfg.tile_align)
+                .with_infeasible(infeasible),
         ),
     }
 }

@@ -14,7 +14,8 @@ use super::super::batch::{Batch, WorkItem};
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 use super::super::request::Phase;
-use super::Scheduler;
+use super::admission::InfeasiblePolicy;
+use super::{Admission, Scheduler};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OrcaMode {
@@ -25,19 +26,31 @@ pub enum OrcaMode {
 pub struct OrcaScheduler {
     mode: OrcaMode,
     max_batch: usize,
+    /// Panic (closed-loop default) or reject (open-loop serving) requests
+    /// whose lifetime KV can never fit the pool.
+    infeasible: InfeasiblePolicy,
 }
 
 impl OrcaScheduler {
     pub fn best(max_batch: usize) -> Self {
-        OrcaScheduler { mode: OrcaMode::Best, max_batch }
+        OrcaScheduler { mode: OrcaMode::Best, max_batch, infeasible: InfeasiblePolicy::Panic }
     }
 
     pub fn worst(max_batch: usize) -> Self {
-        OrcaScheduler { mode: OrcaMode::Worst, max_batch }
+        OrcaScheduler { mode: OrcaMode::Worst, max_batch, infeasible: InfeasiblePolicy::Panic }
+    }
+
+    pub fn with_infeasible(mut self, policy: InfeasiblePolicy) -> Self {
+        self.infeasible = policy;
+        self
     }
 }
 
 impl Scheduler for OrcaScheduler {
+    fn admission(&self) -> Admission {
+        Admission::default().with_infeasible(self.infeasible)
+    }
+
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         let prefilling = pool.in_phase(Phase::Prefill);
         let decoding: Vec<usize> = pool

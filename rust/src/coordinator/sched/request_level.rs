@@ -7,24 +7,49 @@ use super::super::batch::{Batch, WorkItem};
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 use super::super::request::Phase;
+use super::admission::InfeasiblePolicy;
 use super::{Admission, Scheduler};
 
 pub struct RequestLevelScheduler {
     max_batch: usize,
     /// The ids of the batch currently being driven to completion.
     running: Vec<usize>,
+    /// Panic (closed-loop default) or reject (open-loop serving) requests
+    /// whose lifetime KV can never fit the pool.
+    infeasible: InfeasiblePolicy,
 }
 
 impl RequestLevelScheduler {
     pub fn new(max_batch: usize) -> Self {
-        RequestLevelScheduler { max_batch, running: Vec::new() }
+        RequestLevelScheduler {
+            max_batch,
+            running: Vec::new(),
+            infeasible: InfeasiblePolicy::Panic,
+        }
+    }
+
+    pub fn with_infeasible(mut self, policy: InfeasiblePolicy) -> Self {
+        self.infeasible = policy;
+        self
     }
 }
 
 impl Scheduler for RequestLevelScheduler {
+    fn admission(&self) -> Admission {
+        Admission::default().with_infeasible(self.infeasible)
+    }
+
     /// Request-level admission: a whole new batch at once, and only after
     /// the previous batch fully drains — the policy's defining delay.
-    fn admit(&mut self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) {
+    /// Overrides `admit_capped` (not `admit`) so the pipeline's
+    /// per-stream cap reaches the custom logic too.
+    fn admit_capped(
+        &mut self,
+        pool: &mut RequestPool,
+        kv: &mut KvManager,
+        now: f64,
+        extra_cap: Option<usize>,
+    ) {
         // retire members that no longer hold KV: completed ones, and any
         // preempted member (swapped back to Queued by the engine) — the
         // latter is re-admitted FCFS with a later batch instead of wedging
@@ -33,10 +58,16 @@ impl Scheduler for RequestLevelScheduler {
         if !self.running.is_empty() {
             return;
         }
-        let gate = self.admission();
+        let mut gate = self.admission();
+        if let Some(cap) = extra_cap {
+            gate.max_active = Some(gate.max_active.map_or(cap, |m| m.min(cap)));
+        }
         while self.running.len() < self.max_batch {
             let Some(id) = pool.next_queued(now) else { break };
             if !gate.try_admit_one(pool, kv, id, now) {
+                if pool.get(id).rejected_at.is_some() {
+                    continue; // rejected as infeasible: keep filling the batch
+                }
                 break;
             }
             self.running.push(id);
@@ -102,6 +133,32 @@ mod tests {
         let b = s.schedule(&mut pool, &mut kv, 1.0);
         assert_eq!(b.n_prefill_chunks(), 0);
         assert_eq!(b.n_decodes(), 2);
+    }
+
+    #[test]
+    fn reject_policy_skips_infeasible_without_stalling_the_batch() {
+        // an infeasible head-of-queue request must be rejected and the
+        // batch filled from the traffic behind it (open-loop stance)
+        let specs = [
+            RequestSpec { prompt_len: 1024, decode_len: 3, arrival: 0.0 }, // 64 blocks: never fits
+            RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 },
+            RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 },
+        ];
+        let mut pool = RequestPool::from_specs(&specs);
+        let mut kv = KvManager::paged(16, 16);
+        let mut s = RequestLevelScheduler::new(4).with_infeasible(InfeasiblePolicy::Reject);
+        let b = s.schedule(&mut pool, &mut kv, 0.0);
+        assert_eq!(pool.rejected_count(), 1);
+        assert_eq!(b.n_prefill_chunks(), 2, "batch filled past the rejected request");
+    }
+
+    #[test]
+    fn pipeline_cap_bounds_request_level_admission() {
+        // the per-stream cap reaches the custom admit_capped override
+        let (mut pool, mut kv) = setup(6);
+        let mut s = RequestLevelScheduler::new(4);
+        s.admit_capped(&mut pool, &mut kv, 0.0, Some(2));
+        assert_eq!(pool.active_count(), 2, "extra cap tightens the batch");
     }
 
     #[test]

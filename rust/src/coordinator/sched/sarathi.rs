@@ -9,7 +9,8 @@ use super::super::batch::{Batch, WorkItem};
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
 use super::super::request::Phase;
-use super::Scheduler;
+use super::admission::InfeasiblePolicy;
+use super::{Admission, Scheduler};
 
 pub struct SarathiScheduler {
     /// Target chunk size C (tokens) — the tile-aligned budget for the fused
@@ -20,12 +21,20 @@ pub struct SarathiScheduler {
     max_batch: usize,
     /// Tile size for the §4.4 alignment rule.
     tile: usize,
+    /// Panic (closed-loop default) or reject (open-loop serving) requests
+    /// whose lifetime KV can never fit the pool.
+    infeasible: InfeasiblePolicy,
 }
 
 impl SarathiScheduler {
     pub fn new(chunk_size: usize, max_batch: usize, tile: usize) -> Self {
         assert!(chunk_size > 0, "chunk size must be positive");
-        SarathiScheduler { chunk_size, max_batch, tile }
+        SarathiScheduler { chunk_size, max_batch, tile, infeasible: InfeasiblePolicy::Panic }
+    }
+
+    pub fn with_infeasible(mut self, policy: InfeasiblePolicy) -> Self {
+        self.infeasible = policy;
+        self
     }
 
     pub fn chunk_size(&self) -> usize {
@@ -49,6 +58,10 @@ impl SarathiScheduler {
 }
 
 impl Scheduler for SarathiScheduler {
+    fn admission(&self) -> Admission {
+        Admission::default().with_infeasible(self.infeasible)
+    }
+
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         // every ready decode piggybacks (up to B−1 when a chunk rides along)
         let decoding: Vec<usize> = pool

@@ -1,0 +1,372 @@
+//! The shared request-state transition — ONE implementation of
+//! "a scheduled batch finished executing, advance the world".
+//!
+//! Both [`crate::coordinator::Engine`] and
+//! [`crate::simulator::PipelineSim`] drive their iterations through
+//! [`StepApplier::apply`]: progress counters, token-time stamping,
+//! completion release, token-granular KV growth and LIFO preemption all
+//! live here, so the engine and the pipeline simulator can never drift
+//! apart again (the seed shipped a hand-copied `PipelineSim::apply` that
+//! had already lost token stamping and the whole growth/preemption path).
+//!
+//! Preemption is **costed**: a victim's live KV must cross the host link
+//! (PCIe) on the way out and back in, or be recomputed on resume —
+//! [`SwapCost`] prices both, following DistServe's KV-movement accounting
+//! (arXiv 2401.09670). The default [`SwapCost::free`] keeps the seed's
+//! zero-cost semantics so every existing experiment reproduces unchanged.
+//!
+//! Cross-pool preemption: `apply` takes a *slice* of request pools and the
+//! index of the pool that owns the executed batch. The engine passes its
+//! single pool; the pipeline simulator passes one pool per stream so a
+//! stream that runs out of blocks can evict the most-recently-arrived
+//! request of ANY stream sharing the replica's paged pool.
+
+use super::batch::Batch;
+use super::kv::KvManager;
+use super::pool::RequestPool;
+use super::request::RequestId;
+use crate::config::Deployment;
+
+// Defined in config (it is a scheduling-policy knob); re-exported here
+// because the costing lives in this module.
+pub use crate::config::PreemptionMode;
+
+/// Prices the preemption path. Time is charged to the stream that *caused*
+/// the preemption (its iteration waits for the transfer) and to the
+/// swap-in of a resumed victim (its first iteration back waits).
+#[derive(Clone, Copy, Debug)]
+pub struct SwapCost {
+    /// KV-cache bytes per token per GPU — what each GPU moves over PCIe.
+    pub kv_bytes_per_token: f64,
+    /// Host-link (PCIe) bandwidth, bytes/s.
+    pub host_bw: f64,
+    /// Seconds per token to rebuild KV under [`PreemptionMode::Recompute`]
+    /// (saturated-prefill rate from the cost model).
+    pub recompute_s_per_token: f64,
+    pub mode: PreemptionMode,
+}
+
+impl SwapCost {
+    /// The seed semantics: preemption moves no bytes and costs no time.
+    pub fn free() -> Self {
+        SwapCost {
+            kv_bytes_per_token: 0.0,
+            host_bw: 1.0,
+            recompute_s_per_token: 0.0,
+            mode: PreemptionMode::Swap,
+        }
+    }
+
+    /// Price swaps for a deployment: per-GPU KV bytes over the GPU's host
+    /// link, with the recompute rate taken from the calibrated cost model's
+    /// saturated prefill throughput.
+    pub fn for_deployment(d: &Deployment, mode: PreemptionMode) -> Self {
+        let cm = crate::costmodel::CostModel::for_deployment(d);
+        SwapCost {
+            kv_bytes_per_token: d.kv_bytes_per_token_per_gpu(),
+            host_bw: d.gpu.host_bw_gbps * 1e9,
+            recompute_s_per_token: cm.recompute_time_per_token(),
+            mode,
+        }
+    }
+
+    /// Time to evict `tokens` of live KV (free under Recompute — the cache
+    /// is simply dropped).
+    pub fn swap_out_time(&self, tokens: usize) -> f64 {
+        match self.mode {
+            PreemptionMode::Swap => tokens as f64 * self.kv_bytes_per_token / self.host_bw,
+            PreemptionMode::Recompute => 0.0,
+        }
+    }
+
+    /// Time to bring `tokens` of KV back before a resumed request can run:
+    /// a host-to-device transfer under Swap, a prefill recompute charge
+    /// under Recompute. (Token accounting is unchanged either way — the
+    /// recompute is modeled as a time charge, not re-scheduled work, so
+    /// token-conservation invariants keep holding.)
+    pub fn swap_in_time(&self, tokens: usize) -> f64 {
+        match self.mode {
+            PreemptionMode::Swap => tokens as f64 * self.kv_bytes_per_token / self.host_bw,
+            PreemptionMode::Recompute => tokens as f64 * self.recompute_s_per_token,
+        }
+    }
+
+    pub fn is_free(&self) -> bool {
+        self.kv_bytes_per_token == 0.0 && self.recompute_s_per_token == 0.0
+    }
+}
+
+/// What one applied batch did to the world.
+#[derive(Clone, Debug, Default)]
+pub struct StepEffects {
+    /// Requests (ids local to the owning pool) that completed at `done_at`.
+    pub finished: Vec<RequestId>,
+    /// Preemption events fired while growing block tables.
+    pub preemptions: usize,
+    /// Tokens of live KV evicted by those preemptions.
+    pub swapped_out_tokens: usize,
+    /// Swap-out transfer time charged to the owning stream.
+    pub swap_time: f64,
+}
+
+/// The shared state transition. Construct with [`StepApplier::new`] for
+/// seed-compatible free swaps, or [`StepApplier::with_cost`] to price the
+/// preemption path.
+#[derive(Clone, Copy, Debug)]
+pub struct StepApplier {
+    pub swap: SwapCost,
+}
+
+impl Default for StepApplier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StepApplier {
+    pub fn new() -> Self {
+        StepApplier { swap: SwapCost::free() }
+    }
+
+    pub fn with_cost(swap: SwapCost) -> Self {
+        StepApplier { swap }
+    }
+
+    /// Advance request state for an executed batch owned by
+    /// `pools[owner]`: progress counters and token stamps, completions
+    /// (blocks released), then token-granular KV growth with LIFO
+    /// preemption across ALL pools as the fallback when `kv` runs dry.
+    ///
+    /// `done_at` is the simulated time the batch finished (tokens and
+    /// completions are stamped there). Victims are chosen
+    /// most-recently-arrived-first across every pool sharing `kv`
+    /// (ties broken by pool index then request id), falling back to
+    /// self-preemption when the growing request is the only one admitted.
+    pub fn apply(
+        &self,
+        pools: &mut [RequestPool],
+        owner: usize,
+        kv: &mut KvManager,
+        batch: &Batch,
+        done_at: f64,
+    ) -> StepEffects {
+        self.apply_guarded(pools, owner, kv, batch, done_at, &[])
+    }
+
+    /// [`apply`](Self::apply) with a preemption guard: `in_flight` lists
+    /// `(pool, request)` pairs currently executing in OTHER streams'
+    /// micro-batches — a request mid-iteration is not preemptible (its
+    /// KV is being read by the running kernel; evicting it would also
+    /// corrupt that batch's pending state transition). The pipeline
+    /// simulator passes its in-flight batches; the engine, whose single
+    /// batch is always the one being applied, passes none.
+    pub fn apply_guarded(
+        &self,
+        pools: &mut [RequestPool],
+        owner: usize,
+        kv: &mut KvManager,
+        batch: &Batch,
+        done_at: f64,
+        in_flight: &[(usize, RequestId)],
+    ) -> StepEffects {
+        let mut effects = StepEffects::default();
+        // 1. progress + token stamping
+        {
+            let pool = &mut pools[owner];
+            for (req, _start, len) in batch.prefill_items() {
+                let r = pool.get_mut(req);
+                r.prefilled += len;
+                if r.prefilled == r.spec.prompt_len {
+                    // the final chunk's logits yield the first output token
+                    r.decoded = 1;
+                    r.first_token_at = Some(done_at);
+                    r.token_times.push(done_at);
+                }
+            }
+            for req in batch.decode_items() {
+                let r = pool.get_mut(req);
+                r.decoded += 1;
+                r.token_times.push(done_at);
+            }
+            // 2. completions first: their blocks fund the growth below
+            for req in batch.requests() {
+                let r = pool.get(req);
+                if r.completed_at.is_none()
+                    && r.prefilled == r.spec.prompt_len
+                    && r.decoded >= r.spec.decode_len
+                {
+                    let blocks = pool.complete(req, done_at);
+                    kv.release_seq(blocks);
+                    effects.finished.push(req);
+                }
+            }
+        }
+        // 3. token-granular growth: every surviving touched request's block
+        // table must cover its KV plus one token of lookahead for the next
+        // step. Degenerate blocks make this a no-op.
+        for req in batch.requests() {
+            loop {
+                let r = pools[owner].get(req);
+                if !r.is_admitted() {
+                    break; // completed above, or preempted as a victim
+                }
+                let target = r.kv_len() + 1;
+                if kv.extend_to(&mut pools[owner].get_mut(req).blocks, target) {
+                    break;
+                }
+                // out of blocks: preempt the most-recently-arrived OTHER
+                // admitted request across all pools sharing this KvManager
+                // (LIFO victims, FCFS resume), skipping requests running in
+                // other streams' in-flight micro-batches; fall back to
+                // self-preemption when no one else is evictable
+                let victim = pools
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(pi, p)| p.active_ids().iter().map(move |&id| (pi, id)))
+                    .filter(|&(pi, id)| !(pi == owner && id == req))
+                    .filter(|pair| !in_flight.contains(pair))
+                    .max_by(|&(pa, a), &(pb, b)| {
+                        let (ra, rb) = (pools[pa].get(a), pools[pb].get(b));
+                        ra.arrival
+                            .partial_cmp(&rb.arrival)
+                            .unwrap()
+                            .then(pa.cmp(&pb))
+                            .then(a.cmp(&b))
+                    })
+                    .unwrap_or((owner, req));
+                let (vp, vid) = victim;
+                let evicted_tokens = pools[vp].get(vid).kv_len();
+                let blocks = pools[vp].preempt(vid, done_at);
+                kv.release_seq(blocks);
+                effects.preemptions += 1;
+                effects.swapped_out_tokens += evicted_tokens;
+                effects.swap_time += self.swap.swap_out_time(evicted_tokens);
+                if victim == (owner, req) {
+                    break; // swapped itself out; it resumes via admission
+                }
+            }
+        }
+        effects
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch::WorkItem;
+    use crate::workload::RequestSpec;
+
+    fn spec(p: usize, d: usize, arrival: f64) -> RequestSpec {
+        RequestSpec { prompt_len: p, decode_len: d, arrival }
+    }
+
+    #[test]
+    fn stamps_tokens_and_releases_completions() {
+        let mut pool = RequestPool::from_specs(&[spec(8, 1, 0.0)]);
+        let mut kv = KvManager::new(2);
+        let b = kv.alloc().unwrap();
+        pool.admit(0, vec![b], 0.0);
+        let batch = Batch::new(vec![WorkItem::PrefillChunk { req: 0, start: 0, len: 8 }]);
+        let applier = StepApplier::new();
+        let fx = applier.apply(std::slice::from_mut(&mut pool), 0, &mut kv, &batch, 2.5);
+        assert_eq!(fx.finished, vec![0]);
+        assert_eq!(fx.preemptions, 0);
+        assert_eq!(fx.swap_time, 0.0);
+        let r = pool.get(0);
+        assert_eq!(r.first_token_at, Some(2.5));
+        assert_eq!(r.token_times, vec![2.5]);
+        assert_eq!(r.completed_at, Some(2.5));
+        assert_eq!(kv.available(), 2, "completion returned its block");
+    }
+
+    #[test]
+    fn cross_pool_preemption_picks_latest_arrival_anywhere() {
+        // two pools over one shared paged KvManager; growth in pool 0 must
+        // evict pool 1's later-arrived request, not pool 0's own earlier one
+        let mut pools = vec![
+            RequestPool::from_specs(&[spec(16, 8, 0.0)]),
+            RequestPool::from_specs(&[spec(16, 8, 1.0)]),
+        ];
+        let mut kv = KvManager::paged(4, 16);
+        let t0 = kv.alloc_n(1).unwrap();
+        pools[0].admit(0, t0, 0.0);
+        let t1 = kv.alloc_n(3).unwrap();
+        pools[1].admit(0, t1, 1.0);
+        {
+            let r = pools[0].get_mut(0);
+            r.prefilled = 16;
+            r.decoded = 1; // kv_len = 16: next decode needs a 2nd block
+        }
+        {
+            let r = pools[1].get_mut(0);
+            r.prefilled = 16;
+            r.decoded = 17;
+        }
+        let batch = Batch::new(vec![WorkItem::Decode { req: 0 }]);
+        let cost = SwapCost {
+            kv_bytes_per_token: 1e9, // 1 GB per token over 1 GB/s = 1 s/token
+            host_bw: 1e9,
+            recompute_s_per_token: 0.0,
+            mode: PreemptionMode::Swap,
+        };
+        let fx = StepApplier::with_cost(cost).apply(&mut pools, 0, &mut kv, &batch, 5.0);
+        assert_eq!(fx.preemptions, 1);
+        // victim is pool 1's request (arrival 1.0 > 0.0), 32 live KV tokens
+        assert_eq!(fx.swapped_out_tokens, 32);
+        assert!((fx.swap_time - 32.0).abs() < 1e-9);
+        assert!(!pools[1].get(0).is_admitted());
+        assert_eq!(pools[1].get(0).preemptions, 1);
+        // the grower got its block
+        assert_eq!(pools[0].get(0).blocks.len(), 2);
+    }
+
+    #[test]
+    fn in_flight_requests_are_not_preemptible() {
+        // same setup as above, but pool 1's request is mid-iteration in
+        // another stream's micro-batch: the grower must NOT evict it and
+        // falls back to self-preemption
+        let mut pools = vec![
+            RequestPool::from_specs(&[spec(16, 8, 0.0)]),
+            RequestPool::from_specs(&[spec(16, 8, 1.0)]),
+        ];
+        let mut kv = KvManager::paged(4, 16);
+        let t0 = kv.alloc_n(1).unwrap();
+        pools[0].admit(0, t0, 0.0);
+        let t1 = kv.alloc_n(3).unwrap();
+        pools[1].admit(0, t1, 1.0);
+        {
+            let r = pools[0].get_mut(0);
+            r.prefilled = 16;
+            r.decoded = 1;
+        }
+        let batch = Batch::new(vec![WorkItem::Decode { req: 0 }]);
+        let fx = StepApplier::new().apply_guarded(
+            &mut pools,
+            0,
+            &mut kv,
+            &batch,
+            5.0,
+            &[(1, 0)], // pool 1's request is in flight elsewhere
+        );
+        assert_eq!(fx.preemptions, 1);
+        assert!(pools[1].get(0).is_admitted(), "in-flight victim untouched");
+        assert!(!pools[0].get(0).is_admitted(), "grower swapped itself out");
+        assert_eq!(pools[0].get(0).preemptions, 1);
+    }
+
+    #[test]
+    fn recompute_mode_prices_resume_not_eviction() {
+        let cost = SwapCost {
+            kv_bytes_per_token: 2.0,
+            host_bw: 1.0,
+            recompute_s_per_token: 0.5,
+            mode: PreemptionMode::Recompute,
+        };
+        assert_eq!(cost.swap_out_time(100), 0.0);
+        assert!((cost.swap_in_time(100) - 50.0).abs() < 1e-12);
+        let swap = SwapCost { mode: PreemptionMode::Swap, ..cost };
+        assert!((swap.swap_out_time(100) - 200.0).abs() < 1e-12);
+        assert!((swap.swap_in_time(100) - 200.0).abs() < 1e-12);
+        assert!(SwapCost::free().is_free());
+    }
+}

@@ -286,6 +286,16 @@ impl CostModel {
         let t = self.sat_tokens().ceil() as usize;
         t.div_ceil(self.gpu.tile) * self.gpu.tile
     }
+
+    /// Seconds per token to rebuild a preempted request's KV by
+    /// re-prefilling at the saturated rate — the price of
+    /// [`crate::config::PreemptionMode::Recompute`] on resume. Uses a
+    /// saturation-sized zero-history chunk (recompute restarts from token
+    /// 0, and a resume would batch it as large as the budget allows).
+    pub fn recompute_time_per_token(&self) -> f64 {
+        let chunk = self.saturation_tokens().max(1);
+        self.iteration_time(&BatchShape::prefill_only(&[(chunk, 0)])) / chunk as f64
+    }
 }
 
 #[cfg(test)]

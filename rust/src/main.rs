@@ -9,23 +9,37 @@
 //!       ([--artifacts DIR]); without it the calibrated cost model stands
 //!       in (LLaMA-13B on A6000).
 //!   simulate [--requests N] [--scheduler S] [--rate R] [--budget T]
-//!            [--block-size B] [--json-out PATH]
+//!            [--block-size B] [--pp P] [--preemption swap|recompute]
+//!            [--json-out PATH]
 //!       engine-level simulation at scale: Zipf(0.4) lengths, Poisson
 //!       arrivals, paged KV — prints throughput and TTFT/TBT/normalized
-//!       latency percentiles. (The §5.3 pipeline cluster comparison lives
-//!       under `figures fig12`.)
+//!       latency percentiles. With `--pp P` (P > 1) the same workload
+//!       runs through the pipeline-parallel simulator instead: P streams
+//!       over ONE shared KV pool per replica (paged under
+//!       `--scheduler hybrid --block-size N`), preemption swaps priced at
+//!       PCIe bandwidth, bubble accounting in the report. (The §5.3
+//!       GPT-3 cluster comparison lives under `figures fig12`.)
 //!   calibration
 //!       print the cost-model calibration summary
 //!
 //! Schedulers: sarathi | hybrid | orca-best | orca-worst | baseline.
 //! `--json-out` writes one JSON object per iteration (shape, elapsed, KV
-//! blocks in use, preemptions) — the simulator-trace idiom.
+//! blocks in use, preemptions, swap time) — the simulator-trace idiom.
+//! Open-loop paths (`serve`, `simulate`) REJECT requests that could never
+//! fit the KV pool (terminal state + metrics counter) instead of
+//! panicking; figure-repro paths keep the loud panic.
 
 use std::path::{Path, PathBuf};
 
-use sarathi::config::{Deployment, GpuConfig, ModelConfig, SchedulerConfig, SchedulerKind};
-use sarathi::coordinator::{make_scheduler, Engine, KvManager, LatencyReport, RequestPool};
+use sarathi::config::{
+    Deployment, GpuConfig, ModelConfig, ParallelConfig, PreemptionMode, SchedulerConfig,
+    SchedulerKind,
+};
+use sarathi::coordinator::{
+    make_scheduler, Engine, KvManager, LatencyReport, Metrics, RequestPool, SwapCost,
+};
 use sarathi::figures;
+use sarathi::simulator::PipelineSim;
 use sarathi::util::error::Result;
 use sarathi::util::Rng;
 use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
@@ -51,6 +65,12 @@ fn scheduler_kind(args: &[String], default: &str) -> Result<SchedulerKind> {
     })
 }
 
+fn preemption_mode(args: &[String]) -> Result<PreemptionMode> {
+    let name = flag_value(args, "--preemption").unwrap_or_else(|| "swap".to_string());
+    PreemptionMode::parse(&name)
+        .ok_or_else(|| sarathi::err!("unknown preemption mode {name} (try: swap, recompute)"))
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
@@ -67,7 +87,8 @@ fn main() -> Result<()> {
                  \x20      [--scheduler sarathi|hybrid|orca-best|orca-worst|baseline]\n\
                  \x20      [--json-out PATH]\n\
                  simulate [--requests N] [--scheduler S] [--rate R] [--budget T]\n\
-                 \x20      [--block-size B] [--json-out PATH]\n\
+                 \x20      [--block-size B] [--pp P] [--preemption swap|recompute]\n\
+                 \x20      [--json-out PATH]\n\
                  calibration"
             );
             std::process::exit(2);
@@ -90,20 +111,8 @@ fn cmd_figures(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Print the shared post-run report (throughput + latency percentiles +
-/// preemptions) and write the JSONL trace if requested.
-fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
-    let m = &engine.metrics;
-    println!(
-        "iterations={} prefill_tokens={} decode_tokens={} preemptions={} peak_active={}",
-        m.iterations.len(),
-        m.total_prefill_tokens(),
-        m.total_decode_tokens(),
-        m.preemptions,
-        m.peak_active(),
-    );
-    println!("throughput={:.1} tok/s (simulated time {:.2}s)", m.throughput(), m.total_time());
-    let lat = LatencyReport::from_pool(&engine.pool);
+/// Print latency percentiles and write the JSONL trace if requested.
+fn report_latency(lat: &LatencyReport, m: &Metrics, json_out: Option<&Path>) -> Result<()> {
     let pct = |s: &sarathi::util::Summary| {
         (s.percentile(50.0) * 1e3, s.percentile(99.0) * 1e3)
     };
@@ -118,6 +127,37 @@ fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
         println!("trace: {} iterations -> {}", m.iterations.len(), path.display());
     }
     Ok(())
+}
+
+/// Print the shared post-run report (throughput + latency percentiles +
+/// preemptions) and write the JSONL trace if requested.
+fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
+    let m = &engine.metrics;
+    println!(
+        "iterations={} prefill_tokens={} decode_tokens={} preemptions={} rejections={} \
+         peak_active={}",
+        m.iterations.len(),
+        m.total_prefill_tokens(),
+        m.total_decode_tokens(),
+        m.preemptions,
+        m.rejections,
+        m.peak_active(),
+    );
+    // wall-clock throughput is the headline: idle gaps (open-loop Poisson
+    // arrivals) and swap transfers belong in the denominator. Busy-time
+    // throughput (iteration time only) rides along for comparison with
+    // the closed-loop figures.
+    println!(
+        "throughput={:.1} tok/s over {:.2}s wall-clock (busy-time {:.1} tok/s over {:.2}s; \
+         swap {:.3}s)",
+        m.wall_throughput(),
+        m.wall_clock_span(),
+        m.throughput(),
+        m.total_time(),
+        m.total_swap_time(),
+    );
+    let lat = LatencyReport::from_pool(&engine.pool);
+    report_latency(&lat, m, json_out)
 }
 
 /// Real PJRT serving (tiny model from AOT artifacts).
@@ -160,6 +200,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         token_budget: rt.manifest.max_chunk().max(slots),
         block_size: 0,
         watermark_blocks: 0,
+        preemption: PreemptionMode::Swap,
+        // serving stance: an oversized request is rejected, not a crash
+        reject_infeasible: true,
     };
 
     let gen_reqs: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
@@ -202,6 +245,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let kind = scheduler_kind(args, "sarathi")?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
     let block_size: usize = parse_flag(args, "--block-size", 0)?;
+    let preemption = preemption_mode(args)?;
 
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
     let b = d.max_batch_size();
@@ -231,6 +275,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         token_budget: budget,
         block_size: if paged { block_size } else { 0 },
         watermark_blocks: if paged { 2 } else { 0 },
+        preemption,
+        reject_infeasible: true,
     };
     let kv = if paged {
         KvManager::paged(d.kv_blocks(block_size), block_size)
@@ -244,7 +290,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         kv,
         make_scheduler(&cfg),
         Box::new(SimExecutor::new(cm)),
-    );
+    )
+    .with_swap_cost(SwapCost::for_deployment(&d, preemption));
     engine.run();
     println!("scheduler={} requests={n} effective_token_budget={}", kind.name(), cfg.token_budget);
     report_run(&engine, json_out.as_deref())
@@ -253,6 +300,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// Engine-level simulation at scale: Zipf sequence lengths, Poisson
 /// arrivals, paged KV — the production-shaped testbed for the hybrid
 /// policy (the §5.3 pipeline cluster comparison is `figures fig12`).
+/// `--pp P` switches to the pipeline-parallel simulator over one shared
+/// KV pool per replica.
 fn cmd_simulate(args: &[String]) -> Result<()> {
     use sarathi::coordinator::SimExecutor;
     use sarathi::costmodel::CostModel;
@@ -262,7 +311,13 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let rate: f64 = parse_flag(args, "--rate", 1.5)?;
     let budget: usize = parse_flag(args, "--budget", 256)?;
     let block_size: usize = parse_flag(args, "--block-size", 32)?;
+    let pp: usize = parse_flag(args, "--pp", 1)?;
+    let preemption = preemption_mode(args)?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
+
+    if pp > 1 {
+        return simulate_pipeline(n, kind, rate, budget, block_size, pp, preemption, json_out);
+    }
 
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
     let b = d.max_batch_size();
@@ -286,6 +341,8 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         token_budget: budget.max(4 * b),
         block_size: if paged { block_size } else { 0 },
         watermark_blocks: if paged { 2 } else { 0 },
+        preemption,
+        reject_infeasible: true,
     };
 
     println!(
@@ -305,10 +362,98 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         kv,
         make_scheduler(&cfg),
         Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
-    );
+    )
+    .with_swap_cost(SwapCost::for_deployment(&d, preemption));
     engine.run();
     println!("simulated in {:.2}s wall", t0.elapsed().as_secs_f64());
     report_run(&engine, json_out.as_deref())
+}
+
+/// Pipeline-mode simulate: LLaMA-13B split across `pp` stages, `pp`
+/// micro-batch streams over ONE shared per-replica KV pool — paged when
+/// the hybrid policy runs with `--block-size N`, the seed's degenerate
+/// slots otherwise. Preemption swaps are priced at the GPU's host (PCIe)
+/// bandwidth and show up in the report and the JSONL trace.
+#[allow(clippy::too_many_arguments)]
+fn simulate_pipeline(
+    n: usize,
+    kind: SchedulerKind,
+    rate: f64,
+    budget: usize,
+    block_size: usize,
+    pp: usize,
+    preemption: PreemptionMode,
+    json_out: Option<PathBuf>,
+) -> Result<()> {
+    use sarathi::costmodel::CostModel;
+    use sarathi::profiler::Profiler;
+
+    let model = ModelConfig::llama13b();
+    if model.n_layers % pp != 0 {
+        sarathi::bail!("--pp {pp} must divide {} layers", model.n_layers);
+    }
+    let d = Deployment::new(model, GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, pp));
+    let b = d.max_batch_size();
+    let mut rng = Rng::new(7);
+    let pop = zipf_population(&mut rng, n, 0.4, 256, 2048, 10.0);
+    let pop = with_poisson_arrivals(&mut rng, pop, rate);
+
+    let paged = kind == SchedulerKind::Hybrid && block_size > 0;
+    let kv = if paged {
+        KvManager::paged(d.kv_blocks(block_size), block_size)
+    } else {
+        // degenerate: the seed's per-stream slot capacity, one shared pool
+        KvManager::new(pp * b)
+    };
+    let cfg = SchedulerConfig {
+        kind,
+        chunk_size: 256,
+        tile_align: 128,
+        max_batch: b,
+        token_budget: budget.max(2 * b),
+        block_size: if paged { block_size } else { 0 },
+        watermark_blocks: if paged { 2 } else { 0 },
+        preemption,
+        reject_infeasible: true,
+    };
+    println!(
+        "LLaMA-13B on A6000, PP={pp}: {n} requests, Zipf(0.4) in [256,2048], P:D=10, \
+         Poisson {rate} req/s, scheduler={} effective_token_budget={} {}",
+        kind.name(),
+        cfg.token_budget,
+        if paged {
+            format!("(shared paged KV: {} blocks x {block_size} tokens)", kv.capacity())
+        } else {
+            format!("(shared slot KV: {} slots, {} per stream)", pp * b, b)
+        }
+    );
+
+    let profiler = Profiler::build(CostModel::for_deployment(&d), d.max_seq_len, b + 1);
+    let sim = PipelineSim::new(profiler, pp)
+        .with_swap_cost(SwapCost::for_deployment(&d, preemption));
+    let t0 = std::time::Instant::now();
+    let res = sim.run_shared(&pop, kv, Some(b), || make_scheduler(&cfg));
+    println!("simulated in {:.2}s wall", t0.elapsed().as_secs_f64());
+
+    let bubbles = res.bubble_summary();
+    println!(
+        "makespan={:.2}s micro_batches={} utilization={:.3} preemptions={} rejections={} \
+         swap_time={:.3}s",
+        res.makespan,
+        res.micro_batches,
+        res.utilization(),
+        res.metrics.preemptions,
+        res.metrics.rejections,
+        res.metrics.total_swap_time(),
+    );
+    println!(
+        "bubble_per_request_s p50={:.3} p99={:.3} total_bubble={:.2}s",
+        bubbles.percentile(50.0),
+        bubbles.percentile(99.0),
+        res.total_bubble,
+    );
+    report_latency(&res.latency, &res.metrics, json_out.as_deref())
 }
 
 fn cmd_calibration() -> Result<()> {

@@ -3,7 +3,7 @@
 
 use super::pipeline::{PipelineResult, PipelineSim};
 use crate::config::Deployment;
-use crate::coordinator::Scheduler;
+use crate::coordinator::{KvManager, Scheduler};
 use crate::costmodel::CostModel;
 use crate::profiler::Profiler;
 use crate::workload::RequestSpec;
@@ -25,10 +25,36 @@ impl ClusterResult {
         c.into_iter().enumerate().map(|(i, t)| (i + 1, t)).collect()
     }
 
-    /// Time at which `n` requests have completed.
+    /// Time at which `n` requests have completed. `n = 0` is "no work
+    /// yet": 0.0, not the first completion time (the seed's saturating_sub
+    /// silently aliased n=0 onto n=1).
     pub fn time_to_complete(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
         let curve = self.completion_curve();
-        curve.get(n.saturating_sub(1)).map(|&(_, t)| t).unwrap_or(f64::NAN)
+        curve.get(n - 1).map(|&(_, t)| t).unwrap_or(f64::NAN)
+    }
+
+    /// Merged latency report across replicas.
+    pub fn latency(&self) -> crate::coordinator::LatencyReport {
+        let mut merged = crate::coordinator::LatencyReport::default();
+        for rep in &self.per_replica {
+            merged.ttft.merge(&rep.latency.ttft);
+            merged.tbt.merge(&rep.latency.tbt);
+            merged.normalized.merge(&rep.latency.normalized);
+        }
+        merged
+    }
+
+    /// Total preemption events across replicas.
+    pub fn preemptions(&self) -> usize {
+        self.per_replica.iter().map(|r| r.metrics.preemptions).sum()
+    }
+
+    /// Total preemption transfer time across replicas.
+    pub fn total_swap_time(&self) -> f64 {
+        self.per_replica.iter().map(|r| r.metrics.total_swap_time()).sum()
     }
 }
 
@@ -49,14 +75,65 @@ impl ClusterSim {
         ClusterSim { deployment, sims }
     }
 
-    /// Run the workload. Requests are assigned to replicas round-robin;
-    /// each replica runs its own pipeline with `make_sched` schedulers.
+    /// Price the preemption path on every replica's simulator (seed
+    /// default: free swaps).
+    pub fn with_swap_cost(mut self, swap: crate::coordinator::SwapCost) -> Self {
+        for sim in &mut self.sims {
+            sim.applier = crate::coordinator::StepApplier::with_cost(swap);
+        }
+        self
+    }
+
+    /// Run the workload over the seed-compatible degenerate layout: each
+    /// replica shares one pool of `pp × B` whole-request slots across its
+    /// streams (per-stream cap B). Requests are assigned to replicas
+    /// round-robin; `make_sched` builds one scheduler per stream.
     pub fn run<'a, F>(&self, specs: &[RequestSpec], mut make_sched: F) -> ClusterResult
     where
         F: FnMut() -> Box<dyn Scheduler + 'a>,
     {
-        let r = self.sims.len();
         let slots = self.deployment.max_batch_size();
+        let pp = self.deployment.parallel.pp.max(1);
+        self.run_with_kv(specs, || KvManager::new(pp * slots), Some(slots), &mut make_sched)
+    }
+
+    /// Run over one shared **paged** pool per replica, sized from the
+    /// deployment's actual KV memory budget — the pool a real stage
+    /// holds, NOT the seed's pp×-overcommitted per-stream slots. Streams
+    /// stay capped at B sequences each; cross-stream preemption and the
+    /// engine-shared state transition come from `PipelineSim::run_shared`.
+    pub fn run_paged<'a, F>(
+        &self,
+        specs: &[RequestSpec],
+        block_size: usize,
+        mut make_sched: F,
+    ) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + 'a>,
+    {
+        let blocks = self.deployment.kv_blocks(block_size);
+        let cap = self.deployment.max_batch_size();
+        self.run_with_kv(
+            specs,
+            || KvManager::paged(blocks, block_size),
+            Some(cap),
+            &mut make_sched,
+        )
+    }
+
+    /// Shared driver: one fresh KV pool per replica from `make_kv`.
+    pub fn run_with_kv<'a, F, K>(
+        &self,
+        specs: &[RequestSpec],
+        mut make_kv: K,
+        per_stream_cap: Option<usize>,
+        mut make_sched: F,
+    ) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        K: FnMut() -> KvManager,
+    {
+        let r = self.sims.len();
         let mut result = ClusterResult {
             completions: vec![f64::NAN; specs.len()],
             ..Default::default()
@@ -70,7 +147,7 @@ impl ClusterSim {
                     globals.push(g);
                 }
             }
-            let res = sim.run(&local, slots, &mut make_sched);
+            let res = sim.run_shared(&local, make_kv(), per_stream_cap, &mut make_sched);
             for (li, &g) in globals.iter().enumerate() {
                 result.completions[g] = res.completions[li];
             }
@@ -116,6 +193,33 @@ mod tests {
         let curve = res.completion_curve();
         assert_eq!(curve.len(), 64);
         assert!(curve.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    /// Regression: `time_to_complete(0)` used to return the FIRST
+    /// completion time (saturating_sub aliased 0 onto 1) instead of 0.0.
+    #[test]
+    fn time_to_complete_zero_is_zero() {
+        let cluster = ClusterSim::new(tp_only_deployment());
+        let specs = workload(16);
+        let res = cluster.run(&specs, || Box::new(OrcaScheduler::best(11)));
+        assert_eq!(res.time_to_complete(0), 0.0);
+        let first = res.completion_curve()[0].1;
+        assert!(first > 0.0);
+        assert_eq!(res.time_to_complete(1), first);
+        assert!(res.time_to_complete(usize::MAX).is_nan(), "beyond the workload stays NaN");
+    }
+
+    #[test]
+    fn paged_cluster_serves_hybrid_over_shared_replica_pools() {
+        use crate::coordinator::sched::HybridScheduler;
+        let cluster = ClusterSim::new(tp_pp_deployment());
+        let specs = workload(64);
+        let res =
+            cluster.run_paged(&specs, 128, || Box::new(HybridScheduler::new(256, 27, 2)));
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        // latency is aggregated across replicas (stamping via StepApplier)
+        assert_eq!(res.latency().ttft.count(), 64);
+        assert!(res.latency().tbt.count() > 0);
     }
 
     /// §5.3's ordering: SARATHI TP-PP beats TP-only, which beats Orca TP-PP.

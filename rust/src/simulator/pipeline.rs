@@ -15,8 +15,38 @@
 //! simulator attributes each gap to the requests of the micro-batch whose
 //! late arrival caused it, giving the paper's per-request bubble metric
 //! (Fig. 12a).
+//!
+//! KV and the state transition are SHARED with the engine:
+//!
+//! * All `pp` streams draw from **one** [`KvManager`] per replica — the
+//!   pool a real stage holds. (The seed gave each stream its own
+//!   `KvManager::new(slots)`, overcommitting replica KV memory by pp×.)
+//!   Admission runs per stream through the scheduler's own gate plus an
+//!   optional per-stream sequence cap; when a stream's decode growth runs
+//!   dry it preempts the most-recently-arrived request of ANY stream.
+//! * Each micro-batch advances through [`StepApplier`] — the same
+//!   transition `Engine` runs, so progress counters, token-time stamping
+//!   (TTFT/TBT are now correct for pipeline runs), completion release,
+//!   token-granular growth and costed preemption can never drift from the
+//!   engine again. Swap-in/-out transfer time shows up as stage idle time,
+//!   i.e. as pipeline bubbles — exactly DistServe's point about pricing KV
+//!   movement.
+//!
+//! Event model: a stream alternates `Schedule` (admission + composition +
+//! stage walk, at its ready time) and `Apply` (state transition, at the
+//! micro-batch's exit from the last stage). Events are processed in global
+//! time order, so one stream's completions/preemptions are visible to
+//! another stream's admission at the correct simulated time. A stream with
+//! live requests but nothing schedulable *stalls* until some other
+//! stream's `Apply` frees blocks; if every unfinished stream is stalled at
+//! once the run panics loudly ("pipeline wedged") instead of silently
+//! dropping requests into NaN completions, mirroring `Engine::run`.
 
-use crate::coordinator::{Batch, KvManager, RequestPool, Scheduler};
+use crate::coordinator::{
+    Batch, IterationRecord, KvManager, LatencyReport, Metrics, RequestPool, Scheduler,
+    StepApplier, SwapCost,
+};
+use crate::costmodel::BatchShape;
 use crate::profiler::Profiler;
 use crate::util::Summary;
 use crate::workload::RequestSpec;
@@ -40,7 +70,8 @@ pub struct TraceEvent {
 pub struct PipelineResult {
     /// Total simulated time until the last request completes.
     pub makespan: f64,
-    /// Completion time per request (absolute, seconds).
+    /// Completion time per request (absolute, seconds). NaN only for
+    /// requests rejected as infeasible (open-loop admission policy).
     pub completions: Vec<f64>,
     /// Per-request accumulated bubble time (Fig. 12a's metric).
     pub bubble_per_request: Vec<f64>,
@@ -50,6 +81,13 @@ pub struct PipelineResult {
     pub total_busy: f64,
     /// Number of micro-batches executed.
     pub micro_batches: usize,
+    /// Per-request TTFT/TBT/normalized latency — correct because token
+    /// stamping goes through the engine-shared [`StepApplier`].
+    pub latency: LatencyReport,
+    /// Per-micro-batch records (KV occupancy, preemptions, swap time) —
+    /// `metrics.write_jsonl` gives the pipeline run a trace like the
+    /// engine's.
+    pub metrics: Metrics,
     /// Per-stage schedule trace (recorded when `PipelineSim::trace` is on).
     pub trace: Vec<TraceEvent>,
 }
@@ -79,17 +117,25 @@ impl PipelineResult {
     }
 }
 
-/// One in-flight stream: its own scheduler/pool/kv over a partition of the
-/// workload.
-struct Stream<'a> {
-    pool: RequestPool,
-    kv: KvManager,
-    scheduler: Box<dyn Scheduler + 'a>,
-    /// Global request ids (indices into the input spec slice) per local id.
-    global_ids: Vec<usize>,
-    /// Time at which this stream may schedule its next iteration.
-    ready_at: f64,
-    done: bool,
+/// What a stream does next. One pending event per stream; processed in
+/// global (time, Apply-before-Schedule, stream-index) order.
+enum Event {
+    /// Ready to admit + compose its next micro-batch.
+    Schedule(f64),
+    /// A micro-batch in flight: advance state when it exits the last stage.
+    Apply {
+        at: f64,
+        batch: Batch,
+        shape: BatchShape,
+        started_at: f64,
+        stage_time: f64,
+        swap_in: f64,
+    },
+    /// Live requests but nothing schedulable; woken by any other stream's
+    /// Apply (which may free blocks). All-streams-stalled = wedged.
+    Stalled,
+    /// Every request terminal.
+    Done,
 }
 
 /// Pipeline-parallel simulator for one replica.
@@ -98,6 +144,9 @@ pub struct PipelineSim {
     pub pp: usize,
     /// Record a full per-stage schedule trace (Fig. 5 demonstrations).
     pub trace: bool,
+    /// The engine-shared state transition; carries the preemption
+    /// [`SwapCost`] (default: the seed's free swaps).
+    pub applier: StepApplier,
     /// Hidden size × bytes for activation transfer between stages.
     act_bytes_per_token: f64,
     p2p_bw: f64,
@@ -110,11 +159,24 @@ impl PipelineSim {
         let cm = profiler.cost_model();
         let act_bytes_per_token = (cm.model.hidden * cm.model.bytes_per_param) as f64;
         let p2p_bw = cm.gpu.p2p_bw_gbps * 1e9;
-        PipelineSim { profiler, pp, trace: false, act_bytes_per_token, p2p_bw }
+        PipelineSim {
+            profiler,
+            pp,
+            trace: false,
+            applier: StepApplier::new(),
+            act_bytes_per_token,
+            p2p_bw,
+        }
     }
 
     pub fn with_trace(mut self) -> Self {
         self.trace = true;
+        self
+    }
+
+    /// Price the preemption path (seed default: free swaps).
+    pub fn with_swap_cost(mut self, swap: SwapCost) -> Self {
+        self.applier = StepApplier::with_cost(swap);
         self
     }
 
@@ -125,12 +187,33 @@ impl PipelineSim {
         tokens as f64 * self.act_bytes_per_token / self.p2p_bw
     }
 
-    /// Run the workload to completion. `make_sched` builds one scheduler
-    /// per stream; `slots_per_stream` bounds each stream's batch.
+    /// Run the workload to completion over the seed-compatible degenerate
+    /// layout: a shared pool of `pp × slots_per_stream` whole-request
+    /// slots with each stream's admission capped at `slots_per_stream` —
+    /// exactly the per-stream capacity the seed granted, now drawn from
+    /// one accounted pool. `make_sched` builds one scheduler per stream.
     pub fn run<'a, F>(
         &self,
         specs: &[RequestSpec],
         slots_per_stream: usize,
+        make_sched: F,
+    ) -> PipelineResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + 'a>,
+    {
+        let slots = self.pp.max(1) * slots_per_stream;
+        self.run_shared(specs, KvManager::new(slots), Some(slots_per_stream), make_sched)
+    }
+
+    /// Run the workload over an explicit shared per-replica [`KvManager`]
+    /// (paged or degenerate). `per_stream_cap` additionally bounds each
+    /// stream's admitted sequences (on top of the scheduler's own gate);
+    /// `None` bounds admission by memory alone.
+    pub fn run_shared<'a, F>(
+        &self,
+        specs: &[RequestSpec],
+        mut kv: KvManager,
+        per_stream_cap: Option<usize>,
         mut make_sched: F,
     ) -> PipelineResult
     where
@@ -138,22 +221,19 @@ impl PipelineSim {
     {
         let n_streams = self.pp.max(1);
         // partition requests round-robin across streams
-        let mut streams: Vec<Stream> = (0..n_streams)
-            .map(|_| Stream {
-                pool: RequestPool::new(),
-                kv: KvManager::new(slots_per_stream),
-                scheduler: make_sched(),
-                global_ids: Vec::new(),
-                ready_at: 0.0,
-                done: false,
-            })
-            .collect();
+        let mut pools: Vec<RequestPool> = (0..n_streams).map(|_| RequestPool::new()).collect();
+        let mut scheds: Vec<Box<dyn Scheduler + 'a>> =
+            (0..n_streams).map(|_| make_sched()).collect();
+        let mut global_ids: Vec<Vec<usize>> = vec![Vec::new(); n_streams];
         for (g, &spec) in specs.iter().enumerate() {
-            let s = &mut streams[g % n_streams];
-            s.pool.push(spec);
-            s.global_ids.push(g);
+            pools[g % n_streams].push(spec);
+            global_ids[g % n_streams].push(g);
         }
 
+        let mut events: Vec<Event> = (0..n_streams).map(|_| Event::Schedule(0.0)).collect();
+        // swap-in time charged by admission while no batch ran yet; carried
+        // to the stream's next micro-batch
+        let mut pending_swap_in = vec![0.0f64; n_streams];
         let mut stage_free = vec![0.0f64; self.pp];
         let mut stage_used = vec![false; self.pp];
         let mut result = PipelineResult {
@@ -163,127 +243,197 @@ impl PipelineSim {
         };
 
         loop {
-            // next stream to inject: smallest ready_at among unfinished,
-            // FIFO on ties (stable index order)
-            let mut pick: Option<usize> = None;
-            for (i, s) in streams.iter().enumerate() {
-                if s.done {
-                    continue;
-                }
-                if pick.is_none() || s.ready_at < streams[pick.unwrap()].ready_at {
-                    pick = Some(i);
-                }
-            }
-            let Some(si) = pick else { break };
-
-            // schedule this stream's next micro-batch
-            let (batch, now) = {
-                let s = &mut streams[si];
-                let now = s.ready_at;
-                let b = s.scheduler.schedule(&mut s.pool, &mut s.kv, now);
-                (b, now)
-            };
-            if batch.is_empty() {
-                let s = &mut streams[si];
-                if s.pool.all_complete() || s.pool.is_empty() {
-                    s.done = true;
-                    continue;
-                }
-                // idle until the next arrival in this stream
-                if let Some(t) = s.pool.next_arrival(now) {
-                    s.ready_at = t;
-                    continue;
-                }
-                s.done = true; // nothing left to do
-                continue;
-            }
-
-            let shape = batch.shape(&streams[si].pool);
-            let stage_time = self.profiler.predict(&shape);
-            let tokens = shape.total_tokens();
-            let mut bubble_this_mb = 0.0;
-            let mut t_in = now; // micro-batch available at stage 0 at `now`
-            for j in 0..self.pp {
-                let start = t_in.max(stage_free[j]);
-                let mut gap = 0.0;
-                if stage_used[j] {
-                    gap = (start - stage_free[j]).max(0.0);
-                    if gap > 0.0 {
-                        bubble_this_mb += gap;
-                        result.total_bubble += gap;
+            // next event in global time order; Apply beats Schedule on
+            // ties (its completions free blocks "at that instant"), lowest
+            // stream index breaks the rest
+            let mut pick: Option<(f64, u8, usize)> = None;
+            let mut stalled = 0usize;
+            let mut live = 0usize;
+            for (i, ev) in events.iter().enumerate() {
+                let key = match ev {
+                    Event::Schedule(t) => Some((*t, 1u8, i)),
+                    Event::Apply { at, .. } => Some((*at, 0u8, i)),
+                    Event::Stalled => {
+                        stalled += 1;
+                        live += 1;
+                        None
+                    }
+                    Event::Done => None,
+                };
+                if let Some(k) = key {
+                    live += 1;
+                    let better = match pick {
+                        None => true,
+                        Some(p) => k < p,
+                    };
+                    if better {
+                        pick = Some(k);
                     }
                 }
-                let end = start + stage_time;
-                if self.trace {
-                    result.trace.push(TraceEvent {
-                        micro_batch: result.micro_batches,
-                        stream: si,
-                        stage: j,
-                        start,
-                        end,
-                        gap,
-                        tokens: (shape.prefill_tokens(), shape.decode_tokens()),
-                    });
+            }
+            let Some((_, _, si)) = pick else {
+                if stalled > 0 {
+                    // every unfinished stream is stalled: admitted-but-
+                    // unschedulable or queued-but-starved requests that no
+                    // future event can unblock. Fail loudly like
+                    // Engine::run's "engine wedged" panic — a silent `done`
+                    // here would leave NaN completions behind.
+                    let detail: Vec<String> = pools
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, p)| !p.all_complete())
+                        .map(|(i, p)| {
+                            let left = p
+                                .iter()
+                                .filter(|r| r.completed_at.is_none() && r.rejected_at.is_none())
+                                .count();
+                            format!("stream {i}: {} active, {left} incomplete", p.active_count())
+                        })
+                        .collect();
+                    panic!(
+                        "pipeline wedged: {stalled}/{live} streams stalled with work left ({})",
+                        detail.join("; ")
+                    );
                 }
-                result.total_busy += stage_time;
-                stage_free[j] = end;
-                stage_used[j] = true;
-                t_in = end + self.p2p_time(tokens);
-            }
-            let finish = t_in - self.p2p_time(tokens); // exit of last stage
+                break; // all streams done
+            };
 
-            // apply results + attribute bubbles
-            let s = &mut streams[si];
-            let touched = batch.requests();
-            for &req in &touched {
-                result.bubble_per_request[s.global_ids[req]] += bubble_this_mb;
+            match std::mem::replace(&mut events[si], Event::Done) {
+                Event::Schedule(now) => {
+                    // admission: the stream's own policy (dispatching any
+                    // custom `admit_capped` override, e.g. request-level
+                    // batching) plus the per-stream cap over the SHARED
+                    // pool
+                    scheds[si].admit_capped(&mut pools[si], &mut kv, now, per_stream_cap);
+                    result.metrics.rejections += pools[si].take_rejected_events();
+                    pending_swap_in[si] +=
+                        self.applier.swap.swap_in_time(pools[si].take_swapped_in_tokens());
+
+                    let batch = scheds[si].compose(&mut pools[si], &mut kv, now);
+                    if batch.is_empty() {
+                        events[si] = if pools[si].all_complete() || pools[si].is_empty() {
+                            Event::Done
+                        } else if let Some(t) = pools[si].next_arrival(now) {
+                            Event::Schedule(t)
+                        } else {
+                            Event::Stalled
+                        };
+                        continue;
+                    }
+
+                    let shape = batch.shape(&pools[si]);
+                    let stage_time = self.profiler.predict(&shape);
+                    let tokens = shape.total_tokens();
+                    // a resumed victim's KV transfer delays entry to stage 0
+                    let t_swap_in = std::mem::take(&mut pending_swap_in[si]);
+                    let mut bubble_this_mb = 0.0;
+                    let mut t_in = now + t_swap_in;
+                    for j in 0..self.pp {
+                        let start = t_in.max(stage_free[j]);
+                        let mut gap = 0.0;
+                        if stage_used[j] {
+                            gap = (start - stage_free[j]).max(0.0);
+                            if gap > 0.0 {
+                                bubble_this_mb += gap;
+                                result.total_bubble += gap;
+                            }
+                        }
+                        let end = start + stage_time;
+                        if self.trace {
+                            result.trace.push(TraceEvent {
+                                micro_batch: result.micro_batches,
+                                stream: si,
+                                stage: j,
+                                start,
+                                end,
+                                gap,
+                                tokens: (shape.prefill_tokens(), shape.decode_tokens()),
+                            });
+                        }
+                        result.total_busy += stage_time;
+                        stage_free[j] = end;
+                        stage_used[j] = true;
+                        t_in = end + self.p2p_time(tokens);
+                    }
+                    let finish = t_in - self.p2p_time(tokens); // exit of last stage
+
+                    // attribute this micro-batch's bubbles to its requests
+                    for &req in &batch.requests() {
+                        result.bubble_per_request[global_ids[si][req]] += bubble_this_mb;
+                    }
+                    result.micro_batches += 1;
+                    events[si] = Event::Apply {
+                        at: finish,
+                        batch,
+                        shape,
+                        started_at: now,
+                        stage_time,
+                        swap_in: t_swap_in,
+                    };
+                }
+                Event::Apply { at: finish, batch, shape, started_at, stage_time, swap_in } => {
+                    // requests executing in OTHER streams' in-flight
+                    // micro-batches are not preemptible (their KV is under
+                    // the running kernel)
+                    let in_flight: Vec<(usize, usize)> = events
+                        .iter()
+                        .enumerate()
+                        .flat_map(|(j, ev)| {
+                            let reqs = match ev {
+                                Event::Apply { batch, .. } => batch.requests(),
+                                _ => Vec::new(),
+                            };
+                            reqs.into_iter().map(move |r| (j, r))
+                        })
+                        .collect();
+                    // the engine-shared state transition: progress, token
+                    // stamps, completions, growth, cross-stream preemption
+                    let effects = self
+                        .applier
+                        .apply_guarded(&mut pools, si, &mut kv, &batch, finish, &in_flight);
+                    for local in &effects.finished {
+                        result.completions[global_ids[si][*local]] = finish;
+                    }
+                    let live_kv: usize = pools.iter().map(|p| p.live_kv_tokens()).sum();
+                    result.metrics.record(IterationRecord {
+                        started_at,
+                        elapsed: stage_time,
+                        shape,
+                        prefill_alone: None,
+                        breakdown: None,
+                        kv_blocks_in_use: kv.allocated(),
+                        kv_blocks_total: kv.capacity(),
+                        n_active: pools.iter().map(|p| p.active_count()).sum(),
+                        preemptions: effects.preemptions,
+                        kv_frag_tokens: kv.internal_fragmentation(live_kv),
+                        swap_time: swap_in + effects.swap_time,
+                        rejections: 0,
+                    });
+                    result.makespan = result.makespan.max(finish);
+                    // swap-out transfers delay this stream's next schedule
+                    events[si] = Event::Schedule(finish + effects.swap_time);
+                    // freed blocks may unblock stalled streams: retry them
+                    for (j, ev) in events.iter_mut().enumerate() {
+                        if j != si && matches!(ev, Event::Stalled) {
+                            *ev = Event::Schedule(finish);
+                        }
+                    }
+                }
+                Event::Stalled | Event::Done => unreachable!("picked a non-runnable event"),
             }
-            let finished = Self::apply(&mut s.pool, &mut s.kv, &batch, finish);
-            for local in finished {
-                result.completions[s.global_ids[local]] = finish;
-            }
-            s.ready_at = finish;
-            result.micro_batches += 1;
-            result.makespan = result.makespan.max(finish);
         }
+        result.latency = LatencyReport::from_pools(&pools);
         result
-    }
-
-    /// Same state transition as `Engine::apply`; returns newly-completed
-    /// local request ids.
-    fn apply(pool: &mut RequestPool, kv: &mut KvManager, batch: &Batch, now: f64) -> Vec<usize> {
-        for (req, _start, len) in batch.prefill_items() {
-            let r = pool.get_mut(req);
-            r.prefilled += len;
-            if r.prefilled == r.spec.prompt_len {
-                r.decoded = 1;
-                r.first_token_at = Some(now);
-            }
-        }
-        for req in batch.decode_items() {
-            pool.get_mut(req).decoded += 1;
-        }
-        let mut finished = Vec::new();
-        for req in batch.requests() {
-            let r = pool.get(req);
-            if r.completed_at.is_none()
-                && r.prefilled == r.spec.prompt_len
-                && r.decoded >= r.spec.decode_len
-            {
-                let blocks = pool.complete(req, now);
-                kv.release_seq(blocks);
-                finished.push(req);
-            }
-        }
-        finished
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
-    use crate::coordinator::sched::{OrcaScheduler, SarathiScheduler};
+    use crate::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig, PreemptionMode};
+    use crate::coordinator::sched::{
+        HybridScheduler, OrcaScheduler, RequestLevelScheduler, SarathiScheduler,
+    };
     use crate::costmodel::CostModel;
     use crate::util::Rng;
     use crate::workload::zipf_population;
@@ -343,6 +493,19 @@ mod tests {
         assert!((1.4..2.6).contains(&speedup), "speedup={speedup}");
     }
 
+    /// Regression: `run_shared` must dispatch admission through the
+    /// scheduler's `admit_capped` override — driving the gate directly
+    /// bypassed RequestLevelScheduler's custom batch admission, left its
+    /// `running` list empty, and wedged every stream.
+    #[test]
+    fn request_level_baseline_works_in_pipeline_mode() {
+        let sim = PipelineSim::new(gpt3_profiler(2), 2);
+        let specs = workload(8);
+        let res = sim.run(&specs, 4, || Box::new(RequestLevelScheduler::new(4)));
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert!(res.latency.ttft.count() == 8);
+    }
+
     #[test]
     fn completion_curve_is_monotone() {
         let sim = PipelineSim::new(gpt3_profiler(2), 2);
@@ -358,5 +521,87 @@ mod tests {
         let res = sim.run(&workload(24), 27, || Box::new(OrcaScheduler::best(27)));
         assert!(res.bubble_per_request.iter().all(|&b| b >= 0.0));
         assert!(res.total_bubble <= res.makespan * 8.0);
+    }
+
+    #[test]
+    fn pipeline_latency_report_is_populated() {
+        // the seed's drifted apply never stamped token times, so TBT was
+        // silently empty for every pipeline run; the shared StepApplier
+        // fixes that
+        let sim = PipelineSim::new(gpt3_profiler(2), 2);
+        let specs = workload(12);
+        let res = sim.run(&specs, 8, || Box::new(SarathiScheduler::new(256, 8, 128)));
+        assert_eq!(res.latency.ttft.count(), 12, "every request has a TTFT");
+        assert!(res.latency.tbt.count() > 0, "TBT gaps are stamped");
+        assert_eq!(res.latency.normalized.count(), 12);
+        assert!(res.latency.ttft.min() > 0.0);
+        // metrics mirror the run: one record per micro-batch
+        assert_eq!(res.metrics.iterations.len(), res.micro_batches);
+    }
+
+    /// Shared tight setup for the preemption tests: 8 requests whose peak
+    /// demand (8 × 704 tokens) far exceeds the 16-block × 128-token pool,
+    /// so decode growth must preempt — across streams, since both draw
+    /// from the one pool. (Margins mirror-validated: 7 preemption events.)
+    fn tight_specs() -> Vec<RequestSpec> {
+        (0..8)
+            .map(|i| RequestSpec { prompt_len: 512, decode_len: 192, arrival: i as f64 * 0.01 })
+            .collect()
+    }
+
+    #[test]
+    fn shared_paged_pool_preempts_across_streams_and_completes() {
+        let pp = 2;
+        let sim = PipelineSim::new(gpt3_profiler(pp), pp);
+        let res = sim.run_shared(&tight_specs(), KvManager::paged(16, 128), Some(4), || {
+            Box::new(HybridScheduler::new(256, 4, 0)) as Box<dyn Scheduler>
+        });
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert!(res.metrics.preemptions > 0, "undersized shared pool must preempt");
+        assert_eq!(res.metrics.total_swap_time(), 0.0, "default swaps are free");
+    }
+
+    #[test]
+    fn costed_swaps_surface_in_pipeline_metrics() {
+        let pp = 2;
+        let d = Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+            .with_parallel(ParallelConfig::tp_pp(8, pp));
+        let sim = PipelineSim::new(gpt3_profiler(pp), pp)
+            .with_swap_cost(SwapCost::for_deployment(&d, PreemptionMode::Swap));
+        let free_sim = PipelineSim::new(gpt3_profiler(pp), pp);
+        let specs = tight_specs();
+        let kv = || KvManager::paged(16, 128);
+        let sched =
+            || Box::new(HybridScheduler::new(256, 4, 0)) as Box<dyn Scheduler>;
+        let costed = sim.run_shared(&specs, kv(), Some(4), sched);
+        let free = free_sim.run_shared(&specs, kv(), Some(4), sched);
+        assert!(costed.metrics.preemptions > 0);
+        assert!(costed.metrics.total_swap_time() > 0.0, "swap time must be charged");
+        assert!(
+            costed.makespan > free.makespan,
+            "paying for KV movement must stretch the run: {} !> {}",
+            costed.makespan,
+            free.makespan
+        );
+    }
+
+    /// A scheduler that admits but never composes work: the admitted
+    /// requests are unschedulable forever, which must fail loudly.
+    struct NullScheduler;
+    impl Scheduler for NullScheduler {
+        fn compose(&mut self, _: &mut RequestPool, _: &mut KvManager, _: f64) -> Batch {
+            Batch::default()
+        }
+        fn name(&self) -> &'static str {
+            "null"
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline wedged")]
+    fn admitted_but_unschedulable_requests_panic_loudly() {
+        let sim = PipelineSim::new(gpt3_profiler(2), 2);
+        let specs = workload(4);
+        let _ = sim.run(&specs, 4, || Box::new(NullScheduler) as Box<dyn Scheduler>);
     }
 }

@@ -70,6 +70,12 @@ impl Summary {
         &self.samples
     }
 
+    /// Fold another summary's samples into this one (cross-replica
+    /// latency aggregation).
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     /// Empirical CDF as (value, fraction<=value) points, for Fig-12a-style
     /// plots.
     pub fn cdf(&self) -> Vec<(f64, f64)> {

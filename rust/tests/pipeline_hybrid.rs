@@ -1,0 +1,143 @@
+//! Acceptance: Sarathi-Serve-style hybrid token-budget micro-batches over
+//! ONE shared paged `KvManager` per replica (arXiv 2403.02310 tested at
+//! the pipeline level), with preemption priced the way DistServe prices
+//! KV movement (arXiv 2401.09670).
+//!
+//! The claims under test, all over the SAME shared paged pool (the honest
+//! per-replica KV budget — B×L_max tokens — not the seed's
+//! pp×-overcommitted per-stream slots):
+//!
+//! 1. hybrid token-budget micro-batches cut the median per-request bubble
+//!    time well below Orca's;
+//! 2. while keeping P99 time-between-tokens no worse than request-level
+//!    SARATHI (the budget bounds every fused iteration, so decode stalls
+//!    shrink — Sarathi-Serve's low-TBT claim);
+//! 3. and on an undersized pool, preemption fires with swap time > 0
+//!    visible in `Metrics` and the JSONL trace, token conservation and
+//!    block accounting intact.
+//!
+//! Margins pre-validated against a Python mirror of the cost model +
+//! pipeline simulator: hybrid/orca median bubble ≈ 0.20 (asserted < 0.5),
+//! hybrid/sarathi P99 TBT ≈ 0.65 (asserted ≤ 1.0), undersized run ≈ 40
+//! preemptions / 0.56 s swap (asserted > 0).
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig, PreemptionMode};
+use sarathi::coordinator::sched::{HybridScheduler, OrcaScheduler, SarathiScheduler};
+use sarathi::coordinator::{KvManager, Scheduler, SwapCost};
+use sarathi::costmodel::CostModel;
+use sarathi::profiler::Profiler;
+use sarathi::simulator::{PipelineResult, PipelineSim};
+use sarathi::util::Rng;
+use sarathi::workload::{zipf_population, RequestSpec};
+
+fn deployment(pp: usize) -> Deployment {
+    Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+        .with_parallel(ParallelConfig::tp_pp(8, pp))
+}
+
+fn sim(pp: usize) -> PipelineSim {
+    let d = deployment(pp);
+    let profiler = Profiler::build(CostModel::for_deployment(&d), 4096, 32);
+    PipelineSim::new(profiler, pp)
+        .with_swap_cost(SwapCost::for_deployment(&d, PreemptionMode::Swap))
+}
+
+fn workload(n: usize, pd: f64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(42);
+    zipf_population(&mut rng, n, 0.4, 1024, 4096, pd)
+}
+
+/// The honest shared per-replica pool: B=27 worst-case slots' worth of
+/// tokens as 128-token paged blocks (27 × 4096 / 128 = 864 blocks).
+const BLOCK: usize = 128;
+const SHARED_BLOCKS: usize = 27 * 4096 / BLOCK;
+
+fn run_shared(
+    sim: &PipelineSim,
+    specs: &[RequestSpec],
+    mk: impl Fn() -> Box<dyn Scheduler>,
+) -> PipelineResult {
+    sim.run_shared(specs, KvManager::paged(SHARED_BLOCKS, BLOCK), Some(27), || mk())
+}
+
+#[test]
+fn hybrid_cuts_bubbles_vs_orca_with_tbt_no_worse_than_sarathi() {
+    let specs = workload(400, 10.0);
+    let sim = sim(8);
+    let orca = run_shared(&sim, &specs, || Box::new(OrcaScheduler::best(27)));
+    let sarathi = run_shared(&sim, &specs, || Box::new(SarathiScheduler::new(256, 27, 128)));
+    let hybrid = run_shared(&sim, &specs, || Box::new(HybridScheduler::new(128, 27, 4)));
+
+    for (name, r) in [("orca", &orca), ("sarathi", &sarathi), ("hybrid", &hybrid)] {
+        assert!(
+            r.completions.iter().all(|t| !t.is_nan()),
+            "{name}: request dropped on the shared pool"
+        );
+    }
+
+    // (1) token-budget micro-batches cut the median per-request bubble
+    // well below Orca's full-prompt ones (mirror: 0.20×)
+    let med = |r: &PipelineResult| r.bubble_summary().percentile(50.0);
+    assert!(
+        med(&hybrid) < 0.5 * med(&orca),
+        "median bubble: hybrid={} !< 0.5 x orca={}",
+        med(&hybrid),
+        med(&orca)
+    );
+
+    // (2) P99 TBT no worse than request-level SARATHI (mirror: 0.65×) —
+    // TBT exists at all for pipeline runs because stamping now goes
+    // through the engine-shared StepApplier
+    assert!(hybrid.latency.tbt.count() > 0 && sarathi.latency.tbt.count() > 0);
+    let p99 = |r: &PipelineResult| r.latency.tbt.percentile(99.0);
+    assert!(
+        p99(&hybrid) <= p99(&sarathi),
+        "p99 TBT: hybrid={} !<= sarathi={}",
+        p99(&hybrid),
+        p99(&sarathi)
+    );
+
+    // the tighter budget also finishes sooner than Orca end-to-end
+    assert!(hybrid.makespan < orca.makespan);
+}
+
+#[test]
+fn undersized_shared_pool_preempts_with_visible_swap_time() {
+    // decode-heavy load (P:D = 3) over a pool an order of magnitude below
+    // peak demand: growth must preempt across streams, each eviction
+    // paying KV-bytes-over-PCIe
+    let specs = workload(64, 3.0);
+    let sim = sim(4);
+    let res = sim.run_shared(&specs, KvManager::paged(60, BLOCK), Some(8), || {
+        Box::new(HybridScheduler::new(128, 8, 0)) as Box<dyn Scheduler>
+    });
+
+    assert!(res.completions.iter().all(|t| !t.is_nan()), "everyone still completes");
+    assert!(res.metrics.preemptions > 0, "undersized pool must preempt");
+    assert!(res.metrics.total_swap_time() > 0.0, "preemption swap time must be charged");
+
+    // token conservation under costed cross-stream preemption (swap
+    // semantics: progress is never recomputed)
+    let p_expect: usize = specs.iter().map(|s| s.prompt_len).sum();
+    let d_expect: usize = specs.iter().map(|s| s.decode_len - 1).sum();
+    assert_eq!(res.metrics.total_prefill_tokens(), p_expect);
+    assert_eq!(res.metrics.total_decode_tokens(), d_expect);
+
+    // block accounting: the final record shows every block returned
+    let last = res.metrics.iterations.last().unwrap();
+    assert_eq!(last.kv_blocks_in_use, 0, "blocks leaked");
+    assert_eq!(last.kv_blocks_total, 60);
+
+    // swap time appears in the JSONL trace
+    let path = std::env::temp_dir().join("sarathi_pipeline_hybrid_trace.jsonl");
+    res.metrics.write_jsonl(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), res.metrics.iterations.len());
+    let swapped: Vec<&str> =
+        text.lines().filter(|l| !l.contains("\"swap_time\":0.000000")).collect();
+    assert!(
+        !swapped.is_empty(),
+        "at least one iteration must carry positive swap time in the trace"
+    );
+    std::fs::remove_file(&path).ok();
+}
