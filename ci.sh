@@ -26,4 +26,15 @@ test -s "$TRACE" || { echo "empty JSONL trace"; exit 1; }
 head -c 200 "$TRACE"; echo
 rm -f "$TRACE"
 
+echo "== smoke: prefix-share simulate reports cache hits in report + JSONL =="
+PTRACE="$(mktemp -t prefix_trace.XXXXXX.jsonl)"
+POUT="$(cargo run --release -- simulate --requests 200 --scheduler hybrid \
+    --block-size 32 --prefix-share --num-templates 4 --json-out "$PTRACE")"
+echo "$POUT" | grep -E 'prefix_hits=[1-9][0-9]*' \
+    || { echo "no prefix hits reported"; exit 1; }
+grep -q '"prefix_hits":' "$PTRACE" || { echo "JSONL lacks prefix_hits"; exit 1; }
+grep -qE '"shared_kv_tokens":[1-9][0-9]*' "$PTRACE" \
+    || { echo "JSONL never shows shared KV occupancy"; exit 1; }
+rm -f "$PTRACE"
+
 echo "CI gauntlet passed."

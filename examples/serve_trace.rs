@@ -34,7 +34,7 @@ fn main() -> Result<()> {
         .collect();
     let specs: Vec<RequestSpec> = prompts
         .iter()
-        .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0 })
+        .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0, prefix: None })
         .collect();
     let total_tokens: usize =
         specs.iter().map(|s| s.prompt_len + s.decode_len - 1).sum();
@@ -64,6 +64,7 @@ fn main() -> Result<()> {
             watermark_blocks: 0,
             preemption: sarathi::config::PreemptionMode::Swap,
             reject_infeasible: false,
+            prefix_share: false,
         };
         let gen: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
         let mut engine = Engine::new(

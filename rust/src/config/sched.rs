@@ -104,6 +104,13 @@ pub struct SchedulerConfig {
     /// [`crate::coordinator::InfeasiblePolicy`]). Figure-repro /
     /// closed-loop runs keep the default loud panic.
     pub reject_infeasible: bool,
+    /// Copy-on-write prefix sharing over the paged block map (hybrid-only;
+    /// `--prefix-share` on the CLI): requests tagged with a
+    /// [`PrefixSpec`] whose prefix is already resident reserve and compute
+    /// only their non-shared tokens.
+    ///
+    /// [`PrefixSpec`]: crate::workload::PrefixSpec
+    pub prefix_share: bool,
 }
 
 impl SchedulerConfig {
@@ -118,6 +125,7 @@ impl SchedulerConfig {
             watermark_blocks: 0,
             preemption: PreemptionMode::Swap,
             reject_infeasible: false,
+            prefix_share: false,
         }
     }
 
@@ -153,6 +161,7 @@ impl SchedulerConfig {
             watermark_blocks: 0,
             preemption: PreemptionMode::Swap,
             reject_infeasible: false,
+            prefix_share: false,
         }
     }
 
@@ -184,6 +193,13 @@ impl SchedulerConfig {
     /// Open-loop stance: reject infeasible requests instead of panicking.
     pub fn with_reject_infeasible(mut self) -> Self {
         self.reject_infeasible = true;
+        self
+    }
+
+    /// Copy-on-write prefix sharing over the paged block map
+    /// (hybrid-only — `make_scheduler` asserts the pairing).
+    pub fn with_prefix_share(mut self) -> Self {
+        self.prefix_share = true;
         self
     }
 }
@@ -241,5 +257,12 @@ mod tests {
         assert_eq!(c.preemption, PreemptionMode::Recompute);
         assert!(c.reject_infeasible);
         assert!(!SchedulerConfig::sarathi(256, 8).reject_infeasible);
+    }
+
+    #[test]
+    fn prefix_share_flag_composes() {
+        let c = SchedulerConfig::hybrid(256, 16).with_block_size(32).with_prefix_share();
+        assert!(c.prefix_share);
+        assert!(!SchedulerConfig::hybrid(256, 16).prefix_share);
     }
 }

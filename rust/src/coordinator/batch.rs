@@ -150,9 +150,9 @@ mod tests {
     fn pool() -> RequestPool {
         let mut p = RequestPool::new();
         // 0: mid-prefill, 1: decoding, 2: queued
-        p.push(RequestSpec { prompt_len: 100, decode_len: 5, arrival: 0.0 });
-        p.push(RequestSpec { prompt_len: 50, decode_len: 5, arrival: 0.0 });
-        p.push(RequestSpec { prompt_len: 10, decode_len: 5, arrival: 0.0 });
+        p.push(RequestSpec { prompt_len: 100, decode_len: 5, arrival: 0.0, prefix: None });
+        p.push(RequestSpec { prompt_len: 50, decode_len: 5, arrival: 0.0, prefix: None });
+        p.push(RequestSpec { prompt_len: 10, decode_len: 5, arrival: 0.0, prefix: None });
         p.admit(0, vec![0], 0.0);
         p.get_mut(0).prefilled = 32;
         p.admit(1, vec![1], 0.0);

@@ -125,13 +125,16 @@ impl<'a> Engine<'a> {
     pub fn step(&mut self) -> bool {
         let batch = self.scheduler.schedule(&mut self.pool, &mut self.kv, self.now);
         // admission may have rejected infeasible requests (open-loop
-        // policy) or swapped preempted victims back in — account for both.
-        // Rejections ride on this iteration's record (Metrics::record
-        // accumulates them); an idle step has no record, so count directly.
+        // policy), served prefix-cache hits, or swapped preempted victims
+        // back in — account for all three. Rejections/hits ride on this
+        // iteration's record (Metrics::record accumulates them); an idle
+        // step has no record, so count directly.
         let rejections = self.pool.take_rejected_events();
+        let prefix_hits = self.pool.take_prefix_hits();
         let swap_in = self.applier.swap.swap_in_time(self.pool.take_swapped_in_tokens());
         if batch.is_empty() {
             self.metrics.rejections += rejections;
+            self.metrics.prefix_hits += prefix_hits;
             // idle: jump to the next arrival if one exists
             if let Some(t) = self.pool.next_arrival(self.now) {
                 self.now = t;
@@ -174,9 +177,13 @@ impl<'a> Engine<'a> {
             kv_blocks_total: self.kv.capacity(),
             n_active: self.pool.active_count(),
             preemptions: effects.preemptions,
-            kv_frag_tokens: self.kv.internal_fragmentation(self.pool.live_kv_tokens()),
+            // occupancy counts shared-prefix content once (the private sum
+            // plus the allocator's resident-prefix tokens), not per sharer
+            kv_frag_tokens: self.kv.internal_fragmentation(self.pool.live_private_kv_tokens()),
             swap_time: swap_in + effects.swap_time,
             rejections,
+            prefix_hits,
+            shared_kv_tokens: self.pool.shared_kv_tokens(),
         });
         // swap-out transfers of this iteration's victims delay the next
         self.now = done_at + effects.swap_time;
@@ -284,7 +291,12 @@ mod tests {
     #[test]
     fn staggered_arrivals_are_served() {
         let specs: Vec<RequestSpec> = (0..4)
-            .map(|i| RequestSpec { prompt_len: 256, decode_len: 8, arrival: i as f64 * 0.05 })
+            .map(|i| RequestSpec {
+                prompt_len: 256,
+                decode_len: 8,
+                arrival: i as f64 * 0.05,
+                prefix: None,
+            })
             .collect();
         let e = run_with(Box::new(SarathiScheduler::new(128, 4, 128)), &specs, 4);
         assert!(e.pool.all_complete());
@@ -323,7 +335,7 @@ mod tests {
     fn tokens_are_stamped_at_iteration_end() {
         // the satellite fix: a single request's first token must land at
         // now + elapsed of the iteration that produced it, not at its start
-        let specs = [RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 }];
+        let specs = [RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0, prefix: None }];
         let e = run_with(Box::new(SarathiScheduler::new(128, 1, 128)), &specs, 1);
         let r = e.pool.get(0);
         let it0 = &e.metrics.iterations[0];
@@ -339,7 +351,7 @@ mod tests {
     fn costed_preemption_charges_swap_time_and_stretches_the_clock() {
         use crate::coordinator::step::{PreemptionMode, SwapCost};
         let specs: Vec<RequestSpec> = (0..4)
-            .map(|_| RequestSpec { prompt_len: 32, decode_len: 40, arrival: 0.0 })
+            .map(|_| RequestSpec { prompt_len: 32, decode_len: 40, arrival: 0.0, prefix: None })
             .collect();
         let run = |swap: SwapCost| {
             let mut e = Engine::new(
@@ -377,9 +389,9 @@ mod tests {
         // blocks); under the Reject policy it must not crash the engine or
         // stall the co-running traffic behind it
         let specs = [
-            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.0 },
-            RequestSpec { prompt_len: 32, decode_len: 200, arrival: 0.0 },
-            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.0 },
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.0, prefix: None },
+            RequestSpec { prompt_len: 32, decode_len: 200, arrival: 0.0, prefix: None },
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.0, prefix: None },
         ];
         let mut e = Engine::new(
             RequestPool::from_specs(&specs),
@@ -399,12 +411,50 @@ mod tests {
     }
 
     #[test]
+    fn prefix_sharing_completes_and_conserves_tokens_including_skips() {
+        use crate::util::Rng;
+        use crate::workload::shared_prefix_population;
+        let mut rng = Rng::new(21);
+        let pop = shared_prefix_population(&mut rng, 24, 3, 0.8, 96, 16, 48, 3.0);
+        let mut e = Engine::new(
+            RequestPool::from_specs(&pop),
+            KvManager::paged(64, 16),
+            Box::new(HybridScheduler::new(128, 16, 2).with_prefix_share(true)),
+            sim(),
+        );
+        e.run();
+        assert!(e.pool.all_complete());
+        assert!(e.metrics.prefix_hits > 0, "template traffic must hit the cache");
+        let per_req_hits: usize = e.pool.iter().map(|r| r.prefix_hits).sum();
+        assert_eq!(e.metrics.prefix_hits, per_req_hits);
+        // token conservation with compute skips: scheduled prefill tokens
+        // plus cache-served tokens equal the workload's prompts exactly
+        let skipped: usize = e.pool.iter().map(|r| r.prefix_skipped_tokens).sum();
+        let total_p: usize = pop.iter().map(|s| s.prompt_len).sum();
+        let total_d: usize = pop.iter().map(|s| s.decode_len - 1).sum();
+        assert_eq!(e.metrics.total_prefill_tokens() + skipped, total_p);
+        assert_eq!(e.metrics.total_decode_tokens(), total_d);
+        assert!(skipped > 0, "hits must skip resident prefill work");
+        // every request fully decoded, all private blocks returned: only
+        // resident prefix pins may remain
+        for r in e.pool.iter() {
+            assert_eq!(r.decoded, r.spec.decode_len);
+            assert!(r.blocks.is_empty());
+        }
+        let pinned: usize =
+            e.kv.registered_prefixes().map(|(_, _, run)| run.len()).sum();
+        assert_eq!(e.kv.available() + pinned, 64, "only prefix pins outlive the run");
+        // shared occupancy showed up in the per-iteration records
+        assert!(e.metrics.peak_shared_kv_tokens() > 0);
+    }
+
+    #[test]
     fn paged_engine_preempts_and_still_completes() {
         // 4 requests × (32 prompt + 40 decode) = 288 peak KV tokens over a
         // 12-block × 16-token pool (192 tokens): decode growth must force
         // preemptions, yet everyone finishes and all blocks come back.
         let specs: Vec<RequestSpec> = (0..4)
-            .map(|_| RequestSpec { prompt_len: 32, decode_len: 40, arrival: 0.0 })
+            .map(|_| RequestSpec { prompt_len: 32, decode_len: 40, arrival: 0.0, prefix: None })
             .collect();
         let mut e = Engine::new(
             RequestPool::from_specs(&specs),

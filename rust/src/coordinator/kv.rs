@@ -1,4 +1,5 @@
-//! Token-granular paged KV-cache block allocator.
+//! Token-granular paged KV-cache block allocator with ref-counted,
+//! copy-on-write prefix sharing.
 //!
 //! The seed reserved one whole-request *slot* per admitted request, sized
 //! for the worst-case sequence length (§4.3.1) — which caps concurrency at
@@ -8,19 +9,66 @@
 //! blocks are allocated as its KV actually grows (chunked prefill, then one
 //! token per decode), and released on completion or preemption.
 //!
+//! On top of paging, blocks are **ref-counted** so identical prompt
+//! prefixes (shared system prompts, few-shot templates) can be shared
+//! across requests instead of paying for their KV once per sharer
+//! (PagedAttention §4.3, arXiv 2309.06180):
+//!
+//! * [`share_seq`](KvManager::share_seq) hands a second (third, ...)
+//!   reference to an existing block run; `release` decrements and only
+//!   frees at zero, so preempting or completing one sharer can never free
+//!   blocks another sharer still reads.
+//! * [`fork_block`](KvManager::fork_block) is the copy-on-write edge: a
+//!   sharer that must *append into* a partially-filled shared block gets a
+//!   private copy; the shared original is never mutated while its
+//!   refcount exceeds one.
+//! * [`register_prefix`](KvManager::register_prefix) /
+//!   [`lookup_prefix`](KvManager::lookup_prefix) index resident prefix
+//!   block-runs by prefix hash. A registered prefix holds one reference
+//!   ("pin") on its run so it stays resident across sharer churn; a
+//!   *cold* prefix (pin is the only reference) is reclaimed automatically
+//!   when the allocator runs out of free blocks, oldest-registered first.
+//!   A run registers **unready** and becomes servable
+//!   ([`mark_prefix_ready`](KvManager::mark_prefix_ready), driven by the
+//!   shared state transition) only after the registrant's prefill has
+//!   computed the covered tokens INTO the run — filling pin-shared blocks
+//!   in place is the one sanctioned write to a block with refcount > 1,
+//!   safe because the readiness gate keeps every reader out until the
+//!   fill completes.
+//!
 //! The old slot semantics are the degenerate case `block_size =
 //! DEGENERATE_BLOCK` (one block covers any sequence): [`KvManager::new`]
 //! builds exactly that, so every seed experiment reproduces unchanged.
+//! Prefix sharing is meaningless there (one block holds private tokens
+//! too), so `lookup_prefix` always misses on degenerate pools.
 //!
 //! Invariants (enforced with loud panics, exercised by
-//! `tests/kv_properties.rs`):
-//! * a block is held by at most one owner at a time,
+//! `tests/kv_properties.rs` and `tests/prefix_properties.rs`):
+//! * a block's refcount equals its holders (request tables + prefix pins),
 //! * `allocated() + available() == capacity()` always,
-//! * releasing a free block (double free) panics.
+//! * releasing a free block (double free) panics,
+//! * `fork_block` never hands out a block whose refcount exceeds one.
 
 /// Block size that makes one block cover any sequence — the seed's
 /// whole-request slot semantics.
 pub const DEGENERATE_BLOCK: usize = usize::MAX;
+
+/// A resident, pinned prefix block-run in the prefix index.
+#[derive(Clone, Debug)]
+struct PrefixEntry {
+    /// Prefix identity (template hash).
+    hash: u64,
+    /// Prompt tokens the run covers.
+    tokens: usize,
+    /// The block run, in table order; the last block may be partial.
+    blocks: Vec<usize>,
+    /// False until the registrant's prefill has actually computed the
+    /// covered tokens ([`KvManager::mark_prefix_ready`], driven by the
+    /// shared state transition). Hits gate on this: KV that has not been
+    /// produced yet cannot serve anyone — registration at admission only
+    /// reserves and indexes the run.
+    ready: bool,
+}
 
 #[derive(Clone, Debug)]
 pub struct KvManager {
@@ -30,8 +78,12 @@ pub struct KvManager {
     num_blocks: usize,
     /// Free block ids (stack; lowest ids on top).
     free: Vec<usize>,
-    /// in_use[block] = true while allocated.
-    in_use: Vec<bool>,
+    /// ref_count[block] = live references (request tables + prefix pins);
+    /// 0 while free.
+    ref_count: Vec<u32>,
+    /// Registered prefix runs, oldest first (reclaim order). Few templates
+    /// are live at once, so linear lookup beats a map here.
+    prefixes: Vec<PrefixEntry>,
 }
 
 impl KvManager {
@@ -48,7 +100,8 @@ impl KvManager {
             block_size,
             num_blocks,
             free: (0..num_blocks).rev().collect(),
-            in_use: vec![false; num_blocks],
+            ref_count: vec![0; num_blocks],
+            prefixes: Vec::new(),
         }
     }
 
@@ -70,6 +123,8 @@ impl KvManager {
         self.free.len()
     }
 
+    /// Allocated blocks — each counted ONCE no matter how many sharers
+    /// reference it (`allocated() + available() == capacity()`).
     pub fn allocated(&self) -> usize {
         self.num_blocks - self.free.len()
     }
@@ -84,18 +139,62 @@ impl KvManager {
         }
     }
 
-    /// Allocate one block, lowest-index first.
+    /// Position of the oldest *cold* prefix: registered but with no live
+    /// sharer (the pin is the only reference on every block).
+    fn cold_prefix_pos(&self) -> Option<usize> {
+        self.prefixes.iter().position(|p| p.blocks.iter().all(|&b| self.ref_count[b] == 1))
+    }
+
+    /// Blocks recoverable by evicting cold prefixes.
+    pub fn reclaimable(&self) -> usize {
+        self.reclaimable_excluding(None)
+    }
+
+    /// [`reclaimable`](Self::reclaimable), excluding the prefix `hash` —
+    /// an admission gate about to SHARE that run must not count its
+    /// blocks as funds (sharing pins them hot).
+    pub fn reclaimable_excluding(&self, hash: Option<u64>) -> usize {
+        self.prefixes
+            .iter()
+            .filter(|p| Some(p.hash) != hash)
+            .filter(|p| p.blocks.iter().all(|&b| self.ref_count[b] == 1))
+            .map(|p| p.blocks.len())
+            .sum()
+    }
+
+    /// Evict the oldest cold prefix, freeing its pinned blocks. Callers
+    /// guarantee one exists.
+    fn reclaim_one_cold(&mut self) {
+        let pos = self.cold_prefix_pos().expect("reclaim without a cold prefix");
+        let entry = self.prefixes.remove(pos);
+        for b in entry.blocks {
+            self.release(b);
+        }
+    }
+
+    /// Allocate one block, lowest-index first, evicting a cold prefix if
+    /// the free list is empty. Failure changes nothing.
     pub fn alloc(&mut self) -> Option<usize> {
+        if self.free.is_empty() {
+            if self.reclaimable() == 0 {
+                return None;
+            }
+            self.reclaim_one_cold();
+        }
         let block = self.free.pop()?;
-        debug_assert!(!self.in_use[block]);
-        self.in_use[block] = true;
+        debug_assert_eq!(self.ref_count[block], 0);
+        self.ref_count[block] = 1;
         Some(block)
     }
 
-    /// Allocate `n` blocks all-or-nothing.
+    /// Allocate `n` blocks all-or-nothing (cold prefixes are reclaimed
+    /// under pressure; failure changes nothing).
     pub fn alloc_n(&mut self, n: usize) -> Option<Vec<usize>> {
-        if self.free.len() < n {
+        if self.free.len() + self.reclaimable() < n {
             return None;
+        }
+        while self.free.len() < n {
+            self.reclaim_one_cold();
         }
         Some((0..n).map(|_| self.alloc().expect("checked free count")).collect())
     }
@@ -116,12 +215,16 @@ impl KvManager {
         }
     }
 
-    /// Release one block. Panics on double-free — that is a scheduler bug
-    /// we want loud.
+    /// Release one reference. Frees the block only when the last reference
+    /// drops, so releasing one sharer's table never frees a co-sharer's
+    /// blocks. Panics on double-free — that is a scheduler bug we want
+    /// loud.
     pub fn release(&mut self, block: usize) {
-        assert!(self.in_use[block], "double free of KV block {block}");
-        self.in_use[block] = false;
-        self.free.push(block);
+        assert!(self.ref_count[block] > 0, "double free of KV block {block}");
+        self.ref_count[block] -= 1;
+        if self.ref_count[block] == 0 {
+            self.free.push(block);
+        }
     }
 
     /// Release a whole block table (completion or preemption).
@@ -131,8 +234,135 @@ impl KvManager {
         }
     }
 
+    /// Add one reference to an allocated block.
+    pub fn share(&mut self, block: usize) {
+        assert!(self.ref_count[block] > 0, "sharing a free KV block {block}");
+        self.ref_count[block] += 1;
+    }
+
+    /// Add a reference to every block of `run` and return the shared table
+    /// prefix a new sharer should start from.
+    pub fn share_seq(&mut self, run: &[usize]) -> Vec<usize> {
+        for &b in run {
+            self.share(b);
+        }
+        run.to_vec()
+    }
+
+    /// Copy-on-write: the caller is about to append tokens into `block`.
+    /// With a single reference the block is private and returned as-is;
+    /// with sharers a fresh private copy is allocated and the caller's
+    /// reference on the shared original is dropped — the original is never
+    /// mutated while shared. `None` when the pool cannot supply the copy.
+    pub fn fork_block(&mut self, block: usize) -> Option<usize> {
+        assert!(self.ref_count[block] > 0, "fork of a free KV block {block}");
+        if self.ref_count[block] == 1 {
+            return Some(block);
+        }
+        let fresh = self.alloc()?;
+        self.ref_count[block] -= 1;
+        Some(fresh)
+    }
+
+    pub fn ref_count(&self, block: usize) -> usize {
+        self.ref_count[block] as usize
+    }
+
+    /// True when `block` has more than one live reference.
+    pub fn is_shared(&self, block: usize) -> bool {
+        self.ref_count[block] > 1
+    }
+
+    /// Register a prefix block-run under `hash`, pinning every block (one
+    /// index-owned reference) so the run stays resident while sharers come
+    /// and go. `run` must be the caller's already-allocated table head
+    /// covering exactly `tokens` prompt tokens.
+    pub fn register_prefix(&mut self, hash: u64, tokens: usize, run: &[usize]) {
+        assert!(!self.is_degenerate(), "prefix sharing requires a paged pool");
+        assert!(tokens > 0, "registering an empty prefix");
+        assert_eq!(
+            run.len(),
+            self.blocks_needed(tokens),
+            "prefix run does not cover its {tokens} tokens"
+        );
+        assert!(self.lookup_prefix(hash).is_none(), "prefix {hash:#x} already registered");
+        for &b in run {
+            self.share(b);
+        }
+        self.prefixes.push(PrefixEntry { hash, tokens, blocks: run.to_vec(), ready: false });
+    }
+
+    /// Resident run for `hash`, ready or not: `(covered tokens, block
+    /// run)`. Always a miss on degenerate pools (a slot holds private
+    /// tokens too). Admission hits must use
+    /// [`lookup_servable`](Self::lookup_servable) — an unready run's KV
+    /// is still being computed by its registrant.
+    pub fn lookup_prefix(&self, hash: u64) -> Option<(usize, &[usize])> {
+        if self.is_degenerate() {
+            return None;
+        }
+        self.prefixes.iter().find(|p| p.hash == hash).map(|p| (p.tokens, p.blocks.as_slice()))
+    }
+
+    /// [`lookup_prefix`](Self::lookup_prefix) restricted to READY runs —
+    /// the only ones whose KV exists and can serve a sharer.
+    pub fn lookup_servable(&self, hash: u64) -> Option<(usize, &[usize])> {
+        if self.is_degenerate() {
+            return None;
+        }
+        self.prefixes
+            .iter()
+            .find(|p| p.hash == hash && p.ready)
+            .map(|p| (p.tokens, p.blocks.as_slice()))
+    }
+
+    /// True once the registrant's prefill has produced the run's KV.
+    pub fn is_prefix_ready(&self, hash: u64) -> bool {
+        self.prefixes.iter().any(|p| p.hash == hash && p.ready)
+    }
+
+    /// Mark `hash`'s run servable — called by the state transition when
+    /// the prefill that fills the run crosses its covered tokens.
+    pub fn mark_prefix_ready(&mut self, hash: u64) {
+        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash) {
+            p.ready = true;
+        }
+    }
+
+    /// Drop the index pin for `hash` (manual eviction; the allocator also
+    /// reclaims cold prefixes itself under pressure). Returns whether the
+    /// prefix was registered. Blocks still referenced by live sharers stay
+    /// allocated until those sharers release.
+    pub fn evict_prefix(&mut self, hash: u64) -> bool {
+        let Some(pos) = self.prefixes.iter().position(|p| p.hash == hash) else {
+            return false;
+        };
+        let entry = self.prefixes.remove(pos);
+        for b in entry.blocks {
+            self.release(b);
+        }
+        true
+    }
+
+    /// Number of registered (resident) prefixes.
+    pub fn num_prefixes(&self) -> usize {
+        self.prefixes.len()
+    }
+
+    /// Iterate registered prefixes as `(hash, tokens, run)` — metrics and
+    /// the property suites introspect pins through this.
+    pub fn registered_prefixes(&self) -> impl Iterator<Item = (u64, usize, &[usize])> {
+        self.prefixes.iter().map(|p| (p.hash, p.tokens, p.blocks.as_slice()))
+    }
+
+    /// Tokens of KV content held resident by registered prefix runs
+    /// (counted once each, however many sharers reference them).
+    pub fn resident_prefix_tokens(&self) -> usize {
+        self.prefixes.iter().map(|p| p.tokens).sum()
+    }
+
     pub fn is_allocated(&self, block: usize) -> bool {
-        self.in_use[block]
+        self.ref_count[block] > 0
     }
 
     /// True for the seed-compatible whole-request-slot layout.
@@ -140,14 +370,21 @@ impl KvManager {
         self.block_size == DEGENERATE_BLOCK
     }
 
-    /// Internal fragmentation: tokens of allocated-but-unused capacity,
-    /// given the number of live KV tokens across all owners. Reports 0 in
-    /// degenerate mode — the sentinel block size is nominal, not memory.
-    pub fn internal_fragmentation(&self, live_tokens: usize) -> usize {
+    /// Internal fragmentation: tokens of allocated-but-unused capacity.
+    /// `private_live_tokens` is the pool-wide count of live KV tokens in
+    /// PRIVATE (unshared) block territory — callers pass
+    /// `RequestPool::live_private_kv_tokens`, NOT the raw per-request sum,
+    /// so a shared prefix block's content is counted once (via
+    /// [`resident_prefix_tokens`](Self::resident_prefix_tokens)) rather
+    /// than once per sharer. Reports 0 in degenerate mode — the sentinel
+    /// block size is nominal, not memory.
+    pub fn internal_fragmentation(&self, private_live_tokens: usize) -> usize {
         if self.is_degenerate() {
             return 0;
         }
-        self.allocated().saturating_mul(self.block_size).saturating_sub(live_tokens)
+        self.allocated()
+            .saturating_mul(self.block_size)
+            .saturating_sub(private_live_tokens + self.resident_prefix_tokens())
     }
 }
 
@@ -236,6 +473,108 @@ mod tests {
     }
 
     #[test]
+    fn shared_blocks_survive_one_sharers_release() {
+        let mut kv = KvManager::paged(4, 16);
+        let run = kv.alloc_n(2).unwrap();
+        let copy = kv.share_seq(&run);
+        assert_eq!(copy, run);
+        assert!(kv.is_shared(run[0]));
+        assert_eq!(kv.ref_count(run[0]), 2);
+        // one sharer releases: blocks stay allocated for the other
+        kv.release_seq(copy);
+        assert!(kv.is_allocated(run[0]) && kv.is_allocated(run[1]));
+        assert_eq!(kv.available(), 2);
+        kv.release_seq(run);
+        assert_eq!(kv.available(), 4, "last release frees");
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn refcounted_release_still_panics_past_zero() {
+        let mut kv = KvManager::paged(2, 16);
+        let a = kv.alloc().unwrap();
+        kv.share(a);
+        kv.release(a);
+        kv.release(a); // refcount hits 0: block is free
+        kv.release(a); // one release too many
+    }
+
+    #[test]
+    fn fork_is_identity_when_private_and_copies_when_shared() {
+        let mut kv = KvManager::paged(4, 16);
+        let a = kv.alloc().unwrap();
+        // private: no copy, same block back
+        assert_eq!(kv.fork_block(a), Some(a));
+        assert_eq!(kv.ref_count(a), 1);
+        // shared: a fresh private block, original keeps its other sharer
+        kv.share(a);
+        let b = kv.fork_block(a).unwrap();
+        assert_ne!(b, a, "COW must not hand out a shared block");
+        assert_eq!(kv.ref_count(a), 1, "caller's reference moved to the copy");
+        assert_eq!(kv.ref_count(b), 1);
+        kv.release(a);
+        kv.release(b);
+        assert_eq!(kv.available(), 4);
+    }
+
+    #[test]
+    fn prefix_register_lookup_evict() {
+        let mut kv = KvManager::paged(8, 16);
+        assert!(kv.lookup_prefix(7).is_none());
+        let run = kv.alloc_n(3).unwrap(); // covers 40 tokens (partial last)
+        kv.register_prefix(7, 40, &run);
+        assert_eq!(kv.num_prefixes(), 1);
+        assert_eq!(kv.resident_prefix_tokens(), 40);
+        let (tokens, resident) = kv.lookup_prefix(7).unwrap();
+        assert_eq!(tokens, 40);
+        assert_eq!(resident, &run[..]);
+        // a freshly registered run is indexed but NOT servable: its KV is
+        // still being computed by the registrant
+        assert!(!kv.is_prefix_ready(7));
+        assert!(kv.lookup_servable(7).is_none());
+        kv.mark_prefix_ready(7);
+        assert!(kv.is_prefix_ready(7));
+        assert_eq!(kv.lookup_servable(7).unwrap().0, 40);
+        // the registrant releases; the pin keeps the run resident
+        kv.release_seq(run.clone());
+        assert!(kv.lookup_prefix(7).is_some());
+        assert_eq!(kv.allocated(), 3);
+        assert!(kv.evict_prefix(7));
+        assert!(!kv.evict_prefix(7));
+        assert!(kv.lookup_servable(7).is_none());
+        assert_eq!(kv.available(), 8);
+    }
+
+    #[test]
+    fn cold_prefixes_are_reclaimed_under_pressure() {
+        let mut kv = KvManager::paged(4, 16);
+        let run = kv.alloc_n(2).unwrap();
+        kv.register_prefix(1, 32, &run);
+        kv.release_seq(run); // prefix now cold (pin only)
+        assert_eq!(kv.available(), 2);
+        assert_eq!(kv.reclaimable(), 2);
+        // demanding more than the free list forces the cold eviction
+        let got = kv.alloc_n(4).expect("reclaim funds the allocation");
+        assert_eq!(got.len(), 4);
+        assert_eq!(kv.num_prefixes(), 0, "cold prefix evicted");
+        assert!(kv.lookup_prefix(1).is_none());
+        kv.release_seq(got);
+        // a HOT prefix (live sharer) is never reclaimed
+        let run = kv.alloc_n(2).unwrap();
+        kv.register_prefix(2, 32, &run);
+        assert_eq!(kv.reclaimable(), 0);
+        assert!(kv.alloc_n(3).is_none(), "hot prefix blocks stay pinned");
+        assert_eq!(kv.num_prefixes(), 1);
+        kv.release_seq(run);
+    }
+
+    #[test]
+    fn degenerate_pools_never_hit_the_prefix_index() {
+        let kv = KvManager::new(4);
+        assert!(kv.lookup_prefix(0).is_none());
+    }
+
+    #[test]
     fn fragmentation_accounting() {
         let mut kv = KvManager::paged(8, 16);
         let mut table = Vec::new();
@@ -248,5 +587,31 @@ mod tests {
         let kv = KvManager::new(2);
         assert!(kv.is_degenerate());
         assert_eq!(kv.internal_fragmentation(100), 0);
+    }
+
+    /// The shared-block occupancy fix: a block referenced by N sharers is
+    /// one block of memory, so `allocated()` and fragmentation count it
+    /// once — summing per-sharer footprints would overstate occupancy.
+    #[test]
+    fn shared_blocks_count_once_in_occupancy_and_fragmentation() {
+        let mut kv = KvManager::paged(8, 16);
+        // a 32-token prefix run, registered (pin) + two sharers
+        let run = kv.alloc_n(2).unwrap();
+        kv.register_prefix(9, 32, &run);
+        let other = kv.share_seq(&run);
+        // each sharer also holds one private block with 10 live tokens
+        let mut a = run.clone();
+        let mut b = other.clone();
+        assert!(kv.extend_to(&mut a, 42));
+        assert!(kv.extend_to(&mut b, 42));
+        // memory truth: 2 shared + 2 private blocks, NOT 2 × (2 + 1)
+        assert_eq!(kv.allocated(), 4);
+        // fragmentation: private live = 2 × 10, shared content counted once
+        // via the prefix index → 4 × 16 − (20 + 32) = 12
+        assert_eq!(kv.internal_fragmentation(20), 12);
+        kv.release_seq(a);
+        kv.release_seq(b);
+        assert!(kv.evict_prefix(9));
+        assert_eq!(kv.available(), 8);
     }
 }

@@ -52,6 +52,14 @@ pub struct IterationRecord {
     ///
     /// [`InfeasiblePolicy::Reject`]: crate::coordinator::sched::admission::InfeasiblePolicy
     pub rejections: usize,
+    /// Admissions served from a resident shared prefix run during this
+    /// iteration (copy-on-write prefix sharing).
+    pub prefix_hits: usize,
+    /// KV tokens active requests are serving from shared prefix blocks
+    /// after this iteration — memory that sharing saves versus private
+    /// copies. (Shared blocks themselves are counted once in
+    /// `kv_blocks_in_use`.)
+    pub shared_kv_tokens: usize,
 }
 
 impl IterationRecord {
@@ -70,6 +78,8 @@ impl IterationRecord {
             kv_frag_tokens: 0,
             swap_time: 0.0,
             rejections: 0,
+            prefix_hits: 0,
+            shared_kv_tokens: 0,
         }
     }
 
@@ -125,6 +135,8 @@ pub struct Metrics {
     pub preemptions: usize,
     /// Total requests rejected as infeasible across the run.
     pub rejections: usize,
+    /// Total prefix-cache-hit admissions across the run.
+    pub prefix_hits: usize,
 }
 
 impl Metrics {
@@ -135,6 +147,7 @@ impl Metrics {
     pub fn record(&mut self, rec: IterationRecord) {
         self.preemptions += rec.preemptions;
         self.rejections += rec.rejections;
+        self.prefix_hits += rec.prefix_hits;
         self.iterations.push(rec);
     }
 
@@ -265,6 +278,18 @@ impl Metrics {
         self.iterations.iter().map(|r| r.n_active).max().unwrap_or(0)
     }
 
+    /// Peak KV occupancy across the run, in blocks — a shared block counts
+    /// once however many requests reference it (the allocator's refcounted
+    /// `allocated()` feeds the per-iteration records).
+    pub fn peak_kv_blocks_in_use(&self) -> usize {
+        self.iterations.iter().map(|r| r.kv_blocks_in_use).max().unwrap_or(0)
+    }
+
+    /// Peak KV tokens served from shared prefix blocks at any iteration.
+    pub fn peak_shared_kv_tokens(&self) -> usize {
+        self.iterations.iter().map(|r| r.shared_kv_tokens).max().unwrap_or(0)
+    }
+
     /// Write one JSON object per iteration (JSON-Lines) — the simulator
     /// trace idiom: shape, elapsed time, KV occupancy and preemptions per
     /// record, consumable by any ad-hoc analysis script.
@@ -282,7 +307,8 @@ impl Metrics {
                  \"prefill_chunks\":{},\"prefill_tokens\":{},\"decodes\":{},\
                  \"total_tokens\":{},\"kv_blocks_in_use\":{},\"kv_blocks_total\":{},\
                  \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{},\
-                 \"swap_time\":{:.6},\"rejections\":{}}}",
+                 \"swap_time\":{:.6},\"rejections\":{},\"prefix_hits\":{},\
+                 \"shared_kv_tokens\":{}}}",
                 i,
                 r.started_at,
                 r.elapsed,
@@ -297,6 +323,8 @@ impl Metrics {
                 r.preemptions,
                 r.swap_time,
                 r.rejections,
+                r.prefix_hits,
+                r.shared_kv_tokens,
             )?;
         }
         Ok(())
@@ -383,10 +411,28 @@ mod tests {
     }
 
     #[test]
+    fn prefix_hits_and_shared_occupancy_accumulate() {
+        let mut m = Metrics::new();
+        let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+        r.prefix_hits = 3;
+        r.shared_kv_tokens = 96;
+        r.kv_blocks_in_use = 7;
+        m.record(r);
+        let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+        r.prefix_hits = 1;
+        r.shared_kv_tokens = 64;
+        r.kv_blocks_in_use = 5;
+        m.record(r);
+        assert_eq!(m.prefix_hits, 4);
+        assert_eq!(m.peak_shared_kv_tokens(), 96);
+        assert_eq!(m.peak_kv_blocks_in_use(), 7);
+    }
+
+    #[test]
     fn latency_report_from_pool() {
         use crate::workload::RequestSpec;
         let mut pool = RequestPool::new();
-        pool.push(RequestSpec { prompt_len: 4, decode_len: 2, arrival: 1.0 });
+        pool.push(RequestSpec { prompt_len: 4, decode_len: 2, arrival: 1.0, prefix: None });
         pool.admit(0, vec![0], 1.0);
         {
             let r = pool.get_mut(0);

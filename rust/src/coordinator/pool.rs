@@ -30,8 +30,13 @@ pub struct RequestPool {
     rejected_events: usize,
     /// Live KV tokens swapped back in by re-admissions since the last
     /// [`take_swapped_in_tokens`] drain — the engine/pipeline charge the
-    /// swap-in transfer from this.
+    /// swap-in transfer from this. Shared prefix tokens are excluded:
+    /// those blocks never left the GPU (the prefix index / co-sharers kept
+    /// them resident).
     swapped_in_tokens: usize,
+    /// Prefix-cache-hit admissions since the last [`take_prefix_hits`]
+    /// drain (metrics accounting).
+    prefix_hit_events: usize,
 }
 
 impl RequestPool {
@@ -85,8 +90,10 @@ impl RequestPool {
             !r.admitted && r.completed_at.is_none() && r.rejected_at.is_none()
         });
         // a re-admitted preempted request carries live KV that must be
-        // swapped back in; expose the token count for the cost charge
-        self.swapped_in_tokens += self.requests[id].kv_len();
+        // swapped back in; expose the token count for the cost charge.
+        // Only its PRIVATE tokens move — admission sets `shared_tokens`
+        // before calling us when a resident prefix run covers the head.
+        self.swapped_in_tokens += self.requests[id].private_kv_tokens();
         let r = &mut self.requests[id];
         r.admitted = true;
         r.blocks = blocks;
@@ -111,6 +118,8 @@ impl RequestPool {
         debug_assert!(r.completed_at.is_none());
         r.completed_at = Some(now);
         r.admitted = false;
+        r.shared_blocks = 0;
+        r.shared_tokens = 0;
         let blocks = std::mem::take(&mut r.blocks);
         let pos = self.active.binary_search(&id).expect("complete of inactive request");
         self.active.remove(pos);
@@ -153,6 +162,16 @@ impl RequestPool {
         std::mem::take(&mut self.swapped_in_tokens)
     }
 
+    /// Note one prefix-cache-hit admission (called by the admission gate).
+    pub fn note_prefix_hit(&mut self) {
+        self.prefix_hit_events += 1;
+    }
+
+    /// Prefix-cache-hit admissions since the last drain (metrics).
+    pub fn take_prefix_hits(&mut self) -> usize {
+        std::mem::take(&mut self.prefix_hit_events)
+    }
+
     /// Preempt an active request: release its block table (returned to the
     /// caller to free), keep its progress counters, and re-queue it at its
     /// original arrival position so it resumes FCFS.
@@ -161,6 +180,10 @@ impl RequestPool {
         debug_assert!(r.admitted && r.completed_at.is_none());
         r.admitted = false;
         r.preemptions += 1;
+        // the split table is gone with the blocks; a re-admission
+        // re-shares from the prefix index if the run is still resident
+        r.shared_blocks = 0;
+        r.shared_tokens = 0;
         let blocks = std::mem::take(&mut r.blocks);
         let pos = self.active.binary_search(&id).expect("preempt of inactive request");
         self.active.remove(pos);
@@ -245,10 +268,29 @@ impl RequestPool {
         &self.active
     }
 
-    /// Live KV tokens across all admitted requests (for fragmentation
-    /// accounting).
+    /// Live KV tokens across all admitted requests. NOTE: with prefix
+    /// sharing this counts a shared token once PER SHARER — occupancy /
+    /// fragmentation accounting must use
+    /// [`live_private_kv_tokens`](Self::live_private_kv_tokens) plus the
+    /// allocator's resident-prefix count instead.
     pub fn live_kv_tokens(&self) -> usize {
         self.active.iter().map(|&id| self.requests[id].kv_len()).sum()
+    }
+
+    /// Live KV tokens in PRIVATE block territory across admitted requests
+    /// (each shared prefix token excluded here; it is counted once by
+    /// [`KvManager::resident_prefix_tokens`]).
+    ///
+    /// [`KvManager::resident_prefix_tokens`]:
+    ///     super::kv::KvManager::resident_prefix_tokens
+    pub fn live_private_kv_tokens(&self) -> usize {
+        self.active.iter().map(|&id| self.requests[id].private_kv_tokens()).sum()
+    }
+
+    /// KV tokens currently served to admitted requests from shared prefix
+    /// blocks — the memory sharing saves versus private copies.
+    pub fn shared_kv_tokens(&self) -> usize {
+        self.active.iter().map(|&id| self.requests[id].shared_tokens).sum()
     }
 
     /// Earliest arrival among still-queued requests (drives idle-advance).
@@ -268,7 +310,12 @@ mod tests {
     fn fcfs_order_and_phase_queries() {
         let mut p = RequestPool::new();
         for i in 0..3 {
-            p.push(RequestSpec { prompt_len: 10 * (i + 1), decode_len: 2, arrival: i as f64 });
+            p.push(RequestSpec {
+                prompt_len: 10 * (i + 1),
+                decode_len: 2,
+                arrival: i as f64,
+                prefix: None,
+            });
         }
         assert_eq!(p.arrived_queued(0.5), vec![0]);
         assert_eq!(p.arrived_queued(5.0), vec![0, 1, 2]);
@@ -284,7 +331,7 @@ mod tests {
     fn admit_complete_cycle_maintains_indexes() {
         let mut p = RequestPool::new();
         for _ in 0..4 {
-            p.push(RequestSpec { prompt_len: 8, decode_len: 1, arrival: 0.0 });
+            p.push(RequestSpec { prompt_len: 8, decode_len: 1, arrival: 0.0, prefix: None });
         }
         p.admit(0, vec![5], 0.0);
         p.admit(1, vec![6], 0.0);
@@ -315,9 +362,9 @@ mod tests {
     #[test]
     fn unsorted_arrivals_are_served_in_arrival_order() {
         let mut p = RequestPool::new();
-        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.5 });
-        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.1 });
-        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.3 });
+        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.5, prefix: None });
+        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.1, prefix: None });
+        p.push(RequestSpec { prompt_len: 1, decode_len: 1, arrival: 0.3, prefix: None });
         assert_eq!(p.arrived_queued(1.0), vec![1, 2, 0]);
         assert_eq!(p.next_arrival(0.2), Some(0.3));
     }
@@ -325,9 +372,9 @@ mod tests {
     #[test]
     fn reject_is_terminal_and_leaves_the_queue() {
         let mut p = RequestPool::new();
-        p.push(RequestSpec { prompt_len: 8, decode_len: 2, arrival: 0.0 });
-        p.push(RequestSpec { prompt_len: 1 << 20, decode_len: 2, arrival: 0.1 });
-        p.push(RequestSpec { prompt_len: 8, decode_len: 2, arrival: 0.2 });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 2, arrival: 0.0, prefix: None });
+        p.push(RequestSpec { prompt_len: 1 << 20, decode_len: 2, arrival: 0.1, prefix: None });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 2, arrival: 0.2, prefix: None });
         p.reject(1, 0.5);
         assert_eq!(p.rejected_count(), 1);
         assert_eq!(p.take_rejected_events(), 1);
@@ -350,7 +397,7 @@ mod tests {
     #[test]
     fn readmission_accumulates_swapped_in_tokens() {
         let mut p = RequestPool::new();
-        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0 });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0, prefix: None });
         p.admit(0, vec![0], 0.0);
         assert_eq!(p.take_swapped_in_tokens(), 0, "fresh admission moves no KV");
         p.get_mut(0).prefilled = 8;
@@ -362,11 +409,73 @@ mod tests {
     }
 
     #[test]
+    fn swap_in_accounting_excludes_shared_prefix_tokens() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 40, decode_len: 8, arrival: 0.0, prefix: None });
+        p.admit(0, vec![0, 1, 2], 0.0);
+        p.get_mut(0).prefilled = 40;
+        p.get_mut(0).decoded = 5;
+        p.preempt(0, 1.0);
+        // re-admission with 32 of the 44 live tokens covered by a resident
+        // prefix run: only the 12 private tokens cross the host link.
+        // Admission sets the split BEFORE handing the table to admit().
+        {
+            let r = p.get_mut(0);
+            r.shared_blocks = 2;
+            r.shared_tokens = 32;
+        }
+        p.admit(0, vec![5, 6, 7], 2.0);
+        assert_eq!(p.take_swapped_in_tokens(), 12, "shared tokens never left the GPU");
+        assert_eq!(p.shared_kv_tokens(), 32);
+        assert_eq!(p.live_kv_tokens(), 44);
+        assert_eq!(p.live_private_kv_tokens(), 12);
+    }
+
+    #[test]
+    fn preempt_and_complete_reset_the_share_split() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0, prefix: None });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0, prefix: None });
+        p.admit(0, vec![0, 1], 0.0);
+        {
+            let r = p.get_mut(0);
+            r.shared_blocks = 1;
+            r.shared_tokens = 8;
+            r.prefilled = 8;
+            r.decoded = 2;
+        }
+        p.preempt(0, 1.0);
+        assert_eq!(p.get(0).shared_blocks, 0, "preempted request holds no shared run");
+        assert_eq!(p.get(0).shared_tokens, 0);
+        p.admit(1, vec![2, 3], 1.0);
+        {
+            let r = p.get_mut(1);
+            r.shared_blocks = 1;
+            r.shared_tokens = 8;
+            r.prefilled = 8;
+            r.decoded = 4;
+        }
+        p.complete(1, 2.0);
+        assert_eq!(p.get(1).shared_blocks, 0);
+        assert_eq!(p.get(1).shared_tokens, 0);
+    }
+
+    #[test]
+    fn prefix_hit_events_drain_like_rejections() {
+        let mut p = RequestPool::new();
+        assert_eq!(p.take_prefix_hits(), 0);
+        p.note_prefix_hit();
+        p.note_prefix_hit();
+        assert_eq!(p.take_prefix_hits(), 2);
+        assert_eq!(p.take_prefix_hits(), 0, "events drain");
+    }
+
+    #[test]
     fn preempt_requeues_at_arrival_position() {
         let mut p = RequestPool::new();
-        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0 });
-        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.1 });
-        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.2 });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0, prefix: None });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.1, prefix: None });
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.2, prefix: None });
         p.admit(0, vec![0], 0.0);
         p.admit(1, vec![1, 2], 0.1);
         p.get_mut(1).prefilled = 8;

@@ -26,13 +26,31 @@ pub struct Request {
     pub id: RequestId,
     pub spec: RequestSpec,
     /// Prompt tokens prefilled so far (chunked prefill advances this).
+    /// A prefix-cache hit pre-advances this past the shared tokens — their
+    /// KV is already resident, so their prefill compute is skipped.
     pub prefilled: usize,
     /// Output tokens generated so far. The final prefill chunk produces the
     /// first output token, so this becomes 1 when prefill completes.
     pub decoded: usize,
     /// KV block table while admitted, in allocation order. Under the
     /// degenerate block size this is exactly one block — the seed's "slot".
+    /// Split view: the first [`shared_blocks`](Self::shared_blocks) entries
+    /// are a shared prefix run (ref-counted with co-sharers and the prefix
+    /// index); the tail is private to this request.
     pub blocks: Vec<usize>,
+    /// Leading blocks of `blocks` shared with a resident prefix run — the
+    /// head of the split block table. 0 while queued / without a hit.
+    pub shared_blocks: usize,
+    /// KV tokens resident in those shared blocks (full blocks only; a
+    /// partially-filled last prefix block is copy-on-write-forked into the
+    /// private tail at admission). Counted ONCE pool-wide for occupancy.
+    pub shared_tokens: usize,
+    /// Admissions of this request served from a resident prefix run
+    /// (re-admission after preemption hits again).
+    pub prefix_hits: usize,
+    /// Prompt tokens whose prefill compute was skipped because their KV
+    /// was already resident when this request was first admitted.
+    pub prefix_skipped_tokens: usize,
     /// True between admission and completion/preemption. Progress counters
     /// survive preemption (swap-style: KV is released, not recomputed).
     pub admitted: bool,
@@ -58,6 +76,10 @@ impl Request {
             prefilled: 0,
             decoded: 0,
             blocks: Vec::new(),
+            shared_blocks: 0,
+            shared_tokens: 0,
+            prefix_hits: 0,
+            prefix_skipped_tokens: 0,
             admitted: false,
             preemptions: 0,
             arrival: spec.arrival,
@@ -116,6 +138,15 @@ impl Request {
         self.prefilled + self.decoded.saturating_sub(1)
     }
 
+    /// Live KV tokens in this request's PRIVATE block territory — its
+    /// [`kv_len`](Self::kv_len) minus the tokens served from shared prefix
+    /// blocks. This is what a preemption actually has to move off the GPU
+    /// (shared blocks stay resident for co-sharers / the prefix index) and
+    /// what occupancy accounting may attribute to this request alone.
+    pub fn private_kv_tokens(&self) -> usize {
+        self.kv_len().saturating_sub(self.shared_tokens)
+    }
+
     pub fn is_decode_ready(&self) -> bool {
         self.phase() == Phase::Decode
     }
@@ -126,7 +157,7 @@ mod tests {
     use super::*;
 
     fn spec(p: usize, d: usize) -> RequestSpec {
-        RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0 }
+        RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0, prefix: None }
     }
 
     #[test]

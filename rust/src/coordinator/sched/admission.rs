@@ -1,4 +1,5 @@
-//! Memory-aware, watermark-based admission over the paged KV pool.
+//! Memory-aware, watermark-based admission over the paged KV pool, with
+//! copy-on-write prefix sharing.
 //!
 //! Admission is the first half of every scheduling step (the second is
 //! batch composition — see [`super::Scheduler`]). The gate reserves the
@@ -8,9 +9,23 @@
 //! size everything collapses to the seed's one-slot-per-request rule, so
 //! the paper experiments reproduce unchanged.
 //!
+//! With [`Admission::prefix_share`] on (and a paged pool), a request whose
+//! [`PrefixSpec`] names a prefix already resident in the allocator's index
+//! reserves only its NON-shared tokens: the resident run is ref-count
+//! shared into the head of its block table, the partially-filled last
+//! prefix block is copy-on-write forked ([`KvManager::fork_block`]) so the
+//! request can append without mutating shared content, and the prefill
+//! compute for the covered tokens is skipped (their KV already exists).
+//! A miss admits normally and then *registers* the request's table head as
+//! the template's resident run, so every later arrival of the template
+//! hits. Watermark math and swap-in costing both work on the private
+//! footprint — shared blocks are neither reserved twice nor moved.
+//!
 //! The watermark reserves free blocks for decode growth of already-running
 //! requests (vLLM-style): admitting greedily to zero free blocks would
 //! force a preemption on the very next decode step.
+//!
+//! [`PrefixSpec`]: crate::workload::PrefixSpec
 
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
@@ -43,6 +58,40 @@ pub struct Admission {
     pub max_active: Option<usize>,
     /// Panic or reject on requests that can never fit the pool.
     pub infeasible: InfeasiblePolicy,
+    /// Serve prefix-tagged requests from the allocator's resident-prefix
+    /// index (copy-on-write sharing). Off by default: the baseline pays
+    /// for every prompt token, prefix-tagged or not.
+    pub prefix_share: bool,
+}
+
+/// How admission will cover one request's KV footprint: what it can share
+/// from a resident prefix run, what must be copy-on-write forked, and how
+/// many fresh blocks the gate has to reserve.
+#[derive(Clone, Debug, Default)]
+struct SharePlan {
+    /// Resident run blocks to ref-share into the table head (empty = no
+    /// sharing: a miss, an untagged request, or a degenerate pool).
+    run: Vec<usize>,
+    /// Leading table blocks that stay SHARED after the fork below — the
+    /// head of the request's split block table.
+    shared_head: usize,
+    /// Tokens resident in those shared head blocks (`shared_head` full
+    /// blocks' worth).
+    shared_tokens: usize,
+    /// Prompt tokens whose prefill compute the resident KV serves.
+    skip_tokens: usize,
+    /// Copy-on-write fork the partially-filled last prefix block (the
+    /// request appends into that block's token range).
+    fork: bool,
+    /// Fresh blocks to allocate: private tail + any COW fork copy.
+    new_blocks: usize,
+    /// On a miss of a prefix-tagged request: register `(hash, tokens)`
+    /// from the new table's head, pinning the run for later sharers.
+    register: Option<(u64, usize)>,
+    /// The template's run is registered but its KV is still being
+    /// computed by the registrant: this request waits (cache-aware
+    /// admission) instead of paying full price for KV about to exist.
+    blocked: bool,
 }
 
 impl Admission {
@@ -60,14 +109,135 @@ impl Admission {
         self
     }
 
-    /// Blocks request `id` needs to be admitted right now: the full prompt
-    /// is reserved up front (vLLM-style — prefill length is known, so a
-    /// running chunked prefill never has to grab blocks mid-flight and the
-    /// watermark only has to absorb decode growth); a swapped-out request
-    /// needs its whole KV footprint plus the next token back.
-    pub fn blocks_required(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> usize {
+    /// Enable (or disable) copy-on-write prefix sharing at this gate.
+    pub fn with_prefix_share(mut self, on: bool) -> Self {
+        self.prefix_share = on;
+        self
+    }
+
+    /// Tokens request `id` must cover at admission: the full prompt up
+    /// front (vLLM-style), or a swapped-out request's whole live KV plus
+    /// the next token.
+    fn target_tokens(pool: &RequestPool, id: usize) -> usize {
         let r = pool.get(id);
-        kv.blocks_needed(r.spec.prompt_len.max(r.kv_len() + 1)).max(1)
+        r.spec.prompt_len.max(r.kv_len() + 1).max(1)
+    }
+
+    /// Plan to share `run` (covering `tokens` prompt tokens, clamped to
+    /// `cap`) into the head of a table needing `total` blocks. `skip`
+    /// grants the compute skip (a servable hit); the resuming filler
+    /// re-shares without one. `None` when nothing is coverable.
+    fn share_from_run(
+        kv: &KvManager,
+        run: &[usize],
+        tokens: usize,
+        cap: usize,
+        total: usize,
+        skip: bool,
+    ) -> Option<SharePlan> {
+        let cov = tokens.min(cap);
+        let n_run = kv.blocks_needed(cov);
+        if n_run == 0 {
+            return None;
+        }
+        // the run's partial last block holds prefix tokens (the filler
+        // writes them there in place); a sharer about to APPEND its own
+        // tokens into that block's range COW-forks a private copy first
+        let fork = cov % kv.block_size() != 0;
+        Some(SharePlan {
+            run: run[..n_run].to_vec(),
+            shared_head: n_run - fork as usize,
+            shared_tokens: cov - cov % kv.block_size(),
+            skip_tokens: if skip { cov } else { 0 },
+            fork,
+            new_blocks: total - n_run + fork as usize,
+            register: None,
+            blocked: false,
+        })
+    }
+
+    /// Build the share plan for admitting `id` right now. Pure: allocates
+    /// nothing, so the gate and the admit path cannot disagree.
+    fn plan(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> SharePlan {
+        let total = kv.blocks_needed(Self::target_tokens(pool, id)).max(1);
+        let plain = SharePlan { new_blocks: total, ..SharePlan::default() };
+        if !self.prefix_share || kv.is_degenerate() {
+            return plain;
+        }
+        let Some(pfx) = pool.get(id).spec.prefix else {
+            return plain;
+        };
+        // never cover the full prompt: the final prefill chunk must run to
+        // produce the request's first output token
+        let cap = pool.get(id).spec.prompt_len.saturating_sub(1);
+        let bs = kv.block_size();
+        if let Some((tokens, run)) = kv.lookup_servable(pfx.id) {
+            // servable hit: share the resident head, skip its compute
+            Self::share_from_run(kv, run, tokens, cap, total, true).unwrap_or(plain)
+        } else if let Some((tokens, run)) = kv.lookup_prefix(pfx.id) {
+            // registered but not yet computed (the fill is in flight or
+            // its filler is swapped out).
+            let prefilled = pool.get(id).prefilled;
+            if prefilled >= tokens {
+                // already produced every covered token itself (a resumed
+                // request whose original run was since reclaimed): the
+                // whole footprint swaps back in at full price
+                plain
+            } else if prefilled > 0 {
+                // the preempted filler: re-share the pinned head it was
+                // filling — its computed KV lives THERE, so swap-in only
+                // moves its private tail, and holding the head again
+                // lets its prefill flip the run servable when it crosses
+                // the covered tokens (liveness: without this, a filler
+                // preempted mid-fill could never ready its run and every
+                // fresh same-template arrival would wait forever). No
+                // compute skip: the fill resumes for real.
+                Self::share_from_run(kv, run, tokens, cap, total, false).unwrap_or(plain)
+            } else {
+                // fresh same-template arrivals WAIT for the in-flight
+                // fill instead of paying full price for KV about to
+                // exist (cache-aware admission). FCFS-fair like the
+                // memory gate: a waiting head holds the queue.
+                SharePlan { blocked: true, ..plain }
+            }
+        } else {
+            // miss: admit normally, then register the table head as the
+            // template's resident run. Content contract: the registrant
+            // prefills every COVERED token (1..=cov) into the pinned run
+            // in place — including the partial last block — and its OWN
+            // suffix tokens go into the +1 COW fork taken at admission,
+            // so the pinned partial always ends up holding exactly the
+            // prefix content sharers later fork-copy from. Nobody reads
+            // the run before the fill completes (readiness gate).
+            // Sub-block prefixes are never cached (no full block to
+            // share).
+            let cov = pfx.len.min(cap);
+            if cov < bs {
+                return plain;
+            }
+            let fork = cov % bs != 0;
+            SharePlan {
+                run: Vec::new(),
+                shared_head: kv.blocks_needed(cov) - fork as usize,
+                shared_tokens: cov - cov % bs,
+                skip_tokens: 0,
+                fork,
+                new_blocks: total + fork as usize,
+                register: Some((pfx.id, cov)),
+                blocked: false,
+            }
+        }
+    }
+
+    /// Fresh blocks request `id` needs to be admitted right now: the full
+    /// prompt is reserved up front (vLLM-style — prefill length is known,
+    /// so a running chunked prefill never has to grab blocks mid-flight
+    /// and the watermark only has to absorb decode growth); a swapped-out
+    /// request needs its whole KV footprint plus the next token back.
+    /// Tokens covered by a resident shared prefix are NOT reserved — that
+    /// is the admission-side win of prefix sharing.
+    pub fn blocks_required(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> usize {
+        self.plan(pool, kv, id).new_blocks
     }
 
     /// True when `id` could run to COMPLETION in an empty pool: its
@@ -117,11 +287,28 @@ impl Admission {
                 InfeasiblePolicy::Reject => return false,
             }
         }
-        let need = self.blocks_required(pool, kv, id);
-        kv.available() >= need.saturating_add(self.watermark_blocks)
+        let plan = self.plan(pool, kv, id);
+        if plan.blocked {
+            return false; // waiting on an in-flight prefix fill
+        }
+        // funds = free blocks + cold prefixes the allocator would reclaim
+        // under pressure — EXCLUDING the run this admission is about to
+        // share (sharing pins it hot, so its blocks can't be funds).
+        // try_admit_one shares first, allocates second, so a checked gate
+        // can never fail to allocate below.
+        let exclude = if plan.run.is_empty() {
+            None
+        } else {
+            pool.get(id).spec.prefix.map(|p| p.id)
+        };
+        let funds = kv.available() + kv.reclaimable_excluding(exclude);
+        funds >= plan.new_blocks.saturating_add(self.watermark_blocks)
     }
 
-    /// Admit `id` if the gate passes, allocating its initial block table.
+    /// Admit `id` if the gate passes, allocating its initial block table —
+    /// sharing the head from a resident prefix run (COW-forking its
+    /// partial last block) when the plan says so, and registering the run
+    /// on a prefix miss.
     ///
     /// An infeasible request panics under [`InfeasiblePolicy::Panic`]
     /// (loudly, like the allocator's double-free); under
@@ -141,9 +328,62 @@ impl Admission {
         if !self.can_admit(pool, kv, id) {
             return false;
         }
-        let need = self.blocks_required(pool, kv, id);
-        let blocks = kv.alloc_n(need).expect("admission gate checked availability");
+        let plan = self.plan(pool, kv, id);
+        let target = Self::target_tokens(pool, id);
+        // 1. the shared head: reference the resident run, then COW-fork
+        //    its partial last block before this request can append into it
+        let mut blocks = kv.share_seq(&plan.run);
+        if plan.fork && plan.register.is_none() {
+            let last = blocks.len() - 1;
+            blocks[last] =
+                kv.fork_block(blocks[last]).expect("admission gate checked availability");
+        }
+        // 2. the private tail
+        let grown = kv.extend_to(&mut blocks, target);
+        assert!(grown, "admission gate checked availability");
+        // 3. a miss registers the head as the template's resident run,
+        //    then forks the (now shared) partial block for its own tail
+        if let Some((hash, tokens)) = plan.register {
+            let n_run = kv.blocks_needed(tokens);
+            kv.register_prefix(hash, tokens, &blocks[..n_run]);
+            if plan.fork {
+                blocks[n_run - 1] =
+                    kv.fork_block(blocks[n_run - 1]).expect("admission gate checked availability");
+            }
+            // a re-registrant that already computed the covered tokens
+            // (its original run was reclaimed while it was swapped out)
+            // restores them with this admission's swap-in: the run is
+            // servable immediately, not gated on a prefill it will
+            // never run again
+            if pool.get(id).prefilled >= tokens {
+                kv.mark_prefix_ready(hash);
+            }
+        }
+        // the split goes on the request BEFORE admit() so swap-in costing
+        // sees only the private tokens — except for a (re-)registrant,
+        // whose "shared" head tokens did cross the host link (nothing was
+        // resident), so they must stay in the swap-in count
+        if plan.register.is_none() {
+            let r = pool.get_mut(id);
+            r.shared_blocks = plan.shared_head;
+            r.shared_tokens = plan.shared_tokens;
+        }
         pool.admit(id, blocks, now);
+        // 4. skip prefill compute for covered tokens (first admission
+        //    only: a resumed request's progress already includes them)
+        let r = pool.get_mut(id);
+        if plan.register.is_some() {
+            r.shared_blocks = plan.shared_head;
+            r.shared_tokens = plan.shared_tokens;
+        }
+        if r.prefilled < plan.skip_tokens {
+            r.prefix_skipped_tokens += plan.skip_tokens - r.prefilled;
+            r.prefilled = plan.skip_tokens;
+        }
+        if !plan.run.is_empty() {
+            r.prefix_hits += 1;
+            pool.note_prefix_hit();
+        }
         true
     }
 
@@ -174,7 +414,9 @@ mod tests {
 
     fn pool_of(n: usize) -> RequestPool {
         let specs: Vec<RequestSpec> =
-            (0..n).map(|_| RequestSpec { prompt_len: 64, decode_len: 8, arrival: 0.0 }).collect();
+            (0..n)
+                .map(|_| RequestSpec { prompt_len: 64, decode_len: 8, arrival: 0.0, prefix: None })
+                .collect();
         RequestPool::from_specs(&specs)
     }
 
@@ -244,6 +486,159 @@ mod tests {
     }
 
     #[test]
+    fn prefix_miss_registers_and_hit_reserves_only_private_blocks() {
+        use crate::workload::PrefixSpec;
+        // template: 40-token prefix (3 blocks of 16, last partial), each
+        // request adds 24 unique prompt tokens → prompt 64 = 4 blocks
+        let spec = RequestSpec {
+            prompt_len: 64,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec, spec, spec]);
+        let mut kv = KvManager::paged(16, 16);
+        let adm = Admission::default().with_prefix_share(true);
+
+        // miss: full prompt (4 blocks) + 1 COW fork block for the
+        // registrant's own suffix
+        assert_eq!(adm.blocks_required(&pool, &kv, 0), 5);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert_eq!(kv.num_prefixes(), 1);
+        let r0 = pool.get(0);
+        assert_eq!(r0.blocks.len(), 4);
+        assert_eq!(r0.shared_blocks, 2, "two FULL prefix blocks stay shared");
+        assert_eq!(r0.shared_tokens, 32);
+        assert_eq!(r0.prefix_hits, 0, "the registrant is a miss");
+        assert_eq!(r0.prefilled, 0, "the registrant computes its whole prompt");
+        let r0_head: Vec<usize> = r0.blocks[..2].to_vec();
+        // 4 table blocks + the pinned partial original = 5 allocated
+        assert_eq!(kv.allocated(), 5);
+
+        // while the registrant is still computing the prefix, the run is
+        // indexed but not servable: same-template arrivals WAIT
+        assert!(!kv.is_prefix_ready(7));
+        assert!(!adm.can_admit(&pool, &kv, 1), "must wait for the in-flight fill");
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.05));
+        assert!(pool.get(1).rejected_at.is_none(), "waiting is not rejection");
+        // the registrant's prefill crosses the covered tokens → servable
+        // (the engine flips this through StepApplier; unit-flip here)
+        kv.mark_prefix_ready(7);
+
+        // hit: only the non-shared footprint is reserved — 4 total minus
+        // 3 run blocks plus 1 fork = 2 fresh blocks
+        assert_eq!(adm.blocks_required(&pool, &kv, 1), 2);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.1));
+        let r1_blocks = {
+            let r1 = pool.get(1);
+            assert_eq!(r1.blocks.len(), 4);
+            assert_eq!(r1.shared_blocks, 2);
+            assert_eq!(r1.shared_tokens, 32);
+            assert_eq!(r1.prefix_hits, 1);
+            assert_eq!(r1.prefilled, 40, "resident KV serves all but the prompt tail");
+            assert_eq!(r1.prefix_skipped_tokens, 40);
+            // skipped prompt tokens stay inside the prefix coverage
+            assert!(r1.prefilled < 64);
+            r1.blocks.clone()
+        };
+        assert_eq!(pool.take_prefix_hits(), 1);
+        // sharer adds its fork copy + 1 private block
+        assert_eq!(kv.allocated(), 7);
+        // the shared head is the SAME physical run for both sharers
+        assert_eq!(r0_head[..], r1_blocks[..2]);
+        assert!(kv.is_shared(r1_blocks[0]));
+        // tails are private, refcount 1
+        for &b in &r1_blocks[2..] {
+            assert_eq!(kv.ref_count(b), 1);
+        }
+        // occupancy counts each shared block once: fragmentation over
+        // private live + resident prefix tokens never underflows
+        let frag = kv.internal_fragmentation(pool.live_private_kv_tokens());
+        assert!(frag <= kv.allocated() * 16);
+    }
+
+    #[test]
+    fn prefix_share_off_ignores_tags_and_degenerate_pools_never_share() {
+        use crate::workload::PrefixSpec;
+        let spec = RequestSpec {
+            prompt_len: 64,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 3, len: 48 }),
+        };
+        // sharing off: the tag is inert, baseline reservation applies
+        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut kv = KvManager::paged(16, 16);
+        let adm = Admission::default();
+        assert_eq!(adm.blocks_required(&pool, &kv, 0), 4);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert_eq!(kv.num_prefixes(), 0);
+        assert_eq!(pool.get(0).shared_blocks, 0);
+        assert_eq!(adm.blocks_required(&pool, &kv, 1), 4, "second pays full price");
+        // degenerate pool: sharing on is a no-op (slots hold private KV)
+        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut kv = KvManager::new(4);
+        let adm = Admission::default().with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert_eq!(kv.num_prefixes(), 0);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.0));
+        assert_eq!(pool.get(1).prefix_hits, 0);
+        assert_eq!(pool.get(1).prefilled, 0);
+    }
+
+    #[test]
+    fn block_aligned_prefix_shares_without_a_fork() {
+        use crate::workload::PrefixSpec;
+        // 32-token prefix on 16-token blocks: no partial block, no fork
+        let spec = RequestSpec {
+            prompt_len: 48,
+            decode_len: 4,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 9, len: 32 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut kv = KvManager::paged(8, 16);
+        let adm = Admission::default().with_prefix_share(true);
+        // registrant: exactly the prompt footprint, no fork block
+        assert_eq!(adm.blocks_required(&pool, &kv, 0), 3);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert_eq!(pool.get(0).shared_blocks, 2);
+        assert_eq!(pool.get(0).shared_tokens, 32);
+        assert_eq!(kv.allocated(), 3);
+        kv.mark_prefix_ready(9);
+        // hit: 3 total − 2 shared = 1 fresh block
+        assert_eq!(adm.blocks_required(&pool, &kv, 1), 1);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.0));
+        assert_eq!(pool.get(1).prefilled, 32);
+        assert_eq!(kv.allocated(), 4);
+    }
+
+    #[test]
+    fn watermark_math_uses_the_shared_aware_reservation() {
+        use crate::workload::PrefixSpec;
+        let spec = RequestSpec {
+            prompt_len: 64,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 1, len: 48 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec, spec, spec]);
+        // 7 blocks: the registrant takes 4, leaving 3 free
+        let mut kv = KvManager::paged(7, 16);
+        let adm = Admission::with_watermark(2).with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert_eq!(kv.available(), 3);
+        kv.mark_prefix_ready(1);
+        // a full-price admission would need 4 + 2 watermark > 3 free; the
+        // hit needs only 1 fresh block (4 − 3 run) + 2 watermark = 3 ✓
+        assert_eq!(adm.blocks_required(&pool, &kv, 1), 1);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.1));
+        assert_eq!(kv.available(), 2);
+        // the next hit fails the watermark check without panicking
+        assert!(!adm.can_admit(&pool, &kv, 2));
+    }
+
+    #[test]
     #[should_panic(expected = "undersized paged KV pool")]
     fn oversized_request_is_rejected_loudly() {
         // a 64-token prompt needs 4 blocks; a 3-block pool can never admit
@@ -258,9 +653,10 @@ mod tests {
         // same oversized request as the panic test, but co-running traffic
         // behind it must keep flowing in serve/open-loop mode
         let mut pool = RequestPool::from_specs(&[
-            RequestSpec { prompt_len: 256, decode_len: 8, arrival: 0.0 }, // 16 blocks: never fits
-            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.1 },
-            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.2 },
+            // 16 blocks: never fits
+            RequestSpec { prompt_len: 256, decode_len: 8, arrival: 0.0, prefix: None },
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.1, prefix: None },
+            RequestSpec { prompt_len: 32, decode_len: 8, arrival: 0.2, prefix: None },
         ]);
         let mut kv = KvManager::paged(8, 16);
         let adm = Admission::default().with_infeasible(InfeasiblePolicy::Reject);
@@ -274,6 +670,7 @@ mod tests {
             prompt_len: 256,
             decode_len: 8,
             arrival: 0.0,
+            prefix: None,
         }]);
         assert!(!adm.can_admit(&probe, &kv, 0));
     }
@@ -289,6 +686,7 @@ mod tests {
             prompt_len: 32,
             decode_len: 200,
             arrival: 0.0,
+            prefix: None,
         }]);
         let mut kv = KvManager::paged(12, 16);
         Admission::default().try_admit_one(&mut pool, &mut kv, 0, 0.0);

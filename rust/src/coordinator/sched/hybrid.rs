@@ -41,6 +41,9 @@ pub struct HybridScheduler {
     /// Panic (closed-loop default) or reject (open-loop serving) requests
     /// whose lifetime KV can never fit the pool.
     infeasible: InfeasiblePolicy,
+    /// Serve prefix-tagged requests from the resident-prefix index
+    /// (copy-on-write sharing over the paged pool). Off by default.
+    prefix_share: bool,
 }
 
 impl HybridScheduler {
@@ -57,6 +60,7 @@ impl HybridScheduler {
             watermark_blocks,
             tile: 0,
             infeasible: InfeasiblePolicy::Panic,
+            prefix_share: false,
         }
     }
 
@@ -67,6 +71,12 @@ impl HybridScheduler {
 
     pub fn with_infeasible(mut self, policy: InfeasiblePolicy) -> Self {
         self.infeasible = policy;
+        self
+    }
+
+    /// Enable copy-on-write prefix sharing at the admission gate.
+    pub fn with_prefix_share(mut self, on: bool) -> Self {
+        self.prefix_share = on;
         self
     }
 
@@ -83,6 +93,7 @@ impl Scheduler for HybridScheduler {
         Admission::with_watermark(self.watermark_blocks)
             .with_max_active(self.max_batch)
             .with_infeasible(self.infeasible)
+            .with_prefix_share(self.prefix_share)
     }
 
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
@@ -144,7 +155,8 @@ mod tests {
     fn setup(n_decoding: usize, prompts: &[usize], kv: &mut KvManager) -> RequestPool {
         let mut pool = RequestPool::new();
         for _ in 0..n_decoding {
-            let id = pool.push(RequestSpec { prompt_len: 32, decode_len: 20, arrival: 0.0 });
+            let spec = RequestSpec { prompt_len: 32, decode_len: 20, arrival: 0.0, prefix: None };
+            let id = pool.push(spec);
             let blocks = kv.alloc_n(kv.blocks_needed(33)).unwrap();
             pool.admit(id, blocks, 0.0);
             let r = pool.get_mut(id);
@@ -152,7 +164,7 @@ mod tests {
             r.decoded = 1;
         }
         for &p in prompts {
-            pool.push(RequestSpec { prompt_len: p, decode_len: 20, arrival: 0.0 });
+            pool.push(RequestSpec { prompt_len: p, decode_len: 20, arrival: 0.0, prefix: None });
         }
         pool
     }
@@ -234,7 +246,7 @@ mod tests {
         let mut kv = KvManager::paged(8, 16); // 128 tokens
         let mut pool = RequestPool::new();
         for _ in 0..4 {
-            pool.push(RequestSpec { prompt_len: 32, decode_len: 16, arrival: 0.0 });
+            pool.push(RequestSpec { prompt_len: 32, decode_len: 16, arrival: 0.0, prefix: None });
         }
         let mut s = HybridScheduler::new(64, 8, 0);
         let _ = s.schedule(&mut pool, &mut kv, 0.0);

@@ -87,7 +87,13 @@ pub trait Scheduler {
 /// policy's admission gate REJECTS requests that could never fit the pool
 /// — terminal `Rejected` state plus a `Metrics` counter — instead of
 /// panicking; figure-repro / closed-loop runs keep the loud panic.
+/// `cfg.prefix_share` (hybrid-only: sharing needs the paged, memory-aware
+/// gate) turns on copy-on-write prefix sharing at admission.
 pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
+    assert!(
+        !cfg.prefix_share || cfg.kind == SchedulerKind::Hybrid,
+        "prefix sharing requires the hybrid scheduler's paged admission gate"
+    );
     let infeasible = if cfg.reject_infeasible {
         InfeasiblePolicy::Reject
     } else {
@@ -113,7 +119,8 @@ pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
         SchedulerKind::Hybrid => Box::new(
             HybridScheduler::new(cfg.token_budget, cfg.max_batch, cfg.watermark_blocks)
                 .with_tile(cfg.tile_align)
-                .with_infeasible(infeasible),
+                .with_infeasible(infeasible)
+                .with_prefix_share(cfg.prefix_share),
         ),
     }
 }

@@ -113,7 +113,14 @@ mod tests {
 
     fn setup() -> (RequestPool, KvManager) {
         let specs: Vec<RequestSpec> =
-            (0..4).map(|_| RequestSpec { prompt_len: 100, decode_len: 10, arrival: 0.0 }).collect();
+            (0..4)
+                .map(|_| RequestSpec {
+                    prompt_len: 100,
+                    decode_len: 10,
+                    arrival: 0.0,
+                    prefix: None,
+                })
+                .collect();
         let mut pool = RequestPool::from_specs(&specs);
         let mut kv = KvManager::new(8);
         // requests 0,1 already decoding

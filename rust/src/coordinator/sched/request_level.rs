@@ -111,7 +111,9 @@ mod tests {
 
     fn setup(n: usize) -> (RequestPool, KvManager) {
         let specs: Vec<RequestSpec> =
-            (0..n).map(|_| RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 }).collect();
+            (0..n)
+                .map(|_| RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0, prefix: None })
+                .collect();
         (RequestPool::from_specs(&specs), KvManager::new(4))
     }
 
@@ -140,9 +142,10 @@ mod tests {
         // an infeasible head-of-queue request must be rejected and the
         // batch filled from the traffic behind it (open-loop stance)
         let specs = [
-            RequestSpec { prompt_len: 1024, decode_len: 3, arrival: 0.0 }, // 64 blocks: never fits
-            RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 },
-            RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0 },
+            // 64 blocks: never fits
+            RequestSpec { prompt_len: 1024, decode_len: 3, arrival: 0.0, prefix: None },
+            RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0, prefix: None },
+            RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0, prefix: None },
         ];
         let mut pool = RequestPool::from_specs(&specs);
         let mut kv = KvManager::paged(16, 16);

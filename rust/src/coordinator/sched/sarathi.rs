@@ -104,14 +104,15 @@ mod tests {
         let mut pool = RequestPool::new();
         let mut kv = KvManager::new(32);
         for _ in 0..n_decoding {
-            let id = pool.push(RequestSpec { prompt_len: 64, decode_len: 20, arrival: 0.0 });
+            let spec = RequestSpec { prompt_len: 64, decode_len: 20, arrival: 0.0, prefix: None };
+            let id = pool.push(spec);
             let slot = kv.alloc().unwrap();
             pool.admit(id, vec![slot], 0.0);
             let r = pool.get_mut(id);
             r.prefilled = 64;
             r.decoded = 1;
         }
-        pool.push(RequestSpec { prompt_len: prompt, decode_len: 20, arrival: 0.0 });
+        pool.push(RequestSpec { prompt_len: prompt, decode_len: 20, arrival: 0.0, prefix: None });
         (pool, kv)
     }
 
@@ -132,7 +133,7 @@ mod tests {
     fn single_prefill_chunk_per_batch() {
         // two requests awaiting prefill: only the first is chunked
         let (mut pool, mut kv) = setup(0, 1000);
-        pool.push(RequestSpec { prompt_len: 500, decode_len: 5, arrival: 0.0 });
+        pool.push(RequestSpec { prompt_len: 500, decode_len: 5, arrival: 0.0, prefix: None });
         let mut s = SarathiScheduler::new(128, 8, 128);
         let b = s.schedule(&mut pool, &mut kv, 0.0);
         assert_eq!(b.n_prefill_chunks(), 1);

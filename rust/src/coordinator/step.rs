@@ -182,6 +182,20 @@ impl StepApplier {
                     r.first_token_at = Some(done_at);
                     r.token_times.push(done_at);
                 }
+                // cache fill: once the registrant's prefill crosses the
+                // pinned run's covered tokens, the run's KV exists and the
+                // template becomes servable to waiting sharers. Only the
+                // request actually holding the run's head fills it — a
+                // plain-resumed filler writes its own fresh blocks, so it
+                // never flips a stale husk ready.
+                if let Some(pfx) = r.spec.prefix {
+                    if r.shared_blocks > 0 && !kv.is_prefix_ready(pfx.id) {
+                        let covered = kv.lookup_prefix(pfx.id).map(|(tokens, _)| tokens);
+                        if covered.is_some_and(|tokens| r.prefilled >= tokens) {
+                            kv.mark_prefix_ready(pfx.id);
+                        }
+                    }
+                }
             }
             for req in batch.decode_items() {
                 let r = pool.get_mut(req);
@@ -235,7 +249,12 @@ impl StepApplier {
                     })
                     .unwrap_or((owner, req));
                 let (vp, vid) = victim;
-                let evicted_tokens = pools[vp].get(vid).kv_len();
+                // only the victim's PRIVATE tokens cross the host link:
+                // shared prefix blocks stay resident (the index pin and/or
+                // co-sharers keep their refcount up), so release below
+                // only decrements them — preempting one sharer can never
+                // free blocks another sharer still reads
+                let evicted_tokens = pools[vp].get(vid).private_kv_tokens();
                 let blocks = pools[vp].preempt(vid, done_at);
                 kv.release_seq(blocks);
                 effects.preemptions += 1;
@@ -257,7 +276,7 @@ mod tests {
     use crate::workload::RequestSpec;
 
     fn spec(p: usize, d: usize, arrival: f64) -> RequestSpec {
-        RequestSpec { prompt_len: p, decode_len: d, arrival }
+        RequestSpec { prompt_len: p, decode_len: d, arrival, prefix: None }
     }
 
     #[test]
@@ -352,6 +371,176 @@ mod tests {
         assert!(pools[1].get(0).is_admitted(), "in-flight victim untouched");
         assert!(!pools[0].get(0).is_admitted(), "grower swapped itself out");
         assert_eq!(pools[0].get(0).preemptions, 1);
+    }
+
+    /// Regression (PR 3): preempting a request that shares a prefix run
+    /// must leave every co-sharer's block table valid — the shared head
+    /// blocks are only decremented, never freed, and the evicted-token
+    /// swap charge covers the victim's PRIVATE tokens alone.
+    #[test]
+    fn preempting_a_sharer_leaves_co_sharers_tables_valid() {
+        use crate::coordinator::sched::Admission;
+        use crate::workload::PrefixSpec;
+        // one pool, 32-token block-aligned prefix over 16-token blocks;
+        // each request: 40-token prompt (2 shared + 1 private block), a
+        // long decode tail so growth hits the memory wall
+        let spec = |arrival: f64| RequestSpec {
+            prompt_len: 40,
+            decode_len: 60,
+            arrival,
+            prefix: Some(PrefixSpec { id: 5, len: 32 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec(0.0), spec(1.0)]);
+        // 6 blocks: registrant takes 3 (2 pinned+shared, 1 private), the
+        // sharer adds 1 private; 2 free for growth
+        let mut kv = KvManager::paged(6, 16);
+        let adm = Admission::default().with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        kv.mark_prefix_ready(5); // the registrant's fill, unit-flipped
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 1.0));
+        assert_eq!(kv.available(), 2);
+        let head: Vec<usize> = pool.get(0).blocks[..2].to_vec();
+        assert_eq!(head, pool.get(1).blocks[..2].to_vec());
+        assert_eq!(kv.ref_count(head[0]), 3, "pin + two sharers");
+        // request 0 deep into decode: this iteration's token pushes its
+        // table demand to 6 blocks (kv 95 + 1) with only 3 held, 2 free
+        {
+            let r = pool.get_mut(0);
+            r.prefilled = 40;
+            r.decoded = 55;
+        }
+        // request 1 just finished its prompt: 8 private tokens live
+        // (40 kv − 32 shared)
+        {
+            let r = pool.get_mut(1);
+            r.prefilled = 40;
+            r.decoded = 1;
+        }
+        let cost = SwapCost {
+            kv_bytes_per_token: 1.0, // 1 B/token over 1 B/s = 1 s/token
+            host_bw: 1.0,
+            recompute_s_per_token: 0.0,
+            mode: PreemptionMode::Swap,
+        };
+        let batch = Batch::new(vec![WorkItem::Decode { req: 0 }]);
+        let fx = StepApplier::with_cost(cost).apply(
+            std::slice::from_mut(&mut pool),
+            0,
+            &mut kv,
+            &batch,
+            5.0,
+        );
+        // growth demanded 3 fresh blocks with 2 free → victim = request 1
+        // (latest arrival). Only its 8 PRIVATE tokens are charged to the
+        // swap — the 32 shared prefix tokens never leave the GPU.
+        assert_eq!(fx.preemptions, 1);
+        assert!(!pool.get(1).is_admitted());
+        assert_eq!(fx.swapped_out_tokens, 8, "swap charge must exclude shared KV");
+        assert!((fx.swap_time - 8.0).abs() < 1e-9);
+        // co-sharer (request 0) table intact: grown to 6 blocks, every
+        // block still allocated, shared head still pin + itself
+        assert_eq!(pool.get(0).blocks.len(), 6);
+        for &b in &pool.get(0).blocks {
+            assert!(kv.is_allocated(b), "co-sharer block {b} freed by preemption");
+        }
+        assert_eq!(kv.ref_count(head[0]), 2, "pin + surviving sharer");
+        assert_eq!(kv.ref_count(head[1]), 2);
+        assert_eq!(pool.get(0).shared_blocks, 2, "survivor's split untouched");
+        // the prefix stays resident, so the victim's eventual swap-in
+        // re-shares the head instead of re-reserving it: 3-block demand,
+        // 1 fresh block
+        assert!(kv.lookup_prefix(5).is_some());
+        assert_eq!(adm.blocks_required(&pool, &kv, 1), 1);
+    }
+
+    #[test]
+    fn registrants_prefill_makes_the_run_servable_and_sharers_release_cleanly() {
+        use crate::coordinator::sched::Admission;
+        use crate::workload::PrefixSpec;
+        let spec = |decode_len: usize| RequestSpec {
+            prompt_len: 40,
+            decode_len,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 2, len: 32 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec(4), spec(1)]);
+        let mut kv = KvManager::paged(8, 16);
+        let adm = Admission::default().with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        // a fresh same-template arrival WAITS while the run is unready
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.0));
+        assert!(!pool.get(1).is_admitted());
+        // the registrant's prefill crossing the 32 covered tokens flips
+        // the run servable — through the SHARED state transition
+        let batch = Batch::new(vec![WorkItem::PrefillChunk { req: 0, start: 0, len: 40 }]);
+        let fx = StepApplier::new().apply(std::slice::from_mut(&mut pool), 0, &mut kv, &batch, 1.0);
+        assert!(fx.finished.is_empty());
+        assert!(kv.is_prefix_ready(2), "crossing the covered tokens fills the cache");
+        // now the waiter admits as a hit, skipping the resident prefill
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 1.0));
+        assert_eq!(pool.get(1).prefix_hits, 1);
+        assert_eq!(pool.get(1).prefilled, 32);
+        let head: Vec<usize> = pool.get(0).blocks[..2].to_vec();
+        assert_eq!(head, pool.get(1).blocks[..2].to_vec());
+        // the sharer finishes its prompt tail and completes (decode 1)
+        let remaining = pool.get(1).remaining_prompt();
+        let start = pool.get(1).prefilled;
+        let batch = Batch::new(vec![WorkItem::PrefillChunk { req: 1, start, len: remaining }]);
+        let fx = StepApplier::new().apply(std::slice::from_mut(&mut pool), 0, &mut kv, &batch, 2.0);
+        assert_eq!(fx.finished, vec![1]);
+        // the completed sharer's private tail is freed; the shared head
+        // survives for the registrant and the pin
+        assert_eq!(kv.ref_count(head[0]), 2, "pin + registrant remain");
+        for &b in &pool.get(0).blocks {
+            assert!(kv.is_allocated(b));
+        }
+        assert!(kv.lookup_prefix(2).is_some());
+    }
+
+    /// Liveness regression: a filler preempted MID-FILL must re-share the
+    /// pinned head it was filling on resume — its computed KV is resident
+    /// there (swap-in moves nothing), and holding the head again is what
+    /// lets its prefill flip the run servable. Resuming it at full price
+    /// instead would leave the run unready forever and wedge every fresh
+    /// same-template arrival behind the cache-wait gate.
+    #[test]
+    fn preempted_filler_resumes_by_resharing_and_still_readies_the_run() {
+        use crate::coordinator::sched::Admission;
+        use crate::workload::PrefixSpec;
+        let spec = RequestSpec {
+            prompt_len: 40,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 4, len: 32 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut kv = KvManager::paged(5, 16);
+        let adm = Admission::default().with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        let head: Vec<usize> = pool.get(0).blocks[..2].to_vec();
+        // half the prefix prefilled, then the filler is preempted
+        let batch = Batch::new(vec![WorkItem::PrefillChunk { req: 0, start: 0, len: 16 }]);
+        StepApplier::new().apply(std::slice::from_mut(&mut pool), 0, &mut kv, &batch, 1.0);
+        assert!(!kv.is_prefix_ready(4), "mid-fill run is not servable");
+        let blocks = pool.preempt(0, 1.5);
+        kv.release_seq(blocks);
+        assert!(kv.lookup_prefix(4).is_some(), "the pin keeps the half-filled run");
+        // resume: the filler re-shares the head — only 1 fresh block, and
+        // NO swap-in charge (all 16 computed tokens stayed GPU-resident)
+        assert_eq!(adm.blocks_required(&pool, &kv, 0), 1);
+        pool.take_swapped_in_tokens();
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 2.0));
+        assert_eq!(pool.take_swapped_in_tokens(), 0, "head KV never left the GPU");
+        assert_eq!(pool.get(0).blocks[..2].to_vec(), head);
+        assert_eq!(pool.get(0).prefilled, 16, "no skip: the fill resumes for real");
+        // its prefill crossing the covered tokens flips the run servable
+        let batch = Batch::new(vec![WorkItem::PrefillChunk { req: 0, start: 16, len: 16 }]);
+        StepApplier::new().apply(std::slice::from_mut(&mut pool), 0, &mut kv, &batch, 3.0);
+        assert!(kv.is_prefix_ready(4), "the resumed fill readies the run");
+        // and the waiting same-template arrival now admits as a hit
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 3.5));
+        assert_eq!(pool.get(1).prefix_hits, 1);
+        assert_eq!(pool.get(1).prefilled, 32);
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn workload() -> Vec<RequestSpec> {
             prompt_len: 1024,
             decode_len: 64,
             arrival: i as f64 * 0.08,
+            prefix: None,
         })
         .collect()
 }

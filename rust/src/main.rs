@@ -4,12 +4,14 @@
 //!   figures [all|fig3..fig13|table2|table4] [--out DIR]
 //!       regenerate the paper's tables/figures (prints rows, writes CSVs)
 //!   serve [--requests N] [--decode N] [--scheduler S] [--json-out PATH]
+//!         [--prefix-share [--num-templates T] [--prefix-len L]]
 //!       serve a synthetic trace with the chosen policy. With the `pjrt`
 //!       feature the tiny model runs for real through PJRT
 //!       ([--artifacts DIR]); without it the calibrated cost model stands
 //!       in (LLaMA-13B on A6000).
 //!   simulate [--requests N] [--scheduler S] [--rate R] [--budget T]
 //!            [--block-size B] [--pp P] [--preemption swap|recompute]
+//!            [--prefix-share [--num-templates T] [--prefix-len L]]
 //!            [--json-out PATH]
 //!       engine-level simulation at scale: Zipf(0.4) lengths, Poisson
 //!       arrivals, paged KV — prints throughput and TTFT/TBT/normalized
@@ -19,6 +21,11 @@
 //!       `--scheduler hybrid --block-size N`), preemption swaps priced at
 //!       PCIe bandwidth, bubble accounting in the report. (The §5.3
 //!       GPT-3 cluster comparison lives under `figures fig12`.)
+//!       `--prefix-share` switches the workload to template traffic — T
+//!       shared prompt prefixes of L tokens, Zipf request fanout — and
+//!       turns on copy-on-write prefix sharing over the paged block map
+//!       (requires `--scheduler hybrid` with a block size); prefix hits
+//!       and shared-KV occupancy land in the report and JSONL trace.
 //!   calibration
 //!       print the cost-model calibration summary
 //!
@@ -46,6 +53,11 @@ use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Boolean presence flag (`--prefix-share` style).
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 /// Parse `--name value`, erroring on a present-but-unparsable value — a
@@ -85,9 +97,11 @@ fn main() -> Result<()> {
                  figures [all|fig3..fig13|table2|table4] [--out DIR]\n\
                  serve [--artifacts DIR] [--requests N] [--decode N]\n\
                  \x20      [--scheduler sarathi|hybrid|orca-best|orca-worst|baseline]\n\
+                 \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--json-out PATH]\n\
                  simulate [--requests N] [--scheduler S] [--rate R] [--budget T]\n\
                  \x20      [--block-size B] [--pp P] [--preemption swap|recompute]\n\
+                 \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--json-out PATH]\n\
                  calibration"
             );
@@ -143,6 +157,14 @@ fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
         m.rejections,
         m.peak_active(),
     );
+    println!(
+        "prefix_hits={} skipped_prefill_tokens={} peak_shared_kv_tokens={} \
+         peak_kv_blocks_in_use={}",
+        m.prefix_hits,
+        engine.pool.iter().map(|r| r.prefix_skipped_tokens).sum::<usize>(),
+        m.peak_shared_kv_tokens(),
+        m.peak_kv_blocks_in_use(),
+    );
     // wall-clock throughput is the headline: idle gaps (open-loop Poisson
     // arrivals) and swap transfers belong in the denominator. Busy-time
     // throughput (iteration time only) rides along for comparison with
@@ -172,6 +194,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let kind = scheduler_kind(args, "sarathi")?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
 
+    if has_flag(args, "--prefix-share") {
+        sarathi::bail!(
+            "--prefix-share needs the paged cost-model path (build without the pjrt \
+             feature); the real runtime serves one degenerate KV row per request"
+        );
+    }
+
     let rt = ModelRuntime::load(&dir)?;
     println!("loaded {} artifacts on {}", rt.manifest.artifacts.len(), rt.platform());
     let slots = rt.manifest.model.usable_slots();
@@ -187,7 +216,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .collect();
     let specs: Vec<RequestSpec> = prompts
         .iter()
-        .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0 })
+        .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0, prefix: None })
         .collect();
 
     // the real KV layout is one row per request — the degenerate block
@@ -203,6 +232,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         preemption: PreemptionMode::Swap,
         // serving stance: an oversized request is rejected, not a crash
         reject_infeasible: true,
+        prefix_share: false,
     };
 
     let gen_reqs: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
@@ -246,6 +276,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
     let block_size: usize = parse_flag(args, "--block-size", 0)?;
     let preemption = preemption_mode(args)?;
+    let prefix = PrefixOpts::parse(args)?;
 
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
     let b = d.max_batch_size();
@@ -253,20 +284,35 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "pjrt feature off — serving the calibrated cost model (LLaMA-13B on A6000, B={b})"
     );
 
-    let mut rng = Rng::new(11);
-    let specs: Vec<RequestSpec> = (0..n)
-        .map(|_| RequestSpec {
-            prompt_len: rng.usize(128, 1024),
-            decode_len,
-            arrival: 0.0,
-        })
-        .collect();
-
-    let budget: usize = parse_flag(args, "--budget", 256)?.max(2 * b);
     // paging is meaningful only under the hybrid policy's memory-aware
     // admission; the slot policies' uncapped FCFS gate would admit the
     // whole queue one block at a time (same rule as cmd_simulate)
     let paged = kind == SchedulerKind::Hybrid && block_size > 0;
+    if prefix.share && !paged {
+        sarathi::bail!(
+            "--prefix-share requires --scheduler hybrid with --block-size > 0 \
+             (sharing lives on the paged block map)"
+        );
+    }
+
+    let mut rng = Rng::new(11);
+    // template traffic is the ONE workload shape shared with simulate
+    // (PrefixOpts::population); it draws its own decode lengths, so
+    // --decode only shapes the non-template path
+    let specs: Vec<RequestSpec> = if prefix.share {
+        prefix.population(&mut rng, n)
+    } else {
+        (0..n)
+            .map(|_| RequestSpec {
+                prompt_len: rng.usize(128, 1024),
+                decode_len,
+                arrival: 0.0,
+                prefix: None,
+            })
+            .collect()
+    };
+
+    let budget: usize = parse_flag(args, "--budget", 256)?.max(2 * b);
     let cfg = SchedulerConfig {
         kind,
         chunk_size: 256,
@@ -277,6 +323,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         watermark_blocks: if paged { 2 } else { 0 },
         preemption,
         reject_infeasible: true,
+        prefix_share: prefix.share,
     };
     let kv = if paged {
         KvManager::paged(d.kv_blocks(block_size), block_size)
@@ -297,6 +344,64 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     report_run(&engine, json_out.as_deref())
 }
 
+/// `--prefix-share` workload options shared by serve/simulate: template
+/// traffic (N shared prefixes, Zipf fanout) instead of fully-unique
+/// prompts, with copy-on-write sharing enabled at the admission gate.
+#[derive(Clone, Copy, Debug)]
+struct PrefixOpts {
+    share: bool,
+    num_templates: usize,
+    prefix_len: usize,
+}
+
+impl PrefixOpts {
+    fn parse(args: &[String]) -> Result<Self> {
+        let opts = PrefixOpts {
+            share: has_flag(args, "--prefix-share"),
+            num_templates: parse_flag(args, "--num-templates", 8)?,
+            prefix_len: parse_flag(args, "--prefix-len", 256)?,
+        };
+        if opts.share && opts.num_templates == 0 {
+            sarathi::bail!("--num-templates must be at least 1");
+        }
+        if opts.share && opts.prefix_len == 0 {
+            sarathi::bail!("--prefix-len must be at least 1");
+        }
+        Ok(opts)
+    }
+
+    /// The workload: template traffic under `--prefix-share`, the classic
+    /// Zipf(0.4) population otherwise (identical to the seed behavior).
+    fn population(&self, rng: &mut Rng, n: usize) -> Vec<RequestSpec> {
+        if self.share {
+            sarathi::workload::shared_prefix_population(
+                rng,
+                n,
+                self.num_templates,
+                0.8,
+                self.prefix_len,
+                64,
+                512,
+                10.0,
+            )
+        } else {
+            zipf_population(rng, n, 0.4, 256, 2048, 10.0)
+        }
+    }
+
+    fn describe(&self) -> String {
+        if self.share {
+            format!(
+                "{} templates x {}-token shared prefixes (Zipf 0.8 fanout), unique part \
+                 in [64,512] at P:D=10",
+                self.num_templates, self.prefix_len
+            )
+        } else {
+            "Zipf(0.4) in [256,2048], P:D=10".to_string()
+        }
+    }
+}
+
 /// Engine-level simulation at scale: Zipf sequence lengths, Poisson
 /// arrivals, paged KV — the production-shaped testbed for the hybrid
 /// policy (the §5.3 pipeline cluster comparison is `figures fig12`).
@@ -314,15 +419,24 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let pp: usize = parse_flag(args, "--pp", 1)?;
     let preemption = preemption_mode(args)?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
+    let prefix = PrefixOpts::parse(args)?;
+    if prefix.share && !(kind == SchedulerKind::Hybrid && block_size > 0) {
+        sarathi::bail!(
+            "--prefix-share requires --scheduler hybrid with --block-size > 0 \
+             (sharing lives on the paged block map)"
+        );
+    }
 
     if pp > 1 {
-        return simulate_pipeline(n, kind, rate, budget, block_size, pp, preemption, json_out);
+        return simulate_pipeline(
+            n, kind, rate, budget, block_size, pp, preemption, prefix, json_out,
+        );
     }
 
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
     let b = d.max_batch_size();
     let mut rng = Rng::new(7);
-    let pop = zipf_population(&mut rng, n, 0.4, 256, 2048, 10.0);
+    let pop = prefix.population(&mut rng, n);
     let pop = with_poisson_arrivals(&mut rng, pop, rate);
 
     // slot policies get the §4.3.1 worst-case slots; the hybrid policy gets
@@ -343,11 +457,13 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         watermark_blocks: if paged { 2 } else { 0 },
         preemption,
         reject_infeasible: true,
+        prefix_share: prefix.share,
     };
 
     println!(
-        "LLaMA-13B on A6000: {n} requests, Zipf(0.4) in [256,2048], P:D=10, \
-         Poisson {rate} req/s, scheduler={} effective_token_budget={} {}",
+        "LLaMA-13B on A6000: {n} requests, {}, Poisson {rate} req/s, \
+         scheduler={} effective_token_budget={} {}",
+        prefix.describe(),
         kind.name(),
         cfg.token_budget,
         if paged {
@@ -383,6 +499,7 @@ fn simulate_pipeline(
     block_size: usize,
     pp: usize,
     preemption: PreemptionMode,
+    prefix: PrefixOpts,
     json_out: Option<PathBuf>,
 ) -> Result<()> {
     use sarathi::costmodel::CostModel;
@@ -396,7 +513,7 @@ fn simulate_pipeline(
         .with_parallel(ParallelConfig::tp_pp(1, pp));
     let b = d.max_batch_size();
     let mut rng = Rng::new(7);
-    let pop = zipf_population(&mut rng, n, 0.4, 256, 2048, 10.0);
+    let pop = prefix.population(&mut rng, n);
     let pop = with_poisson_arrivals(&mut rng, pop, rate);
 
     let paged = kind == SchedulerKind::Hybrid && block_size > 0;
@@ -416,10 +533,12 @@ fn simulate_pipeline(
         watermark_blocks: if paged { 2 } else { 0 },
         preemption,
         reject_infeasible: true,
+        prefix_share: prefix.share,
     };
     println!(
-        "LLaMA-13B on A6000, PP={pp}: {n} requests, Zipf(0.4) in [256,2048], P:D=10, \
-         Poisson {rate} req/s, scheduler={} effective_token_budget={} {}",
+        "LLaMA-13B on A6000, PP={pp}: {n} requests, {}, Poisson {rate} req/s, \
+         scheduler={} effective_token_budget={} {}",
+        prefix.describe(),
         kind.name(),
         cfg.token_budget,
         if paged {
@@ -439,13 +558,15 @@ fn simulate_pipeline(
     let bubbles = res.bubble_summary();
     println!(
         "makespan={:.2}s micro_batches={} utilization={:.3} preemptions={} rejections={} \
-         swap_time={:.3}s",
+         swap_time={:.3}s prefix_hits={} peak_shared_kv_tokens={}",
         res.makespan,
         res.micro_batches,
         res.utilization(),
         res.metrics.preemptions,
         res.metrics.rejections,
         res.metrics.total_swap_time(),
+        res.metrics.prefix_hits,
+        res.metrics.peak_shared_kv_tokens(),
     );
     println!(
         "bubble_per_request_s p50={:.3} p99={:.3} total_bubble={:.2}s",

@@ -222,6 +222,24 @@ mod tests {
         assert!(res.latency().tbt.count() > 0);
     }
 
+    /// Prefix sharing rides the same paged per-replica pools: each replica
+    /// keeps its own resident-prefix index (round-robin splits a template's
+    /// fanout across replicas, so every replica registers it once).
+    #[test]
+    fn paged_cluster_serves_shared_prefix_templates() {
+        use crate::coordinator::sched::HybridScheduler;
+        use crate::workload::shared_prefix_population;
+        let cluster = ClusterSim::new(tp_pp_deployment());
+        let mut rng = Rng::new(13);
+        let specs = shared_prefix_population(&mut rng, 48, 4, 0.8, 256, 32, 128, 5.0);
+        let res = cluster.run_paged(&specs, 128, || {
+            Box::new(HybridScheduler::new(256, 27, 2).with_prefix_share(true))
+        });
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        let hits: usize = res.per_replica.iter().map(|r| r.metrics.prefix_hits).sum();
+        assert!(hits > 0, "template fanout must hit every replica's index");
+    }
+
     /// §5.3's ordering: SARATHI TP-PP beats TP-only, which beats Orca TP-PP.
     /// Needs a steady-state workload (requests ≫ in-flight capacity).
     #[test]

@@ -130,6 +130,7 @@ enum Event {
         started_at: f64,
         stage_time: f64,
         swap_in: f64,
+        prefix_hits: usize,
     },
     /// Live requests but nothing schedulable; woken by any other stream's
     /// Apply (which may free blocks). All-streams-stalled = wedged.
@@ -234,6 +235,9 @@ impl PipelineSim {
         // swap-in time charged by admission while no batch ran yet; carried
         // to the stream's next micro-batch
         let mut pending_swap_in = vec![0.0f64; n_streams];
+        // prefix-cache hits observed at admission, attached to the
+        // stream's next micro-batch record (same carry as swap-in)
+        let mut pending_prefix_hits = vec![0usize; n_streams];
         let mut stage_free = vec![0.0f64; self.pp];
         let mut stage_used = vec![false; self.pp];
         let mut result = PipelineResult {
@@ -306,6 +310,7 @@ impl PipelineSim {
                     // pool
                     scheds[si].admit_capped(&mut pools[si], &mut kv, now, per_stream_cap);
                     result.metrics.rejections += pools[si].take_rejected_events();
+                    pending_prefix_hits[si] += pools[si].take_prefix_hits();
                     pending_swap_in[si] +=
                         self.applier.swap.swap_in_time(pools[si].take_swapped_in_tokens());
 
@@ -326,6 +331,7 @@ impl PipelineSim {
                     let tokens = shape.total_tokens();
                     // a resumed victim's KV transfer delays entry to stage 0
                     let t_swap_in = std::mem::take(&mut pending_swap_in[si]);
+                    let t_prefix_hits = std::mem::take(&mut pending_prefix_hits[si]);
                     let mut bubble_this_mb = 0.0;
                     let mut t_in = now + t_swap_in;
                     for j in 0..self.pp {
@@ -369,9 +375,18 @@ impl PipelineSim {
                         started_at: now,
                         stage_time,
                         swap_in: t_swap_in,
+                        prefix_hits: t_prefix_hits,
                     };
                 }
-                Event::Apply { at: finish, batch, shape, started_at, stage_time, swap_in } => {
+                Event::Apply {
+                    at: finish,
+                    batch,
+                    shape,
+                    started_at,
+                    stage_time,
+                    swap_in,
+                    prefix_hits,
+                } => {
                     // requests executing in OTHER streams' in-flight
                     // micro-batches are not preemptible (their KV is under
                     // the running kernel)
@@ -394,7 +409,10 @@ impl PipelineSim {
                     for local in &effects.finished {
                         result.completions[global_ids[si][*local]] = finish;
                     }
-                    let live_kv: usize = pools.iter().map(|p| p.live_kv_tokens()).sum();
+                    // occupancy counts shared-prefix content once: private
+                    // live tokens + the allocator's resident-prefix tokens
+                    let private_live: usize =
+                        pools.iter().map(|p| p.live_private_kv_tokens()).sum();
                     result.metrics.record(IterationRecord {
                         started_at,
                         elapsed: stage_time,
@@ -405,9 +423,11 @@ impl PipelineSim {
                         kv_blocks_total: kv.capacity(),
                         n_active: pools.iter().map(|p| p.active_count()).sum(),
                         preemptions: effects.preemptions,
-                        kv_frag_tokens: kv.internal_fragmentation(live_kv),
+                        kv_frag_tokens: kv.internal_fragmentation(private_live),
                         swap_time: swap_in + effects.swap_time,
                         rejections: 0,
+                        prefix_hits,
+                        shared_kv_tokens: pools.iter().map(|p| p.shared_kv_tokens()).sum(),
                     });
                     result.makespan = result.makespan.max(finish);
                     // swap-out transfers delay this stream's next schedule
@@ -545,7 +565,12 @@ mod tests {
     /// from the one pool. (Margins mirror-validated: 7 preemption events.)
     fn tight_specs() -> Vec<RequestSpec> {
         (0..8)
-            .map(|i| RequestSpec { prompt_len: 512, decode_len: 192, arrival: i as f64 * 0.01 })
+            .map(|i| RequestSpec {
+                prompt_len: 512,
+                decode_len: 192,
+                arrival: i as f64 * 0.01,
+                prefix: None,
+            })
             .collect()
     }
 
@@ -583,6 +608,28 @@ mod tests {
             costed.makespan,
             free.makespan
         );
+    }
+
+    /// Prefix sharing threads through the pipeline unchanged: all streams
+    /// draw from ONE shared pool, so a template registered by stream 0's
+    /// first arrival is hit by sharers scheduled on stream 1.
+    #[test]
+    fn shared_prefix_templates_hit_across_streams_over_one_pool() {
+        use crate::workload::shared_prefix_population;
+        let pp = 2;
+        let sim = PipelineSim::new(gpt3_profiler(pp), pp);
+        let mut rng = Rng::new(11);
+        let specs = shared_prefix_population(&mut rng, 32, 4, 0.8, 256, 32, 128, 5.0);
+        let res = sim.run_shared(&specs, KvManager::paged(96, 128), Some(8), || {
+            Box::new(HybridScheduler::new(256, 8, 2).with_prefix_share(true))
+                as Box<dyn Scheduler>
+        });
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert!(res.metrics.prefix_hits > 0, "cross-stream sharers must hit");
+        assert!(res.metrics.peak_shared_kv_tokens() > 0);
+        // block accounting: at the end only resident prefix pins remain
+        let last = res.metrics.iterations.last().unwrap();
+        assert!(last.kv_blocks_in_use <= 4 * 2, "only pinned prefix runs may remain");
     }
 
     /// A scheduler that admits but never composes work: the admitted

@@ -3,8 +3,24 @@
 //! §5.1 uses fixed (sequence length, P:D ratio) populations; §5.3 samples
 //! sequence lengths from Zipf(θ=0.4) over [1K, 4K] and splits each into
 //! prefill/decode at a fixed P:D ratio of 10.
+//!
+//! [`shared_prefix_population`] models production template traffic
+//! (shared system prompts, few-shot scaffolds): N templates, each a fixed
+//! prompt prefix, with request fanout Zipf-skewed across templates — the
+//! workload class copy-on-write prefix sharing exists for.
 
 use crate::util::Rng;
+
+/// Identity of a shared prompt prefix: requests carrying the same `id`
+/// open with the same `len` prompt tokens, so their KV for those tokens is
+/// byte-identical and shareable across the paged block map.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixSpec {
+    /// Prefix hash — the template's identity in the KV prefix index.
+    pub id: u64,
+    /// Shared prefix length in tokens (a strict prefix of the prompt).
+    pub len: usize,
+}
 
 /// A request before it enters the system: prompt length and the number of
 /// output tokens it will generate.
@@ -14,6 +30,10 @@ pub struct RequestSpec {
     pub decode_len: usize,
     /// Arrival time, seconds (0.0 ⇒ present at start).
     pub arrival: f64,
+    /// Shared-template identity of the prompt's opening tokens, if any.
+    /// `None` (the default everywhere outside template workloads) means
+    /// the whole prompt is unique to this request.
+    pub prefix: Option<PrefixSpec>,
 }
 
 impl RequestSpec {
@@ -38,7 +58,9 @@ pub fn split_by_pd_ratio(total: usize, pd: f64) -> (usize, usize) {
 /// given P:D ratio, all present at t=0.
 pub fn uniform_population(n: usize, seq_len: usize, pd: f64) -> Vec<RequestSpec> {
     let (p, d) = split_by_pd_ratio(seq_len, pd);
-    (0..n).map(|_| RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0 }).collect()
+    (0..n)
+        .map(|_| RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0, prefix: None })
+        .collect()
 }
 
 /// §5.3-style population: sequence lengths from Zipf(θ) over
@@ -55,7 +77,42 @@ pub fn zipf_population(
         .map(|_| {
             let total = rng.zipf(theta, min_len as u64, max_len as u64) as usize;
             let (p, d) = split_by_pd_ratio(total, pd);
-            RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0 }
+            RequestSpec { prompt_len: p, decode_len: d, arrival: 0.0, prefix: None }
+        })
+        .collect()
+}
+
+/// Template traffic: `num_templates` shared prompt prefixes of
+/// `prefix_len` tokens each, request fanout Zipf(θ)-skewed across
+/// templates (template 1 hottest). Every request opens with its template's
+/// prefix and appends a unique part of `[min_unique, max_unique]` tokens,
+/// split into (prompt suffix, decode) at the P:D ratio `pd` — so
+/// `prompt_len = prefix_len + suffix` and the prefix is always a *strict*
+/// prefix of the prompt (at least one unique prompt token remains to
+/// produce the first output logits).
+pub fn shared_prefix_population(
+    rng: &mut Rng,
+    n: usize,
+    num_templates: usize,
+    theta: f64,
+    prefix_len: usize,
+    min_unique: usize,
+    max_unique: usize,
+    pd: f64,
+) -> Vec<RequestSpec> {
+    assert!(num_templates > 0, "need at least one template");
+    assert!(min_unique >= 2 && min_unique <= max_unique, "unique part needs prompt + decode");
+    (0..n)
+        .map(|_| {
+            let t = rng.zipf(theta, 1, num_templates as u64) - 1;
+            let unique = rng.usize(min_unique, max_unique);
+            let (p, d) = split_by_pd_ratio(unique, pd);
+            RequestSpec {
+                prompt_len: prefix_len + p,
+                decode_len: d,
+                arrival: 0.0,
+                prefix: Some(PrefixSpec { id: t, len: prefix_len }),
+            }
         })
         .collect()
 }
@@ -107,6 +164,27 @@ mod tests {
         assert!(pop.iter().all(|r| (1024..=4096).contains(&r.total_len())));
         // P:D ≈ 10 for every request
         assert!(pop.iter().all(|r| (6.0..16.0).contains(&r.pd_ratio())));
+    }
+
+    #[test]
+    fn shared_prefix_population_is_template_shaped() {
+        let mut rng = Rng::new(3);
+        let pop = shared_prefix_population(&mut rng, 400, 8, 0.8, 512, 32, 256, 5.0);
+        assert_eq!(pop.len(), 400);
+        let mut fanout = [0usize; 8];
+        for r in &pop {
+            let pfx = r.prefix.expect("every request carries its template");
+            assert_eq!(pfx.len, 512);
+            assert!(pfx.id < 8);
+            fanout[pfx.id as usize] += 1;
+            // the prefix is a STRICT prefix of the prompt
+            assert!(r.prompt_len > pfx.len);
+            assert!(r.prompt_len - pfx.len + r.decode_len <= 256);
+            assert!(r.decode_len >= 1);
+        }
+        // Zipf fanout: the hottest template dominates the coldest
+        assert!(fanout[0] > 2 * fanout[7], "fanout {fanout:?} not skewed");
+        assert!(fanout.iter().all(|&c| c > 0), "every template sees traffic");
     }
 
     #[test]

@@ -128,7 +128,7 @@ fn hybrid_matches_sarathi_on_its_home_turf() {
     // SarathiScheduler's throughput under identical degenerate slots.
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 1024);
     let pop: Vec<RequestSpec> = (0..24)
-        .map(|_| RequestSpec { prompt_len: 1004, decode_len: 20, arrival: 0.0 })
+        .map(|_| RequestSpec { prompt_len: 1004, decode_len: 20, arrival: 0.0, prefix: None })
         .collect();
     let b = 6usize;
     let sar = run(&d, &pop, KvManager::new(b), Box::new(SarathiScheduler::new(256, b, 128)));

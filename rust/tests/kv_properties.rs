@@ -101,6 +101,7 @@ fn preempted_requests_eventually_complete_and_conserve_tokens() {
                 prompt_len: case.rng.usize(16, 240),
                 decode_len: case.rng.usize(1, 24),
                 arrival: case.rng.f64() * 0.2,
+                prefix: None,
             })
             .collect();
         let bs = *case.rng.choose(&[8usize, 16, 32]);

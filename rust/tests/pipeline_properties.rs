@@ -20,6 +20,7 @@ fn rand_specs(case: &mut Case) -> Vec<RequestSpec> {
             prompt_len: case.rng.usize(64, 2048),
             decode_len: case.rng.usize(1, 64),
             arrival: 0.0,
+            prefix: None,
         })
         .collect()
 }
@@ -163,6 +164,7 @@ fn shared_paged_pool_conserves_tokens_and_blocks() {
                 prompt_len: case.rng.usize(64, 768),
                 decode_len: case.rng.usize(8, 64),
                 arrival: case.rng.f64() * 0.5,
+                prefix: None,
             })
             .collect();
         let bs = *case.rng.choose(&[32usize, 64, 128]);

@@ -1,0 +1,349 @@
+//! Property suite for ref-counted, copy-on-write prefix sharing over the
+//! paged KV block map (alongside kv_properties.rs, which covers the
+//! unshared allocator).
+//!
+//! Refcounted allocators are exactly where silent double-frees and leaks
+//! hide, so the invariants are checked after EVERY step, not just at the
+//! end:
+//!
+//! * **Refcount conservation** — for every block, the allocator's refcount
+//!   equals the number of request tables holding it plus the number of
+//!   registered prefix runs pinning it.
+//! * **No double-free / no leak** — `allocated() + available() ==
+//!   capacity()` throughout; after all requests release and all prefixes
+//!   are evicted, every block is free.
+//! * **COW discipline** — a request only ever appends into blocks with
+//!   refcount 1 (its private tail); the leading `shared_blocks` of its
+//!   table are exactly a registered run's head; `fork_block` never hands
+//!   out a block with refcount > 1.
+//!
+//! The engine property drives random admit / preempt / complete
+//! interleavings (Zipf template fanout under block pressure) across 45
+//! seeds via the deterministic `check` harness.
+
+use std::collections::HashMap;
+
+use sarathi::config::{GpuConfig, ModelConfig};
+use sarathi::coordinator::sched::HybridScheduler;
+use sarathi::coordinator::{Engine, KvManager, RequestPool, SimExecutor};
+use sarathi::costmodel::CostModel;
+use sarathi::util::prop::check;
+use sarathi::workload::shared_prefix_population;
+
+/// Refcount conservation over the whole system: every block's refcount
+/// equals its holders (active request tables + registered prefix pins).
+fn check_refcounts(pools: &[&RequestPool], kv: &KvManager) -> Result<(), String> {
+    let mut held: HashMap<usize, usize> = HashMap::new();
+    for pool in pools {
+        for &id in pool.active_ids() {
+            for &b in &pool.get(id).blocks {
+                *held.entry(b).or_insert(0) += 1;
+            }
+        }
+    }
+    for (_, _, run) in kv.registered_prefixes() {
+        for &b in run {
+            *held.entry(b).or_insert(0) += 1;
+        }
+    }
+    for b in 0..kv.capacity() {
+        let expect = held.get(&b).copied().unwrap_or(0);
+        if kv.ref_count(b) != expect {
+            return Err(format!(
+                "block {b}: refcount {} != {expect} holders (request tables + pins)",
+                kv.ref_count(b)
+            ));
+        }
+    }
+    if kv.allocated() + kv.available() != kv.capacity() {
+        return Err("allocated + available != capacity".into());
+    }
+    Ok(())
+}
+
+/// COW discipline per active request: the table splits into a shared head
+/// (a registered run's prefix, refcount ≥ 1 from the pin) and a private
+/// tail every block of which has refcount exactly 1 — so growth/appends
+/// can never mutate shared content.
+fn check_split_tables(pool: &RequestPool, kv: &KvManager) -> Result<(), String> {
+    for &id in pool.active_ids() {
+        let r = pool.get(id);
+        if r.shared_blocks > r.blocks.len() {
+            return Err(format!("request {id}: shared head exceeds its table"));
+        }
+        for &b in &r.blocks[r.shared_blocks..] {
+            if kv.ref_count(b) != 1 {
+                return Err(format!(
+                    "request {id}: private block {b} has refcount {} — an append would \
+                     mutate shared content",
+                    kv.ref_count(b)
+                ));
+            }
+        }
+        if r.shared_blocks > 0 {
+            let pfx = r.spec.prefix.ok_or("untagged request holds a shared head")?;
+            let Some((_, run)) = kv.lookup_prefix(pfx.id) else {
+                return Err(format!(
+                    "request {id}: shared head but its prefix is not resident"
+                ));
+            };
+            if run[..r.shared_blocks] != r.blocks[..r.shared_blocks] {
+                return Err(format!(
+                    "request {id}: shared head is not the registered run's head"
+                ));
+            }
+            if r.shared_tokens != r.shared_blocks * kv.block_size() {
+                return Err(format!(
+                    "request {id}: shared_tokens {} != {} full blocks",
+                    r.shared_tokens, r.shared_blocks
+                ));
+            }
+        } else if r.shared_tokens != 0 {
+            return Err(format!("request {id}: shared tokens without a shared head"));
+        }
+    }
+    Ok(())
+}
+
+/// Allocator-level churn: random share/fork/release/register/evict against
+/// a hand-maintained reference model of per-block holder counts.
+#[test]
+fn allocator_churn_conserves_refcounts_and_never_leaks() {
+    check("refcounted allocator churn", 60, |case| {
+        let bs = *case.rng.choose(&[4usize, 8, 16]);
+        let num_blocks = case.rng.usize(4, 40);
+        let mut kv = KvManager::paged(num_blocks, bs);
+        // model: request tables + registered prefixes, as holder lists
+        let mut tables: Vec<Vec<usize>> = Vec::new();
+        let mut registered: Vec<(u64, Vec<usize>)> = Vec::new();
+        let mut next_hash = 0u64;
+        for _ in 0..150 {
+            match case.rng.usize(0, 4) {
+                // allocate a fresh table
+                0 => {
+                    let want = case.rng.usize(1, 4);
+                    let before = kv.available();
+                    let reclaimable = kv.reclaimable();
+                    match kv.alloc_n(want) {
+                        Some(t) => tables.push(t),
+                        None => {
+                            if before + reclaimable >= want {
+                                return Err("alloc failed with funds available".into());
+                            }
+                            if kv.available() != before {
+                                return Err("failed alloc must not leak".into());
+                            }
+                        }
+                    }
+                }
+                // share an existing table's blocks as a new sharer
+                1 if !tables.is_empty() => {
+                    let i = case.rng.usize(0, tables.len() - 1);
+                    let t = tables[i].clone();
+                    tables.push(kv.share_seq(&t));
+                }
+                // COW-fork the last block of a table
+                2 if !tables.is_empty() => {
+                    let i = case.rng.usize(0, tables.len() - 1);
+                    let last = tables[i].len() - 1;
+                    let b = tables[i][last];
+                    let rc_before = kv.ref_count(b);
+                    match kv.fork_block(b) {
+                        Some(nb) => {
+                            if rc_before > 1 {
+                                if nb == b {
+                                    return Err("fork returned a shared block".into());
+                                }
+                                if kv.ref_count(b) != rc_before - 1 {
+                                    return Err("fork did not move the reference".into());
+                                }
+                            } else if nb != b {
+                                return Err("fork of a private block must be identity".into());
+                            }
+                            if kv.ref_count(nb) == 0 {
+                                return Err("fork returned a free block".into());
+                            }
+                            tables[i][last] = nb;
+                        }
+                        None => {
+                            if rc_before == 1 || kv.available() + kv.reclaimable() > 0 {
+                                return Err("fork failed with funds available".into());
+                            }
+                        }
+                    }
+                }
+                // register a table's head as a prefix (one level, no
+                // nesting: skip heads that overlap an existing run)
+                3 if !tables.is_empty() => {
+                    let i = case.rng.usize(0, tables.len() - 1);
+                    let n_run = case.rng.usize(1, tables[i].len());
+                    let run: Vec<usize> = tables[i][..n_run].to_vec();
+                    let overlaps = registered
+                        .iter()
+                        .any(|(_, r)| r.iter().any(|b| run.contains(b)));
+                    if !overlaps {
+                        let tokens = (n_run - 1) * bs + case.rng.usize(1, bs);
+                        kv.register_prefix(next_hash, tokens, &run);
+                        registered.push((next_hash, run));
+                        next_hash += 1;
+                    }
+                }
+                // release a table (a sharer completes / is preempted)
+                _ if !tables.is_empty() => {
+                    let i = case.rng.usize(0, tables.len() - 1);
+                    let t = tables.swap_remove(i);
+                    kv.release_seq(t); // double free would panic
+                }
+                _ => {}
+            }
+            // drop registrations the allocator reclaimed under pressure
+            registered.retain(|(h, _)| kv.lookup_prefix(*h).is_some());
+            // refcount conservation against the reference model
+            let mut held: HashMap<usize, usize> = HashMap::new();
+            for t in &tables {
+                for &b in t {
+                    *held.entry(b).or_insert(0) += 1;
+                }
+            }
+            for (_, run) in &registered {
+                for &b in run {
+                    *held.entry(b).or_insert(0) += 1;
+                }
+            }
+            for b in 0..kv.capacity() {
+                let expect = held.get(&b).copied().unwrap_or(0);
+                if kv.ref_count(b) != expect {
+                    return Err(format!(
+                        "block {b}: refcount {} != {expect} model holders",
+                        kv.ref_count(b)
+                    ));
+                }
+            }
+            if kv.allocated() + kv.available() != kv.capacity() {
+                return Err("allocated + available != capacity".into());
+            }
+        }
+        // teardown: all sharers release, all prefixes evicted → empty pool
+        for t in tables.drain(..) {
+            kv.release_seq(t);
+        }
+        for (h, _) in registered.drain(..) {
+            kv.evict_prefix(h);
+        }
+        if kv.available() != kv.capacity() {
+            return Err("blocks leaked after full release + eviction".into());
+        }
+        Ok(())
+    });
+}
+
+/// Full-engine churn: shared-prefix template traffic over a tight paged
+/// pool, so admissions hit, miss, fork, preempt and resume across ≥40
+/// seeds — with the refcount/COW/no-leak invariants checked after every
+/// single engine step.
+#[test]
+fn engine_interleavings_conserve_refcounts_without_double_free_or_leak() {
+    let mut total_preemptions = 0usize;
+    let mut total_hits = 0usize;
+    check("prefix sharing under admit/preempt/complete churn", 45, |case| {
+        let n = 6 + case.rng.usize(0, 6 + case.size / 2);
+        let num_templates = case.rng.usize(1, 3);
+        let bs = *case.rng.choose(&[8usize, 16, 32]);
+        let prefix_len = case.rng.usize(bs, 4 * bs); // partial blocks likely
+        let specs = shared_prefix_population(
+            &mut case.rng,
+            n,
+            num_templates,
+            0.8,
+            prefix_len,
+            8,
+            48,
+            2.0,
+        );
+        let watermark = case.rng.usize(0, 2);
+        // pool sized to the single largest lifetime footprint plus pins
+        // plus a little slack — tight enough that growth preempts often
+        let peak = specs.iter().map(|s| s.prompt_len + s.decode_len).max().unwrap();
+        let probe = KvManager::paged(1, bs);
+        let pins = num_templates * probe.blocks_needed(prefix_len);
+        let num_blocks =
+            probe.blocks_needed(peak + 1) + pins + watermark + 1 + case.rng.usize(0, 4);
+        let max_batch = case.rng.usize(2, 6);
+        let budget = (*case.rng.choose(&[32usize, 64])).max(max_batch);
+
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::paged(num_blocks, bs),
+            Box::new(
+                HybridScheduler::new(budget, max_batch, watermark).with_prefix_share(true),
+            ),
+            Box::new(SimExecutor::new(cm)),
+        );
+        // drive step by step so invariants hold at every boundary, not
+        // just at the end of the run
+        let mut steps = 0usize;
+        while !e.pool.all_complete() {
+            steps += 1;
+            if steps > 200_000 {
+                return Err("runaway engine".into());
+            }
+            if !e.step() {
+                return Err("engine wedged".into());
+            }
+            check_refcounts(&[&e.pool], &e.kv)?;
+            check_split_tables(&e.pool, &e.kv)?;
+        }
+        // token conservation with compute skips
+        let skipped: usize = e.pool.iter().map(|r| r.prefix_skipped_tokens).sum();
+        let p_expect: usize = specs.iter().map(|s| s.prompt_len).sum();
+        let d_expect: usize = specs.iter().map(|s| s.decode_len - 1).sum();
+        if e.metrics.total_prefill_tokens() + skipped != p_expect {
+            return Err(format!(
+                "prefill {} + skipped {skipped} != {p_expect}",
+                e.metrics.total_prefill_tokens()
+            ));
+        }
+        if e.metrics.total_decode_tokens() != d_expect {
+            return Err(format!(
+                "decode tokens {} != {d_expect}",
+                e.metrics.total_decode_tokens()
+            ));
+        }
+        // per-request and metrics hit counters agree
+        let per_req_hits: usize = e.pool.iter().map(|r| r.prefix_hits).sum();
+        if e.metrics.prefix_hits != per_req_hits {
+            return Err(format!(
+                "metrics hits {} != per-request {per_req_hits}",
+                e.metrics.prefix_hits
+            ));
+        }
+        // no leak: only registered pins may hold blocks now
+        check_refcounts(&[&e.pool], &e.kv)?;
+        let pinned: usize = e.kv.registered_prefixes().map(|(_, _, run)| run.len()).sum();
+        if e.kv.available() + pinned != num_blocks {
+            return Err(format!(
+                "leak: {} free + {pinned} pinned != {num_blocks}",
+                e.kv.available()
+            ));
+        }
+        // evicting every prefix must drain the pool completely
+        let hashes: Vec<u64> = e.kv.registered_prefixes().map(|(h, _, _)| h).collect();
+        for h in hashes {
+            e.kv.evict_prefix(h);
+        }
+        if e.kv.available() != num_blocks {
+            return Err("blocks leaked past prefix eviction".into());
+        }
+        total_preemptions += e.metrics.preemptions;
+        total_hits += e.metrics.prefix_hits;
+        Ok(())
+    });
+    // the generator is tuned so both sharing AND block pressure actually
+    // bite across the 45 seeds
+    assert!(total_hits > 50, "only {total_hits} prefix hits — template fanout broken?");
+    assert!(
+        total_preemptions > 10,
+        "only {total_preemptions} preemptions — pressure generator broken?"
+    );
+}

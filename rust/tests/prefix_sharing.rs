@@ -1,0 +1,180 @@
+//! Acceptance: copy-on-write prefix sharing over the paged KV block map
+//! (vLLM-style PagedAttention sharing, arXiv 2309.06180, on SARATHI's
+//! stall-free hybrid stack).
+//!
+//! The claims under test, on the SAME paged pool and the SAME template
+//! workload (4 shared 520-token prefixes, Zipf-0.8 fanout — the 520-token
+//! prefix is deliberately NOT block-aligned so every hit exercises the
+//! copy-on-write fork of the partial last block):
+//!
+//! 1. prefix sharing sustains ≥ 1.3× the peak concurrent requests of the
+//!    no-sharing baseline (mirror: 12 vs 7 = 1.71×);
+//! 2. at strictly LOWER peak KV occupancy (mirror: 94 vs 127 blocks =
+//!    0.74×) — shared blocks are counted once, and sharers only pay for
+//!    their private tails;
+//! 3. with identical completion counts and token conservation: scheduled
+//!    prefill plus cache-served (skipped) tokens equal the workload's
+//!    prompts exactly, decode tokens match to the token;
+//! 4. prefix hits and shared-KV occupancy are visible in `Metrics` and
+//!    the JSONL trace (what the CI smoke step greps for).
+//!
+//! Timing is honest: a registered run is NOT servable until the
+//! registrant's prefill has computed the covered tokens (readiness
+//! gating), so the win below includes the warm-up in which co-arriving
+//! same-template requests wait for the in-flight fill.
+//!
+//! Margins pre-validated with the PR-2 Python mirror of the Rng + cost
+//! model + engine, extended with the pin/fork/readiness bookkeeping
+//! (/tmp/prefix_mirror.py): sharing also finishes the closed-loop run
+//! 4.1× sooner (8.82 s vs 36.56 s simulated) since resident prefixes
+//! skip their prefill compute.
+
+use sarathi::config::{GpuConfig, ModelConfig};
+use sarathi::coordinator::sched::HybridScheduler;
+use sarathi::coordinator::{Engine, KvManager, RequestPool, SimExecutor};
+use sarathi::costmodel::CostModel;
+use sarathi::util::Rng;
+use sarathi::workload::{shared_prefix_population, RequestSpec};
+
+const BLOCKS: usize = 128;
+const BS: usize = 32;
+const MAX_BATCH: usize = 12;
+
+/// The shared-template workload: 160 requests over 4 templates with a
+/// 520-token shared prefix each (16¼ blocks — partial last block → COW
+/// fork on every hit), unique parts of 16–64 tokens at P:D = 3, Zipf(0.8)
+/// template fanout, all present at t = 0 (closed loop).
+fn workload() -> Vec<RequestSpec> {
+    let mut rng = Rng::new(17);
+    shared_prefix_population(&mut rng, 160, 4, 0.8, 520, 16, 64, 3.0)
+}
+
+fn run(specs: &[RequestSpec], share: bool) -> Engine<'static> {
+    let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+    let mut e = Engine::new(
+        RequestPool::from_specs(specs),
+        KvManager::paged(BLOCKS, BS),
+        Box::new(HybridScheduler::new(128, MAX_BATCH, 2).with_prefix_share(share)),
+        Box::new(SimExecutor::new(cm)),
+    );
+    e.run();
+    e
+}
+
+#[test]
+fn sharing_lifts_peak_concurrency_and_cuts_peak_occupancy_on_the_same_pool() {
+    let specs = workload();
+    let on = run(&specs, true);
+    let off = run(&specs, false);
+
+    // identical completion counts: every request finishes in both runs
+    assert!(on.pool.all_complete() && off.pool.all_complete());
+    let done = |e: &Engine| e.pool.iter().filter(|r| r.completed_at.is_some()).count();
+    assert_eq!(done(&on), specs.len());
+    assert_eq!(done(&off), specs.len());
+
+    // (1) ≥ 1.3× peak concurrent requests on the same pool (mirror 1.71×)
+    let (pa_on, pa_off) = (on.metrics.peak_active(), off.metrics.peak_active());
+    assert!(
+        pa_on as f64 >= 1.3 * pa_off as f64,
+        "peak concurrency: sharing {pa_on} !>= 1.3 x baseline {pa_off}"
+    );
+
+    // (2) strictly lower peak KV occupancy (mirror 94 vs 127 blocks)
+    let (pb_on, pb_off) =
+        (on.metrics.peak_kv_blocks_in_use(), off.metrics.peak_kv_blocks_in_use());
+    assert!(
+        pb_on < pb_off,
+        "peak KV occupancy: sharing {pb_on} !< baseline {pb_off} blocks"
+    );
+    assert!(
+        (pb_on as f64) <= 0.85 * pb_off as f64,
+        "occupancy win collapsed: {pb_on} / {pb_off} blocks"
+    );
+
+    // (3) token conservation. Baseline schedules every prompt token;
+    // sharing schedules prompt − cache-served, and the books must balance
+    // to the token. Decode work is identical.
+    let total_p: usize = specs.iter().map(|s| s.prompt_len).sum();
+    let total_d: usize = specs.iter().map(|s| s.decode_len - 1).sum();
+    assert_eq!(off.metrics.total_prefill_tokens(), total_p);
+    assert_eq!(off.metrics.total_decode_tokens(), total_d);
+    let skipped: usize = on.pool.iter().map(|r| r.prefix_skipped_tokens).sum();
+    assert_eq!(on.metrics.total_prefill_tokens() + skipped, total_p);
+    assert_eq!(on.metrics.total_decode_tokens(), total_d);
+    assert!(skipped > 0, "hits must serve prefill from the resident cache");
+
+    // the baseline never touches the sharing machinery
+    assert_eq!(off.metrics.prefix_hits, 0);
+    assert_eq!(off.metrics.peak_shared_kv_tokens(), 0);
+    assert_eq!(off.kv.num_prefixes(), 0);
+
+    // sharing: every non-registrant admission hits (4 templates register)
+    assert!(on.metrics.prefix_hits >= specs.len() - 4, "hits {}", on.metrics.prefix_hits);
+    assert!(on.metrics.peak_shared_kv_tokens() > 0);
+
+    // and the cache-served prefills finish the closed-loop run sooner
+    // (mirror: 8.8 s vs 36.6 s — assert a loose 0.75×)
+    assert!(
+        on.now < 0.75 * off.now,
+        "sharing makespan {:.1}s !< 0.75 x baseline {:.1}s",
+        on.now,
+        off.now
+    );
+
+    // block accounting: everything returned except the resident pins
+    let pinned: usize = on.kv.registered_prefixes().map(|(_, _, run)| run.len()).sum();
+    assert_eq!(on.kv.available() + pinned, BLOCKS);
+    assert_eq!(off.kv.available(), BLOCKS);
+}
+
+#[test]
+fn prefix_hits_and_shared_occupancy_land_in_the_jsonl_trace() {
+    let specs = workload();
+    let on = run(&specs, true);
+    assert!(on.metrics.prefix_hits > 0);
+
+    let path = std::env::temp_dir().join("sarathi_prefix_sharing_trace.jsonl");
+    on.metrics.write_jsonl(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), on.metrics.iterations.len());
+    // per-iteration hit counts sum to the metrics total…
+    let hits: usize = text
+        .lines()
+        .filter_map(|l| {
+            let tail = l.split("\"prefix_hits\":").nth(1)?;
+            tail.split(&[',', '}'][..]).next()?.parse::<usize>().ok()
+        })
+        .sum();
+    assert_eq!(hits, on.metrics.prefix_hits);
+    // …and shared occupancy is visibly non-zero while sharers run
+    assert!(
+        text.lines().any(|l| !l.contains("\"shared_kv_tokens\":0}")
+            && l.contains("\"shared_kv_tokens\":")),
+        "no iteration reports shared KV occupancy"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// The COW edge is on the acceptance path, not just in unit tests: with a
+/// 520-token prefix on 32-token blocks, every sharer forks the partial
+/// 17th block — so the shared head is exactly 16 blocks (512 tokens) and
+/// no sharer's table ever references a block with a co-sharer's private
+/// tokens.
+#[test]
+fn misaligned_prefix_shares_full_blocks_and_forks_the_partial_tail() {
+    let specs = workload();
+    let on = run(&specs, true);
+    for r in on.pool.iter() {
+        // post-run: tables returned; the per-request lifetime counters
+        // prove the split was in effect
+        if r.prefix_hits > 0 {
+            assert_eq!(r.prefix_skipped_tokens, 520.min(r.spec.prompt_len - 1));
+        }
+    }
+    // the resident runs cover the full 520 tokens (17 blocks, partial pin)
+    for (_, tokens, run) in on.kv.registered_prefixes() {
+        assert_eq!(tokens, 520);
+        assert_eq!(run.len(), 17);
+    }
+}

@@ -146,7 +146,7 @@ fn engine_over_real_model_all_schedulers_agree() {
             prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
         let specs: Vec<RequestSpec> = prompts
             .iter()
-            .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0 })
+            .map(|p| RequestSpec { prompt_len: p.len(), decode_len, arrival: 0.0, prefix: None })
             .collect();
         let exec = RealExecutor::new(rt, gen_reqs);
         let mut engine = Engine::new(

@@ -21,6 +21,7 @@ fn rand_workload(case: &mut Case) -> Vec<RequestSpec> {
             prompt_len: case.rng.usize(1, 600),
             decode_len: case.rng.usize(1, 40),
             arrival: case.rng.f64() * 0.5,
+            prefix: None,
         })
         .collect()
 }
