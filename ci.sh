@@ -37,4 +37,14 @@ grep -qE '"shared_kv_tokens":[1-9][0-9]*' "$PTRACE" \
     || { echo "JSONL never shows shared KV occupancy"; exit 1; }
 rm -f "$PTRACE"
 
+echo "== smoke: wedge regression — undersized shared pool + template fanout must exit 0 =="
+WTRACE="$(mktemp -t wedge_trace.XXXXXX.jsonl)"
+WOUT="$(cargo run --release -- simulate --requests 200 --scheduler hybrid \
+    --block-size 32 --kv-blocks 40 --pp 2 --rate 6 \
+    --prefix-share --num-templates 4 --prefix-len 384 --json-out "$WTRACE")"
+echo "$WOUT" | grep -E 'prefix_fallbacks=[0-9]+' \
+    || { echo "report lacks prefix_fallbacks"; exit 1; }
+grep -q '"prefix_fallbacks":' "$WTRACE" || { echo "JSONL lacks prefix_fallbacks"; exit 1; }
+rm -f "$WTRACE"
+
 echo "CI gauntlet passed."

@@ -131,10 +131,14 @@ impl<'a> Engine<'a> {
         // step has no record, so count directly.
         let rejections = self.pool.take_rejected_events();
         let prefix_hits = self.pool.take_prefix_hits();
+        let prefix_fallbacks = self.pool.take_prefix_fallbacks();
+        let prefix_wait_iters = self.pool.take_prefix_wait_ticks();
         let swap_in = self.applier.swap.swap_in_time(self.pool.take_swapped_in_tokens());
         if batch.is_empty() {
             self.metrics.rejections += rejections;
             self.metrics.prefix_hits += prefix_hits;
+            self.metrics.prefix_fallbacks += prefix_fallbacks;
+            self.metrics.prefix_wait_iterations += prefix_wait_iters;
             // idle: jump to the next arrival if one exists
             if let Some(t) = self.pool.next_arrival(self.now) {
                 self.now = t;
@@ -183,6 +187,8 @@ impl<'a> Engine<'a> {
             swap_time: swap_in + effects.swap_time,
             rejections,
             prefix_hits,
+            prefix_fallbacks,
+            prefix_wait_iters,
             shared_kv_tokens: self.pool.shared_kv_tokens(),
         });
         // swap-out transfers of this iteration's victims delay the next
@@ -191,16 +197,34 @@ impl<'a> Engine<'a> {
     }
 
     /// Drive to completion of every request.
+    ///
+    /// Wedge demotion: when a step finds no work at all but some queued
+    /// request is still waiting on an in-flight prefix fill, the engine is
+    /// not actually wedged — the wait is the only thing stopping
+    /// admission. The oldest waiter is forced to its full-price fallback
+    /// ([`RequestPool::force_prefix_fallback`]) and the loop continues;
+    /// only a stall with NO prefix waiter panics. Each demotion retires
+    /// one waiter permanently, so the loop terminates.
     pub fn run(&mut self) -> &Metrics {
         let mut iters = 0usize;
         while !self.pool.all_complete() {
             iters += 1;
             assert!(iters <= self.max_iterations, "engine exceeded iteration cap");
             if !self.step() {
+                if let Some(id) = self.pool.oldest_prefix_waiter() {
+                    self.pool.force_prefix_fallback(id, self.now);
+                    continue;
+                }
                 panic!(
-                    "engine wedged: {} queued, {} incomplete",
+                    "engine wedged: {} queued ({} blocked on a prefix fill), {} incomplete; \
+                     kv {}/{} blocks in use ({} free + {} reclaimable)",
                     self.pool.arrived_queued(self.now).len(),
-                    self.pool.iter().filter(|r| r.completed_at.is_none()).count()
+                    self.pool.prefix_waiting_count(),
+                    self.pool.iter().filter(|r| r.completed_at.is_none()).count(),
+                    self.kv.allocated(),
+                    self.kv.capacity(),
+                    self.kv.available(),
+                    self.kv.reclaimable(),
                 );
             }
         }
@@ -446,6 +470,79 @@ mod tests {
         assert_eq!(e.kv.available() + pinned, 64, "only prefix pins outlive the run");
         // shared occupancy showed up in the per-iteration records
         assert!(e.metrics.peak_shared_kv_tokens() > 0);
+    }
+
+    /// Tentpole guarantee (3), engine side. A registrant preempted before
+    /// its fill produced a single token WAITS ON ITS OWN RUN at
+    /// re-admission (prefilled = 0 looks like a fresh arrival) — the
+    /// ROADMAP liveness hole. PR-3 panicked "engine wedged" here; now the
+    /// driver demotes the wedge by forcing the oldest waiter's fallback
+    /// and every request completes at full price.
+    #[test]
+    fn wedge_demotion_forces_fallback_instead_of_panicking() {
+        use crate::coordinator::sched::Admission;
+        use crate::workload::PrefixSpec;
+        let spec = RequestSpec {
+            prompt_len: 64,
+            decode_len: 4,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 9, len: 48 }),
+        };
+        let mut e = Engine::new(
+            RequestPool::from_specs(&[spec, spec]),
+            KvManager::paged(16, 16),
+            Box::new(HybridScheduler::new(128, 8, 0).with_prefix_share(true)),
+            sim(),
+        );
+        // stage the hole: the registrant admits (registering the run,
+        // unready) and is preempted at zero progress
+        let adm = Admission::default().with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut e.pool, &mut e.kv, 0, 0.0));
+        let blocks = e.pool.preempt(0, 0.0);
+        e.kv.release_seq(blocks);
+        assert!(!e.kv.is_prefix_ready(9));
+        // the run demotes both stranded waiters instead of panicking
+        e.run();
+        assert!(e.pool.all_complete());
+        assert_eq!(e.metrics.prefix_fallbacks, 2, "both template requests fell back");
+        assert_eq!(e.metrics.prefix_hits, 0, "nobody can hit the never-filled run");
+        assert!(e.metrics.prefix_wait_iterations > 0);
+        for r in e.pool.iter() {
+            assert!(r.prefix_fallback);
+            assert_eq!(r.decoded, r.spec.decode_len);
+        }
+        // the wait-time histogram saw both waits
+        let lat = crate::coordinator::LatencyReport::from_pool(&e.pool);
+        assert_eq!(lat.prefix_wait.count(), 2);
+        // only the stale pinned run remains allocated
+        let pinned: usize = e.kv.registered_prefixes().map(|(_, _, run)| run.len()).sum();
+        assert_eq!(e.kv.available() + pinned, 16);
+    }
+
+    /// A scheduler that admits but never composes: with no prefix waiter
+    /// to demote, the engine must still fail loudly — now with KV
+    /// occupancy and wait diagnostics in the message.
+    struct NullScheduler;
+    impl Scheduler for NullScheduler {
+        fn compose(&mut self, _: &mut RequestPool, _: &mut KvManager, _: f64) -> Batch {
+            Batch::default()
+        }
+        fn name(&self) -> &'static str {
+            "null"
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "blocked on a prefix fill")]
+    fn true_wedge_without_waiters_still_panics_with_diagnostics() {
+        let specs = [RequestSpec { prompt_len: 8, decode_len: 1, arrival: 0.0, prefix: None }];
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::new(1),
+            Box::new(NullScheduler),
+            sim(),
+        );
+        e.run();
     }
 
     #[test]

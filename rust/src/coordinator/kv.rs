@@ -68,6 +68,21 @@ struct PrefixEntry {
     /// produced yet cannot serve anyone — registration at admission only
     /// reserves and indexes the run.
     ready: bool,
+    /// Prompt tokens the (re-)registrant's prefill has computed into the
+    /// run so far ([`KvManager::note_prefix_fill`]). Waiters compare this
+    /// across admission attempts: a fill that stops advancing means the
+    /// registrant stalled, and bounded prefix-waits degrade the waiter to
+    /// a full-price miss instead of blocking forever.
+    filled: usize,
+    /// Bumped whenever the request filling this run is preempted mid-fill
+    /// ([`KvManager::note_prefix_filler_preempted`]) — waiters count the
+    /// bump as an immediate stall tick even if the fill also advanced in
+    /// the same interval.
+    stall_events: u64,
+    /// LRU stamp: the allocator's logical clock at registration and at
+    /// every servable hit ([`KvManager::touch_prefix`]). Cold-prefix
+    /// reclaim evicts the smallest stamp first.
+    last_touch: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -81,9 +96,12 @@ pub struct KvManager {
     /// ref_count[block] = live references (request tables + prefix pins);
     /// 0 while free.
     ref_count: Vec<u32>,
-    /// Registered prefix runs, oldest first (reclaim order). Few templates
-    /// are live at once, so linear lookup beats a map here.
+    /// Registered prefix runs, registration order. Few templates are live
+    /// at once, so linear lookup beats a map here. Reclaim order is LRU by
+    /// `last_touch`, not list position.
     prefixes: Vec<PrefixEntry>,
+    /// Logical clock for the prefix LRU stamps.
+    touch_clock: u64,
 }
 
 impl KvManager {
@@ -102,6 +120,7 @@ impl KvManager {
             free: (0..num_blocks).rev().collect(),
             ref_count: vec![0; num_blocks],
             prefixes: Vec::new(),
+            touch_clock: 0,
         }
     }
 
@@ -139,10 +158,19 @@ impl KvManager {
         }
     }
 
-    /// Position of the oldest *cold* prefix: registered but with no live
-    /// sharer (the pin is the only reference on every block).
+    /// Position of the LRU-coldest *cold* prefix: registered but with no
+    /// live sharer (the pin is the only reference on every block), least
+    /// recently hit first (`last_touch`; registration counts as a touch).
+    /// The PR-3 policy reclaimed oldest-registered first, which could
+    /// evict a template still taking hits while an abandoned one stayed
+    /// resident.
     fn cold_prefix_pos(&self) -> Option<usize> {
-        self.prefixes.iter().position(|p| p.blocks.iter().all(|&b| self.ref_count[b] == 1))
+        self.prefixes
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.blocks.iter().all(|&b| self.ref_count[b] == 1))
+            .min_by_key(|(_, p)| p.last_touch)
+            .map(|(i, _)| i)
     }
 
     /// Blocks recoverable by evicting cold prefixes.
@@ -289,7 +317,16 @@ impl KvManager {
         for &b in run {
             self.share(b);
         }
-        self.prefixes.push(PrefixEntry { hash, tokens, blocks: run.to_vec(), ready: false });
+        self.touch_clock += 1;
+        self.prefixes.push(PrefixEntry {
+            hash,
+            tokens,
+            blocks: run.to_vec(),
+            ready: false,
+            filled: 0,
+            stall_events: 0,
+            last_touch: self.touch_clock,
+        });
     }
 
     /// Resident run for `hash`, ready or not: `(covered tokens, block
@@ -326,6 +363,41 @@ impl KvManager {
     pub fn mark_prefix_ready(&mut self, hash: u64) {
         if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash) {
             p.ready = true;
+        }
+    }
+
+    /// Registrant progress notification: the prefill filling `hash`'s run
+    /// has computed `prefilled` prompt tokens. Driven by the shared state
+    /// transition; waiters compare this across admission attempts to
+    /// detect a stalled fill. No-op once the run is ready.
+    pub fn note_prefix_fill(&mut self, hash: u64, prefilled: usize) {
+        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash && !p.ready) {
+            p.filled = p.filled.max(prefilled.min(p.tokens));
+        }
+    }
+
+    /// The request filling `hash`'s (unready) run was preempted: bump the
+    /// run's stall-event counter so every waiter's bounded-wait clock
+    /// ticks — even if the fill also advanced in the same interval.
+    pub fn note_prefix_filler_preempted(&mut self, hash: u64) {
+        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash && !p.ready) {
+            p.stall_events += 1;
+        }
+    }
+
+    /// The waiter-visible progress of `hash`'s fill: `(tokens computed so
+    /// far, stall events)`. `None` when the prefix is not registered.
+    pub fn prefix_fill_state(&self, hash: u64) -> Option<(usize, u64)> {
+        self.prefixes.iter().find(|p| p.hash == hash).map(|p| (p.filled, p.stall_events))
+    }
+
+    /// Stamp `hash`'s run as recently used (LRU reclaim order). Admission
+    /// calls this on every share from the resident run.
+    pub fn touch_prefix(&mut self, hash: u64) {
+        self.touch_clock += 1;
+        let clock = self.touch_clock;
+        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash) {
+            p.last_touch = clock;
         }
     }
 
@@ -566,6 +638,60 @@ mod tests {
         assert!(kv.alloc_n(3).is_none(), "hot prefix blocks stay pinned");
         assert_eq!(kv.num_prefixes(), 1);
         kv.release_seq(run);
+    }
+
+    /// The smarter-eviction satellite: cold-prefix reclaim is LRU by last
+    /// hit, replacing PR-3's oldest-registered-first order. A hit on the
+    /// OLDER registration must make the newer, never-hit run the victim —
+    /// oldest-first would have evicted the hot template instead.
+    #[test]
+    fn cold_prefix_reclaim_is_lru_by_last_hit_not_oldest_first() {
+        let mut kv = KvManager::paged(6, 16);
+        let run_a = kv.alloc_n(2).unwrap();
+        kv.register_prefix(1, 32, &run_a);
+        let run_b = kv.alloc_n(2).unwrap();
+        kv.register_prefix(2, 32, &run_b);
+        kv.release_seq(run_a);
+        kv.release_seq(run_b); // both cold (pin-only references)
+        assert_eq!(kv.reclaimable(), 4);
+        // a later hit stamps the OLDER registration hot
+        kv.touch_prefix(1);
+        // demanding past the 2 free blocks reclaims the LRU-coldest run
+        let got = kv.alloc_n(4).expect("reclaim funds the allocation");
+        assert!(kv.lookup_prefix(1).is_some(), "recently-hit run survives");
+        assert!(
+            kv.lookup_prefix(2).is_none(),
+            "LRU-coldest run evicted (oldest-first would have kept it)"
+        );
+        kv.release_seq(got);
+        assert!(kv.evict_prefix(1));
+        assert_eq!(kv.available(), 6);
+    }
+
+    /// Fill-progress bookkeeping for bounded prefix-waits: notes advance
+    /// the waiter-visible state, filler preemption bumps the stall
+    /// counter, and a ready run stops tracking.
+    #[test]
+    fn fill_state_tracks_progress_and_filler_preemptions() {
+        let mut kv = KvManager::paged(8, 16);
+        assert_eq!(kv.prefix_fill_state(3), None);
+        let run = kv.alloc_n(3).unwrap();
+        kv.register_prefix(3, 40, &run);
+        assert_eq!(kv.prefix_fill_state(3), Some((0, 0)));
+        kv.note_prefix_fill(3, 16);
+        assert_eq!(kv.prefix_fill_state(3), Some((16, 0)));
+        // progress never regresses, and is capped at the covered tokens
+        kv.note_prefix_fill(3, 8);
+        kv.note_prefix_fill(3, 100);
+        assert_eq!(kv.prefix_fill_state(3), Some((40, 0)));
+        kv.note_prefix_filler_preempted(3);
+        assert_eq!(kv.prefix_fill_state(3), Some((40, 1)));
+        // a ready run no longer counts stalls (nobody waits on it)
+        kv.mark_prefix_ready(3);
+        kv.note_prefix_filler_preempted(3);
+        assert_eq!(kv.prefix_fill_state(3), Some((40, 1)));
+        kv.release_seq(run);
+        kv.evict_prefix(3);
     }
 
     #[test]

@@ -55,6 +55,13 @@ pub struct IterationRecord {
     /// Admissions served from a resident shared prefix run during this
     /// iteration (copy-on-write prefix sharing).
     pub prefix_hits: usize,
+    /// Prefix waits that degraded to a full-price miss during this
+    /// iteration's admission — the registrant made no progress for the
+    /// gate's bounded-wait window, or the driver demoted a wedge.
+    pub prefix_fallbacks: usize,
+    /// Admission attempts spent waiting on an in-flight prefix fill
+    /// during this iteration (cache-aware admission wait pressure).
+    pub prefix_wait_iters: usize,
     /// KV tokens active requests are serving from shared prefix blocks
     /// after this iteration — memory that sharing saves versus private
     /// copies. (Shared blocks themselves are counted once in
@@ -79,6 +86,8 @@ impl IterationRecord {
             swap_time: 0.0,
             rejections: 0,
             prefix_hits: 0,
+            prefix_fallbacks: 0,
+            prefix_wait_iters: 0,
             shared_kv_tokens: 0,
         }
     }
@@ -100,6 +109,11 @@ pub struct LatencyReport {
     pub tbt: Summary,
     /// Normalized latency: `(completed_at − arrival) / decode_len`.
     pub normalized: Summary,
+    /// Time each cache-waiting request spent blocked on an in-flight
+    /// prefix fill before resolving (as a hit or as the fallback miss) —
+    /// the wait-time histogram of bounded cache-aware admission. One
+    /// sample per request that ever waited.
+    pub prefix_wait: Summary,
 }
 
 impl LatencyReport {
@@ -123,6 +137,9 @@ impl LatencyReport {
             if let Some(done) = r.completed_at {
                 rep.normalized.add((done - r.arrival) / r.spec.decode_len.max(1) as f64);
             }
+            if r.prefix_wait_iters > 0 {
+                rep.prefix_wait.add(r.prefix_wait_time);
+            }
         }
         rep
     }
@@ -137,6 +154,11 @@ pub struct Metrics {
     pub rejections: usize,
     /// Total prefix-cache-hit admissions across the run.
     pub prefix_hits: usize,
+    /// Total prefix waits degraded to full-price misses across the run
+    /// (bounded-wait expiry + wedge demotion).
+    pub prefix_fallbacks: usize,
+    /// Total admission attempts spent waiting on a prefix fill.
+    pub prefix_wait_iterations: usize,
 }
 
 impl Metrics {
@@ -148,6 +170,8 @@ impl Metrics {
         self.preemptions += rec.preemptions;
         self.rejections += rec.rejections;
         self.prefix_hits += rec.prefix_hits;
+        self.prefix_fallbacks += rec.prefix_fallbacks;
+        self.prefix_wait_iterations += rec.prefix_wait_iters;
         self.iterations.push(rec);
     }
 
@@ -308,6 +332,7 @@ impl Metrics {
                  \"total_tokens\":{},\"kv_blocks_in_use\":{},\"kv_blocks_total\":{},\
                  \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{},\
                  \"swap_time\":{:.6},\"rejections\":{},\"prefix_hits\":{},\
+                 \"prefix_fallbacks\":{},\"prefix_wait_iters\":{},\
                  \"shared_kv_tokens\":{}}}",
                 i,
                 r.started_at,
@@ -324,6 +349,8 @@ impl Metrics {
                 r.swap_time,
                 r.rejections,
                 r.prefix_hits,
+                r.prefix_fallbacks,
+                r.prefix_wait_iters,
                 r.shared_kv_tokens,
             )?;
         }
@@ -426,6 +453,43 @@ mod tests {
         assert_eq!(m.prefix_hits, 4);
         assert_eq!(m.peak_shared_kv_tokens(), 96);
         assert_eq!(m.peak_kv_blocks_in_use(), 7);
+    }
+
+    #[test]
+    fn prefix_fallbacks_and_wait_iterations_accumulate_and_land_in_jsonl() {
+        let mut m = Metrics::new();
+        let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+        r.prefix_fallbacks = 1;
+        r.prefix_wait_iters = 3;
+        m.record(r);
+        let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+        r.prefix_wait_iters = 2;
+        m.record(r);
+        assert_eq!(m.prefix_fallbacks, 1);
+        assert_eq!(m.prefix_wait_iterations, 5);
+        let path = std::env::temp_dir().join("sarathi_test_fallback_trace.jsonl");
+        m.write_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let first = text.lines().next().unwrap();
+        assert!(first.contains("\"prefix_fallbacks\":1"));
+        assert!(first.contains("\"prefix_wait_iters\":3"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn latency_report_includes_the_prefix_wait_histogram() {
+        use crate::workload::RequestSpec;
+        let mut pool = RequestPool::new();
+        pool.push(RequestSpec { prompt_len: 4, decode_len: 2, arrival: 0.0, prefix: None });
+        pool.push(RequestSpec { prompt_len: 4, decode_len: 2, arrival: 0.0, prefix: None });
+        {
+            let r = pool.get_mut(0);
+            r.prefix_wait_iters = 3;
+            r.prefix_wait_time = 0.75;
+        }
+        let rep = LatencyReport::from_pool(&pool);
+        assert_eq!(rep.prefix_wait.count(), 1, "only requests that waited contribute");
+        assert!((rep.prefix_wait.mean() - 0.75).abs() < 1e-12);
     }
 
     #[test]

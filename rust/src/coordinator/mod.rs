@@ -37,7 +37,7 @@ pub use engine::{Engine, Executor, SimExecutor, StepOutcome};
 pub use kv::{KvManager, DEGENERATE_BLOCK};
 pub use metrics::{IterationRecord, LatencyReport, Metrics};
 pub use pool::RequestPool;
-pub use request::{Phase, Request, RequestId};
+pub use request::{Phase, PrefixWaitState, Request, RequestId};
 pub use sched::{
     make_scheduler, Admission, HybridScheduler, InfeasiblePolicy, OrcaScheduler,
     RequestLevelScheduler, SarathiScheduler, Scheduler,

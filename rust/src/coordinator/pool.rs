@@ -37,6 +37,12 @@ pub struct RequestPool {
     /// Prefix-cache-hit admissions since the last [`take_prefix_hits`]
     /// drain (metrics accounting).
     prefix_hit_events: usize,
+    /// Prefix-wait fallbacks (bounded wait degraded to a full-price miss)
+    /// since the last [`take_prefix_fallbacks`] drain.
+    prefix_fallback_events: usize,
+    /// Admission attempts spent waiting on a prefix fill since the last
+    /// [`take_prefix_wait_ticks`] drain.
+    prefix_wait_tick_events: usize,
 }
 
 impl RequestPool {
@@ -170,6 +176,72 @@ impl RequestPool {
     /// Prefix-cache-hit admissions since the last drain (metrics).
     pub fn take_prefix_hits(&mut self) -> usize {
         std::mem::take(&mut self.prefix_hit_events)
+    }
+
+    /// Note one admission attempt spent waiting on a prefix fill (called
+    /// by the admission gate's wait tick).
+    pub fn note_prefix_wait_tick(&mut self) {
+        self.prefix_wait_tick_events += 1;
+    }
+
+    /// Prefix-wait admission attempts since the last drain (metrics).
+    pub fn take_prefix_wait_ticks(&mut self) -> usize {
+        std::mem::take(&mut self.prefix_wait_tick_events)
+    }
+
+    /// Prefix-wait fallback events since the last drain (metrics).
+    pub fn take_prefix_fallbacks(&mut self) -> usize {
+        std::mem::take(&mut self.prefix_fallback_events)
+    }
+
+    /// Degrade `id`'s prefix wait to a full-price MISS: the wait-for edge
+    /// is dropped, its elapsed time is finalized into the wait histogram,
+    /// and the request's prefix tag goes inert ([`Request::prefix_fallback`]
+    /// is sticky). Called by the admission gate when the registrant made
+    /// no progress for `max_prefix_wait` attempts, and by the drivers'
+    /// wedge demotion ([`Engine::run`] / `PipelineSim`) on the oldest
+    /// waiter when nothing else can make progress.
+    ///
+    /// [`Request::prefix_fallback`]: super::request::Request::prefix_fallback
+    /// [`Engine::run`]: super::engine::Engine::run
+    pub fn force_prefix_fallback(&mut self, id: RequestId, now: f64) {
+        if self.requests[id].prefix_fallback {
+            return;
+        }
+        self.requests[id].prefix_fallback = true;
+        self.finalize_prefix_wait(id, now);
+        self.prefix_fallback_events += 1;
+    }
+
+    /// Finalize `id`'s prefix wait, if any: drop the wait-for edge and add
+    /// its elapsed time to the per-request wait histogram. Called wherever
+    /// a wait resolves — admission (hit, re-registration, or fallback
+    /// admit), the forced fallback, or the fill completing while the
+    /// request is still memory-gated behind the funds check.
+    pub fn finalize_prefix_wait(&mut self, id: RequestId, now: f64) {
+        let r = &mut self.requests[id];
+        if let Some(w) = r.prefix_wait.take() {
+            r.prefix_wait_time += (now - w.since).max(0.0);
+        }
+    }
+
+    /// Queued requests currently holding a wait-for edge on an in-flight
+    /// prefix fill (wedge diagnostics).
+    pub fn prefix_waiting_count(&self) -> usize {
+        self.pending[self.pending_head..]
+            .iter()
+            .filter(|&&id| self.requests[id].is_prefix_waiting())
+            .count()
+    }
+
+    /// Oldest-arrival queued request waiting on a prefix fill — the wedge
+    /// demotion victim. The pending list is (arrival, id)-sorted, so the
+    /// first waiting entry is the oldest.
+    pub fn oldest_prefix_waiter(&self) -> Option<RequestId> {
+        self.pending[self.pending_head..]
+            .iter()
+            .copied()
+            .find(|&id| self.requests[id].is_prefix_waiting())
     }
 
     /// Preempt an active request: release its block table (returned to the
@@ -458,6 +530,45 @@ mod tests {
         p.complete(1, 2.0);
         assert_eq!(p.get(1).shared_blocks, 0);
         assert_eq!(p.get(1).shared_tokens, 0);
+    }
+
+    #[test]
+    fn forced_fallback_finalizes_the_wait_and_drains_once() {
+        use super::super::request::PrefixWaitState;
+        use crate::workload::PrefixSpec;
+        let mut p = RequestPool::new();
+        p.push(RequestSpec {
+            prompt_len: 8,
+            decode_len: 2,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 4, len: 8 }),
+        });
+        p.get_mut(0).prefix_wait = Some(PrefixWaitState {
+            hash: 4,
+            last_fill: 0,
+            last_stall_events: 0,
+            stalled_iters: 2,
+            since: 1.0,
+        });
+        assert_eq!(p.prefix_waiting_count(), 1);
+        assert_eq!(p.oldest_prefix_waiter(), Some(0));
+        p.force_prefix_fallback(0, 3.5);
+        {
+            let r = p.get(0);
+            assert!(r.prefix_fallback);
+            assert!(r.prefix_wait.is_none(), "the wait-for edge is dropped");
+            assert!((r.prefix_wait_time - 2.5).abs() < 1e-12, "wait time finalized");
+        }
+        assert_eq!(p.prefix_waiting_count(), 0);
+        assert_eq!(p.oldest_prefix_waiter(), None);
+        assert_eq!(p.take_prefix_fallbacks(), 1);
+        assert_eq!(p.take_prefix_fallbacks(), 0, "events drain");
+        // idempotent: a second force neither re-counts nor re-times
+        p.force_prefix_fallback(0, 4.0);
+        assert_eq!(p.take_prefix_fallbacks(), 0);
+        p.note_prefix_wait_tick();
+        assert_eq!(p.take_prefix_wait_ticks(), 1);
+        assert_eq!(p.take_prefix_wait_ticks(), 0);
     }
 
     #[test]

@@ -21,6 +21,32 @@ pub enum Phase {
     Rejected,
 }
 
+/// A tracked wait-for edge: this (queued) request is waiting for the
+/// in-flight fill of its template's registered prefix run. The edge
+/// carries the waiter's view of the registrant's progress so admission can
+/// detect a stalled fill — the registrant preempted, starved in another
+/// stream, or gone — and degrade the wait to a full-price miss instead of
+/// blocking forever (the PR-3 "pipeline wedged" liveness hole).
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixWaitState {
+    /// Template hash this request is waiting on.
+    pub hash: u64,
+    /// Fill progress of the run ([`KvManager::prefix_fill_state`]) at the
+    /// waiter's last admission attempt.
+    ///
+    /// [`KvManager::prefix_fill_state`]:
+    ///     super::kv::KvManager::prefix_fill_state
+    pub last_fill: usize,
+    /// The run's stall-event counter (bumped when its filler is
+    /// preempted) at the last attempt.
+    pub last_stall_events: u64,
+    /// Consecutive attempts without registrant progress. Reaching the
+    /// gate's `max_prefix_wait` forces the fallback.
+    pub stalled_iters: usize,
+    /// When the wait began (feeds the wait-time histogram).
+    pub since: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: RequestId,
@@ -51,6 +77,21 @@ pub struct Request {
     /// Prompt tokens whose prefill compute was skipped because their KV
     /// was already resident when this request was first admitted.
     pub prefix_skipped_tokens: usize,
+    /// Live wait-for edge while this request is queued behind an
+    /// in-flight prefix fill (cache-aware admission). `None` when not
+    /// waiting; cleared on admission or fallback.
+    pub prefix_wait: Option<PrefixWaitState>,
+    /// Total admission attempts this request spent waiting on a prefix
+    /// fill (metrics: `prefix_wait_iterations`).
+    pub prefix_wait_iters: usize,
+    /// Total simulated time spent waiting on a prefix fill, finalized
+    /// when the wait resolves as a hit or degrades to the fallback.
+    pub prefix_wait_time: f64,
+    /// The bounded wait degraded to a full-price MISS: from then on the
+    /// prefix tag is inert for this request (it never waits again, never
+    /// shares, never registers) — a fallback is never worse than never
+    /// having cached.
+    pub prefix_fallback: bool,
     /// True between admission and completion/preemption. Progress counters
     /// survive preemption (swap-style: KV is released, not recomputed).
     pub admitted: bool,
@@ -80,6 +121,10 @@ impl Request {
             shared_tokens: 0,
             prefix_hits: 0,
             prefix_skipped_tokens: 0,
+            prefix_wait: None,
+            prefix_wait_iters: 0,
+            prefix_wait_time: 0.0,
+            prefix_fallback: false,
             admitted: false,
             preemptions: 0,
             arrival: spec.arrival,
@@ -99,6 +144,12 @@ impl Request {
 
     pub fn is_admitted(&self) -> bool {
         self.admitted
+    }
+
+    /// True while this queued request holds a wait-for edge on an
+    /// in-flight prefix fill.
+    pub fn is_prefix_waiting(&self) -> bool {
+        self.prefix_wait.is_some()
     }
 
     /// First block of the table — the physical KV row under the degenerate

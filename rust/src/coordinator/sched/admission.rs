@@ -29,6 +29,7 @@
 
 use super::super::kv::KvManager;
 use super::super::pool::RequestPool;
+use crate::workload::RequestSpec;
 
 /// What the gate does with a request that could NEVER complete in this
 /// pool (its lifetime KV peak exceeds capacity even when empty).
@@ -48,7 +49,7 @@ pub enum InfeasiblePolicy {
     Reject,
 }
 
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Admission {
     /// Free blocks kept in reserve for decode growth of running requests.
     pub watermark_blocks: usize,
@@ -62,6 +63,44 @@ pub struct Admission {
     /// index (copy-on-write sharing). Off by default: the baseline pays
     /// for every prompt token, prefix-tagged or not.
     pub prefix_share: bool,
+    /// Bounded cache-aware waiting: a waiter whose registrant made no
+    /// prefill progress for this many consecutive admission attempts
+    /// degrades to a full-price MISS and admits normally
+    /// ([`RequestPool::force_prefix_fallback`]). 0 disables waiting
+    /// entirely (every would-be wait is an immediate fallback).
+    pub max_prefix_wait: usize,
+    /// Bounded head-of-line bypass: when the queue head's prefix wait is
+    /// observably STALLED (at least one no-progress attempt), up to this
+    /// many arrived followers may be tried past it. A productive wait
+    /// (the fill is advancing) keeps the FCFS gate, so healthy template
+    /// warm-up stays serialized and the sharing win is not eroded;
+    /// fairness degrades gracefully — by a window, not absolutely.
+    pub bypass_window: usize,
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission {
+            watermark_blocks: 0,
+            max_active: None,
+            infeasible: InfeasiblePolicy::default(),
+            prefix_share: false,
+            max_prefix_wait: Self::DEFAULT_MAX_PREFIX_WAIT,
+            bypass_window: Self::DEFAULT_BYPASS_WINDOW,
+        }
+    }
+}
+
+/// Whether the gate passes one request, and if not, why — the wait
+/// outcome needs its own arm so `try_admit_one` can tick the waiter's
+/// stall clock without conflating it with a memory/cap refusal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum GateVerdict {
+    Pass,
+    /// Waiting on an in-flight prefix fill (cache-aware admission).
+    Waiting,
+    /// Memory/cap refusal (or infeasible under the Reject policy).
+    Blocked,
 }
 
 /// How admission will cover one request's KV footprint: what it can share
@@ -95,6 +134,12 @@ struct SharePlan {
 }
 
 impl Admission {
+    /// Default bound on consecutive no-progress waits before the fallback
+    /// (the fallback-policy knob; see [`Self::max_prefix_wait`]).
+    pub const DEFAULT_MAX_PREFIX_WAIT: usize = 8;
+    /// Default head-of-line bypass window behind a stalled waiter.
+    pub const DEFAULT_BYPASS_WINDOW: usize = 4;
+
     pub fn with_watermark(watermark_blocks: usize) -> Self {
         Admission { watermark_blocks, ..Self::default() }
     }
@@ -112,6 +157,20 @@ impl Admission {
     /// Enable (or disable) copy-on-write prefix sharing at this gate.
     pub fn with_prefix_share(mut self, on: bool) -> Self {
         self.prefix_share = on;
+        self
+    }
+
+    /// Set the bounded-wait fallback knob (consecutive no-progress
+    /// attempts before a waiter degrades to a full-price miss).
+    pub fn with_max_prefix_wait(mut self, k: usize) -> Self {
+        self.max_prefix_wait = k;
+        self
+    }
+
+    /// Set the head-of-line bypass window behind a stalled waiter
+    /// (0 restores the strict PR-3 gate).
+    pub fn with_bypass_window(mut self, window: usize) -> Self {
+        self.bypass_window = window;
         self
     }
 
@@ -167,11 +226,24 @@ impl Admission {
         let Some(pfx) = pool.get(id).spec.prefix else {
             return plain;
         };
+        // a fallback victim degraded to a full-price miss: its tag is
+        // inert from then on — it never waits again, never shares, never
+        // registers. Sticky so the charge is predictable.
+        if pool.get(id).prefix_fallback {
+            return plain;
+        }
         // never cover the full prompt: the final prefill chunk must run to
         // produce the request's first output token
         let cap = pool.get(id).spec.prompt_len.saturating_sub(1);
         let bs = kv.block_size();
         if let Some((tokens, run)) = kv.lookup_servable(pfx.id) {
+            // a hit that could never COMPLETE as a sharer — the pinned run
+            // (which this sharer's own table keeps resident) plus its
+            // private peak exceeds the pool — pays full price instead of
+            // livelocking through an endless grow/preempt/resume cycle
+            if self.sharer_lifetime_need(kv, pool.get(id).spec, tokens) > kv.capacity() {
+                return plain;
+            }
             // servable hit: share the resident head, skip its compute
             Self::share_from_run(kv, run, tokens, cap, total, true).unwrap_or(plain)
         } else if let Some((tokens, run)) = kv.lookup_prefix(pfx.id) {
@@ -240,17 +312,62 @@ impl Admission {
         self.plan(pool, kv, id).new_blocks
     }
 
+    /// Pool blocks that must be simultaneously resident for `spec` to
+    /// complete AS A SHARER of a servable run covering `cov_tokens`: the
+    /// run itself (this sharer's table references it for its whole life,
+    /// so it can never be reclaimed out from under the peak) plus the
+    /// private tail — at its lifetime peak, or at admission together with
+    /// the watermark, whichever binds. The watermark only gates ADMISSION
+    /// headroom, not the peak: decode growth past admission is allowed to
+    /// run the pool to zero free blocks.
+    fn sharer_lifetime_need(&self, kv: &KvManager, spec: RequestSpec, cov_tokens: usize) -> usize {
+        let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
+        let cov = cov_tokens.min(spec.prompt_len.saturating_sub(1));
+        let n_run = kv.blocks_needed(cov);
+        let fork = (cov % kv.block_size() != 0) as usize;
+        let private_admit = kv.blocks_needed(spec.prompt_len.max(1)) - n_run + fork;
+        let private_peak = kv.blocks_needed(peak.max(1)) - n_run + fork;
+        n_run + private_peak.max(private_admit + self.watermark_blocks)
+    }
+
     /// True when `id` could run to COMPLETION in an empty pool: its
     /// lifetime KV peak (`prompt + decode − 1` tokens, both known in the
     /// spec) plus the watermark fits the pool. Shared by
     /// [`can_admit`](Self::can_admit) and
     /// [`try_admit_one`](Self::try_admit_one) so the two entry points
     /// cannot disagree about an infeasible request.
+    ///
+    /// A resident prefix run can rescue a request the full-price check
+    /// rejects: the run stays resident either way (it is pinned and the
+    /// sharer references it), but the watermark then only has to cover
+    /// admission headroom over the PRIVATE tail — not the full peak
+    /// ([`sharer_lifetime_need`](Self::sharer_lifetime_need)). The rescue
+    /// counts a run that is still FILLING too ([`KvManager::lookup_prefix`],
+    /// ready or not): such a request waits like any other same-template
+    /// arrival and admits as a hit once the fill completes — gating the
+    /// rescue on servability would panic/reject it one iteration before
+    /// the wait machinery could hold it. Note the rescue is evaluated
+    /// against the CURRENT cache state: if the run is reclaimed (or the
+    /// wait degrades to the inert-tag fallback) while such a request
+    /// still queues, the request becomes infeasible again — under
+    /// [`InfeasiblePolicy::Panic`] that is a (correct, loud) mid-run
+    /// panic for a request that only ever fit WITH the cache.
     pub fn is_feasible(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> bool {
-        let spec = pool.get(id).spec;
+        let r = pool.get(id);
+        let spec = r.spec;
         let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
         let lifetime = kv.blocks_needed(peak.max(1));
-        lifetime.saturating_add(self.watermark_blocks) <= kv.capacity()
+        if lifetime.saturating_add(self.watermark_blocks) <= kv.capacity() {
+            return true; // feasible at full price, cache or no cache
+        }
+        if self.prefix_share && !kv.is_degenerate() && !r.prefix_fallback {
+            if let Some(pfx) = spec.prefix {
+                if let Some((tokens, _)) = kv.lookup_prefix(pfx.id) {
+                    return self.sharer_lifetime_need(kv, spec, tokens) <= kv.capacity();
+                }
+            }
+        }
+        false
     }
 
     /// Under [`InfeasiblePolicy::Panic`], panic loudly on an infeasible
@@ -270,26 +387,26 @@ impl Admission {
         );
     }
 
-    /// True if the gate passes for `id` without allocating. Panics (like
+    /// The gate's decision for `id` without allocating. Panics (like
     /// [`try_admit_one`](Self::try_admit_one)) when the request could never
     /// be admitted at all and the policy is [`InfeasiblePolicy::Panic`];
-    /// under [`InfeasiblePolicy::Reject`] it returns false without
-    /// mutating anything.
-    pub fn can_admit(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> bool {
+    /// under [`InfeasiblePolicy::Reject`] an infeasible request is merely
+    /// `Blocked` without mutating anything.
+    fn verdict(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> GateVerdict {
         if let Some(cap) = self.max_active {
             if pool.active_count() >= cap {
-                return false;
+                return GateVerdict::Blocked;
             }
         }
         if !self.is_feasible(pool, kv, id) {
             match self.infeasible {
                 InfeasiblePolicy::Panic => self.panic_infeasible(pool, kv, id),
-                InfeasiblePolicy::Reject => return false,
+                InfeasiblePolicy::Reject => return GateVerdict::Blocked,
             }
         }
         let plan = self.plan(pool, kv, id);
         if plan.blocked {
-            return false; // waiting on an in-flight prefix fill
+            return GateVerdict::Waiting; // in-flight prefix fill
         }
         // funds = free blocks + cold prefixes the allocator would reclaim
         // under pressure — EXCLUDING the run this admission is about to
@@ -302,7 +419,53 @@ impl Admission {
             pool.get(id).spec.prefix.map(|p| p.id)
         };
         let funds = kv.available() + kv.reclaimable_excluding(exclude);
-        funds >= plan.new_blocks.saturating_add(self.watermark_blocks)
+        if funds >= plan.new_blocks.saturating_add(self.watermark_blocks) {
+            GateVerdict::Pass
+        } else {
+            GateVerdict::Blocked
+        }
+    }
+
+    /// True if the gate passes for `id` without allocating (see
+    /// [`verdict`](Self::verdict) for the panic/reject behavior).
+    pub fn can_admit(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> bool {
+        self.verdict(pool, kv, id) == GateVerdict::Pass
+    }
+
+    /// One tick of `id`'s bounded prefix wait: compare the run's fill
+    /// progress (and stall events — a preempted filler counts as a stall
+    /// even if the fill also advanced) against the waiter's last
+    /// observation. `max_prefix_wait` consecutive no-progress ticks force
+    /// the full-price fallback.
+    fn tick_prefix_wait(&self, pool: &mut RequestPool, kv: &KvManager, id: usize, now: f64) {
+        use super::super::request::PrefixWaitState;
+        let Some(pfx) = pool.get(id).spec.prefix else { return };
+        let (fill, stall_events) = kv.prefix_fill_state(pfx.id).unwrap_or((0, 0));
+        pool.note_prefix_wait_tick();
+        let r = pool.get_mut(id);
+        r.prefix_wait_iters += 1;
+        let stalled = if let Some(w) = r.prefix_wait.as_mut() {
+            if fill > w.last_fill && stall_events == w.last_stall_events {
+                w.stalled_iters = 0; // the fill is advancing: keep waiting
+            } else {
+                w.stalled_iters += 1; // stalled, or the filler was preempted
+            }
+            w.last_fill = fill;
+            w.last_stall_events = stall_events;
+            w.stalled_iters
+        } else {
+            r.prefix_wait = Some(PrefixWaitState {
+                hash: pfx.id,
+                last_fill: fill,
+                last_stall_events: stall_events,
+                stalled_iters: 0,
+                since: now,
+            });
+            0
+        };
+        if stalled >= self.max_prefix_wait {
+            pool.force_prefix_fallback(id, now);
+        }
     }
 
     /// Admit `id` if the gate passes, allocating its initial block table —
@@ -325,9 +488,33 @@ impl Admission {
             pool.reject(id, now);
             return false;
         }
-        if !self.can_admit(pool, kv, id) {
-            return false;
+        match self.verdict(pool, kv, id) {
+            GateVerdict::Pass => {}
+            GateVerdict::Blocked => {
+                // a leftover wait edge whose fill has since resolved (the
+                // plan no longer waits) ends HERE: the request is now
+                // memory- or cap-gated like everyone else, and a stale
+                // `stalled` edge must not keep the FCFS bypass window
+                // open for a head that is no longer cache-waiting
+                if pool.get(id).is_prefix_waiting() && !self.plan(pool, kv, id).blocked {
+                    pool.finalize_prefix_wait(id, now);
+                }
+                return false;
+            }
+            GateVerdict::Waiting => {
+                // the wait-for edge ticks once per attempt; K consecutive
+                // no-progress ticks degrade it to a full-price miss that
+                // may admit on this very attempt
+                self.tick_prefix_wait(pool, kv, id, now);
+                let fell_back = pool.get(id).prefix_fallback;
+                if !fell_back || self.verdict(pool, kv, id) != GateVerdict::Pass {
+                    return false;
+                }
+            }
         }
+        // the wait (if any) resolves right here — as a servable hit, a
+        // re-registration, or the forced fallback — so finalize its time
+        pool.finalize_prefix_wait(id, now);
         let plan = self.plan(pool, kv, id);
         let target = Self::target_tokens(pool, id);
         // 1. the shared head: reference the resident run, then COW-fork
@@ -383,6 +570,10 @@ impl Admission {
         if !plan.run.is_empty() {
             r.prefix_hits += 1;
             pool.note_prefix_hit();
+            // LRU stamp: sharing from the run keeps it hot in reclaim order
+            if let Some(pfx) = pool.get(id).spec.prefix {
+                kv.touch_prefix(pfx.id);
+            }
         }
         true
     }
@@ -392,16 +583,39 @@ impl Admission {
     /// admitted. Under [`InfeasiblePolicy::Reject`], infeasible requests
     /// are rejected and skipped so they never head-of-line-block the
     /// co-running traffic behind them.
+    ///
+    /// A queue head whose prefix wait is observably STALLED (its
+    /// registrant made no progress since the last attempt) no longer
+    /// holds the gate either: up to [`bypass_window`](Self::bypass_window)
+    /// arrived followers are tried past it, so one wedged template cannot
+    /// starve unrelated traffic. A *productive* wait (the fill is
+    /// advancing) keeps strict FCFS — that is what preserves the serialized
+    /// warm-up, and with it the sharing win, on healthy workloads.
     pub fn admit_fcfs(&self, pool: &mut RequestPool, kv: &mut KvManager, now: f64) -> usize {
         let mut admitted = 0;
         while let Some(id) = pool.next_queued(now) {
-            if !self.try_admit_one(pool, kv, id, now) {
-                if pool.get(id).rejected_at.is_some() {
-                    continue; // rejected as infeasible: keep draining FCFS
-                }
-                break;
+            if self.try_admit_one(pool, kv, id, now) {
+                admitted += 1;
+                continue;
             }
-            admitted += 1;
+            if pool.get(id).rejected_at.is_some() {
+                continue; // rejected as infeasible: keep draining FCFS
+            }
+            let head_stalled = pool.get(id).prefix_wait.is_some_and(|w| w.stalled_iters >= 1);
+            if head_stalled && self.bypass_window > 0 {
+                let window: Vec<usize> = pool
+                    .arrived_queued(now)
+                    .into_iter()
+                    .filter(|&q| q != id)
+                    .take(self.bypass_window)
+                    .collect();
+                for q in window {
+                    if self.try_admit_one(pool, kv, q, now) {
+                        admitted += 1;
+                    }
+                }
+            }
+            break;
         }
         admitted
     }
@@ -636,6 +850,236 @@ mod tests {
         assert_eq!(kv.available(), 2);
         // the next hit fails the watermark check without panicking
         assert!(!adm.can_admit(&pool, &kv, 2));
+    }
+
+    /// Tentpole guarantee (1): a waiter whose registrant makes no prefill
+    /// progress for `max_prefix_wait` consecutive attempts degrades to a
+    /// full-price MISS and admits normally — it does not wait forever.
+    #[test]
+    fn stalled_fill_degrades_the_waiter_to_a_full_price_miss() {
+        use crate::workload::PrefixSpec;
+        let spec = RequestSpec {
+            prompt_len: 64,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut kv = KvManager::paged(16, 16);
+        let adm = Admission::default().with_prefix_share(true).with_max_prefix_wait(3);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        // the registrant never advances its fill (preempted / starved in
+        // another stream): each attempt ticks the waiter's stall clock
+        for i in 1..=3 {
+            assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.1 * i as f64));
+            assert!(pool.get(1).is_prefix_waiting());
+        }
+        // attempt 4 observes the 3rd consecutive no-progress tick: the
+        // wait degrades and the request admits at full price in one pass
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 1.0));
+        let r = pool.get(1);
+        assert!(r.prefix_fallback);
+        assert!(!r.is_prefix_waiting());
+        assert_eq!(r.prefix_hits, 0, "a fallback is a miss, not a hit");
+        assert_eq!(r.prefilled, 0, "full price: no compute skip");
+        assert_eq!(r.shared_blocks, 0);
+        assert_eq!(r.prefix_wait_iters, 4);
+        assert!(r.prefix_wait_time > 0.0, "the wait-time histogram sees the wait");
+        assert_eq!(pool.take_prefix_fallbacks(), 1);
+        assert_eq!(pool.take_prefix_wait_ticks(), 4);
+    }
+
+    /// A fill that keeps advancing resets the stall clock — healthy
+    /// warm-up waits are never charged the fallback.
+    #[test]
+    fn registrant_progress_resets_the_waiters_stall_clock() {
+        use crate::workload::PrefixSpec;
+        let spec = RequestSpec {
+            prompt_len: 64,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut kv = KvManager::paged(16, 16);
+        let adm = Admission::default().with_prefix_share(true).with_max_prefix_wait(2);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.1)); // init
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.2)); // stall 1
+        kv.note_prefix_fill(7, 16); // the registrant's chunk lands
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.3)); // progress: reset
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.4)); // stall 1
+        assert!(!pool.get(1).prefix_fallback, "progress bought more patience");
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.5)); // stall 2 = K
+        assert!(pool.get(1).prefix_fallback);
+    }
+
+    /// Preempting the filler counts as an immediate stall tick even when
+    /// the fill also advanced in the same interval — preemption is
+    /// first-class in the waiter's progress reasoning.
+    #[test]
+    fn filler_preemption_ticks_the_stall_clock_despite_progress() {
+        use crate::workload::PrefixSpec;
+        let spec = RequestSpec {
+            prompt_len: 64,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+        };
+        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut kv = KvManager::paged(16, 16);
+        let adm = Admission::default().with_prefix_share(true).with_max_prefix_wait(2);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.1)); // init
+        kv.note_prefix_fill(7, 16);
+        kv.note_prefix_filler_preempted(7);
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.2)); // stall 1
+        kv.note_prefix_fill(7, 32);
+        kv.note_prefix_filler_preempted(7);
+        // stall 2 = K: two preemption storms outweigh the partial progress
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.3));
+        assert!(pool.get(1).prefix_fallback);
+    }
+
+    /// Tentpole guarantee (2): a queue head whose wait is observably
+    /// stalled no longer holds the FCFS gate — feasible followers admit
+    /// through a bounded bypass window. A productive (advancing) wait
+    /// keeps strict FCFS, and window 0 restores the PR-3 gate.
+    #[test]
+    fn stalled_waiting_head_does_not_block_feasible_followers() {
+        use crate::workload::PrefixSpec;
+        let tpl = RequestSpec {
+            prompt_len: 64,
+            decode_len: 8,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 3, len: 40 }),
+        };
+        let plain = RequestSpec { prompt_len: 32, decode_len: 4, arrival: 0.2, prefix: None };
+        let mut pool = RequestPool::from_specs(&[tpl, tpl, plain, plain]);
+        let mut kv = KvManager::paged(24, 16);
+        let adm = Admission::default().with_prefix_share(true);
+        // pass 1: the registrant admits; the same-template follower's
+        // first attempt initializes its wait (not yet stalled, no bypass)
+        assert_eq!(adm.admit_fcfs(&mut pool, &mut kv, 0.1), 1);
+        assert!(pool.get(1).is_prefix_waiting());
+        // pass 2: the fill made no progress -> the head is STALLED, and
+        // the plain requests behind it admit through the bypass window
+        assert_eq!(adm.admit_fcfs(&mut pool, &mut kv, 0.3), 2);
+        assert!(pool.get(1).is_prefix_waiting(), "the head keeps waiting");
+        assert!(pool.get(2).is_admitted() && pool.get(3).is_admitted());
+        // window 0: the stalled head holds the gate absolutely (old gate)
+        let mut pool = RequestPool::from_specs(&[tpl, tpl, plain, plain]);
+        let mut kv = KvManager::paged(24, 16);
+        let strict = adm.with_bypass_window(0);
+        assert_eq!(strict.admit_fcfs(&mut pool, &mut kv, 0.1), 1);
+        assert_eq!(strict.admit_fcfs(&mut pool, &mut kv, 0.3), 0);
+        assert!(!pool.get(2).is_admitted() && !pool.get(3).is_admitted());
+    }
+
+    /// Satellite regression: `is_feasible` must subtract servable shared
+    /// coverage from the lifetime peak. A long-prompt template request
+    /// whose covered tokens live in the pinned resident run — and whose
+    /// private footprint fits — was rejected/panicked as infeasible when
+    /// the peak was computed from the full `prompt_len`.
+    #[test]
+    fn servable_prefix_coverage_counts_against_the_lifetime_peak() {
+        use crate::workload::PrefixSpec;
+        let registrant = RequestSpec {
+            prompt_len: 144,
+            decode_len: 4,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 11, len: 128 }),
+        };
+        let follower = RequestSpec {
+            prompt_len: 160,
+            decode_len: 32,
+            arrival: 0.1,
+            prefix: Some(PrefixSpec { id: 11, len: 128 }),
+        };
+        let mut pool = RequestPool::from_specs(&[registrant, follower]);
+        let mut kv = KvManager::paged(12, 16);
+        let adm = Admission::with_watermark(2).with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        // the rescue already counts the run while it is still FILLING: the
+        // follower WAITS here (registered, unready) instead of panicking
+        // as infeasible one iteration before the fill completes
+        assert!(adm.is_feasible(&pool, &kv, 1), "a filling run already rescues");
+        assert!(!adm.try_admit_one(&mut pool, &mut kv, 1, 0.02));
+        assert!(pool.get(1).is_prefix_waiting(), "held by the wait, not rejected");
+        kv.mark_prefix_ready(11); // the registrant's fill, unit-flipped
+        // full price the follower can never fit: peak 160+31 = 191 tokens
+        // = 12 blocks + 2 watermark > 12 — the plain gate agrees
+        assert!(!Admission::with_watermark(2).is_feasible(&pool, &kv, 1));
+        // but 8 of those blocks are the resident servable run: private
+        // lifetime = 12 − 8 = 4 blocks + 2 watermark fits easily
+        assert!(adm.is_feasible(&pool, &kv, 1), "covered tokens are not private peak");
+        assert_eq!(adm.blocks_required(&pool, &kv, 1), 2, "10 total − 8 shared");
+        // and it actually admits once the registrant's table frees up
+        {
+            let r = pool.get_mut(0);
+            r.prefilled = 144;
+            r.decoded = 4;
+        }
+        let blocks = pool.complete(0, 0.05);
+        kv.release_seq(blocks);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.1));
+        let r = pool.get(1);
+        assert_eq!(r.shared_blocks, 8);
+        assert_eq!(r.prefilled, 128, "the resident run serves the covered prefill");
+        // the rescue is NOT a blank check: the sharer's own table keeps
+        // the run resident, so a request whose run + private peak exceeds
+        // the pool can never complete as a sharer and stays infeasible —
+        // admitting it would livelock in grow/preempt/resume forever
+        let probe = RequestPool::from_specs(&[RequestSpec {
+            prompt_len: 160,
+            decode_len: 96, // peak 255 tokens: 8 run + 8 private > 12 blocks
+            arrival: 0.2,
+            prefix: Some(PrefixSpec { id: 11, len: 128 }),
+        }]);
+        assert!(!adm.is_feasible(&probe, &kv, 0), "run + private peak exceeds the pool");
+    }
+
+    /// A servable hit that could never complete AS A SHARER (run +
+    /// private peak > pool) but fits at full price must plan plain — the
+    /// cheaper up-front reservation would buy an endless
+    /// grow/preempt/resume livelock.
+    #[test]
+    fn sharer_infeasible_hit_pays_full_price_instead_of_livelocking() {
+        use crate::workload::PrefixSpec;
+        let reg = RequestSpec {
+            prompt_len: 48,
+            decode_len: 4,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id: 5, len: 40 }),
+        };
+        // peak 64 + 96 = 160 tokens = exactly the 10-block pool: feasible
+        // at full price, but as a sharer it would need the 3 pinned run
+        // blocks + 8 private (7 tail + 1 COW fork) = 11 > 10
+        let follower = RequestSpec {
+            prompt_len: 64,
+            decode_len: 97,
+            arrival: 0.1,
+            prefix: Some(PrefixSpec { id: 5, len: 40 }),
+        };
+        let mut pool = RequestPool::from_specs(&[reg, follower]);
+        let mut kv = KvManager::paged(10, 16);
+        let adm = Admission::default().with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        kv.mark_prefix_ready(5);
+        {
+            let r = pool.get_mut(0);
+            r.prefilled = 48;
+            r.decoded = 4;
+        }
+        let blocks = pool.complete(0, 0.05);
+        kv.release_seq(blocks);
+        assert!(adm.is_feasible(&pool, &kv, 1), "feasible at full price");
+        assert_eq!(adm.blocks_required(&pool, &kv, 1), 4, "plain reservation, no share");
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 0.1));
+        let r = pool.get(1);
+        assert_eq!(r.prefix_hits, 0, "the oversized sharer never shares");
+        assert_eq!(r.shared_blocks, 0);
+        assert_eq!(r.prefilled, 0, "no compute skip at full price");
     }
 
     #[test]

@@ -44,6 +44,13 @@ pub struct HybridScheduler {
     /// Serve prefix-tagged requests from the resident-prefix index
     /// (copy-on-write sharing over the paged pool). Off by default.
     prefix_share: bool,
+    /// Bounded cache-aware waiting: consecutive no-progress admission
+    /// attempts before a prefix waiter degrades to a full-price miss
+    /// (the fallback-policy knob; [`Admission::max_prefix_wait`]).
+    max_prefix_wait: usize,
+    /// Head-of-line bypass window behind a stalled prefix waiter
+    /// ([`Admission::bypass_window`]).
+    bypass_window: usize,
 }
 
 impl HybridScheduler {
@@ -61,6 +68,8 @@ impl HybridScheduler {
             tile: 0,
             infeasible: InfeasiblePolicy::Panic,
             prefix_share: false,
+            max_prefix_wait: Admission::DEFAULT_MAX_PREFIX_WAIT,
+            bypass_window: Admission::DEFAULT_BYPASS_WINDOW,
         }
     }
 
@@ -80,6 +89,19 @@ impl HybridScheduler {
         self
     }
 
+    /// Bounded-wait fallback knob: consecutive no-progress attempts
+    /// before a prefix waiter admits as a full-price miss.
+    pub fn with_max_prefix_wait(mut self, k: usize) -> Self {
+        self.max_prefix_wait = k;
+        self
+    }
+
+    /// Head-of-line bypass window behind a stalled prefix waiter.
+    pub fn with_bypass_window(mut self, window: usize) -> Self {
+        self.bypass_window = window;
+        self
+    }
+
     pub fn token_budget(&self) -> usize {
         self.token_budget
     }
@@ -94,6 +116,8 @@ impl Scheduler for HybridScheduler {
             .with_max_active(self.max_batch)
             .with_infeasible(self.infeasible)
             .with_prefix_share(self.prefix_share)
+            .with_max_prefix_wait(self.max_prefix_wait)
+            .with_bypass_window(self.bypass_window)
     }
 
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {

