@@ -47,4 +47,17 @@ echo "$WOUT" | grep -E 'prefix_fallbacks=[0-9]+' \
 grep -q '"prefix_fallbacks":' "$WTRACE" || { echo "JSONL lacks prefix_fallbacks"; exit 1; }
 rm -f "$WTRACE"
 
+echo "== smoke: multi-replica affinity router — hits in report, replica tags in JSONL =="
+RTRACE="$(mktemp -t router_trace.XXXXXX.jsonl)"
+ROUT="$(cargo run --release -- simulate --requests 240 --scheduler hybrid \
+    --block-size 32 --kv-blocks 32 --rate 24 \
+    --replicas 4 --router affinity \
+    --prefix-share --num-templates 8 --prefix-len 384 --json-out "$RTRACE")"
+echo "$ROUT" | grep -E 'prefix_hits=[1-9][0-9]*' \
+    || { echo "no aggregate prefix hits reported"; exit 1; }
+echo "$ROUT" | grep -E 'load_imbalance=[0-9.]+' \
+    || { echo "report lacks load_imbalance"; exit 1; }
+grep -q '"replica":' "$RTRACE" || { echo "JSONL lacks replica tags"; exit 1; }
+rm -f "$RTRACE"
+
 echo "CI gauntlet passed."

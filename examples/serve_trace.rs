@@ -65,6 +65,8 @@ fn main() -> Result<()> {
             preemption: sarathi::config::PreemptionMode::Swap,
             reject_infeasible: false,
             prefix_share: false,
+            max_prefix_wait: sarathi::coordinator::Admission::DEFAULT_MAX_PREFIX_WAIT,
+            bypass_window: sarathi::coordinator::Admission::DEFAULT_BYPASS_WINDOW,
         };
         let gen: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
         let mut engine = Engine::new(

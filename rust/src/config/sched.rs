@@ -111,10 +111,26 @@ pub struct SchedulerConfig {
     ///
     /// [`PrefixSpec`]: crate::workload::PrefixSpec
     pub prefix_share: bool,
+    /// Bounded cache-aware waiting (`--max-prefix-wait`): consecutive
+    /// no-progress admission attempts before a prefix waiter degrades to
+    /// a full-price miss. `0` = never wait — every would-be wait is an
+    /// immediate fallback ([`Admission::max_prefix_wait`]).
+    ///
+    /// [`Admission::max_prefix_wait`]:
+    ///     crate::coordinator::sched::Admission::max_prefix_wait
+    pub max_prefix_wait: usize,
+    /// Head-of-line bypass window behind an observably stalled prefix
+    /// waiter (`--bypass-window`). `0` = window closed — the strict FCFS
+    /// gate ([`Admission::bypass_window`]).
+    ///
+    /// [`Admission::bypass_window`]:
+    ///     crate::coordinator::sched::Admission::bypass_window
+    pub bypass_window: usize,
 }
 
 impl SchedulerConfig {
     pub fn sarathi(chunk_size: usize, max_batch: usize) -> Self {
+        use crate::coordinator::sched::Admission;
         SchedulerConfig {
             kind: SchedulerKind::Sarathi,
             chunk_size,
@@ -126,6 +142,8 @@ impl SchedulerConfig {
             preemption: PreemptionMode::Swap,
             reject_infeasible: false,
             prefix_share: false,
+            max_prefix_wait: Admission::DEFAULT_MAX_PREFIX_WAIT,
+            bypass_window: Admission::DEFAULT_BYPASS_WINDOW,
         }
     }
 
@@ -145,23 +163,16 @@ impl SchedulerConfig {
     /// [`with_block_size`](Self::with_block_size) to lift admission above
     /// the worst-case slot formula.
     pub fn hybrid(token_budget: usize, max_batch: usize) -> Self {
+        // watermark stays 0 for the degenerate slot layout (no growth, so
+        // nothing to reserve); with_block_size raises it — under the
+        // costed swap path, admitting to zero free blocks forces a
+        // preemption on the very next decode step, and each one now pays
+        // KV-bytes-over-PCIe, so a small standing reserve is cheaper than
+        // the transfer churn.
         SchedulerConfig {
             kind: SchedulerKind::Hybrid,
-            chunk_size: 0,
-            tile_align: 128,
-            max_batch,
             token_budget,
-            block_size: 0,
-            // 0 is right for the degenerate slot layout (no growth, so
-            // nothing to reserve); with_block_size raises it — under the
-            // costed swap path, admitting to zero free blocks forces a
-            // preemption on the very next decode step, and each one now
-            // pays KV-bytes-over-PCIe, so a small standing reserve is
-            // cheaper than the transfer churn.
-            watermark_blocks: 0,
-            preemption: PreemptionMode::Swap,
-            reject_infeasible: false,
-            prefix_share: false,
+            ..Self::sarathi(0, max_batch)
         }
     }
 
@@ -200,6 +211,18 @@ impl SchedulerConfig {
     /// (hybrid-only — `make_scheduler` asserts the pairing).
     pub fn with_prefix_share(mut self) -> Self {
         self.prefix_share = true;
+        self
+    }
+
+    /// Bounded-wait fallback knob (0 = never wait).
+    pub fn with_max_prefix_wait(mut self, k: usize) -> Self {
+        self.max_prefix_wait = k;
+        self
+    }
+
+    /// Head-of-line bypass window (0 = strict FCFS).
+    pub fn with_bypass_window(mut self, window: usize) -> Self {
+        self.bypass_window = window;
         self
     }
 }
@@ -264,5 +287,33 @@ mod tests {
         let c = SchedulerConfig::hybrid(256, 16).with_block_size(32).with_prefix_share();
         assert!(c.prefix_share);
         assert!(!SchedulerConfig::hybrid(256, 16).prefix_share);
+    }
+
+    /// The fallback-policy knobs default to the admission gate's values
+    /// and thread through `make_scheduler` into the hybrid gate — with
+    /// `0` keeping its admission semantics (never wait / window closed).
+    #[test]
+    fn prefix_wait_knobs_thread_into_the_admission_gate() {
+        use crate::coordinator::sched::{make_scheduler, Admission};
+        let c = SchedulerConfig::hybrid(256, 16);
+        assert_eq!(c.max_prefix_wait, Admission::DEFAULT_MAX_PREFIX_WAIT);
+        assert_eq!(c.bypass_window, Admission::DEFAULT_BYPASS_WINDOW);
+        let c = c
+            .with_block_size(32)
+            .with_prefix_share()
+            .with_max_prefix_wait(0)
+            .with_bypass_window(0);
+        let sched = make_scheduler(&c);
+        let gate = sched.admission();
+        assert_eq!(gate.max_prefix_wait, 0, "0 = never wait");
+        assert_eq!(gate.bypass_window, 0, "0 = strict FCFS gate");
+        assert!(gate.prefix_share);
+        // non-zero values thread unchanged
+        let gate = make_scheduler(
+            &SchedulerConfig::hybrid(256, 16).with_max_prefix_wait(3).with_bypass_window(7),
+        )
+        .admission();
+        assert_eq!(gate.max_prefix_wait, 3);
+        assert_eq!(gate.bypass_window, 7);
     }
 }

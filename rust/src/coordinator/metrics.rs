@@ -97,6 +97,42 @@ impl IterationRecord {
     pub fn ended_at(&self) -> f64 {
         self.started_at + self.elapsed + self.swap_time
     }
+
+    /// One JSON-Lines record. `replica` appends the cluster trace's
+    /// `"replica"` tag; `None` keeps the engine schema byte-identical.
+    pub fn to_jsonl(&self, idx: usize, replica: Option<usize>) -> String {
+        let core = format!(
+            "{{\"iter\":{},\"start\":{:.6},\"elapsed\":{:.6},\
+             \"prefill_chunks\":{},\"prefill_tokens\":{},\"decodes\":{},\
+             \"total_tokens\":{},\"kv_blocks_in_use\":{},\"kv_blocks_total\":{},\
+             \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{},\
+             \"swap_time\":{:.6},\"rejections\":{},\"prefix_hits\":{},\
+             \"prefix_fallbacks\":{},\"prefix_wait_iters\":{},\
+             \"shared_kv_tokens\":{}",
+            idx,
+            self.started_at,
+            self.elapsed,
+            self.shape.prefill.len(),
+            self.shape.prefill_tokens(),
+            self.shape.decode_tokens(),
+            self.shape.total_tokens(),
+            self.kv_blocks_in_use,
+            self.kv_blocks_total,
+            self.kv_frag_tokens,
+            self.n_active,
+            self.preemptions,
+            self.swap_time,
+            self.rejections,
+            self.prefix_hits,
+            self.prefix_fallbacks,
+            self.prefix_wait_iters,
+            self.shared_kv_tokens,
+        );
+        match replica {
+            Some(ri) => format!("{core},\"replica\":{ri}}}"),
+            None => format!("{core}}}"),
+        }
+    }
 }
 
 /// Percentile-queryable per-request latency summaries, computed from the
@@ -143,6 +179,17 @@ impl LatencyReport {
         }
         rep
     }
+}
+
+/// Create a trace file's parent directory if it names one (shared by
+/// every JSONL writer — engine metrics and the cluster's merged trace).
+pub fn ensure_parent_dir(path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    Ok(())
 }
 
 #[derive(Clone, Debug, Default)]
@@ -318,41 +365,10 @@ impl Metrics {
     /// trace idiom: shape, elapsed time, KV occupancy and preemptions per
     /// record, consumable by any ad-hoc analysis script.
     pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
+        ensure_parent_dir(path)?;
         let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
         for (i, r) in self.iterations.iter().enumerate() {
-            writeln!(
-                out,
-                "{{\"iter\":{},\"start\":{:.6},\"elapsed\":{:.6},\
-                 \"prefill_chunks\":{},\"prefill_tokens\":{},\"decodes\":{},\
-                 \"total_tokens\":{},\"kv_blocks_in_use\":{},\"kv_blocks_total\":{},\
-                 \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{},\
-                 \"swap_time\":{:.6},\"rejections\":{},\"prefix_hits\":{},\
-                 \"prefix_fallbacks\":{},\"prefix_wait_iters\":{},\
-                 \"shared_kv_tokens\":{}}}",
-                i,
-                r.started_at,
-                r.elapsed,
-                r.shape.prefill.len(),
-                r.shape.prefill_tokens(),
-                r.shape.decode_tokens(),
-                r.shape.total_tokens(),
-                r.kv_blocks_in_use,
-                r.kv_blocks_total,
-                r.kv_frag_tokens,
-                r.n_active,
-                r.preemptions,
-                r.swap_time,
-                r.rejections,
-                r.prefix_hits,
-                r.prefix_fallbacks,
-                r.prefix_wait_iters,
-                r.shared_kv_tokens,
-            )?;
+            writeln!(out, "{}", r.to_jsonl(i, None))?;
         }
         Ok(())
     }
@@ -512,6 +528,19 @@ mod tests {
         assert_eq!(rep.tbt.count(), 1);
         assert!((rep.tbt.mean() - 0.2).abs() < 1e-9);
         assert!((rep.normalized.mean() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_record_takes_an_optional_replica_tag() {
+        let r = rec(0.5, BatchShape::decode_only(&[4]), None);
+        let plain = r.to_jsonl(3, None);
+        assert!(plain.starts_with("{\"iter\":3,"));
+        assert!(!plain.contains("replica"), "engine schema is unchanged");
+        assert!(plain.ends_with('}'));
+        let tagged = r.to_jsonl(3, Some(2));
+        assert!(tagged.ends_with(",\"replica\":2}"));
+        // the tag is strictly additive: identical record prefix
+        assert_eq!(tagged[..plain.len() - 1], plain[..plain.len() - 1]);
     }
 
     #[test]

@@ -295,6 +295,14 @@ impl RequestPool {
         }
     }
 
+    /// All queued (unadmitted, non-terminal) ids, arrival-sorted — the
+    /// allocation-free counterpart of `in_phase(Phase::Queued)` (every
+    /// pending entry is Queued: admission, rejection and completion all
+    /// remove ids from the pending list).
+    pub fn queued_ids(&self) -> &[RequestId] {
+        &self.pending[self.pending_head..]
+    }
+
     /// Queued requests that have arrived by `now`, FCFS by arrival.
     /// O(result) thanks to the arrival-sorted pending list.
     pub fn arrived_queued(&self, now: f64) -> Vec<RequestId> {
@@ -391,8 +399,10 @@ mod tests {
         }
         assert_eq!(p.arrived_queued(0.5), vec![0]);
         assert_eq!(p.arrived_queued(5.0), vec![0, 1, 2]);
+        assert_eq!(p.queued_ids(), &[0, 1, 2]);
         p.admit(1, vec![0], 1.0);
         assert_eq!(p.in_phase(Phase::Prefill), vec![1]);
+        assert_eq!(p.queued_ids(), &[0, 2], "admission leaves the pending list");
         // request 1 was admitted; the next *queued* arrival is request 2
         assert_eq!(p.next_arrival(0.0), Some(2.0));
         assert!(!p.all_complete());

@@ -120,7 +120,9 @@ pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
             HybridScheduler::new(cfg.token_budget, cfg.max_batch, cfg.watermark_blocks)
                 .with_tile(cfg.tile_align)
                 .with_infeasible(infeasible)
-                .with_prefix_share(cfg.prefix_share),
+                .with_prefix_share(cfg.prefix_share)
+                .with_max_prefix_wait(cfg.max_prefix_wait)
+                .with_bypass_window(cfg.bypass_window),
         ),
     }
 }

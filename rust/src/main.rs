@@ -3,16 +3,23 @@
 //! Subcommands:
 //!   figures [all|fig3..fig13|table2|table4] [--out DIR]
 //!       regenerate the paper's tables/figures (prints rows, writes CSVs)
-//!   serve [--requests N] [--decode N] [--scheduler S] [--json-out PATH]
+//!   serve [--requests N] [--decode N] [--scheduler S] [--rate R]
+//!         [--json-out PATH]
 //!         [--prefix-share [--num-templates T] [--prefix-len L]]
+//!         [--max-prefix-wait K] [--bypass-window W]
 //!       serve a synthetic trace with the chosen policy. With the `pjrt`
 //!       feature the tiny model runs for real through PJRT
 //!       ([--artifacts DIR]); without it the calibrated cost model stands
-//!       in (LLaMA-13B on A6000).
+//!       in (LLaMA-13B on A6000). `--rate R` (cost-model path) switches
+//!       to open-loop Poisson arrivals at R req/s so the JSONL trace
+//!       captures idle-gap behavior; the default (0) keeps the seed's
+//!       all-at-t=0 closed loop.
 //!   simulate [--requests N] [--scheduler S] [--rate R] [--budget T]
 //!            [--block-size B] [--kv-blocks K] [--pp P]
+//!            [--replicas R [--router rr|jsq|affinity] [--spill-factor F]]
 //!            [--preemption swap|recompute]
 //!            [--prefix-share [--num-templates T] [--prefix-len L]]
+//!            [--max-prefix-wait K] [--bypass-window W]
 //!            [--json-out PATH]
 //!       engine-level simulation at scale: Zipf(0.4) lengths, Poisson
 //!       arrivals, paged KV — prints throughput and TTFT/TBT/normalized
@@ -20,8 +27,15 @@
 //!       runs through the pipeline-parallel simulator instead: P streams
 //!       over ONE shared KV pool per replica (paged under
 //!       `--scheduler hybrid --block-size N`), preemption swaps priced at
-//!       PCIe bandwidth, bubble accounting in the report. (The §5.3
-//!       GPT-3 cluster comparison lives under `figures fig12`.)
+//!       PCIe bandwidth, bubble accounting in the report. With
+//!       `--replicas R` (R > 1) the workload is served by a CLUSTER of R
+//!       identical replicas behind a request router (`--router`):
+//!       round-robin, join-shortest-queue by outstanding work, or
+//!       rendezvous-hash prefix affinity with a power-of-two load shed
+//!       (`--spill-factor`); the report gains the aggregate prefix-hit
+//!       rate, per-replica peak KV occupancy and the load-imbalance
+//!       statistic, and every JSONL record carries its `replica`. (The
+//!       §5.3 GPT-3 cluster comparison lives under `figures fig12`.)
 //!       `--prefix-share` switches the workload to template traffic — T
 //!       shared prompt prefixes of L tokens, Zipf request fanout — and
 //!       turns on copy-on-write prefix sharing over the paged block map
@@ -31,6 +45,10 @@
 //!       print the cost-model calibration summary
 //!
 //! Schedulers: sarathi | hybrid | orca-best | orca-worst | baseline.
+//! `--max-prefix-wait K` bounds cache-aware admission waits (K consecutive
+//! no-progress attempts degrade the waiter to a full-price miss; 0 = never
+//! wait); `--bypass-window W` lets up to W followers admit past an
+//! observably stalled waiting head (0 = strict FCFS).
 //! `--json-out` writes one JSON object per iteration (shape, elapsed, KV
 //! blocks in use, preemptions, swap time) — the simulator-trace idiom.
 //! Open-loop paths (`serve`, `simulate`) REJECT requests that could never
@@ -44,10 +62,10 @@ use sarathi::config::{
     SchedulerKind,
 };
 use sarathi::coordinator::{
-    make_scheduler, Engine, KvManager, LatencyReport, Metrics, RequestPool, SwapCost,
+    make_scheduler, Admission, Engine, KvManager, LatencyReport, Metrics, RequestPool, SwapCost,
 };
 use sarathi::figures;
-use sarathi::simulator::PipelineSim;
+use sarathi::simulator::{ClusterSim, PipelineSim, RouterKind};
 use sarathi::util::error::Result;
 use sarathi::util::Rng;
 use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
@@ -96,14 +114,17 @@ fn main() -> Result<()> {
                 "usage: sarathi <figures|serve|simulate|calibration> [options]\n\
                  \n\
                  figures [all|fig3..fig13|table2|table4] [--out DIR]\n\
-                 serve [--artifacts DIR] [--requests N] [--decode N]\n\
+                 serve [--artifacts DIR] [--requests N] [--decode N] [--rate R]\n\
                  \x20      [--scheduler sarathi|hybrid|orca-best|orca-worst|baseline]\n\
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
+                 \x20      [--max-prefix-wait K] [--bypass-window W]\n\
                  \x20      [--json-out PATH]\n\
                  simulate [--requests N] [--scheduler S] [--rate R] [--budget T]\n\
                  \x20      [--block-size B] [--kv-blocks K] [--pp P]\n\
+                 \x20      [--replicas R] [--router rr|jsq|affinity] [--spill-factor F]\n\
                  \x20      [--preemption swap|recompute]\n\
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
+                 \x20      [--max-prefix-wait K] [--bypass-window W]\n\
                  \x20      [--json-out PATH]\n\
                  calibration"
             );
@@ -211,6 +232,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
              feature); the real runtime serves one degenerate KV row per request"
         );
     }
+    if flag_value(args, "--rate").is_some() {
+        sarathi::bail!(
+            "--rate (open-loop Poisson arrivals) runs on the simulated clock — use \
+             the cost-model path (build without the pjrt feature)"
+        );
+    }
 
     let rt = ModelRuntime::load(&dir)?;
     println!("loaded {} artifacts on {}", rt.manifest.artifacts.len(), rt.platform());
@@ -244,6 +271,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         // serving stance: an oversized request is rejected, not a crash
         reject_infeasible: true,
         prefix_share: false,
+        max_prefix_wait: Admission::DEFAULT_MAX_PREFIX_WAIT,
+        bypass_window: Admission::DEFAULT_BYPASS_WINDOW,
     };
 
     let gen_reqs: Vec<GenRequest> = prompts.iter().map(|p| GenRequest::new(p.clone())).collect();
@@ -288,6 +317,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let block_size: usize = parse_flag(args, "--block-size", 0)?;
     let preemption = preemption_mode(args)?;
     let prefix = PrefixOpts::parse(args)?;
+    // 0 (the default) keeps the seed's closed loop: everything at t=0
+    let rate: f64 = parse_flag(args, "--rate", 0.0)?;
+    if rate < 0.0 {
+        sarathi::bail!("--rate must be non-negative");
+    }
+    let wait = WaitOpts::parse(args)?;
 
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
     let b = d.max_batch_size();
@@ -322,6 +357,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             })
             .collect()
     };
+    // open-loop serving: Poisson arrivals instead of the all-at-t=0
+    // closed loop, so the trace shows idle-gap (steady-state) behavior
+    let specs = if rate > 0.0 {
+        with_poisson_arrivals(&mut rng, specs, rate)
+    } else {
+        specs
+    };
 
     let budget: usize = parse_flag(args, "--budget", 256)?.max(2 * b);
     let cfg = SchedulerConfig {
@@ -335,6 +377,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         preemption,
         reject_infeasible: true,
         prefix_share: prefix.share,
+        max_prefix_wait: wait.max_prefix_wait,
+        bypass_window: wait.bypass_window,
     };
     let kv = if paged {
         KvManager::paged(d.kv_blocks(block_size), block_size)
@@ -351,8 +395,38 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     )
     .with_swap_cost(SwapCost::for_deployment(&d, preemption));
     engine.run();
-    println!("scheduler={} requests={n} effective_token_budget={}", kind.name(), cfg.token_budget);
+    println!(
+        "scheduler={} requests={n} effective_token_budget={} arrivals={}",
+        kind.name(),
+        cfg.token_budget,
+        if rate > 0.0 { format!("poisson {rate} req/s") } else { "closed-loop t=0".into() },
+    );
     report_run(&engine, json_out.as_deref())
+}
+
+/// `--max-prefix-wait` / `--bypass-window` fallback-policy knobs shared by
+/// serve/simulate (the PR-4 ROADMAP follow-up): how long cache-aware
+/// admission waits on an in-flight prefix fill before degrading to a
+/// full-price miss, and how many followers may bypass a stalled waiting
+/// head. `0` keeps its admission-gate semantics — never wait / window
+/// closed.
+#[derive(Clone, Copy, Debug)]
+struct WaitOpts {
+    max_prefix_wait: usize,
+    bypass_window: usize,
+}
+
+impl WaitOpts {
+    fn parse(args: &[String]) -> Result<Self> {
+        Ok(WaitOpts {
+            max_prefix_wait: parse_flag(
+                args,
+                "--max-prefix-wait",
+                Admission::DEFAULT_MAX_PREFIX_WAIT,
+            )?,
+            bypass_window: parse_flag(args, "--bypass-window", Admission::DEFAULT_BYPASS_WINDOW)?,
+        })
+    }
 }
 
 /// `--prefix-share` workload options shared by serve/simulate: template
@@ -425,6 +499,11 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let n: usize = parse_flag(args, "--requests", 2000)?;
     let kind = scheduler_kind(args, "hybrid")?;
     let rate: f64 = parse_flag(args, "--rate", 1.5)?;
+    if rate <= 0.0 {
+        // rng.exp(0) would hand every request a +inf arrival and the run
+        // would "succeed" with garbage — simulate is inherently open-loop
+        sarathi::bail!("--rate must be positive (simulate is open-loop; serve does closed-loop)");
+    }
     let budget: usize = parse_flag(args, "--budget", 256)?;
     let block_size: usize = parse_flag(args, "--block-size", 32)?;
     // 0 = size the paged pool from the deployment's real KV budget; a
@@ -432,9 +511,28 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     // wedge-regression smoke runs)
     let kv_blocks: usize = parse_flag(args, "--kv-blocks", 0)?;
     let pp: usize = parse_flag(args, "--pp", 1)?;
+    let replicas: usize = parse_flag(args, "--replicas", 1)?;
+    if replicas == 0 {
+        sarathi::bail!("--replicas must be at least 1");
+    }
+    let router_name = flag_value(args, "--router").unwrap_or_else(|| "rr".to_string());
+    let router_kind = RouterKind::parse(&router_name)
+        .ok_or_else(|| sarathi::err!("unknown router {router_name} (try: rr, jsq, affinity)"))?;
+    let spill_factor: f64 = parse_flag(args, "--spill-factor", 1.0)?;
+    if spill_factor < 0.0 {
+        sarathi::bail!("--spill-factor must be non-negative");
+    }
+    // silently measuring "affinity routing" on a single engine would be
+    // worse than an error (same stance as the --prefix-share pairing rule)
+    if replicas == 1
+        && (flag_value(args, "--router").is_some() || flag_value(args, "--spill-factor").is_some())
+    {
+        sarathi::bail!("--router/--spill-factor need --replicas > 1 (routing is a cluster layer)");
+    }
     let preemption = preemption_mode(args)?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
     let prefix = PrefixOpts::parse(args)?;
+    let wait = WaitOpts::parse(args)?;
     if prefix.share && !(kind == SchedulerKind::Hybrid && block_size > 0) {
         sarathi::bail!(
             "--prefix-share requires --scheduler hybrid with --block-size > 0 \
@@ -442,9 +540,27 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         );
     }
 
+    if replicas > 1 {
+        return simulate_cluster(SimOpts {
+            n,
+            kind,
+            rate,
+            budget,
+            block_size,
+            kv_blocks,
+            pp,
+            replicas,
+            router_kind,
+            spill_factor,
+            preemption,
+            prefix,
+            wait,
+            json_out,
+        });
+    }
     if pp > 1 {
         return simulate_pipeline(
-            n, kind, rate, budget, block_size, kv_blocks, pp, preemption, prefix, json_out,
+            n, kind, rate, budget, block_size, kv_blocks, pp, preemption, prefix, wait, json_out,
         );
     }
 
@@ -474,6 +590,8 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         preemption,
         reject_infeasible: true,
         prefix_share: prefix.share,
+        max_prefix_wait: wait.max_prefix_wait,
+        bypass_window: wait.bypass_window,
     };
 
     println!(
@@ -517,6 +635,7 @@ fn simulate_pipeline(
     pp: usize,
     preemption: PreemptionMode,
     prefix: PrefixOpts,
+    wait: WaitOpts,
     json_out: Option<PathBuf>,
 ) -> Result<()> {
     use sarathi::costmodel::CostModel;
@@ -552,6 +671,8 @@ fn simulate_pipeline(
         preemption,
         reject_infeasible: true,
         prefix_share: prefix.share,
+        max_prefix_wait: wait.max_prefix_wait,
+        bypass_window: wait.bypass_window,
     };
     println!(
         "LLaMA-13B on A6000, PP={pp}: {n} requests, {}, Poisson {rate} req/s, \
@@ -596,6 +717,152 @@ fn simulate_pipeline(
         res.total_bubble,
     );
     report_latency(&res.latency, &res.metrics, json_out.as_deref())
+}
+
+/// Options bundle for the cluster-mode simulate (keeps the argument list
+/// within clippy's bounds and the call site readable).
+struct SimOpts {
+    n: usize,
+    kind: SchedulerKind,
+    rate: f64,
+    budget: usize,
+    block_size: usize,
+    kv_blocks: usize,
+    pp: usize,
+    replicas: usize,
+    router_kind: RouterKind,
+    spill_factor: f64,
+    preemption: PreemptionMode,
+    prefix: PrefixOpts,
+    wait: WaitOpts,
+    json_out: Option<PathBuf>,
+}
+
+/// Cluster-mode simulate: `replicas` identical PP=`pp` LLaMA-13B replica
+/// groups behind a request router. Requests are dispatched one at a time
+/// in arrival order by the chosen policy over every replica's cache-aware
+/// outstanding work; each replica runs the same scheduler stack as the
+/// pipeline path over its own shared KV pool. Template traffic arrives in
+/// per-template bursts (the temporal locality a prefix-affinity router
+/// exploits); untagged traffic degenerates to the plain Poisson process.
+fn simulate_cluster(o: SimOpts) -> Result<()> {
+    use sarathi::workload::with_template_burst_arrivals;
+
+    let SimOpts {
+        n,
+        kind,
+        rate,
+        budget,
+        block_size,
+        kv_blocks,
+        pp,
+        replicas,
+        router_kind,
+        spill_factor,
+        preemption,
+        prefix,
+        wait,
+        json_out,
+    } = o;
+    let model = ModelConfig::llama13b();
+    if model.n_layers % pp != 0 {
+        sarathi::bail!("--pp {pp} must divide {} layers", model.n_layers);
+    }
+    let d = Deployment::new(model, GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, pp).with_replicas(replicas));
+    let b = d.max_batch_size();
+    let mut rng = Rng::new(7);
+    let pop = prefix.population(&mut rng, n);
+    let pop = with_template_burst_arrivals(&mut rng, pop, rate, 6);
+
+    let paged = kind == SchedulerKind::Hybrid && block_size > 0;
+    let cfg = SchedulerConfig {
+        kind,
+        chunk_size: 256,
+        tile_align: 128,
+        max_batch: b,
+        token_budget: budget.max(2 * b),
+        block_size: if paged { block_size } else { 0 },
+        watermark_blocks: if paged { 2 } else { 0 },
+        preemption,
+        reject_infeasible: true,
+        prefix_share: prefix.share,
+        max_prefix_wait: wait.max_prefix_wait,
+        bypass_window: wait.bypass_window,
+    };
+    let blocks = if kv_blocks > 0 { kv_blocks } else { d.kv_blocks(block_size.max(1)) };
+    println!(
+        "LLaMA-13B on A6000, {replicas} replicas x PP={pp}: {n} requests, {}, \
+         Poisson {rate} req/s (template bursts of 6), router={} spill_factor={spill_factor} \
+         scheduler={} effective_token_budget={} {}",
+        prefix.describe(),
+        router_kind.name(),
+        kind.name(),
+        cfg.token_budget,
+        if paged {
+            format!("(per-replica paged KV: {blocks} blocks x {block_size} tokens)")
+        } else {
+            format!("(per-replica slot KV: {} slots)", pp.max(1) * b)
+        }
+    );
+
+    let cluster =
+        ClusterSim::new(d.clone()).with_swap_cost(SwapCost::for_deployment(&d, preemption));
+    let mut router = router_kind.build(spill_factor);
+    let t0 = std::time::Instant::now();
+    let res = cluster.run_routed(
+        &pop,
+        &mut *router,
+        || {
+            if paged {
+                KvManager::paged(blocks, block_size)
+            } else {
+                KvManager::new(pp.max(1) * b)
+            }
+        },
+        Some(b),
+        || make_scheduler(&cfg),
+    );
+    println!("simulated in {:.2}s wall", t0.elapsed().as_secs_f64());
+
+    let rejections: usize = res.per_replica.iter().map(|r| r.metrics.rejections).sum();
+    println!(
+        "makespan={:.2}s micro_batches={} preemptions={} rejections={rejections} \
+         swap_time={:.3}s",
+        res.makespan,
+        res.total_iterations(),
+        res.preemptions(),
+        res.total_swap_time(),
+    );
+    println!(
+        "prefix_hits={} prefix_hit_rate={:.3} prefix_fallbacks={} load_imbalance={:.3}",
+        res.prefix_hits(),
+        res.prefix_hit_rate(),
+        res.prefix_fallbacks(),
+        res.load_imbalance(),
+    );
+    println!(
+        "per_replica peak_kv_blocks={:?} mean_outstanding_tokens={:?}",
+        res.peak_kv_blocks_per_replica(),
+        res.mean_outstanding.iter().map(|x| x.round() as i64).collect::<Vec<_>>(),
+    );
+    let lat = res.latency();
+    let pct = |s: &sarathi::util::Summary| (s.percentile(50.0) * 1e3, s.percentile(99.0) * 1e3);
+    let (t50, t99) = pct(&lat.ttft);
+    println!("ttft_ms p50={t50:.1} p99={t99:.1}");
+    let (b50, b99) = pct(&lat.tbt);
+    println!("tbt_ms p50={b50:.1} p99={b99:.1}");
+    let (n50, n99) = pct(&lat.normalized);
+    println!("normalized_latency_ms_per_token p50={n50:.1} p99={n99:.1}");
+    if lat.prefix_wait.count() > 0 {
+        let (w50, w99) = pct(&lat.prefix_wait);
+        println!("prefix_wait_ms p50={w50:.1} p99={w99:.1} waiters={}", lat.prefix_wait.count());
+    }
+    if let Some(path) = json_out {
+        res.write_jsonl(&path)?;
+        println!("trace: {} replica-tagged records -> {}", res.total_iterations(), path.display());
+    }
+    Ok(())
 }
 
 fn cmd_calibration() -> Result<()> {

@@ -1,7 +1,31 @@
 //! Replica-level cluster simulation (§5.3's third scenario: 8 independent
-//! TP-8 replicas on the same 64 GPUs as the TP8×PP8 deployment).
+//! TP-8 replicas on the same 64 GPUs as the TP8×PP8 deployment), now
+//! driven by **arrival-order request routing** over interleaved replica
+//! execution.
+//!
+//! The seed assigned requests to replicas statically (`g % R` at
+//! construction) and ran each replica's whole partition to completion in
+//! isolation, so no dispatch policy could react to observed load or cache
+//! residency. [`ClusterSim::run_routed`] instead advances all replicas'
+//! event clocks together under one global time order and dispatches each
+//! request at its arrival instant through a [`RoutePolicy`] that sees a
+//! consistent snapshot of every replica's cache-aware outstanding work —
+//! the cluster-scale composition point for everything the per-replica
+//! stack already does (paged KV, hybrid scheduling, COW prefix sharing,
+//! bounded waits with fallback). [`RoundRobin`] routing reproduces the
+//! old static partition byte-for-byte on arrival-sorted workloads, so the
+//! Fig.-12 comparisons are unchanged.
+//!
+//! Stall resolution is cluster-aware: a replica whose streams all stall
+//! mid-run is left dormant while arrivals remain (a future dispatch may
+//! wake it — under the old static partition the replica could *see* its
+//! future arrivals and idle on them); once the arrival stream is
+//! exhausted, each stalled replica resolves exactly like the
+//! single-replica driver — demote the oldest prefix waiter to a
+//! full-price fallback, else panic "pipeline wedged".
 
-use super::pipeline::{PipelineResult, PipelineSim};
+use super::pipeline::{PipelineResult, PipelineRun, PipelineSim, StallOutcome};
+use super::router::{ReplicaView, RoundRobin, RoutePolicy};
 use crate::config::Deployment;
 use crate::coordinator::{KvManager, Scheduler};
 use crate::costmodel::CostModel;
@@ -14,6 +38,15 @@ pub struct ClusterResult {
     pub per_replica: Vec<PipelineResult>,
     pub completions: Vec<f64>,
     pub makespan: f64,
+    /// Which replica served each request (original spec order).
+    pub replica_of: Vec<usize>,
+    /// Dispatch-sampled mean outstanding work per replica: after every
+    /// routing decision the driver snapshots each replica's cache-aware
+    /// outstanding tokens; these are the per-replica means over all
+    /// samples — the basis of [`load_imbalance`](Self::load_imbalance).
+    pub mean_outstanding: Vec<f64>,
+    /// Name of the routing policy that produced this result.
+    pub router: &'static str,
 }
 
 impl ClusterResult {
@@ -36,13 +69,18 @@ impl ClusterResult {
         curve.get(n - 1).map(|&(_, t)| t).unwrap_or(f64::NAN)
     }
 
-    /// Merged latency report across replicas.
+    /// Merged latency report across replicas — sample-exact (every
+    /// replica's samples concatenated, so merged percentiles equal
+    /// percentiles over the pooled samples; replicas need no common
+    /// clock origin). Regression note: this used to drop the
+    /// `prefix_wait` histogram on the floor.
     pub fn latency(&self) -> crate::coordinator::LatencyReport {
         let mut merged = crate::coordinator::LatencyReport::default();
         for rep in &self.per_replica {
             merged.ttft.merge(&rep.latency.ttft);
             merged.tbt.merge(&rep.latency.tbt);
             merged.normalized.merge(&rep.latency.normalized);
+            merged.prefix_wait.merge(&rep.latency.prefix_wait);
         }
         merged
     }
@@ -56,10 +94,80 @@ impl ClusterResult {
     pub fn total_swap_time(&self) -> f64 {
         self.per_replica.iter().map(|r| r.metrics.total_swap_time()).sum()
     }
+
+    /// Aggregate prefix-cache-hit admissions across replicas.
+    pub fn prefix_hits(&self) -> usize {
+        self.per_replica.iter().map(|r| r.metrics.prefix_hits).sum()
+    }
+
+    /// Aggregate bounded-wait fallbacks across replicas.
+    pub fn prefix_fallbacks(&self) -> usize {
+        self.per_replica.iter().map(|r| r.metrics.prefix_fallbacks).sum()
+    }
+
+    /// Cross-replica prefix-hit rate: hit admissions per dispatched
+    /// request (> 1.0 is possible under heavy preemption re-admission).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.completions.is_empty() {
+            0.0
+        } else {
+            self.prefix_hits() as f64 / self.completions.len() as f64
+        }
+    }
+
+    /// Peak KV occupancy (blocks) per replica.
+    pub fn peak_kv_blocks_per_replica(&self) -> Vec<usize> {
+        self.per_replica.iter().map(|r| r.metrics.peak_kv_blocks_in_use()).collect()
+    }
+
+    /// Load imbalance: max / mean of the per-replica mean outstanding
+    /// work ([`mean_outstanding`](Self::mean_outstanding)). 1.0 is perfect
+    /// balance; an idle cluster (all means zero) reports 1.0.
+    pub fn load_imbalance(&self) -> f64 {
+        let n = self.mean_outstanding.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let sum: f64 = self.mean_outstanding.iter().sum();
+        if sum <= 0.0 {
+            return 1.0;
+        }
+        let max = self.mean_outstanding.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        max / (sum / n as f64)
+    }
+
+    /// Write the merged per-micro-batch trace as JSON-Lines, each record
+    /// tagged with its `replica` (the engine's schema plus that one
+    /// field), ordered by record start time across replicas.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write as _;
+        crate::coordinator::metrics::ensure_parent_dir(path)?;
+        // (start, replica, replica-local index) orders the merged trace
+        let mut order: Vec<(f64, usize, usize)> = Vec::new();
+        for (ri, rep) in self.per_replica.iter().enumerate() {
+            for (i, rec) in rep.metrics.iterations.iter().enumerate() {
+                order.push((rec.started_at, ri, i));
+            }
+        }
+        order.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        });
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for (_, ri, i) in order {
+            let rec = &self.per_replica[ri].metrics.iterations[i];
+            writeln!(out, "{}", rec.to_jsonl(i, Some(ri)))?;
+        }
+        Ok(())
+    }
+
+    /// Total records across replicas (the merged JSONL line count).
+    pub fn total_iterations(&self) -> usize {
+        self.per_replica.iter().map(|r| r.metrics.iterations.len()).sum()
+    }
 }
 
-/// A deployment of `replicas` identical tp×pp groups sharing a workload
-/// round-robin.
+/// A deployment of `replicas` identical tp×pp groups serving a shared
+/// workload through a routing policy.
 pub struct ClusterSim {
     pub deployment: Deployment,
     pub sims: Vec<PipelineSim>,
@@ -86,8 +194,8 @@ impl ClusterSim {
 
     /// Run the workload over the seed-compatible degenerate layout: each
     /// replica shares one pool of `pp × B` whole-request slots across its
-    /// streams (per-stream cap B). Requests are assigned to replicas
-    /// round-robin; `make_sched` builds one scheduler per stream.
+    /// streams (per-stream cap B). Requests are dispatched round-robin in
+    /// arrival order; `make_sched` builds one scheduler per stream.
     pub fn run<'a, F>(&self, specs: &[RequestSpec], mut make_sched: F) -> ClusterResult
     where
         F: FnMut() -> Box<dyn Scheduler + 'a>,
@@ -101,7 +209,7 @@ impl ClusterSim {
     /// deployment's actual KV memory budget — the pool a real stage
     /// holds, NOT the seed's pp×-overcommitted per-stream slots. Streams
     /// stay capped at B sequences each; cross-stream preemption and the
-    /// engine-shared state transition come from `PipelineSim::run_shared`.
+    /// engine-shared state transition come from the shared `PipelineRun`.
     pub fn run_paged<'a, F>(
         &self,
         specs: &[RequestSpec],
@@ -121,35 +229,168 @@ impl ClusterSim {
         )
     }
 
-    /// Shared driver: one fresh KV pool per replica from `make_kv`.
+    /// Round-robin compatibility driver: one fresh KV pool per replica
+    /// from `make_kv`, dispatch in arrival order. Identical to the old
+    /// static `g % R` partition for arrival-sorted workloads. Load
+    /// tracking is OFF on this path — round-robin reads no views, and
+    /// the figure-harness workloads (all arrivals at t=0) would pay an
+    /// O(N²) backlog scan for statistics nobody reads; `mean_outstanding`
+    /// stays zero and `load_imbalance()` reports the degenerate 1.0.
     pub fn run_with_kv<'a, F, K>(
         &self,
         specs: &[RequestSpec],
+        make_kv: K,
+        per_stream_cap: Option<usize>,
+        make_sched: F,
+    ) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        K: FnMut() -> KvManager,
+    {
+        let mut rr = RoundRobin::new();
+        self.dispatch(specs, &mut rr, make_kv, per_stream_cap, make_sched, false)
+    }
+
+    /// The routed cluster driver. Requests are dispatched ONE AT A TIME in
+    /// arrival order (stable on ties by spec index): the driver advances
+    /// whichever replica has the earliest pending event until the next
+    /// arrival instant is reached, snapshots every replica's cache-aware
+    /// outstanding work, and asks `router` for the target replica — so a
+    /// policy always sees replica state as of the arrival, never the
+    /// future. Per-replica execution is the engine-shared `PipelineRun`
+    /// (per-stream schedulers over ONE shared pool from `make_kv`).
+    pub fn run_routed<'a, F, K>(
+        &self,
+        specs: &[RequestSpec],
+        router: &mut dyn RoutePolicy,
+        make_kv: K,
+        per_stream_cap: Option<usize>,
+        make_sched: F,
+    ) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        K: FnMut() -> KvManager,
+    {
+        self.dispatch(specs, router, make_kv, per_stream_cap, make_sched, true)
+    }
+
+    /// Shared dispatch loop. `track_load` gates the per-dispatch replica
+    /// snapshots (views + imbalance samples): the routed entry point pays
+    /// for them, the round-robin compatibility path skips them.
+    fn dispatch<'a, F, K>(
+        &self,
+        specs: &[RequestSpec],
+        router: &mut dyn RoutePolicy,
         mut make_kv: K,
         per_stream_cap: Option<usize>,
         mut make_sched: F,
+        track_load: bool,
     ) -> ClusterResult
     where
         F: FnMut() -> Box<dyn Scheduler + 'a>,
         K: FnMut() -> KvManager,
     {
         let r = self.sims.len();
-        let mut result = ClusterResult {
-            completions: vec![f64::NAN; specs.len()],
-            ..Default::default()
-        };
-        for (ri, sim) in self.sims.iter().enumerate() {
-            let mut local: Vec<RequestSpec> = Vec::new();
-            let mut globals: Vec<usize> = Vec::new();
-            for (g, &s) in specs.iter().enumerate() {
-                if g % r == ri {
-                    local.push(s);
-                    globals.push(g);
+        assert!(r > 0, "cluster needs at least one replica");
+        let mut runs: Vec<PipelineRun> = Vec::with_capacity(r);
+        for sim in &self.sims {
+            runs.push(PipelineRun::new(sim, make_kv(), per_stream_cap, &mut make_sched));
+        }
+        // per-replica: run-local result index → original spec index
+        let mut globals: Vec<Vec<usize>> = vec![Vec::new(); r];
+        let mut replica_of = vec![0usize; specs.len()];
+        // dispatch order: (arrival, spec index), stable on 0.0 ties
+        let mut order: Vec<usize> = (0..specs.len()).collect();
+        order.sort_by(|&a, &b| {
+            specs[a].arrival.partial_cmp(&specs[b].arrival).unwrap().then(a.cmp(&b))
+        });
+        let mut cursor = 0usize;
+        let mut out_sums = vec![0.0f64; r];
+        let mut samples = 0usize;
+        // what a views-blind policy (round-robin compatibility path) sees:
+        // hoisted so the untracked dispatch loop never allocates
+        let blank_views = vec![ReplicaView::default(); r];
+
+        loop {
+            // earliest replica event vs next arrival; arrivals win ties so
+            // admission at time t always sees requests that arrived at t
+            let next_ev: Option<(f64, usize)> = runs
+                .iter()
+                .enumerate()
+                .filter_map(|(ri, run)| run.next_event_time().map(|t| (t, ri)))
+                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let next_arr = if cursor < order.len() {
+                Some(specs[order[cursor]].arrival)
+            } else {
+                None
+            };
+
+            let route_now = match (next_ev, next_arr) {
+                (_, None) => false,
+                (None, Some(_)) => true,
+                (Some((t, _)), Some(arr)) => arr <= t,
+            };
+            if route_now {
+                let g = order[cursor];
+                cursor += 1;
+                let scans = track_load.then(|| {
+                    runs.iter()
+                        .map(|run| ReplicaView { outstanding_tokens: run.outstanding_tokens() })
+                        .collect::<Vec<_>>()
+                });
+                let views: &[ReplicaView] = scans.as_deref().unwrap_or(&blank_views);
+                let ri = router.route(&specs[g], views).min(r - 1);
+                let local = runs[ri].push(specs[g]);
+                debug_assert_eq!(local, globals[ri].len());
+                globals[ri].push(g);
+                replica_of[g] = ri;
+                if track_load {
+                    // imbalance statistic: post-dispatch snapshot. Only
+                    // the routed replica changed, so reuse the routing
+                    // views for the rest instead of rescanning.
+                    for (i, view) in views.iter().enumerate() {
+                        out_sums[i] += if i == ri {
+                            runs[ri].outstanding_tokens() as f64
+                        } else {
+                            view.outstanding_tokens as f64
+                        };
+                    }
+                    samples += 1;
+                }
+            } else if let Some((_, ri)) = next_ev {
+                runs[ri].step();
+            } else {
+                // no timed events anywhere and no arrivals left: resolve
+                // per-replica stalls like the single-replica driver (each
+                // demotion retires one waiter, so this terminates)
+                let mut progressed = false;
+                for run in runs.iter_mut() {
+                    match run.resolve_stall() {
+                        StallOutcome::Demoted => progressed = true,
+                        StallOutcome::Wedged => run.panic_wedged(),
+                        StallOutcome::Idle => {}
+                    }
+                }
+                if !progressed {
+                    break;
                 }
             }
-            let res = sim.run_shared(&local, make_kv(), per_stream_cap, &mut make_sched);
-            for (li, &g) in globals.iter().enumerate() {
-                result.completions[g] = res.completions[li];
+        }
+
+        let mut result = ClusterResult {
+            completions: vec![f64::NAN; specs.len()],
+            replica_of,
+            mean_outstanding: out_sums
+                .into_iter()
+                .map(|s| s / samples.max(1) as f64)
+                .collect(),
+            router: router.name(),
+            ..Default::default()
+        };
+        for (ri, run) in runs.into_iter().enumerate() {
+            let res = run.finish();
+            for (local, &g) in globals[ri].iter().enumerate() {
+                result.completions[g] = res.completions[local];
             }
             result.makespan = result.makespan.max(res.makespan);
             result.per_replica.push(res);
@@ -190,6 +431,10 @@ mod tests {
         let res = cluster.run(&specs, || Box::new(OrcaScheduler::best(11)));
         assert!(res.completions.iter().all(|t| !t.is_nan()));
         assert_eq!(res.per_replica.len(), 8);
+        assert_eq!(res.router, "rr");
+        // round-robin dispatch in arrival order == g % R on this all-at-0
+        // workload
+        assert!(res.replica_of.iter().enumerate().all(|(g, &ri)| ri == g % 8));
         let curve = res.completion_curve();
         assert_eq!(curve.len(), 64);
         assert!(curve.windows(2).all(|w| w[0].1 <= w[1].1));
@@ -224,7 +469,8 @@ mod tests {
 
     /// Prefix sharing rides the same paged per-replica pools: each replica
     /// keeps its own resident-prefix index (round-robin splits a template's
-    /// fanout across replicas, so every replica registers it once).
+    /// fanout across replicas, so every replica registers it once — the
+    /// dispatch-layer waste `PrefixAffinity` exists to remove).
     #[test]
     fn paged_cluster_serves_shared_prefix_templates() {
         use crate::coordinator::sched::HybridScheduler;
@@ -236,8 +482,8 @@ mod tests {
             Box::new(HybridScheduler::new(256, 27, 2).with_prefix_share(true))
         });
         assert!(res.completions.iter().all(|t| !t.is_nan()));
-        let hits: usize = res.per_replica.iter().map(|r| r.metrics.prefix_hits).sum();
-        assert!(hits > 0, "template fanout must hit every replica's index");
+        assert!(res.prefix_hits() > 0, "template fanout must hit every replica's index");
+        assert!(res.prefix_hit_rate() > 0.0);
     }
 
     /// §5.3's ordering: SARATHI TP-PP beats TP-only, which beats Orca TP-PP.
@@ -257,5 +503,21 @@ mod tests {
             tp_only.makespan,
             orca.makespan
         );
+    }
+
+    #[test]
+    fn load_imbalance_degenerate_cases() {
+        let res = ClusterResult::default();
+        assert_eq!(res.load_imbalance(), 1.0, "no replicas = balanced");
+        let res = ClusterResult {
+            mean_outstanding: vec![0.0, 0.0],
+            ..Default::default()
+        };
+        assert_eq!(res.load_imbalance(), 1.0, "idle cluster = balanced");
+        let res = ClusterResult {
+            mean_outstanding: vec![300.0, 100.0, 100.0, 100.0],
+            ..Default::default()
+        };
+        assert!((res.load_imbalance() - 2.0).abs() < 1e-12, "300 / mean 150");
     }
 }

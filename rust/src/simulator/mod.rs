@@ -2,12 +2,23 @@
 //!
 //! * [`pipeline`] — discrete-event pipeline-parallel execution with
 //!   per-stage occupancy tracking and bubble accounting (PB1/PB2/PB3 of
-//!   Fig. 5 all emerge from micro-batch time variance).
-//! * [`cluster`] — replica-level deployment: R independent tp×pp groups
-//!   serving a shared workload (the Fig. 12 comparison set).
+//!   Fig. 5 all emerge from micro-batch time variance), exposed both as a
+//!   run-to-completion driver and as the resumable [`PipelineRun`]
+//!   stepping API.
+//! * [`router`] — cluster-level dispatch policies: round-robin,
+//!   join-shortest-queue by outstanding work, and rendezvous-hash prefix
+//!   affinity with a power-of-two load shed.
+//! * [`cluster`] — replica-level deployment: R identical tp×pp groups
+//!   serving a shared workload through a routing policy under one global
+//!   event clock (the Fig. 12 comparison set, now dispatch-aware).
 
 pub mod cluster;
 pub mod pipeline;
+pub mod router;
 
 pub use cluster::{ClusterResult, ClusterSim};
-pub use pipeline::{PipelineResult, PipelineSim, TraceEvent};
+pub use pipeline::{PipelineResult, PipelineRun, PipelineSim, StallOutcome, TraceEvent};
+pub use router::{
+    rendezvous_rank, rendezvous_top2, LeastOutstandingTokens, PrefixAffinity, ReplicaView,
+    RoundRobin, RoutePolicy, RouterKind,
+};

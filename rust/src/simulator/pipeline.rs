@@ -41,6 +41,15 @@
 //! stream's `Apply` frees blocks; if every unfinished stream is stalled at
 //! once the run panics loudly ("pipeline wedged") instead of silently
 //! dropping requests into NaN completions, mirroring `Engine::run`.
+//!
+//! The whole event loop lives in [`PipelineRun`], a *resumable* stepping
+//! API: requests are `push`ed (round-robin across streams), events are
+//! processed one at a time via `step`, and stall resolution (cache-wait
+//! demotion vs the wedged panic) is an explicit caller decision. This is
+//! what lets [`crate::simulator::ClusterSim`] interleave R replica runs
+//! under one global clock and dispatch arrivals by a routing policy;
+//! [`PipelineSim::run_shared`] is the single-replica driver over the same
+//! machinery.
 
 use crate::coordinator::{
     Batch, IterationRecord, KvManager, LatencyReport, Metrics, RequestPool, Scheduler,
@@ -130,6 +139,10 @@ impl PipelineResult {
 enum Event {
     /// Ready to admit + compose its next micro-batch.
     Schedule(f64),
+    /// Nothing schedulable until the stream's next KNOWN arrival — same
+    /// processing as `Schedule`, but a later `push` may legitimately pull
+    /// it earlier (a busy-until `Schedule` after an `Apply` may not).
+    Idle(f64),
     /// A micro-batch in flight: advance state when it exits the last stage.
     Apply {
         at: f64,
@@ -143,10 +156,25 @@ enum Event {
         prefix_wait_iters: usize,
     },
     /// Live requests but nothing schedulable; woken by any other stream's
-    /// Apply (which may free blocks). All-streams-stalled = wedged.
+    /// Apply (which may free blocks) or by a routed arrival. All streams
+    /// stalled with no waiter to demote = wedged.
     Stalled,
     /// Every request terminal.
     Done,
+}
+
+/// How a fully-stalled run was resolved by [`PipelineRun::resolve_stall`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallOutcome {
+    /// No stream is stalled: the run is simply out of events (done, or
+    /// waiting for the caller to push more arrivals).
+    Idle,
+    /// A cache-wait cycle was broken: the oldest prefix waiter was demoted
+    /// to a full-price fallback and every stalled stream was woken.
+    Demoted,
+    /// Every unfinished stream is stalled with NO waiter to demote — the
+    /// caller should fail loudly via [`PipelineRun::panic_wedged`].
+    Wedged,
 }
 
 /// Pipeline-parallel simulator for one replica.
@@ -223,314 +251,492 @@ impl PipelineSim {
     pub fn run_shared<'a, F>(
         &self,
         specs: &[RequestSpec],
-        mut kv: KvManager,
+        kv: KvManager,
         per_stream_cap: Option<usize>,
         mut make_sched: F,
     ) -> PipelineResult
     where
         F: FnMut() -> Box<dyn Scheduler + 'a>,
     {
-        let n_streams = self.pp.max(1);
-        // partition requests round-robin across streams
-        let mut pools: Vec<RequestPool> = (0..n_streams).map(|_| RequestPool::new()).collect();
-        let mut scheds: Vec<Box<dyn Scheduler + 'a>> =
-            (0..n_streams).map(|_| make_sched()).collect();
-        let mut global_ids: Vec<Vec<usize>> = vec![Vec::new(); n_streams];
-        for (g, &spec) in specs.iter().enumerate() {
-            pools[g % n_streams].push(spec);
-            global_ids[g % n_streams].push(g);
+        let mut run = PipelineRun::new(self, kv, per_stream_cap, &mut make_sched);
+        for &spec in specs {
+            run.push(spec);
         }
+        loop {
+            if run.step() {
+                continue;
+            }
+            match run.resolve_stall() {
+                StallOutcome::Demoted => continue,
+                StallOutcome::Wedged => run.panic_wedged(),
+                StallOutcome::Idle => break,
+            }
+        }
+        run.finish()
+    }
+}
 
-        let mut events: Vec<Event> = (0..n_streams).map(|_| Event::Schedule(0.0)).collect();
-        // swap-in time charged by admission while no batch ran yet; carried
-        // to the stream's next micro-batch
-        let mut pending_swap_in = vec![0.0f64; n_streams];
-        // prefix-cache hits observed at admission, attached to the
-        // stream's next micro-batch record (same carry as swap-in)
-        let mut pending_prefix_hits = vec![0usize; n_streams];
-        // bounded-wait fallbacks and wait ticks, same carry
-        let mut pending_prefix_fallbacks = vec![0usize; n_streams];
-        let mut pending_wait_ticks = vec![0usize; n_streams];
-        // latest simulated time any event was processed at — the wake
-        // time for wedge demotion
-        let mut clock = 0.0f64;
-        let mut stage_free = vec![0.0f64; self.pp];
-        let mut stage_used = vec![false; self.pp];
-        let mut result = PipelineResult {
-            completions: vec![f64::NAN; specs.len()],
-            bubble_per_request: vec![0.0; specs.len()],
-            first_tokens: vec![f64::NAN; specs.len()],
-            prefix_fallback: vec![false; specs.len()],
-            ..Default::default()
+/// One replica's in-flight pipeline execution, advanced one event at a
+/// time. Owns the per-stream pools/schedulers, the shared KV pool and the
+/// accumulating [`PipelineResult`]; the driver (single-replica
+/// [`PipelineSim::run_shared`] or the cluster's routed dispatch) decides
+/// when to step, when to push arrivals, and how to resolve stalls.
+pub struct PipelineRun<'a, 'b> {
+    sim: &'b PipelineSim,
+    n_streams: usize,
+    per_stream_cap: Option<usize>,
+    pools: Vec<RequestPool>,
+    scheds: Vec<Box<dyn Scheduler + 'a>>,
+    kv: KvManager,
+    events: Vec<Event>,
+    /// Swap-in time charged by admission while no batch ran yet; carried
+    /// to the stream's next micro-batch.
+    pending_swap_in: Vec<f64>,
+    /// Prefix-cache hits observed at admission, attached to the stream's
+    /// next micro-batch record (same carry as swap-in).
+    pending_prefix_hits: Vec<usize>,
+    /// Bounded-wait fallbacks and wait ticks, same carry.
+    pending_prefix_fallbacks: Vec<usize>,
+    pending_wait_ticks: Vec<usize>,
+    /// Latest simulated time any event was processed at — the wake time
+    /// for wedge demotion and the floor for pushed arrivals.
+    clock: f64,
+    stage_free: Vec<f64>,
+    stage_used: Vec<bool>,
+    /// Per stream: stream-local request id → run-local result index.
+    global_ids: Vec<Vec<usize>>,
+    /// Round-robin cursor for `push`'s stream assignment.
+    next_stream: usize,
+    result: PipelineResult,
+}
+
+impl<'a, 'b> PipelineRun<'a, 'b> {
+    /// Fresh run over `kv`, one scheduler per stream from `make_sched`.
+    pub fn new<F>(
+        sim: &'b PipelineSim,
+        kv: KvManager,
+        per_stream_cap: Option<usize>,
+        make_sched: &mut F,
+    ) -> Self
+    where
+        F: FnMut() -> Box<dyn Scheduler + 'a>,
+    {
+        let n_streams = sim.pp.max(1);
+        PipelineRun {
+            sim,
+            n_streams,
+            per_stream_cap,
+            pools: (0..n_streams).map(|_| RequestPool::new()).collect(),
+            scheds: (0..n_streams).map(|_| make_sched()).collect(),
+            kv,
+            events: (0..n_streams).map(|_| Event::Schedule(0.0)).collect(),
+            pending_swap_in: vec![0.0; n_streams],
+            pending_prefix_hits: vec![0; n_streams],
+            pending_prefix_fallbacks: vec![0; n_streams],
+            pending_wait_ticks: vec![0; n_streams],
+            clock: 0.0,
+            stage_free: vec![0.0; sim.pp],
+            stage_used: vec![false; sim.pp],
+            global_ids: vec![Vec::new(); n_streams],
+            next_stream: 0,
+            result: PipelineResult::default(),
+        }
+    }
+
+    /// Add a request to the run (streams are filled round-robin in push
+    /// order — the same `local % pp` partition the batch driver used).
+    /// Returns the run-local result index. Waking is only ever *earlier*:
+    /// a Done/Stalled stream re-schedules at the arrival, an idle-until
+    /// stream's wake moves up; a busy stream's pending events stand.
+    pub fn push(&mut self, spec: RequestSpec) -> usize {
+        let si = self.next_stream;
+        self.next_stream = (self.next_stream + 1) % self.n_streams;
+        let local = self.result.completions.len();
+        self.pools[si].push(spec);
+        self.global_ids[si].push(local);
+        self.result.completions.push(f64::NAN);
+        self.result.bubble_per_request.push(0.0);
+        self.result.first_tokens.push(f64::NAN);
+        self.result.prefix_fallback.push(false);
+        let at = spec.arrival.max(self.clock);
+        let wake_at = match &self.events[si] {
+            Event::Done | Event::Stalled => Some(at),
+            Event::Idle(t) if at < *t => Some(at),
+            _ => None,
+        };
+        if let Some(w) = wake_at {
+            self.events[si] = Event::Idle(w);
+        }
+        local
+    }
+
+    /// Earliest pending (timed) event across streams, if any. `None` means
+    /// every stream is Done or Stalled — the caller either pushes more
+    /// arrivals or resolves the stall.
+    pub fn next_event_time(&self) -> Option<f64> {
+        let mut min_t: Option<f64> = None;
+        for ev in &self.events {
+            let t = match ev {
+                Event::Schedule(t) | Event::Idle(t) => *t,
+                Event::Apply { at, .. } => *at,
+                Event::Stalled | Event::Done => continue,
+            };
+            min_t = Some(match min_t {
+                None => t,
+                Some(m) => m.min(t),
+            });
+        }
+        min_t
+    }
+
+    /// True when every request ever pushed reached a terminal state.
+    pub fn is_complete(&self) -> bool {
+        self.pools.iter().all(|p| p.all_complete())
+    }
+
+    /// Cache-aware outstanding work: prefill + decode tokens this replica
+    /// still has to COMPUTE for its non-terminal requests. Queued
+    /// prefix-tagged requests are discounted by their template's resident
+    /// coverage (they will skip it at admission — `lookup_prefix` counts a
+    /// still-filling run, mirroring the admission gate's rescue) — the
+    /// "dispatched minus completed work" load estimate routing policies
+    /// balance on. A nominal-token estimate would overstate a prefix-warm
+    /// replica's load 3-4× and mis-route around exactly the replicas that
+    /// serve template traffic cheapest.
+    pub fn outstanding_tokens(&self) -> usize {
+        let mut total = 0;
+        // non-terminal = admitted (active list) + queued (pending list);
+        // scanning those instead of every request ever keeps the routed
+        // dispatch loop O(live), not O(history)
+        for pool in &self.pools {
+            for &id in pool.active_ids() {
+                let r = pool.get(id);
+                total += r.spec.prompt_len.saturating_sub(r.prefilled)
+                    + r.spec.decode_len.saturating_sub(r.decoded);
+            }
+            for &id in pool.queued_ids() {
+                let r = pool.get(id);
+                let mut eff = r.prefilled;
+                if !r.prefix_fallback {
+                    if let Some(pfx) = r.spec.prefix {
+                        if let Some((cov, _)) = self.kv.lookup_prefix(pfx.id) {
+                            eff = eff.max(cov.min(r.spec.prompt_len.saturating_sub(1)));
+                        }
+                    }
+                }
+                total += r.spec.prompt_len.saturating_sub(eff)
+                    + r.spec.decode_len.saturating_sub(r.decoded);
+            }
+        }
+        total
+    }
+
+    /// Process the single earliest pending event. Returns false when no
+    /// stream has a timed event (all Done/Stalled) — the caller then
+    /// pushes more arrivals or calls [`resolve_stall`](Self::resolve_stall).
+    pub fn step(&mut self) -> bool {
+        // next event in global time order; Apply beats Schedule on ties
+        // (its completions free blocks "at that instant"), lowest stream
+        // index breaks the rest
+        let mut pick: Option<(f64, u8, usize)> = None;
+        for (i, ev) in self.events.iter().enumerate() {
+            let key = match ev {
+                Event::Schedule(t) | Event::Idle(t) => (*t, 1u8, i),
+                Event::Apply { at, .. } => (*at, 0u8, i),
+                Event::Stalled | Event::Done => continue,
+            };
+            let better = match pick {
+                None => true,
+                Some(p) => key < p,
+            };
+            if better {
+                pick = Some(key);
+            }
+        }
+        let Some((_, _, si)) = pick else {
+            return false;
         };
 
-        loop {
-            // next event in global time order; Apply beats Schedule on
-            // ties (its completions free blocks "at that instant"), lowest
-            // stream index breaks the rest
-            let mut pick: Option<(f64, u8, usize)> = None;
-            let mut stalled = 0usize;
-            let mut live = 0usize;
-            for (i, ev) in events.iter().enumerate() {
-                let key = match ev {
-                    Event::Schedule(t) => Some((*t, 1u8, i)),
-                    Event::Apply { at, .. } => Some((*at, 0u8, i)),
-                    Event::Stalled => {
-                        stalled += 1;
-                        live += 1;
-                        None
-                    }
-                    Event::Done => None,
-                };
-                if let Some(k) = key {
-                    live += 1;
-                    let better = match pick {
-                        None => true,
-                        Some(p) => k < p,
-                    };
-                    if better {
-                        pick = Some(k);
-                    }
-                }
-            }
-            let Some((_, _, si)) = pick else {
-                if stalled > 0 {
-                    // wedge demotion: if any stream's queue still holds a
-                    // request waiting on an in-flight prefix fill, the
-                    // stall is a cache-wait cycle, not a true wedge (the
-                    // ROADMAP's multi-template cross-stream preemption
-                    // hole). Force the OLDEST waiter's full-price
-                    // fallback and wake every stalled stream; each
-                    // demotion permanently retires one waiter, so this
-                    // cannot loop forever.
-                    let waiter = pools
-                        .iter()
-                        .enumerate()
-                        .filter_map(|(pi, p)| p.oldest_prefix_waiter().map(|id| (pi, id)))
-                        .min_by(|&(pa, a), &(pb, b)| {
-                            pools[pa]
-                                .get(a)
-                                .arrival
-                                .partial_cmp(&pools[pb].get(b).arrival)
-                                .unwrap()
-                                .then(pa.cmp(&pb))
-                                .then(a.cmp(&b))
-                        });
-                    if let Some((pi, id)) = waiter {
-                        pools[pi].force_prefix_fallback(id, clock);
-                        for ev in events.iter_mut() {
-                            if matches!(ev, Event::Stalled) {
-                                *ev = Event::Schedule(clock);
-                            }
-                        }
-                        continue;
-                    }
-                    // every unfinished stream is stalled with NO waiter to
-                    // demote: admitted-but-unschedulable or queued-but-
-                    // starved requests that no future event can unblock.
-                    // Fail loudly like Engine::run's "engine wedged" panic
-                    // — a silent `done` here would leave NaN completions
-                    // behind.
-                    let detail: Vec<String> = pools
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, p)| !p.all_complete())
-                        .map(|(i, p)| {
-                            let left = p
-                                .iter()
-                                .filter(|r| r.completed_at.is_none() && r.rejected_at.is_none())
-                                .count();
-                            format!("stream {i}: {} active, {left} incomplete", p.active_count())
-                        })
-                        .collect();
-                    let waiting: usize = pools.iter().map(|p| p.prefix_waiting_count()).sum();
-                    panic!(
-                        "pipeline wedged: {stalled}/{live} streams stalled with work left ({}); \
-                         kv {}/{} blocks in use ({} free + {} reclaimable), {waiting} queued \
-                         requests blocked on a prefix fill",
-                        detail.join("; "),
-                        kv.allocated(),
-                        kv.capacity(),
-                        kv.available(),
-                        kv.reclaimable(),
-                    );
-                }
-                break; // all streams done
+        match std::mem::replace(&mut self.events[si], Event::Done) {
+            Event::Schedule(now) | Event::Idle(now) => self.process_schedule(si, now),
+            Event::Apply {
+                at,
+                batch,
+                shape,
+                started_at,
+                stage_time,
+                swap_in,
+                prefix_hits,
+                prefix_fallbacks,
+                prefix_wait_iters,
+            } => self.process_apply(
+                si,
+                at,
+                batch,
+                shape,
+                started_at,
+                stage_time,
+                swap_in,
+                prefix_hits,
+                prefix_fallbacks,
+                prefix_wait_iters,
+            ),
+            Event::Stalled | Event::Done => unreachable!("picked a non-runnable event"),
+        }
+        true
+    }
+
+    fn process_schedule(&mut self, si: usize, now: f64) {
+        self.clock = self.clock.max(now);
+        // admission: the stream's own policy (dispatching any custom
+        // `admit_capped` override, e.g. request-level batching) plus the
+        // per-stream cap over the SHARED pool
+        self.scheds[si].admit_capped(&mut self.pools[si], &mut self.kv, now, self.per_stream_cap);
+        self.result.metrics.rejections += self.pools[si].take_rejected_events();
+        self.pending_prefix_hits[si] += self.pools[si].take_prefix_hits();
+        self.pending_prefix_fallbacks[si] += self.pools[si].take_prefix_fallbacks();
+        self.pending_wait_ticks[si] += self.pools[si].take_prefix_wait_ticks();
+        self.pending_swap_in[si] +=
+            self.sim.applier.swap.swap_in_time(self.pools[si].take_swapped_in_tokens());
+
+        let batch = self.scheds[si].compose(&mut self.pools[si], &mut self.kv, now);
+        if batch.is_empty() {
+            self.events[si] = if self.pools[si].all_complete() || self.pools[si].is_empty() {
+                Event::Done
+            } else if let Some(t) = self.pools[si].next_arrival(now) {
+                Event::Idle(t)
+            } else {
+                Event::Stalled
             };
+            return;
+        }
 
-            match std::mem::replace(&mut events[si], Event::Done) {
-                Event::Schedule(now) => {
-                    clock = clock.max(now);
-                    // admission: the stream's own policy (dispatching any
-                    // custom `admit_capped` override, e.g. request-level
-                    // batching) plus the per-stream cap over the SHARED
-                    // pool
-                    scheds[si].admit_capped(&mut pools[si], &mut kv, now, per_stream_cap);
-                    result.metrics.rejections += pools[si].take_rejected_events();
-                    pending_prefix_hits[si] += pools[si].take_prefix_hits();
-                    pending_prefix_fallbacks[si] += pools[si].take_prefix_fallbacks();
-                    pending_wait_ticks[si] += pools[si].take_prefix_wait_ticks();
-                    pending_swap_in[si] +=
-                        self.applier.swap.swap_in_time(pools[si].take_swapped_in_tokens());
-
-                    let batch = scheds[si].compose(&mut pools[si], &mut kv, now);
-                    if batch.is_empty() {
-                        events[si] = if pools[si].all_complete() || pools[si].is_empty() {
-                            Event::Done
-                        } else if let Some(t) = pools[si].next_arrival(now) {
-                            Event::Schedule(t)
-                        } else {
-                            Event::Stalled
-                        };
-                        continue;
-                    }
-
-                    let shape = batch.shape(&pools[si]);
-                    let stage_time = self.profiler.predict(&shape);
-                    let tokens = shape.total_tokens();
-                    // a resumed victim's KV transfer delays entry to stage 0
-                    let t_swap_in = std::mem::take(&mut pending_swap_in[si]);
-                    let t_prefix_hits = std::mem::take(&mut pending_prefix_hits[si]);
-                    let t_fallbacks = std::mem::take(&mut pending_prefix_fallbacks[si]);
-                    let t_wait_ticks = std::mem::take(&mut pending_wait_ticks[si]);
-                    let mut bubble_this_mb = 0.0;
-                    let mut t_in = now + t_swap_in;
-                    for j in 0..self.pp {
-                        let start = t_in.max(stage_free[j]);
-                        let mut gap = 0.0;
-                        if stage_used[j] {
-                            gap = (start - stage_free[j]).max(0.0);
-                            if gap > 0.0 {
-                                bubble_this_mb += gap;
-                                result.total_bubble += gap;
-                            }
-                        }
-                        let end = start + stage_time;
-                        if self.trace {
-                            result.trace.push(TraceEvent {
-                                micro_batch: result.micro_batches,
-                                stream: si,
-                                stage: j,
-                                start,
-                                end,
-                                gap,
-                                tokens: (shape.prefill_tokens(), shape.decode_tokens()),
-                            });
-                        }
-                        result.total_busy += stage_time;
-                        stage_free[j] = end;
-                        stage_used[j] = true;
-                        t_in = end + self.p2p_time(tokens);
-                    }
-                    let finish = t_in - self.p2p_time(tokens); // exit of last stage
-
-                    // attribute this micro-batch's bubbles to its requests
-                    for &req in &batch.requests() {
-                        result.bubble_per_request[global_ids[si][req]] += bubble_this_mb;
-                    }
-                    result.micro_batches += 1;
-                    events[si] = Event::Apply {
-                        at: finish,
-                        batch,
-                        shape,
-                        started_at: now,
-                        stage_time,
-                        swap_in: t_swap_in,
-                        prefix_hits: t_prefix_hits,
-                        prefix_fallbacks: t_fallbacks,
-                        prefix_wait_iters: t_wait_ticks,
-                    };
+        let shape = batch.shape(&self.pools[si]);
+        let stage_time = self.sim.profiler.predict(&shape);
+        let tokens = shape.total_tokens();
+        // a resumed victim's KV transfer delays entry to stage 0
+        let t_swap_in = std::mem::take(&mut self.pending_swap_in[si]);
+        let t_prefix_hits = std::mem::take(&mut self.pending_prefix_hits[si]);
+        let t_fallbacks = std::mem::take(&mut self.pending_prefix_fallbacks[si]);
+        let t_wait_ticks = std::mem::take(&mut self.pending_wait_ticks[si]);
+        let mut bubble_this_mb = 0.0;
+        let mut t_in = now + t_swap_in;
+        for j in 0..self.sim.pp {
+            let start = t_in.max(self.stage_free[j]);
+            let mut gap = 0.0;
+            if self.stage_used[j] {
+                gap = (start - self.stage_free[j]).max(0.0);
+                if gap > 0.0 {
+                    bubble_this_mb += gap;
+                    self.result.total_bubble += gap;
                 }
-                Event::Apply {
-                    at: finish,
-                    batch,
-                    shape,
-                    started_at,
-                    stage_time,
-                    swap_in,
-                    prefix_hits,
-                    prefix_fallbacks,
-                    prefix_wait_iters,
-                } => {
-                    clock = clock.max(finish);
-                    // requests executing in OTHER streams' in-flight
-                    // micro-batches are not preemptible (their KV is under
-                    // the running kernel)
-                    let in_flight: Vec<(usize, usize)> = events
-                        .iter()
-                        .enumerate()
-                        .flat_map(|(j, ev)| {
-                            let reqs = match ev {
-                                Event::Apply { batch, .. } => batch.requests(),
-                                _ => Vec::new(),
-                            };
-                            reqs.into_iter().map(move |r| (j, r))
-                        })
-                        .collect();
-                    // the engine-shared state transition: progress, token
-                    // stamps, completions, growth, cross-stream preemption
-                    let effects = self
-                        .applier
-                        .apply_guarded(&mut pools, si, &mut kv, &batch, finish, &in_flight);
-                    for local in &effects.finished {
-                        result.completions[global_ids[si][*local]] = finish;
-                    }
-                    // occupancy counts shared-prefix content once: private
-                    // live tokens + the allocator's resident-prefix tokens
-                    let private_live: usize =
-                        pools.iter().map(|p| p.live_private_kv_tokens()).sum();
-                    result.metrics.record(IterationRecord {
-                        started_at,
-                        elapsed: stage_time,
-                        shape,
-                        prefill_alone: None,
-                        breakdown: None,
-                        kv_blocks_in_use: kv.allocated(),
-                        kv_blocks_total: kv.capacity(),
-                        n_active: pools.iter().map(|p| p.active_count()).sum(),
-                        preemptions: effects.preemptions,
-                        kv_frag_tokens: kv.internal_fragmentation(private_live),
-                        swap_time: swap_in + effects.swap_time,
-                        rejections: 0,
-                        prefix_hits,
-                        prefix_fallbacks,
-                        prefix_wait_iters,
-                        shared_kv_tokens: pools.iter().map(|p| p.shared_kv_tokens()).sum(),
-                    });
-                    result.makespan = result.makespan.max(finish);
-                    // swap-out transfers delay this stream's next schedule
-                    events[si] = Event::Schedule(finish + effects.swap_time);
-                    // freed blocks may unblock stalled streams: retry them
-                    for (j, ev) in events.iter_mut().enumerate() {
-                        if j != si && matches!(ev, Event::Stalled) {
-                            *ev = Event::Schedule(finish);
-                        }
-                    }
-                }
-                Event::Stalled | Event::Done => unreachable!("picked a non-runnable event"),
+            }
+            let end = start + stage_time;
+            if self.sim.trace {
+                self.result.trace.push(TraceEvent {
+                    micro_batch: self.result.micro_batches,
+                    stream: si,
+                    stage: j,
+                    start,
+                    end,
+                    gap,
+                    tokens: (shape.prefill_tokens(), shape.decode_tokens()),
+                });
+            }
+            self.result.total_busy += stage_time;
+            self.stage_free[j] = end;
+            self.stage_used[j] = true;
+            t_in = end + self.sim.p2p_time(tokens);
+        }
+        let finish = t_in - self.sim.p2p_time(tokens); // exit of last stage
+
+        // attribute this micro-batch's bubbles to its requests
+        for &req in &batch.requests() {
+            self.result.bubble_per_request[self.global_ids[si][req]] += bubble_this_mb;
+        }
+        self.result.micro_batches += 1;
+        self.events[si] = Event::Apply {
+            at: finish,
+            batch,
+            shape,
+            started_at: now,
+            stage_time,
+            swap_in: t_swap_in,
+            prefix_hits: t_prefix_hits,
+            prefix_fallbacks: t_fallbacks,
+            prefix_wait_iters: t_wait_ticks,
+        };
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn process_apply(
+        &mut self,
+        si: usize,
+        finish: f64,
+        batch: Batch,
+        shape: BatchShape,
+        started_at: f64,
+        stage_time: f64,
+        swap_in: f64,
+        prefix_hits: usize,
+        prefix_fallbacks: usize,
+        prefix_wait_iters: usize,
+    ) {
+        self.clock = self.clock.max(finish);
+        // requests executing in OTHER streams' in-flight micro-batches are
+        // not preemptible (their KV is under the running kernel)
+        let in_flight: Vec<(usize, usize)> = self
+            .events
+            .iter()
+            .enumerate()
+            .flat_map(|(j, ev)| {
+                let reqs = match ev {
+                    Event::Apply { batch, .. } => batch.requests(),
+                    _ => Vec::new(),
+                };
+                reqs.into_iter().map(move |r| (j, r))
+            })
+            .collect();
+        // the engine-shared state transition: progress, token stamps,
+        // completions, growth, cross-stream preemption
+        let effects = self.sim.applier.apply_guarded(
+            &mut self.pools,
+            si,
+            &mut self.kv,
+            &batch,
+            finish,
+            &in_flight,
+        );
+        for local in &effects.finished {
+            self.result.completions[self.global_ids[si][*local]] = finish;
+        }
+        // occupancy counts shared-prefix content once: private live tokens
+        // + the allocator's resident-prefix tokens
+        let private_live: usize = self.pools.iter().map(|p| p.live_private_kv_tokens()).sum();
+        self.result.metrics.record(IterationRecord {
+            started_at,
+            elapsed: stage_time,
+            shape,
+            prefill_alone: None,
+            breakdown: None,
+            kv_blocks_in_use: self.kv.allocated(),
+            kv_blocks_total: self.kv.capacity(),
+            n_active: self.pools.iter().map(|p| p.active_count()).sum(),
+            preemptions: effects.preemptions,
+            kv_frag_tokens: self.kv.internal_fragmentation(private_live),
+            swap_time: swap_in + effects.swap_time,
+            rejections: 0,
+            prefix_hits,
+            prefix_fallbacks,
+            prefix_wait_iters,
+            shared_kv_tokens: self.pools.iter().map(|p| p.shared_kv_tokens()).sum(),
+        });
+        self.result.makespan = self.result.makespan.max(finish);
+        // swap-out transfers delay this stream's next schedule
+        self.events[si] = Event::Schedule(finish + effects.swap_time);
+        // freed blocks may unblock stalled streams: retry them
+        for (j, ev) in self.events.iter_mut().enumerate() {
+            if j != si && matches!(ev, Event::Stalled) {
+                *ev = Event::Schedule(finish);
             }
         }
-        // flush wait/fallback events observed after each stream's last
-        // recorded micro-batch (e.g. a wedge demotion right before the
-        // end) so the totals stay exact even without a carrier record
-        for (si, pool) in pools.iter_mut().enumerate() {
-            result.metrics.prefix_fallbacks +=
-                pending_prefix_fallbacks[si] + pool.take_prefix_fallbacks();
-            result.metrics.prefix_wait_iterations +=
-                pending_wait_ticks[si] + pool.take_prefix_wait_ticks();
+    }
+
+    /// Resolve a no-timed-events state: if any stream is stalled and some
+    /// queued request waits on an in-flight prefix fill, the stall is a
+    /// cache-wait cycle, not a true wedge (the ROADMAP's multi-template
+    /// cross-stream preemption hole) — force the OLDEST waiter's
+    /// full-price fallback and wake every stalled stream; each demotion
+    /// permanently retires one waiter, so repeated resolution terminates.
+    pub fn resolve_stall(&mut self) -> StallOutcome {
+        if !self.events.iter().any(|ev| matches!(ev, Event::Stalled)) {
+            return StallOutcome::Idle;
         }
-        // per-request liveness outcome, in global (spec) order
-        for (si, pool) in pools.iter().enumerate() {
+        let waiter = self
+            .pools
+            .iter()
+            .enumerate()
+            .filter_map(|(pi, p)| p.oldest_prefix_waiter().map(|id| (pi, id)))
+            .min_by(|&(pa, a), &(pb, b)| {
+                self.pools[pa]
+                    .get(a)
+                    .arrival
+                    .partial_cmp(&self.pools[pb].get(b).arrival)
+                    .unwrap()
+                    .then(pa.cmp(&pb))
+                    .then(a.cmp(&b))
+            });
+        let Some((pi, id)) = waiter else {
+            return StallOutcome::Wedged;
+        };
+        let clock = self.clock;
+        self.pools[pi].force_prefix_fallback(id, clock);
+        for ev in self.events.iter_mut() {
+            if matches!(ev, Event::Stalled) {
+                *ev = Event::Schedule(clock);
+            }
+        }
+        StallOutcome::Demoted
+    }
+
+    /// Every unfinished stream is stalled with NO waiter to demote:
+    /// admitted-but-unschedulable or queued-but-starved requests that no
+    /// future event can unblock. Fail loudly like `Engine::run`'s "engine
+    /// wedged" panic — a silent `done` here would leave NaN completions
+    /// behind.
+    pub fn panic_wedged(&self) -> ! {
+        // only reachable once no timed events remain, so every live
+        // stream is stalled — one count tells the whole story
+        let stalled = self.events.iter().filter(|ev| matches!(ev, Event::Stalled)).count();
+        let detail: Vec<String> = self
+            .pools
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !p.all_complete())
+            .map(|(i, p)| {
+                let left = p
+                    .iter()
+                    .filter(|r| r.completed_at.is_none() && r.rejected_at.is_none())
+                    .count();
+                format!("stream {i}: {} active, {left} incomplete", p.active_count())
+            })
+            .collect();
+        let waiting: usize = self.pools.iter().map(|p| p.prefix_waiting_count()).sum();
+        panic!(
+            "pipeline wedged: {stalled} streams stalled with work left ({}); \
+             kv {}/{} blocks in use ({} free + {} reclaimable), {waiting} queued \
+             requests blocked on a prefix fill",
+            detail.join("; "),
+            self.kv.allocated(),
+            self.kv.capacity(),
+            self.kv.available(),
+            self.kv.reclaimable(),
+        );
+    }
+
+    /// Finish the run: flush wait/fallback events observed after each
+    /// stream's last recorded micro-batch (e.g. a wedge demotion right
+    /// before the end) so the totals stay exact even without a carrier
+    /// record, then collect per-request outcomes and the latency report.
+    pub fn finish(mut self) -> PipelineResult {
+        for (si, pool) in self.pools.iter_mut().enumerate() {
+            self.result.metrics.prefix_fallbacks +=
+                self.pending_prefix_fallbacks[si] + pool.take_prefix_fallbacks();
+            self.result.metrics.prefix_wait_iterations +=
+                self.pending_wait_ticks[si] + pool.take_prefix_wait_ticks();
+        }
+        // per-request liveness outcome, in run-local (push) order
+        for (si, pool) in self.pools.iter().enumerate() {
             for r in pool.iter() {
-                let g = global_ids[si][r.id];
+                let g = self.global_ids[si][r.id];
                 if let Some(t) = r.first_token_at {
-                    result.first_tokens[g] = t;
+                    self.result.first_tokens[g] = t;
                 }
-                result.prefix_fallback[g] = r.prefix_fallback;
+                self.result.prefix_fallback[g] = r.prefix_fallback;
             }
         }
-        result.latency = LatencyReport::from_pools(&pools);
-        result
+        self.result.latency = LatencyReport::from_pools(&self.pools);
+        self.result
     }
 }
 
@@ -793,5 +999,37 @@ mod tests {
         assert_eq!(res.metrics.prefix_hits, 0, "the run never became servable");
         assert!(res.metrics.prefix_wait_iterations > 0);
         assert_eq!(res.prefix_fallback, vec![false, true, true]);
+    }
+
+    /// The resumable stepping API underlying both drivers: pushes wake
+    /// idle streams, `next_event_time` exposes the replica clock, and the
+    /// cache-aware outstanding-work estimate discounts queued template
+    /// traffic by resident coverage.
+    #[test]
+    fn pipeline_run_steps_incrementally_with_late_pushes() {
+        let sim = PipelineSim::new(gpt3_profiler(1), 1);
+        let mut make =
+            || Box::new(SarathiScheduler::new(256, 8, 128)) as Box<dyn Scheduler>;
+        let mut run = PipelineRun::new(&sim, KvManager::new(8), Some(8), &mut make);
+        assert_eq!(run.outstanding_tokens(), 0);
+        let spec = RequestSpec { prompt_len: 100, decode_len: 10, arrival: 0.0, prefix: None };
+        run.push(spec);
+        assert_eq!(run.outstanding_tokens(), 110);
+        // drive to quiescence
+        while run.step() {}
+        assert_eq!(run.resolve_stall(), StallOutcome::Idle);
+        assert!(run.is_complete());
+        assert_eq!(run.outstanding_tokens(), 0);
+        let t1 = run.next_event_time();
+        assert!(t1.is_none(), "no events left after completion");
+        // a late push wakes the Done stream at its arrival
+        let late = RequestSpec { prompt_len: 50, decode_len: 5, arrival: 100.0, prefix: None };
+        run.push(late);
+        assert_eq!(run.next_event_time(), Some(100.0));
+        while run.step() {}
+        let res = run.finish();
+        assert_eq!(res.completions.len(), 2);
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert!(res.completions[1] > 100.0);
     }
 }

@@ -1,0 +1,374 @@
+//! Cluster-level request routing: which replica serves which request.
+//!
+//! The dispatch layer is its own optimization surface (DistServe's
+//! goodput framing, SGLang's cache-aware load balancing): per-replica
+//! scheduling can be stall-free and cache-aware, but if the *router*
+//! sprays template traffic round-robin, every replica re-pays every
+//! prefix and the cluster-wide hit rate collapses to 1/R of what the
+//! workload offers. [`ClusterSim::run_routed`] dispatches arrivals one at
+//! a time through a [`RoutePolicy`]:
+//!
+//! * [`RoundRobin`] — the baseline; reproduces the old static `g % R`
+//!   partition byte-for-byte on an arrival-sorted workload.
+//! * [`LeastOutstandingTokens`] — join-shortest-queue by each replica's
+//!   cache-aware outstanding work ([`ReplicaView::outstanding_tokens`]).
+//! * [`PrefixAffinity`] — rendezvous-hash the template's prefix hash to a
+//!   *home* replica so its pinned run is registered once and every
+//!   follower hits it, with a power-of-two-choices load shed to the
+//!   second-ranked replica when the home's backlog exceeds
+//!   `spill_factor ×` the second's. A shed request simply misses and
+//!   admits full-price on the alternate (registering the template there —
+//!   emergent hot-prefix replication), so shedding can never wedge a
+//!   waiter chain.
+//!
+//! Rendezvous (highest-random-weight) hashing gives the stability the
+//! prefix cache needs: adding a replica re-homes only ~1/(R+1) of the
+//! templates (each moved template's new home IS the new replica), so a
+//! scale-out does not cold-start every replica's prefix index the way
+//! mod-R hashing would.
+//!
+//! [`ClusterSim::run_routed`]: super::cluster::ClusterSim::run_routed
+
+use crate::util::mix64;
+use crate::workload::RequestSpec;
+
+/// What a routing policy sees of one replica at dispatch time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaView {
+    /// Cache-aware outstanding work: prefill + decode tokens the replica
+    /// still has to compute for its dispatched, non-terminal requests
+    /// (queued template traffic discounted by resident prefix coverage —
+    /// see `PipelineRun::outstanding_tokens`).
+    pub outstanding_tokens: usize,
+}
+
+/// A pluggable dispatch policy: pick the replica for one arriving request
+/// given a consistent snapshot of every replica's load.
+pub trait RoutePolicy {
+    fn route(&mut self, spec: &RequestSpec, views: &[ReplicaView]) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Arrival-order round-robin — the pre-router baseline.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RoutePolicy for RoundRobin {
+    fn route(&mut self, _spec: &RequestSpec, views: &[ReplicaView]) -> usize {
+        let ri = self.next % views.len().max(1);
+        self.next = self.next.wrapping_add(1);
+        ri
+    }
+
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+}
+
+/// Join-shortest-queue by outstanding work tokens (ties → lowest index).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeastOutstandingTokens;
+
+impl LeastOutstandingTokens {
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn least(views: &[ReplicaView]) -> usize {
+        views
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, v)| (v.outstanding_tokens, *i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+impl RoutePolicy for LeastOutstandingTokens {
+    fn route(&mut self, _spec: &RequestSpec, views: &[ReplicaView]) -> usize {
+        Self::least(views)
+    }
+
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+}
+
+/// Rendezvous-hash prefix affinity with a power-of-two-choices spill.
+///
+/// A tagged request goes to its template's home (top rendezvous rank)
+/// unless the home's outstanding work exceeds `spill_factor ×` the
+/// second-ranked replica's, in which case it sheds to the second. At the
+/// default `spill_factor = 1.0` this is classic power-of-two-choices over
+/// the template's top-2 replicas (strictly-greater comparison, ties stay
+/// home); larger factors trade balance for stickiness. Untagged requests
+/// fall through to join-shortest-queue over all replicas.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixAffinity {
+    /// Shed to the second-ranked replica when
+    /// `home_outstanding > spill_factor × second_outstanding`.
+    pub spill_factor: f64,
+}
+
+impl PrefixAffinity {
+    /// Default spill factor: plain power-of-two-choices over the top-2.
+    pub const DEFAULT_SPILL: f64 = 1.0;
+
+    pub fn new(spill_factor: f64) -> Self {
+        assert!(spill_factor >= 0.0, "spill factor must be non-negative");
+        PrefixAffinity { spill_factor }
+    }
+}
+
+impl Default for PrefixAffinity {
+    fn default() -> Self {
+        Self::new(Self::DEFAULT_SPILL)
+    }
+}
+
+impl RoutePolicy for PrefixAffinity {
+    fn route(&mut self, spec: &RequestSpec, views: &[ReplicaView]) -> usize {
+        if views.len() <= 1 {
+            return 0;
+        }
+        let Some(pfx) = spec.prefix else {
+            return LeastOutstandingTokens::least(views);
+        };
+        let (home, second) = rendezvous_top2(pfx.id, views.len());
+        let h = views[home].outstanding_tokens as f64;
+        let s = views[second].outstanding_tokens as f64;
+        if h > self.spill_factor * s {
+            second
+        } else {
+            home
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+}
+
+const GOLD: u64 = 0x9E3779B97F4A7C15;
+
+/// Rendezvous score of `key` on replica `ri`: one SplitMix64 step (the
+/// golden-ratio increment plus [`mix64`] — the same mixer `util::Rng`
+/// seeds with) over the key/replica combination.
+fn score(key: u64, ri: usize) -> u64 {
+    mix64((key ^ (ri as u64).wrapping_mul(GOLD)).wrapping_add(GOLD))
+}
+
+/// Replica indices ranked by rendezvous (highest-random-weight) score for
+/// `key`, best first. Deterministic; ties broken by lowest index.
+pub fn rendezvous_rank(key: u64, replicas: usize) -> Vec<usize> {
+    let mut scored: Vec<(u64, usize)> = (0..replicas).map(|ri| (score(key, ri), ri)).collect();
+    scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.into_iter().map(|(_, ri)| ri).collect()
+}
+
+/// The top-2 of [`rendezvous_rank`] without the allocation or the sort —
+/// what the per-request routing hot path actually needs. Requires
+/// `replicas >= 2`.
+pub fn rendezvous_top2(key: u64, replicas: usize) -> (usize, usize) {
+    debug_assert!(replicas >= 2, "top-2 needs at least two replicas");
+    let mut best = (0u64, 0usize);
+    let mut second = (0u64, 0usize);
+    for ri in 0..replicas {
+        let s = score(key, ri);
+        // ascending index + strict > reproduces the rank's lowest-index
+        // tie-break exactly
+        if ri == 0 || s > best.0 {
+            if ri > 0 {
+                second = best;
+            }
+            best = (s, ri);
+        } else if ri == 1 || s > second.0 {
+            second = (s, ri);
+        }
+    }
+    (best.1, second.1)
+}
+
+/// CLI-facing router selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RouterKind {
+    RoundRobin,
+    /// Join-shortest-queue by outstanding tokens.
+    Jsq,
+    /// Rendezvous-hash prefix affinity with power-of-two spill.
+    Affinity,
+}
+
+impl RouterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "rr",
+            RouterKind::Jsq => "jsq",
+            RouterKind::Affinity => "affinity",
+        }
+    }
+
+    /// Parse a CLI name (the inverse of [`name`](Self::name)).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "rr" | "round-robin" => RouterKind::RoundRobin,
+            "jsq" | "least-outstanding" => RouterKind::Jsq,
+            "affinity" => RouterKind::Affinity,
+            _ => return None,
+        })
+    }
+
+    /// Build the policy. `spill_factor` only shapes [`PrefixAffinity`].
+    pub fn build(&self, spill_factor: f64) -> Box<dyn RoutePolicy> {
+        match self {
+            RouterKind::RoundRobin => Box::new(RoundRobin::new()),
+            RouterKind::Jsq => Box::new(LeastOutstandingTokens::new()),
+            RouterKind::Affinity => Box::new(PrefixAffinity::new(spill_factor)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::PrefixSpec;
+
+    fn views(outstanding: &[usize]) -> Vec<ReplicaView> {
+        outstanding.iter().map(|&t| ReplicaView { outstanding_tokens: t }).collect()
+    }
+
+    fn tagged(id: u64) -> RequestSpec {
+        RequestSpec {
+            prompt_len: 500,
+            decode_len: 50,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec { id, len: 384 }),
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut rr = RoundRobin::new();
+        let v = views(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..7).map(|_| rr.route(&tagged(1), &v)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn jsq_picks_least_outstanding_with_index_ties() {
+        let mut jsq = LeastOutstandingTokens::new();
+        assert_eq!(jsq.route(&tagged(1), &views(&[300, 100, 200])), 1);
+        assert_eq!(jsq.route(&tagged(1), &views(&[100, 100, 200])), 0, "tie → lowest index");
+    }
+
+    #[test]
+    fn rendezvous_rank_is_a_permutation() {
+        for key in [0u64, 1, 7, 0xDEAD_BEEF] {
+            let rank = rendezvous_rank(key, 6);
+            let mut sorted = rank.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..6).collect::<Vec<_>>(), "key {key}: {rank:?}");
+        }
+    }
+
+    /// The allocation-free hot-path top-2 agrees with the full rank.
+    #[test]
+    fn rendezvous_top2_matches_the_rank() {
+        for replicas in [2usize, 3, 4, 5, 8] {
+            for k in 0..200u64 {
+                let key = 0xABCD ^ (k * 6151);
+                let rank = rendezvous_rank(key, replicas);
+                assert_eq!(
+                    rendezvous_top2(key, replicas),
+                    (rank[0], rank[1]),
+                    "key {key} replicas {replicas}"
+                );
+            }
+        }
+    }
+
+    /// The HRW stability contract: growing R→R+1 re-homes only the
+    /// templates whose top score now lands on the NEW replica — about
+    /// 1/(R+1) of them — and never shuffles homes among the old replicas.
+    #[test]
+    fn rendezvous_growth_moves_only_a_fraction_to_the_new_replica() {
+        let templates: Vec<u64> = (0..400u64).map(|k| 0x5EED + k * 7919).collect();
+        let mut moved = 0;
+        for &t in &templates {
+            let before = rendezvous_rank(t, 4)[0];
+            let after = rendezvous_rank(t, 5)[0];
+            if after != before {
+                moved += 1;
+                assert_eq!(after, 4, "a moved template's new home IS the new replica");
+            }
+        }
+        // E[moved] = 400/5 = 80; deterministic for these keys, wide net
+        assert!(
+            (40..=120).contains(&moved),
+            "moved {moved}/400 templates (expect ~80 = 1/5)"
+        );
+        // coverage: every replica is home to a reasonable share
+        let mut homes = [0usize; 4];
+        for &t in &templates {
+            homes[rendezvous_rank(t, 4)[0]] += 1;
+        }
+        assert!(homes.iter().all(|&h| h >= 50), "home spread {homes:?}");
+    }
+
+    /// The power-of-two shed triggers EXACTLY at the spill factor: at
+    /// `home = F × second` the request stays home (strict inequality); one
+    /// token more and it sheds to the second-ranked replica.
+    #[test]
+    fn spill_sheds_exactly_at_the_factor() {
+        let spec = tagged(42);
+        let rank = rendezvous_rank(42, 4);
+        let (home, second) = (rank[0], rank[1]);
+        let mut aff = PrefixAffinity::new(2.0);
+        let mut v = views(&[0, 0, 0, 0]);
+        v[second].outstanding_tokens = 100;
+        v[home].outstanding_tokens = 200; // exactly F × second
+        assert_eq!(aff.route(&spec, &v), home, "at the factor: stay home");
+        v[home].outstanding_tokens = 201; // one past the factor
+        assert_eq!(aff.route(&spec, &v), second, "past the factor: shed");
+        // empty cluster: home stays home (0 > F×0 is false)
+        assert_eq!(aff.route(&spec, &views(&[0, 0, 0, 0])), home);
+    }
+
+    #[test]
+    fn affinity_routes_untagged_requests_by_jsq() {
+        let mut aff = PrefixAffinity::default();
+        let plain = RequestSpec { prompt_len: 100, decode_len: 10, arrival: 0.0, prefix: None };
+        assert_eq!(aff.route(&plain, &views(&[500, 50, 300, 200])), 1);
+    }
+
+    #[test]
+    fn default_spill_is_plain_power_of_two() {
+        let spec = tagged(7);
+        let rank = rendezvous_rank(7, 4);
+        let (home, second) = (rank[0], rank[1]);
+        let mut aff = PrefixAffinity::default();
+        let mut v = views(&[0, 0, 0, 0]);
+        v[home].outstanding_tokens = 101;
+        v[second].outstanding_tokens = 100;
+        assert_eq!(aff.route(&spec, &v), second, "strictly heavier home sheds");
+        v[home].outstanding_tokens = 100;
+        assert_eq!(aff.route(&spec, &v), home, "ties stay home");
+    }
+
+    #[test]
+    fn router_kind_round_trips_and_builds() {
+        for k in [RouterKind::RoundRobin, RouterKind::Jsq, RouterKind::Affinity] {
+            assert_eq!(RouterKind::parse(k.name()), Some(k));
+            assert_eq!(k.build(1.5).name(), k.name());
+        }
+        assert_eq!(RouterKind::parse("nope"), None);
+    }
+}

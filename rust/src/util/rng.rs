@@ -8,12 +8,18 @@ pub struct Rng {
     s: [u64; 4],
 }
 
-fn splitmix64(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E3779B97F4A7C15);
-    let mut z = *state;
+/// The SplitMix64 finalizer: a fast, well-mixed u64 → u64 permutation.
+/// Doubles as a standalone hash (e.g. rendezvous-routing scores) so the
+/// mixing constants live in exactly one place.
+pub fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    mix64(*state)
 }
 
 impl Rng {

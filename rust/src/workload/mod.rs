@@ -127,6 +127,62 @@ pub fn with_poisson_arrivals(rng: &mut Rng, mut pop: Vec<RequestSpec>, rate: f64
     pop
 }
 
+/// Per-template arrival skew over a template population: a single global
+/// Poisson(`rate`) slot timeline whose slots are assigned to templates in
+/// round-robin **bursts** of `burst_len`, so consecutive arrivals share a
+/// template (the session/tenant temporal locality real template traffic
+/// has, and the signal a prefix-affinity router exploits — its home
+/// replica stays warm through a burst). The marginal arrival process is
+/// exactly `with_poisson_arrivals`; only which request owns which slot
+/// changes. Untagged requests form one bucket of their own. Request order
+/// within a template is preserved; the returned vector keeps its input
+/// order (arrivals are NOT sorted — dispatch layers order by arrival).
+pub fn with_template_burst_arrivals(
+    rng: &mut Rng,
+    mut pop: Vec<RequestSpec>,
+    rate: f64,
+    burst_len: usize,
+) -> Vec<RequestSpec> {
+    let n = pop.len();
+    let burst = burst_len.max(1);
+    let mut times = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for _ in 0..n {
+        t += rng.exp(rate);
+        times.push(t);
+    }
+    // group request indices by template, in order of first appearance
+    let mut keys: Vec<Option<u64>> = Vec::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, s) in pop.iter().enumerate() {
+        let k = s.prefix.map(|p| p.id);
+        match keys.iter().position(|&q| q == k) {
+            Some(gi) => groups[gi].push(i),
+            None => {
+                keys.push(k);
+                groups.push(vec![i]);
+            }
+        }
+    }
+    // hand out the time slots in round-robin bursts across templates
+    let mut heads = vec![0usize; groups.len()];
+    let mut slot = 0usize;
+    while slot < n {
+        for (gi, group) in groups.iter().enumerate() {
+            let take = burst.min(group.len() - heads[gi]);
+            for _ in 0..take {
+                pop[group[heads[gi]]].arrival = times[slot];
+                heads[gi] += 1;
+                slot += 1;
+            }
+            if slot >= n {
+                break;
+            }
+        }
+    }
+    pop
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +249,50 @@ mod tests {
         let pop = with_poisson_arrivals(&mut rng, uniform_population(50, 512, 5.0), 10.0);
         assert!(pop.windows(2).all(|w| w[0].arrival < w[1].arrival));
         assert!(pop[0].arrival > 0.0);
+    }
+
+    #[test]
+    fn template_bursts_cluster_same_template_arrivals() {
+        let mut rng = Rng::new(9);
+        let pop = shared_prefix_population(&mut rng, 240, 6, 0.6, 128, 16, 64, 5.0);
+        let pop = with_template_burst_arrivals(&mut rng, pop, 20.0, 5);
+        // the slot timeline is a strict Poisson draw: all arrivals unique,
+        // positive, and a permutation ordered by time covers every request
+        let mut by_time: Vec<&RequestSpec> = pop.iter().collect();
+        by_time.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        assert!(by_time[0].arrival > 0.0);
+        assert!(by_time.windows(2).all(|w| w[0].arrival < w[1].arrival));
+        // temporal locality: consecutive arrivals share a template far
+        // more often than an interleaved shuffle would (burst 5 ⇒ ≥ ~3/5
+        // of adjacent pairs are same-template; random ≈ Σ share² ≈ 0.2)
+        let same = by_time
+            .windows(2)
+            .filter(|w| {
+                w[0].prefix.map(|p| p.id) == w[1].prefix.map(|p| p.id)
+            })
+            .count();
+        assert!(
+            same * 2 >= by_time.len(),
+            "only {same}/{} adjacent same-template pairs",
+            by_time.len() - 1
+        );
+        // per-template request order is preserved
+        let mut rng2 = Rng::new(9);
+        let orig = shared_prefix_population(&mut rng2, 240, 6, 0.6, 128, 16, 64, 5.0);
+        for (a, b) in pop.iter().zip(orig.iter()) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.prefix, b.prefix);
+        }
+    }
+
+    #[test]
+    fn template_bursts_degenerate_inputs() {
+        let mut rng = Rng::new(4);
+        // untagged population: one bucket, arrivals are plain Poisson
+        let pop = with_template_burst_arrivals(&mut rng, uniform_population(20, 64, 5.0), 10.0, 4);
+        assert!(pop.windows(2).all(|w| w[0].arrival < w[1].arrival));
+        // burst 0 is clamped to 1; empty population is a no-op
+        let pop = with_template_burst_arrivals(&mut rng, Vec::new(), 10.0, 0);
+        assert!(pop.is_empty());
     }
 }

@@ -1,0 +1,316 @@
+//! PR-5 acceptance: cluster-level request routing (prefix-affinity +
+//! load-aware dispatch over the interleaved multi-replica simulation).
+//!
+//! The headline scenario: a 4-replica deployment serving a shared-prefix
+//! Zipf workload (12 templates, per-template bursty Poisson arrivals, one
+//! undersized shared paged pool per replica). `PrefixAffinity` must beat
+//! `RoundRobin` by ≥2× on the aggregate prefix-hit rate while keeping the
+//! load-imbalance statistic (max/mean dispatch-sampled outstanding work)
+//! ≤ 1.25 and P99 TTFT no worse — with zero wedge panics across 24 seeds.
+//!
+//! All margins pre-validated with the Python mirror
+//! (/tmp/router_mirror.py — per-replica event-driven hybrid scheduler
+//! with paged KV, prefix sharing, bounded waits, LIFO preemption, LRU
+//! cold-run reclaim under the same routed dispatch; identical xoshiro
+//! workload draws). Mirror measurements over seeds 1..=24: hit-rate ratio
+//! 2.36× (floor 2.0), affinity imbalance mean 1.126 (ceiling 1.25), P99
+//! TTFT ratio 0.57 (ceiling 1.0), 0 wedges, 0 fallbacks.
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
+use sarathi::coordinator::sched::HybridScheduler;
+use sarathi::coordinator::{KvManager, Scheduler};
+use sarathi::simulator::{ClusterResult, ClusterSim, PipelineResult, RoundRobin};
+use sarathi::util::{percentile, Rng};
+use sarathi::workload::{
+    shared_prefix_population, with_poisson_arrivals, with_template_burst_arrivals,
+    zipf_population, RequestSpec,
+};
+
+/// 4 × (tp=1, pp=1) LLaMA-13B replica groups on A6000s.
+fn four_replica_deployment() -> Deployment {
+    Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, 1).with_replicas(4))
+}
+
+/// The acceptance workload for one seed: 280 requests over 12 templates
+/// (Zipf 0.55 fanout, 384-token prefixes, unique parts of 64–256 tokens at
+/// P:D 4), arriving in per-template bursts of 6 on a Poisson(48/s)
+/// timeline. Template identities are salted per seed so rendezvous
+/// placement luck averages out across seeds (mirroring production, where
+/// template ids are content hashes, not tiny integers).
+fn acceptance_workload(seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut pop = shared_prefix_population(&mut rng, 280, 12, 0.55, 384, 64, 256, 4.0);
+    for s in pop.iter_mut() {
+        if let Some(p) = s.prefix.as_mut() {
+            p.id += seed * 7919;
+        }
+    }
+    with_template_burst_arrivals(&mut rng, pop, 48.0, 6)
+}
+
+fn hybrid_sched() -> Box<dyn Scheduler + 'static> {
+    Box::new(HybridScheduler::new(256, 8, 2).with_prefix_share(true))
+}
+
+/// One policy's aggregate over all seeds.
+#[derive(Default)]
+struct Agg {
+    hits: usize,
+    fallbacks: usize,
+    ttfts: Vec<f64>,
+    imbalances: Vec<f64>,
+}
+
+fn run_policy(
+    cluster: &ClusterSim,
+    seeds: &[u64],
+    make_router: &mut dyn FnMut() -> Box<dyn sarathi::simulator::RoutePolicy>,
+) -> Agg {
+    let mut agg = Agg::default();
+    for &seed in seeds {
+        // a FRESH router per seed: a carried-over round-robin cursor
+        // would silently drift off the documented g % R dispatch if the
+        // per-seed request count stopped dividing the replica count
+        let mut router = make_router();
+        let pop = acceptance_workload(seed);
+        // undersized per-replica pool: 32 blocks × 32 tokens holds ~1
+        // pinned 384-token run + live tails, but nowhere near all 12
+        // templates — the residency pressure affinity routing exploits
+        let res = cluster.run_routed(
+            &pop,
+            &mut *router,
+            || KvManager::paged(32, 32),
+            None,
+            hybrid_sched,
+        );
+        assert!(
+            res.completions.iter().all(|t| !t.is_nan()),
+            "{} seed {seed}: every request must complete (no wedge, no starvation)",
+            res.router,
+        );
+        agg.hits += res.prefix_hits();
+        agg.fallbacks += res.prefix_fallbacks();
+        agg.imbalances.push(res.load_imbalance());
+        for rep in &res.per_replica {
+            agg.ttfts.extend_from_slice(rep.latency.ttft.samples());
+        }
+    }
+    agg
+}
+
+/// The ISSUE-5 acceptance criterion. Margins: mirror hit ratio 2.36× vs
+/// the 2.0 floor, imbalance 1.126 vs the 1.25 ceiling, TTFT ratio 0.57
+/// vs the 1.0 ceiling. Zero wedge panics = this test not panicking
+/// across all 24 seeds × both policies.
+#[test]
+fn affinity_beats_round_robin_on_hit_rate_without_imbalance() {
+    let seeds: Vec<u64> = (1..=24).collect();
+    let cluster = ClusterSim::new(four_replica_deployment());
+    use sarathi::simulator::{PrefixAffinity, RoutePolicy};
+    let rr = run_policy(&cluster, &seeds, &mut || {
+        Box::new(RoundRobin::new()) as Box<dyn RoutePolicy>
+    });
+    let aff = run_policy(&cluster, &seeds, &mut || {
+        Box::new(PrefixAffinity::new(1.0)) as Box<dyn RoutePolicy>
+    });
+
+    println!(
+        "router acceptance: hits aff={} rr={}, fallbacks aff={} rr={}, \
+         imbalances aff={:?}",
+        aff.hits, rr.hits, aff.fallbacks, rr.fallbacks, aff.imbalances
+    );
+    assert!(rr.hits > 0, "round-robin still hits within bursts");
+    let ratio = aff.hits as f64 / rr.hits as f64;
+    assert!(
+        ratio >= 2.0,
+        "affinity must at least double the aggregate hit rate: {} vs {} = {ratio:.2}x",
+        aff.hits,
+        rr.hits
+    );
+
+    let imb_mean: f64 = aff.imbalances.iter().sum::<f64>() / aff.imbalances.len() as f64;
+    assert!(
+        imb_mean <= 1.25,
+        "affinity load imbalance (max/mean outstanding tokens) {imb_mean:.3} > 1.25 \
+         (per-seed: {:?})",
+        aff.imbalances.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+
+    let p99_rr = percentile(&rr.ttfts, 99.0);
+    let p99_aff = percentile(&aff.ttfts, 99.0);
+    assert!(
+        p99_aff <= p99_rr,
+        "affinity P99 TTFT must be no worse: {p99_aff:.3}s vs rr {p99_rr:.3}s"
+    );
+}
+
+/// RoundRobin routing must reproduce the pre-refactor static `g % R`
+/// partition BYTE-FOR-BYTE: the same per-request completion times (bit
+/// patterns, not approximations) as running each partition to completion
+/// in isolation through `PipelineSim::run_shared` — which is exactly what
+/// the old `ClusterSim::run_with_kv` did.
+#[test]
+fn round_robin_routing_reproduces_the_static_partition_bitwise() {
+    let replicas = 3;
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, 2).with_replicas(replicas));
+    let cluster = ClusterSim::new(d);
+    let mut rng = Rng::new(33);
+    let pop = zipf_population(&mut rng, 60, 0.4, 256, 1024, 10.0);
+    let pop = with_poisson_arrivals(&mut rng, pop, 6.0);
+
+    let make_kv = || KvManager::paged(40, 32);
+    let make_sched =
+        || Box::new(HybridScheduler::new(256, 8, 2)) as Box<dyn Scheduler>;
+
+    let routed = cluster.run_routed(&pop, &mut RoundRobin::new(), make_kv, Some(8), make_sched);
+    assert!(routed.replica_of.iter().enumerate().all(|(g, &ri)| ri == g % replicas));
+
+    // the pre-refactor semantics, reconstructed: static partition, each
+    // replica run to completion in isolation
+    let mut expected = vec![f64::NAN; pop.len()];
+    let mut expected_makespan = 0.0f64;
+    for (ri, sim) in cluster.sims.iter().enumerate() {
+        let local: Vec<RequestSpec> = pop
+            .iter()
+            .enumerate()
+            .filter(|(g, _)| g % replicas == ri)
+            .map(|(_, &s)| s)
+            .collect();
+        let res = sim.run_shared(&local, make_kv(), Some(8), make_sched);
+        for (li, (g, _)) in
+            pop.iter().enumerate().filter(|(g, _)| g % replicas == ri).enumerate()
+        {
+            expected[g] = res.completions[li];
+        }
+        expected_makespan = expected_makespan.max(res.makespan);
+    }
+
+    for (g, (&got, &want)) in routed.completions.iter().zip(expected.iter()).enumerate() {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "request {g}: routed {got} != static {want}"
+        );
+    }
+    assert_eq!(routed.makespan.to_bits(), expected_makespan.to_bits());
+}
+
+/// Satellite regression: `ClusterResult::latency()` must aggregate
+/// per-replica reports sample-exactly — merged P99 equals the percentile
+/// over the pooled samples (hand-computed here), and the `prefix_wait`
+/// histogram is merged too (it used to be dropped on the floor).
+#[test]
+fn merged_latency_matches_a_hand_computed_merge() {
+    let mut a = PipelineResult::default();
+    for v in 1..=50 {
+        a.latency.ttft.add(v as f64);
+    }
+    a.latency.prefix_wait.add(0.25);
+    let mut b = PipelineResult::default();
+    for v in 51..=100 {
+        b.latency.ttft.add(v as f64);
+    }
+    b.latency.prefix_wait.add(0.75);
+    let res = ClusterResult { per_replica: vec![a, b], ..Default::default() };
+    let merged = res.latency();
+    assert_eq!(merged.ttft.count(), 100);
+    // hand-computed: P99 over 1..=100 interpolates rank 98.01 → 99.01
+    assert!(
+        (merged.ttft.percentile(99.0) - 99.01).abs() < 1e-9,
+        "merged P99 {} != 99.01",
+        merged.ttft.percentile(99.0)
+    );
+    // identical (bitwise) to the percentile over pooled samples
+    let pooled: Vec<f64> = res
+        .per_replica
+        .iter()
+        .flat_map(|r| r.latency.ttft.samples().iter().copied())
+        .collect();
+    assert_eq!(
+        merged.ttft.percentile(99.0).to_bits(),
+        percentile(&pooled, 99.0).to_bits()
+    );
+    assert_eq!(merged.prefix_wait.count(), 2, "prefix_wait histogram is merged");
+    assert!((merged.prefix_wait.mean() - 0.5).abs() < 1e-12);
+}
+
+/// The cluster JSONL trace: every record carries its `replica` tag, the
+/// merge is time-ordered, and the per-record schema matches the engine's.
+#[test]
+fn cluster_jsonl_records_carry_the_replica_tag() {
+    let cluster = ClusterSim::new(four_replica_deployment());
+    let pop = acceptance_workload(5);
+    let res = cluster.run_routed(
+        &pop,
+        &mut RoundRobin::new(),
+        || KvManager::paged(32, 32),
+        None,
+        hybrid_sched,
+    );
+    let path = std::env::temp_dir().join("sarathi_cluster_router_trace.jsonl");
+    res.write_jsonl(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), res.total_iterations());
+    let mut seen = [false; 4];
+    let mut last_start = f64::NEG_INFINITY;
+    for line in &lines {
+        assert!(line.starts_with("{\"iter\":"), "schema prefix: {line}");
+        assert!(line.contains("\"prefix_hits\":"), "engine fields present: {line}");
+        let tag = line
+            .split("\"replica\":")
+            .nth(1)
+            .and_then(|s| s.trim_end_matches('}').parse::<usize>().ok())
+            .expect("every record carries a replica tag");
+        assert!(tag < 4);
+        seen[tag] = true;
+        let start: f64 = line
+            .split("\"start\":")
+            .nth(1)
+            .and_then(|s| s.split(',').next())
+            .and_then(|s| s.parse().ok())
+            .unwrap();
+        assert!(start >= last_start, "merged trace is time-ordered");
+        last_start = start;
+    }
+    assert!(seen.iter().all(|&s| s), "all four replicas appear in the trace");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Dispatch sees consistent state: a JSQ router over an asymmetric
+/// workload must spread outstanding work far more evenly than routing
+/// everything round-robin would suggest — and every request still
+/// completes under interleaved replica clocks.
+#[test]
+fn jsq_balances_outstanding_work_across_replicas() {
+    let cluster = ClusterSim::new(four_replica_deployment());
+    let mut rng = Rng::new(77);
+    // heavy-tailed lengths: round-robin lands some replicas many long
+    // requests; JSQ should not
+    let pop = zipf_population(&mut rng, 160, 0.9, 256, 1600, 8.0);
+    let pop = with_poisson_arrivals(&mut rng, pop, 40.0);
+    let mut jsq = sarathi::simulator::LeastOutstandingTokens::new();
+    let res = cluster.run_routed(
+        &pop,
+        &mut jsq,
+        || KvManager::paged(64, 32),
+        None,
+        || Box::new(HybridScheduler::new(256, 8, 2)) as Box<dyn Scheduler>,
+    );
+    assert!(res.completions.iter().all(|t| !t.is_nan()));
+    assert_eq!(res.router, "jsq");
+    assert!(
+        res.load_imbalance() < 1.2,
+        "jsq imbalance {:.3} (means {:?})",
+        res.load_imbalance(),
+        res.mean_outstanding
+    );
+    // every replica served a fair share of requests
+    let mut counts = [0usize; 4];
+    for &ri in &res.replica_of {
+        counts[ri] += 1;
+    }
+    assert!(counts.iter().all(|&c| c >= 160 / 8), "dispatch counts {counts:?}");
+}
