@@ -51,7 +51,7 @@ echo "== smoke: multi-replica affinity router — hits in report, replica tags i
 RTRACE="$(mktemp -t router_trace.XXXXXX.jsonl)"
 ROUT="$(cargo run --release -- simulate --requests 240 --scheduler hybrid \
     --block-size 32 --kv-blocks 32 --rate 24 \
-    --replicas 4 --router affinity \
+    --replicas 4 --router affinity --threads 2 \
     --prefix-share --num-templates 8 --prefix-len 384 --json-out "$RTRACE")"
 echo "$ROUT" | grep -E 'prefix_hits=[1-9][0-9]*' \
     || { echo "no aggregate prefix hits reported"; exit 1; }
@@ -59,5 +59,11 @@ echo "$ROUT" | grep -E 'load_imbalance=[0-9.]+' \
     || { echo "report lacks load_imbalance"; exit 1; }
 grep -q '"replica":' "$RTRACE" || { echo "JSONL lacks replica tags"; exit 1; }
 rm -f "$RTRACE"
+
+echo "== bench: hot-path + cluster sweep (quick), BENCH_*.json artifacts + 2x regression gate =="
+cargo bench --bench scheduler_hotpath
+cargo bench --bench cluster_sweep -- --quick
+test -s rust/target/bench/BENCH_hotpath.json || { echo "missing BENCH_hotpath.json"; exit 1; }
+test -s rust/target/bench/BENCH_cluster.json || { echo "missing BENCH_cluster.json"; exit 1; }
 
 echo "CI gauntlet passed."

@@ -1,6 +1,11 @@
 //! Minimal bench harness (criterion is unavailable offline): warm up, run
-//! timed iterations, print mean/min ns per op in a stable format.
+//! timed iterations, print mean/min ns per op in a stable format, and emit
+//! machine-readable `BENCH_*.json` artifacts (hand-rolled writer — the
+//! crate stays zero-dependency) so CI can track the trajectory and gate on
+//! regressions against a committed baseline.
+#![allow(dead_code)] // each bench binary uses a subset of the harness
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -42,6 +47,85 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     r
 }
 
+/// Time ONE invocation of `f` in seconds — for long, self-contained runs
+/// (the cluster sweep) where repeating the whole simulation is the noise
+/// reduction, not inner-loop iteration counts.
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {secs:>12.3} s");
+    (out, secs)
+}
+
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// True when the CI-sized run was requested (`cargo bench --bench X --
+/// --quick`, or BENCH_QUICK=1).
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var_os("BENCH_QUICK").is_some()
+}
+
+/// Where `BENCH_*.json` artifacts land: `$BENCH_OUT_DIR`, else
+/// `target/bench/` under the cargo working directory.
+pub fn out_dir() -> PathBuf {
+    std::env::var_os("BENCH_OUT_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("target/bench"))
+}
+
+/// Encode a finite f64 (JSON has no NaN/inf — those become `null`).
+pub fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Encode per-op results as a JSON array of objects.
+pub fn json_results(results: &[BenchResult]) -> String {
+    let rows: Vec<String> = results
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\": \"{}\", \"mean_ns\": {}, \"min_ns\": {}, \"iters\": {}}}",
+                r.name.replace('"', "'"),
+                json_f64(r.mean_ns),
+                json_f64(r.min_ns),
+                r.iters
+            )
+        })
+        .collect();
+    format!("[{}]", rows.join(", "))
+}
+
+/// Write one flat JSON object to `out_dir()/file`. `fields` values must
+/// already be encoded JSON (use [`json_f64`] / [`json_results`]).
+pub fn write_json(file: &str, fields: &[(&str, String)]) -> PathBuf {
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir).expect("create bench output dir");
+    let path = dir.join(file);
+    let body: Vec<String> = fields.iter().map(|(k, v)| format!("  \"{k}\": {v}")).collect();
+    std::fs::write(&path, format!("{{\n{}\n}}\n", body.join(",\n"))).expect("write bench json");
+    println!("wrote {}", path.display());
+    path
+}
+
+/// Read field `key` out of a committed baseline JSON file. Returns None
+/// when the file is missing, the field is absent, or its value is `null`
+/// (the bootstrap state before any baseline has been recorded). The parse
+/// is deliberately naive — the baseline is a flat object this harness
+/// itself wrote.
+pub fn baseline_f64(path: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let needle = format!("\"{key}\"");
+    let rest = &text[text.find(&needle)? + needle.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
 }

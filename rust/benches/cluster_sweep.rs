@@ -1,0 +1,127 @@
+//! Cluster-scale macro benchmark: 8 hybrid replicas behind the
+//! prefix-affinity router serving a bursty shared-prefix workload, with
+//! prefix sharing on — the full routed hot path (heap-driven event loop,
+//! allocation-free iteration path, parallel replica execution) end to end.
+//!
+//! Measures the same sweep twice — `threads = 1` (the serial heap loop)
+//! and `threads = 0` (one worker per core) — asserts the two runs are
+//! BITWISE identical, and writes `target/bench/BENCH_cluster.json` with
+//! both wall-clock times and the speedup. When the committed baseline
+//! (`benches/baseline/BENCH_cluster.baseline.json`, override with
+//! `$BENCH_BASELINE`) carries a recorded `serial_secs`, a measured serial
+//! time more than 2× slower FAILS the bench (exit 1) — the CI regression
+//! gate. A `null` baseline (the bootstrap state) warns and passes.
+//!
+//! `--quick` (or `BENCH_QUICK=1`) runs the CI-sized sweep: same shape,
+//! fewer requests.
+
+mod bench_util;
+use bench_util::{baseline_f64, bench_once, header, json_f64, quick, write_json};
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
+use sarathi::coordinator::sched::HybridScheduler;
+use sarathi::coordinator::{KvManager, Scheduler};
+use sarathi::simulator::{ClusterResult, ClusterSim, PrefixAffinity};
+use sarathi::util::Rng;
+use sarathi::workload::{shared_prefix_population, with_template_burst_arrivals, RequestSpec};
+
+const REPLICAS: usize = 8;
+
+fn deployment() -> Deployment {
+    Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, 1).with_replicas(REPLICAS))
+}
+
+/// Bursty shared-prefix traffic: 16 templates (Zipf 0.55 fanout,
+/// 384-token prefixes, 64–256 unique tokens at P:D 4) in per-template
+/// bursts of 6 on a Poisson(64/s) timeline — enough concurrent load that
+/// all 8 replicas hold work between dispatch instants.
+fn workload(n: usize) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(12345);
+    let pop = shared_prefix_population(&mut rng, n, 16, 0.55, 384, 64, 256, 4.0);
+    with_template_burst_arrivals(&mut rng, pop, 64.0, 6)
+}
+
+fn sweep(cluster: &ClusterSim, pop: &[RequestSpec], threads: usize) -> ClusterResult {
+    let mut router = PrefixAffinity::new(PrefixAffinity::DEFAULT_SPILL);
+    cluster.run_routed_threads(
+        pop,
+        &mut router,
+        || KvManager::paged(128, 32),
+        None,
+        || {
+            Box::new(HybridScheduler::new(256, 8, 2).with_prefix_share(true))
+                as Box<dyn Scheduler + Send>
+        },
+        threads,
+    )
+}
+
+fn main() {
+    let quick = quick();
+    let n = if quick { 400 } else { 2000 };
+    let cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+    header(&format!(
+        "cluster sweep: {REPLICAS} replicas x {n} requests (affinity router, \
+         prefix-share on, {cores} cores)"
+    ));
+
+    let cluster = ClusterSim::new(deployment());
+    let pop = workload(n);
+
+    let (serial, serial_secs) =
+        bench_once("run_routed threads=1 (serial heap loop)", || sweep(&cluster, &pop, 1));
+    let (parallel, parallel_secs) =
+        bench_once("run_routed threads=0 (one per core)", || sweep(&cluster, &pop, 0));
+
+    // the thread count is a wall-clock knob ONLY: both sweeps must agree
+    // bit for bit, request by request
+    assert_eq!(serial.completions.len(), parallel.completions.len());
+    for (i, (a, b)) in serial.completions.iter().zip(&parallel.completions).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "request {i}: serial {a} != parallel {b} — thread count changed the simulation"
+        );
+    }
+    assert!(serial.completions.iter().all(|t| !t.is_nan()), "every request must complete");
+
+    let speedup = serial_secs / parallel_secs.max(1e-12);
+    println!("speedup: {speedup:.2}x over {cores} cores, makespan {:.2}s", serial.makespan);
+
+    write_json(
+        "BENCH_cluster.json",
+        &[
+            ("schema", "\"BENCH_cluster.v1\"".to_string()),
+            ("quick", quick.to_string()),
+            ("replicas", REPLICAS.to_string()),
+            ("requests", n.to_string()),
+            ("cores", cores.to_string()),
+            ("serial_secs", json_f64(serial_secs)),
+            ("parallel_secs", json_f64(parallel_secs)),
+            ("speedup", json_f64(speedup)),
+            ("makespan", json_f64(serial.makespan)),
+            ("prefix_hits", serial.prefix_hits().to_string()),
+        ],
+    );
+
+    // regression gate: only quick-vs-quick / full-vs-full comparisons make
+    // sense, so the baseline key is sized by mode
+    let key = if quick { "quick_serial_secs" } else { "serial_secs" };
+    let path = std::env::var("BENCH_BASELINE")
+        .unwrap_or_else(|_| "benches/baseline/BENCH_cluster.baseline.json".to_string());
+    match baseline_f64(&path, key) {
+        Some(base) if serial_secs > 2.0 * base => {
+            eprintln!(
+                "REGRESSION: serial sweep {serial_secs:.3}s > 2x baseline {base:.3}s ({path})"
+            );
+            std::process::exit(1);
+        }
+        Some(base) => {
+            println!("baseline ok: {serial_secs:.3}s vs {base:.3}s recorded ({path})");
+        }
+        None => {
+            println!("no committed baseline for {key} in {path} — bootstrap run, gate skipped");
+        }
+    }
+}

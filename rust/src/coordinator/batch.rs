@@ -79,7 +79,14 @@ impl Batch {
 
     /// Distinct requests touched (each request may appear at most once).
     pub fn requests(&self) -> Vec<RequestId> {
-        self.items.iter().map(|it| it.request()).collect()
+        self.request_iter().collect()
+    }
+
+    /// [`requests`](Self::requests) without the allocation — the per-event
+    /// pipeline hot path iterates batch membership thousands of times per
+    /// run and must not collect a fresh Vec each time.
+    pub fn request_iter(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.items.iter().map(|it| it.request())
     }
 
     /// The compute shape the cost model / profiler consumes. `pool`

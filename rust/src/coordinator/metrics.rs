@@ -206,6 +206,21 @@ pub struct Metrics {
     pub prefix_fallbacks: usize,
     /// Total admission attempts spent waiting on a prefix fill.
     pub prefix_wait_iterations: usize,
+    // Streaming accumulators, folded in by `record`: the aggregate
+    // queries below used to rescan `iterations` per call, which turned
+    // every per-iteration stat lookup on the simulator hot path into an
+    // O(history) walk.
+    time_acc: f64,
+    swap_acc: f64,
+    first_started: Option<f64>,
+    last_ended: f64,
+    prefill_tokens_acc: usize,
+    decode_tokens_acc: usize,
+    decode_time_acc: f64,
+    decode_attr_tokens: usize,
+    peak_active_acc: usize,
+    peak_kv_blocks_acc: usize,
+    peak_shared_kv_acc: usize,
 }
 
 impl Metrics {
@@ -219,19 +234,40 @@ impl Metrics {
         self.prefix_hits += rec.prefix_hits;
         self.prefix_fallbacks += rec.prefix_fallbacks;
         self.prefix_wait_iterations += rec.prefix_wait_iters;
+        self.time_acc += rec.elapsed;
+        self.swap_acc += rec.swap_time;
+        if self.first_started.is_none() {
+            self.first_started = Some(rec.started_at);
+        }
+        self.last_ended = rec.ended_at();
+        self.prefill_tokens_acc += rec.shape.prefill_tokens();
+        let d = rec.shape.decode_tokens();
+        self.decode_tokens_acc += d;
+        if d > 0 {
+            // §5.1.1 attribution: marginal over prefill-alone for hybrid
+            // batches, all-in otherwise
+            self.decode_time_acc += match rec.prefill_alone {
+                Some(alone) => (rec.elapsed - alone).max(0.0),
+                None => rec.elapsed,
+            };
+            self.decode_attr_tokens += d;
+        }
+        self.peak_active_acc = self.peak_active_acc.max(rec.n_active);
+        self.peak_kv_blocks_acc = self.peak_kv_blocks_acc.max(rec.kv_blocks_in_use);
+        self.peak_shared_kv_acc = self.peak_shared_kv_acc.max(rec.shared_kv_tokens);
         self.iterations.push(rec);
     }
 
     /// Busy time: sum of iteration execution times (idle gaps and swap
     /// transfers excluded).
     pub fn total_time(&self) -> f64 {
-        self.iterations.iter().map(|r| r.elapsed).sum()
+        self.time_acc
     }
 
     /// Total preemption transfer time (swap-out + swap-in / recompute)
     /// across the run.
     pub fn total_swap_time(&self) -> f64 {
-        self.iterations.iter().map(|r| r.swap_time).sum()
+        self.swap_acc
     }
 
     /// Wall-clock span of the run on the simulated clock: first iteration
@@ -241,18 +277,18 @@ impl Metrics {
     /// busy iterations, so Poisson idle gaps would vanish from it and
     /// overstate throughput.
     pub fn wall_clock_span(&self) -> f64 {
-        match (self.iterations.first(), self.iterations.last()) {
-            (Some(first), Some(last)) => last.ended_at() - first.started_at,
-            _ => 0.0,
+        match self.first_started {
+            Some(first) => self.last_ended - first,
+            None => 0.0,
         }
     }
 
     pub fn total_prefill_tokens(&self) -> usize {
-        self.iterations.iter().map(|r| r.shape.prefill_tokens()).sum()
+        self.prefill_tokens_acc
     }
 
     pub fn total_decode_tokens(&self) -> usize {
-        self.iterations.iter().map(|r| r.shape.decode_tokens()).sum()
+        self.decode_tokens_acc
     }
 
     /// Busy-time throughput, tokens per second over iteration time only
@@ -285,24 +321,10 @@ impl Metrics {
     /// decode-only iterations contribute elapsed/lanes; hybrid iterations
     /// contribute their marginal cost over the prefill-alone run.
     pub fn decode_time_per_token(&self) -> f64 {
-        let mut time = 0.0;
-        let mut tokens = 0usize;
-        for r in &self.iterations {
-            let d = r.shape.decode_tokens();
-            if d == 0 {
-                continue;
-            }
-            match r.prefill_alone {
-                Some(alone) => time += (r.elapsed - alone).max(0.0),
-                None if r.shape.prefill.is_empty() => time += r.elapsed,
-                None => time += r.elapsed, // hybrid without attribution: all-in
-            }
-            tokens += d;
-        }
-        if tokens == 0 {
+        if self.decode_attr_tokens == 0 {
             0.0
         } else {
-            time / tokens as f64
+            self.decode_time_acc / self.decode_attr_tokens as f64
         }
     }
 
@@ -346,19 +368,19 @@ impl Metrics {
 
     /// Peak concurrently-admitted requests across the run.
     pub fn peak_active(&self) -> usize {
-        self.iterations.iter().map(|r| r.n_active).max().unwrap_or(0)
+        self.peak_active_acc
     }
 
     /// Peak KV occupancy across the run, in blocks — a shared block counts
     /// once however many requests reference it (the allocator's refcounted
     /// `allocated()` feeds the per-iteration records).
     pub fn peak_kv_blocks_in_use(&self) -> usize {
-        self.iterations.iter().map(|r| r.kv_blocks_in_use).max().unwrap_or(0)
+        self.peak_kv_blocks_acc
     }
 
     /// Peak KV tokens served from shared prefix blocks at any iteration.
     pub fn peak_shared_kv_tokens(&self) -> usize {
-        self.iterations.iter().map(|r| r.shared_kv_tokens).max().unwrap_or(0)
+        self.peak_shared_kv_acc
     }
 
     /// Write one JSON object per iteration (JSON-Lines) — the simulator

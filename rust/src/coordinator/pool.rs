@@ -295,6 +295,14 @@ impl RequestPool {
         }
     }
 
+    /// Admitted ids in `phase` (Prefill or Decode only), FCFS (id) order,
+    /// without materializing a Vec — batch composition filters the active
+    /// list every scheduling iteration, which must not allocate.
+    pub fn in_phase_iter(&self, phase: Phase) -> impl Iterator<Item = RequestId> + '_ {
+        debug_assert!(matches!(phase, Phase::Prefill | Phase::Decode));
+        self.active.iter().copied().filter(move |&id| self.requests[id].phase() == phase)
+    }
+
     /// All queued (unadmitted, non-terminal) ids, arrival-sorted — the
     /// allocation-free counterpart of `in_phase(Phase::Queued)` (every
     /// pending entry is Queued: admission, rejection and completion all

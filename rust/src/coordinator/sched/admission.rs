@@ -387,26 +387,35 @@ impl Admission {
         );
     }
 
-    /// The gate's decision for `id` without allocating. Panics (like
-    /// [`try_admit_one`](Self::try_admit_one)) when the request could never
-    /// be admitted at all and the policy is [`InfeasiblePolicy::Panic`];
-    /// under [`InfeasiblePolicy::Reject`] an infeasible request is merely
-    /// `Blocked` without mutating anything.
-    fn verdict(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> GateVerdict {
+    /// The gate's decision for `id` without allocating, returning the
+    /// [`SharePlan`] it was judged on so the admit path can reuse it
+    /// instead of re-planning (the plan is pure, so a `Pass` plan is
+    /// exactly the plan `try_admit_one` executes). `None` plans come from
+    /// the early cap/infeasible refusals, which never planned at all.
+    /// Panics (like [`try_admit_one`](Self::try_admit_one)) when the
+    /// request could never be admitted at all and the policy is
+    /// [`InfeasiblePolicy::Panic`]; under [`InfeasiblePolicy::Reject`] an
+    /// infeasible request is merely `Blocked` without mutating anything.
+    fn verdict_with_plan(
+        &self,
+        pool: &RequestPool,
+        kv: &KvManager,
+        id: usize,
+    ) -> (GateVerdict, Option<SharePlan>) {
         if let Some(cap) = self.max_active {
             if pool.active_count() >= cap {
-                return GateVerdict::Blocked;
+                return (GateVerdict::Blocked, None);
             }
         }
         if !self.is_feasible(pool, kv, id) {
             match self.infeasible {
                 InfeasiblePolicy::Panic => self.panic_infeasible(pool, kv, id),
-                InfeasiblePolicy::Reject => return GateVerdict::Blocked,
+                InfeasiblePolicy::Reject => return (GateVerdict::Blocked, None),
             }
         }
         let plan = self.plan(pool, kv, id);
         if plan.blocked {
-            return GateVerdict::Waiting; // in-flight prefix fill
+            return (GateVerdict::Waiting, Some(plan)); // in-flight prefix fill
         }
         // funds = free blocks + cold prefixes the allocator would reclaim
         // under pressure — EXCLUDING the run this admission is about to
@@ -420,10 +429,15 @@ impl Admission {
         };
         let funds = kv.available() + kv.reclaimable_excluding(exclude);
         if funds >= plan.new_blocks.saturating_add(self.watermark_blocks) {
-            GateVerdict::Pass
+            (GateVerdict::Pass, Some(plan))
         } else {
-            GateVerdict::Blocked
+            (GateVerdict::Blocked, Some(plan))
         }
+    }
+
+    /// Plan-less [`verdict_with_plan`](Self::verdict_with_plan).
+    fn verdict(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> GateVerdict {
+        self.verdict_with_plan(pool, kv, id).0
     }
 
     /// True if the gate passes for `id` without allocating (see
@@ -488,38 +502,62 @@ impl Admission {
             pool.reject(id, now);
             return false;
         }
-        match self.verdict(pool, kv, id) {
-            GateVerdict::Pass => {}
-            GateVerdict::Blocked => {
+        // the verdict carries the plan it was judged on, so the admit path
+        // below never re-plans — one prefix-index walk per attempt, not
+        // three
+        let plan = match self.verdict_with_plan(pool, kv, id) {
+            (GateVerdict::Pass, plan) => plan.expect("a passing gate always carries a plan"),
+            (GateVerdict::Blocked, plan) => {
                 // a leftover wait edge whose fill has since resolved (the
                 // plan no longer waits) ends HERE: the request is now
                 // memory- or cap-gated like everyone else, and a stale
                 // `stalled` edge must not keep the FCFS bypass window
-                // open for a head that is no longer cache-waiting
-                if pool.get(id).is_prefix_waiting() && !self.plan(pool, kv, id).blocked {
-                    pool.finalize_prefix_wait(id, now);
+                // open for a head that is no longer cache-waiting. A
+                // plan-carrying Blocked is by construction non-waiting
+                // (waiting plans verdict `Waiting`); only the early
+                // cap-gated refusal (no plan) must still plan to check.
+                if pool.get(id).is_prefix_waiting() {
+                    let still_waits = match plan {
+                        Some(_) => false,
+                        None => self.plan(pool, kv, id).blocked,
+                    };
+                    if !still_waits {
+                        pool.finalize_prefix_wait(id, now);
+                    }
                 }
                 return false;
             }
-            GateVerdict::Waiting => {
+            (GateVerdict::Waiting, _) => {
                 // the wait-for edge ticks once per attempt; K consecutive
                 // no-progress ticks degrade it to a full-price miss that
-                // may admit on this very attempt
+                // may admit on this very attempt (with a fresh plan: the
+                // fallback rewrote the request's prefix tag)
                 self.tick_prefix_wait(pool, kv, id, now);
-                let fell_back = pool.get(id).prefix_fallback;
-                if !fell_back || self.verdict(pool, kv, id) != GateVerdict::Pass {
+                if !pool.get(id).prefix_fallback {
                     return false;
                 }
+                match self.verdict_with_plan(pool, kv, id) {
+                    (GateVerdict::Pass, plan) => {
+                        plan.expect("a passing gate always carries a plan")
+                    }
+                    _ => return false,
+                }
             }
-        }
+        };
         // the wait (if any) resolves right here — as a servable hit, a
         // re-registration, or the forced fallback — so finalize its time
         pool.finalize_prefix_wait(id, now);
-        let plan = self.plan(pool, kv, id);
         let target = Self::target_tokens(pool, id);
         // 1. the shared head: reference the resident run, then COW-fork
         //    its partial last block before this request can append into it
         let mut blocks = kv.share_seq(&plan.run);
+        // reserve the lifetime-peak table capacity once, so per-token
+        // decode growth never reallocates this request's block table
+        let peak = {
+            let s = &pool.get(id).spec;
+            s.prompt_len + s.decode_len
+        };
+        blocks.reserve(kv.blocks_needed(peak.max(1)).saturating_sub(blocks.len()));
         if plan.fork && plan.register.is_none() {
             let last = blocks.len() - 1;
             blocks[last] =
@@ -603,9 +641,16 @@ impl Admission {
             }
             let head_stalled = pool.get(id).prefix_wait.is_some_and(|w| w.stalled_iters >= 1);
             if head_stalled && self.bypass_window > 0 {
+                // bounded: the arrival-sorted queued slice is walked lazily,
+                // so at most window+1 entries are ever examined — NOT the
+                // whole arrived backlog like the old `arrived_queued`
+                // collect (the tiny collect below is what lets
+                // try_admit_one take `&mut pool`)
                 let window: Vec<usize> = pool
-                    .arrived_queued(now)
-                    .into_iter()
+                    .queued_ids()
+                    .iter()
+                    .copied()
+                    .take_while(|&q| pool.get(q).arrival <= now)
                     .filter(|&q| q != id)
                     .take(self.bypass_window)
                     .collect();

@@ -121,11 +121,11 @@ impl Scheduler for HybridScheduler {
     }
 
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
-        let mut items = Vec::new();
+        let mut items = Vec::with_capacity(self.max_batch);
 
         // 1. stall-free: every running decode rides along (1 token each;
         //    max_batch ≤ token_budget is asserted at construction)
-        for id in pool.in_phase(Phase::Decode) {
+        for id in pool.in_phase_iter(Phase::Decode) {
             if items.len() >= self.max_batch {
                 break;
             }
@@ -150,7 +150,7 @@ impl Scheduler for HybridScheduler {
         } else {
             self.token_budget - n_d
         };
-        for id in pool.in_phase(Phase::Prefill) {
+        for id in pool.in_phase_iter(Phase::Prefill) {
             if budget == 0 || items.len() >= self.max_batch {
                 break;
             }

@@ -89,7 +89,10 @@ pub trait Scheduler {
 /// panicking; figure-repro / closed-loop runs keep the loud panic.
 /// `cfg.prefix_share` (hybrid-only: sharing needs the paged, memory-aware
 /// gate) turns on copy-on-write prefix sharing at admission.
-pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
+///
+/// The box is `Send` (every policy is plain data) so one builder serves
+/// the engine and the multi-threaded cluster dispatcher alike.
+pub fn make_scheduler(cfg: &SchedulerConfig) -> Box<dyn Scheduler + Send> {
     assert!(
         !cfg.prefix_share || cfg.kind == SchedulerKind::Hybrid,
         "prefix sharing requires the hybrid scheduler's paged admission gate"

@@ -54,8 +54,7 @@ impl Scheduler for OrcaScheduler {
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         let prefilling = pool.in_phase(Phase::Prefill);
         let decoding: Vec<usize> = pool
-            .in_phase(Phase::Decode)
-            .into_iter()
+            .in_phase_iter(Phase::Decode)
             .filter(|&id| pool.get(id).remaining_decode() > 0)
             .collect();
 

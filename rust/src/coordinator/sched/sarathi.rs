@@ -65,8 +65,7 @@ impl Scheduler for SarathiScheduler {
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         // every ready decode piggybacks (up to B−1 when a chunk rides along)
         let decoding: Vec<usize> = pool
-            .in_phase(Phase::Decode)
-            .into_iter()
+            .in_phase_iter(Phase::Decode)
             .filter(|&id| pool.get(id).remaining_decode() > 0)
             .collect();
         let prefilling = pool.first_in_phase(Phase::Prefill);

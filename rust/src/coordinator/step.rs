@@ -244,11 +244,7 @@ impl StepApplier {
                     .filter(|pair| !in_flight.contains(pair))
                     .max_by(|&(pa, a), &(pb, b)| {
                         let (ra, rb) = (pools[pa].get(a), pools[pb].get(b));
-                        ra.arrival
-                            .partial_cmp(&rb.arrival)
-                            .unwrap()
-                            .then(pa.cmp(&pb))
-                            .then(a.cmp(&b))
+                        ra.arrival.total_cmp(&rb.arrival).then(pa.cmp(&pb)).then(a.cmp(&b))
                     })
                     .unwrap_or((owner, req));
                 let (vp, vid) = victim;

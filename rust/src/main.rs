@@ -122,6 +122,7 @@ fn main() -> Result<()> {
                  simulate [--requests N] [--scheduler S] [--rate R] [--budget T]\n\
                  \x20      [--block-size B] [--kv-blocks K] [--pp P]\n\
                  \x20      [--replicas R] [--router rr|jsq|affinity] [--spill-factor F]\n\
+                 \x20      [--threads T]  (cluster only; 0 = one per core, default 1)\n\
                  \x20      [--preemption swap|recompute]\n\
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--max-prefix-wait K] [--bypass-window W]\n\
@@ -522,12 +523,21 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     if spill_factor < 0.0 {
         sarathi::bail!("--spill-factor must be non-negative");
     }
+    // 1 = the serial heap-driven loop (default), N > 1 = replica execution
+    // over N worker threads, 0 = one worker per available core; every
+    // setting produces bitwise-identical results (replicas only sync at
+    // dispatch instants), so this is purely a wall-clock knob
+    let threads: usize = parse_flag(args, "--threads", 1)?;
     // silently measuring "affinity routing" on a single engine would be
     // worse than an error (same stance as the --prefix-share pairing rule)
     if replicas == 1
-        && (flag_value(args, "--router").is_some() || flag_value(args, "--spill-factor").is_some())
+        && (flag_value(args, "--router").is_some()
+            || flag_value(args, "--spill-factor").is_some()
+            || flag_value(args, "--threads").is_some())
     {
-        sarathi::bail!("--router/--spill-factor need --replicas > 1 (routing is a cluster layer)");
+        sarathi::bail!(
+            "--router/--spill-factor/--threads need --replicas > 1 (they are cluster layers)"
+        );
     }
     let preemption = preemption_mode(args)?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
@@ -552,6 +562,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
             replicas,
             router_kind,
             spill_factor,
+            threads,
             preemption,
             prefix,
             wait,
@@ -732,6 +743,7 @@ struct SimOpts {
     replicas: usize,
     router_kind: RouterKind,
     spill_factor: f64,
+    threads: usize,
     preemption: PreemptionMode,
     prefix: PrefixOpts,
     wait: WaitOpts,
@@ -759,6 +771,7 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         replicas,
         router_kind,
         spill_factor,
+        threads,
         preemption,
         prefix,
         wait,
@@ -794,7 +807,7 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
     println!(
         "LLaMA-13B on A6000, {replicas} replicas x PP={pp}: {n} requests, {}, \
          Poisson {rate} req/s (template bursts of 6), router={} spill_factor={spill_factor} \
-         scheduler={} effective_token_budget={} {}",
+         threads={threads} scheduler={} effective_token_budget={} {}",
         prefix.describe(),
         router_kind.name(),
         kind.name(),
@@ -810,7 +823,7 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         ClusterSim::new(d.clone()).with_swap_cost(SwapCost::for_deployment(&d, preemption));
     let mut router = router_kind.build(spill_factor);
     let t0 = std::time::Instant::now();
-    let res = cluster.run_routed(
+    let res = cluster.run_routed_threads(
         &pop,
         &mut *router,
         || {
@@ -822,6 +835,7 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         },
         Some(b),
         || make_scheduler(&cfg),
+        threads,
     );
     println!("simulated in {:.2}s wall", t0.elapsed().as_secs_f64());
 

@@ -17,7 +17,7 @@ pub fn argmax(logits: &[f32]) -> usize {
 /// stochastic dependency.
 pub fn top_k_deterministic(logits: &[f32], rank: usize) -> usize {
     let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
     idx[rank.min(idx.len() - 1)]
 }
 

@@ -47,15 +47,28 @@ pub struct ClusterResult {
     pub mean_outstanding: Vec<f64>,
     /// Name of the routing policy that produced this result.
     pub router: &'static str,
+    /// Lazily-computed sort of `completions` — an internal memo so curve
+    /// and `time_to_complete` queries stop cloning + sorting per call.
+    /// Public only so external struct literals with `..Default::default()`
+    /// keep compiling; leave it untouched when building results by hand.
+    pub sorted_completions: std::sync::OnceLock<Vec<f64>>,
 }
 
 impl ClusterResult {
+    /// Completions sorted ascending, computed once per result. NaN
+    /// completions (dropped requests) sort last under `total_cmp`.
+    fn sorted(&self) -> &[f64] {
+        self.sorted_completions.get_or_init(|| {
+            let mut c = self.completions.clone();
+            c.sort_by(f64::total_cmp);
+            c
+        })
+    }
+
     /// Sorted (requests completed, time) curve across all replicas —
     /// Fig. 12b's x/y series.
     pub fn completion_curve(&self) -> Vec<(usize, f64)> {
-        let mut c = self.completions.clone();
-        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        c.into_iter().enumerate().map(|(i, t)| (i + 1, t)).collect()
+        self.sorted().iter().enumerate().map(|(i, &t)| (i + 1, t)).collect()
     }
 
     /// Time at which `n` requests have completed. `n = 0` is "no work
@@ -65,8 +78,7 @@ impl ClusterResult {
         if n == 0 {
             return 0.0;
         }
-        let curve = self.completion_curve();
-        curve.get(n - 1).map(|&(_, t)| t).unwrap_or(f64::NAN)
+        self.sorted().get(n - 1).copied().unwrap_or(f64::NAN)
     }
 
     /// Merged latency report across replicas — sample-exact (every
@@ -150,7 +162,7 @@ impl ClusterResult {
             }
         }
         order.sort_by(|a, b| {
-            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
         });
         let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
         for (_, ri, i) in order {
@@ -163,6 +175,40 @@ impl ClusterResult {
     /// Total records across replicas (the merged JSONL line count).
     pub fn total_iterations(&self) -> usize {
         self.per_replica.iter().map(|r| r.metrics.iterations.len()).sum()
+    }
+}
+
+/// Min-heap key for the cluster event queue: the tie-breaking the linear
+/// scan used to bury inside a `min_by` chain — earliest time first, then
+/// lowest replica index — is the explicit heap ordering here. Event times
+/// come from the cost model and must be real numbers; a NaN is asserted
+/// away loudly at construction instead of silently corrupting the heap
+/// order (`total_cmp` would place it, but no valid schedule produces one).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct EventKey {
+    t: f64,
+    ri: usize,
+}
+
+impl EventKey {
+    fn new(t: f64, ri: usize) -> Self {
+        assert!(!t.is_nan(), "replica {ri} produced a NaN event time");
+        EventKey { t, ri }
+    }
+}
+
+impl Eq for EventKey {}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed so std's max-heap pops the minimum (time, replica)
+        other.t.total_cmp(&self.t).then_with(|| other.ri.cmp(&self.ri))
+    }
+}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
     }
 }
 
@@ -198,7 +244,7 @@ impl ClusterSim {
     /// arrival order; `make_sched` builds one scheduler per stream.
     pub fn run<'a, F>(&self, specs: &[RequestSpec], mut make_sched: F) -> ClusterResult
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let slots = self.deployment.max_batch_size();
         let pp = self.deployment.parallel.pp.max(1);
@@ -217,7 +263,7 @@ impl ClusterSim {
         mut make_sched: F,
     ) -> ClusterResult
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let blocks = self.deployment.kv_blocks(block_size);
         let cap = self.deployment.max_batch_size();
@@ -244,11 +290,11 @@ impl ClusterSim {
         make_sched: F,
     ) -> ClusterResult
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
         K: FnMut() -> KvManager,
     {
         let mut rr = RoundRobin::new();
-        self.dispatch(specs, &mut rr, make_kv, per_stream_cap, make_sched, false)
+        self.dispatch(specs, &mut rr, make_kv, per_stream_cap, make_sched, false, 1)
     }
 
     /// The routed cluster driver. Requests are dispatched ONE AT A TIME in
@@ -268,15 +314,46 @@ impl ClusterSim {
         make_sched: F,
     ) -> ClusterResult
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
         K: FnMut() -> KvManager,
     {
-        self.dispatch(specs, router, make_kv, per_stream_cap, make_sched, true)
+        self.dispatch(specs, router, make_kv, per_stream_cap, make_sched, true, 1)
+    }
+
+    /// [`run_routed`](Self::run_routed) with replica execution spread over
+    /// `threads` OS threads (0 = one per available core). Replicas only
+    /// synchronize at dispatch instants and share no state in between
+    /// (each owns its pools, KV and schedulers), so every thread count —
+    /// including 1, which skips spawning entirely — produces bitwise-
+    /// identical results; the router still sees each arrival's consistent
+    /// cluster snapshot.
+    pub fn run_routed_threads<'a, F, K>(
+        &self,
+        specs: &[RequestSpec],
+        router: &mut dyn RoutePolicy,
+        make_kv: K,
+        per_stream_cap: Option<usize>,
+        make_sched: F,
+        threads: usize,
+    ) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
+        K: FnMut() -> KvManager,
+    {
+        self.dispatch(specs, router, make_kv, per_stream_cap, make_sched, true, threads)
     }
 
     /// Shared dispatch loop. `track_load` gates the per-dispatch replica
     /// snapshots (views + imbalance samples): the routed entry point pays
     /// for them, the round-robin compatibility path skips them.
+    ///
+    /// `threads` (0 = one per core) spreads replica execution between
+    /// dispatch instants over a persistent scoped worker pool; `1` runs
+    /// the heap-driven serial loop with no spawning. Both paths process
+    /// each replica's events in the same per-replica order and replicas
+    /// share no state between dispatch barriers, so results are bitwise
+    /// independent of the thread count.
+    #[allow(clippy::too_many_arguments)]
     fn dispatch<'a, F, K>(
         &self,
         specs: &[RequestSpec],
@@ -285,13 +362,19 @@ impl ClusterSim {
         per_stream_cap: Option<usize>,
         mut make_sched: F,
         track_load: bool,
+        threads: usize,
     ) -> ClusterResult
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
         K: FnMut() -> KvManager,
     {
         let r = self.sims.len();
         assert!(r > 0, "cluster needs at least one replica");
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
         let mut runs: Vec<PipelineRun> = Vec::with_capacity(r);
         for sim in &self.sims {
             runs.push(PipelineRun::new(sim, make_kv(), per_stream_cap, &mut make_sched));
@@ -301,80 +384,40 @@ impl ClusterSim {
         let mut replica_of = vec![0usize; specs.len()];
         // dispatch order: (arrival, spec index), stable on 0.0 ties
         let mut order: Vec<usize> = (0..specs.len()).collect();
-        order.sort_by(|&a, &b| {
-            specs[a].arrival.partial_cmp(&specs[b].arrival).unwrap().then(a.cmp(&b))
-        });
-        let mut cursor = 0usize;
+        order.sort_by(|&a, &b| specs[a].arrival.total_cmp(&specs[b].arrival).then(a.cmp(&b)));
         let mut out_sums = vec![0.0f64; r];
         let mut samples = 0usize;
         // what a views-blind policy (round-robin compatibility path) sees:
         // hoisted so the untracked dispatch loop never allocates
         let blank_views = vec![ReplicaView::default(); r];
 
-        loop {
-            // earliest replica event vs next arrival; arrivals win ties so
-            // admission at time t always sees requests that arrived at t
-            let next_ev: Option<(f64, usize)> = runs
-                .iter()
-                .enumerate()
-                .filter_map(|(ri, run)| run.next_event_time().map(|t| (t, ri)))
-                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-            let next_arr = if cursor < order.len() {
-                Some(specs[order[cursor]].arrival)
-            } else {
-                None
-            };
-
-            let route_now = match (next_ev, next_arr) {
-                (_, None) => false,
-                (None, Some(_)) => true,
-                (Some((t, _)), Some(arr)) => arr <= t,
-            };
-            if route_now {
-                let g = order[cursor];
-                cursor += 1;
-                let scans = track_load.then(|| {
-                    runs.iter()
-                        .map(|run| ReplicaView { outstanding_tokens: run.outstanding_tokens() })
-                        .collect::<Vec<_>>()
-                });
-                let views: &[ReplicaView] = scans.as_deref().unwrap_or(&blank_views);
-                let ri = router.route(&specs[g], views).min(r - 1);
-                let local = runs[ri].push(specs[g]);
-                debug_assert_eq!(local, globals[ri].len());
-                globals[ri].push(g);
-                replica_of[g] = ri;
-                if track_load {
-                    // imbalance statistic: post-dispatch snapshot. Only
-                    // the routed replica changed, so reuse the routing
-                    // views for the rest instead of rescanning.
-                    for (i, view) in views.iter().enumerate() {
-                        out_sums[i] += if i == ri {
-                            runs[ri].outstanding_tokens() as f64
-                        } else {
-                            view.outstanding_tokens as f64
-                        };
-                    }
-                    samples += 1;
-                }
-            } else if let Some((_, ri)) = next_ev {
-                runs[ri].step();
-            } else {
-                // no timed events anywhere and no arrivals left: resolve
-                // per-replica stalls like the single-replica driver (each
-                // demotion retires one waiter, so this terminates)
-                let mut progressed = false;
-                for run in runs.iter_mut() {
-                    match run.resolve_stall() {
-                        StallOutcome::Demoted => progressed = true,
-                        StallOutcome::Wedged => run.panic_wedged(),
-                        StallOutcome::Idle => {}
-                    }
-                }
-                if !progressed {
-                    break;
-                }
-            }
+        if threads > 1 && r > 1 {
+            dispatch_parallel(
+                specs,
+                router,
+                &order,
+                &mut runs,
+                &mut globals,
+                &mut replica_of,
+                track_load,
+                &mut out_sums,
+                &mut samples,
+                &blank_views,
+                threads,
+            );
+        } else {
+            dispatch_serial(
+                specs,
+                router,
+                &order,
+                &mut runs,
+                &mut globals,
+                &mut replica_of,
+                track_load,
+                &mut out_sums,
+                &mut samples,
+                &blank_views,
+            );
         }
 
         let mut result = ClusterResult {
@@ -397,6 +440,256 @@ impl ClusterSim {
         }
         result
     }
+}
+
+/// The single-threaded dispatch loop over a lazily-deleted binary-heap
+/// event queue keyed by [`EventKey`]. Heap entries are refreshed (pushed,
+/// never removed in place) whenever a replica steps or receives a push;
+/// a popped entry is validated against the replica's CURRENT next event
+/// time and discarded when stale, so duplicates are sound. This replaces
+/// the O(replicas) `min_by` rescan the seed ran on every loop turn.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_serial(
+    specs: &[RequestSpec],
+    router: &mut dyn RoutePolicy,
+    order: &[usize],
+    runs: &mut [PipelineRun],
+    globals: &mut [Vec<usize>],
+    replica_of: &mut [usize],
+    track_load: bool,
+    out_sums: &mut [f64],
+    samples: &mut usize,
+    blank_views: &[ReplicaView],
+) {
+    let r = runs.len();
+    let mut heap: std::collections::BinaryHeap<EventKey> =
+        std::collections::BinaryHeap::with_capacity(2 * r);
+    let mut cursor = 0usize;
+    loop {
+        // earliest replica event vs next arrival; arrivals win ties so
+        // admission at time t always sees requests that arrived at t
+        let next_ev: Option<(f64, usize)> = loop {
+            match heap.peek().copied() {
+                None => break None,
+                Some(e) => {
+                    if runs[e.ri].next_event_time() == Some(e.t) {
+                        break Some((e.t, e.ri));
+                    }
+                    heap.pop(); // stale entry: the replica moved past it
+                }
+            }
+        };
+        let next_arr = (cursor < order.len()).then(|| specs[order[cursor]].arrival);
+
+        let route_now = match (next_ev, next_arr) {
+            (_, None) => false,
+            (None, Some(_)) => true,
+            (Some((t, _)), Some(arr)) => arr <= t,
+        };
+        if route_now {
+            let g = order[cursor];
+            cursor += 1;
+            let scans = track_load.then(|| {
+                runs.iter()
+                    .map(|run| ReplicaView { outstanding_tokens: run.outstanding_tokens() })
+                    .collect::<Vec<_>>()
+            });
+            let views: &[ReplicaView] = scans.as_deref().unwrap_or(blank_views);
+            let ri = router.route(&specs[g], views).min(r - 1);
+            let local = runs[ri].push(specs[g]);
+            debug_assert_eq!(local, globals[ri].len());
+            globals[ri].push(g);
+            replica_of[g] = ri;
+            if track_load {
+                // imbalance statistic: post-dispatch snapshot. Only
+                // the routed replica changed, so reuse the routing
+                // views for the rest instead of rescanning.
+                for (i, view) in views.iter().enumerate() {
+                    out_sums[i] += if i == ri {
+                        runs[ri].outstanding_tokens() as f64
+                    } else {
+                        view.outstanding_tokens as f64
+                    };
+                }
+                *samples += 1;
+            }
+            // the push may have woken the replica (or moved its wake-up
+            // earlier): refresh its heap entry
+            if let Some(t) = runs[ri].next_event_time() {
+                heap.push(EventKey::new(t, ri));
+            }
+        } else if let Some((_, ri)) = next_ev {
+            heap.pop(); // consume the entry we validated above
+            runs[ri].step();
+            if let Some(t) = runs[ri].next_event_time() {
+                heap.push(EventKey::new(t, ri));
+            }
+        } else {
+            // no timed events anywhere and no arrivals left: resolve
+            // per-replica stalls like the single-replica driver (each
+            // demotion retires one waiter, so this terminates)
+            let mut progressed = false;
+            for (ri, run) in runs.iter_mut().enumerate() {
+                match run.resolve_stall() {
+                    StallOutcome::Demoted => progressed = true,
+                    StallOutcome::Wedged => run.panic_wedged(),
+                    StallOutcome::Idle => {}
+                }
+                if let Some(t) = run.next_event_time() {
+                    heap.push(EventKey::new(t, ri));
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+}
+
+/// The multi-threaded dispatch loop: a persistent pool of scoped workers
+/// advances disjoint replica subsets (replica `i` belongs to worker
+/// `i % workers`) up to a shared horizon between two barrier waits per
+/// round, while the driver routes at most one arrival per round with the
+/// workers parked. Replicas share nothing between dispatch instants, so
+/// any interleaving of their event processing — including this one —
+/// yields results bitwise identical to the serial loop.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_parallel(
+    specs: &[RequestSpec],
+    router: &mut dyn RoutePolicy,
+    order: &[usize],
+    runs: &mut [PipelineRun],
+    globals: &mut [Vec<usize>],
+    replica_of: &mut [usize],
+    track_load: bool,
+    out_sums: &mut [f64],
+    samples: &mut usize,
+    blank_views: &[ReplicaView],
+    threads: usize,
+) {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Barrier, Mutex};
+
+    let r = runs.len();
+    let workers = threads.min(r);
+    let cells: Vec<Mutex<&mut PipelineRun>> = runs.iter_mut().map(Mutex::new).collect();
+    let barrier = Barrier::new(workers + 1);
+    // the advance horizon, as f64 bits (an AtomicU64 is the dependency-free
+    // way to publish a float); written by the driver strictly before the
+    // round barrier that releases the workers
+    let horizon_bits = AtomicU64::new(f64::INFINITY.to_bits());
+    let done = AtomicBool::new(false);
+    // a worker panic (an internal invariant tripping inside step()) must
+    // not strand the driver at the round barrier: workers catch it, park
+    // it here, and still hit the barrier; the driver re-raises it
+    let worker_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let cells = &cells;
+            let barrier = &barrier;
+            let horizon_bits = &horizon_bits;
+            let done = &done;
+            let worker_panic = &worker_panic;
+            scope.spawn(move || loop {
+                barrier.wait();
+                if done.load(Ordering::Acquire) {
+                    break;
+                }
+                let h = f64::from_bits(horizon_bits.load(Ordering::Acquire));
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut ri = w;
+                    while ri < cells.len() {
+                        if let Ok(mut run) = cells[ri].lock() {
+                            run.advance_until(h);
+                        }
+                        ri += workers;
+                    }
+                }));
+                if let Err(p) = outcome {
+                    *worker_panic.lock().unwrap() = Some(p);
+                }
+                barrier.wait();
+            });
+        }
+
+        // One advance round: all replicas process every event strictly
+        // before `h`. Arrival-beats-event tie-breaking is the strict `<`
+        // inside `advance_until`.
+        let advance_all = |h: f64| {
+            horizon_bits.store(h.to_bits(), Ordering::Release);
+            barrier.wait(); // release the round
+            barrier.wait(); // every replica reached the horizon
+            if let Some(p) = worker_panic.lock().unwrap().take() {
+                done.store(true, Ordering::Release);
+                barrier.wait(); // let the surviving workers observe `done`
+                std::panic::resume_unwind(p);
+            }
+        };
+
+        // workers are parked at the round barrier whenever driver code
+        // below runs, so every lock here is uncontended by construction
+        for &g in order {
+            advance_all(specs[g].arrival);
+            let scans = track_load.then(|| {
+                cells
+                    .iter()
+                    .map(|c| ReplicaView {
+                        outstanding_tokens: c.lock().unwrap().outstanding_tokens(),
+                    })
+                    .collect::<Vec<_>>()
+            });
+            let views: &[ReplicaView] = scans.as_deref().unwrap_or(blank_views);
+            let ri = router.route(&specs[g], views).min(r - 1);
+            {
+                let mut run = cells[ri].lock().unwrap();
+                let local = run.push(specs[g]);
+                debug_assert_eq!(local, globals[ri].len());
+                if track_load {
+                    for (i, view) in views.iter().enumerate() {
+                        out_sums[i] += if i == ri {
+                            run.outstanding_tokens() as f64
+                        } else {
+                            view.outstanding_tokens as f64
+                        };
+                    }
+                    *samples += 1;
+                }
+            }
+            globals[ri].push(g);
+            replica_of[g] = ri;
+        }
+
+        // arrivals exhausted: drain every replica, then resolve stalls
+        // exactly like the serial driver until nothing progresses
+        loop {
+            advance_all(f64::INFINITY);
+            let mut progressed = false;
+            let mut wedged = None;
+            for (ri, cell) in cells.iter().enumerate() {
+                match cell.lock().unwrap().resolve_stall() {
+                    StallOutcome::Demoted => progressed = true,
+                    StallOutcome::Wedged => {
+                        wedged = Some(ri);
+                        break;
+                    }
+                    StallOutcome::Idle => {}
+                }
+            }
+            if let Some(ri) = wedged {
+                // release the parked workers before panicking, or the
+                // scope's implicit join would deadlock on the barrier
+                done.store(true, Ordering::Release);
+                barrier.wait();
+                cells[ri].lock().unwrap().panic_wedged();
+            }
+            if !progressed {
+                break;
+            }
+        }
+        done.store(true, Ordering::Release);
+        barrier.wait();
+    });
 }
 
 #[cfg(test)]

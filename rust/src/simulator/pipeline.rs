@@ -107,6 +107,11 @@ pub struct PipelineResult {
     pub metrics: Metrics,
     /// Per-stage schedule trace (recorded when `PipelineSim::trace` is on).
     pub trace: Vec<TraceEvent>,
+    /// Lazily-computed sort of `completions` — an internal memo so curve
+    /// queries stop cloning + sorting per call. Public only so external
+    /// struct literals with `..Default::default()` keep compiling; leave
+    /// it untouched when building results by hand.
+    pub sorted_completions: std::sync::OnceLock<Vec<f64>>,
 }
 
 impl PipelineResult {
@@ -119,10 +124,14 @@ impl PipelineResult {
     }
 
     /// Sorted completion curve: (i+1 requests done, time) — Fig. 12b.
+    /// Sorted once per result (NaN rejections last under `total_cmp`).
     pub fn completion_curve(&self) -> Vec<(usize, f64)> {
-        let mut c = self.completions.clone();
-        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        c.into_iter().enumerate().map(|(i, t)| (i + 1, t)).collect()
+        let sorted = self.sorted_completions.get_or_init(|| {
+            let mut c = self.completions.clone();
+            c.sort_by(f64::total_cmp);
+            c
+        });
+        sorted.iter().enumerate().map(|(i, &t)| (i + 1, t)).collect()
     }
 
     pub fn utilization(&self) -> f64 {
@@ -238,7 +247,7 @@ impl PipelineSim {
         make_sched: F,
     ) -> PipelineResult
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let slots = self.pp.max(1) * slots_per_stream;
         self.run_shared(specs, KvManager::new(slots), Some(slots_per_stream), make_sched)
@@ -256,7 +265,7 @@ impl PipelineSim {
         mut make_sched: F,
     ) -> PipelineResult
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let mut run = PipelineRun::new(self, kv, per_stream_cap, &mut make_sched);
         for &spec in specs {
@@ -286,7 +295,9 @@ pub struct PipelineRun<'a, 'b> {
     n_streams: usize,
     per_stream_cap: Option<usize>,
     pools: Vec<RequestPool>,
-    scheds: Vec<Box<dyn Scheduler + 'a>>,
+    // `Send` so a cluster worker thread may own the run between dispatch
+    // barriers (every concrete scheduler is plain data)
+    scheds: Vec<Box<dyn Scheduler + Send + 'a>>,
     kv: KvManager,
     events: Vec<Event>,
     /// Swap-in time charged by admission while no batch ran yet; carried
@@ -307,6 +318,9 @@ pub struct PipelineRun<'a, 'b> {
     global_ids: Vec<Vec<usize>>,
     /// Round-robin cursor for `push`'s stream assignment.
     next_stream: usize,
+    /// Reused (stream, request) scratch for the per-apply in-flight scan —
+    /// rebuilding it per event was the step path's hottest allocation.
+    scratch_in_flight: Vec<(usize, usize)>,
     result: PipelineResult,
 }
 
@@ -319,7 +333,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         make_sched: &mut F,
     ) -> Self
     where
-        F: FnMut() -> Box<dyn Scheduler + 'a>,
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let n_streams = sim.pp.max(1);
         PipelineRun {
@@ -339,6 +353,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             stage_used: vec![false; sim.pp],
             global_ids: vec![Vec::new(); n_streams],
             next_stream: 0,
+            scratch_in_flight: Vec::new(),
             result: PipelineResult::default(),
         }
     }
@@ -387,6 +402,24 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             });
         }
         min_t
+    }
+
+    /// Process every pending event strictly before `horizon`, in this
+    /// replica's usual event order. The strict `<` is the cluster
+    /// dispatcher's arrival-beats-event tie-break: an event AT the horizon
+    /// instant belongs to the round after the dispatch it ties with, so a
+    /// parallel drain up to each arrival stays bitwise identical to the
+    /// serial loop. NaN event times fail loudly here, mirroring the
+    /// serial dispatcher's heap-key assertion.
+    pub fn advance_until(&mut self, horizon: f64) {
+        while let Some(t) = self.next_event_time() {
+            assert!(!t.is_nan(), "replica produced a NaN event time");
+            if t < horizon {
+                self.step();
+            } else {
+                break;
+            }
+        }
     }
 
     /// True when every request ever pushed reached a terminal state.
@@ -551,7 +584,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         let finish = t_in - self.sim.p2p_time(tokens); // exit of last stage
 
         // attribute this micro-batch's bubbles to its requests
-        for &req in &batch.requests() {
+        for req in batch.request_iter() {
             self.result.bubble_per_request[self.global_ids[si][req]] += bubble_this_mb;
         }
         self.result.micro_batches += 1;
@@ -585,18 +618,14 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         self.clock = self.clock.max(finish);
         // requests executing in OTHER streams' in-flight micro-batches are
         // not preemptible (their KV is under the running kernel)
-        let in_flight: Vec<(usize, usize)> = self
-            .events
-            .iter()
-            .enumerate()
-            .flat_map(|(j, ev)| {
-                let reqs = match ev {
-                    Event::Apply { batch, .. } => batch.requests(),
-                    _ => Vec::new(),
-                };
-                reqs.into_iter().map(move |r| (j, r))
-            })
-            .collect();
+        self.scratch_in_flight.clear();
+        for (j, ev) in self.events.iter().enumerate() {
+            if let Event::Apply { batch, .. } = ev {
+                for r in batch.request_iter() {
+                    self.scratch_in_flight.push((j, r));
+                }
+            }
+        }
         // the engine-shared state transition: progress, token stamps,
         // completions, growth, cross-stream preemption
         let effects = self.sim.applier.apply_guarded(
@@ -605,7 +634,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             &mut self.kv,
             &batch,
             finish,
-            &in_flight,
+            &self.scratch_in_flight,
         );
         for local in &effects.finished {
             self.result.completions[self.global_ids[si][*local]] = finish;
@@ -661,8 +690,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 self.pools[pa]
                     .get(a)
                     .arrival
-                    .partial_cmp(&self.pools[pb].get(b).arrival)
-                    .unwrap()
+                    .total_cmp(&self.pools[pb].get(b).arrival)
                     .then(pa.cmp(&pb))
                     .then(a.cmp(&b))
             });
@@ -872,7 +900,7 @@ mod tests {
         let pp = 2;
         let sim = PipelineSim::new(gpt3_profiler(pp), pp);
         let res = sim.run_shared(&tight_specs(), KvManager::paged(16, 128), Some(4), || {
-            Box::new(HybridScheduler::new(256, 4, 0)) as Box<dyn Scheduler>
+            Box::new(HybridScheduler::new(256, 4, 0)) as Box<dyn Scheduler + Send>
         });
         assert!(res.completions.iter().all(|t| !t.is_nan()));
         assert!(res.metrics.preemptions > 0, "undersized shared pool must preempt");
@@ -890,7 +918,7 @@ mod tests {
         let specs = tight_specs();
         let kv = || KvManager::paged(16, 128);
         let sched =
-            || Box::new(HybridScheduler::new(256, 4, 0)) as Box<dyn Scheduler>;
+            || Box::new(HybridScheduler::new(256, 4, 0)) as Box<dyn Scheduler + Send>;
         let costed = sim.run_shared(&specs, kv(), Some(4), sched);
         let free = free_sim.run_shared(&specs, kv(), Some(4), sched);
         assert!(costed.metrics.preemptions > 0);
@@ -915,7 +943,7 @@ mod tests {
         let specs = shared_prefix_population(&mut rng, 32, 4, 0.8, 256, 32, 128, 5.0);
         let res = sim.run_shared(&specs, KvManager::paged(96, 128), Some(8), || {
             Box::new(HybridScheduler::new(256, 8, 2).with_prefix_share(true))
-                as Box<dyn Scheduler>
+                as Box<dyn Scheduler + Send>
         });
         assert!(res.completions.iter().all(|t| !t.is_nan()));
         assert!(res.metrics.prefix_hits > 0, "cross-stream sharers must hit");
@@ -942,7 +970,7 @@ mod tests {
     fn admitted_but_unschedulable_requests_panic_loudly() {
         let sim = PipelineSim::new(gpt3_profiler(2), 2);
         let specs = workload(4);
-        let _ = sim.run(&specs, 4, || Box::new(NullScheduler) as Box<dyn Scheduler>);
+        let _ = sim.run(&specs, 4, || Box::new(NullScheduler) as Box<dyn Scheduler + Send>);
     }
 
     /// The wedged message now carries the diagnostics that hid this bug
@@ -953,7 +981,7 @@ mod tests {
     fn wedged_panic_reports_kv_and_prefix_wait_diagnostics() {
         let sim = PipelineSim::new(gpt3_profiler(2), 2);
         let specs = workload(4);
-        let _ = sim.run(&specs, 4, || Box::new(NullScheduler) as Box<dyn Scheduler>);
+        let _ = sim.run(&specs, 4, || Box::new(NullScheduler) as Box<dyn Scheduler + Send>);
     }
 
     /// Tentpole guarantee (3), pipeline side — the exact ROADMAP hole,
@@ -990,7 +1018,7 @@ mod tests {
                 HybridScheduler::new(32, 8, 0)
                     .with_prefix_share(true)
                     .with_max_prefix_wait(1_000),
-            ) as Box<dyn Scheduler>
+            ) as Box<dyn Scheduler + Send>
         });
         assert!(res.completions.iter().all(|t| !t.is_nan()), "no request starves");
         assert!(res.first_tokens.iter().all(|t| !t.is_nan()));
@@ -1009,7 +1037,7 @@ mod tests {
     fn pipeline_run_steps_incrementally_with_late_pushes() {
         let sim = PipelineSim::new(gpt3_profiler(1), 1);
         let mut make =
-            || Box::new(SarathiScheduler::new(256, 8, 128)) as Box<dyn Scheduler>;
+            || Box::new(SarathiScheduler::new(256, 8, 128)) as Box<dyn Scheduler + Send>;
         let mut run = PipelineRun::new(&sim, KvManager::new(8), Some(8), &mut make);
         assert_eq!(run.outstanding_tokens(), 0);
         let spec = RequestSpec { prompt_len: 100, decode_len: 10, arrival: 0.0, prefix: None };

@@ -15,7 +15,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -80,7 +80,7 @@ impl Summary {
     /// plots.
     pub fn cdf(&self) -> Vec<(f64, f64)> {
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         let n = v.len() as f64;
         v.into_iter().enumerate().map(|(i, x)| (x, (i + 1) as f64 / n)).collect()
     }

@@ -259,7 +259,7 @@ mod tests {
         // the slot timeline is a strict Poisson draw: all arrivals unique,
         // positive, and a permutation ordered by time covers every request
         let mut by_time: Vec<&RequestSpec> = pop.iter().collect();
-        by_time.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        by_time.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         assert!(by_time[0].arrival > 0.0);
         assert!(by_time.windows(2).all(|w| w[0].arrival < w[1].arrival));
         // temporal locality: consecutive arrivals share a template far

@@ -1,0 +1,112 @@
+//! PR-6 acceptance: the multi-threaded routed cluster loop is a pure
+//! wall-clock optimization. For every thread count, every seed, the
+//! simulation must be BITWISE identical to the serial heap-driven loop —
+//! same completion times bit for bit, same merged JSONL trace byte for
+//! byte. Replicas only synchronize at dispatch instants and share no
+//! state in between, so any divergence is a real scheduling/ordering bug,
+//! not float noise — hence `to_bits`, not tolerances.
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
+use sarathi::coordinator::sched::HybridScheduler;
+use sarathi::coordinator::{KvManager, Scheduler};
+use sarathi::simulator::{ClusterResult, ClusterSim, PrefixAffinity};
+use sarathi::util::Rng;
+use sarathi::workload::{shared_prefix_population, with_template_burst_arrivals, RequestSpec};
+
+const REPLICAS: usize = 8;
+const SEEDS: u64 = 8;
+const THREADS: [usize; 3] = [2, 4, 8];
+
+fn cluster() -> ClusterSim {
+    ClusterSim::new(
+        Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
+            .with_parallel(ParallelConfig::tp_pp(1, 1).with_replicas(REPLICAS)),
+    )
+}
+
+/// Bursty shared-prefix traffic (salted template ids per seed, like the
+/// router acceptance suite) — prefix waits, preemptions and bypasses all
+/// fire, so the determinism claim covers the gnarly paths too.
+fn workload(seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut pop = shared_prefix_population(&mut rng, 160, 12, 0.55, 384, 64, 256, 4.0);
+    for s in pop.iter_mut() {
+        if let Some(p) = s.prefix.as_mut() {
+            p.id += seed * 7919;
+        }
+    }
+    with_template_burst_arrivals(&mut rng, pop, 48.0, 6)
+}
+
+fn run(cluster: &ClusterSim, pop: &[RequestSpec], threads: usize) -> ClusterResult {
+    let mut router = PrefixAffinity::new(PrefixAffinity::DEFAULT_SPILL);
+    cluster.run_routed_threads(
+        pop,
+        &mut router,
+        || KvManager::paged(32, 32),
+        None,
+        || {
+            Box::new(HybridScheduler::new(256, 8, 2).with_prefix_share(true))
+                as Box<dyn Scheduler + Send>
+        },
+        threads,
+    )
+}
+
+fn jsonl_of(res: &ClusterResult, tag: &str) -> String {
+    let name = format!("sarathi_determinism_{tag}_{}.jsonl", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    res.write_jsonl(&path).expect("write jsonl trace");
+    let text = std::fs::read_to_string(&path).expect("read jsonl trace back");
+    let _ = std::fs::remove_file(&path);
+    text
+}
+
+#[test]
+fn threaded_routed_runs_are_bitwise_identical_to_serial() {
+    let cluster = cluster();
+    for seed in 1..=SEEDS {
+        let pop = workload(seed);
+        let serial = run(&cluster, &pop, 1);
+        assert!(
+            serial.completions.iter().all(|t| !t.is_nan()),
+            "seed {seed}: every request must complete"
+        );
+        let serial_trace = jsonl_of(&serial, &format!("s{seed}_t1"));
+        for threads in THREADS {
+            let threaded = run(&cluster, &pop, threads);
+            assert_eq!(
+                serial.completions.len(),
+                threaded.completions.len(),
+                "seed {seed} threads {threads}: completion count diverged"
+            );
+            for (i, (a, b)) in
+                serial.completions.iter().zip(&threaded.completions).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed} threads {threads} request {i}: {a} != {b}"
+                );
+            }
+            let threaded_trace = jsonl_of(&threaded, &format!("s{seed}_t{threads}"));
+            assert_eq!(
+                serial_trace, threaded_trace,
+                "seed {seed} threads {threads}: merged JSONL trace diverged"
+            );
+        }
+    }
+}
+
+/// threads=0 (auto: one worker per core) goes through the same parallel
+/// machinery with a machine-dependent worker count — it too must match.
+#[test]
+fn auto_thread_count_matches_serial() {
+    let cluster = cluster();
+    let pop = workload(99);
+    let serial = run(&cluster, &pop, 1);
+    let auto = run(&cluster, &pop, 0);
+    for (a, b) in serial.completions.iter().zip(&auto.completions) {
+        assert_eq!(a.to_bits(), b.to_bits(), "threads=0 diverged from serial");
+    }
+}

@@ -49,7 +49,7 @@ fn acceptance_workload(seed: u64) -> Vec<RequestSpec> {
     with_template_burst_arrivals(&mut rng, pop, 48.0, 6)
 }
 
-fn hybrid_sched() -> Box<dyn Scheduler + 'static> {
+fn hybrid_sched() -> Box<dyn Scheduler + Send + 'static> {
     Box::new(HybridScheduler::new(256, 8, 2).with_prefix_share(true))
 }
 
@@ -162,7 +162,7 @@ fn round_robin_routing_reproduces_the_static_partition_bitwise() {
 
     let make_kv = || KvManager::paged(40, 32);
     let make_sched =
-        || Box::new(HybridScheduler::new(256, 8, 2)) as Box<dyn Scheduler>;
+        || Box::new(HybridScheduler::new(256, 8, 2)) as Box<dyn Scheduler + Send>;
 
     let routed = cluster.run_routed(&pop, &mut RoundRobin::new(), make_kv, Some(8), make_sched);
     assert!(routed.replica_of.iter().enumerate().all(|(g, &ri)| ri == g % replicas));
@@ -297,7 +297,7 @@ fn jsq_balances_outstanding_work_across_replicas() {
         &mut jsq,
         || KvManager::paged(64, 32),
         None,
-        || Box::new(HybridScheduler::new(256, 8, 2)) as Box<dyn Scheduler>,
+        || Box::new(HybridScheduler::new(256, 8, 2)) as Box<dyn Scheduler + Send>,
     );
     assert!(res.completions.iter().all(|t| !t.is_nan()));
     assert_eq!(res.router, "jsq");

@@ -55,7 +55,7 @@ const SHARED_BLOCKS: usize = 27 * 4096 / BLOCK;
 fn run_shared(
     sim: &PipelineSim,
     specs: &[RequestSpec],
-    mk: impl Fn() -> Box<dyn Scheduler>,
+    mk: impl Fn() -> Box<dyn Scheduler + Send>,
 ) -> PipelineResult {
     sim.run_shared(specs, KvManager::paged(SHARED_BLOCKS, BLOCK), Some(27), || mk())
 }
@@ -109,7 +109,7 @@ fn undersized_shared_pool_preempts_with_visible_swap_time() {
     let specs = workload(64, 3.0);
     let sim = sim(4);
     let res = sim.run_shared(&specs, KvManager::paged(60, BLOCK), Some(8), || {
-        Box::new(HybridScheduler::new(128, 8, 0)) as Box<dyn Scheduler>
+        Box::new(HybridScheduler::new(128, 8, 0)) as Box<dyn Scheduler + Send>
     });
 
     assert!(res.completions.iter().all(|t| !t.is_nan()), "everyone still completes");

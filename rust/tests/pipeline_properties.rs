@@ -42,10 +42,10 @@ fn rand_run(case: &mut Case) -> (PipelineResult, usize, usize) {
     let res = if use_sarathi {
         let chunk = *case.rng.choose(&[128usize, 256]);
         sim.run(&specs, slots, || {
-            Box::new(SarathiScheduler::new(chunk, slots, 128)) as Box<dyn Scheduler>
+            Box::new(SarathiScheduler::new(chunk, slots, 128)) as Box<dyn Scheduler + Send>
         })
     } else {
-        sim.run(&specs, slots, || Box::new(OrcaScheduler::best(slots)) as Box<dyn Scheduler>)
+        sim.run(&specs, slots, || Box::new(OrcaScheduler::best(slots)) as Box<dyn Scheduler + Send>)
     };
     (res, specs.len(), pp)
 }
@@ -78,7 +78,7 @@ fn stage_executions_never_overlap() {
                 .filter(|e| e.stage == stage)
                 .map(|e| (e.start, e.end))
                 .collect();
-            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            evs.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in evs.windows(2) {
                 if w[1].0 + 1e-12 < w[0].1 {
                     return Err(format!(
@@ -178,7 +178,7 @@ fn shared_paged_pool_conserves_tokens_and_blocks() {
         let budget = *case.rng.choose(&[128usize, 256]);
 
         let res = sim.run_shared(&specs, KvManager::paged(num_blocks, bs), Some(4), || {
-            Box::new(HybridScheduler::new(budget, 4, watermark)) as Box<dyn Scheduler>
+            Box::new(HybridScheduler::new(budget, 4, watermark)) as Box<dyn Scheduler + Send>
         });
 
         // every request completes exactly once, inside the makespan
@@ -241,7 +241,7 @@ fn single_stage_is_bubble_free() {
         let sim = PipelineSim::new(profiler, 1);
         let specs = rand_specs(case);
         let res = sim.run(&specs, 8, || {
-            Box::new(OrcaScheduler::best(8)) as Box<dyn Scheduler>
+            Box::new(OrcaScheduler::best(8)) as Box<dyn Scheduler + Send>
         });
         if res.total_bubble != 0.0 {
             return Err(format!("pp=1 bubble {}", res.total_bubble));

@@ -66,7 +66,7 @@ fn run(sim: &PipelineSim, specs: &[RequestSpec], share: bool) -> PipelineResult 
             HybridScheduler::new(BUDGET, MAX_BATCH, WATERMARK)
                 .with_prefix_share(share)
                 .with_max_prefix_wait(MAX_WAIT),
-        ) as Box<dyn Scheduler>
+        ) as Box<dyn Scheduler + Send>
     })
 }
 
