@@ -60,6 +60,19 @@ echo "$ROUT" | grep -E 'load_imbalance=[0-9.]+' \
 grep -q '"replica":' "$RTRACE" || { echo "JSONL lacks replica tags"; exit 1; }
 rm -f "$RTRACE"
 
+echo "== smoke: disaggregated topology — goodput in report, kv_transfer_time in JSONL =="
+DTRACE="$(mktemp -t disagg_trace.XXXXXX.jsonl)"
+DOUT="$(cargo run --release -- simulate --requests 120 --rate 2 \
+    --replicas 4 --topology disagg --prefill-replicas 1 \
+    --interconnect-gbps 200 --threads 2 --json-out "$DTRACE")"
+echo "$DOUT" | grep -E 'topology=disagg' || { echo "report lacks topology"; exit 1; }
+echo "$DOUT" | grep -E 'goodput .*attained_frac=[0-9.]+' \
+    || { echo "report lacks goodput"; exit 1; }
+echo "$DOUT" | grep -E 'kv_transfers=[1-9][0-9]*' \
+    || { echo "the fabric moved no KV"; exit 1; }
+grep -q '"kv_transfer_time":' "$DTRACE" || { echo "JSONL lacks kv_transfer_time"; exit 1; }
+rm -f "$DTRACE"
+
 echo "== bench: hot-path + cluster sweep (quick), BENCH_*.json artifacts + 2x regression gate =="
 cargo bench --bench scheduler_hotpath
 cargo bench --bench cluster_sweep -- --quick

@@ -12,6 +12,12 @@
 //! time more than 2× slower FAILS the bench (exit 1) — the CI regression
 //! gate. A `null` baseline (the bootstrap state) warns and passes.
 //!
+//! A second, timing-only **64-replica scale point** (first step of the
+//! "hundreds of replicas" profiling item) rides along: per-replica
+//! split-RNG workload shards, one parallel routed run, extra `scale_*`
+//! keys in the same JSON. It is NOT part of the regression gate — the
+//! gate reads `serial_secs`/`quick_serial_secs` only.
+//!
 //! `--quick` (or `BENCH_QUICK=1`) runs the CI-sized sweep: same shape,
 //! fewer requests.
 
@@ -23,13 +29,21 @@ use sarathi::coordinator::sched::HybridScheduler;
 use sarathi::coordinator::{KvManager, Scheduler};
 use sarathi::simulator::{ClusterResult, ClusterSim, PrefixAffinity};
 use sarathi::util::Rng;
-use sarathi::workload::{shared_prefix_population, with_template_burst_arrivals, RequestSpec};
+use sarathi::workload::{
+    sharded_shared_prefix_population, shared_prefix_population, with_template_burst_arrivals,
+    RequestSpec,
+};
 
 const REPLICAS: usize = 8;
+const SCALE_REPLICAS: usize = 64;
+
+fn deployment_of(replicas: usize) -> Deployment {
+    Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, 1).with_replicas(replicas))
+}
 
 fn deployment() -> Deployment {
-    Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
-        .with_parallel(ParallelConfig::tp_pp(1, 1).with_replicas(REPLICAS))
+    deployment_of(REPLICAS)
 }
 
 /// Bursty shared-prefix traffic: 16 templates (Zipf 0.55 fanout,
@@ -89,6 +103,38 @@ fn main() {
     let speedup = serial_secs / parallel_secs.max(1e-12);
     println!("speedup: {speedup:.2}x over {cores} cores, makespan {:.2}s", serial.makespan);
 
+    // 64-replica scale point: per-replica split-RNG shards (shard i is
+    // bit-stable under replica-count changes), one parallel routed run,
+    // timing recorded but NOT regression-gated
+    let per_replica = if quick { 8 } else { 25 };
+    let scale_n = SCALE_REPLICAS * per_replica;
+    header(&format!(
+        "scale point: {SCALE_REPLICAS} replicas x {scale_n} requests (split-RNG shards)"
+    ));
+    let shards = sharded_shared_prefix_population(
+        &Rng::new(777),
+        SCALE_REPLICAS,
+        per_replica,
+        16,
+        0.55,
+        384,
+        64,
+        256,
+        4.0,
+        8.0,
+    );
+    let scale_pop: Vec<RequestSpec> = shards.into_iter().flatten().collect();
+    let scale_cluster = ClusterSim::new(deployment_of(SCALE_REPLICAS));
+    let (scale, scale_secs) = bench_once(
+        &format!("run_routed threads=0 ({SCALE_REPLICAS} replicas)"),
+        || sweep(&scale_cluster, &scale_pop, 0),
+    );
+    assert!(
+        scale.completions.iter().all(|t| !t.is_nan()),
+        "scale point: every request must complete"
+    );
+    println!("scale makespan {:.2}s, prefix_hits {}", scale.makespan, scale.prefix_hits());
+
     write_json(
         "BENCH_cluster.json",
         &[
@@ -102,6 +148,11 @@ fn main() {
             ("speedup", json_f64(speedup)),
             ("makespan", json_f64(serial.makespan)),
             ("prefix_hits", serial.prefix_hits().to_string()),
+            ("scale_replicas", SCALE_REPLICAS.to_string()),
+            ("scale_requests", scale_n.to_string()),
+            ("scale_secs", json_f64(scale_secs)),
+            ("scale_makespan", json_f64(scale.makespan)),
+            ("scale_prefix_hits", scale.prefix_hits().to_string()),
         ],
     );
 

@@ -47,6 +47,11 @@ pub struct GpuConfig {
     /// the DistServe-style price of preempting a request (arXiv
     /// 2401.09670 charges KV movement at exactly this edge).
     pub host_bw_gbps: f64,
+    /// Replica-to-replica interconnect bandwidth for KV handoff in
+    /// disaggregated topologies, GB/s — the NVLink/IB-class fabric edge,
+    /// distinct from the PCIe `host_bw_gbps` swap path (DistServe §4.3
+    /// prices prefill→decode KV migration on this link).
+    pub interconnect_gbps: f64,
     /// All-reduce effective bandwidth for TP collectives (NVLink), GB/s.
     pub allreduce_bw_gbps: f64,
 }
@@ -79,6 +84,8 @@ impl GpuConfig {
             p2p_bw_gbps: 25.0,
             // PCIe 4.0 x16 ≈ 32 GB/s peak; ~25 effective for bulk copies
             host_bw_gbps: 25.0,
+            // IB HDR-class fabric between replicas; 2× the host link
+            interconnect_gbps: 50.0,
             allreduce_bw_gbps: 300.0,
         }
     }
@@ -103,6 +110,7 @@ impl GpuConfig {
             kernel_overhead_s: 5.0e-6,
             p2p_bw_gbps: 25.0,
             host_bw_gbps: 25.0,
+            interconnect_gbps: 50.0,
             allreduce_bw_gbps: 300.0,
         }
     }

@@ -442,6 +442,27 @@ impl KvManager {
         self.block_size == DEGENERATE_BLOCK
     }
 
+    /// Serialize a finished block table into a transfer descriptor,
+    /// releasing this pool's references — the disaggregation handoff edge:
+    /// a prefill replica exports the prompt's KV, the descriptor crosses
+    /// the interconnect (costed by `simulator::transfer::CopyFabric`), and
+    /// the decode replica [`import_seq`](Self::import_seq)s it into its
+    /// own pool. Shared blocks follow normal refcount rules: exporting one
+    /// sharer's table never frees a co-sharer's blocks.
+    pub fn export_seq(&mut self, blocks: Vec<usize>, kv_tokens: usize) -> KvExport {
+        let n = blocks.len();
+        self.release_seq(blocks);
+        KvExport { kv_tokens, blocks: n }
+    }
+
+    /// Materialize a transfer descriptor into this pool: allocate a fresh
+    /// block table covering the exported tokens, all-or-nothing (`None`
+    /// under memory pressure — the caller retries admission later, it
+    /// never wedges).
+    pub fn import_seq(&mut self, export: &KvExport) -> Option<Vec<usize>> {
+        self.alloc_n(self.blocks_needed(export.kv_tokens))
+    }
+
     /// Internal fragmentation: tokens of allocated-but-unused capacity.
     /// `private_live_tokens` is the pool-wide count of live KV tokens in
     /// PRIVATE (unshared) block territory — callers pass
@@ -457,6 +478,70 @@ impl KvManager {
         self.allocated()
             .saturating_mul(self.block_size)
             .saturating_sub(private_live_tokens + self.resident_prefix_tokens())
+    }
+}
+
+/// A block table serialized for transfer between KV pools: what a prefill
+/// replica hands a decode replica at disaggregation handoff. Carries the
+/// logical content size (`kv_tokens`) and the source-side block count; the
+/// destination re-blocks under its own `block_size`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvExport {
+    /// KV entries the exported table covered.
+    pub kv_tokens: usize,
+    /// Blocks the table held on the exporting pool.
+    pub blocks: usize,
+}
+
+/// Per-stage KV ownership for pipeline parallelism: each of `stages`
+/// pipeline stages holds only its own `layers / stages` layers' KV, so a
+/// replica's KV memory is `stages` equal pools rather than one monolith.
+///
+/// Because a token's KV exists on EVERY stage (each stage's layers attend
+/// over the full sequence) and every pool has the same block size and the
+/// same per-stage capacity, the stages' block tables grow, fork and free
+/// in lock-step — stage `k`'s allocator state is block-for-block identical
+/// to stage 0's at all times. `StageKv` therefore keeps ONE canonical pool
+/// and the stage count: allocation decisions made against the canonical
+/// pool are exact for all stages, which is what keeps the pp=1 path (and
+/// every existing pp>1 experiment) byte-identical to the single-pool
+/// refactor predecessor. Byte accounting (`bytes_for_tokens`) is where the
+/// split shows: each stage moves only its layer share over the wire.
+#[derive(Clone, Debug)]
+pub struct StageKv {
+    pool: KvManager,
+    stages: usize,
+}
+
+impl StageKv {
+    /// Wrap a per-stage pool, mirrored across `stages` stages.
+    pub fn mirrored(pool: KvManager, stages: usize) -> Self {
+        assert!(stages > 0, "a replica has at least one pipeline stage");
+        StageKv { pool, stages }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    /// The canonical per-stage pool (stage 0; all stages are identical).
+    pub fn pool(&self) -> &KvManager {
+        &self.pool
+    }
+
+    pub fn pool_mut(&mut self) -> &mut KvManager {
+        &mut self.pool
+    }
+
+    /// Blocks across all stages (each stage holds its own copy of the
+    /// canonical pool's layout).
+    pub fn total_blocks(&self) -> usize {
+        self.pool.capacity() * self.stages
+    }
+
+    /// Blocks in use across all stages.
+    pub fn total_allocated(&self) -> usize {
+        self.pool.allocated() * self.stages
     }
 }
 
@@ -692,6 +777,58 @@ mod tests {
         assert_eq!(kv.prefix_fill_state(3), Some((40, 1)));
         kv.release_seq(run);
         kv.evict_prefix(3);
+    }
+
+    /// Export/import round-trip: the source pool's blocks come back to its
+    /// free list, the descriptor carries the content size, and the
+    /// destination re-blocks under its own block size — all-or-nothing
+    /// under pressure.
+    #[test]
+    fn export_import_round_trip_conserves_blocks() {
+        let mut src = KvManager::paged(8, 16);
+        let mut table = Vec::new();
+        assert!(src.extend_to(&mut table, 40)); // 3 blocks
+        let ex = src.export_seq(table, 40);
+        assert_eq!(ex, KvExport { kv_tokens: 40, blocks: 3 });
+        assert_eq!(src.available(), 8, "export releases the source table");
+        // destination uses a different block size: 40 tokens → 2×32
+        let mut dst = KvManager::paged(4, 32);
+        let imported = dst.import_seq(&ex).expect("fits");
+        assert_eq!(imported.len(), 2);
+        assert_eq!(dst.allocated(), 2);
+        dst.release_seq(imported);
+        // a full destination refuses whole, changing nothing
+        let mut tiny = KvManager::paged(1, 16);
+        assert!(tiny.import_seq(&ex).is_none());
+        assert_eq!(tiny.available(), 1);
+    }
+
+    /// Exporting a sharer's table follows refcount rules — the co-sharer's
+    /// blocks stay allocated.
+    #[test]
+    fn export_of_shared_table_never_frees_the_co_sharer() {
+        let mut kv = KvManager::paged(4, 16);
+        let run = kv.alloc_n(2).unwrap();
+        let other = kv.share_seq(&run);
+        let ex = kv.export_seq(other, 32);
+        assert_eq!(ex.blocks, 2);
+        assert!(kv.is_allocated(run[0]) && kv.is_allocated(run[1]));
+        kv.release_seq(run);
+        assert_eq!(kv.available(), 4);
+    }
+
+    /// StageKv mirrors one canonical pool across the stage count: the
+    /// pp=1 wrapper is transparent, and multi-stage accounting multiplies.
+    #[test]
+    fn stage_kv_mirrors_the_canonical_pool() {
+        let mut skv = StageKv::mirrored(KvManager::paged(8, 16), 4);
+        assert_eq!(skv.stages(), 4);
+        assert_eq!(skv.total_blocks(), 32);
+        let table = skv.pool_mut().alloc_n(3).unwrap();
+        assert_eq!(skv.total_allocated(), 12, "every stage holds its copy");
+        assert_eq!(skv.pool().allocated(), 3);
+        skv.pool_mut().release_seq(table);
+        assert_eq!(skv.total_allocated(), 0);
     }
 
     #[test]

@@ -181,6 +181,28 @@ impl LatencyReport {
     }
 }
 
+/// SLO-attainment count — the numerator of **goodput** (DistServe's
+/// serving metric, arXiv 2401.09670 §2): a request counts iff it
+/// completed (non-NaN completion), met the TTFT SLO and never exceeded
+/// the TBT SLO on any token gap. NaN TTFT (request produced no first
+/// token) fails the comparison and is excluded, as intended. The three
+/// slices are indexed per request and must have equal length.
+pub fn goodput_pass(
+    ttft: &[f64],
+    max_tbt: &[f64],
+    completions: &[f64],
+    ttft_slo: f64,
+    tbt_slo: f64,
+) -> usize {
+    assert_eq!(ttft.len(), completions.len());
+    assert_eq!(max_tbt.len(), completions.len());
+    completions
+        .iter()
+        .zip(ttft.iter().zip(max_tbt.iter()))
+        .filter(|(done, (t, g))| !done.is_nan() && **t <= ttft_slo && **g <= tbt_slo)
+        .count()
+}
+
 /// Create a trace file's parent directory if it names one (shared by
 /// every JSONL writer — engine metrics and the cluster's merged trace).
 pub fn ensure_parent_dir(path: &Path) -> std::io::Result<()> {
@@ -550,6 +572,18 @@ mod tests {
         assert_eq!(rep.tbt.count(), 1);
         assert!((rep.tbt.mean() - 0.2).abs() < 1e-9);
         assert!((rep.normalized.mean() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_counts_only_completed_requests_inside_both_slos() {
+        let ttft = [0.5, 2.0, 0.5, 0.5, f64::NAN];
+        let max_tbt = [0.1, 0.1, 0.5, 0.1, 0.1];
+        let done = [10.0, 10.0, 10.0, f64::NAN, 10.0];
+        // req 0 passes; 1 misses TTFT; 2 misses TBT; 3 never completed;
+        // 4 has no first token (NaN TTFT fails the comparison)
+        assert_eq!(goodput_pass(&ttft, &max_tbt, &done, 1.0, 0.2), 1);
+        assert_eq!(goodput_pass(&ttft, &max_tbt, &done, 5.0, 1.0), 3);
+        assert_eq!(goodput_pass(&[], &[], &[], 1.0, 1.0), 0);
     }
 
     #[test]

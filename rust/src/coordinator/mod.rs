@@ -34,7 +34,7 @@ pub mod step;
 
 pub use batch::{Batch, WorkItem};
 pub use engine::{Engine, Executor, SimExecutor, StepOutcome};
-pub use kv::{KvManager, DEGENERATE_BLOCK};
+pub use kv::{KvExport, KvManager, StageKv, DEGENERATE_BLOCK};
 pub use metrics::{IterationRecord, LatencyReport, Metrics};
 pub use pool::RequestPool;
 pub use request::{Phase, PrefixWaitState, Request, RequestId};

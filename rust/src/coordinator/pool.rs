@@ -99,7 +99,14 @@ impl RequestPool {
         // swapped back in; expose the token count for the cost charge.
         // Only its PRIVATE tokens move — admission sets `shared_tokens`
         // before calling us when a resident prefix run covers the head.
-        self.swapped_in_tokens += self.requests[id].private_kv_tokens();
+        // Exception: an imported request's KV arrived over the
+        // interconnect (already costed on the copy stream), so its first
+        // admission here moves nothing over the host link.
+        if self.requests[id].imported {
+            self.requests[id].imported = false;
+        } else {
+            self.swapped_in_tokens += self.requests[id].private_kv_tokens();
+        }
         let r = &mut self.requests[id];
         r.admitted = true;
         r.blocks = blocks;
@@ -496,6 +503,28 @@ mod tests {
         p.admit(0, vec![1], 2.0);
         assert_eq!(p.take_swapped_in_tokens(), 10, "kv_len at swap-in");
         assert_eq!(p.take_swapped_in_tokens(), 0, "drained");
+    }
+
+    #[test]
+    fn imported_admission_skips_the_host_link_charge_once() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 8, decode_len: 4, arrival: 0.0, prefix: None });
+        // state after a disaggregation handoff: prompt KV arrived over the
+        // interconnect, first token already produced on the prefill side
+        {
+            let r = p.get_mut(0);
+            r.prefilled = 8;
+            r.decoded = 1;
+            r.imported = true;
+        }
+        p.admit(0, vec![0], 1.0);
+        assert_eq!(p.take_swapped_in_tokens(), 0, "transfer was costed on the copy stream");
+        assert!(!p.get(0).imported, "the exemption is one-shot");
+        // a later preemption/resume cycle charges the host link as usual
+        p.get_mut(0).decoded = 3;
+        p.preempt(0, 2.0);
+        p.admit(0, vec![1], 3.0);
+        assert_eq!(p.take_swapped_in_tokens(), 10);
     }
 
     #[test]

@@ -92,6 +92,13 @@ pub struct Request {
     /// shares, never registers) — a fallback is never worse than never
     /// having cached.
     pub prefix_fallback: bool,
+    /// True while this request's KV is in flight to (or just arrived at)
+    /// this replica over the INTERCONNECT rather than the host link — a
+    /// disaggregation handoff. The first admission after import skips the
+    /// swap-in charge (the transfer was already costed on the copy
+    /// stream) and clears the flag; later preemption/resume cycles charge
+    /// the host link as usual.
+    pub imported: bool,
     /// True between admission and completion/preemption. Progress counters
     /// survive preemption (swap-style: KV is released, not recomputed).
     pub admitted: bool,
@@ -125,6 +132,7 @@ impl Request {
             prefix_wait_iters: 0,
             prefix_wait_time: 0.0,
             prefix_fallback: false,
+            imported: false,
             admitted: false,
             preemptions: 0,
             arrival: spec.arrival,

@@ -17,6 +17,8 @@
 //!   simulate [--requests N] [--scheduler S] [--rate R] [--budget T]
 //!            [--block-size B] [--kv-blocks K] [--pp P]
 //!            [--replicas R [--router rr|jsq|affinity] [--spill-factor F]]
+//!            [--topology colocated|disagg|split [--prefill-replicas K]
+//!             [--interconnect-gbps G] [--ttft-slo S] [--tbt-slo S]]
 //!            [--preemption swap|recompute]
 //!            [--prefix-share [--num-templates T] [--prefix-len L]]
 //!            [--max-prefix-wait K] [--bypass-window W]
@@ -36,6 +38,14 @@
 //!       rate, per-replica peak KV occupancy and the load-imbalance
 //!       statistic, and every JSONL record carries its `replica`. (The
 //!       §5.3 GPT-3 cluster comparison lives under `figures fig12`.)
+//!       `--topology disagg` dedicates `--prefill-replicas K` replicas to
+//!       chunked prefills and hands each finished prompt's KV to a decode
+//!       replica over a costed copy stream (`--interconnect-gbps`, default
+//!       the GPU's fabric rating) that overlaps compute; `split` keeps the
+//!       handoff on-device over two intra-replica lanes. The report gains
+//!       SLO goodput (`--ttft-slo`/`--tbt-slo`, seconds), per-request
+//!       `kv_transfer_time`, and transfer-stream utilization; each KV
+//!       handoff lands in the JSONL trace as a `transfer` record.
 //!       `--prefix-share` switches the workload to template traffic — T
 //!       shared prompt prefixes of L tokens, Zipf request fanout — and
 //!       turns on copy-on-write prefix sharing over the paged block map
@@ -65,7 +75,7 @@ use sarathi::coordinator::{
     make_scheduler, Admission, Engine, KvManager, LatencyReport, Metrics, RequestPool, SwapCost,
 };
 use sarathi::figures;
-use sarathi::simulator::{ClusterSim, PipelineSim, RouterKind};
+use sarathi::simulator::{ClusterSim, PipelineSim, RouterKind, Topology};
 use sarathi::util::error::Result;
 use sarathi::util::Rng;
 use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
@@ -123,6 +133,8 @@ fn main() -> Result<()> {
                  \x20      [--block-size B] [--kv-blocks K] [--pp P]\n\
                  \x20      [--replicas R] [--router rr|jsq|affinity] [--spill-factor F]\n\
                  \x20      [--threads T]  (cluster only; 0 = one per core, default 1)\n\
+                 \x20      [--topology colocated|disagg|split] [--prefill-replicas K]\n\
+                 \x20      [--interconnect-gbps G] [--ttft-slo S] [--tbt-slo S]\n\
                  \x20      [--preemption swap|recompute]\n\
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--max-prefix-wait K] [--bypass-window W]\n\
@@ -533,11 +545,67 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     if replicas == 1
         && (flag_value(args, "--router").is_some()
             || flag_value(args, "--spill-factor").is_some()
-            || flag_value(args, "--threads").is_some())
+            || flag_value(args, "--threads").is_some()
+            || flag_value(args, "--topology").is_some()
+            || flag_value(args, "--prefill-replicas").is_some()
+            || flag_value(args, "--interconnect-gbps").is_some()
+            || flag_value(args, "--ttft-slo").is_some()
+            || flag_value(args, "--tbt-slo").is_some())
     {
         sarathi::bail!(
-            "--router/--spill-factor/--threads need --replicas > 1 (they are cluster layers)"
+            "--router/--spill-factor/--threads/--topology/--prefill-replicas/\
+             --interconnect-gbps/--ttft-slo/--tbt-slo need --replicas > 1 \
+             (they are cluster layers)"
         );
+    }
+    let topology_name = flag_value(args, "--topology").unwrap_or_else(|| "colocated".to_string());
+    let prefill_replicas: usize = parse_flag(args, "--prefill-replicas", replicas.max(2) / 2)?;
+    let topology = Topology::parse(&topology_name, prefill_replicas).ok_or_else(|| {
+        sarathi::err!("unknown topology {topology_name} (try: colocated, disagg, split)")
+    })?;
+    // contradictory deployment flags fail loudly rather than silently
+    // running a different experiment than the one asked for
+    match topology {
+        Topology::Disagg { prefill_replicas } => {
+            if prefill_replicas == 0 || prefill_replicas >= replicas {
+                sarathi::bail!(
+                    "--topology disagg needs 1 <= --prefill-replicas < --replicas \
+                     (got prefill_replicas={prefill_replicas}, replicas={replicas}); \
+                     a cluster with no decode replicas can never emit a token"
+                );
+            }
+        }
+        _ => {
+            if flag_value(args, "--prefill-replicas").is_some() {
+                sarathi::bail!(
+                    "--prefill-replicas applies only to --topology disagg \
+                     ({topology_name} has no dedicated prefill phase owners)"
+                );
+            }
+        }
+    }
+    if topology != Topology::Colocated && pp > 1 {
+        sarathi::bail!(
+            "--topology {topology_name} assigns whole model replicas per phase and \
+             requires --pp 1; combine pipeline parallelism with --topology colocated"
+        );
+    }
+    let interconnect_gbps: Option<f64> = match flag_value(args, "--interconnect-gbps") {
+        None => None,
+        Some(v) => {
+            let g: f64 = v
+                .parse()
+                .map_err(|_| sarathi::err!("invalid value {v:?} for --interconnect-gbps"))?;
+            if g <= 0.0 {
+                sarathi::bail!("--interconnect-gbps must be positive (KV bytes must move)");
+            }
+            Some(g)
+        }
+    };
+    let ttft_slo: f64 = parse_flag(args, "--ttft-slo", 1.0)?;
+    let tbt_slo: f64 = parse_flag(args, "--tbt-slo", 0.2)?;
+    if ttft_slo <= 0.0 || tbt_slo <= 0.0 {
+        sarathi::bail!("--ttft-slo and --tbt-slo are deadlines in seconds and must be positive");
     }
     let preemption = preemption_mode(args)?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
@@ -563,6 +631,10 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
             router_kind,
             spill_factor,
             threads,
+            topology,
+            interconnect_gbps,
+            ttft_slo,
+            tbt_slo,
             preemption,
             prefix,
             wait,
@@ -744,6 +816,10 @@ struct SimOpts {
     router_kind: RouterKind,
     spill_factor: f64,
     threads: usize,
+    topology: Topology,
+    interconnect_gbps: Option<f64>,
+    ttft_slo: f64,
+    tbt_slo: f64,
     preemption: PreemptionMode,
     prefix: PrefixOpts,
     wait: WaitOpts,
@@ -772,6 +848,10 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         router_kind,
         spill_factor,
         threads,
+        topology,
+        interconnect_gbps,
+        ttft_slo,
+        tbt_slo,
         preemption,
         prefix,
         wait,
@@ -781,7 +861,11 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
     if model.n_layers % pp != 0 {
         sarathi::bail!("--pp {pp} must divide {} layers", model.n_layers);
     }
-    let d = Deployment::new(model, GpuConfig::a6000(), 2048)
+    let mut gpu = GpuConfig::a6000();
+    if let Some(gbps) = interconnect_gbps {
+        gpu.interconnect_gbps = gbps;
+    }
+    let d = Deployment::new(model, gpu, 2048)
         .with_parallel(ParallelConfig::tp_pp(1, pp).with_replicas(replicas));
     let b = d.max_batch_size();
     let mut rng = Rng::new(7);
@@ -805,9 +889,10 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
     };
     let blocks = if kv_blocks > 0 { kv_blocks } else { d.kv_blocks(block_size.max(1)) };
     println!(
-        "LLaMA-13B on A6000, {replicas} replicas x PP={pp}: {n} requests, {}, \
+        "LLaMA-13B on A6000, {replicas} replicas x PP={pp}, topology={}: {n} requests, {}, \
          Poisson {rate} req/s (template bursts of 6), router={} spill_factor={spill_factor} \
          threads={threads} scheduler={} effective_token_budget={} {}",
+        topology.name(),
         prefix.describe(),
         router_kind.name(),
         kind.name(),
@@ -823,7 +908,8 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         ClusterSim::new(d.clone()).with_swap_cost(SwapCost::for_deployment(&d, preemption));
     let mut router = router_kind.build(spill_factor);
     let t0 = std::time::Instant::now();
-    let res = cluster.run_routed_threads(
+    let res = cluster.run_topology(
+        topology,
         &pop,
         &mut *router,
         || {
@@ -871,6 +957,33 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
     if lat.prefix_wait.count() > 0 {
         let (w50, w99) = pct(&lat.prefix_wait);
         println!("prefix_wait_ms p50={w50:.1} p99={w99:.1} waiters={}", lat.prefix_wait.count());
+    }
+    let (frac, gput) = res.goodput(ttft_slo, tbt_slo);
+    println!(
+        "goodput ttft_slo={ttft_slo:.3}s tbt_slo={tbt_slo:.3}s attained_frac={frac:.3} \
+         rate={gput:.3} req/s"
+    );
+    if let Some(fabric) = &res.fabric {
+        if fabric.records.is_empty() {
+            println!("kv_transfers=0 (handoffs stayed on-device; the fabric moved no bytes)");
+        } else {
+            let mut times = sarathi::util::Summary::new();
+            let mut bytes = 0.0;
+            for rec in &fabric.records {
+                times.add(rec.kv_transfer_time());
+                bytes += rec.bytes;
+            }
+            println!(
+                "kv_transfers={} transfer_bytes={bytes:.3e} transfer_busy={:.3}s \
+                 stream_utilization={:.3} conserved={} kv_transfer_time_ms p50={:.1} p99={:.1}",
+                fabric.records.len(),
+                fabric.busy_time(),
+                fabric.utilization(res.makespan),
+                fabric.is_conserved(),
+                times.percentile(50.0) * 1e3,
+                times.percentile(99.0) * 1e3,
+            );
+        }
     }
     if let Some(path) = json_out {
         res.write_jsonl(&path)?;

@@ -23,14 +23,66 @@
 //! exhausted, each stalled replica resolves exactly like the
 //! single-replica driver — demote the oldest prefix waiter to a
 //! full-price fallback, else panic "pipeline wedged".
+//!
+//! Deployment [`Topology`] makes prefill/decode **disaggregation** a
+//! first-class mode (DistServe, arXiv 2401.09670): under
+//! `Disagg { prefill_replicas: K }` replicas `0..K` run chunked prefills
+//! only and hand each finished prompt's KV to a decode replica over the
+//! costed [`CopyFabric`]; decode admission waits on the transfer's
+//! arrival edge — never on a wedge — and the handoff target is the
+//! decode replica with the least outstanding work at the handoff
+//! instant. `Split` keeps both phases on every replica but partitions
+//! its compute between a prefill lane and a decode lane (RAPID-Serve
+//! style), with a zero-byte intra-replica handoff. `Colocated` is the
+//! unchanged hybrid baseline — byte-identical to the routed driver.
 
 use super::pipeline::{PipelineResult, PipelineRun, PipelineSim, StallOutcome};
-use super::router::{ReplicaView, RoundRobin, RoutePolicy};
+use super::router::{LeastOutstandingTokens, ReplicaView, RoundRobin, RoutePolicy};
+use super::transfer::CopyFabric;
 use crate::config::Deployment;
-use crate::coordinator::{KvManager, Scheduler};
+use crate::coordinator::{KvExport, KvManager, Scheduler};
 use crate::costmodel::CostModel;
 use crate::profiler::Profiler;
 use crate::workload::RequestSpec;
+
+/// How the cluster's replicas divide the two inference phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Every replica serves both phases through one hybrid scheduler —
+    /// the pre-disaggregation cluster, byte-identical to the routed
+    /// driver.
+    Colocated,
+    /// Replicas `0..prefill_replicas` run chunked prefills only and hand
+    /// each finished prompt's KV to a decode replica (`prefill_replicas..`)
+    /// over the costed copy fabric. Requires `1 <= prefill_replicas <
+    /// replicas` and `pp = 1` (each stage owns whole model replicas).
+    Disagg { prefill_replicas: usize },
+    /// Every replica partitions its compute between a prefill lane and a
+    /// decode lane (RAPID-Serve-style intra-replica split); the handoff
+    /// stays on-device and moves zero fabric bytes.
+    Split,
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Colocated => "colocated",
+            Topology::Disagg { .. } => "disagg",
+            Topology::Split => "split",
+        }
+    }
+
+    /// Parse a CLI name (the inverse of [`name`](Self::name)).
+    /// `prefill_replicas` shapes only `disagg`.
+    pub fn parse(s: &str, prefill_replicas: usize) -> Option<Self> {
+        Some(match s {
+            "colocated" => Topology::Colocated,
+            "disagg" | "disaggregated" => Topology::Disagg { prefill_replicas },
+            "split" => Topology::Split,
+            _ => return None,
+        })
+    }
+}
 
 /// Result of a cluster run: merged view over all replicas.
 #[derive(Clone, Debug, Default)]
@@ -38,7 +90,34 @@ pub struct ClusterResult {
     pub per_replica: Vec<PipelineResult>,
     pub completions: Vec<f64>,
     pub makespan: f64,
-    /// Which replica served each request (original spec order).
+    /// Per-request TTFT (first token − arrival; NaN when the request
+    /// never produced one). On handoff topologies the first token comes
+    /// from the prefill side, so TTFT is independent of the transfer.
+    pub ttft: Vec<f64>,
+    /// Per-request maximum time-between-tokens gap, stitched across a
+    /// handoff (the gap from the prefill-side first token to the first
+    /// decode-side token includes transfer + queueing) — what the TBT
+    /// SLO checks.
+    pub max_tbt: Vec<f64>,
+    /// Per-request KV handoff latency (queueing + wire); 0.0 on
+    /// colocated topologies and intra-replica handoffs.
+    pub kv_transfer_time: Vec<f64>,
+    /// The copy fabric after the run — per-transfer records, busy time,
+    /// conservation books. `None` on colocated topologies.
+    pub fabric: Option<CopyFabric>,
+    /// Total overlapped copy-stream busy time: fabric wire time plus
+    /// preemption swap traffic the handoff driver routed off the compute
+    /// clock.
+    pub transfer_busy: f64,
+    /// Name of the topology that produced this result.
+    pub topology: &'static str,
+    /// Replaces the per-replica latency merge on handoff topologies:
+    /// decode pools see transfer-relative arrivals, so normalized
+    /// latency must be rebuilt against true arrivals by the driver.
+    pub latency_override: Option<crate::coordinator::LatencyReport>,
+    /// Which replica served each request (original spec order). On
+    /// `disagg` this is the PREFILL replica the router chose; the decode
+    /// side is recoverable from the fabric's transfer records.
     pub replica_of: Vec<usize>,
     /// Dispatch-sampled mean outstanding work per replica: after every
     /// routing decision the driver snapshots each replica's cache-aware
@@ -87,6 +166,9 @@ impl ClusterResult {
     /// clock origin). Regression note: this used to drop the
     /// `prefix_wait` histogram on the floor.
     pub fn latency(&self) -> crate::coordinator::LatencyReport {
+        if let Some(rep) = &self.latency_override {
+            return rep.clone();
+        }
         let mut merged = crate::coordinator::LatencyReport::default();
         for rep in &self.per_replica {
             merged.ttft.merge(&rep.latency.ttft);
@@ -95,6 +177,23 @@ impl ClusterResult {
             merged.prefix_wait.merge(&rep.latency.prefix_wait);
         }
         merged
+    }
+
+    /// **Goodput** under (TTFT, TBT) SLOs — DistServe's serving metric:
+    /// the fraction of requests that completed within both SLOs, and the
+    /// attained rate of such requests per second of makespan.
+    pub fn goodput(&self, ttft_slo: f64, tbt_slo: f64) -> (f64, f64) {
+        let pass = crate::coordinator::metrics::goodput_pass(
+            &self.ttft,
+            &self.max_tbt,
+            &self.completions,
+            ttft_slo,
+            tbt_slo,
+        );
+        let n = self.completions.len();
+        let frac = if n == 0 { 0.0 } else { pass as f64 / n as f64 };
+        let rate = if self.makespan > 0.0 { pass as f64 / self.makespan } else { 0.0 };
+        (frac, rate)
     }
 
     /// Total preemption events across replicas.
@@ -168,6 +267,16 @@ impl ClusterResult {
         for (_, ri, i) in order {
             let rec = &self.per_replica[ri].metrics.iterations[i];
             writeln!(out, "{}", rec.to_jsonl(i, Some(ri)))?;
+        }
+        // handoff topologies append the transfer trace; colocated runs
+        // (no fabric / no records) stay byte-identical to the old schema
+        if let Some(fabric) = &self.fabric {
+            if !fabric.records.is_empty() {
+                for rec in &fabric.records {
+                    writeln!(out, "{}", rec.to_jsonl())?;
+                }
+                writeln!(out, "{}", fabric.summary_jsonl(self.makespan))?;
+            }
         }
         Ok(())
     }
@@ -422,6 +531,10 @@ impl ClusterSim {
 
         let mut result = ClusterResult {
             completions: vec![f64::NAN; specs.len()],
+            ttft: vec![f64::NAN; specs.len()],
+            max_tbt: vec![0.0; specs.len()],
+            kv_transfer_time: vec![0.0; specs.len()],
+            topology: Topology::Colocated.name(),
             replica_of,
             mean_outstanding: out_sums
                 .into_iter()
@@ -434,12 +547,359 @@ impl ClusterSim {
             let res = run.finish();
             for (local, &g) in globals[ri].iter().enumerate() {
                 result.completions[g] = res.completions[local];
+                // NaN first token (rejected request) propagates into TTFT
+                result.ttft[g] = res.first_tokens[local] - specs[g].arrival;
+                result.max_tbt[g] = res.max_tbt[local];
             }
             result.makespan = result.makespan.max(res.makespan);
             result.per_replica.push(res);
         }
         result
     }
+
+    /// Run `specs` under a deployment [`Topology`]. `Colocated` is the
+    /// routed driver unchanged (byte-identical results); `Disagg`/`Split`
+    /// run the round-based handoff driver, which is bitwise independent
+    /// of `threads` by construction (replicas advance between barriers
+    /// and share nothing but the driver-owned fabric).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_topology<'a, F, K>(
+        &self,
+        topology: Topology,
+        specs: &[RequestSpec],
+        router: &mut dyn RoutePolicy,
+        make_kv: K,
+        per_stream_cap: Option<usize>,
+        make_sched: F,
+        threads: usize,
+    ) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
+        K: FnMut() -> KvManager,
+    {
+        match topology {
+            Topology::Colocated => {
+                self.dispatch(specs, router, make_kv, per_stream_cap, make_sched, true, threads)
+            }
+            _ => self.dispatch_handoff(
+                topology,
+                specs,
+                router,
+                make_kv,
+                per_stream_cap,
+                make_sched,
+                threads,
+            ),
+        }
+    }
+
+    /// The prefill/decode handoff driver (`Disagg` and `Split`).
+    ///
+    /// Round structure: the cluster advances all replicas to each arrival
+    /// instant (events strictly before it), then runs a **handoff
+    /// fixpoint** — drain finished prefills, start their transfers on the
+    /// fabric, push the imported decode work (arrival = transfer finish),
+    /// and re-advance, since an import may enable events before the
+    /// horizon. Arrivals are routed to prefill replicas only; the decode
+    /// target is the least-outstanding decode replica at the handoff
+    /// instant. Preemption swap traffic rides the same overlapped copy
+    /// stream ([`PipelineRun::set_overlap_swaps`]). Replicas advance
+    /// independently between barriers, so any thread count — chunked
+    /// scoped workers or the serial loop — is bitwise identical.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_handoff<'a, F, K>(
+        &self,
+        topology: Topology,
+        specs: &[RequestSpec],
+        router: &mut dyn RoutePolicy,
+        mut make_kv: K,
+        per_stream_cap: Option<usize>,
+        mut make_sched: F,
+        threads: usize,
+    ) -> ClusterResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
+        K: FnMut() -> KvManager,
+    {
+        let r = self.sims.len();
+        assert!(r > 0, "cluster needs at least one replica");
+        assert_eq!(
+            self.deployment.parallel.pp, 1,
+            "handoff topologies assign whole model replicas per phase (pp = 1); \
+             combine pipeline parallelism with the colocated topology instead"
+        );
+        let split = matches!(topology, Topology::Split);
+        let prefill_replicas = match topology {
+            Topology::Disagg { prefill_replicas } => {
+                assert!(
+                    prefill_replicas >= 1 && prefill_replicas < r,
+                    "disagg needs 1 <= prefill replicas ({prefill_replicas}) < replicas ({r})"
+                );
+                prefill_replicas
+            }
+            // split: every replica hosts a prefill lane
+            _ => r,
+        };
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+
+        let mut runs: Vec<PipelineRun> = Vec::with_capacity(r);
+        for sim in &self.sims {
+            let mut run = if split {
+                PipelineRun::with_streams(sim, make_kv(), per_stream_cap, &mut make_sched, 2)
+            } else {
+                PipelineRun::new(sim, make_kv(), per_stream_cap, &mut make_sched)
+            };
+            // preemption transfers join the KV handoffs on the copy stream
+            run.set_overlap_swaps(true);
+            runs.push(run);
+        }
+        let mut fabric = CopyFabric::for_deployment(&self.deployment, r);
+        // run-local push index → role (which global request, which phase)
+        let mut locals: Vec<Vec<HandoffRole>> = vec![Vec::new(); r];
+
+        let n = specs.len();
+        let mut completions = vec![f64::NAN; n];
+        let mut ttft = vec![f64::NAN; n];
+        let mut kv_transfer_time = vec![0.0f64; n];
+        let mut replica_of = vec![0usize; n];
+        let mut out_sums = vec![0.0f64; r];
+        let mut samples = 0usize;
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| specs[a].arrival.total_cmp(&specs[b].arrival).then(a.cmp(&b)));
+
+        for &g in &order {
+            // bring the cluster to the arrival instant, delivering every
+            // handoff that lands before it
+            loop {
+                advance_all_runs(&mut runs, specs[g].arrival, threads);
+                let delivered = deliver_handoffs(
+                    &mut runs,
+                    &mut locals,
+                    &mut fabric,
+                    specs,
+                    split,
+                    prefill_replicas,
+                    &mut ttft,
+                    &mut kv_transfer_time,
+                    &mut completions,
+                );
+                if delivered == 0 {
+                    break;
+                }
+            }
+            let views: Vec<ReplicaView> = runs[..prefill_replicas]
+                .iter()
+                .map(|run| ReplicaView { outstanding_tokens: run.outstanding_tokens() })
+                .collect();
+            let ri = router.route(&specs[g], &views).min(prefill_replicas - 1);
+            // the prefill-side copy: completes exactly at first-token time
+            // (the final chunk's token), keeping the prefix tag so prefill
+            // replicas still share/pin templates
+            let pspec = RequestSpec { decode_len: 1, ..specs[g] };
+            let local = runs[ri].push_to(0, pspec);
+            debug_assert_eq!(local, locals[ri].len());
+            locals[ri].push(HandoffRole::Prefill(g));
+            replica_of[g] = ri;
+            for (i, run) in runs.iter().enumerate() {
+                out_sums[i] += run.outstanding_tokens() as f64;
+            }
+            samples += 1;
+        }
+
+        // arrivals exhausted: drain to the handoff fixpoint, then resolve
+        // stalls like the routed driver until nothing progresses
+        loop {
+            loop {
+                advance_all_runs(&mut runs, f64::INFINITY, threads);
+                let delivered = deliver_handoffs(
+                    &mut runs,
+                    &mut locals,
+                    &mut fabric,
+                    specs,
+                    split,
+                    prefill_replicas,
+                    &mut ttft,
+                    &mut kv_transfer_time,
+                    &mut completions,
+                );
+                if delivered == 0 {
+                    break;
+                }
+            }
+            let mut progressed = false;
+            for run in runs.iter_mut() {
+                match run.resolve_stall() {
+                    StallOutcome::Demoted => progressed = true,
+                    StallOutcome::Wedged => run.panic_wedged(),
+                    StallOutcome::Idle => {}
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert!(fabric.is_conserved(), "every KV export must land exactly once");
+
+        let mut result = ClusterResult {
+            completions,
+            ttft,
+            max_tbt: vec![0.0; n],
+            kv_transfer_time,
+            topology: topology.name(),
+            replica_of,
+            mean_outstanding: out_sums
+                .into_iter()
+                .map(|s| s / samples.max(1) as f64)
+                .collect(),
+            router: router.name(),
+            ..Default::default()
+        };
+        let mut rep = crate::coordinator::LatencyReport::default();
+        let mut copy_busy = 0.0;
+        for (ri, run) in runs.into_iter().enumerate() {
+            let res = run.finish();
+            for (local, role) in locals[ri].iter().enumerate() {
+                if let HandoffRole::Decode(g) = *role {
+                    // the stitched max gap: push_imported stamped the
+                    // prefill-side first token, so transfer + queueing
+                    // shows up in the first decode gap
+                    result.max_tbt[g] = res.max_tbt[local];
+                }
+            }
+            // TTFT lives on prefill pools (true arrivals), TBT on decode
+            // pools (stitched gaps); normalized is rebuilt below because
+            // decode pools saw transfer-relative arrivals
+            rep.ttft.merge(&res.latency.ttft);
+            rep.tbt.merge(&res.latency.tbt);
+            rep.prefix_wait.merge(&res.latency.prefix_wait);
+            copy_busy += res.copy_busy;
+            result.makespan = result.makespan.max(res.makespan);
+            result.per_replica.push(res);
+        }
+        for g in 0..n {
+            if !result.completions[g].is_nan() {
+                rep.normalized.add(
+                    (result.completions[g] - specs[g].arrival)
+                        / specs[g].decode_len.max(1) as f64,
+                );
+            }
+        }
+        result.latency_override = Some(rep);
+        result.transfer_busy = fabric.busy_time() + copy_busy;
+        result.fabric = Some(fabric);
+        result
+    }
+}
+
+/// Role of one run-local push in the handoff driver: the prefill-side
+/// copy of global request `g`, or its imported decode-side remainder.
+#[derive(Clone, Copy, Debug)]
+enum HandoffRole {
+    Prefill(usize),
+    Decode(usize),
+}
+
+/// Advance every replica's events strictly before `h`. With `threads > 1`
+/// the runs are split into contiguous chunks over scoped workers; replicas
+/// share nothing, so the partition cannot affect results.
+fn advance_all_runs(runs: &mut [PipelineRun], h: f64, threads: usize) {
+    if threads > 1 && runs.len() > 1 {
+        let per = runs.len().div_ceil(threads.min(runs.len()));
+        std::thread::scope(|scope| {
+            for chunk in runs.chunks_mut(per) {
+                scope.spawn(move || {
+                    for run in chunk {
+                        run.advance_until(h);
+                    }
+                });
+            }
+        });
+    } else {
+        for run in runs {
+            run.advance_until(h);
+        }
+    }
+}
+
+/// One handoff round: drain every replica's newly finished requests in a
+/// canonical (time, replica, local) order; record decode completions;
+/// for each finished prefill, stamp TTFT and either complete the request
+/// (no decode work) or start its KV transfer and push the imported
+/// decode remainder at the transfer's finish. Returns the number of
+/// events drained (0 = fixpoint reached).
+#[allow(clippy::too_many_arguments)]
+fn deliver_handoffs(
+    runs: &mut [PipelineRun],
+    locals: &mut [Vec<HandoffRole>],
+    fabric: &mut CopyFabric,
+    specs: &[RequestSpec],
+    split: bool,
+    prefill_replicas: usize,
+    ttft: &mut [f64],
+    kv_transfer_time: &mut [f64],
+    completions: &mut [f64],
+) -> usize {
+    let mut finished: Vec<(f64, usize, usize)> = Vec::new();
+    for (ri, run) in runs.iter_mut().enumerate() {
+        for (local, t) in run.take_finished() {
+            finished.push((t, ri, local));
+        }
+    }
+    finished.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+    let drained = finished.len();
+    for (t, src, local) in finished {
+        match locals[src][local] {
+            HandoffRole::Decode(g) => completions[g] = t,
+            HandoffRole::Prefill(g) => {
+                ttft[g] = t - specs[g].arrival;
+                if specs[g].decode_len <= 1 {
+                    // the prefill's token was the whole request
+                    completions[g] = t;
+                    continue;
+                }
+                let (dst, lane) = if split {
+                    // intra-replica: decode lane of the same replica
+                    (src, 1)
+                } else {
+                    let views: Vec<ReplicaView> = runs[prefill_replicas..]
+                        .iter()
+                        .map(|run| ReplicaView {
+                            outstanding_tokens: run.outstanding_tokens(),
+                        })
+                        .collect();
+                    (prefill_replicas + LeastOutstandingTokens::least(&views), 0)
+                };
+                let arrive = if dst == src {
+                    t // on-device handoff moves no fabric bytes
+                } else {
+                    // the driver-level descriptor prices the wire by KV
+                    // tokens; the source run already recycled the block
+                    // table on prefill completion
+                    let export = KvExport { kv_tokens: specs[g].prompt_len, blocks: 0 };
+                    let finish = fabric.begin(g, src, dst, &export, t);
+                    kv_transfer_time[g] = finish - t;
+                    finish
+                };
+                let dspec = RequestSpec {
+                    prompt_len: specs[g].prompt_len,
+                    decode_len: specs[g].decode_len,
+                    arrival: arrive,
+                    prefix: None,
+                };
+                let local2 = runs[dst].push_imported(lane, dspec, t);
+                debug_assert_eq!(local2, locals[dst].len());
+                locals[dst].push(HandoffRole::Decode(g));
+                if dst != src {
+                    fabric.deliver(g);
+                }
+            }
+        }
+    }
+    drained
 }
 
 /// The single-threaded dispatch loop over a lazily-deleted binary-heap
@@ -795,6 +1255,156 @@ mod tests {
             sarathi.makespan,
             tp_only.makespan,
             orca.makespan
+        );
+    }
+
+    fn handoff_deployment(replicas: usize) -> Deployment {
+        Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+            .with_parallel(ParallelConfig::tp_pp(8, 1).with_replicas(replicas))
+            .with_batch_cap(11)
+    }
+
+    #[test]
+    fn topology_parse_round_trips() {
+        assert_eq!(Topology::parse("colocated", 0), Some(Topology::Colocated));
+        assert_eq!(
+            Topology::parse("disagg", 2),
+            Some(Topology::Disagg { prefill_replicas: 2 })
+        );
+        assert_eq!(Topology::parse("disaggregated", 3).unwrap().name(), "disagg");
+        assert_eq!(Topology::parse("split", 9), Some(Topology::Split));
+        assert_eq!(Topology::parse("nope", 1), None);
+        assert_eq!(Topology::Colocated.name(), "colocated");
+        assert_eq!(Topology::Split.name(), "split");
+    }
+
+    /// The colocated topology IS the routed driver — same entry point the
+    /// determinism suites pin, bitwise.
+    #[test]
+    fn colocated_topology_is_the_routed_driver_bitwise() {
+        let cluster = ClusterSim::new(handoff_deployment(4));
+        let specs = workload(32);
+        let mut rr_a = RoundRobin::new();
+        let a = cluster.run_topology(
+            Topology::Colocated,
+            &specs,
+            &mut rr_a,
+            || KvManager::new(11),
+            Some(11),
+            || Box::new(SarathiScheduler::new(256, 11, 128)),
+            1,
+        );
+        let mut rr_b = RoundRobin::new();
+        let b = cluster.run_routed_threads(
+            &specs,
+            &mut rr_b,
+            || KvManager::new(11),
+            Some(11),
+            || Box::new(SarathiScheduler::new(256, 11, 128)),
+            2,
+        );
+        let bits = |v: &[f64]| v.iter().map(|t| t.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.completions), bits(&b.completions));
+        assert_eq!(bits(&a.ttft), bits(&b.ttft));
+        assert_eq!(bits(&a.max_tbt), bits(&b.max_tbt));
+        assert_eq!(a.topology, "colocated");
+        assert!(a.fabric.is_none(), "no copy fabric on colocated runs");
+        assert!(a.kv_transfer_time.iter().all(|&t| t == 0.0));
+        // goodput with infinite SLOs counts every completed request
+        let (frac, rate) = a.goodput(f64::INFINITY, f64::INFINITY);
+        assert!((frac - 1.0).abs() < 1e-12);
+        assert!((rate - 32.0 / a.makespan).abs() < 1e-9);
+    }
+
+    /// Disagg end-to-end bookkeeping: every prompt with decode work makes
+    /// exactly one fabric crossing, lands before its request's decode
+    /// completes, and the stitched per-request latencies carry the
+    /// transfer (max TBT ≥ the handoff latency).
+    #[test]
+    fn disagg_hands_every_decode_prompt_over_the_fabric() {
+        let cluster = ClusterSim::new(handoff_deployment(4));
+        let specs = workload(48);
+        let mut rr = RoundRobin::new();
+        let res = cluster.run_topology(
+            Topology::Disagg { prefill_replicas: 2 },
+            &specs,
+            &mut rr,
+            || KvManager::new(11),
+            Some(11),
+            || Box::new(SarathiScheduler::new(256, 11, 128)),
+            1,
+        );
+        assert_eq!(res.topology, "disagg");
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert!(res.ttft.iter().all(|t| t.is_finite()));
+        assert!(res.replica_of.iter().all(|&ri| ri < 2), "arrivals go to prefill replicas");
+        let fabric = res.fabric.as_ref().expect("disagg runs carry the fabric");
+        let expect = specs.iter().filter(|s| s.decode_len > 1).count();
+        assert_eq!(fabric.records.len(), expect, "one transfer per decoded prompt");
+        assert_eq!(fabric.delivered(), expect);
+        assert!(fabric.is_conserved());
+        assert!(res.transfer_busy > 0.0);
+        for rec in &fabric.records {
+            assert!(rec.src < 2 && rec.dst >= 2, "prefill → decode only");
+            assert!(
+                res.completions[rec.request] > rec.finish,
+                "no decode token before its KV lands"
+            );
+            assert!(
+                res.max_tbt[rec.request] >= res.kv_transfer_time[rec.request] - 1e-12,
+                "the transfer must be visible in the stitched TBT"
+            );
+            assert!(res.kv_transfer_time[rec.request] > 0.0);
+        }
+    }
+
+    /// Split keeps both phases on-device: lanes partition compute, the
+    /// fabric never moves a byte, and every request still completes.
+    #[test]
+    fn split_topology_keeps_the_handoff_on_device() {
+        let cluster = ClusterSim::new(handoff_deployment(2));
+        let specs = workload(24);
+        let mut rr = RoundRobin::new();
+        let res = cluster.run_topology(
+            Topology::Split,
+            &specs,
+            &mut rr,
+            || KvManager::new(11),
+            Some(11),
+            || Box::new(SarathiScheduler::new(256, 11, 128)),
+            1,
+        );
+        assert_eq!(res.topology, "split");
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert!(res.ttft.iter().all(|t| t.is_finite()));
+        let fabric = res.fabric.as_ref().expect("handoff runs carry the fabric");
+        assert!(fabric.records.is_empty(), "on-device handoffs move no fabric bytes");
+        assert_eq!(fabric.busy_time(), 0.0);
+        assert!(res.kv_transfer_time.iter().all(|&t| t == 0.0));
+        // decoded requests still stitch a positive gap (lane switch)
+        assert!(
+            specs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.decode_len > 1)
+                .all(|(g, _)| res.max_tbt[g] > 0.0)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "disagg needs")]
+    fn disagg_rejects_a_prefill_only_cluster() {
+        let cluster = ClusterSim::new(handoff_deployment(2));
+        let specs = workload(2);
+        let mut rr = RoundRobin::new();
+        cluster.run_topology(
+            Topology::Disagg { prefill_replicas: 2 },
+            &specs,
+            &mut rr,
+            || KvManager::new(11),
+            Some(11),
+            || Box::new(SarathiScheduler::new(256, 11, 128)),
+            1,
         );
     }
 

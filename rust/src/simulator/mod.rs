@@ -5,19 +5,25 @@
 //!   Fig. 5 all emerge from micro-batch time variance), exposed both as a
 //!   run-to-completion driver and as the resumable [`PipelineRun`]
 //!   stepping API.
+//! * [`transfer`] — the costed KV copy stream between replicas
+//!   (disaggregation's data plane): per-pair lanes that serialize their
+//!   own transfers, overlap with each other and never block compute.
 //! * [`router`] — cluster-level dispatch policies: round-robin,
 //!   join-shortest-queue by outstanding work, and rendezvous-hash prefix
 //!   affinity with a power-of-two load shed.
 //! * [`cluster`] — replica-level deployment: R identical tp×pp groups
 //!   serving a shared workload through a routing policy under one global
-//!   event clock (the Fig. 12 comparison set, now dispatch-aware).
+//!   event clock (the Fig. 12 comparison set, now dispatch-aware), plus
+//!   the disaggregated/split [`cluster::Topology`] deployment modes.
 
 pub mod cluster;
 pub mod pipeline;
 pub mod router;
+pub mod transfer;
 
-pub use cluster::{ClusterResult, ClusterSim};
+pub use cluster::{ClusterResult, ClusterSim, Topology};
 pub use pipeline::{PipelineResult, PipelineRun, PipelineSim, StallOutcome, TraceEvent};
+pub use transfer::{CopyFabric, TransferRecord};
 pub use router::{
     rendezvous_rank, rendezvous_top2, LeastOutstandingTokens, PrefixAffinity, ReplicaView,
     RoundRobin, RoutePolicy, RouterKind,

@@ -52,7 +52,7 @@
 //! machinery.
 
 use crate::coordinator::{
-    Batch, IterationRecord, KvManager, LatencyReport, Metrics, RequestPool, Scheduler,
+    Batch, IterationRecord, KvManager, LatencyReport, Metrics, RequestPool, Scheduler, StageKv,
     StepApplier, SwapCost,
 };
 use crate::costmodel::BatchShape;
@@ -101,6 +101,13 @@ pub struct PipelineResult {
     /// wedge demotion) — the liveness suite compares these victims' TTFT
     /// against a no-sharing run.
     pub prefix_fallback: Vec<bool>,
+    /// Per-request maximum time-between-tokens gap (0.0 with fewer than
+    /// two stamped tokens) — the per-request TBT that goodput SLOs check.
+    pub max_tbt: Vec<f64>,
+    /// Preemption transfer time routed onto the overlapped copy stream
+    /// instead of serializing compute — 0.0 unless the run opted in via
+    /// [`PipelineRun::set_overlap_swaps`].
+    pub copy_busy: f64,
     /// Per-micro-batch records (KV occupancy, preemptions, swap time) —
     /// `metrics.write_jsonl` gives the pipeline run a trace like the
     /// engine's.
@@ -298,7 +305,10 @@ pub struct PipelineRun<'a, 'b> {
     // `Send` so a cluster worker thread may own the run between dispatch
     // barriers (every concrete scheduler is plain data)
     scheds: Vec<Box<dyn Scheduler + Send + 'a>>,
-    kv: KvManager,
+    /// Per-stage KV ownership: one canonical pool mirrored across the
+    /// replica's `pp` stages (see [`StageKv`]) — allocation decisions are
+    /// exact for every stage, byte accounting splits by layer share.
+    kv: StageKv,
     events: Vec<Event>,
     /// Swap-in time charged by admission while no batch ran yet; carried
     /// to the stream's next micro-batch.
@@ -321,11 +331,23 @@ pub struct PipelineRun<'a, 'b> {
     /// Reused (stream, request) scratch for the per-apply in-flight scan —
     /// rebuilding it per event was the step path's hottest allocation.
     scratch_in_flight: Vec<(usize, usize)>,
+    /// Completions since the last [`take_finished`](Self::take_finished)
+    /// drain, as (run-local index, completion time) — the disaggregation
+    /// driver's handoff edge (a finished prefill becomes a transfer).
+    finish_events: Vec<(usize, f64)>,
+    /// Route preemption swap transfers onto the overlapped copy stream
+    /// (accumulated in `swap_busy`) instead of serializing compute around
+    /// the iteration — disaggregated topologies own a copy stream anyway,
+    /// so swaps ride it. Default false: every existing path is
+    /// byte-identical.
+    overlap_swaps: bool,
+    swap_busy: f64,
     result: PipelineResult,
 }
 
 impl<'a, 'b> PipelineRun<'a, 'b> {
-    /// Fresh run over `kv`, one scheduler per stream from `make_sched`.
+    /// Fresh run over `kv`, one scheduler per stream from `make_sched` —
+    /// the usual one-stream-per-pipeline-stage layout.
     pub fn new<F>(
         sim: &'b PipelineSim,
         kv: KvManager,
@@ -336,13 +358,34 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let n_streams = sim.pp.max(1);
+        Self::with_streams(sim, kv, per_stream_cap, make_sched, n_streams)
+    }
+
+    /// [`new`](Self::new) with an explicit stream count. More streams than
+    /// stages time-share the stages' compute (every stream's micro-batch
+    /// still walks all `pp` stages) — the RAPID-Serve intra-replica split
+    /// runs a prefill lane and a decode lane as two streams over one
+    /// stage's compute. `make_sched` is called once per stream, stream 0
+    /// first, so a lane-partitioned factory can hand each lane its own
+    /// budget.
+    pub fn with_streams<F>(
+        sim: &'b PipelineSim,
+        kv: KvManager,
+        per_stream_cap: Option<usize>,
+        make_sched: &mut F,
+        n_streams: usize,
+    ) -> Self
+    where
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
+    {
+        assert!(n_streams >= 1, "a replica runs at least one stream");
         PipelineRun {
             sim,
             n_streams,
             per_stream_cap,
             pools: (0..n_streams).map(|_| RequestPool::new()).collect(),
             scheds: (0..n_streams).map(|_| make_sched()).collect(),
-            kv,
+            kv: StageKv::mirrored(kv, sim.pp.max(1)),
             events: (0..n_streams).map(|_| Event::Schedule(0.0)).collect(),
             pending_swap_in: vec![0.0; n_streams],
             pending_prefix_hits: vec![0; n_streams],
@@ -354,8 +397,25 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             global_ids: vec![Vec::new(); n_streams],
             next_stream: 0,
             scratch_in_flight: Vec::new(),
+            finish_events: Vec::new(),
+            overlap_swaps: false,
+            swap_busy: 0.0,
             result: PipelineResult::default(),
         }
+    }
+
+    /// Route preemption swap transfers onto the overlapped copy stream:
+    /// swap time accumulates in [`copy_busy`](Self::copy_busy) instead of
+    /// delaying the stream's next schedule — KV movement becomes an event
+    /// on the transfer clock, not a compute serialization. Off by default
+    /// (existing paths byte-identical).
+    pub fn set_overlap_swaps(&mut self, on: bool) {
+        self.overlap_swaps = on;
+    }
+
+    /// Swap transfer time accumulated on the copy stream so far.
+    pub fn copy_busy(&self) -> f64 {
+        self.swap_busy
     }
 
     /// Add a request to the run (streams are filled round-robin in push
@@ -366,6 +426,12 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
     pub fn push(&mut self, spec: RequestSpec) -> usize {
         let si = self.next_stream;
         self.next_stream = (self.next_stream + 1) % self.n_streams;
+        self.push_to(si, spec)
+    }
+
+    /// [`push`](Self::push) onto an explicit stream — topology drivers
+    /// pin arrivals to a lane (prefill vs decode) instead of round-robin.
+    pub fn push_to(&mut self, si: usize, spec: RequestSpec) -> usize {
         let local = self.result.completions.len();
         self.pools[si].push(spec);
         self.global_ids[si].push(local);
@@ -373,6 +439,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         self.result.bubble_per_request.push(0.0);
         self.result.first_tokens.push(f64::NAN);
         self.result.prefix_fallback.push(false);
+        self.result.max_tbt.push(0.0);
         let at = spec.arrival.max(self.clock);
         let wake_at = match &self.events[si] {
             Event::Done | Event::Stalled => Some(at),
@@ -383,6 +450,39 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             self.events[si] = Event::Idle(w);
         }
         local
+    }
+
+    /// Push a request whose prompt KV just arrived over the interconnect
+    /// (disaggregation handoff): `spec.arrival` must be the transfer's
+    /// finish time — admission cannot see the request before its KV
+    /// lands — and `first_token_at` the prefill side's first-token stamp.
+    /// The request enters decode-ready (prompt prefilled, first token
+    /// produced elsewhere) with [`Request::imported`] set, so its first
+    /// admission skips the host-link swap charge; its next token's TBT gap
+    /// is measured from `first_token_at`, which makes the transfer +
+    /// decode-queueing latency visible in `max_tbt` exactly where an SLO
+    /// would feel it.
+    ///
+    /// [`Request::imported`]: crate::coordinator::Request::imported
+    pub fn push_imported(&mut self, si: usize, spec: RequestSpec, first_token_at: f64) -> usize {
+        debug_assert!(spec.decode_len > 1, "a handoff without decode work is pointless");
+        debug_assert!(first_token_at <= spec.arrival, "first token precedes the transfer");
+        let local = self.push_to(si, spec);
+        let pool = &mut self.pools[si];
+        let id = pool.len() - 1;
+        let r = pool.get_mut(id);
+        r.prefilled = spec.prompt_len;
+        r.decoded = 1;
+        r.token_times.push(first_token_at);
+        r.imported = true;
+        local
+    }
+
+    /// Drain completions recorded since the last call, as (run-local
+    /// index, completion time) in completion order — the handoff driver
+    /// turns a prefill replica's finished prompts into transfers.
+    pub fn take_finished(&mut self) -> Vec<(usize, f64)> {
+        std::mem::take(&mut self.finish_events)
     }
 
     /// Earliest pending (timed) event across streams, if any. `None` means
@@ -452,7 +552,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 let mut eff = r.prefilled;
                 if !r.prefix_fallback {
                     if let Some(pfx) = r.spec.prefix {
-                        if let Some((cov, _)) = self.kv.lookup_prefix(pfx.id) {
+                        if let Some((cov, _)) = self.kv.pool().lookup_prefix(pfx.id) {
                             eff = eff.max(cov.min(r.spec.prompt_len.saturating_sub(1)));
                         }
                     }
@@ -524,15 +624,24 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         // admission: the stream's own policy (dispatching any custom
         // `admit_capped` override, e.g. request-level batching) plus the
         // per-stream cap over the SHARED pool
-        self.scheds[si].admit_capped(&mut self.pools[si], &mut self.kv, now, self.per_stream_cap);
+        self.scheds[si].admit_capped(
+            &mut self.pools[si],
+            self.kv.pool_mut(),
+            now,
+            self.per_stream_cap,
+        );
         self.result.metrics.rejections += self.pools[si].take_rejected_events();
         self.pending_prefix_hits[si] += self.pools[si].take_prefix_hits();
         self.pending_prefix_fallbacks[si] += self.pools[si].take_prefix_fallbacks();
         self.pending_wait_ticks[si] += self.pools[si].take_prefix_wait_ticks();
         self.pending_swap_in[si] +=
             self.sim.applier.swap.swap_in_time(self.pools[si].take_swapped_in_tokens());
+        if self.overlap_swaps {
+            // swap-in rides the copy stream: compute starts immediately
+            self.swap_busy += std::mem::take(&mut self.pending_swap_in[si]);
+        }
 
-        let batch = self.scheds[si].compose(&mut self.pools[si], &mut self.kv, now);
+        let batch = self.scheds[si].compose(&mut self.pools[si], self.kv.pool_mut(), now);
         if batch.is_empty() {
             self.events[si] = if self.pools[si].all_complete() || self.pools[si].is_empty() {
                 Event::Done
@@ -631,14 +740,24 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         let effects = self.sim.applier.apply_guarded(
             &mut self.pools,
             si,
-            &mut self.kv,
+            self.kv.pool_mut(),
             &batch,
             finish,
             &self.scratch_in_flight,
         );
         for local in &effects.finished {
-            self.result.completions[self.global_ids[si][*local]] = finish;
+            let g = self.global_ids[si][*local];
+            self.result.completions[g] = finish;
+            self.finish_events.push((g, finish));
         }
+        // swap-out either serializes the stream (colocated default) or
+        // rides the overlapped copy stream (disaggregated topologies)
+        let swap_out = if self.overlap_swaps {
+            self.swap_busy += effects.swap_time;
+            0.0
+        } else {
+            effects.swap_time
+        };
         // occupancy counts shared-prefix content once: private live tokens
         // + the allocator's resident-prefix tokens
         let private_live: usize = self.pools.iter().map(|p| p.live_private_kv_tokens()).sum();
@@ -648,12 +767,12 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             shape,
             prefill_alone: None,
             breakdown: None,
-            kv_blocks_in_use: self.kv.allocated(),
-            kv_blocks_total: self.kv.capacity(),
+            kv_blocks_in_use: self.kv.pool().allocated(),
+            kv_blocks_total: self.kv.pool().capacity(),
             n_active: self.pools.iter().map(|p| p.active_count()).sum(),
             preemptions: effects.preemptions,
-            kv_frag_tokens: self.kv.internal_fragmentation(private_live),
-            swap_time: swap_in + effects.swap_time,
+            kv_frag_tokens: self.kv.pool().internal_fragmentation(private_live),
+            swap_time: swap_in + swap_out,
             rejections: 0,
             prefix_hits,
             prefix_fallbacks,
@@ -661,8 +780,9 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             shared_kv_tokens: self.pools.iter().map(|p| p.shared_kv_tokens()).sum(),
         });
         self.result.makespan = self.result.makespan.max(finish);
-        // swap-out transfers delay this stream's next schedule
-        self.events[si] = Event::Schedule(finish + effects.swap_time);
+        // swap-out transfers delay this stream's next schedule (zero when
+        // they ride the copy stream instead)
+        self.events[si] = Event::Schedule(finish + swap_out);
         // freed blocks may unblock stalled streams: retry them
         for (j, ev) in self.events.iter_mut().enumerate() {
             if j != si && matches!(ev, Event::Stalled) {
@@ -735,10 +855,10 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
              kv {}/{} blocks in use ({} free + {} reclaimable), {waiting} queued \
              requests blocked on a prefix fill",
             detail.join("; "),
-            self.kv.allocated(),
-            self.kv.capacity(),
-            self.kv.available(),
-            self.kv.reclaimable(),
+            self.kv.pool().allocated(),
+            self.kv.pool().capacity(),
+            self.kv.pool().available(),
+            self.kv.pool().reclaimable(),
         );
     }
 
@@ -761,8 +881,11 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                     self.result.first_tokens[g] = t;
                 }
                 self.result.prefix_fallback[g] = r.prefix_fallback;
+                self.result.max_tbt[g] =
+                    r.token_gaps().iter().copied().fold(0.0, f64::max);
             }
         }
+        self.result.copy_busy = self.swap_busy;
         self.result.latency = LatencyReport::from_pools(&self.pools);
         self.result
     }
@@ -1059,5 +1182,104 @@ mod tests {
         assert_eq!(res.completions.len(), 2);
         assert!(res.completions.iter().all(|t| !t.is_nan()));
         assert!(res.completions[1] > 100.0);
+    }
+
+    /// The handoff import edge: a request whose KV arrives over the
+    /// interconnect enters decode-ready at the transfer's finish time —
+    /// admission never sees it earlier — produces only its remaining
+    /// decode tokens, keeps TTFT off this replica's books (the prefill
+    /// side owns it), and surfaces the transfer + queueing latency in its
+    /// max TBT gap. `take_finished` exposes the completion for the driver.
+    #[test]
+    fn imported_requests_wait_for_their_transfer_arrival() {
+        let sim = PipelineSim::new(gpt3_profiler(1), 1);
+        let mut make =
+            || Box::new(SarathiScheduler::new(256, 8, 128)) as Box<dyn Scheduler + Send>;
+        let mut run = PipelineRun::with_streams(&sim, KvManager::new(8), Some(8), &mut make, 1);
+        let spec = RequestSpec { prompt_len: 100, decode_len: 5, arrival: 2.0, prefix: None };
+        run.push_imported(0, spec, 1.5);
+        assert_eq!(run.next_event_time(), Some(2.0), "invisible before the KV lands");
+        while run.step() {}
+        let finished = run.take_finished();
+        assert_eq!(finished.len(), 1);
+        assert_eq!(finished[0].0, 0);
+        assert!(finished[0].1 >= 2.0);
+        assert!(run.take_finished().is_empty(), "events drain");
+        let res = run.finish();
+        assert!(res.completions[0] >= 2.0, "decode cannot precede the transfer");
+        assert_eq!(res.latency.ttft.count(), 0, "TTFT belongs to the prefill side");
+        // 4 decode gaps stamped; the first spans transfer + admission wait
+        assert_eq!(res.latency.tbt.count(), 4);
+        assert!(res.max_tbt[0] > 0.5 - 1e-9, "gap from the prefill-side first token");
+    }
+
+    /// RAPID-Serve-style intra-replica split: two lanes time-share one
+    /// stage's compute. Work pinned per lane completes on both, and the
+    /// stage serializes the lanes (busy time never exceeds the makespan).
+    #[test]
+    fn split_lanes_time_share_one_stage() {
+        let sim = PipelineSim::new(gpt3_profiler(1), 1);
+        let mut make =
+            || Box::new(SarathiScheduler::new(128, 4, 128)) as Box<dyn Scheduler + Send>;
+        let mut run = PipelineRun::with_streams(&sim, KvManager::new(8), Some(4), &mut make, 2);
+        for (i, spec) in workload(8).into_iter().enumerate() {
+            run.push_to(i % 2, spec);
+        }
+        while run.step() {}
+        assert_eq!(run.resolve_stall(), StallOutcome::Idle);
+        let res = run.finish();
+        assert!(res.completions.iter().all(|t| !t.is_nan()));
+        assert!(
+            res.total_busy <= res.makespan + 1e-9,
+            "one stage: lanes serialize, busy {} vs makespan {}",
+            res.total_busy,
+            res.makespan
+        );
+    }
+
+    /// Swap migration to the copy stream: with overlap on, preemption
+    /// transfers stop serializing compute (zero recorded swap time, a
+    /// shorter run) and show up as copy-stream busy time instead.
+    #[test]
+    fn overlapped_swaps_ride_the_copy_stream_not_the_compute_clock() {
+        let pp = 2;
+        let d = Deployment::new(ModelConfig::gpt3(), GpuConfig::a100(), 4096)
+            .with_parallel(ParallelConfig::tp_pp(8, pp));
+        let sim = PipelineSim::new(gpt3_profiler(pp), pp)
+            .with_swap_cost(SwapCost::for_deployment(&d, PreemptionMode::Swap));
+        let drive = |overlap: bool| {
+            let mut make =
+                || Box::new(HybridScheduler::new(256, 4, 0)) as Box<dyn Scheduler + Send>;
+            let mut run =
+                PipelineRun::new(&sim, KvManager::paged(16, 128), Some(4), &mut make);
+            run.set_overlap_swaps(overlap);
+            for spec in tight_specs() {
+                run.push(spec);
+            }
+            loop {
+                if run.step() {
+                    continue;
+                }
+                match run.resolve_stall() {
+                    StallOutcome::Demoted => continue,
+                    StallOutcome::Wedged => run.panic_wedged(),
+                    StallOutcome::Idle => break,
+                }
+            }
+            run.finish()
+        };
+        let serialized = drive(false);
+        let overlapped = drive(true);
+        assert!(serialized.metrics.total_swap_time() > 0.0);
+        assert_eq!(serialized.copy_busy, 0.0);
+        assert!(overlapped.metrics.preemptions > 0);
+        assert_eq!(overlapped.metrics.total_swap_time(), 0.0, "nothing serializes");
+        assert!(overlapped.copy_busy > 0.0, "the charge moved to the copy stream");
+        assert!(
+            overlapped.makespan < serialized.makespan,
+            "overlap must shorten the run: {} !< {}",
+            overlapped.makespan,
+            serialized.makespan
+        );
     }
 }

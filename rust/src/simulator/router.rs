@@ -82,7 +82,10 @@ impl LeastOutstandingTokens {
         Self
     }
 
-    fn least(views: &[ReplicaView]) -> usize {
+    /// Lowest outstanding-token count, ties → lowest index. Shared by the
+    /// routing policy and the disaggregation driver's decode-side handoff
+    /// choice (which replica receives a finished prompt's KV).
+    pub fn least(views: &[ReplicaView]) -> usize {
         views
             .iter()
             .enumerate()

@@ -1,0 +1,294 @@
+//! The costed KV copy stream between replicas — disaggregation's data
+//! plane (DistServe, arXiv 2401.09670 §4.3).
+//!
+//! A prefill replica that finishes a prompt exports the request's KV
+//! ([`KvExport`]) and hands it to a decode replica over the replica
+//! interconnect (`interconnect_gbps`, an NVLink/IB-class fabric edge
+//! distinct from the PCIe `host_bw_gbps` swap path). The fabric models
+//! one copy lane per ordered replica pair: transfers on the SAME pair
+//! serialize (a link moves one stream at a time), transfers on different
+//! pairs overlap freely, and — the point of the refactor — transfers
+//! never occupy compute: they are events on the cluster clock, so a
+//! decode replica keeps stepping while its next request's KV is still in
+//! flight, and admission simply waits for the arrival edge.
+//!
+//! Conservation is tracked explicitly (every export is delivered exactly
+//! once or cancelled) because the handoff is the one place KV crosses an
+//! ownership boundary; `tests/cluster_disagg.rs` asserts the books close.
+
+use crate::config::Deployment;
+use crate::coordinator::KvExport;
+
+/// One KV handoff on the wire: request, endpoints, size and timing.
+/// `start − ready_at` is queueing on the pair's lane; `finish − ready_at`
+/// is the request's end-to-end `kv_transfer_time`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferRecord {
+    /// Global (cluster-order) request index.
+    pub request: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub kv_tokens: usize,
+    /// Bytes moved per GPU (each GPU ships its own KV shard on its own
+    /// link, so the per-GPU shard size is the serialization unit).
+    pub bytes: f64,
+    /// When the prefill finished and the export became available.
+    pub ready_at: f64,
+    pub start: f64,
+    pub finish: f64,
+}
+
+impl TransferRecord {
+    /// The request's transfer latency: lane queueing + wire time.
+    pub fn kv_transfer_time(&self) -> f64 {
+        self.finish - self.ready_at
+    }
+
+    /// One JSON-Lines record, tagged `"transfer"` so colocated traces
+    /// (which have none) stay byte-identical to the pre-refactor schema.
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"transfer\":{{\"request\":{},\"src\":{},\"dst\":{},\
+             \"kv_tokens\":{},\"bytes\":{:.1},\"ready_at\":{:.6},\
+             \"start\":{:.6},\"finish\":{:.6},\"kv_transfer_time\":{:.6}}}}}",
+            self.request,
+            self.src,
+            self.dst,
+            self.kv_tokens,
+            self.bytes,
+            self.ready_at,
+            self.start,
+            self.finish,
+            self.kv_transfer_time(),
+        )
+    }
+}
+
+/// The cluster's copy fabric: one lane per ordered replica pair, each
+/// serializing its own transfers, all overlapping with compute and with
+/// each other.
+#[derive(Clone, Debug)]
+pub struct CopyFabric {
+    replicas: usize,
+    /// Interconnect bandwidth, bytes/s.
+    bw: f64,
+    /// KV bytes per token PER GPU (each GPU ships its own shard).
+    bytes_per_token: f64,
+    /// Earliest-free time per (src, dst) lane.
+    free: Vec<f64>,
+    /// Every transfer begun, in begin order.
+    pub records: Vec<TransferRecord>,
+    exported: usize,
+    delivered: usize,
+    cancelled: usize,
+}
+
+impl CopyFabric {
+    pub fn new(replicas: usize, interconnect_gbps: f64, bytes_per_token: f64) -> Self {
+        assert!(interconnect_gbps > 0.0, "interconnect bandwidth must be positive");
+        CopyFabric {
+            replicas,
+            bw: interconnect_gbps * 1e9,
+            bytes_per_token,
+            free: vec![0.0; replicas * replicas],
+            records: Vec::new(),
+            exported: 0,
+            delivered: 0,
+            cancelled: 0,
+        }
+    }
+
+    /// Fabric for a deployment: the GPU's `interconnect_gbps` and the
+    /// model's per-GPU KV shard size.
+    pub fn for_deployment(dep: &Deployment, replicas: usize) -> Self {
+        Self::new(replicas, dep.gpu.interconnect_gbps, dep.kv_bytes_per_token_per_gpu())
+    }
+
+    /// Wire time for `kv_tokens` of KV, ignoring lane queueing.
+    pub fn transfer_time(&self, kv_tokens: usize) -> f64 {
+        kv_tokens as f64 * self.bytes_per_token / self.bw
+    }
+
+    /// Start a handoff: the export becomes available at `ready_at`, waits
+    /// for the (src → dst) lane if it is mid-copy, then moves at wire
+    /// speed. Returns the arrival time at `dst` — the earliest instant
+    /// decode admission may see the request. Compute on both replicas is
+    /// untouched; only the lane's clock advances.
+    pub fn begin(
+        &mut self,
+        request: usize,
+        src: usize,
+        dst: usize,
+        export: &KvExport,
+        ready_at: f64,
+    ) -> f64 {
+        assert!(src < self.replicas && dst < self.replicas, "transfer endpoints out of range");
+        assert!(src != dst, "intra-replica handoff moves no KV (skip the fabric)");
+        let bytes = export.kv_tokens as f64 * self.bytes_per_token;
+        let lane = src * self.replicas + dst;
+        let start = self.free[lane].max(ready_at);
+        let finish = start + bytes / self.bw;
+        self.free[lane] = finish;
+        self.exported += 1;
+        self.records.push(TransferRecord {
+            request,
+            src,
+            dst,
+            kv_tokens: export.kv_tokens,
+            bytes,
+            ready_at,
+            start,
+            finish,
+        });
+        finish
+    }
+
+    /// The destination materialized the export into its own pool.
+    pub fn deliver(&mut self, request: usize) {
+        debug_assert!(
+            self.records.iter().any(|r| r.request == request),
+            "delivering a transfer that never began"
+        );
+        self.delivered += 1;
+    }
+
+    /// The export was abandoned before materializing (e.g. its request
+    /// would never decode). Kept for the conservation books — the driver
+    /// only begins transfers for prompts that WILL decode, so this stays
+    /// unused on the happy path.
+    pub fn cancel(&mut self, request: usize) {
+        debug_assert!(
+            self.records.iter().any(|r| r.request == request),
+            "cancelling a transfer that never began"
+        );
+        self.cancelled += 1;
+    }
+
+    /// Conservation: every export delivered exactly once or cancelled.
+    pub fn is_conserved(&self) -> bool {
+        self.exported == self.delivered + self.cancelled
+    }
+
+    pub fn exported(&self) -> usize {
+        self.exported
+    }
+
+    pub fn delivered(&self) -> usize {
+        self.delivered
+    }
+
+    pub fn cancelled(&self) -> usize {
+        self.cancelled
+    }
+
+    /// Total lane-busy time (wire time summed over all transfers — lane
+    /// queueing excluded, so this is time the fabric actually moved bytes).
+    pub fn busy_time(&self) -> f64 {
+        self.records.iter().map(|r| r.finish - r.start).sum()
+    }
+
+    /// Total bytes moved.
+    pub fn total_bytes(&self) -> f64 {
+        self.records.iter().map(|r| r.bytes).sum()
+    }
+
+    /// Mean concurrently-busy lanes over `makespan` (can exceed 1.0 when
+    /// disjoint pairs overlap — that overlap is the refactor's win).
+    pub fn utilization(&self, makespan: f64) -> f64 {
+        if makespan <= 0.0 {
+            0.0
+        } else {
+            self.busy_time() / makespan
+        }
+    }
+
+    /// Trace summary line (written once after the per-transfer records).
+    pub fn summary_jsonl(&self, makespan: f64) -> String {
+        format!(
+            "{{\"transfer_stream\":{{\"transfers\":{},\"bytes\":{:.1},\
+             \"busy\":{:.6},\"utilization\":{:.6}}}}}",
+            self.records.len(),
+            self.total_bytes(),
+            self.busy_time(),
+            self.utilization(makespan),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> CopyFabric {
+        // 10 GB/s, 1 MB per token → 1e-4 s per token: easy arithmetic
+        CopyFabric::new(4, 10.0, 1.0e6)
+    }
+
+    #[test]
+    fn same_pair_serializes_different_pairs_overlap() {
+        let mut f = fabric();
+        let ex = KvExport { kv_tokens: 1000, blocks: 10 };
+        // 1000 tokens × 1e6 B / 1e10 B/s = 0.1 s on the wire
+        let t1 = f.begin(0, 0, 2, &ex, 0.0);
+        assert!((t1 - 0.1).abs() < 1e-12);
+        // same lane, ready mid-copy: queues behind the first
+        let t2 = f.begin(1, 0, 2, &ex, 0.05);
+        assert!((t2 - 0.2).abs() < 1e-12);
+        assert!((f.records[1].start - 0.1).abs() < 1e-12, "lane busy until 0.1");
+        // different pair: overlaps freely
+        let t3 = f.begin(2, 1, 3, &ex, 0.05);
+        assert!((t3 - 0.15).abs() < 1e-12);
+        // per-pair busy intervals never overlap
+        for w in f.records.windows(2) {
+            if (w[0].src, w[0].dst) == (w[1].src, w[1].dst) {
+                assert!(w[1].start >= w[0].finish);
+            }
+        }
+        assert!((f.busy_time() - 0.3).abs() < 1e-12);
+        assert!((f.utilization(0.2) - 1.5).abs() < 1e-12, "overlapping pairs exceed 1");
+    }
+
+    #[test]
+    fn conservation_books_close_only_when_every_export_lands() {
+        let mut f = fabric();
+        let ex = KvExport { kv_tokens: 64, blocks: 2 };
+        f.begin(0, 0, 1, &ex, 0.0);
+        f.begin(1, 0, 1, &ex, 0.0);
+        assert!(!f.is_conserved(), "in-flight exports are not conserved yet");
+        f.deliver(0);
+        f.cancel(1);
+        assert!(f.is_conserved());
+        assert_eq!((f.exported(), f.delivered(), f.cancelled()), (2, 1, 1));
+    }
+
+    #[test]
+    fn record_jsonl_has_the_kv_transfer_time_field() {
+        let mut f = fabric();
+        let ex = KvExport { kv_tokens: 1000, blocks: 10 };
+        f.begin(7, 0, 3, &ex, 1.0);
+        let line = f.records[0].to_jsonl();
+        assert!(line.starts_with("{\"transfer\":{\"request\":7,\"src\":0,\"dst\":3,"));
+        assert!(line.contains("\"kv_transfer_time\":0.100000"));
+        assert!(line.ends_with("}}"));
+        let summary = f.summary_jsonl(1.0);
+        assert!(summary.starts_with("{\"transfer_stream\":{\"transfers\":1,"));
+        assert!(summary.contains("\"busy\":0.100000"));
+    }
+
+    #[test]
+    #[should_panic(expected = "intra-replica")]
+    fn intra_replica_transfers_are_rejected() {
+        let mut f = fabric();
+        f.begin(0, 1, 1, &KvExport { kv_tokens: 1, blocks: 1 }, 0.0);
+    }
+
+    #[test]
+    fn deployment_fabric_prices_a_known_shard() {
+        use crate::config::{GpuConfig, ModelConfig};
+        let dep = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
+        let f = CopyFabric::for_deployment(&dep, 2);
+        // llama13b: 819200 B/token over 50 GB/s
+        let expect = 819200.0 / 50.0e9;
+        assert!((f.transfer_time(1) - expect).abs() < 1e-18);
+    }
+}

@@ -66,6 +66,20 @@ impl Rng {
         -(1.0 - self.f64()).ln() / rate
     }
 
+    /// Derive an independent child stream for `salt` without touching
+    /// this generator's state: the child is seeded from a mix64 hash of
+    /// (state, salt), so `rng.split(0)`, `rng.split(1)`, … give per-replica
+    /// generators whose sequences don't overlap the parent's and are
+    /// stable however many replicas a sweep uses (PR-6 leftover: cluster
+    /// sweeps previously drew every replica's workload from ONE sequence,
+    /// so changing the replica count reshuffled everyone's requests).
+    pub fn split(&self, salt: u64) -> Rng {
+        Rng::new(
+            mix64(self.s[0] ^ mix64(self.s[2]))
+                ^ mix64(salt.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1)),
+        )
+    }
+
     /// Bounded Zipf(theta) over [lo, hi] by inverse-CDF on precomputed
     /// weights — the distribution §5.3 samples sequence lengths from.
     pub fn zipf(&mut self, theta: f64, lo: u64, hi: u64) -> u64 {
@@ -99,6 +113,23 @@ mod tests {
     #[test]
     fn different_seeds_differ() {
         assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_stable() {
+        let parent = Rng::new(42);
+        // deterministic per salt, distinct across salts and from the parent
+        let mut a = parent.split(0);
+        let mut a2 = parent.split(0);
+        let mut b = parent.split(1);
+        let mut p = parent.clone();
+        let (xa, xa2, xb, xp) = (a.next_u64(), a2.next_u64(), b.next_u64(), p.next_u64());
+        assert_eq!(xa, xa2);
+        assert_ne!(xa, xb);
+        assert_ne!(xa, xp);
+        // splitting is non-consuming: the parent stream is untouched
+        let mut p2 = Rng::new(42);
+        assert_eq!(p2.next_u64(), xp);
     }
 
     #[test]

@@ -183,6 +183,56 @@ pub fn with_template_burst_arrivals(
     pop
 }
 
+/// One independent RNG stream per replica, derived by [`Rng::split`] from
+/// a single root generator. Replica `i`'s stream depends only on the root
+/// seed and `i`, never on how many replicas the sweep uses — so growing a
+/// sweep from 8 to 64 replicas leaves the first 8 replicas' workloads
+/// bit-identical instead of reshuffling one shared sequence.
+pub fn per_replica_rngs(root: &Rng, replicas: usize) -> Vec<Rng> {
+    (0..replicas).map(|ri| root.split(ri as u64)).collect()
+}
+
+/// Per-replica shared-prefix shards with Poisson arrivals, each drawn
+/// from its own split stream (template ids salted per replica so shards
+/// don't collide in a shared prefix index). Returns one shard per
+/// replica; shard `i` is stable under changes to `replicas`.
+#[allow(clippy::too_many_arguments)]
+pub fn sharded_shared_prefix_population(
+    root: &Rng,
+    replicas: usize,
+    per_replica: usize,
+    num_templates: usize,
+    theta: f64,
+    prefix_len: usize,
+    min_unique: usize,
+    max_unique: usize,
+    pd: f64,
+    rate: f64,
+) -> Vec<Vec<RequestSpec>> {
+    per_replica_rngs(root, replicas)
+        .iter_mut()
+        .enumerate()
+        .map(|(ri, rng)| {
+            let mut shard = shared_prefix_population(
+                rng,
+                per_replica,
+                num_templates,
+                theta,
+                prefix_len,
+                min_unique,
+                max_unique,
+                pd,
+            );
+            for s in shard.iter_mut() {
+                if let Some(p) = s.prefix.as_mut() {
+                    p.id += ri as u64 * 1_000_003;
+                }
+            }
+            with_poisson_arrivals(rng, shard, rate)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +333,25 @@ mod tests {
             assert_eq!(a.prompt_len, b.prompt_len);
             assert_eq!(a.prefix, b.prefix);
         }
+    }
+
+    #[test]
+    fn per_replica_shards_are_stable_under_replica_count() {
+        let root = Rng::new(17);
+        let small = sharded_shared_prefix_population(&root, 4, 40, 6, 0.6, 128, 16, 64, 5.0, 20.0);
+        let large = sharded_shared_prefix_population(&root, 16, 40, 6, 0.6, 128, 16, 64, 5.0, 20.0);
+        assert_eq!(small.len(), 4);
+        assert_eq!(large.len(), 16);
+        // growing the sweep leaves existing shards bit-identical
+        for (a, b) in small.iter().zip(&large) {
+            assert_eq!(a, b);
+        }
+        // shards are genuinely different streams, with disjoint template ids
+        assert_ne!(large[0], large[1]);
+        let ids = |shard: &[RequestSpec]| {
+            shard.iter().filter_map(|s| s.prefix.map(|p| p.id)).collect::<Vec<_>>()
+        };
+        assert!(ids(&large[0]).iter().all(|id| !ids(&large[1]).contains(id)));
     }
 
     #[test]

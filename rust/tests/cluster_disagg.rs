@@ -1,0 +1,228 @@
+//! PR-7 acceptance: prefill/decode disaggregation as a first-class
+//! deployment mode. Three claims:
+//!
+//! 1. **Conservation + overlap** — every KV export the prefill side
+//!    begins lands on a decode replica exactly once, the per-request
+//!    `kv_transfer_time` books match the fabric's records, and transfers
+//!    ride an overlapped copy stream (fabric busy while compute
+//!    advances), never the compute clock.
+//! 2. **Determinism** — the round-based handoff driver is BITWISE
+//!    identical across `--threads` counts (completions, TTFT, max TBT,
+//!    transfer times, merged JSONL trace), same stance as the routed
+//!    cluster suite: `to_bits`, not tolerances.
+//! 3. **Goodput crossover** — under a TBT-tight SLO disaggregation wins
+//!    (decode replicas never interleave prefill chunks, so the worst
+//!    token gap shrinks); under a TTFT-tight SLO colocation wins (every
+//!    replica owns prefill capacity and no prompt pays a wire hop). The
+//!    SLO knees are self-calibrated from the two runs' own medians, so
+//!    the test pins the ORDERING the paper's disaggregation argument
+//!    predicts, not cost-model constants.
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
+use sarathi::coordinator::sched::SarathiScheduler;
+use sarathi::coordinator::{KvManager, Scheduler};
+use sarathi::simulator::{ClusterResult, ClusterSim, RoundRobin, Topology};
+use sarathi::util::Rng;
+use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
+
+const REPLICAS: usize = 4;
+const PREFILL_REPLICAS: usize = 1;
+const CAP: usize = 12;
+/// The a6000 saturation chunk (§4.2): colocated hybrid iterations carry a
+/// 512-token chunk (~2× a batched decode-only iteration), which is
+/// exactly the prefill interference disaggregation removes — the TBT side
+/// of the crossover lives on this gap.
+const CHUNK: usize = 512;
+/// Arrival rate putting the single prefill replica near saturation
+/// (~0.9 utilization) while four colocated replicas sit near ~0.45 — the
+/// TTFT side of the crossover lives on this asymmetry.
+const RATE: f64 = 2.3;
+
+/// 4 whole-model LLaMA-13B replicas over a 200 Gbps fabric (NVLink-class;
+/// the disaggregation regime the paper's §6 discussion targets — the
+/// wire hop must not dominate a decode iteration).
+fn cluster() -> ClusterSim {
+    let mut gpu = GpuConfig::a6000();
+    gpu.interconnect_gbps = 200.0;
+    ClusterSim::new(
+        Deployment::new(ModelConfig::llama13b(), gpu, 2048)
+            .with_parallel(ParallelConfig::tp_pp(1, 1).with_replicas(REPLICAS)),
+    )
+}
+
+/// Long prompts, real decode phases: totals Zipf in [1024, 2048] split
+/// P:D = 16 (decode runs of ~60-120 tokens — enough for per-request TBT
+/// to mean something), open-loop Poisson arrivals.
+fn workload(seed: u64, n: usize) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let pop = zipf_population(&mut rng, n, 0.4, 1024, 2048, 16.0);
+    with_poisson_arrivals(&mut rng, pop, RATE)
+}
+
+fn run(topology: Topology, pop: &[RequestSpec], threads: usize) -> ClusterResult {
+    let mut router = RoundRobin::default();
+    cluster().run_topology(
+        topology,
+        pop,
+        &mut router,
+        || KvManager::new(CAP),
+        Some(CAP),
+        || Box::new(SarathiScheduler::new(CHUNK, CAP, 128)) as Box<dyn Scheduler + Send>,
+        threads,
+    )
+}
+
+fn disagg() -> Topology {
+    Topology::Disagg { prefill_replicas: PREFILL_REPLICAS }
+}
+
+fn median(xs: &[f64]) -> f64 {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    assert!(!v.is_empty(), "median of an empty/NaN-only sample");
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
+
+#[test]
+fn disagg_conserves_kv_and_overlaps_transfers_with_compute() {
+    let pop = workload(11, 96);
+    let res = run(disagg(), &pop, 1);
+    assert!(
+        res.completions.iter().all(|t| !t.is_nan()),
+        "every request must complete under disaggregation"
+    );
+    assert_eq!(res.topology, "disagg");
+    let fabric = res.fabric.as_ref().expect("disagg result carries its fabric");
+
+    // conservation: one export per decode-bearing prompt, each delivered
+    // exactly once — the driver's own assert plus the public books
+    let expect = pop.iter().filter(|s| s.decode_len > 1).count();
+    assert_eq!(fabric.records.len(), expect, "one transfer per handed-off prompt");
+    assert!(fabric.is_conserved(), "exports must balance deliveries");
+    assert!(fabric.busy_time() > 0.0, "the fabric moved real bytes");
+    assert!(res.transfer_busy >= fabric.busy_time());
+
+    for rec in &fabric.records {
+        assert!(
+            rec.src < PREFILL_REPLICAS && rec.dst >= PREFILL_REPLICAS,
+            "KV flows prefill -> decode only (got {} -> {})",
+            rec.src,
+            rec.dst
+        );
+        assert!(rec.finish > rec.start && rec.start >= rec.ready_at, "causal transfer timing");
+        // the per-request metric is exactly the fabric's queue + wire time
+        assert_eq!(
+            res.kv_transfer_time[rec.request].to_bits(),
+            rec.kv_transfer_time().to_bits(),
+            "request {} kv_transfer_time diverged from its record",
+            rec.request
+        );
+        assert!(res.kv_transfer_time[rec.request] > 0.0);
+        // the decode side cannot finish before its KV landed, and the
+        // stitched TBT gap must cover the handoff
+        assert!(res.completions[rec.request] > rec.finish);
+        assert!(res.max_tbt[rec.request] >= res.kv_transfer_time[rec.request] - 1e-12);
+    }
+
+    // overlap: some transfer is on the wire while some replica is mid
+    // iteration — the copy stream does not stop the compute clock
+    let overlapped = fabric.records.iter().any(|rec| {
+        res.per_replica.iter().any(|rep| {
+            rep.metrics.iterations.iter().any(|it| {
+                it.started_at < rec.finish && rec.start < it.started_at + it.elapsed
+            })
+        })
+    });
+    assert!(overlapped, "KV transfers must overlap compute, not serialize it");
+}
+
+#[test]
+fn disagg_is_bitwise_identical_across_thread_counts() {
+    for seed in [5u64, 23] {
+        let pop = workload(seed, 64);
+        let serial = run(disagg(), &pop, 1);
+        let serial_trace = jsonl_of(&serial, &format!("s{seed}_t1"));
+        // 0 = auto (one worker per core): machine-dependent count, same bits
+        for threads in [2usize, 4, 0] {
+            let threaded = run(disagg(), &pop, threads);
+            for (name, a, b) in [
+                ("completions", &serial.completions, &threaded.completions),
+                ("ttft", &serial.ttft, &threaded.ttft),
+                ("max_tbt", &serial.max_tbt, &threaded.max_tbt),
+                ("kv_transfer_time", &serial.kv_transfer_time, &threaded.kv_transfer_time),
+            ] {
+                assert_eq!(a.len(), b.len());
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "seed {seed} threads {threads} request {i}: {name} {x} != {y}"
+                    );
+                }
+            }
+            let threaded_trace = jsonl_of(&threaded, &format!("s{seed}_t{threads}"));
+            assert_eq!(
+                serial_trace, threaded_trace,
+                "seed {seed} threads {threads}: merged JSONL trace diverged"
+            );
+        }
+    }
+}
+
+fn jsonl_of(res: &ClusterResult, tag: &str) -> String {
+    let name = format!("sarathi_disagg_{tag}_{}.jsonl", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    res.write_jsonl(&path).expect("write jsonl trace");
+    let text = std::fs::read_to_string(&path).expect("read jsonl trace back");
+    let _ = std::fs::remove_file(&path);
+    text
+}
+
+#[test]
+fn goodput_crossover_tracks_slo_tightness() {
+    let pop = workload(11, 120);
+    let colo = run(Topology::Colocated, &pop, 1);
+    let dis = run(disagg(), &pop, 1);
+    for (name, res) in [("colocated", &colo), ("disagg", &dis)] {
+        assert!(
+            res.completions.iter().all(|t| !t.is_nan()),
+            "{name}: every request must complete"
+        );
+    }
+
+    // the two regimes' signatures, measured not assumed: decode-only
+    // replicas shrink the worst token gap (no saturation-sized chunk ever
+    // lands between a request's tokens); concentrating prefill on one
+    // near-saturated replica and adding a wire hop costs first-token
+    // latency
+    let (colo_tbt, dis_tbt) = (median(&colo.max_tbt), median(&dis.max_tbt));
+    assert!(
+        dis_tbt < colo_tbt,
+        "disagg must cut the median worst token gap ({dis_tbt:.4}s vs {colo_tbt:.4}s)"
+    );
+    let (colo_ttft, dis_ttft) = (median(&colo.ttft), median(&dis.ttft));
+    assert!(
+        colo_ttft < dis_ttft,
+        "colocated must keep the median TTFT lead ({colo_ttft:.4}s vs {dis_ttft:.4}s)"
+    );
+
+    // TBT-tight knee (TTFT unconstrained): the midpoint of the medians —
+    // most disagg requests sit under it, most colocated above
+    let tbt_knee = 0.5 * (colo_tbt + dis_tbt);
+    let (colo_frac, _) = colo.goodput(f64::INFINITY, tbt_knee);
+    let (dis_frac, _) = dis.goodput(f64::INFINITY, tbt_knee);
+    assert!(
+        dis_frac > colo_frac,
+        "TBT-tight SLO ({tbt_knee:.4}s): disagg goodput {dis_frac:.3} must beat \
+         colocated {colo_frac:.3}"
+    );
+
+    // TTFT-tight knee (TBT unconstrained): the ordering flips
+    let ttft_knee = 0.5 * (colo_ttft + dis_ttft);
+    let (colo_frac, _) = colo.goodput(ttft_knee, f64::INFINITY);
+    let (dis_frac, _) = dis.goodput(ttft_knee, f64::INFINITY);
+    assert!(
+        colo_frac > dis_frac,
+        "TTFT-tight SLO ({ttft_knee:.4}s): colocated goodput {colo_frac:.3} must beat \
+         disagg {dis_frac:.3}"
+    );
+}
