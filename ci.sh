@@ -73,6 +73,19 @@ echo "$DOUT" | grep -E 'kv_transfers=[1-9][0-9]*' \
 grep -q '"kv_transfer_time":' "$DTRACE" || { echo "JSONL lacks kv_transfer_time"; exit 1; }
 rm -f "$DTRACE"
 
+echo "== smoke: soak mode — progress lines, controller activity, streaming JSONL =="
+STRACE="$(mktemp -t soak_trace.XXXXXX.jsonl)"
+SOUT="$(cargo run --release -- simulate --horizon-secs 40 --flush-every 5 --rate 2 \
+    --scheduler hybrid --block-size 32 --target-p99-tbt 0.05 \
+    --diurnal-amp 0.4 --diurnal-period 20 --json-out "$STRACE")"
+echo "$SOUT" | grep -F '[soak]' >/dev/null || { echo "no soak progress lines"; exit 1; }
+echo "$SOUT" | grep -E 'controller_ticks=[1-9][0-9]* controller_adjustments=[0-9]+' \
+    || { echo "report lacks controller activity counters"; exit 1; }
+echo "$SOUT" | grep -F 'retained first->last checkpoint' >/dev/null \
+    || { echo "report lacks retained-memory checkpoints"; exit 1; }
+test -s "$STRACE" || { echo "empty soak JSONL trace"; exit 1; }
+rm -f "$STRACE"
+
 echo "== bench: hot-path + cluster sweep (quick), BENCH_*.json artifacts + 2x regression gate =="
 cargo bench --bench scheduler_hotpath
 cargo bench --bench cluster_sweep -- --quick

@@ -80,7 +80,7 @@ fn main() {
             Box::new(SimExecutor::new(cm.clone())),
         );
         e.run();
-        std::hint::black_box(e.metrics.iterations.len());
+        std::hint::black_box(e.metrics.recorded_count());
     }));
 
     write_json(

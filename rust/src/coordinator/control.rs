@@ -1,0 +1,272 @@
+//! Online SLO control loop (Sarathi-Serve arXiv 2403.02310 §5).
+//!
+//! The hybrid scheduler's `token_budget` IS the TBT/TTFT trade-off: a big
+//! budget lands big prefill chunks per iteration (fast first tokens, long
+//! iterations → high time-between-tokens for the decodes riding along); a
+//! small budget bounds iteration time (tight TBT) but drips prompts in
+//! slowly (TTFT suffers, queues grow). No static setting survives a
+//! workload whose load shifts — so [`SloController`] retargets the budget
+//! at runtime from the OBSERVED windowed P99 TBT, AIMD-style:
+//!
+//! * P99 over target → multiplicative decrease (back off hard; latency
+//!   SLOs punish sustained violation, not brief excursions);
+//! * P99 comfortably under target → additive increase (creep back up and
+//!   spend the slack on prefill throughput / TTFT).
+//!
+//! A second, slower actuator adapts the admission gate's bounded
+//! prefix-wait window to the observed fill economics: waits that keep
+//! degrading to fallbacks are wasted queueing (shrink the window); waits
+//! that keep resolving as hits are paying for themselves (stretch it).
+//!
+//! The controller is policy-agnostic — it speaks through
+//! [`Scheduler::set_token_budget`] / [`Scheduler::set_max_prefix_wait`],
+//! which default to refusing; policies without the knob are simply left
+//! alone (ticks still count the window, adjustments stay 0).
+
+use super::sched::Scheduler;
+use crate::util::Summary;
+
+/// Tuning for [`SloController`]. Defaults follow AIMD practice: halve-ish
+/// on violation (×0.8 per tick — several consecutive violating windows
+/// compound), creep up additively when comfortably under target.
+#[derive(Clone, Copy, Debug)]
+pub struct ControllerConfig {
+    /// The P99 time-between-tokens target, seconds.
+    pub target_p99_tbt: f64,
+    /// Budget floor (keep ≥ the scheduler's `max_batch`; the scheduler
+    /// clamps there anyway, this keeps the controller's view honest).
+    pub min_budget: usize,
+    /// Budget ceiling (the workload's saturation chunk — growing past it
+    /// buys no TTFT and only risks TBT).
+    pub max_budget: usize,
+    /// Multiplicative decrease factor on violation, in (0, 1).
+    pub decrease: f64,
+    /// Additive increase (tokens) when comfortably under target.
+    pub increase: usize,
+    /// "Comfortably under" = P99 < `headroom × target` — the dead band
+    /// between decrease and increase prevents oscillation around the SLO.
+    pub headroom: f64,
+    /// Minimum token gaps in a window before the budget actuator acts
+    /// (tiny windows make P99 noise, not signal).
+    pub min_window: usize,
+}
+
+impl ControllerConfig {
+    pub fn new(target_p99_tbt: f64, min_budget: usize, max_budget: usize) -> Self {
+        assert!(target_p99_tbt > 0.0, "TBT target must be positive");
+        assert!(
+            min_budget > 0 && min_budget <= max_budget,
+            "budget range [{min_budget}, {max_budget}] is empty"
+        );
+        ControllerConfig {
+            target_p99_tbt,
+            min_budget,
+            max_budget,
+            decrease: 0.8,
+            increase: 16,
+            headroom: 0.7,
+            min_window: 8,
+        }
+    }
+}
+
+/// What one control tick observed and did (progress lines + reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TickOutcome {
+    /// Windowed P99 TBT the tick acted on (0.0 when the window was empty).
+    pub p99_tbt: f64,
+    /// Token budget after the tick.
+    pub token_budget: usize,
+    /// Prefix-wait window after the tick.
+    pub max_prefix_wait: usize,
+    /// Actuator changes applied this tick (0, 1 or 2).
+    pub adjusted: usize,
+}
+
+/// AIMD controller holding both actuators' current setpoints. Feed it one
+/// drained TBT window per flush interval via [`tick`](Self::tick).
+#[derive(Clone, Debug)]
+pub struct SloController {
+    cfg: ControllerConfig,
+    token_budget: usize,
+    max_prefix_wait: usize,
+    adjustments: usize,
+    ticks: usize,
+}
+
+/// Bounds for the prefix-wait actuator: a window of 1 demotes waiters at
+/// the first stall; 32 attempts is past any fill a budgeted iteration
+/// stream can sustain — longer waits are queueing, not caching.
+const WAIT_MIN: usize = 1;
+const WAIT_MAX: usize = 32;
+
+impl SloController {
+    /// `initial_budget` / `initial_wait` must be the values the scheduler
+    /// was constructed with, so the controller's view starts in sync.
+    pub fn new(cfg: ControllerConfig, initial_budget: usize, initial_wait: usize) -> Self {
+        SloController {
+            cfg,
+            token_budget: initial_budget.clamp(cfg.min_budget, cfg.max_budget),
+            max_prefix_wait: initial_wait.clamp(WAIT_MIN, WAIT_MAX),
+            adjustments: 0,
+            ticks: 0,
+        }
+    }
+
+    /// One control tick over the TBT gaps observed since the last tick
+    /// (`window`, drained from the pool) plus the window's prefix-cache
+    /// deltas. Applies any retargeting through `sched`; returns what it
+    /// saw and did.
+    pub fn tick(
+        &mut self,
+        window: &Summary,
+        prefix_hits: usize,
+        prefix_fallbacks: usize,
+        sched: &mut dyn Scheduler,
+    ) -> TickOutcome {
+        self.ticks += 1;
+        let mut adjusted = 0;
+        let p99 = window.percentile(99.0);
+        if window.count() >= self.cfg.min_window {
+            let next = if p99 > self.cfg.target_p99_tbt {
+                // violation: multiplicative back-off toward the floor
+                ((self.token_budget as f64 * self.cfg.decrease) as usize)
+                    .max(self.cfg.min_budget)
+            } else if p99 < self.cfg.headroom * self.cfg.target_p99_tbt {
+                // comfortable: additive creep toward the ceiling
+                (self.token_budget + self.cfg.increase).min(self.cfg.max_budget)
+            } else {
+                self.token_budget // dead band: hold
+            };
+            if next != self.token_budget && sched.set_token_budget(next) {
+                self.token_budget = next;
+                adjusted += 1;
+            }
+        }
+        // prefix-wait economics: every fallback is a wait that expired
+        // worthless — shrink the window; hits with no fallbacks mean the
+        // fills are landing inside the current window — stretch it so
+        // borderline waiters stop demoting early. Both move one step per
+        // tick (this actuator must be slower than the budget's).
+        let next_wait = if prefix_fallbacks > prefix_hits {
+            self.max_prefix_wait.saturating_sub(1).max(WAIT_MIN)
+        } else if prefix_hits > 0 && prefix_fallbacks == 0 {
+            (self.max_prefix_wait + 1).min(WAIT_MAX)
+        } else {
+            self.max_prefix_wait
+        };
+        if next_wait != self.max_prefix_wait && sched.set_max_prefix_wait(next_wait) {
+            self.max_prefix_wait = next_wait;
+            adjusted += 1;
+        }
+        self.adjustments += adjusted;
+        TickOutcome {
+            p99_tbt: p99,
+            token_budget: self.token_budget,
+            max_prefix_wait: self.max_prefix_wait,
+            adjusted,
+        }
+    }
+
+    /// Total actuator changes across all ticks.
+    pub fn adjustments(&self) -> usize {
+        self.adjustments
+    }
+
+    /// Control ticks run so far.
+    pub fn ticks(&self) -> usize {
+        self.ticks
+    }
+
+    /// Current budget setpoint (mirrors the scheduler's).
+    pub fn token_budget(&self) -> usize {
+        self.token_budget
+    }
+
+    /// Current prefix-wait setpoint.
+    pub fn max_prefix_wait(&self) -> usize {
+        self.max_prefix_wait
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::{HybridScheduler, OrcaScheduler};
+
+    fn window(gaps: &[f64]) -> Summary {
+        let mut s = Summary::new();
+        for &g in gaps {
+            s.add(g);
+        }
+        s
+    }
+
+    #[test]
+    fn violation_backs_off_multiplicatively_and_comfort_creeps_up() {
+        let cfg = ControllerConfig::new(0.1, 8, 512);
+        let mut sched = HybridScheduler::new(256, 8, 2);
+        let mut ctl = SloController::new(cfg, 256, 4);
+        // 16 gaps, all over target: ×0.8 → 204
+        let out = ctl.tick(&window(&[0.5; 16]), 0, 0, &mut sched);
+        assert_eq!(out.token_budget, 204);
+        assert_eq!(sched.token_budget(), 204);
+        assert_eq!(out.adjusted, 1);
+        // repeated violation keeps compounding toward the floor
+        for _ in 0..40 {
+            ctl.tick(&window(&[0.5; 16]), 0, 0, &mut sched);
+        }
+        assert_eq!(ctl.token_budget(), 8, "floor holds");
+        assert_eq!(sched.token_budget(), 8);
+        // comfortable windows creep back additively
+        let out = ctl.tick(&window(&[0.01; 16]), 0, 0, &mut sched);
+        assert_eq!(out.token_budget, 8 + 16);
+        // inside the dead band: hold
+        let before = ctl.adjustments();
+        let out = ctl.tick(&window(&[0.09; 16]), 0, 0, &mut sched);
+        assert_eq!(out.token_budget, 8 + 16);
+        assert_eq!(ctl.adjustments(), before);
+    }
+
+    #[test]
+    fn small_windows_are_noise_not_signal() {
+        let cfg = ControllerConfig::new(0.1, 8, 512);
+        let mut sched = HybridScheduler::new(256, 8, 2);
+        let mut ctl = SloController::new(cfg, 256, 4);
+        let out = ctl.tick(&window(&[9.0; 3]), 0, 0, &mut sched);
+        assert_eq!(out.token_budget, 256, "3 gaps cannot move the budget");
+        assert_eq!(out.adjusted, 0);
+        assert_eq!(ctl.ticks(), 1);
+    }
+
+    #[test]
+    fn wait_window_follows_the_fill_economics() {
+        let cfg = ControllerConfig::new(0.1, 8, 512);
+        let mut sched = HybridScheduler::new(256, 8, 2);
+        let mut ctl = SloController::new(cfg, 256, 4);
+        let w = window(&[0.09; 16]); // dead band: isolate the wait actuator
+        // fallbacks dominate → shrink one step per tick down to the floor
+        for _ in 0..10 {
+            ctl.tick(&w, 0, 3, &mut sched);
+        }
+        assert_eq!(ctl.max_prefix_wait(), 1);
+        // pure hits → stretch
+        let out = ctl.tick(&w, 5, 0, &mut sched);
+        assert_eq!(out.max_prefix_wait, 2);
+        // mixed (hits but also fallbacks ≤ hits, fallbacks > 0) → hold
+        let out = ctl.tick(&w, 5, 2, &mut sched);
+        assert_eq!(out.max_prefix_wait, 2);
+        assert_eq!(out.adjusted, 0);
+    }
+
+    #[test]
+    fn policies_without_the_knobs_are_left_alone() {
+        let cfg = ControllerConfig::new(0.1, 8, 512);
+        let mut sched = OrcaScheduler::best(8);
+        let mut ctl = SloController::new(cfg, 256, 4);
+        let out = ctl.tick(&window(&[0.5; 16]), 0, 5, &mut sched);
+        assert_eq!(out.adjusted, 0, "refused setters adjust nothing");
+        assert_eq!(ctl.adjustments(), 0);
+        assert_eq!(ctl.token_budget(), 256, "setpoint stays in sync with reality");
+    }
+}

@@ -362,13 +362,15 @@ mod tests {
         let specs = [RequestSpec { prompt_len: 64, decode_len: 3, arrival: 0.0, prefix: None }];
         let e = run_with(Box::new(SarathiScheduler::new(128, 1, 128)), &specs, 1);
         let r = e.pool.get(0);
-        let it0 = &e.metrics.iterations[0];
+        let it0 = e.metrics.record_at(0);
         assert!((r.first_token_at.unwrap() - (it0.started_at + it0.elapsed)).abs() < 1e-12);
         // completion coincides with the END of the last iteration
-        let last = e.metrics.iterations.last().unwrap();
+        let last = e.metrics.last_record().unwrap();
         assert!((r.completed_at.unwrap() - (last.started_at + last.elapsed)).abs() < 1e-12);
-        // and every token time is strictly positive (none at t=0)
-        assert!(r.token_times.iter().all(|&t| t > 0.0));
+        // and every token stamp is strictly positive (none at t=0)
+        assert!(r.first_token_at.unwrap() > 0.0);
+        assert!(r.last_token_at.unwrap() > 0.0);
+        assert!(e.pool.tbt_summary().min() > 0.0, "no gap measured from t=0");
     }
 
     #[test]

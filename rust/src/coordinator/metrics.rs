@@ -12,6 +12,7 @@
 //! summaries — see [`LatencyReport`]. Preemptions (KV blocks ran out and a
 //! request was swapped out) are counted both per iteration and in total.
 
+use std::collections::VecDeque;
 use std::io::Write as _;
 use std::path::Path;
 
@@ -163,18 +164,21 @@ impl LatencyReport {
     /// [`crate::coordinator::StepApplier`]).
     pub fn from_pools(pools: &[RequestPool]) -> Self {
         let mut rep = LatencyReport::default();
-        for r in pools.iter().flat_map(|p| p.iter()) {
-            if let Some(first) = r.first_token_at {
-                rep.ttft.add(first - r.arrival);
-            }
-            for g in r.token_gaps() {
-                rep.tbt.add(g);
-            }
-            if let Some(done) = r.completed_at {
-                rep.normalized.add((done - r.arrival) / r.spec.decode_len.max(1) as f64);
-            }
-            if r.prefix_wait_iters > 0 {
-                rep.prefix_wait.add(r.prefix_wait_time);
+        for p in pools {
+            // TBT gaps are streamed into the pool's distribution at stamp
+            // time (the per-request gap list no longer exists — it grew
+            // without bound over long horizons), so merge, don't rescan.
+            rep.tbt.merge(p.tbt_summary());
+            for r in p.iter() {
+                if let Some(first) = r.first_token_at {
+                    rep.ttft.add(first - r.arrival);
+                }
+                if let Some(done) = r.completed_at {
+                    rep.normalized.add((done - r.arrival) / r.spec.decode_len.max(1) as f64);
+                }
+                if r.prefix_wait_iters > 0 {
+                    rep.prefix_wait.add(r.prefix_wait_time);
+                }
             }
         }
         rep
@@ -216,7 +220,19 @@ pub fn ensure_parent_dir(path: &Path) -> std::io::Result<()> {
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
-    pub iterations: Vec<IterationRecord>,
+    /// Retained per-iteration records. Under the default retain-all mode
+    /// this is the full history (index = global iteration index); a soak
+    /// run caps it with [`set_retain_limit`](Self::set_retain_limit) and
+    /// periodically [`drain_retained`](Self::drain_retained)s into a
+    /// [`JsonlStream`], so memory stays bounded however long the horizon.
+    /// Aggregate queries never rescan this — they read the streaming
+    /// accumulators below, which see every record exactly once.
+    iterations: VecDeque<IterationRecord>,
+    /// Global index of `iterations[0]`: records `0..first_retained` were
+    /// drained (flushed to a stream) or evicted by the retention cap.
+    first_retained: usize,
+    /// Retention cap (`None` = keep everything, the historical behavior).
+    retain_limit: Option<usize>,
     /// Total preemption events across the run.
     pub preemptions: usize,
     /// Total requests rejected as infeasible across the run.
@@ -243,6 +259,8 @@ pub struct Metrics {
     peak_active_acc: usize,
     peak_kv_blocks_acc: usize,
     peak_shared_kv_acc: usize,
+    op_acc: OpBreakdown,
+    iter_time: Summary,
 }
 
 impl Metrics {
@@ -261,7 +279,10 @@ impl Metrics {
         if self.first_started.is_none() {
             self.first_started = Some(rec.started_at);
         }
-        self.last_ended = rec.ended_at();
+        // max, not overwrite: interleaved streams (pipeline micro-batches,
+        // merged cluster traces) record out of start order, and a late
+        // record for an EARLIER iteration used to truncate the span.
+        self.last_ended = self.last_ended.max(rec.ended_at());
         self.prefill_tokens_acc += rec.shape.prefill_tokens();
         let d = rec.shape.decode_tokens();
         self.decode_tokens_acc += d;
@@ -277,7 +298,82 @@ impl Metrics {
         self.peak_active_acc = self.peak_active_acc.max(rec.n_active);
         self.peak_kv_blocks_acc = self.peak_kv_blocks_acc.max(rec.kv_blocks_in_use);
         self.peak_shared_kv_acc = self.peak_shared_kv_acc.max(rec.shared_kv_tokens);
-        self.iterations.push(rec);
+        if let Some(b) = &rec.breakdown {
+            self.op_acc.preproj += b.preproj;
+            self.op_acc.attn_prefill += b.attn_prefill;
+            self.op_acc.attn_decode += b.attn_decode;
+            self.op_acc.postproj += b.postproj;
+            self.op_acc.ffn_ln1 += b.ffn_ln1;
+            self.op_acc.ffn_ln2 += b.ffn_ln2;
+            self.op_acc.others += b.others;
+            self.op_acc.comm += b.comm;
+        }
+        self.iter_time.add(rec.elapsed);
+        self.iterations.push_back(rec);
+        if let Some(cap) = self.retain_limit {
+            while self.iterations.len() > cap {
+                self.iterations.pop_front();
+                self.first_retained += 1;
+            }
+        }
+    }
+
+    /// Cap retained [`IterationRecord`]s at `cap` (oldest evicted first);
+    /// `None` restores keep-everything. Aggregates are unaffected — they
+    /// stream. Drain-before-evict (e.g. into a [`JsonlStream`]) is the
+    /// caller's job if the trace must be lossless.
+    pub fn set_retain_limit(&mut self, cap: Option<usize>) {
+        self.retain_limit = cap;
+        if let Some(cap) = cap {
+            while self.iterations.len() > cap {
+                self.iterations.pop_front();
+                self.first_retained += 1;
+            }
+        }
+    }
+
+    /// Total iterations ever recorded (drained/evicted ones included).
+    pub fn recorded_count(&self) -> usize {
+        self.first_retained + self.iterations.len()
+    }
+
+    /// Records still held in memory.
+    pub fn retained_len(&self) -> usize {
+        self.iterations.len()
+    }
+
+    /// Global index of the oldest retained record.
+    pub fn first_retained(&self) -> usize {
+        self.first_retained
+    }
+
+    /// Iterate the retained records, oldest first.
+    pub fn iter_records(&self) -> impl Iterator<Item = &IterationRecord> {
+        self.iterations.iter()
+    }
+
+    /// The most recent record, if any is retained.
+    pub fn last_record(&self) -> Option<&IterationRecord> {
+        self.iterations.back()
+    }
+
+    /// Record for GLOBAL iteration index `idx`. Panics if that record was
+    /// drained or evicted — callers indexing history must retain it.
+    pub fn record_at(&self, idx: usize) -> &IterationRecord {
+        assert!(
+            idx >= self.first_retained,
+            "iteration record {idx} was drained (oldest retained: {})",
+            self.first_retained
+        );
+        &self.iterations[idx - self.first_retained]
+    }
+
+    /// Take every retained record out (oldest first), advancing the
+    /// retained window past them — the soak flush path: drain to a
+    /// [`JsonlStream`], keep the accumulators, free the memory.
+    pub fn drain_retained(&mut self) -> Vec<IterationRecord> {
+        self.first_retained += self.iterations.len();
+        self.iterations.drain(..).collect()
     }
 
     /// Busy time: sum of iteration execution times (idle gaps and swap
@@ -360,32 +456,18 @@ impl Metrics {
         }
     }
 
-    /// Aggregate per-op breakdown across all iterations.
+    /// Aggregate per-op breakdown across all iterations ever recorded
+    /// (streamed at record time; retention does not lose op time).
     pub fn op_totals(&self) -> OpBreakdown {
-        let mut acc = OpBreakdown::default();
-        for r in &self.iterations {
-            if let Some(b) = &r.breakdown {
-                acc.preproj += b.preproj;
-                acc.attn_prefill += b.attn_prefill;
-                acc.attn_decode += b.attn_decode;
-                acc.postproj += b.postproj;
-                acc.ffn_ln1 += b.ffn_ln1;
-                acc.ffn_ln2 += b.ffn_ln2;
-                acc.others += b.others;
-                acc.comm += b.comm;
-            }
-        }
-        acc
+        self.op_acc.clone()
     }
 
     /// Iteration-time spread — uniform work units (SARATHI's goal) show a
-    /// tight distribution.
+    /// tight distribution. Streamed at record time, so it covers every
+    /// iteration ever recorded and is bounded-memory past
+    /// [`Summary::EXACT_CAP`](crate::util::Summary::EXACT_CAP) samples.
     pub fn iteration_time_summary(&self) -> Summary {
-        let mut s = Summary::new();
-        for r in &self.iterations {
-            s.add(r.elapsed);
-        }
-        s
+        self.iter_time.clone()
     }
 
     /// Peak concurrently-admitted requests across the run.
@@ -405,16 +487,59 @@ impl Metrics {
         self.peak_shared_kv_acc
     }
 
-    /// Write one JSON object per iteration (JSON-Lines) — the simulator
-    /// trace idiom: shape, elapsed time, KV occupancy and preemptions per
-    /// record, consumable by any ad-hoc analysis script.
+    /// Write one JSON object per RETAINED iteration (JSON-Lines) — the
+    /// simulator trace idiom: shape, elapsed time, KV occupancy and
+    /// preemptions per record, consumable by any ad-hoc analysis script.
+    /// Indices are global, so a windowed trace's `iter` fields still name
+    /// the true iteration numbers. Long-horizon runs should stream with
+    /// [`JsonlStream`] + [`drain_retained`](Self::drain_retained) instead.
     pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
         ensure_parent_dir(path)?;
         let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
         for (i, r) in self.iterations.iter().enumerate() {
-            writeln!(out, "{}", r.to_jsonl(i, None))?;
+            writeln!(out, "{}", r.to_jsonl(self.first_retained + i, None))?;
         }
         Ok(())
+    }
+}
+
+/// Append-mode JSON-Lines trace writer for long-horizon runs: records are
+/// written as they are [`drain_retained`](Metrics::drain_retained)ed, so
+/// the full trace lands on disk while memory holds only the current
+/// window. Global indices are assigned here, monotonically.
+#[derive(Debug)]
+pub struct JsonlStream {
+    out: std::io::BufWriter<std::fs::File>,
+    next_idx: usize,
+    replica: Option<usize>,
+}
+
+impl JsonlStream {
+    /// Create (truncate) `path` and stream records to it. `replica` tags
+    /// every record like the cluster trace schema; `None` keeps the engine
+    /// schema byte-identical to [`Metrics::write_jsonl`].
+    pub fn create(path: &Path, replica: Option<usize>) -> std::io::Result<Self> {
+        ensure_parent_dir(path)?;
+        let out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        Ok(JsonlStream { out, next_idx: 0, replica })
+    }
+
+    /// Append one record under the next global index.
+    pub fn append(&mut self, rec: &IterationRecord) -> std::io::Result<()> {
+        writeln!(self.out, "{}", rec.to_jsonl(self.next_idx, self.replica))?;
+        self.next_idx += 1;
+        Ok(())
+    }
+
+    /// Records written so far.
+    pub fn written(&self) -> usize {
+        self.next_idx
+    }
+
+    /// Flush buffered lines to disk (progress checkpoints; also called on
+    /// drop by the BufWriter).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
     }
 }
 
@@ -563,8 +688,9 @@ mod tests {
             r.prefilled = 4;
             r.decoded = 2;
             r.first_token_at = Some(1.5);
-            r.token_times = vec![1.5, 1.7];
         }
+        pool.stamp_token(0, 1.5);
+        pool.stamp_token(0, 1.7);
         pool.complete(0, 1.7);
         let rep = LatencyReport::from_pool(&pool);
         assert_eq!(rep.ttft.count(), 1);
@@ -572,6 +698,86 @@ mod tests {
         assert_eq!(rep.tbt.count(), 1);
         assert!((rep.tbt.mean() - 0.2).abs() < 1e-9);
         assert!((rep.normalized.mean() - 0.35).abs() < 1e-9);
+    }
+
+    /// Satellite regression: `record` used to OVERWRITE `last_ended` with
+    /// each record's end, so an out-of-start-order record for an earlier
+    /// iteration (pipeline micro-batches, merged cluster traces) shrank
+    /// the wall-clock span.
+    #[test]
+    fn out_of_order_records_never_shrink_the_wall_clock_span() {
+        let mut m = Metrics::new();
+        let mut late = rec(1.0, BatchShape::decode_only(&[4]), None);
+        late.started_at = 10.0; // ends at 11.0
+        m.record(late);
+        let mut early = rec(2.0, BatchShape::decode_only(&[4]), None);
+        early.started_at = 3.0; // ends at 5.0 — must NOT truncate the span
+        m.record(early);
+        assert!((m.wall_clock_span() - (11.0 - 3.0)).abs() < 1e-12, "span takes the max end");
+        // first_started still tracks the first RECORDED start, as before
+        let mut m2 = Metrics::new();
+        let mut a = rec(1.0, BatchShape::decode_only(&[4]), None);
+        a.started_at = 3.0;
+        m2.record(a);
+        let mut b = rec(1.0, BatchShape::decode_only(&[4]), None);
+        b.started_at = 10.0;
+        m2.record(b);
+        assert!((m2.wall_clock_span() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retention_cap_bounds_records_but_keeps_aggregates() {
+        let mut m = Metrics::new();
+        m.set_retain_limit(Some(3));
+        for i in 0..10 {
+            let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
+            r.started_at = i as f64;
+            m.record(r);
+        }
+        assert_eq!(m.retained_len(), 3);
+        assert_eq!(m.recorded_count(), 10);
+        assert_eq!(m.first_retained(), 7);
+        // aggregates still cover all 10 iterations
+        assert_eq!(m.total_decode_tokens(), 10);
+        assert!((m.total_time() - 10.0).abs() < 1e-12);
+        assert_eq!(m.iteration_time_summary().count(), 10);
+        assert!((m.wall_clock_span() - 10.0).abs() < 1e-12);
+        // global indexing: record 7 is the oldest retained
+        assert!((m.record_at(7).started_at - 7.0).abs() < 1e-12);
+        assert!((m.last_record().unwrap().started_at - 9.0).abs() < 1e-12);
+        // the windowed JSONL keeps global indices
+        let path = std::env::temp_dir().join("sarathi_test_windowed_trace.jsonl");
+        m.write_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().next().unwrap().starts_with("{\"iter\":7,"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn drain_retained_feeds_a_jsonl_stream_losslessly() {
+        let mut m = Metrics::new();
+        let path = std::env::temp_dir().join("sarathi_test_streamed_trace.jsonl");
+        let mut stream = JsonlStream::create(&path, None).unwrap();
+        for chunk in 0..3 {
+            for i in 0..4 {
+                let mut r = rec(0.5, BatchShape::decode_only(&[4]), None);
+                r.started_at = (chunk * 4 + i) as f64;
+                m.record(r);
+            }
+            for r in m.drain_retained() {
+                stream.append(&r).unwrap();
+            }
+            assert_eq!(m.retained_len(), 0, "drain empties the window");
+        }
+        stream.flush().unwrap();
+        assert_eq!(stream.written(), 12);
+        assert_eq!(m.recorded_count(), 12);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 12);
+        assert!(lines[0].starts_with("{\"iter\":0,"));
+        assert!(lines[11].starts_with("{\"iter\":11,"));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

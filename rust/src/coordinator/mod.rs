@@ -19,11 +19,15 @@
 //! * [`engine`] — the serving loop: admission → schedule → execute →
 //!   advance (via [`StepApplier`]); generic over simulated or real (PJRT)
 //!   executors.
-//! * [`metrics`] — per-iteration and per-request accounting (throughput,
-//!   TTFT/TBT/normalized-latency percentiles, preemptions, JSONL traces)
-//!   the figure harness consumes.
+//! * [`metrics`] — bounded-memory per-iteration and per-request accounting
+//!   (throughput, TTFT/TBT/normalized-latency percentiles, preemptions,
+//!   windowed retention, streaming JSONL) the figure harness consumes.
+//! * [`control`] — the online SLO control loop: AIMD retargeting of the
+//!   hybrid token budget toward a target P99 TBT, plus prefix-wait
+//!   adaptation, through the [`Scheduler`] runtime actuators.
 
 pub mod batch;
+pub mod control;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
@@ -33,9 +37,10 @@ pub mod sched;
 pub mod step;
 
 pub use batch::{Batch, WorkItem};
+pub use control::{ControllerConfig, SloController, TickOutcome};
 pub use engine::{Engine, Executor, SimExecutor, StepOutcome};
 pub use kv::{KvExport, KvManager, StageKv, DEGENERATE_BLOCK};
-pub use metrics::{IterationRecord, LatencyReport, Metrics};
+pub use metrics::{IterationRecord, JsonlStream, LatencyReport, Metrics};
 pub use pool::RequestPool;
 pub use request::{Phase, PrefixWaitState, Request, RequestId};
 pub use sched::{

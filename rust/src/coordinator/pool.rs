@@ -9,12 +9,22 @@
 //! / [`RequestPool::preempt`], never by poking `admitted`/`completed_at`
 //! directly.
 
+use std::collections::VecDeque;
+
 use super::request::{Phase, Request, RequestId};
+use crate::util::Summary;
 use crate::workload::RequestSpec;
 
 #[derive(Clone, Debug, Default)]
 pub struct RequestPool {
-    requests: Vec<Request>,
+    /// Retained requests: ids `base..base + requests.len()`. Terminal
+    /// requests can be retired from the FRONT
+    /// ([`retire_terminal`](Self::retire_terminal)) so a regenerating soak
+    /// run holds O(live) request state instead of O(history).
+    requests: VecDeque<Request>,
+    /// Ids below this have been retired (they were terminal and harvested
+    /// by the soak driver). Id `i` lives at `requests[i - base]`.
+    base: RequestId,
     /// Not-yet-admitted ids, sorted by (arrival, id). Preempted requests
     /// re-enter here at their original arrival position (FCFS resume).
     pending: Vec<RequestId>,
@@ -43,6 +53,14 @@ pub struct RequestPool {
     /// Admission attempts spent waiting on a prefix fill since the last
     /// [`take_prefix_wait_ticks`] drain.
     prefix_wait_tick_events: usize,
+    /// Pool-level time-between-tokens distribution, fed incrementally at
+    /// token-stamp time ([`stamp_token`](Self::stamp_token)) — bounded by
+    /// [`Summary`]'s sketch instead of retaining every token timestamp.
+    tbt: Summary,
+    /// Drainable TBT window for the online SLO controller (enabled by
+    /// [`enable_tbt_window`](Self::enable_tbt_window); `None` costs
+    /// nothing on non-soak runs).
+    tbt_window: Option<Summary>,
 }
 
 impl RequestPool {
@@ -60,25 +78,27 @@ impl RequestPool {
 
     /// Insert `id` into the pending tail keeping (arrival, id) order.
     fn enqueue_pending(&mut self, id: RequestId) {
-        let arrival = self.requests[id].arrival;
+        let arrival = self.requests[id - self.base].arrival;
+        let base = self.base;
+        let requests = &self.requests;
         let tail = &self.pending[self.pending_head..];
         let pos = tail.partition_point(|&q| {
-            let a = self.requests[q].arrival;
+            let a = requests[q - base].arrival;
             a < arrival || (a == arrival && q < id)
         });
         self.pending.insert(self.pending_head + pos, id);
     }
 
     pub fn push(&mut self, spec: RequestSpec) -> RequestId {
-        let id = self.requests.len();
-        self.requests.push(Request::new(id, spec));
+        let id = self.base + self.requests.len();
+        self.requests.push_back(Request::new(id, spec));
         // typical workloads push in arrival order so this is O(1) amortized
         self.enqueue_pending(id);
         id
     }
 
     pub fn get(&self, id: RequestId) -> &Request {
-        &self.requests[id]
+        &self.requests[id - self.base]
     }
 
     /// Mutable access for progress fields (`prefilled`, `decoded`, ...).
@@ -86,13 +106,52 @@ impl RequestPool {
     /// [`complete`](Self::complete) / [`preempt`](Self::preempt) so the
     /// index lists stay coherent.
     pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
-        &mut self.requests[id]
+        let base = self.base;
+        &mut self.requests[id - base]
+    }
+
+    /// Stamp one produced output token for `id` at time `at`: updates the
+    /// request's streaming TBT stats and feeds the gap (second token
+    /// onward) into the pool-level TBT distribution. The ONE entry point
+    /// for token stamping — [`super::StepApplier`] and the pipeline's
+    /// disaggregation import both go through it.
+    pub fn stamp_token(&mut self, id: RequestId, at: f64) {
+        let base = self.base;
+        if let Some(gap) = self.requests[id - base].note_token(at) {
+            self.tbt.add(gap);
+            if let Some(w) = &mut self.tbt_window {
+                w.add(gap);
+            }
+        }
+    }
+
+    /// Pool-level time-between-tokens distribution (every gap stamped so
+    /// far, bounded memory).
+    pub fn tbt_summary(&self) -> &Summary {
+        &self.tbt
+    }
+
+    /// Start collecting the drainable TBT window (soak control loop).
+    pub fn enable_tbt_window(&mut self) {
+        if self.tbt_window.is_none() {
+            self.tbt_window = Some(Summary::new());
+        }
+    }
+
+    /// Drain the TBT window accumulated since the last call (empty if
+    /// [`enable_tbt_window`](Self::enable_tbt_window) was never called).
+    pub fn take_tbt_window(&mut self) -> Summary {
+        match &mut self.tbt_window {
+            Some(w) => std::mem::take(w),
+            None => Summary::new(),
+        }
     }
 
     /// Admit a queued request, handing it its initial KV block table.
     pub fn admit(&mut self, id: RequestId, blocks: Vec<usize>, now: f64) {
+        let slot = id - self.base;
         debug_assert!({
-            let r = &self.requests[id];
+            let r = &self.requests[slot];
             !r.admitted && r.completed_at.is_none() && r.rejected_at.is_none()
         });
         // a re-admitted preempted request carries live KV that must be
@@ -102,12 +161,12 @@ impl RequestPool {
         // Exception: an imported request's KV arrived over the
         // interconnect (already costed on the copy stream), so its first
         // admission here moves nothing over the host link.
-        if self.requests[id].imported {
-            self.requests[id].imported = false;
+        if self.requests[slot].imported {
+            self.requests[slot].imported = false;
         } else {
-            self.swapped_in_tokens += self.requests[id].private_kv_tokens();
+            self.swapped_in_tokens += self.requests[slot].private_kv_tokens();
         }
-        let r = &mut self.requests[id];
+        let r = &mut self.requests[slot];
         r.admitted = true;
         r.blocks = blocks;
         if r.admitted_at.is_none() {
@@ -127,7 +186,8 @@ impl RequestPool {
 
     /// Mark a request complete; returns its released KV block table.
     pub fn complete(&mut self, id: RequestId, now: f64) -> Vec<usize> {
-        let r = &mut self.requests[id];
+        let base = self.base;
+        let r = &mut self.requests[id - base];
         debug_assert!(r.completed_at.is_none());
         r.completed_at = Some(now);
         r.admitted = false;
@@ -146,7 +206,8 @@ impl RequestPool {
     /// holds blocks, and counts toward [`all_complete`](Self::all_complete)
     /// so open-loop serving drains instead of wedging on it.
     pub fn reject(&mut self, id: RequestId, now: f64) {
-        let r = &mut self.requests[id];
+        let base = self.base;
+        let r = &mut self.requests[id - base];
         debug_assert!(!r.admitted && r.completed_at.is_none() && r.rejected_at.is_none());
         r.rejected_at = Some(now);
         if self.pending.get(self.pending_head) == Some(&id) {
@@ -212,10 +273,10 @@ impl RequestPool {
     /// [`Request::prefix_fallback`]: super::request::Request::prefix_fallback
     /// [`Engine::run`]: super::engine::Engine::run
     pub fn force_prefix_fallback(&mut self, id: RequestId, now: f64) {
-        if self.requests[id].prefix_fallback {
+        if self.requests[id - self.base].prefix_fallback {
             return;
         }
-        self.requests[id].prefix_fallback = true;
+        self.requests[id - self.base].prefix_fallback = true;
         self.finalize_prefix_wait(id, now);
         self.prefix_fallback_events += 1;
     }
@@ -226,7 +287,8 @@ impl RequestPool {
     /// admit), the forced fallback, or the fill completing while the
     /// request is still memory-gated behind the funds check.
     pub fn finalize_prefix_wait(&mut self, id: RequestId, now: f64) {
-        let r = &mut self.requests[id];
+        let base = self.base;
+        let r = &mut self.requests[id - base];
         if let Some(w) = r.prefix_wait.take() {
             r.prefix_wait_time += (now - w.since).max(0.0);
         }
@@ -237,7 +299,7 @@ impl RequestPool {
     pub fn prefix_waiting_count(&self) -> usize {
         self.pending[self.pending_head..]
             .iter()
-            .filter(|&&id| self.requests[id].is_prefix_waiting())
+            .filter(|&&id| self.requests[id - self.base].is_prefix_waiting())
             .count()
     }
 
@@ -248,14 +310,15 @@ impl RequestPool {
         self.pending[self.pending_head..]
             .iter()
             .copied()
-            .find(|&id| self.requests[id].is_prefix_waiting())
+            .find(|&id| self.requests[id - self.base].is_prefix_waiting())
     }
 
     /// Preempt an active request: release its block table (returned to the
     /// caller to free), keep its progress counters, and re-queue it at its
     /// original arrival position so it resumes FCFS.
     pub fn preempt(&mut self, id: RequestId, _now: f64) -> Vec<usize> {
-        let r = &mut self.requests[id];
+        let base = self.base;
+        let r = &mut self.requests[id - base];
         debug_assert!(r.admitted && r.completed_at.is_none());
         r.admitted = false;
         r.preemptions += 1;
@@ -270,14 +333,45 @@ impl RequestPool {
         blocks
     }
 
+    /// Total requests EVER pushed (retired ones included) — ids are
+    /// `0..len()`, of which only `base()..len()` are still retained.
     pub fn len(&self) -> usize {
-        self.requests.len()
+        self.base + self.requests.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.requests.is_empty()
+        self.len() == 0
     }
 
+    /// First still-retained id (everything below was retired).
+    pub fn base(&self) -> RequestId {
+        self.base
+    }
+
+    /// Requests currently held in memory — the soak leak-detector's
+    /// counter: flat between checkpoints while completions keep rising.
+    pub fn retained_count(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Pop terminal (completed / rejected) requests off the FRONT of the
+    /// table and return them for harvesting — the regenerating soak
+    /// driver's retirement path. Only a contiguous terminal prefix can
+    /// retire (ids stay dense); anything still queued or running stops the
+    /// sweep. Retired ids must never be dereferenced again.
+    pub fn retire_terminal(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(front) = self.requests.front() {
+            if !matches!(front.phase(), Phase::Complete | Phase::Rejected) {
+                break;
+            }
+            out.push(self.requests.pop_front().unwrap());
+            self.base += 1;
+        }
+        out
+    }
+
+    /// Retained requests (retired ones are gone).
     pub fn iter(&self) -> impl Iterator<Item = &Request> {
         self.requests.iter()
     }
@@ -289,15 +383,15 @@ impl RequestPool {
                 .active
                 .iter()
                 .copied()
-                .filter(|&id| self.requests[id].phase() == phase)
+                .filter(|&id| self.requests[id - self.base].phase() == phase)
                 .collect(),
             Phase::Queued => self.pending[self.pending_head..]
                 .iter()
                 .copied()
-                .filter(|&id| self.requests[id].phase() == Phase::Queued)
+                .filter(|&id| self.requests[id - self.base].phase() == Phase::Queued)
                 .collect(),
-            Phase::Complete | Phase::Rejected => (0..self.requests.len())
-                .filter(|&id| self.requests[id].phase() == phase)
+            Phase::Complete | Phase::Rejected => (self.base..self.len())
+                .filter(|&id| self.requests[id - self.base].phase() == phase)
                 .collect(),
         }
     }
@@ -307,7 +401,10 @@ impl RequestPool {
     /// list every scheduling iteration, which must not allocate.
     pub fn in_phase_iter(&self, phase: Phase) -> impl Iterator<Item = RequestId> + '_ {
         debug_assert!(matches!(phase, Phase::Prefill | Phase::Decode));
-        self.active.iter().copied().filter(move |&id| self.requests[id].phase() == phase)
+        self.active
+            .iter()
+            .copied()
+            .filter(move |&id| self.requests[id - self.base].phase() == phase)
     }
 
     /// All queued (unadmitted, non-terminal) ids, arrival-sorted — the
@@ -324,7 +421,7 @@ impl RequestPool {
         self.pending[self.pending_head..]
             .iter()
             .copied()
-            .take_while(|&id| self.requests[id].arrival <= now)
+            .take_while(|&id| self.requests[id - self.base].arrival <= now)
             .collect()
     }
 
@@ -332,7 +429,7 @@ impl RequestPool {
     /// whole list (the SARATHI/Orca schedulers only chunk ONE prefill per
     /// iteration).
     pub fn first_in_phase(&self, phase: Phase) -> Option<RequestId> {
-        self.active.iter().copied().find(|&id| self.requests[id].phase() == phase)
+        self.active.iter().copied().find(|&id| self.requests[id - self.base].phase() == phase)
     }
 
     /// Next admissible request, if any — O(1) peek at the pending head
@@ -340,12 +437,14 @@ impl RequestPool {
     /// [`arrived_queued`](Self::arrived_queued), which is O(backlog)).
     pub fn next_queued(&self, now: f64) -> Option<RequestId> {
         let &id = self.pending.get(self.pending_head)?;
-        (self.requests[id].arrival <= now).then_some(id)
+        (self.requests[id - self.base].arrival <= now).then_some(id)
     }
 
     /// True when every request is terminal (completed or rejected).
+    /// `n_terminal` is an all-time count, so retired requests (terminal by
+    /// definition) stay counted.
     pub fn all_complete(&self) -> bool {
-        self.n_terminal == self.requests.len()
+        self.n_terminal == self.len()
     }
 
     /// True while any request is admitted (holds KV blocks).
@@ -369,7 +468,7 @@ impl RequestPool {
     /// [`live_private_kv_tokens`](Self::live_private_kv_tokens) plus the
     /// allocator's resident-prefix count instead.
     pub fn live_kv_tokens(&self) -> usize {
-        self.active.iter().map(|&id| self.requests[id].kv_len()).sum()
+        self.active.iter().map(|&id| self.requests[id - self.base].kv_len()).sum()
     }
 
     /// Live KV tokens in PRIVATE block territory across admitted requests
@@ -379,20 +478,20 @@ impl RequestPool {
     /// [`KvManager::resident_prefix_tokens`]:
     ///     super::kv::KvManager::resident_prefix_tokens
     pub fn live_private_kv_tokens(&self) -> usize {
-        self.active.iter().map(|&id| self.requests[id].private_kv_tokens()).sum()
+        self.active.iter().map(|&id| self.requests[id - self.base].private_kv_tokens()).sum()
     }
 
     /// KV tokens currently served to admitted requests from shared prefix
     /// blocks — the memory sharing saves versus private copies.
     pub fn shared_kv_tokens(&self) -> usize {
-        self.active.iter().map(|&id| self.requests[id].shared_tokens).sum()
+        self.active.iter().map(|&id| self.requests[id - self.base].shared_tokens).sum()
     }
 
     /// Earliest arrival among still-queued requests (drives idle-advance).
     pub fn next_arrival(&self, now: f64) -> Option<f64> {
         self.pending[self.pending_head..]
             .iter()
-            .map(|&id| self.requests[id].arrival)
+            .map(|&id| self.requests[id - self.base].arrival)
             .find(|&a| a > now)
     }
 }
@@ -626,6 +725,70 @@ mod tests {
         p.note_prefix_hit();
         assert_eq!(p.take_prefix_hits(), 2);
         assert_eq!(p.take_prefix_hits(), 0, "events drain");
+    }
+
+    #[test]
+    fn stamp_token_feeds_the_pool_tbt_distribution() {
+        let mut p = RequestPool::new();
+        p.push(RequestSpec { prompt_len: 4, decode_len: 3, arrival: 0.0, prefix: None });
+        p.enable_tbt_window();
+        p.stamp_token(0, 1.0); // first token: TTFT territory, no gap
+        p.stamp_token(0, 1.4);
+        p.stamp_token(0, 1.5);
+        assert_eq!(p.tbt_summary().count(), 2);
+        assert!((p.tbt_summary().max() - 0.4).abs() < 1e-12);
+        assert!((p.get(0).max_tbt - 0.4).abs() < 1e-12);
+        let w = p.take_tbt_window();
+        assert_eq!(w.count(), 2, "window mirrors the gaps since the last drain");
+        assert_eq!(p.take_tbt_window().count(), 0, "window drains");
+        assert_eq!(p.tbt_summary().count(), 2, "cumulative summary survives the drain");
+    }
+
+    #[test]
+    fn retire_terminal_pops_only_the_terminal_prefix_and_keeps_ids_stable() {
+        let mut p = RequestPool::new();
+        for i in 0..4 {
+            p.push(RequestSpec {
+                prompt_len: 8,
+                decode_len: 1,
+                arrival: i as f64 * 0.1,
+                prefix: None,
+            });
+        }
+        // complete 0 and 2; 1 stays queued so retirement must stop at it
+        for id in [0, 2] {
+            p.admit(id, vec![id], 0.5);
+            p.get_mut(id).prefilled = 8;
+            p.get_mut(id).decoded = 1;
+            p.complete(id, 1.0);
+        }
+        let retired = p.retire_terminal();
+        assert_eq!(retired.len(), 1, "only the contiguous terminal prefix retires");
+        assert_eq!(retired[0].id, 0);
+        assert_eq!(p.base(), 1);
+        assert_eq!(p.len(), 4, "len() keeps counting retired requests");
+        assert_eq!(p.retained_count(), 3);
+        // surviving ids keep resolving through the offset
+        assert_eq!(p.get(2).completed_at, Some(1.0));
+        assert_eq!(p.arrived_queued(1.0), vec![1, 3]);
+        assert!(!p.all_complete());
+        // finishing the rest retires everything and all_complete holds
+        for id in [1, 3] {
+            p.admit(id, vec![id], 1.0);
+            p.get_mut(id).prefilled = 8;
+            p.get_mut(id).decoded = 1;
+            p.complete(id, 2.0);
+        }
+        assert!(p.all_complete());
+        let retired = p.retire_terminal();
+        assert_eq!(retired.len(), 3);
+        assert_eq!(p.retained_count(), 0);
+        assert_eq!(p.base(), 4);
+        assert!(p.all_complete(), "all_complete survives full retirement");
+        // a fresh push after retirement gets the next dense id
+        let id = p.push(RequestSpec { prompt_len: 8, decode_len: 1, arrival: 3.0, prefix: None });
+        assert_eq!(id, 4);
+        assert_eq!(p.get(4).arrival, 3.0);
     }
 
     #[test]

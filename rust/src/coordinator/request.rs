@@ -110,10 +110,19 @@ pub struct Request {
     pub completed_at: Option<f64>,
     /// Set when admission rejected the request as infeasible (terminal).
     pub rejected_at: Option<f64>,
-    /// Timestamp of every produced output token (first from the final
-    /// prefill chunk, rest from decode iterations) — drives the
-    /// time-between-tokens latency analysis (EXPERIMENTS.md §E14).
-    pub token_times: Vec<f64>,
+    /// Timestamp of the most recent output token (first from the final
+    /// prefill chunk, rest from decode iterations). Token-gap statistics
+    /// are computed INCREMENTALLY from this at stamp time — the seed's
+    /// per-request `token_times` vec retained every stamp forever, which
+    /// made long-horizon soak runs a memory leak by construction.
+    pub last_token_at: Option<f64>,
+    /// Gaps between consecutive output tokens so far (time-between-tokens
+    /// count for this request).
+    pub tbt_count: usize,
+    /// Sum of those gaps (mean TBT = `tbt_sum / tbt_count`).
+    pub tbt_sum: f64,
+    /// Largest gap so far — the per-request TBT that goodput SLOs check.
+    pub max_tbt: f64,
 }
 
 impl Request {
@@ -140,14 +149,31 @@ impl Request {
             first_token_at: None,
             completed_at: None,
             rejected_at: None,
-            token_times: Vec::new(),
+            last_token_at: None,
+            tbt_count: 0,
+            tbt_sum: 0.0,
+            max_tbt: 0.0,
         }
     }
 
-    /// Gaps between consecutive output tokens (time-between-tokens); a long
-    /// gap is a decode stall caused by a scheduler running other work.
-    pub fn token_gaps(&self) -> Vec<f64> {
-        self.token_times.windows(2).map(|w| w[1] - w[0]).collect()
+    /// Stamp one produced output token at `at`, folding the gap since the
+    /// previous token into this request's streaming TBT statistics.
+    /// Returns the gap for the second and later tokens (`None` for the
+    /// first — its latency is TTFT, not TBT) so the caller can feed a
+    /// pool-level distribution. A long gap is a decode stall caused by a
+    /// scheduler running other work.
+    pub fn note_token(&mut self, at: f64) -> Option<f64> {
+        let gap = self.last_token_at.map(|prev| {
+            debug_assert!(at >= prev, "token stamps must be monotone: {at} < {prev}");
+            at - prev
+        });
+        self.last_token_at = Some(at);
+        if let Some(g) = gap {
+            self.tbt_count += 1;
+            self.tbt_sum += g;
+            self.max_tbt = self.max_tbt.max(g);
+        }
+        gap
     }
 
     pub fn is_admitted(&self) -> bool {
@@ -262,5 +288,17 @@ mod tests {
         assert_eq!(r.remaining_decode(), 7);
         // kv holds the prompt + 2 generated tokens (3rd is being produced)
         assert_eq!(r.kv_len(), 102);
+    }
+
+    #[test]
+    fn token_stamps_accumulate_streaming_tbt() {
+        let mut r = Request::new(0, spec(4, 3));
+        assert_eq!(r.note_token(1.0), None, "first token has no gap");
+        assert_eq!(r.note_token(1.5), Some(0.5));
+        assert_eq!(r.note_token(2.5), Some(1.0));
+        assert_eq!(r.tbt_count, 2);
+        assert!((r.tbt_sum - 1.5).abs() < 1e-12);
+        assert!((r.max_tbt - 1.0).abs() < 1e-12);
+        assert_eq!(r.last_token_at, Some(2.5));
     }
 }

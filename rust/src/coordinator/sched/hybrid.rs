@@ -105,6 +105,10 @@ impl HybridScheduler {
     pub fn token_budget(&self) -> usize {
         self.token_budget
     }
+
+    pub fn max_prefix_wait(&self) -> usize {
+        self.max_prefix_wait
+    }
 }
 
 impl Scheduler for HybridScheduler {
@@ -162,6 +166,22 @@ impl Scheduler for HybridScheduler {
         }
 
         Batch::new(items)
+    }
+
+    /// Runtime budget retarget (the control loop's actuator). Clamped to
+    /// `max_batch` so the stall-free invariant — every running decode gets
+    /// its token — survives any controller excursion.
+    fn set_token_budget(&mut self, budget: usize) -> bool {
+        self.token_budget = budget.max(self.max_batch);
+        true
+    }
+
+    /// Runtime bounded-wait retarget. Clamped to ≥ 1: a zero window would
+    /// demote every waiter on its first attempt, making the prefix cache
+    /// inert rather than adaptive.
+    fn set_max_prefix_wait(&mut self, iters: usize) -> bool {
+        self.max_prefix_wait = iters.max(1);
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -299,5 +319,26 @@ mod tests {
     #[should_panic(expected = "cannot cover")]
     fn budget_below_batch_is_rejected() {
         let _ = HybridScheduler::new(4, 8, 0);
+    }
+
+    #[test]
+    fn runtime_setters_retarget_and_clamp() {
+        let mut s = HybridScheduler::new(64, 8, 0);
+        assert!(s.set_token_budget(128));
+        assert_eq!(s.token_budget(), 128);
+        // a controller excursion below max_batch clamps, never panics —
+        // the stall-free invariant survives
+        assert!(s.set_token_budget(2));
+        assert_eq!(s.token_budget(), 8);
+        assert!(s.set_max_prefix_wait(5));
+        assert_eq!(s.max_prefix_wait(), 5);
+        assert!(s.set_max_prefix_wait(0));
+        assert_eq!(s.max_prefix_wait(), 1, "zero would disable waiting entirely");
+        // the retargeted wait threads through to the admission gate
+        assert_eq!(s.admission().max_prefix_wait, 1);
+        // policies without a budget refuse
+        let mut orca = crate::coordinator::sched::OrcaScheduler::best(4);
+        assert!(!orca.set_token_budget(64));
+        assert!(!orca.set_max_prefix_wait(4));
     }
 }

@@ -79,6 +79,21 @@ pub trait Scheduler {
         self.compose(pool, kv, now)
     }
 
+    /// Retarget the per-iteration token budget at runtime (the online SLO
+    /// control loop's main actuator — Sarathi-Serve arXiv 2403.02310 §5:
+    /// the budget trades TBT against TTFT). Returns false (default) for
+    /// policies without a token budget; implementations clamp internally
+    /// and return true even when the clamp left the value unchanged.
+    fn set_token_budget(&mut self, _budget: usize) -> bool {
+        false
+    }
+
+    /// Retarget the bounded prefix-wait window at runtime (control loop's
+    /// secondary actuator). Returns false for policies without one.
+    fn set_max_prefix_wait(&mut self, _iters: usize) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 

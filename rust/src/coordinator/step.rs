@@ -176,11 +176,15 @@ impl StepApplier {
             for (req, _start, len) in batch.prefill_items() {
                 let r = pool.get_mut(req);
                 r.prefilled += len;
-                if r.prefilled == r.spec.prompt_len {
+                let prompt_done = r.prefilled == r.spec.prompt_len;
+                if prompt_done {
                     // the final chunk's logits yield the first output token
                     r.decoded = 1;
                     r.first_token_at = Some(done_at);
-                    r.token_times.push(done_at);
+                }
+                let (prefilled, sharing, pfx) = (r.prefilled, r.shared_blocks > 0, r.spec.prefix);
+                if prompt_done {
+                    pool.stamp_token(req, done_at);
                 }
                 // cache fill: once the registrant's prefill crosses the
                 // pinned run's covered tokens, the run's KV exists and the
@@ -190,20 +194,19 @@ impl StepApplier {
                 // never flips a stale husk ready. Short of ready, the
                 // progress note resets waiters' bounded-wait stall clocks
                 // (a fill that keeps advancing is worth waiting for).
-                if let Some(pfx) = r.spec.prefix {
-                    if r.shared_blocks > 0 && !kv.is_prefix_ready(pfx.id) {
-                        kv.note_prefix_fill(pfx.id, r.prefilled);
+                if let Some(pfx) = pfx {
+                    if sharing && !kv.is_prefix_ready(pfx.id) {
+                        kv.note_prefix_fill(pfx.id, prefilled);
                         let covered = kv.lookup_prefix(pfx.id).map(|(tokens, _)| tokens);
-                        if covered.is_some_and(|tokens| r.prefilled >= tokens) {
+                        if covered.is_some_and(|tokens| prefilled >= tokens) {
                             kv.mark_prefix_ready(pfx.id);
                         }
                     }
                 }
             }
             for req in batch.decode_items() {
-                let r = pool.get_mut(req);
-                r.decoded += 1;
-                r.token_times.push(done_at);
+                pool.get_mut(req).decoded += 1;
+                pool.stamp_token(req, done_at);
             }
             // 2. completions first: their blocks fund the growth below
             for req in batch.requests() {
@@ -307,7 +310,8 @@ mod tests {
         assert_eq!(fx.swap_time, 0.0);
         let r = pool.get(0);
         assert_eq!(r.first_token_at, Some(2.5));
-        assert_eq!(r.token_times, vec![2.5]);
+        assert_eq!(r.last_token_at, Some(2.5));
+        assert_eq!(r.tbt_count, 0, "the first token has no gap");
         assert_eq!(r.completed_at, Some(2.5));
         assert_eq!(kv.available(), 2, "completion returned its block");
     }

@@ -40,13 +40,7 @@ pub fn tbt_summary(cfg: &SchedulerConfig) -> Summary {
         Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
     );
     engine.run();
-    let mut s = Summary::new();
-    for r in engine.pool.iter() {
-        for g in r.token_gaps() {
-            s.add(g);
-        }
-    }
-    s
+    engine.pool.tbt_summary().clone()
 }
 
 pub fn run() -> Vec<Table> {

@@ -51,6 +51,22 @@
 //!       turns on copy-on-write prefix sharing over the paged block map
 //!       (requires `--scheduler hybrid` with a block size); prefix hits
 //!       and shared-KV occupancy land in the report and JSONL trace.
+//!
+//!       **Soak mode** (`serve` cost-model path and single-engine
+//!       `simulate`): `--horizon-secs H` replaces the fixed request count
+//!       with a REGENERATING workload served for H simulated seconds —
+//!       a diurnal rate curve (`--diurnal-amp A --diurnal-period P`),
+//!       periodic flash crowds pinned to the hottest template
+//!       (`--flash-every E --flash-dur D --flash-mult M`) and sinusoidal
+//!       prompt/output length drift (`--drift-amp A --drift-period P`).
+//!       Memory stays bounded no matter the horizon: terminal requests
+//!       retire off the pool, iteration records stream to `--json-out`
+//!       every `--flush-every F` simulated seconds (windowed retention
+//!       otherwise), and latency distributions spill to quantile sketches.
+//!       `--target-p99-tbt T` (hybrid only) closes an online AIMD control
+//!       loop over the token budget toward a P99 time-between-tokens of T
+//!       seconds, plus prefix-wait adaptation; `--ttft-slo`/`--tbt-slo`
+//!       gate per-request goodput. Progress lines print at each flush.
 //!   calibration
 //!       print the cost-model calibration summary
 //!
@@ -72,13 +88,16 @@ use sarathi::config::{
     SchedulerKind,
 };
 use sarathi::coordinator::{
-    make_scheduler, Admission, Engine, KvManager, LatencyReport, Metrics, RequestPool, SwapCost,
+    make_scheduler, Admission, ControllerConfig, Engine, KvManager, LatencyReport, Metrics,
+    RequestPool, SwapCost,
 };
 use sarathi::figures;
-use sarathi::simulator::{ClusterSim, PipelineSim, RouterKind, Topology};
+use sarathi::simulator::{run_soak, ClusterSim, PipelineSim, RouterKind, SoakOpts, Topology};
 use sarathi::util::error::Result;
 use sarathi::util::Rng;
-use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
+use sarathi::workload::{
+    with_poisson_arrivals, zipf_population, RateCurve, RequestSpec, SoakWorkload,
+};
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
@@ -139,6 +158,10 @@ fn main() -> Result<()> {
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--max-prefix-wait K] [--bypass-window W]\n\
                  \x20      [--json-out PATH]\n\
+                 \x20      [--horizon-secs H] [--flush-every F] [--target-p99-tbt T]\n\
+                 \x20      [--diurnal-amp A] [--diurnal-period P]\n\
+                 \x20      [--flash-every E] [--flash-dur D] [--flash-mult M]\n\
+                 \x20      [--drift-amp A] [--drift-period P]  (soak mode)\n\
                  calibration"
             );
             std::process::exit(2);
@@ -181,7 +204,7 @@ fn report_latency(lat: &LatencyReport, m: &Metrics, json_out: Option<&Path>) -> 
     }
     if let Some(path) = json_out {
         m.write_jsonl(path)?;
-        println!("trace: {} iterations -> {}", m.iterations.len(), path.display());
+        println!("trace: {} iterations -> {}", m.recorded_count(), path.display());
     }
     Ok(())
 }
@@ -193,7 +216,7 @@ fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
     println!(
         "iterations={} prefill_tokens={} decode_tokens={} preemptions={} rejections={} \
          peak_active={}",
-        m.iterations.len(),
+        m.recorded_count(),
         m.total_prefill_tokens(),
         m.total_decode_tokens(),
         m.preemptions,
@@ -249,6 +272,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         sarathi::bail!(
             "--rate (open-loop Poisson arrivals) runs on the simulated clock — use \
              the cost-model path (build without the pjrt feature)"
+        );
+    }
+    if flag_value(args, "--horizon-secs").is_some() {
+        sarathi::bail!(
+            "--horizon-secs (soak mode) runs on the simulated clock — use the \
+             cost-model path (build without the pjrt feature)"
         );
     }
 
@@ -336,6 +365,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         sarathi::bail!("--rate must be non-negative");
     }
     let wait = WaitOpts::parse(args)?;
+    let soak = SoakCliOpts::parse(args)?;
+    if soak.is_some() {
+        if rate <= 0.0 {
+            sarathi::bail!(
+                "--horizon-secs regenerates open-loop traffic and needs --rate > 0 \
+                 (req/s at the diurnal midpoint)"
+            );
+        }
+        if flag_value(args, "--requests").is_some() {
+            sarathi::bail!("--requests and --horizon-secs are different stopping rules; pick one");
+        }
+        if soak.unwrap().target_p99_tbt > 0.0 && kind != SchedulerKind::Hybrid {
+            sarathi::bail!(
+                "--target-p99-tbt adapts the hybrid token budget; use --scheduler hybrid"
+            );
+        }
+    }
 
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
     let b = d.max_batch_size();
@@ -400,13 +446,24 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
 
     let cm = CostModel::for_deployment(&d);
-    let mut engine = Engine::new(
-        RequestPool::from_specs(&specs),
-        kv,
-        make_scheduler(&cfg),
-        Box::new(SimExecutor::new(cm)),
-    )
-    .with_swap_cost(SwapCost::for_deployment(&d, preemption));
+    let pool = if soak.is_some() {
+        // soak mode regenerates its own arrivals; the pool starts empty
+        RequestPool::new()
+    } else {
+        RequestPool::from_specs(&specs)
+    };
+    let mut engine = Engine::new(pool, kv, make_scheduler(&cfg), Box::new(SimExecutor::new(cm)))
+        .with_swap_cost(SwapCost::for_deployment(&d, preemption));
+    if let Some(so) = &soak {
+        println!(
+            "scheduler={} soak horizon={}s rate={rate} req/s effective_token_budget={}",
+            kind.name(),
+            so.horizon,
+            cfg.token_budget,
+        );
+        let mut w = so.workload(rate, &prefix);
+        return run_soak_cli(so, &mut engine, &cfg, &mut w, None, None, json_out.as_deref());
+    }
     engine.run();
     println!(
         "scheduler={} requests={n} effective_token_budget={} arrivals={}",
@@ -440,6 +497,172 @@ impl WaitOpts {
             bypass_window: parse_flag(args, "--bypass-window", Admission::DEFAULT_BYPASS_WINDOW)?,
         })
     }
+}
+
+/// Soak-mode flags shared by serve/simulate: a wall-clock horizon of
+/// regenerating, time-varying traffic instead of a fixed request count.
+/// `parse` returns `None` when `--horizon-secs` is absent (and bails if a
+/// satellite soak flag was passed without it — running a different
+/// experiment than the one asked for must be loud).
+#[derive(Clone, Copy, Debug)]
+struct SoakCliOpts {
+    horizon: f64,
+    flush_every: f64,
+    /// 0 = no control loop (observe-only soak).
+    target_p99_tbt: f64,
+    diurnal_amp: f64,
+    diurnal_period: f64,
+    flash_every: f64,
+    flash_dur: f64,
+    flash_mult: f64,
+    drift_amp: f64,
+    drift_period: f64,
+}
+
+impl SoakCliOpts {
+    fn parse(args: &[String]) -> Result<Option<Self>> {
+        let horizon: f64 = parse_flag(args, "--horizon-secs", 0.0)?;
+        if horizon <= 0.0 {
+            const SOAK_ONLY: [&str; 9] = [
+                "--flush-every",
+                "--target-p99-tbt",
+                "--diurnal-amp",
+                "--diurnal-period",
+                "--flash-every",
+                "--flash-dur",
+                "--flash-mult",
+                "--drift-amp",
+                "--drift-period",
+            ];
+            if let Some(f) = SOAK_ONLY.into_iter().find(|&f| flag_value(args, f).is_some()) {
+                sarathi::bail!("{f} is a soak-mode flag and needs --horizon-secs > 0");
+            }
+            return Ok(None);
+        }
+        let o = SoakCliOpts {
+            horizon,
+            flush_every: parse_flag(args, "--flush-every", 10.0)?,
+            target_p99_tbt: parse_flag(args, "--target-p99-tbt", 0.0)?,
+            diurnal_amp: parse_flag(args, "--diurnal-amp", 0.0)?,
+            diurnal_period: parse_flag(args, "--diurnal-period", 300.0)?,
+            flash_every: parse_flag(args, "--flash-every", 0.0)?,
+            flash_dur: parse_flag(args, "--flash-dur", 10.0)?,
+            flash_mult: parse_flag(args, "--flash-mult", 3.0)?,
+            drift_amp: parse_flag(args, "--drift-amp", 0.0)?,
+            drift_period: parse_flag(args, "--drift-period", 300.0)?,
+        };
+        if o.flush_every <= 0.0 || o.flush_every > o.horizon {
+            sarathi::bail!("--flush-every must be in (0, --horizon-secs]");
+        }
+        if !(0.0..1.0).contains(&o.diurnal_amp) || !(0.0..1.0).contains(&o.drift_amp) {
+            sarathi::bail!("--diurnal-amp/--drift-amp are fractions in [0, 1)");
+        }
+        if o.diurnal_period <= 0.0 || o.drift_period <= 0.0 {
+            sarathi::bail!("--diurnal-period/--drift-period must be positive seconds");
+        }
+        if o.flash_every > 0.0 && !(0.0 < o.flash_dur && o.flash_dur < o.flash_every) {
+            sarathi::bail!("--flash-dur must fit inside --flash-every");
+        }
+        if o.flash_mult < 1.0 {
+            sarathi::bail!("--flash-mult must be >= 1 (a flash crowd adds load)");
+        }
+        if o.target_p99_tbt < 0.0 {
+            sarathi::bail!("--target-p99-tbt is a deadline in seconds and must be positive");
+        }
+        Ok(Some(o))
+    }
+
+    /// The regenerating workload this soak run serves.
+    fn workload(&self, rate: f64, prefix: &PrefixOpts) -> SoakWorkload {
+        let mut curve = RateCurve::steady(rate);
+        if self.diurnal_amp > 0.0 {
+            curve = curve.with_diurnal(self.diurnal_amp, self.diurnal_period);
+        }
+        if self.flash_every > 0.0 {
+            curve = curve.with_flash(self.flash_every, self.flash_dur, self.flash_mult);
+        }
+        let mut w = SoakWorkload::new(7, curve).with_lengths((256, 1800), (25, 200));
+        if self.drift_amp > 0.0 {
+            w = w.with_drift(self.drift_amp, self.drift_period);
+        }
+        if prefix.share {
+            w = w.with_templates(prefix.num_templates, prefix.prefix_len, 0.8);
+        }
+        w
+    }
+}
+
+/// Drive a configured engine through soak mode and print the report
+/// (shared by cost-model serve and single-engine simulate).
+fn run_soak_cli(
+    so: &SoakCliOpts,
+    engine: &mut Engine,
+    cfg: &SchedulerConfig,
+    workload: &mut SoakWorkload,
+    ttft_slo: Option<f64>,
+    tbt_slo: Option<f64>,
+    json_out: Option<&Path>,
+) -> Result<()> {
+    let mut opts = SoakOpts::new(so.horizon, so.flush_every);
+    opts.jsonl = json_out.map(Path::to_path_buf);
+    opts.progress = true;
+    opts.ttft_slo = ttft_slo;
+    opts.tbt_slo = tbt_slo;
+    if so.target_p99_tbt > 0.0 {
+        opts.controller =
+            Some(ControllerConfig::new(so.target_p99_tbt, cfg.max_batch, cfg.token_budget));
+    }
+    let t0 = std::time::Instant::now();
+    let rep = run_soak(engine, workload, &opts)?;
+    println!(
+        "soaked {:.0}s of simulated traffic in {:.2}s wall",
+        rep.elapsed,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "arrivals={} completed={} rejected={} iterations={}",
+        rep.arrivals, rep.completed, rep.rejected, rep.iterations
+    );
+    if let (Some(first), Some(last)) = (rep.checkpoints.first(), rep.checkpoints.last()) {
+        println!(
+            "retained first->last checkpoint: requests {}->{} records {}->{} tbt_samples {}->{}",
+            first.retained_requests,
+            last.retained_requests,
+            first.retained_records,
+            last.retained_records,
+            first.retained_tbt_samples,
+            last.retained_tbt_samples,
+        );
+    }
+    println!(
+        "controller_ticks={} controller_adjustments={} final_token_budget={} \
+         final_max_prefix_wait={}",
+        rep.controller_ticks,
+        rep.controller_adjustments,
+        rep.final_token_budget,
+        rep.final_max_prefix_wait,
+    );
+    if ttft_slo.is_some() || tbt_slo.is_some() {
+        println!("goodput {}/{} = {:.3}", rep.goodput_pass, rep.goodput_total, rep.goodput());
+    }
+    let pct = |s: &sarathi::util::Summary| (s.percentile(50.0) * 1e3, s.percentile(99.0) * 1e3);
+    let (t50, t99) = pct(&rep.ttft);
+    println!("ttft_ms p50={t50:.1} p99={t99:.1}");
+    let (b50, b99) = pct(&rep.tbt);
+    println!("tbt_ms p50={b50:.1} p99={b99:.1}");
+    let (n50, n99) = pct(&rep.normalized);
+    println!("normalized_latency_ms_per_token p50={n50:.1} p99={n99:.1}");
+    if let Some(path) = json_out {
+        println!("trace: {} iterations -> {}", rep.jsonl_records, path.display());
+        if rep.jsonl_dropped > 0 {
+            println!(
+                "warning: {} records evicted before the stream drained them \
+                 (flush faster or raise the retain cap)",
+                rep.jsonl_dropped
+            );
+        }
+    }
+    Ok(())
 }
 
 /// `--prefix-share` workload options shared by serve/simulate: template
@@ -542,6 +765,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let threads: usize = parse_flag(args, "--threads", 1)?;
     // silently measuring "affinity routing" on a single engine would be
     // worse than an error (same stance as the --prefix-share pairing rule)
+    let soaking = flag_value(args, "--horizon-secs").is_some();
     if replicas == 1
         && (flag_value(args, "--router").is_some()
             || flag_value(args, "--spill-factor").is_some()
@@ -549,13 +773,15 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
             || flag_value(args, "--topology").is_some()
             || flag_value(args, "--prefill-replicas").is_some()
             || flag_value(args, "--interconnect-gbps").is_some()
-            || flag_value(args, "--ttft-slo").is_some()
-            || flag_value(args, "--tbt-slo").is_some())
+            // SLO deadlines also gate soak-mode goodput on one engine
+            || (!soaking
+                && (flag_value(args, "--ttft-slo").is_some()
+                    || flag_value(args, "--tbt-slo").is_some())))
     {
         sarathi::bail!(
             "--router/--spill-factor/--threads/--topology/--prefill-replicas/\
              --interconnect-gbps/--ttft-slo/--tbt-slo need --replicas > 1 \
-             (they are cluster layers)"
+             (they are cluster layers; the SLO flags also apply to soak mode)"
         );
     }
     let topology_name = flag_value(args, "--topology").unwrap_or_else(|| "colocated".to_string());
@@ -617,6 +843,22 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
              (sharing lives on the paged block map)"
         );
     }
+    let soak = SoakCliOpts::parse(args)?;
+    if let Some(so) = &soak {
+        if replicas > 1 || pp > 1 {
+            sarathi::bail!(
+                "--horizon-secs drives one engine; soak mode needs --replicas 1 and --pp 1"
+            );
+        }
+        if flag_value(args, "--requests").is_some() {
+            sarathi::bail!("--requests and --horizon-secs are different stopping rules; pick one");
+        }
+        if so.target_p99_tbt > 0.0 && kind != SchedulerKind::Hybrid {
+            sarathi::bail!(
+                "--target-p99-tbt adapts the hybrid token budget; use --scheduler hybrid"
+            );
+        }
+    }
 
     if replicas > 1 {
         return simulate_cluster(SimOpts {
@@ -676,6 +918,34 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         max_prefix_wait: wait.max_prefix_wait,
         bypass_window: wait.bypass_window,
     };
+
+    if let Some(so) = &soak {
+        println!(
+            "LLaMA-13B on A6000: soak horizon={}s flush={}s, base rate {rate} req/s, \
+             scheduler={} effective_token_budget={} {}",
+            so.horizon,
+            so.flush_every,
+            kind.name(),
+            cfg.token_budget,
+            if paged {
+                format!("(paged KV: {} blocks x {block_size} tokens)", kv.capacity())
+            } else {
+                format!("(slot KV: B={b})")
+            }
+        );
+        let mut engine = Engine::new(
+            RequestPool::new(),
+            kv,
+            make_scheduler(&cfg),
+            Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
+        )
+        .with_swap_cost(SwapCost::for_deployment(&d, preemption));
+        let mut w = so.workload(rate, &prefix);
+        // SLO deadlines gate goodput only when explicitly asked for
+        let ttft = flag_value(args, "--ttft-slo").is_some().then_some(ttft_slo);
+        let tbt = flag_value(args, "--tbt-slo").is_some().then_some(tbt_slo);
+        return run_soak_cli(so, &mut engine, &cfg, &mut w, ttft, tbt, json_out.as_deref());
+    }
 
     println!(
         "LLaMA-13B on A6000: {n} requests, {}, Poisson {rate} req/s, \

@@ -256,8 +256,8 @@ impl ClusterResult {
         // (start, replica, replica-local index) orders the merged trace
         let mut order: Vec<(f64, usize, usize)> = Vec::new();
         for (ri, rep) in self.per_replica.iter().enumerate() {
-            for (i, rec) in rep.metrics.iterations.iter().enumerate() {
-                order.push((rec.started_at, ri, i));
+            for (i, rec) in rep.metrics.iter_records().enumerate() {
+                order.push((rec.started_at, ri, rep.metrics.first_retained() + i));
             }
         }
         order.sort_by(|a, b| {
@@ -265,7 +265,7 @@ impl ClusterResult {
         });
         let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
         for (_, ri, i) in order {
-            let rec = &self.per_replica[ri].metrics.iterations[i];
+            let rec = self.per_replica[ri].metrics.record_at(i);
             writeln!(out, "{}", rec.to_jsonl(i, Some(ri)))?;
         }
         // handoff topologies append the transfer trace; colocated runs
@@ -283,7 +283,7 @@ impl ClusterResult {
 
     /// Total records across replicas (the merged JSONL line count).
     pub fn total_iterations(&self) -> usize {
-        self.per_replica.iter().map(|r| r.metrics.iterations.len()).sum()
+        self.per_replica.iter().map(|r| r.metrics.recorded_count()).sum()
     }
 }
 

@@ -11,6 +11,10 @@
 //! * [`router`] — cluster-level dispatch policies: round-robin,
 //!   join-shortest-queue by outstanding work, and rendezvous-hash prefix
 //!   affinity with a power-of-two load shed.
+//! * [`soak`] — steady-state soak harness: one engine over a wall-clock
+//!   horizon of regenerating time-varying traffic, with bounded-memory
+//!   telemetry (retirement + trace draining + quantile sketches) and an
+//!   optional online SLO control loop over the hybrid token budget.
 //! * [`cluster`] — replica-level deployment: R identical tp×pp groups
 //!   serving a shared workload through a routing policy under one global
 //!   event clock (the Fig. 12 comparison set, now dispatch-aware), plus
@@ -19,9 +23,11 @@
 pub mod cluster;
 pub mod pipeline;
 pub mod router;
+pub mod soak;
 pub mod transfer;
 
 pub use cluster::{ClusterResult, ClusterSim, Topology};
+pub use soak::{run_soak, SoakCheckpoint, SoakOpts, SoakReport};
 pub use pipeline::{PipelineResult, PipelineRun, PipelineSim, StallOutcome, TraceEvent};
 pub use transfer::{CopyFabric, TransferRecord};
 pub use router::{

@@ -470,11 +470,13 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         let local = self.push_to(si, spec);
         let pool = &mut self.pools[si];
         let id = pool.len() - 1;
-        let r = pool.get_mut(id);
-        r.prefilled = spec.prompt_len;
-        r.decoded = 1;
-        r.token_times.push(first_token_at);
-        r.imported = true;
+        {
+            let r = pool.get_mut(id);
+            r.prefilled = spec.prompt_len;
+            r.decoded = 1;
+            r.imported = true;
+        }
+        pool.stamp_token(id, first_token_at);
         local
     }
 
@@ -881,8 +883,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                     self.result.first_tokens[g] = t;
                 }
                 self.result.prefix_fallback[g] = r.prefix_fallback;
-                self.result.max_tbt[g] =
-                    r.token_gaps().iter().copied().fold(0.0, f64::max);
+                self.result.max_tbt[g] = r.max_tbt;
             }
         }
         self.result.copy_busy = self.swap_busy;
@@ -1000,7 +1001,7 @@ mod tests {
         assert_eq!(res.latency.normalized.count(), 12);
         assert!(res.latency.ttft.min() > 0.0);
         // metrics mirror the run: one record per micro-batch
-        assert_eq!(res.metrics.iterations.len(), res.micro_batches);
+        assert_eq!(res.metrics.recorded_count(), res.micro_batches);
     }
 
     /// Shared tight setup for the preemption tests: 8 requests whose peak
@@ -1072,7 +1073,7 @@ mod tests {
         assert!(res.metrics.prefix_hits > 0, "cross-stream sharers must hit");
         assert!(res.metrics.peak_shared_kv_tokens() > 0);
         // block accounting: at the end only resident prefix pins remain
-        let last = res.metrics.iterations.last().unwrap();
+        let last = res.metrics.last_record().unwrap();
         assert!(last.kv_blocks_in_use <= 4 * 2, "only pinned prefix runs may remain");
     }
 

@@ -9,5 +9,5 @@ pub mod rng;
 pub mod stats;
 
 pub use error::{Context, Error, Result};
-pub use rng::{mix64, Rng};
+pub use rng::{exp_transform, mix64, Rng};
 pub use stats::{mean, percentile, Summary};

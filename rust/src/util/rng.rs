@@ -61,9 +61,15 @@ impl Rng {
         &xs[self.usize(0, xs.len() - 1)]
     }
 
-    /// Exponential with the given rate (inter-arrival times).
+    /// Exponential with the given rate (inter-arrival times). The rate
+    /// must be positive (a zero/negative rate would yield infinite or
+    /// negative gaps), and the draw is nudged strictly positive: the
+    /// one-in-2^53 zero draw of [`f64`](Self::f64) would otherwise
+    /// produce a 0.0 gap — tied arrival times that violate the
+    /// strictly-increasing assumption the cluster dispatcher's tie-breaks
+    /// and `with_template_burst_arrivals` rely on.
     pub fn exp(&mut self, rate: f64) -> f64 {
-        -(1.0 - self.f64()).ln() / rate
+        exp_transform(self.f64(), rate)
     }
 
     /// Derive an independent child stream for `salt` without touching
@@ -94,6 +100,21 @@ impl Rng {
         let u = self.f64();
         let x = (lo_f.powf(a) + u * (hi_f.powf(a) - lo_f.powf(a))).powf(1.0 / a);
         (x as u64).clamp(lo, hi)
+    }
+}
+
+/// The inverse-CDF exponential transform behind [`Rng::exp`], exposed so
+/// its edge cases are directly testable: `u` is a uniform draw in [0, 1).
+/// Bitwise-identical to the historical `-(1-u).ln()/rate` for every
+/// nonzero draw; the u = 0 corner returns the smallest positive f64
+/// instead of a zero gap.
+pub fn exp_transform(u: f64, rate: f64) -> f64 {
+    assert!(rate > 0.0, "exponential rate must be positive, got {rate}");
+    let x = -(1.0 - u).ln() / rate;
+    if x > 0.0 {
+        x
+    } else {
+        f64::MIN_POSITIVE
     }
 }
 
@@ -171,6 +192,31 @@ mod tests {
         // [1024,4096] is ≈0.40, vs 0.33 for uniform
         let frac = lows as f64 / n as f64;
         assert!((0.36..0.46).contains(&frac), "frac={frac}");
+    }
+
+    /// Satellite regression: the u = 0 uniform draw used to produce a
+    /// 0.0 inter-arrival gap (tied arrivals); it must now be strictly
+    /// positive, every other draw is bitwise-unchanged, and a
+    /// non-positive rate fails loudly instead of yielding inf/negative
+    /// gaps.
+    #[test]
+    fn exp_gaps_are_strictly_positive_and_unchanged_otherwise() {
+        assert!(exp_transform(0.0, 2.0) > 0.0, "zero draw must not tie arrivals");
+        assert_eq!(exp_transform(0.0, 2.0), f64::MIN_POSITIVE);
+        for u in [1e-16, 0.25, 0.5, 0.999999] {
+            let expect = -(1.0 - u as f64).ln() / 3.0;
+            assert_eq!(exp_transform(u, 3.0).to_bits(), expect.to_bits());
+        }
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.exp(1.5) > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rate must be positive")]
+    fn exp_rejects_a_zero_rate() {
+        let _ = exp_transform(0.5, 0.0);
     }
 
     #[test]

@@ -1,4 +1,14 @@
 //! Statistics helpers used by the metrics collector and the figure harness.
+//!
+//! [`Summary`] is **bounded-memory**: it keeps raw samples (exact
+//! percentiles, bitwise-identical to [`percentile`] over the same data)
+//! only up to [`Summary::EXACT_CAP`]; past that it degrades to a
+//! log-linear quantile sketch with ~1% relative error and O(1) memory —
+//! the difference between a soak run whose latency summaries grow without
+//! bound and one that holds steady for hours. Count / sum / min / max are
+//! always exact (streamed), so means and extrema never degrade.
+
+use std::sync::OnceLock;
 
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -9,13 +19,13 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
-/// Linear-interpolated percentile (p in [0, 100]) over a copy of the data.
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+/// Linear-interpolated percentile over an ALREADY SORTED slice — the one
+/// shared interpolation so [`percentile`] and the exact [`Summary`] path
+/// are bitwise-identical by construction.
+fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -26,63 +36,289 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Streaming summary (count / mean / min / max) plus retained samples for
-/// percentile queries.
-#[derive(Clone, Debug, Default)]
+/// Linear-interpolated percentile (p in [0, 100]) over a copy of the data.
+/// One-shot convenience; report paths querying several percentiles of the
+/// same data should use a [`Summary`], whose sort is cached across calls.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    percentile_sorted(&v, p)
+}
+
+// Log-linear sketch geometry (fixed constants so any two sketches merge
+// bucket-for-bucket): buckets cover [1e-9, 1e9) seconds with ratio
+// gamma = 1.01 — ceil(ln(1e18)/ln(1.01)) buckets, ≤0.5% representative
+// error at the geometric bucket midpoint.
+const SKETCH_MIN: f64 = 1e-9;
+const SKETCH_MIN_LN: f64 = -20.72326583694641; // ln(1e-9)
+const GAMMA_LN: f64 = 0.009_950_330_853_155_723; // ln(1.01)
+const N_BUCKETS: usize = 4166;
+
+#[derive(Clone, Debug)]
+struct Sketch {
+    /// Samples ≤ [`SKETCH_MIN`] (zero gaps, underflow) or non-finite.
+    under: u64,
+    buckets: Vec<u64>,
+}
+
+impl Sketch {
+    fn new() -> Self {
+        Sketch { under: 0, buckets: vec![0; N_BUCKETS] }
+    }
+
+    fn add(&mut self, x: f64) {
+        if !(x > SKETCH_MIN) {
+            self.under += 1;
+            return;
+        }
+        let idx = ((x.ln() - SKETCH_MIN_LN) / GAMMA_LN) as usize;
+        self.buckets[idx.min(N_BUCKETS - 1)] += 1;
+    }
+
+    fn absorb(&mut self, other: &Sketch) {
+        self.under += other.under;
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+    }
+
+    /// Geometric midpoint of bucket `i` — the representative value.
+    fn rep(i: usize) -> f64 {
+        (SKETCH_MIN_LN + (i as f64 + 0.5) * GAMMA_LN).exp()
+    }
+
+    /// Value at rank `r` (0-based, fractional ranks floor to the bucket
+    /// containing them), clamped to the exact [min, max] envelope.
+    fn value_at_rank(&self, r: f64, min: f64, max: f64) -> f64 {
+        let target = r.max(0.0) as u64;
+        let mut cum = self.under;
+        if target < cum {
+            return min;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if target < cum {
+                return Self::rep(i).clamp(min, max);
+            }
+        }
+        max
+    }
+
+    /// (value, cumulative fraction) per non-empty bucket.
+    fn cdf(&self, total: u64, min: f64, max: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        if self.under > 0 {
+            cum += self.under;
+            out.push((min, cum as f64 / total as f64));
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((Self::rep(i).clamp(min, max), cum as f64 / total as f64));
+            }
+        }
+        out
+    }
+}
+
+/// Streaming summary (count / sum / mean / min / max, always exact) plus
+/// percentile support: raw samples up to [`Summary::EXACT_CAP`] (bitwise
+/// match with [`percentile`]), a log-linear sketch beyond it. The sort
+/// backing percentile queries is computed once and cached until the next
+/// mutation, so report paths asking p50 + p99 back-to-back sort once.
+#[derive(Clone, Debug)]
 pub struct Summary {
     samples: Vec<f64>,
+    /// Lazily-sorted copy of `samples`; invalidated by add/merge.
+    sorted: OnceLock<Vec<f64>>,
+    count: usize,
+    sum: f64,
+    min: f64,
+    max: f64,
+    sketch: Option<Box<Sketch>>,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary {
+            samples: Vec::new(),
+            sorted: OnceLock::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sketch: None,
+        }
+    }
 }
 
 impl Summary {
+    /// Raw samples retained before the sketch takes over. Large enough
+    /// that every closed-loop experiment's percentile pins stay exact
+    /// (and bitwise-stable); small enough to bound a soak run.
+    pub const EXACT_CAP: usize = 8192;
+
     pub fn new() -> Self {
         Self::default()
     }
 
     pub fn add(&mut self, x: f64) {
-        self.samples.push(x);
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.sorted.take();
+        match &mut self.sketch {
+            Some(s) => s.add(x),
+            None => {
+                self.samples.push(x);
+                if self.samples.len() > Self::EXACT_CAP {
+                    self.spill_to_sketch();
+                }
+            }
+        }
+    }
+
+    /// Move every retained sample into the sketch and drop the raw vec.
+    fn spill_to_sketch(&mut self) {
+        let mut s = Box::new(Sketch::new());
+        for &x in &self.samples {
+            s.add(x);
+        }
+        self.samples = Vec::new();
+        self.sketch = Some(s);
     }
 
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.count
     }
 
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.sum
     }
 
     pub fn mean(&self) -> f64 {
-        mean(&self.samples)
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
     }
 
+    /// Smallest sample; 0.0 when empty (like [`mean`](Self::mean) and
+    /// [`percentile`](Self::percentile) — ±inf must never leak into a
+    /// printed report).
     pub fn min(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
     }
 
+    /// Largest sample; 0.0 when empty.
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
     }
 
     pub fn percentile(&self, p: f64) -> f64 {
-        percentile(&self.samples, p)
+        if self.count == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        match &self.sketch {
+            Some(s) => {
+                let rank = (p / 100.0) * (self.count - 1) as f64;
+                s.value_at_rank(rank, self.min, self.max)
+            }
+            None => percentile_sorted(self.sorted_samples(), p),
+        }
     }
 
+    fn sorted_samples(&self) -> &[f64] {
+        self.sorted.get_or_init(|| {
+            let mut v = self.samples.clone();
+            v.sort_by(f64::total_cmp);
+            v
+        })
+    }
+
+    /// Retained raw samples — the full data while in exact mode, EMPTY
+    /// once the sketch has taken over (callers needing raw data must stay
+    /// under [`EXACT_CAP`](Self::EXACT_CAP)).
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
 
+    /// Raw samples currently held in memory (the soak leak-detector's
+    /// counter: flat between checkpoints once the sketch engages).
+    pub fn retained_samples(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True once the summary has spilled to the bounded sketch.
+    pub fn is_sketched(&self) -> bool {
+        self.sketch.is_some()
+    }
+
     /// Fold another summary's samples into this one (cross-replica
-    /// latency aggregation).
+    /// latency aggregation). Exact while the combined count fits
+    /// [`EXACT_CAP`](Self::EXACT_CAP); sketched beyond it.
     pub fn merge(&mut self, other: &Summary) {
-        self.samples.extend_from_slice(&other.samples);
+        if other.count == 0 {
+            return;
+        }
+        self.sorted.take();
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        let fits_exact = self.sketch.is_none()
+            && other.sketch.is_none()
+            && self.samples.len() + other.samples.len() <= Self::EXACT_CAP;
+        if fits_exact {
+            self.samples.extend_from_slice(&other.samples);
+            return;
+        }
+        if self.sketch.is_none() {
+            self.spill_to_sketch();
+        }
+        let s = self.sketch.as_mut().unwrap();
+        match &other.sketch {
+            Some(o) => s.absorb(o),
+            None => {
+                for &x in &other.samples {
+                    s.add(x);
+                }
+            }
+        }
     }
 
     /// Empirical CDF as (value, fraction<=value) points, for Fig-12a-style
-    /// plots.
+    /// plots. Exact per-sample points in exact mode; one point per
+    /// non-empty bucket once sketched.
     pub fn cdf(&self) -> Vec<(f64, f64)> {
-        let mut v = self.samples.clone();
-        v.sort_by(f64::total_cmp);
-        let n = v.len() as f64;
-        v.into_iter().enumerate().map(|(i, x)| (x, (i + 1) as f64 / n)).collect()
+        match &self.sketch {
+            Some(s) => s.cdf(self.count as u64, self.min, self.max),
+            None => {
+                let v = self.sorted_samples();
+                let n = v.len() as f64;
+                v.iter().enumerate().map(|(i, &x)| (x, (i + 1) as f64 / n)).collect()
+            }
+        }
     }
 }
 
@@ -122,5 +358,154 @@ mod tests {
         assert_eq!(cdf.last().unwrap().1, 1.0);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
+    }
+
+    /// Satellite regression: an EMPTY summary used to report min = +inf
+    /// and max = −inf, leaking `inf` into printed reports. All aggregate
+    /// queries now agree on 0.0 for no data.
+    #[test]
+    fn empty_summary_reports_zero_not_infinity() {
+        let s = Summary::new();
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.sum(), 0.0);
+        assert!(s.min().is_finite() && s.max().is_finite());
+    }
+
+    /// The exact path must be BITWISE identical to the free-function
+    /// percentile over the same data — the pin that keeps every existing
+    /// closed-loop percentile reproducible across the bounded-memory
+    /// rework.
+    #[test]
+    fn exact_path_is_bitwise_identical_to_free_percentile() {
+        let mut s = Summary::new();
+        let mut xs = Vec::new();
+        let mut v: u64 = 0x9E3779B97F4A7C15;
+        for _ in 0..1000 {
+            v = v.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let x = (v >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            xs.push(x);
+            s.add(x);
+        }
+        for p in [0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(
+                s.percentile(p).to_bits(),
+                percentile(&xs, p).to_bits(),
+                "p{p} diverged from the exact reference"
+            );
+        }
+        assert!(!s.is_sketched());
+        assert_eq!(s.retained_samples(), 1000);
+    }
+
+    /// Percentile queries cache the sort; a mutation after a query must
+    /// invalidate the cache, not serve stale order.
+    #[test]
+    fn sort_cache_invalidates_on_mutation() {
+        let mut s = Summary::new();
+        for x in [3.0, 1.0, 2.0] {
+            s.add(x);
+        }
+        assert_eq!(s.percentile(100.0), 3.0);
+        s.add(10.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        assert!((s.percentile(50.0) - 2.5).abs() < 1e-12);
+        let mut other = Summary::new();
+        other.add(0.5);
+        s.merge(&other);
+        assert_eq!(s.percentile(0.0), 0.5);
+    }
+
+    /// Past the cap the summary spills to the sketch: memory stops
+    /// growing, extrema/mean stay exact, percentiles hold ~1% relative
+    /// error.
+    #[test]
+    fn sketch_bounds_memory_and_keeps_percentiles_close() {
+        let mut s = Summary::new();
+        let n = 3 * Summary::EXACT_CAP;
+        let mut xs = Vec::with_capacity(n);
+        let mut v: u64 = 42;
+        for _ in 0..n {
+            v = v.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // spread over several decades, like latency samples
+            let u = (v >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            let x = 1e-4 * (u * 9.0f64.ln()).exp();
+            xs.push(x);
+            s.add(x);
+        }
+        assert!(s.is_sketched());
+        assert_eq!(s.retained_samples(), 0, "raw samples are dropped after the spill");
+        assert_eq!(s.count(), n);
+        let exact_min = xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let exact_max = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.min().to_bits(), exact_min.to_bits(), "min stays exact");
+        assert_eq!(s.max().to_bits(), exact_max.to_bits(), "max stays exact");
+        assert!((s.mean() - mean(&xs)).abs() < 1e-12 * mean(&xs).abs().max(1.0));
+        for p in [50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let approx = s.percentile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.02, "p{p}: sketch {approx} vs exact {exact} (rel {rel})");
+        }
+        assert_eq!(s.percentile(0.0), s.min());
+        assert_eq!(s.percentile(100.0), s.max());
+        let cdf = s.cdf();
+        assert!(cdf.len() <= N_BUCKETS + 1, "cdf is bucket-bounded");
+        assert!(cdf.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_spills_when_the_combined_count_exceeds_the_cap() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for i in 0..Summary::EXACT_CAP {
+            a.add(i as f64 * 1e-3 + 1e-3);
+            b.add(i as f64 * 1e-3 + 1e-3);
+        }
+        assert!(!a.is_sketched() && !b.is_sketched());
+        a.merge(&b);
+        assert!(a.is_sketched(), "combined count exceeds the cap");
+        assert_eq!(a.count(), 2 * Summary::EXACT_CAP);
+        assert_eq!(a.min(), 1e-3);
+        let p50 = a.percentile(50.0);
+        let expect = Summary::EXACT_CAP as f64 / 2.0 * 1e-3;
+        assert!((p50 - expect).abs() / expect < 0.02, "{p50} vs {expect}");
+        // sketched + exact merge keeps counting
+        let mut c = Summary::new();
+        c.add(5.0);
+        a.merge(&c);
+        assert_eq!(a.count(), 2 * Summary::EXACT_CAP + 1);
+        assert_eq!(a.max(), 5.0);
+    }
+
+    #[test]
+    fn merge_of_exact_summaries_stays_exact_under_the_cap() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for x in [1.0, 3.0] {
+            a.add(x);
+        }
+        for x in [2.0, 4.0] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert!(!a.is_sketched());
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.samples().len(), 4);
+        assert!((a.percentile(50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_handles_underflow_and_zero_samples() {
+        let mut s = Summary::new();
+        for _ in 0..=Summary::EXACT_CAP {
+            s.add(0.0);
+        }
+        assert!(s.is_sketched());
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0, "underflow bucket reports the exact min");
     }
 }

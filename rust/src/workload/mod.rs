@@ -233,6 +233,216 @@ pub fn sharded_shared_prefix_population(
         .collect()
 }
 
+/// Time-varying arrival intensity for soak runs: a diurnal sinusoid with
+/// periodic flash-crowd bursts layered on top. All closed-loop populations
+/// above draw a FIXED request list up front; a soak horizon instead asks
+/// "what is the rate right now" and regenerates forever.
+#[derive(Clone, Copy, Debug)]
+pub struct RateCurve {
+    /// Mean arrival rate, req/s.
+    pub base_rate: f64,
+    /// Diurnal swing as a fraction of `base_rate`, in [0, 1): rate moves
+    /// through `base × (1 ± amp)` over each period.
+    pub diurnal_amp: f64,
+    /// Diurnal period, seconds of simulated time.
+    pub diurnal_period: f64,
+    /// A flash crowd starts every `flash_every` seconds (0 disables).
+    pub flash_every: f64,
+    /// Flash-crowd duration, seconds.
+    pub flash_dur: f64,
+    /// Rate multiplier while a flash crowd is live (≥ 1).
+    pub flash_mult: f64,
+}
+
+impl RateCurve {
+    /// Constant `rate` req/s — no diurnal swing, no flash crowds.
+    pub fn steady(rate: f64) -> Self {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        RateCurve {
+            base_rate: rate,
+            diurnal_amp: 0.0,
+            diurnal_period: 1.0,
+            flash_every: 0.0,
+            flash_dur: 0.0,
+            flash_mult: 1.0,
+        }
+    }
+
+    pub fn with_diurnal(mut self, amp: f64, period: f64) -> Self {
+        assert!((0.0..1.0).contains(&amp), "diurnal amplitude must be in [0, 1)");
+        assert!(period > 0.0, "diurnal period must be positive");
+        self.diurnal_amp = amp;
+        self.diurnal_period = period;
+        self
+    }
+
+    pub fn with_flash(mut self, every: f64, dur: f64, mult: f64) -> Self {
+        assert!(every > 0.0 && dur > 0.0 && dur < every, "flash window must fit its period");
+        assert!(mult >= 1.0, "a flash crowd cannot lower the rate");
+        self.flash_every = every;
+        self.flash_dur = dur;
+        self.flash_mult = mult;
+        self
+    }
+
+    /// Is a flash crowd live at time `t`?
+    pub fn in_flash(&self, t: f64) -> bool {
+        self.flash_every > 0.0 && t.rem_euclid(self.flash_every) < self.flash_dur
+    }
+
+    /// Instantaneous arrival rate at time `t` (always strictly positive:
+    /// the sinusoid is bounded by `amp < 1` and the flash only multiplies).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t / self.diurnal_period;
+        let mut r = self.base_rate * (1.0 + self.diurnal_amp * phase.sin());
+        if self.in_flash(t) {
+            r *= self.flash_mult;
+        }
+        r
+    }
+}
+
+/// A regenerating workload for wall-clock soak horizons: nonhomogeneous
+/// Poisson arrivals following a [`RateCurve`], prompt/output lengths that
+/// drift sinusoidally over time, and (optionally) template traffic whose
+/// flash crowds all pile onto the hottest template — the pattern that
+/// makes a static `token_budget` / `max_prefix_wait` setting fail.
+///
+/// Unlike the population builders above, this never materialises the whole
+/// request list: [`fill_until`](Self::fill_until) generates just far
+/// enough ahead of the engine clock, so a soak run's workload memory is
+/// O(1) no matter the horizon.
+#[derive(Clone, Debug)]
+pub struct SoakWorkload {
+    rng: Rng,
+    curve: RateCurve,
+    /// Arrival clock: time of the last generated arrival.
+    t: f64,
+    prompt_range: (usize, usize),
+    decode_range: (usize, usize),
+    /// Length-drift swing as a fraction of the drawn length, in [0, 1).
+    drift_amp: f64,
+    drift_period: f64,
+    /// Template traffic: (num_templates, prefix_len, zipf theta).
+    templates: Option<(usize, usize, f64)>,
+    /// One-spec lookahead: the first arrival PAST the previous horizon,
+    /// held back so no draw is ever discarded between fill calls.
+    pending: Option<RequestSpec>,
+    generated: usize,
+}
+
+impl SoakWorkload {
+    pub fn new(seed: u64, curve: RateCurve) -> Self {
+        SoakWorkload {
+            rng: Rng::new(seed),
+            curve,
+            t: 0.0,
+            prompt_range: (64, 512),
+            decode_range: (32, 256),
+            drift_amp: 0.0,
+            drift_period: 1.0,
+            templates: None,
+            pending: None,
+            generated: 0,
+        }
+    }
+
+    pub fn with_lengths(mut self, prompt: (usize, usize), decode: (usize, usize)) -> Self {
+        assert!(prompt.0 >= 1 && prompt.0 <= prompt.1, "bad prompt range");
+        assert!(decode.0 >= 1 && decode.0 <= decode.1, "bad decode range");
+        self.prompt_range = prompt;
+        self.decode_range = decode;
+        self
+    }
+
+    pub fn with_drift(mut self, amp: f64, period: f64) -> Self {
+        assert!((0.0..1.0).contains(&amp), "drift amplitude must be in [0, 1)");
+        assert!(period > 0.0, "drift period must be positive");
+        self.drift_amp = amp;
+        self.drift_period = period;
+        self
+    }
+
+    pub fn with_templates(mut self, n: usize, prefix_len: usize, theta: f64) -> Self {
+        assert!(n > 0 && prefix_len > 0, "template traffic needs templates");
+        self.templates = Some((n, prefix_len, theta));
+        self
+    }
+
+    pub fn curve(&self) -> &RateCurve {
+        &self.curve
+    }
+
+    /// Arrivals generated so far (including one possibly still pending).
+    pub fn generated(&self) -> usize {
+        self.generated
+    }
+
+    /// Time of the most recently generated arrival.
+    pub fn clock(&self) -> f64 {
+        self.t
+    }
+
+    fn drifted(&mut self, range: (usize, usize)) -> usize {
+        let raw = self.rng.usize(range.0, range.1);
+        let phase = 2.0 * std::f64::consts::PI * self.t / self.drift_period;
+        let scale = 1.0 + self.drift_amp * phase.sin();
+        ((raw as f64 * scale).round() as usize).max(1)
+    }
+
+    /// Draw the next arrival (advances the nonhomogeneous Poisson clock by
+    /// thinning-free stepwise approximation: each gap uses the rate at the
+    /// previous arrival, which tracks the curve for gaps ≪ the period).
+    fn next_spec(&mut self) -> RequestSpec {
+        let rate = self.curve.rate_at(self.t);
+        self.t += self.rng.exp(rate);
+        let prefix = self.templates.map(|(n, len, theta)| {
+            // flash crowds are template-correlated: everyone hits the
+            // same hot template (id 0), which is what makes them both a
+            // prefix-cache gift and a budget hazard
+            let id = if self.curve.in_flash(self.t) {
+                0
+            } else {
+                self.rng.zipf(theta, 1, n as u64) - 1
+            };
+            PrefixSpec { id, len }
+        });
+        let unique = self.drifted(self.prompt_range);
+        let prompt_len = match prefix {
+            // the template prefix must stay a STRICT prefix of the prompt
+            Some(p) => p.len + unique.max(1),
+            None => unique,
+        };
+        let decode_len = self.drifted(self.decode_range);
+        self.generated += 1;
+        RequestSpec { prompt_len, decode_len, arrival: self.t, prefix }
+    }
+
+    /// Push every arrival with `arrival ≤ horizon` into `pool`; returns
+    /// how many were pushed. The first draw past the horizon is retained
+    /// for the next call, so consecutive fills partition the timeline.
+    pub fn fill_until(&mut self, pool: &mut crate::coordinator::RequestPool, horizon: f64) -> usize {
+        let mut pushed = 0;
+        if let Some(spec) = self.pending {
+            if spec.arrival > horizon {
+                return 0;
+            }
+            pool.push(spec);
+            self.pending = None;
+            pushed += 1;
+        }
+        loop {
+            let spec = self.next_spec();
+            if spec.arrival > horizon {
+                self.pending = Some(spec);
+                return pushed;
+            }
+            pool.push(spec);
+            pushed += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +562,92 @@ mod tests {
             shard.iter().filter_map(|s| s.prefix.map(|p| p.id)).collect::<Vec<_>>()
         };
         assert!(ids(&large[0]).iter().all(|id| !ids(&large[1]).contains(id)));
+    }
+
+    #[test]
+    fn rate_curve_swings_and_flashes() {
+        let c = RateCurve::steady(10.0).with_diurnal(0.5, 100.0).with_flash(40.0, 5.0, 3.0);
+        // diurnal peak at t = period/4, trough at 3·period/4
+        assert!((c.rate_at(25.0) - 15.0).abs() < 1e-9);
+        assert!((c.rate_at(75.0) - 5.0).abs() < 1e-9);
+        // flash windows: [0,5), [40,45), … multiply whatever the sinusoid says
+        assert!(c.in_flash(42.0) && !c.in_flash(46.0));
+        assert!((c.rate_at(0.0) - 30.0).abs() < 1e-9);
+        // the curve never touches zero anywhere on a dense scan
+        let steady = RateCurve::steady(2.0).with_diurnal(0.99, 10.0);
+        for i in 0..1000 {
+            assert!(steady.rate_at(i as f64 * 0.01) > 0.0);
+        }
+    }
+
+    #[test]
+    fn soak_fill_partitions_the_timeline_losslessly() {
+        use crate::coordinator::RequestPool;
+        let curve = RateCurve::steady(20.0).with_diurnal(0.4, 60.0);
+        let mut w = SoakWorkload::new(11, curve).with_lengths((32, 128), (8, 64));
+        let mut pool = RequestPool::new();
+        let a = w.fill_until(&mut pool, 10.0);
+        let b = w.fill_until(&mut pool, 20.0);
+        assert!(a > 0 && b > 0);
+        assert_eq!(pool.len(), a + b);
+        // every pushed arrival lands in its window; arrivals are increasing
+        let arrivals: Vec<f64> = pool.iter().map(|r| r.spec.arrival).collect();
+        assert!(arrivals.windows(2).all(|p| p[0] < p[1]));
+        assert!(arrivals[..a].iter().all(|&t| t <= 10.0));
+        assert!(arrivals[a..].iter().all(|&t| (10.0..=20.0).contains(&t)));
+        // the lookahead spec survives between calls: exactly one draw is
+        // in flight beyond what the pool holds
+        assert_eq!(w.generated(), pool.len() + 1);
+        // a horizon before the pending arrival pushes nothing
+        assert_eq!(w.fill_until(&mut pool, arrivals[a + b - 1] + 1e-12), 0);
+    }
+
+    #[test]
+    fn flash_crowds_pile_onto_the_hot_template() {
+        let curve = RateCurve::steady(50.0).with_flash(30.0, 6.0, 4.0);
+        let mut w = SoakWorkload::new(5, curve)
+            .with_lengths((16, 64), (8, 32))
+            .with_templates(8, 256, 0.6);
+        let mut pool = crate::coordinator::RequestPool::new();
+        w.fill_until(&mut pool, 90.0);
+        let mut flash_ids = Vec::new();
+        let mut calm_ids = Vec::new();
+        for r in pool.iter() {
+            let pfx = r.spec.prefix.expect("template workload tags every request");
+            assert!(r.spec.prompt_len > pfx.len, "prefix must be strict");
+            if curve.in_flash(r.spec.arrival) {
+                flash_ids.push(pfx.id);
+            } else {
+                calm_ids.push(pfx.id);
+            }
+        }
+        assert!(flash_ids.len() > 20, "flash windows must see traffic");
+        assert!(flash_ids.iter().all(|&id| id == 0), "flash pins the hot template");
+        assert!(calm_ids.iter().any(|&id| id != 0), "calm traffic spreads out");
+    }
+
+    #[test]
+    fn length_drift_moves_the_mean_over_time() {
+        let curve = RateCurve::steady(40.0);
+        let mut w = SoakWorkload::new(7, curve)
+            .with_lengths((100, 100), (50, 50))
+            .with_drift(0.5, 100.0);
+        let mut pool = crate::coordinator::RequestPool::new();
+        w.fill_until(&mut pool, 100.0);
+        // first half-period rides the +sin lobe, second the −sin lobe
+        let (mut hi, mut nhi, mut lo, mut nlo) = (0usize, 0usize, 0usize, 0usize);
+        for r in pool.iter() {
+            if r.spec.arrival < 50.0 {
+                hi += r.spec.prompt_len;
+                nhi += 1;
+            } else {
+                lo += r.spec.prompt_len;
+                nlo += 1;
+            }
+        }
+        assert!(nhi > 100 && nlo > 100);
+        let (mh, ml) = (hi as f64 / nhi as f64, lo as f64 / nlo as f64);
+        assert!(mh > 110.0 && ml < 90.0, "drift lobes not visible: {mh} vs {ml}");
     }
 
     #[test]

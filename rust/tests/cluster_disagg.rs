@@ -128,7 +128,7 @@ fn disagg_conserves_kv_and_overlaps_transfers_with_compute() {
     // iteration — the copy stream does not stop the compute clock
     let overlapped = fabric.records.iter().any(|rec| {
         res.per_replica.iter().any(|rep| {
-            rep.metrics.iterations.iter().any(|it| {
+            rep.metrics.iter_records().any(|it| {
                 it.started_at < rec.finish && rec.start < it.started_at + it.elapsed
             })
         })

@@ -97,7 +97,7 @@ fn paged_kv_admits_more_than_worst_case_slot_formula() {
         hyb.metrics.peak_active()
     );
     // and the per-iteration records expose the occupancy that proves it
-    assert!(hyb.metrics.iterations.iter().any(|r| r.n_active > b));
+    assert!(hyb.metrics.iter_records().any(|r| r.n_active > b));
 }
 
 #[test]
@@ -114,7 +114,7 @@ fn preemption_events_are_visible_in_metrics() {
     // occasionally preempt — and the metrics must show it, both in total
     // and on the per-iteration records
     assert!(hyb.metrics.preemptions > 0, "no preemptions recorded");
-    let per_iter: usize = hyb.metrics.iterations.iter().map(|r| r.preemptions).sum();
+    let per_iter: usize = hyb.metrics.iter_records().map(|r| r.preemptions).sum();
     assert_eq!(per_iter, hyb.metrics.preemptions);
     let per_req: usize = hyb.pool.iter().map(|r| r.preemptions).sum();
     assert_eq!(per_req, hyb.metrics.preemptions);

@@ -124,7 +124,7 @@ fn undersized_shared_pool_preempts_with_visible_swap_time() {
     assert_eq!(res.metrics.total_decode_tokens(), d_expect);
 
     // block accounting: the final record shows every block returned
-    let last = res.metrics.iterations.last().unwrap();
+    let last = res.metrics.last_record().unwrap();
     assert_eq!(last.kv_blocks_in_use, 0, "blocks leaked");
     assert_eq!(last.kv_blocks_total, 60);
 
@@ -132,7 +132,7 @@ fn undersized_shared_pool_preempts_with_visible_swap_time() {
     let path = std::env::temp_dir().join("sarathi_pipeline_hybrid_trace.jsonl");
     res.metrics.write_jsonl(&path).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    assert_eq!(text.lines().count(), res.metrics.iterations.len());
+    assert_eq!(text.lines().count(), res.metrics.recorded_count());
     let swapped: Vec<&str> =
         text.lines().filter(|l| !l.contains("\"swap_time\":0.000000")).collect();
     assert!(

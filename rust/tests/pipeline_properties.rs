@@ -208,7 +208,7 @@ fn shared_paged_pool_conserves_tokens_and_blocks() {
         // no cross-stream double-free: the run's final record must show
         // every block back in the pool (a double release would have
         // panicked inside KvManager already; this checks for leaks)
-        if let Some(last) = res.metrics.iterations.last() {
+        if let Some(last) = res.metrics.last_record() {
             if last.kv_blocks_in_use != 0 {
                 return Err(format!("{} blocks leaked", last.kv_blocks_in_use));
             }

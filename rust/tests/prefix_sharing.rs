@@ -137,7 +137,7 @@ fn prefix_hits_and_shared_occupancy_land_in_the_jsonl_trace() {
     let path = std::env::temp_dir().join("sarathi_prefix_sharing_trace.jsonl");
     on.metrics.write_jsonl(&path).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    assert_eq!(text.lines().count(), on.metrics.iterations.len());
+    assert_eq!(text.lines().count(), on.metrics.recorded_count());
     // per-iteration hit counts sum to the metrics total…
     let hits: usize = text
         .lines()

@@ -207,7 +207,7 @@ fn metrics_attribution_is_nonnegative_and_bounded() {
             Box::new(SimExecutor::new(cm)),
         );
         e.run();
-        for rec in &e.metrics.iterations {
+        for rec in e.metrics.iter_records() {
             if rec.elapsed <= 0.0 {
                 return Err("non-positive iteration time".into());
             }
