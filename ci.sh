@@ -37,6 +37,19 @@ grep -qE '"shared_kv_tokens":[1-9][0-9]*' "$PTRACE" \
     || { echo "JSONL never shows shared KV occupancy"; exit 1; }
 rm -f "$PTRACE"
 
+echo "== smoke: conversation-tree workload — radix partial hits in report + JSONL =="
+CTRACE="$(mktemp -t conv_trace.XXXXXX.jsonl)"
+COUT="$(cargo run --release -- simulate --requests 160 --scheduler hybrid \
+    --block-size 32 --prefix-share --workload conversation \
+    --num-templates 4 --prefix-len 256 --json-out "$CTRACE")"
+echo "$COUT" | grep -E 'partial_hit_tokens=[1-9][0-9]*' \
+    || { echo "conversation run served no partial-hit tokens"; exit 1; }
+echo "$COUT" | grep -E 'mean_hit_depth_tokens=[0-9.]+' \
+    || { echo "report lacks mean hit depth"; exit 1; }
+grep -qE '"prefix_partial_hit_tokens":[1-9][0-9]*' "$CTRACE" \
+    || { echo "JSONL never shows partial-hit tokens"; exit 1; }
+rm -f "$CTRACE"
+
 echo "== smoke: wedge regression — undersized shared pool + template fanout must exit 0 =="
 WTRACE="$(mktemp -t wedge_trace.XXXXXX.jsonl)"
 WOUT="$(cargo run --release -- simulate --requests 200 --scheduler hybrid \
@@ -59,6 +72,16 @@ echo "$ROUT" | grep -E 'load_imbalance=[0-9.]+' \
     || { echo "report lacks load_imbalance"; exit 1; }
 grep -q '"replica":' "$RTRACE" || { echo "JSONL lacks replica tags"; exit 1; }
 rm -f "$RTRACE"
+
+echo "== smoke: digest routing over conversation trees — hits + imbalance on 4 replicas =="
+GOUT="$(cargo run --release -- simulate --requests 160 --scheduler hybrid \
+    --block-size 32 --kv-blocks 512 --rate 24 \
+    --replicas 4 --router affinity \
+    --prefix-share --workload conversation --num-templates 4 --prefix-len 256)"
+echo "$GOUT" | grep -E 'prefix_hits=[1-9][0-9]*' \
+    || { echo "digest routing found no prefix hits"; exit 1; }
+echo "$GOUT" | grep -E 'load_imbalance=[0-9.]+' \
+    || { echo "report lacks load_imbalance"; exit 1; }
 
 echo "== smoke: disaggregated topology — goodput in report, kv_transfer_time in JSONL =="
 DTRACE="$(mktemp -t disagg_trace.XXXXXX.jsonl)"

@@ -11,7 +11,7 @@ mod bench_util;
 use bench_util::{bench, header, json_results, write_json};
 
 use sarathi::config::{GpuConfig, ModelConfig, SchedulerConfig};
-use sarathi::coordinator::{make_scheduler, Engine, KvManager, RequestPool, SimExecutor};
+use sarathi::coordinator::{derived_path, make_scheduler, Engine, KvManager, RequestPool, SimExecutor};
 use sarathi::costmodel::{BatchShape, CostModel};
 use sarathi::profiler::Profiler;
 use sarathi::workload::uniform_population;
@@ -46,6 +46,33 @@ fn main() {
         for s in slots {
             kv.release(s);
         }
+    }));
+
+    // radix prefix store: longest-match lookup down a conversation-depth
+    // chain — 32 ready nodes x 8 blocks x 16 tokens (a 4096-token resident
+    // path), probed with a deeper content path so the walk descends every
+    // node before stopping. The admission hot path runs this per template
+    // arrival.
+    let bs = 16;
+    let seg = 8;
+    let chain_blocks = 256;
+    let mut radix_kv = KvManager::paged(chain_blocks + 32, bs);
+    let chain = derived_path(42, chain_blocks);
+    for s in 0..chain_blocks / seg {
+        let hash = 1_000 + s as u64;
+        let run = radix_kv.alloc_n(seg).expect("pool sized for the chain");
+        radix_kv.register_path_prefix(
+            hash,
+            &chain[..(s + 1) * seg],
+            s * seg * bs,
+            (s + 1) * seg * bs,
+            &run,
+        );
+        radix_kv.mark_prefix_ready(hash);
+    }
+    let probe = derived_path(42, chain_blocks + 16);
+    results.push(bench("kv::lookup_path_match(32-node deep chain)", || {
+        std::hint::black_box(radix_kv.lookup_path_match(&probe).ready_tokens);
     }));
 
     header("scheduler");

@@ -131,12 +131,16 @@ impl<'a> Engine<'a> {
         // step has no record, so count directly.
         let rejections = self.pool.take_rejected_events();
         let prefix_hits = self.pool.take_prefix_hits();
+        let prefix_partial_hits = self.pool.take_prefix_partial_hits();
+        let prefix_partial_hit_tokens = self.pool.take_prefix_partial_hit_tokens();
         let prefix_fallbacks = self.pool.take_prefix_fallbacks();
         let prefix_wait_iters = self.pool.take_prefix_wait_ticks();
         let swap_in = self.applier.swap.swap_in_time(self.pool.take_swapped_in_tokens());
         if batch.is_empty() {
             self.metrics.rejections += rejections;
             self.metrics.prefix_hits += prefix_hits;
+            self.metrics.prefix_partial_hits += prefix_partial_hits;
+            self.metrics.prefix_partial_hit_tokens += prefix_partial_hit_tokens;
             self.metrics.prefix_fallbacks += prefix_fallbacks;
             self.metrics.prefix_wait_iterations += prefix_wait_iters;
             // idle: jump to the next arrival if one exists
@@ -187,6 +191,8 @@ impl<'a> Engine<'a> {
             swap_time: swap_in + effects.swap_time,
             rejections,
             prefix_hits,
+            prefix_partial_hits,
+            prefix_partial_hit_tokens,
             prefix_fallbacks,
             prefix_wait_iters,
             shared_kv_tokens: self.pool.shared_kv_tokens(),
@@ -212,7 +218,23 @@ impl<'a> Engine<'a> {
             assert!(iters <= self.max_iterations, "engine exceeded iteration cap");
             if !self.step() {
                 if let Some(id) = self.pool.oldest_prefix_waiter() {
-                    self.pool.force_prefix_fallback(id, self.now);
+                    // demote to the deepest READY ancestor on the waiter's
+                    // content path (0 = plain full-price miss) — same rule
+                    // as the bounded-wait stall fallback in admission
+                    let ready = match self.pool.get(id).spec.prefix.as_ref() {
+                        Some(pfx) if !pfx.path.is_empty() => {
+                            let bs = self.kv.block_size().max(1);
+                            let cap = self.pool.get(id).spec.prompt_len.saturating_sub(1);
+                            let kb = (pfx.len.min(cap) / bs).min(pfx.path.len());
+                            if kb > 0 {
+                                self.kv.lookup_path_match(&pfx.path[..kb]).ready_tokens
+                            } else {
+                                0
+                            }
+                        }
+                        _ => 0,
+                    };
+                    self.pool.force_prefix_fallback(id, self.now, ready);
                     continue;
                 }
                 panic!(
@@ -488,10 +510,10 @@ mod tests {
             prompt_len: 64,
             decode_len: 4,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 9, len: 48 }),
+            prefix: Some(PrefixSpec::whole(9, 48)),
         };
         let mut e = Engine::new(
-            RequestPool::from_specs(&[spec, spec]),
+            RequestPool::from_specs(&[spec.clone(), spec]),
             KvManager::paged(16, 16),
             Box::new(HybridScheduler::new(128, 8, 0).with_prefix_share(true)),
             sim(),

@@ -1,5 +1,5 @@
 //! Token-granular paged KV-cache block allocator with ref-counted,
-//! copy-on-write prefix sharing.
+//! copy-on-write prefix sharing over a **radix tree of token blocks**.
 //!
 //! The seed reserved one whole-request *slot* per admitted request, sized
 //! for the worst-case sequence length (§4.3.1) — which caps concurrency at
@@ -22,67 +22,207 @@
 //!   sharer that must *append into* a partially-filled shared block gets a
 //!   private copy; the shared original is never mutated while its
 //!   refcount exceeds one.
-//! * [`register_prefix`](KvManager::register_prefix) /
-//!   [`lookup_prefix`](KvManager::lookup_prefix) index resident prefix
-//!   block-runs by prefix hash. A registered prefix holds one reference
-//!   ("pin") on its run so it stays resident across sharer churn; a
-//!   *cold* prefix (pin is the only reference) is reclaimed automatically
-//!   when the allocator runs out of free blocks, oldest-registered first.
-//!   A run registers **unready** and becomes servable
-//!   ([`mark_prefix_ready`](KvManager::mark_prefix_ready), driven by the
-//!   shared state transition) only after the registrant's prefill has
-//!   computed the covered tokens INTO the run — filling pin-shared blocks
-//!   in place is the one sanctioned write to a block with refcount > 1,
-//!   safe because the readiness gate keeps every reader out until the
-//!   fill completes.
+//!
+//! The prefix index itself is no longer a flat `hash → whole block-run`
+//! map. It is a **radix tree** (SGLang RadixAttention-style, arXiv
+//! 2312.07104) whose nodes own block-aligned runs:
+//!
+//! * Each [`PrefixNode`] covers a contiguous token span `[start,
+//!   start+tokens)`; its `path` holds the *cumulative per-block content
+//!   hash* at every full block boundary it covers. Because the hashes are
+//!   cumulative, a path entry identifies the entire token prefix up to
+//!   that block — two requests agreeing on entry `k` agree on all
+//!   `(k+1)·block_size` leading tokens.
+//! * [`register_prefix`](KvManager::register_prefix) (whole-template,
+//!   `{id,len}` form) lowers to a single-node tree via a
+//!   [`derived_path`]; re-registration is an idempotent no-op instead of
+//!   an assertion. [`register_path_prefix`](KvManager::register_path_prefix)
+//!   attaches a new tail under the deepest resident match, **splitting**
+//!   an existing node when the divergence point falls inside it.
+//! * [`lookup_path_match`](KvManager::lookup_path_match) returns the
+//!   **longest resident match** of a request's content path: the
+//!   contiguous-from-root READY coverage (servable now) plus the total
+//!   attach depth (registered, possibly still filling). Partial overlaps
+//!   between templates — shared system prompt, divergent few-shot tails,
+//!   multi-turn conversation extensions — share KV proportionally to
+//!   their common path instead of all-or-nothing.
+//! * Readiness, fill progress and stall events are **per node**: a node
+//!   registers unready and becomes servable when the registrant's prefill
+//!   crosses its covered blocks ([`mark_prefix_ready`]
+//!   (KvManager::mark_prefix_ready) readies a whole chain; interior
+//!   nodes auto-ready when a fill note covers them completely). Filling
+//!   pin-shared blocks in place is the one sanctioned write to a block
+//!   with refcount > 1, safe because the readiness gate keeps every
+//!   reader out until the fill completes.
+//! * LRU reclaim evicts cold **subtrees leaf-first**: a node is a victim
+//!   only when it has no live children and no sharer besides the index
+//!   pin on any of its own blocks — a node with live descendants or
+//!   sharers is never reclaimed. Evicting a leaf exposes its parent as a
+//!   candidate for the next round, so cold subtrees drain bottom-up.
+//! * [`residency_digest`](KvManager::residency_digest) summarizes the
+//!   READY tree as a bounded set of `(cumulative hash, token depth)`
+//!   entries, deepest-first — the router's view of what is *actually*
+//!   resident on a replica ([`ResidencyDigest::coverage`] scores a
+//!   request path against it).
 //!
 //! The old slot semantics are the degenerate case `block_size =
 //! DEGENERATE_BLOCK` (one block covers any sequence): [`KvManager::new`]
 //! builds exactly that, so every seed experiment reproduces unchanged.
 //! Prefix sharing is meaningless there (one block holds private tokens
-//! too), so `lookup_prefix` always misses on degenerate pools.
+//! too), so all lookups miss on degenerate pools.
 //!
 //! Invariants (enforced with loud panics, exercised by
-//! `tests/kv_properties.rs` and `tests/prefix_properties.rs`):
-//! * a block's refcount equals its holders (request tables + prefix pins),
+//! `tests/kv_properties.rs` and `tests/prefix_properties.rs`; see
+//! [`assert_radix_invariants`](KvManager::assert_radix_invariants)):
+//! * a block's refcount equals its holders (request tables + node pins),
 //! * `allocated() + available() == capacity()` always,
+//! * node block runs are disjoint; children attach only at a parent's
+//!   full-block end; a node with a partial tail block is childless,
 //! * releasing a free block (double free) panics,
 //! * `fork_block` never hands out a block whose refcount exceeds one.
+
+use crate::util::mix64;
 
 /// Block size that makes one block cover any sequence — the seed's
 /// whole-request slot semantics.
 pub const DEGENERATE_BLOCK: usize = usize::MAX;
 
-/// A resident, pinned prefix block-run in the prefix index.
+/// Entries a [`ResidencyDigest`] can carry. Chosen so a digest stays one
+/// cache line-ish and copies freely through dispatch barriers; deepest
+/// entries win the cut because they encode the largest shareable spans.
+pub const DIGEST_CAP: usize = 16;
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Synthetic content path for a whole-template `{id, len}` prefix spec:
+/// a deterministic hash chain seeded by the template hash. Nested by
+/// construction — `derived_path(h, a)` is a prefix of `derived_path(h, b)`
+/// for `a <= b` — so the `{id,len}` form lowers to a single-path radix
+/// tree and the router can score template requests against digests
+/// without a real content path.
+pub fn derived_path(hash: u64, blocks: usize) -> Vec<u64> {
+    let mut h = hash;
+    (0..blocks)
+        .map(|_| {
+            h = mix64(h ^ GOLDEN);
+            h
+        })
+        .collect()
+}
+
+/// One block-aligned span of a resident prefix chain.
 #[derive(Clone, Debug)]
-struct PrefixEntry {
-    /// Prefix identity (template hash).
-    hash: u64,
-    /// Prompt tokens the run covers.
-    tokens: usize,
-    /// The block run, in table order; the last block may be partial.
+struct PrefixNode {
+    /// Cumulative content hash at each full block boundary this node
+    /// covers, in order: `path[k]` identifies tokens
+    /// `[0, start + (k+1)·block_size)`. `path.len() == tokens /
+    /// block_size`; a partial tail block has a `blocks` entry but no path
+    /// entry.
+    path: Vec<u64>,
+    /// The owned block run, table order; the last block may be partial.
+    /// Every block carries one index-owned reference (the pin).
     blocks: Vec<usize>,
+    /// Token offset where this node's span begins (block-aligned; equals
+    /// the parent chain's full-block token count).
+    start: usize,
+    /// Tokens this node covers from `start`.
+    tokens: usize,
+    parent: Option<usize>,
+    children: Vec<usize>,
     /// False until the registrant's prefill has actually computed the
-    /// covered tokens ([`KvManager::mark_prefix_ready`], driven by the
-    /// shared state transition). Hits gate on this: KV that has not been
-    /// produced yet cannot serve anyone — registration at admission only
-    /// reserves and indexes the run.
+    /// covered tokens. Hits gate on this: KV that has not been produced
+    /// yet cannot serve anyone — registration only reserves and indexes.
     ready: bool,
-    /// Prompt tokens the (re-)registrant's prefill has computed into the
-    /// run so far ([`KvManager::note_prefix_fill`]). Waiters compare this
-    /// across admission attempts: a fill that stops advancing means the
-    /// registrant stalled, and bounded prefix-waits degrade the waiter to
-    /// a full-price miss instead of blocking forever.
+    /// Tokens of this node's span the filler has computed so far
+    /// (node-relative). Waiters compare the chain total across admission
+    /// attempts: a fill that stops advancing means the registrant
+    /// stalled, and bounded prefix-waits degrade the waiter to the
+    /// deepest ready match instead of blocking forever.
     filled: usize,
-    /// Bumped whenever the request filling this run is preempted mid-fill
-    /// ([`KvManager::note_prefix_filler_preempted`]) — waiters count the
-    /// bump as an immediate stall tick even if the fill also advanced in
-    /// the same interval.
+    /// Bumped whenever the request filling this span is preempted
+    /// mid-fill — waiters count the bump as an immediate stall tick even
+    /// if the fill also advanced in the same interval.
     stall_events: u64,
     /// LRU stamp: the allocator's logical clock at registration and at
-    /// every servable hit ([`KvManager::touch_prefix`]). Cold-prefix
-    /// reclaim evicts the smallest stamp first.
+    /// every servable hit. Cold-subtree reclaim evicts the smallest
+    /// stamp first, leaf-first.
     last_touch: u64,
+}
+
+impl PrefixNode {
+    /// True when the node ends on a partial block — such nodes are
+    /// terminal content and never take children.
+    fn has_partial_tail(&self, block_size: usize) -> bool {
+        self.tokens > self.path.len() * block_size
+    }
+}
+
+/// Longest resident match of a content path against the radix tree.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PathMatch {
+    /// Tokens servable RIGHT NOW: the contiguous-from-root span of READY
+    /// matched blocks. A sharer can skip exactly these.
+    pub ready_tokens: usize,
+    /// The block run backing `ready_tokens` (all full blocks, table
+    /// order) — what a sharer's table starts from.
+    pub ready_run: Vec<usize>,
+    /// Total matched depth in tokens, ready or not. `attach_tokens >
+    /// ready_tokens` means the frontier node is still being filled by its
+    /// registrant (a wait candidate); extensions registered past
+    /// `attach_tokens` grow the tree.
+    pub attach_tokens: usize,
+}
+
+/// A replica's resident-prefix summary for the router: up to
+/// [`DIGEST_CAP`] `(cumulative block hash, token depth)` entries drawn
+/// from the READY tree, deepest-first. `Copy` so dispatch barriers can
+/// refresh per-replica views without allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResidencyDigest {
+    len: u8,
+    entries: [(u64, u32); DIGEST_CAP],
+}
+
+impl Default for ResidencyDigest {
+    fn default() -> Self {
+        ResidencyDigest { len: 0, entries: [(0, 0); DIGEST_CAP] }
+    }
+}
+
+impl ResidencyDigest {
+    pub fn entries(&self) -> &[(u64, u32)] {
+        &self.entries[..self.len as usize]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Deepest token depth at which any digest entry appears in `path` —
+    /// the replica demonstrably holds (at least) that many of the
+    /// request's leading tokens ready. 0 when nothing matches. Because
+    /// path entries are cumulative content hashes, one matching entry
+    /// certifies the whole token prefix below it.
+    pub fn coverage(&self, path: &[u64]) -> u32 {
+        let mut best = 0u32;
+        for &(h, depth) in self.entries() {
+            if depth > best && path.contains(&h) {
+                best = depth;
+            }
+        }
+        best
+    }
+
+    /// Build a digest from explicit `(hash, depth)` entries (router tests
+    /// and adapters; truncates at [`DIGEST_CAP`]).
+    pub fn from_entries(entries: &[(u64, u32)]) -> Self {
+        let mut d = ResidencyDigest::default();
+        for &e in entries.iter().take(DIGEST_CAP) {
+            d.entries[d.len as usize] = e;
+            d.len += 1;
+        }
+        d
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -93,14 +233,20 @@ pub struct KvManager {
     num_blocks: usize,
     /// Free block ids (stack; lowest ids on top).
     free: Vec<usize>,
-    /// ref_count[block] = live references (request tables + prefix pins);
+    /// ref_count[block] = live references (request tables + node pins);
     /// 0 while free.
     ref_count: Vec<u32>,
-    /// Registered prefix runs, registration order. Few templates are live
-    /// at once, so linear lookup beats a map here. Reclaim order is LRU by
-    /// `last_touch`, not list position.
-    prefixes: Vec<PrefixEntry>,
-    /// Logical clock for the prefix LRU stamps.
+    /// Radix-node slab; `None` slots are free (recycled via
+    /// `free_nodes`). Few templates are live at once, so linear scans
+    /// beat maps here — the tree bounds *matching* work, not slab walks.
+    nodes: Vec<Option<PrefixNode>>,
+    free_nodes: Vec<usize>,
+    /// Tree roots (nodes with `start == 0`), registration order.
+    roots: Vec<usize>,
+    /// `hash → terminal node` of each registered prefix: the chain from
+    /// a root to the terminal covers exactly that prefix's tokens.
+    by_hash: Vec<(u64, usize)>,
+    /// Logical clock for the LRU stamps.
     touch_clock: u64,
 }
 
@@ -119,7 +265,10 @@ impl KvManager {
             num_blocks,
             free: (0..num_blocks).rev().collect(),
             ref_count: vec![0; num_blocks],
-            prefixes: Vec::new(),
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: Vec::new(),
+            by_hash: Vec::new(),
             touch_clock: 0,
         }
     }
@@ -158,49 +307,230 @@ impl KvManager {
         }
     }
 
-    /// Position of the LRU-coldest *cold* prefix: registered but with no
-    /// live sharer (the pin is the only reference on every block), least
-    /// recently hit first (`last_touch`; registration counts as a touch).
-    /// The PR-3 policy reclaimed oldest-registered first, which could
-    /// evict a template still taking hits while an abandoned one stayed
-    /// resident.
-    fn cold_prefix_pos(&self) -> Option<usize> {
-        self.prefixes
-            .iter()
-            .enumerate()
-            .filter(|(_, p)| p.blocks.iter().all(|&b| self.ref_count[b] == 1))
-            .min_by_key(|(_, p)| p.last_touch)
-            .map(|(i, _)| i)
+    // ---- node slab plumbing -------------------------------------------
+
+    fn node(&self, i: usize) -> &PrefixNode {
+        self.nodes[i].as_ref().expect("dead radix node")
     }
 
-    /// Blocks recoverable by evicting cold prefixes.
-    pub fn reclaimable(&self) -> usize {
-        self.reclaimable_excluding(None)
+    fn node_mut(&mut self, i: usize) -> &mut PrefixNode {
+        self.nodes[i].as_mut().expect("dead radix node")
     }
 
-    /// [`reclaimable`](Self::reclaimable), excluding the prefix `hash` —
-    /// an admission gate about to SHARE that run must not count its
-    /// blocks as funds (sharing pins them hot).
-    pub fn reclaimable_excluding(&self, hash: Option<u64>) -> usize {
-        self.prefixes
-            .iter()
-            .filter(|p| Some(p.hash) != hash)
-            .filter(|p| p.blocks.iter().all(|&b| self.ref_count[b] == 1))
-            .map(|p| p.blocks.len())
-            .sum()
-    }
-
-    /// Evict the oldest cold prefix, freeing its pinned blocks. Callers
-    /// guarantee one exists.
-    fn reclaim_one_cold(&mut self) {
-        let pos = self.cold_prefix_pos().expect("reclaim without a cold prefix");
-        let entry = self.prefixes.remove(pos);
-        for b in entry.blocks {
-            self.release(b);
+    fn alloc_node(&mut self, n: PrefixNode) -> usize {
+        if let Some(i) = self.free_nodes.pop() {
+            self.nodes[i] = Some(n);
+            i
+        } else {
+            self.nodes.push(Some(n));
+            self.nodes.len() - 1
         }
     }
 
-    /// Allocate one block, lowest-index first, evicting a cold prefix if
+    fn live_nodes(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.nodes.len()).filter(|&i| self.nodes[i].is_some())
+    }
+
+    fn hash_node(&self, hash: u64) -> Option<usize> {
+        self.by_hash.iter().find(|&&(h, _)| h == hash).map(|&(_, i)| i)
+    }
+
+    /// True when some registered hash terminates at node `i` — terminal
+    /// nodes never auto-ready on fill (the explicit
+    /// [`mark_prefix_ready`](Self::mark_prefix_ready) from the state
+    /// transition is what flips a whole registration servable, exactly as
+    /// the flat index behaved).
+    fn is_terminal(&self, i: usize) -> bool {
+        self.by_hash.iter().any(|&(_, t)| t == i)
+    }
+
+    /// Root-first chain of nodes ending at `i`.
+    fn chain_of(&self, i: usize) -> Vec<usize> {
+        let mut chain = vec![i];
+        let mut cur = i;
+        while let Some(p) = self.node(cur).parent {
+            chain.push(p);
+            cur = p;
+        }
+        chain.reverse();
+        chain
+    }
+
+    /// Unlink node `i` from its parent/roots and free its slab slot. The
+    /// caller has already dealt with its blocks and children.
+    fn detach_node(&mut self, i: usize) {
+        match self.node(i).parent {
+            Some(p) => self.node_mut(p).children.retain(|&c| c != i),
+            None => self.roots.retain(|&r| r != i),
+        }
+        self.nodes[i] = None;
+        self.free_nodes.push(i);
+    }
+
+    /// Walk `path` from the roots: the matched chain as `(node,
+    /// matched path entries)`, root-first. Stops at the first divergence,
+    /// exhausted path, or partial-tail node.
+    fn walk_path(&self, path: &[u64]) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        let mut cands: &[usize] = &self.roots;
+        while pos < path.len() {
+            let Some(&next) =
+                cands.iter().find(|&&i| self.node(i).path.first() == Some(&path[pos]))
+            else {
+                break;
+            };
+            let n = self.node(next);
+            let m = n
+                .path
+                .iter()
+                .zip(path[pos..].iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            out.push((next, m));
+            pos += m;
+            if m < n.path.len() {
+                break;
+            }
+            cands = &n.children;
+        }
+        out
+    }
+
+    /// Split node `i` so it ends exactly at `m` full blocks, returning
+    /// the head (= `i`). The remainder — later path entries and/or the
+    /// partial tail — moves to a fresh child that inherits `i`'s
+    /// children, terminal mappings, unfilled progress and stall events.
+    /// No-op when `i` already ends at `m` full blocks. Path entries are
+    /// absolute cumulative hashes, so the tail needs no rebasing.
+    fn split_node_at(&mut self, i: usize, m: usize) -> usize {
+        let bs = self.block_size;
+        let (plen, tokens, start) = {
+            let n = self.node(i);
+            (n.path.len(), n.tokens, n.start)
+        };
+        assert!(m > 0 && m <= plen, "split point {m} outside node path {plen}");
+        if m == plen && tokens == plen * bs {
+            return i;
+        }
+        let head = self.node_mut(i);
+        let tail_path = head.path.split_off(m);
+        let tail_blocks = head.blocks.split_off(m);
+        let tail_tokens = tokens - m * bs;
+        head.tokens = m * bs;
+        let head_filled = head.filled.min(m * bs);
+        let tail_filled = head.filled - head_filled;
+        head.filled = head_filled;
+        let tail_stalls = std::mem::take(&mut head.stall_events);
+        let tail_children = std::mem::take(&mut head.children);
+        let (ready, touch) = (head.ready, head.last_touch);
+        // A fully-filled interior head is servable even if its (moved)
+        // terminal is not: the fill wrote its KV into pinned blocks.
+        if !head.ready && head.filled == head.tokens {
+            head.ready = true;
+        }
+        let tail = self.alloc_node(PrefixNode {
+            path: tail_path,
+            blocks: tail_blocks,
+            start: start + m * bs,
+            tokens: tail_tokens,
+            parent: Some(i),
+            children: tail_children,
+            ready,
+            filled: tail_filled,
+            stall_events: tail_stalls,
+            last_touch: touch,
+        });
+        for c in self.node(tail).children.clone() {
+            self.node_mut(c).parent = Some(tail);
+        }
+        self.node_mut(i).children.push(tail);
+        for e in self.by_hash.iter_mut() {
+            if e.1 == i {
+                e.1 = tail;
+            }
+        }
+        i
+    }
+
+    // ---- reclaim ------------------------------------------------------
+
+    /// LRU-coldest cold **leaf**: a childless node with no reference
+    /// besides the index pin on any of its own blocks. Nodes with live
+    /// descendants or sharers are never victims — cold subtrees drain
+    /// bottom-up as each eviction exposes the parent.
+    fn cold_leaf_pos(&self) -> Option<usize> {
+        self.live_nodes()
+            .filter(|&i| {
+                let n = self.node(i);
+                n.children.is_empty() && n.blocks.iter().all(|&b| self.ref_count[b] == 1)
+            })
+            .min_by_key(|&i| self.node(i).last_touch)
+    }
+
+    /// Blocks recoverable by evicting cold subtrees.
+    pub fn reclaimable(&self) -> usize {
+        self.reclaimable_excluding(&[])
+    }
+
+    /// [`reclaimable`](Self::reclaimable), excluding any node that owns a
+    /// block of `pinned_run` — an admission gate about to SHARE that run
+    /// must not count its blocks as funds (sharing pins them hot).
+    /// Counted as the cold **closure**: a node's blocks count only when
+    /// every descendant's do too, matching what leaf-first eviction can
+    /// actually free.
+    pub fn reclaimable_excluding(&self, pinned_run: &[usize]) -> usize {
+        let mut total = 0;
+        for &r in &self.roots {
+            self.evictable_blocks(r, pinned_run, &mut total);
+        }
+        total
+    }
+
+    /// Post-order: whether subtree `i` is fully evictable; evictable
+    /// descendants' blocks are added to `total` even under a hot parent
+    /// (leaf-first eviction frees them regardless).
+    fn evictable_blocks(&self, i: usize, pinned: &[usize], total: &mut usize) -> bool {
+        let n = self.node(i);
+        let mut all_children = true;
+        for &c in &n.children {
+            if !self.evictable_blocks(c, pinned, total) {
+                all_children = false;
+            }
+        }
+        let ok = all_children
+            && n.blocks.iter().all(|&b| self.ref_count[b] == 1)
+            && !n.blocks.iter().any(|b| pinned.contains(b));
+        if ok {
+            *total += n.blocks.len();
+        }
+        ok
+    }
+
+    /// Evict the LRU-coldest cold leaf, freeing its pinned blocks and
+    /// unmapping any hash that terminated there. Callers guarantee one
+    /// exists.
+    fn reclaim_one_cold(&mut self) {
+        let i = self.cold_leaf_pos().expect("reclaim without a cold prefix");
+        self.by_hash.retain(|&(_, t)| t != i);
+        let blocks = std::mem::take(&mut self.node_mut(i).blocks);
+        for b in blocks {
+            self.release(b);
+        }
+        self.detach_node(i);
+    }
+
+    /// Drain every cold subtree (teardown / leak audits): repeatedly
+    /// evicts cold leaves until only nodes with live sharers remain.
+    pub fn reclaim_all_cold(&mut self) {
+        while self.cold_leaf_pos().is_some() {
+            self.reclaim_one_cold();
+        }
+    }
+
+    // ---- block allocator ----------------------------------------------
+
+    /// Allocate one block, lowest-index first, evicting a cold leaf if
     /// the free list is empty. Failure changes nothing.
     pub fn alloc(&mut self) -> Option<usize> {
         if self.free.is_empty() {
@@ -215,7 +545,7 @@ impl KvManager {
         Some(block)
     }
 
-    /// Allocate `n` blocks all-or-nothing (cold prefixes are reclaimed
+    /// Allocate `n` blocks all-or-nothing (cold subtrees are reclaimed
     /// under pressure; failure changes nothing).
     pub fn alloc_n(&mut self, n: usize) -> Option<Vec<usize>> {
         if self.free.len() + self.reclaimable() < n {
@@ -301,136 +631,447 @@ impl KvManager {
         self.ref_count[block] > 1
     }
 
-    /// Register a prefix block-run under `hash`, pinning every block (one
-    /// index-owned reference) so the run stays resident while sharers come
-    /// and go. `run` must be the caller's already-allocated table head
-    /// covering exactly `tokens` prompt tokens.
+    // ---- prefix registration ------------------------------------------
+
+    /// Register a whole-template prefix block-run under `hash`, pinning
+    /// every block so the run stays resident while sharers come and go.
+    /// `run` must be the caller's already-allocated table head covering
+    /// exactly `tokens` prompt tokens. Lowers to a single-node tree on a
+    /// [`derived_path`]; re-registering a live hash is an idempotent
+    /// no-op (conversation turns can race to the same content).
     pub fn register_prefix(&mut self, hash: u64, tokens: usize, run: &[usize]) {
         assert!(!self.is_degenerate(), "prefix sharing requires a paged pool");
         assert!(tokens > 0, "registering an empty prefix");
+        if self.hash_node(hash).is_some() {
+            return;
+        }
+        let path = derived_path(hash, tokens / self.block_size);
+        self.register_path_prefix(hash, &path, 0, tokens, run);
+    }
+
+    /// Register the tail `(start_tokens, cov_tokens]` of a content path
+    /// under `hash`: the head `path[..start_tokens/bs]` must already be
+    /// resident (the caller shares it); `run` is the registrant's
+    /// already-allocated table slice covering exactly the tail. Splits
+    /// the node containing the attach point when it falls mid-node.
+    /// Idempotent when `hash` is already live.
+    pub fn register_path_prefix(
+        &mut self,
+        hash: u64,
+        path: &[u64],
+        start_tokens: usize,
+        cov_tokens: usize,
+        run: &[usize],
+    ) {
+        let bs = self.block_size;
+        assert!(!self.is_degenerate(), "prefix sharing requires a paged pool");
+        assert_eq!(start_tokens % bs, 0, "prefix tail must start block-aligned");
+        assert!(cov_tokens > start_tokens, "registering an empty prefix tail");
+        assert!(
+            start_tokens == 0 || cov_tokens / bs > start_tokens / bs,
+            "a prefix extension must cover at least one full block"
+        );
         assert_eq!(
             run.len(),
-            self.blocks_needed(tokens),
-            "prefix run does not cover its {tokens} tokens"
+            self.blocks_needed(cov_tokens - start_tokens),
+            "prefix run does not cover its tail tokens"
         );
-        assert!(self.lookup_prefix(hash).is_none(), "prefix {hash:#x} already registered");
+        if self.hash_node(hash).is_some() {
+            return;
+        }
+        let sb = start_tokens / bs;
+        let cb = cov_tokens / bs;
+        assert!(path.len() >= cb, "content path shorter than covered blocks");
+        let parent = if sb == 0 {
+            None
+        } else {
+            let walked = self.walk_path(&path[..sb]);
+            let matched: usize = walked.iter().map(|&(_, m)| m).sum();
+            assert_eq!(matched, sb, "prefix tail attach point is not resident");
+            let &(last, m) = walked.last().expect("non-empty walk");
+            Some(self.split_node_at(last, m))
+        };
         for &b in run {
             self.share(b);
         }
         self.touch_clock += 1;
-        self.prefixes.push(PrefixEntry {
-            hash,
-            tokens,
+        let idx = self.alloc_node(PrefixNode {
+            path: path[sb..cb].to_vec(),
             blocks: run.to_vec(),
+            start: start_tokens,
+            tokens: cov_tokens - start_tokens,
+            parent,
+            children: Vec::new(),
             ready: false,
             filled: 0,
             stall_events: 0,
             last_touch: self.touch_clock,
         });
+        match parent {
+            Some(p) => self.node_mut(p).children.push(idx),
+            None => self.roots.push(idx),
+        }
+        self.by_hash.push((hash, idx));
     }
 
-    /// Resident run for `hash`, ready or not: `(covered tokens, block
-    /// run)`. Always a miss on degenerate pools (a slot holds private
-    /// tokens too). Admission hits must use
-    /// [`lookup_servable`](Self::lookup_servable) — an unready run's KV
+    // ---- lookups ------------------------------------------------------
+
+    /// Longest resident match of a content path — ready coverage (with
+    /// its block run), plus total attach depth. Empty on degenerate
+    /// pools. Ready coverage is contiguous-from-root: it stops at the
+    /// first unready node even when deeper spans are ready, because a
+    /// sharer cannot skip over KV that does not exist yet.
+    pub fn lookup_path_match(&self, path: &[u64]) -> PathMatch {
+        let mut out = PathMatch::default();
+        if self.is_degenerate() {
+            return out;
+        }
+        let mut frontier_ready = true;
+        for (i, matched) in self.walk_path(path) {
+            let n = self.node(i);
+            out.attach_tokens += matched * self.block_size;
+            if frontier_ready && n.ready {
+                out.ready_tokens += matched * self.block_size;
+                out.ready_run.extend_from_slice(&n.blocks[..matched]);
+            } else {
+                frontier_ready = false;
+            }
+        }
+        out
+    }
+
+    /// Resident run for `hash`, ready or not: `(covered tokens, root-to-
+    /// terminal block run)`. Always a miss on degenerate pools (a slot
+    /// holds private tokens too). Admission hits must use
+    /// [`lookup_servable`](Self::lookup_servable) — an unready span's KV
     /// is still being computed by its registrant.
-    pub fn lookup_prefix(&self, hash: u64) -> Option<(usize, &[usize])> {
+    pub fn lookup_prefix(&self, hash: u64) -> Option<(usize, Vec<usize>)> {
         if self.is_degenerate() {
             return None;
         }
-        self.prefixes.iter().find(|p| p.hash == hash).map(|p| (p.tokens, p.blocks.as_slice()))
+        let t = self.hash_node(hash)?;
+        let term = self.node(t);
+        let cov = term.start + term.tokens;
+        let mut blocks = Vec::new();
+        for i in self.chain_of(t) {
+            blocks.extend_from_slice(&self.node(i).blocks);
+        }
+        Some((cov, blocks))
     }
 
-    /// [`lookup_prefix`](Self::lookup_prefix) restricted to READY runs —
-    /// the only ones whose KV exists and can serve a sharer.
-    pub fn lookup_servable(&self, hash: u64) -> Option<(usize, &[usize])> {
+    /// Covered tokens of `hash`'s registration without materializing the
+    /// block run — the hot-path form for coverage-only callers.
+    pub fn lookup_prefix_tokens(&self, hash: u64) -> Option<usize> {
         if self.is_degenerate() {
             return None;
         }
-        self.prefixes
-            .iter()
-            .find(|p| p.hash == hash && p.ready)
-            .map(|p| (p.tokens, p.blocks.as_slice()))
+        let t = self.hash_node(hash)?;
+        let term = self.node(t);
+        Some(term.start + term.tokens)
     }
 
-    /// True once the registrant's prefill has produced the run's KV.
+    /// [`lookup_prefix`](Self::lookup_prefix) restricted to fully-READY
+    /// chains — the only ones whose KV exists end to end and can serve a
+    /// whole-template sharer.
+    pub fn lookup_servable(&self, hash: u64) -> Option<(usize, Vec<usize>)> {
+        if self.is_degenerate() {
+            return None;
+        }
+        let t = self.hash_node(hash)?;
+        if !self.chain_of(t).iter().all(|&i| self.node(i).ready) {
+            return None;
+        }
+        self.lookup_prefix(hash)
+    }
+
+    /// True once every node on `hash`'s chain is ready.
     pub fn is_prefix_ready(&self, hash: u64) -> bool {
-        self.prefixes.iter().any(|p| p.hash == hash && p.ready)
+        match self.hash_node(hash) {
+            Some(t) => self.chain_of(t).iter().all(|&i| self.node(i).ready),
+            None => false,
+        }
     }
 
-    /// Mark `hash`'s run servable — called by the state transition when
-    /// the prefill that fills the run crosses its covered tokens.
+    /// Mark `hash`'s whole chain servable — called by the state
+    /// transition when the prefill that fills the span crosses its
+    /// covered tokens.
     pub fn mark_prefix_ready(&mut self, hash: u64) {
-        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash) {
-            p.ready = true;
+        if let Some(t) = self.hash_node(hash) {
+            for i in self.chain_of(t) {
+                self.node_mut(i).ready = true;
+            }
         }
     }
 
-    /// Registrant progress notification: the prefill filling `hash`'s run
-    /// has computed `prefilled` prompt tokens. Driven by the shared state
-    /// transition; waiters compare this across admission attempts to
-    /// detect a stalled fill. No-op once the run is ready.
+    /// Registrant progress notification: the prefill filling `hash`'s
+    /// chain has computed `prefilled` prompt tokens (absolute). Driven by
+    /// the shared state transition; waiters compare this across admission
+    /// attempts to detect a stalled fill. A NON-terminal node readies
+    /// itself when the note covers it completely — its KV now exists in
+    /// pinned blocks — while the terminal keeps waiting for the explicit
+    /// [`mark_prefix_ready`](Self::mark_prefix_ready), exactly as the
+    /// flat index behaved for whole registrations.
     pub fn note_prefix_fill(&mut self, hash: u64, prefilled: usize) {
-        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash && !p.ready) {
-            p.filled = p.filled.max(prefilled.min(p.tokens));
+        let Some(t) = self.hash_node(hash) else {
+            return;
+        };
+        for i in self.chain_of(t) {
+            let terminal = self.is_terminal(i);
+            let n = self.node_mut(i);
+            if n.ready {
+                continue;
+            }
+            let rel = prefilled.saturating_sub(n.start).min(n.tokens);
+            n.filled = n.filled.max(rel);
+            if !terminal && n.filled == n.tokens {
+                n.ready = true;
+            }
         }
     }
 
-    /// The request filling `hash`'s (unready) run was preempted: bump the
-    /// run's stall-event counter so every waiter's bounded-wait clock
-    /// ticks — even if the fill also advanced in the same interval.
+    /// The request filling `hash`'s (unready) span was preempted: bump
+    /// the terminal's stall-event counter so every waiter's bounded-wait
+    /// clock ticks — even if the fill also advanced in the same interval.
     pub fn note_prefix_filler_preempted(&mut self, hash: u64) {
-        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash && !p.ready) {
-            p.stall_events += 1;
+        if let Some(t) = self.hash_node(hash) {
+            let n = self.node_mut(t);
+            if !n.ready {
+                n.stall_events += 1;
+            }
         }
     }
 
     /// The waiter-visible progress of `hash`'s fill: `(tokens computed so
-    /// far, stall events)`. `None` when the prefix is not registered.
+    /// far — contiguous from the chain root, stall events across the
+    /// chain)`. `None` when the prefix is not registered.
     pub fn prefix_fill_state(&self, hash: u64) -> Option<(usize, u64)> {
-        self.prefixes.iter().find(|p| p.hash == hash).map(|p| (p.filled, p.stall_events))
+        let t = self.hash_node(hash)?;
+        let chain = self.chain_of(t);
+        let stalls: u64 = chain.iter().map(|&i| self.node(i).stall_events).sum();
+        let mut filled = 0;
+        for &i in &chain {
+            let n = self.node(i);
+            if n.ready {
+                filled = n.start + n.tokens;
+            } else {
+                filled = n.start + n.filled;
+                if n.filled < n.tokens {
+                    break;
+                }
+            }
+        }
+        Some((filled, stalls))
     }
 
-    /// Stamp `hash`'s run as recently used (LRU reclaim order). Admission
-    /// calls this on every share from the resident run.
+    /// Waiter-visible progress along a content path when the waiter knows
+    /// content, not the filler's hash: `(tokens computed so far —
+    /// contiguous from the root, stall events at the unready frontier)`.
+    /// The path-wait counterpart of
+    /// [`prefix_fill_state`](Self::prefix_fill_state); a request whose
+    /// wait is bound to an unready ancestor compares this across
+    /// admission attempts.
+    pub fn path_fill_state(&self, path: &[u64]) -> (usize, u64) {
+        if self.is_degenerate() {
+            return (0, 0);
+        }
+        let mut filled = 0;
+        let mut stalls = 0;
+        for (i, matched) in self.walk_path(path) {
+            let n = self.node(i);
+            if n.ready {
+                filled = n.start + matched * self.block_size;
+            } else {
+                filled = n.start + n.filled.min(matched * self.block_size);
+                stalls = n.stall_events;
+                break;
+            }
+        }
+        (filled, stalls)
+    }
+
+    /// Stamp `hash`'s chain as recently used (LRU reclaim order).
+    /// Admission calls this on every share from a resident run.
     pub fn touch_prefix(&mut self, hash: u64) {
-        self.touch_clock += 1;
-        let clock = self.touch_clock;
-        if let Some(p) = self.prefixes.iter_mut().find(|p| p.hash == hash) {
-            p.last_touch = clock;
+        match self.hash_node(hash) {
+            Some(t) => {
+                for i in self.chain_of(t) {
+                    self.touch_clock += 1;
+                    let clock = self.touch_clock;
+                    self.node_mut(i).last_touch = clock;
+                }
+            }
+            None => self.touch_clock += 1,
         }
     }
 
-    /// Drop the index pin for `hash` (manual eviction; the allocator also
-    /// reclaims cold prefixes itself under pressure). Returns whether the
-    /// prefix was registered. Blocks still referenced by live sharers stay
-    /// allocated until those sharers release.
+    /// Stamp the matched chain of a content path as recently used — the
+    /// partial-hit counterpart of [`touch_prefix`](Self::touch_prefix).
+    pub fn touch_path(&mut self, path: &[u64]) {
+        if self.is_degenerate() {
+            return;
+        }
+        let matched: Vec<usize> = self.walk_path(path).into_iter().map(|(i, _)| i).collect();
+        for i in matched {
+            self.touch_clock += 1;
+            let clock = self.touch_clock;
+            self.node_mut(i).last_touch = clock;
+        }
+    }
+
+    /// Drop the index mapping for `hash` (manual eviction; the allocator
+    /// also reclaims cold subtrees itself under pressure). Returns
+    /// whether the prefix was registered. Nodes still needed by OTHER
+    /// registrations or live descendants stay resident; the unpinnable
+    /// suffix of the chain is released bottom-up. Blocks still referenced
+    /// by live sharers stay allocated until those sharers release.
     pub fn evict_prefix(&mut self, hash: u64) -> bool {
-        let Some(pos) = self.prefixes.iter().position(|p| p.hash == hash) else {
+        let Some(pos) = self.by_hash.iter().position(|&(h, _)| h == hash) else {
             return false;
         };
-        let entry = self.prefixes.remove(pos);
-        for b in entry.blocks {
-            self.release(b);
+        let (_, mut i) = self.by_hash.remove(pos);
+        loop {
+            let n = self.node(i);
+            if !n.children.is_empty() || self.is_terminal(i) {
+                return true;
+            }
+            let parent = n.parent;
+            let blocks = std::mem::take(&mut self.node_mut(i).blocks);
+            for b in blocks {
+                self.release(b);
+            }
+            self.detach_node(i);
+            match parent {
+                Some(p) => i = p,
+                None => return true,
+            }
         }
-        true
     }
 
-    /// Number of registered (resident) prefixes.
+    /// Number of registered prefixes (live hash mappings).
     pub fn num_prefixes(&self) -> usize {
-        self.prefixes.len()
+        self.by_hash.len()
     }
 
-    /// Iterate registered prefixes as `(hash, tokens, run)` — metrics and
-    /// the property suites introspect pins through this.
-    pub fn registered_prefixes(&self) -> impl Iterator<Item = (u64, usize, &[usize])> {
-        self.prefixes.iter().map(|p| (p.hash, p.tokens, p.blocks.as_slice()))
+    /// Iterate resident spans as `(hash, tokens, own block run)` — one
+    /// item per NODE (terminal nodes report their registered hash,
+    /// interior nodes their deepest cumulative path hash), so metrics and
+    /// the property suites see every pinned block exactly once.
+    pub fn registered_prefixes(&self) -> impl Iterator<Item = (u64, usize, &[usize])> + '_ {
+        self.live_nodes().map(move |i| {
+            let n = self.node(i);
+            let hash = self
+                .by_hash
+                .iter()
+                .find(|&&(_, t)| t == i)
+                .map(|&(h, _)| h)
+                .or_else(|| n.path.last().copied())
+                .unwrap_or(i as u64);
+            (hash, n.tokens, n.blocks.as_slice())
+        })
     }
 
-    /// Tokens of KV content held resident by registered prefix runs
-    /// (counted once each, however many sharers reference them).
+    /// The registered hashes (terminal mappings) — teardown loops evict
+    /// through this instead of guessing node identities.
+    pub fn registered_hashes(&self) -> Vec<u64> {
+        self.by_hash.iter().map(|&(h, _)| h).collect()
+    }
+
+    /// Tokens of KV content held resident by the prefix tree (counted
+    /// once each, however many sharers reference them).
     pub fn resident_prefix_tokens(&self) -> usize {
-        self.prefixes.iter().map(|p| p.tokens).sum()
+        self.live_nodes().map(|i| self.node(i).tokens).sum()
+    }
+
+    /// The replica's resident-prefix summary for the router: READY nodes
+    /// only (descent stops at the first unready node — deeper spans are
+    /// unreachable for a sharer anyway), deepest-first, capped at
+    /// [`DIGEST_CAP`]. Ties break on hash for determinism.
+    pub fn residency_digest(&self) -> ResidencyDigest {
+        let mut cands: Vec<(u64, u32)> = Vec::new();
+        if !self.is_degenerate() {
+            let mut stack = self.roots.clone();
+            while let Some(i) = stack.pop() {
+                let n = self.node(i);
+                if !n.ready {
+                    continue;
+                }
+                if let Some(&h) = n.path.last() {
+                    cands.push((h, (n.start + n.path.len() * self.block_size) as u32));
+                }
+                stack.extend_from_slice(&n.children);
+            }
+        }
+        cands.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut d = ResidencyDigest::default();
+        for &(h, depth) in cands.iter().take(DIGEST_CAP) {
+            d.entries[d.len as usize] = (h, depth);
+            d.len += 1;
+        }
+        d
+    }
+
+    /// Structural radix invariants, loud. The property suites call this
+    /// after every engine step; unit tests call it around mutations.
+    pub fn assert_radix_invariants(&self) {
+        if self.is_degenerate() {
+            assert!(self.nodes.iter().all(|n| n.is_none()), "degenerate pools index nothing");
+            return;
+        }
+        let bs = self.block_size;
+        let mut owned: Vec<usize> = Vec::new();
+        for i in self.live_nodes() {
+            let n = self.node(i);
+            assert!(n.tokens > 0, "node {i} covers no tokens");
+            assert_eq!(n.start % bs, 0, "node {i} start not block-aligned");
+            assert_eq!(n.path.len(), n.tokens / bs, "node {i} path/token mismatch");
+            assert_eq!(
+                n.blocks.len(),
+                self.blocks_needed(n.tokens),
+                "node {i} run does not cover its tokens"
+            );
+            assert!(n.filled <= n.tokens, "node {i} overfilled");
+            if n.has_partial_tail(bs) {
+                assert!(n.children.is_empty(), "partial-tail node {i} has children");
+            }
+            for &c in &n.children {
+                let child = self.node(c);
+                assert_eq!(child.parent, Some(i), "child {c} disowns parent {i}");
+                assert_eq!(
+                    child.start,
+                    n.start + n.tokens,
+                    "child {c} does not start at parent {i}'s end"
+                );
+            }
+            match n.parent {
+                Some(p) => assert!(
+                    self.node(p).children.contains(&i),
+                    "node {i} not in parent {p}'s children"
+                ),
+                None => {
+                    assert_eq!(n.start, 0, "root {i} starts past 0");
+                    assert!(self.roots.contains(&i), "orphan root {i}");
+                }
+            }
+            for &b in &n.blocks {
+                assert!(self.ref_count[b] >= 1, "node {i} owns free block {b}");
+                owned.push(b);
+            }
+        }
+        let total = owned.len();
+        owned.sort_unstable();
+        owned.dedup();
+        assert_eq!(owned.len(), total, "a block is owned by two radix nodes");
+        for &(h, t) in &self.by_hash {
+            assert!(self.nodes[t].is_some(), "hash {h:#x} maps to a dead node");
+        }
+        // every live node is reachable from the roots
+        let mut reach = 0usize;
+        let mut stack = self.roots.clone();
+        while let Some(i) = stack.pop() {
+            reach += 1;
+            stack.extend_from_slice(&self.node(i).children);
+        }
+        assert_eq!(reach, self.live_nodes().count(), "unreachable radix nodes");
     }
 
     pub fn is_allocated(&self, block: usize) -> bool {
@@ -680,11 +1321,13 @@ mod tests {
         assert!(kv.lookup_prefix(7).is_none());
         let run = kv.alloc_n(3).unwrap(); // covers 40 tokens (partial last)
         kv.register_prefix(7, 40, &run);
+        kv.assert_radix_invariants();
         assert_eq!(kv.num_prefixes(), 1);
         assert_eq!(kv.resident_prefix_tokens(), 40);
         let (tokens, resident) = kv.lookup_prefix(7).unwrap();
         assert_eq!(tokens, 40);
-        assert_eq!(resident, &run[..]);
+        assert_eq!(resident, run);
+        assert_eq!(kv.lookup_prefix_tokens(7), Some(40));
         // a freshly registered run is indexed but NOT servable: its KV is
         // still being computed by the registrant
         assert!(!kv.is_prefix_ready(7));
@@ -692,6 +1335,9 @@ mod tests {
         kv.mark_prefix_ready(7);
         assert!(kv.is_prefix_ready(7));
         assert_eq!(kv.lookup_servable(7).unwrap().0, 40);
+        // re-registration is an idempotent no-op, not a panic
+        kv.register_prefix(7, 40, &run);
+        assert_eq!(kv.num_prefixes(), 1);
         // the registrant releases; the pin keeps the run resident
         kv.release_seq(run.clone());
         assert!(kv.lookup_prefix(7).is_some());
@@ -700,6 +1346,7 @@ mod tests {
         assert!(!kv.evict_prefix(7));
         assert!(kv.lookup_servable(7).is_none());
         assert_eq!(kv.available(), 8);
+        kv.assert_radix_invariants();
     }
 
     #[test]
@@ -835,6 +1482,8 @@ mod tests {
     fn degenerate_pools_never_hit_the_prefix_index() {
         let kv = KvManager::new(4);
         assert!(kv.lookup_prefix(0).is_none());
+        assert!(kv.lookup_path_match(&[1, 2, 3]).ready_run.is_empty());
+        assert!(kv.residency_digest().is_empty());
     }
 
     #[test]
@@ -876,5 +1525,210 @@ mod tests {
         kv.release_seq(b);
         assert!(kv.evict_prefix(9));
         assert_eq!(kv.available(), 8);
+    }
+
+    // ---- radix-tree specific tests ------------------------------------
+
+    /// A shared content path: template B diverges from template A after 2
+    /// of A's 4 blocks. Registering B's tail splits A's node, B shares
+    /// A's ready head, and both templates stay fully resident.
+    #[test]
+    fn partial_match_splits_the_node_and_shares_the_head() {
+        let mut kv = KvManager::paged(16, 16);
+        let mut path_a = vec![101, 102, 103, 104];
+        let run_a = kv.alloc_n(4).unwrap();
+        kv.register_path_prefix(0xA, &path_a, 0, 64, &run_a);
+        kv.mark_prefix_ready(0xA);
+        kv.assert_radix_invariants();
+        // B agrees on blocks 0..2, then diverges
+        let path_b = vec![101, 102, 203, 204];
+        let m = kv.lookup_path_match(&path_b);
+        assert_eq!(m.ready_tokens, 32, "longest resident match is 2 blocks");
+        assert_eq!(m.attach_tokens, 32);
+        assert_eq!(m.ready_run, &run_a[..2]);
+        // B shares the head and registers its private tail
+        let shared = kv.share_seq(&m.ready_run);
+        let run_b = kv.alloc_n(2).unwrap();
+        kv.register_path_prefix(0xB, &path_b, 32, 64, &run_b);
+        kv.assert_radix_invariants();
+        assert_eq!(kv.num_prefixes(), 2);
+        // the split kept A's full chain intact and ready
+        let (cov_a, blocks_a) = kv.lookup_servable(0xA).expect("A stays servable");
+        assert_eq!(cov_a, 64);
+        assert_eq!(blocks_a, run_a);
+        // B's chain = shared head + private tail, unready until marked
+        assert!(kv.lookup_servable(0xB).is_none());
+        kv.mark_prefix_ready(0xB);
+        let (cov_b, blocks_b) = kv.lookup_servable(0xB).unwrap();
+        assert_eq!(cov_b, 64);
+        assert_eq!(blocks_b[..2], run_a[..2]);
+        assert_eq!(blocks_b[2..], run_b[..]);
+        // the head blocks are counted once but pinned by one node only
+        assert_eq!(kv.allocated(), 6, "4 A blocks + 2 B tail blocks");
+        // both full paths now match end to end
+        path_a.push(999); // longer query than residency
+        assert_eq!(kv.lookup_path_match(&path_a).ready_tokens, 64);
+        assert_eq!(kv.lookup_path_match(&path_b).ready_tokens, 64);
+        kv.release_seq(shared);
+        kv.release_seq(run_a);
+        kv.release_seq(run_b);
+        kv.assert_radix_invariants();
+    }
+
+    /// A multi-turn conversation: each turn extends its own prior path.
+    /// The chain lookup concatenates node runs; evicting the extension
+    /// hash cascades only over nodes no other registration needs.
+    #[test]
+    fn chain_extension_and_cascading_evict() {
+        let mut kv = KvManager::paged(16, 16);
+        let path = vec![11, 12, 13, 14];
+        let run0 = kv.alloc_n(2).unwrap();
+        kv.register_path_prefix(0x1, &path, 0, 32, &run0);
+        kv.mark_prefix_ready(0x1);
+        let run1 = kv.alloc_n(2).unwrap();
+        kv.register_path_prefix(0x2, &path, 32, 64, &run1);
+        kv.mark_prefix_ready(0x2);
+        kv.assert_radix_invariants();
+        let (cov, blocks) = kv.lookup_servable(0x2).unwrap();
+        assert_eq!(cov, 64);
+        assert_eq!(blocks[..2], run0[..]);
+        assert_eq!(blocks[2..], run1[..]);
+        kv.release_seq(run0);
+        kv.release_seq(run1);
+        // evicting the head hash keeps its node: the extension chains
+        // through it
+        assert!(kv.evict_prefix(0x1));
+        assert_eq!(kv.lookup_path_match(&path).ready_tokens, 64);
+        assert_eq!(kv.allocated(), 4);
+        // evicting the extension cascades: its node frees, then the now
+        // childless unmapped head frees too
+        assert!(kv.evict_prefix(0x2));
+        assert_eq!(kv.available(), 16);
+        assert_eq!(kv.num_prefixes(), 0);
+        kv.assert_radix_invariants();
+    }
+
+    /// Subtree LRU reclaim is leaf-first: a parent with live children is
+    /// never a victim, and among cold leaves the LRU-coldest goes first.
+    #[test]
+    fn subtree_reclaim_is_leaf_first_and_lru() {
+        let mut kv = KvManager::paged(8, 16);
+        let path = vec![21, 22];
+        let run_p = kv.alloc_n(1).unwrap();
+        kv.register_path_prefix(0x10, &path, 0, 16, &run_p);
+        kv.mark_prefix_ready(0x10);
+        let run_a = kv.alloc_n(1).unwrap();
+        kv.register_path_prefix(0x11, &[21, 31], 16, 32, &run_a);
+        let run_b = kv.alloc_n(1).unwrap();
+        kv.register_path_prefix(0x12, &[21, 41], 16, 32, &run_b);
+        kv.release_seq(run_p);
+        kv.release_seq(run_a);
+        kv.release_seq(run_b);
+        kv.assert_radix_invariants();
+        // everything is cold; the parent is NOT reclaimable directly but
+        // the closure counts all 3 blocks (leaf-first drain)
+        assert_eq!(kv.reclaimable(), 3);
+        // touch leaf A: leaf B becomes the LRU victim
+        kv.touch_prefix(0x11);
+        let got = kv.alloc_n(6).expect("reclaim funds the allocation");
+        assert!(kv.lookup_prefix(0x12).is_none(), "cold leaf B evicted first");
+        assert!(kv.lookup_prefix(0x11).is_some(), "touched leaf survives");
+        assert!(kv.lookup_prefix(0x10).is_some(), "parent outlives its child");
+        kv.release_seq(got);
+        kv.assert_radix_invariants();
+        kv.reclaim_all_cold();
+        assert_eq!(kv.available(), 8);
+        assert_eq!(kv.num_prefixes(), 0);
+    }
+
+    /// Ready coverage is contiguous from the root: an unready frontier
+    /// node contributes attach depth (a wait candidate) but zero ready
+    /// tokens, and nothing deeper can serve either.
+    #[test]
+    fn unready_frontier_blocks_ready_coverage() {
+        let mut kv = KvManager::paged(8, 16);
+        let path = vec![51, 52, 53];
+        let run = kv.alloc_n(3).unwrap();
+        kv.register_path_prefix(0x7, &path, 0, 48, &run);
+        let m = kv.lookup_path_match(&path);
+        assert_eq!(m.ready_tokens, 0, "unready nodes cannot serve");
+        assert!(m.ready_run.is_empty());
+        assert_eq!(m.attach_tokens, 48, "but the span is attached");
+        // fill notes ready interior spans only after a split; the whole-
+        // node terminal stays gated on the explicit mark
+        kv.note_prefix_fill(0x7, 48);
+        assert_eq!(kv.lookup_path_match(&path).ready_tokens, 0);
+        kv.mark_prefix_ready(0x7);
+        let m = kv.lookup_path_match(&path);
+        assert_eq!(m.ready_tokens, 48);
+        assert_eq!(m.ready_run, run);
+        kv.release_seq(run);
+        kv.evict_prefix(0x7);
+    }
+
+    /// The `{id,len}` lowering: a whole-template registration is
+    /// queryable through its derived content path, and the derived path
+    /// nests (longer queries still match the resident span).
+    #[test]
+    fn derived_path_matches_whole_template_registrations() {
+        let mut kv = KvManager::paged(8, 16);
+        let run = kv.alloc_n(2).unwrap();
+        kv.register_prefix(0xFEED, 32, &run);
+        kv.mark_prefix_ready(0xFEED);
+        let q = derived_path(0xFEED, 4); // deeper query than residency
+        let m = kv.lookup_path_match(&q);
+        assert_eq!(m.ready_tokens, 32);
+        assert_eq!(m.ready_run, run);
+        // nesting: the short path is a strict prefix of the long one
+        assert_eq!(derived_path(0xFEED, 2)[..], q[..2]);
+        assert_ne!(derived_path(0xBEEF, 2)[0], q[0]);
+        kv.release_seq(run);
+        kv.evict_prefix(0xFEED);
+    }
+
+    /// The residency digest reports READY nodes only, deepest-first, and
+    /// `coverage` certifies the deepest matching token depth.
+    #[test]
+    fn residency_digest_reports_ready_spans_deepest_first() {
+        let mut kv = KvManager::paged(16, 16);
+        let path = vec![61, 62, 63];
+        let run = kv.alloc_n(3).unwrap();
+        kv.register_path_prefix(0x20, &path, 0, 48, &run);
+        assert!(kv.residency_digest().is_empty(), "unready spans stay out");
+        kv.mark_prefix_ready(0x20);
+        // a divergent unready sibling under the (split) ready head
+        let run_b = kv.alloc_n(1).unwrap();
+        kv.register_path_prefix(0x21, &[61, 62, 73], 32, 48, &run_b);
+        kv.assert_radix_invariants();
+        let d = kv.residency_digest();
+        let depths: Vec<u32> = d.entries().iter().map(|&(_, t)| t).collect();
+        assert!(depths.windows(2).all(|w| w[0] >= w[1]), "deepest-first");
+        assert_eq!(d.coverage(&path), 48, "full ready path certified");
+        assert_eq!(d.coverage(&[61, 62, 73]), 32, "shared head only");
+        assert_eq!(d.coverage(&[99, 98]), 0, "foreign path misses");
+        kv.release_seq(run);
+        kv.release_seq(run_b);
+        kv.evict_prefix(0x20);
+        kv.evict_prefix(0x21);
+        kv.reclaim_all_cold();
+        assert_eq!(kv.available(), 16);
+    }
+
+    /// `reclaimable_excluding` by run: nodes owning any excluded block
+    /// contribute no funds — the admission gate must not spend blocks it
+    /// is about to share.
+    #[test]
+    fn reclaimable_excluding_pins_the_share_target() {
+        let mut kv = KvManager::paged(8, 16);
+        let run_a = kv.alloc_n(2).unwrap();
+        kv.register_prefix(1, 32, &run_a);
+        let run_b = kv.alloc_n(2).unwrap();
+        kv.register_prefix(2, 32, &run_b);
+        kv.release_seq(run_a.clone());
+        kv.release_seq(run_b);
+        assert_eq!(kv.reclaimable(), 4);
+        assert_eq!(kv.reclaimable_excluding(&run_a), 2);
+        assert_eq!(kv.reclaimable_excluding(&run_a[..1]), 2, "any owned block pins the node");
+        kv.reclaim_all_cold();
     }
 }

@@ -54,8 +54,17 @@ pub struct IterationRecord {
     /// [`InfeasiblePolicy::Reject`]: crate::coordinator::sched::admission::InfeasiblePolicy
     pub rejections: usize,
     /// Admissions served from a resident shared prefix run during this
-    /// iteration (copy-on-write prefix sharing).
+    /// iteration (copy-on-write prefix sharing). Partial hits — a radix
+    /// match shallower than the request's full tagged prefix — count
+    /// here too; `prefix_partial_hits` isolates them.
     pub prefix_hits: usize,
+    /// The subset of `prefix_hits` served from a PARTIAL radix match
+    /// (an ancestor of the request's content path, not its whole tagged
+    /// prefix).
+    pub prefix_partial_hits: usize,
+    /// Prompt tokens those partial hits skipped — with
+    /// `prefix_partial_hits` this gives the mean partial-hit depth.
+    pub prefix_partial_hit_tokens: usize,
     /// Prefix waits that degraded to a full-price miss during this
     /// iteration's admission — the registrant made no progress for the
     /// gate's bounded-wait window, or the driver demoted a wedge.
@@ -87,6 +96,8 @@ impl IterationRecord {
             swap_time: 0.0,
             rejections: 0,
             prefix_hits: 0,
+            prefix_partial_hits: 0,
+            prefix_partial_hit_tokens: 0,
             prefix_fallbacks: 0,
             prefix_wait_iters: 0,
             shared_kv_tokens: 0,
@@ -109,7 +120,8 @@ impl IterationRecord {
              \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{},\
              \"swap_time\":{:.6},\"rejections\":{},\"prefix_hits\":{},\
              \"prefix_fallbacks\":{},\"prefix_wait_iters\":{},\
-             \"shared_kv_tokens\":{}",
+             \"shared_kv_tokens\":{},\"prefix_partial_hits\":{},\
+             \"prefix_partial_hit_tokens\":{}",
             idx,
             self.started_at,
             self.elapsed,
@@ -128,6 +140,8 @@ impl IterationRecord {
             self.prefix_fallbacks,
             self.prefix_wait_iters,
             self.shared_kv_tokens,
+            self.prefix_partial_hits,
+            self.prefix_partial_hit_tokens,
         );
         match replica {
             Some(ri) => format!("{core},\"replica\":{ri}}}"),
@@ -237,8 +251,13 @@ pub struct Metrics {
     pub preemptions: usize,
     /// Total requests rejected as infeasible across the run.
     pub rejections: usize,
-    /// Total prefix-cache-hit admissions across the run.
+    /// Total prefix-cache-hit admissions across the run (partial radix
+    /// hits included).
     pub prefix_hits: usize,
+    /// Total partial-radix-hit admissions across the run.
+    pub prefix_partial_hits: usize,
+    /// Total prompt tokens served by those partial hits.
+    pub prefix_partial_hit_tokens: usize,
     /// Total prefix waits degraded to full-price misses across the run
     /// (bounded-wait expiry + wedge demotion).
     pub prefix_fallbacks: usize,
@@ -272,6 +291,8 @@ impl Metrics {
         self.preemptions += rec.preemptions;
         self.rejections += rec.rejections;
         self.prefix_hits += rec.prefix_hits;
+        self.prefix_partial_hits += rec.prefix_partial_hits;
+        self.prefix_partial_hit_tokens += rec.prefix_partial_hit_tokens;
         self.prefix_fallbacks += rec.prefix_fallbacks;
         self.prefix_wait_iterations += rec.prefix_wait_iters;
         self.time_acc += rec.elapsed;
@@ -632,12 +653,20 @@ mod tests {
         m.record(r);
         let mut r = rec(1.0, BatchShape::decode_only(&[4]), None);
         r.prefix_hits = 1;
+        r.prefix_partial_hits = 1;
+        r.prefix_partial_hit_tokens = 32;
         r.shared_kv_tokens = 64;
         r.kv_blocks_in_use = 5;
         m.record(r);
         assert_eq!(m.prefix_hits, 4);
+        assert_eq!(m.prefix_partial_hits, 1);
+        assert_eq!(m.prefix_partial_hit_tokens, 32);
         assert_eq!(m.peak_shared_kv_tokens(), 96);
         assert_eq!(m.peak_kv_blocks_in_use(), 7);
+        // the partial-hit counters land in the JSONL schema
+        let line = m.last_record().unwrap().to_jsonl(1, None);
+        assert!(line.contains("\"prefix_partial_hits\":1"));
+        assert!(line.contains("\"prefix_partial_hit_tokens\":32"));
     }
 
     #[test]

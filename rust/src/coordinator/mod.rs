@@ -39,7 +39,10 @@ pub mod step;
 pub use batch::{Batch, WorkItem};
 pub use control::{ControllerConfig, SloController, TickOutcome};
 pub use engine::{Engine, Executor, SimExecutor, StepOutcome};
-pub use kv::{KvExport, KvManager, StageKv, DEGENERATE_BLOCK};
+pub use kv::{
+    derived_path, KvExport, KvManager, PathMatch, ResidencyDigest, StageKv, DEGENERATE_BLOCK,
+    DIGEST_CAP,
+};
 pub use metrics::{IterationRecord, JsonlStream, LatencyReport, Metrics};
 pub use pool::RequestPool;
 pub use request::{Phase, PrefixWaitState, Request, RequestId};

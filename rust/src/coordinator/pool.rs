@@ -47,6 +47,15 @@ pub struct RequestPool {
     /// Prefix-cache-hit admissions since the last [`take_prefix_hits`]
     /// drain (metrics accounting).
     prefix_hit_events: usize,
+    /// Partial (radix) hits among those since the last
+    /// [`take_prefix_partial_hits`] drain: admissions served from a
+    /// longest-match of the request's content path rather than a
+    /// whole-template replay.
+    prefix_partial_hit_events: usize,
+    /// Prompt tokens served by those partial hits since the last
+    /// [`take_prefix_partial_hit_tokens`] drain (hit-depth accounting:
+    /// mean hit depth = tokens / hits).
+    prefix_partial_hit_tokens: usize,
     /// Prefix-wait fallbacks (bounded wait degraded to a full-price miss)
     /// since the last [`take_prefix_fallbacks`] drain.
     prefix_fallback_events: usize,
@@ -70,8 +79,8 @@ impl RequestPool {
 
     pub fn from_specs(specs: &[RequestSpec]) -> Self {
         let mut p = Self::new();
-        for &s in specs {
-            p.push(s);
+        for s in specs {
+            p.push(s.clone());
         }
         p
     }
@@ -246,6 +255,25 @@ impl RequestPool {
         std::mem::take(&mut self.prefix_hit_events)
     }
 
+    /// Note one PARTIAL (radix longest-match) hit serving `tokens` prompt
+    /// tokens (called by the admission gate alongside
+    /// [`note_prefix_hit`](Self::note_prefix_hit)).
+    pub fn note_prefix_partial_hit(&mut self, tokens: usize) {
+        self.prefix_partial_hit_events += 1;
+        self.prefix_partial_hit_tokens += tokens;
+    }
+
+    /// Partial-hit admissions since the last drain (metrics).
+    pub fn take_prefix_partial_hits(&mut self) -> usize {
+        std::mem::take(&mut self.prefix_partial_hit_events)
+    }
+
+    /// Prompt tokens served by partial hits since the last drain
+    /// (metrics; hit-depth statistics divide by the hit count).
+    pub fn take_prefix_partial_hit_tokens(&mut self) -> usize {
+        std::mem::take(&mut self.prefix_partial_hit_tokens)
+    }
+
     /// Note one admission attempt spent waiting on a prefix fill (called
     /// by the admission gate's wait tick).
     pub fn note_prefix_wait_tick(&mut self) {
@@ -272,11 +300,19 @@ impl RequestPool {
     ///
     /// [`Request::prefix_fallback`]: super::request::Request::prefix_fallback
     /// [`Engine::run`]: super::engine::Engine::run
-    pub fn force_prefix_fallback(&mut self, id: RequestId, now: f64) {
+    /// `ready_tokens` is the deepest READY content-path match observed at
+    /// demotion time: the fallback plan may still share that much
+    /// ([`Request::fallback_ready_tokens`]); 0 demotes to a plain
+    /// full-price miss (always the case for flat whole-template tags).
+    ///
+    /// [`Request::fallback_ready_tokens`]:
+    ///     super::request::Request::fallback_ready_tokens
+    pub fn force_prefix_fallback(&mut self, id: RequestId, now: f64, ready_tokens: usize) {
         if self.requests[id - self.base].prefix_fallback {
             return;
         }
         self.requests[id - self.base].prefix_fallback = true;
+        self.requests[id - self.base].fallback_ready_tokens = ready_tokens;
         self.finalize_prefix_wait(id, now);
         self.prefix_fallback_events += 1;
     }
@@ -687,7 +723,7 @@ mod tests {
             prompt_len: 8,
             decode_len: 2,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 4, len: 8 }),
+            prefix: Some(PrefixSpec::whole(4, 8)),
         });
         p.get_mut(0).prefix_wait = Some(PrefixWaitState {
             hash: 4,
@@ -698,7 +734,7 @@ mod tests {
         });
         assert_eq!(p.prefix_waiting_count(), 1);
         assert_eq!(p.oldest_prefix_waiter(), Some(0));
-        p.force_prefix_fallback(0, 3.5);
+        p.force_prefix_fallback(0, 3.5, 0);
         {
             let r = p.get(0);
             assert!(r.prefix_fallback);
@@ -710,7 +746,7 @@ mod tests {
         assert_eq!(p.take_prefix_fallbacks(), 1);
         assert_eq!(p.take_prefix_fallbacks(), 0, "events drain");
         // idempotent: a second force neither re-counts nor re-times
-        p.force_prefix_fallback(0, 4.0);
+        p.force_prefix_fallback(0, 4.0, 0);
         assert_eq!(p.take_prefix_fallbacks(), 0);
         p.note_prefix_wait_tick();
         assert_eq!(p.take_prefix_wait_ticks(), 1);

@@ -92,6 +92,12 @@ pub struct Request {
     /// shares, never registers) — a fallback is never worse than never
     /// having cached.
     pub prefix_fallback: bool,
+    /// Ready-match tokens observed when the wait degraded: the fallback
+    /// plan may still share up to this much of the request's content
+    /// path (the deepest READY ancestor at demotion time). 0 means the
+    /// demotion is to a plain full-price miss — always the case for
+    /// path-less (flat whole-template) tags.
+    pub fallback_ready_tokens: usize,
     /// True while this request's KV is in flight to (or just arrived at)
     /// this replica over the INTERCONNECT rather than the host link — a
     /// disaggregation handoff. The first admission after import skips the
@@ -127,6 +133,7 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: RequestId, spec: RequestSpec) -> Self {
+        let arrival = spec.arrival;
         Request {
             id,
             spec,
@@ -141,10 +148,11 @@ impl Request {
             prefix_wait_iters: 0,
             prefix_wait_time: 0.0,
             prefix_fallback: false,
+            fallback_ready_tokens: 0,
             imported: false,
             admitted: false,
             preemptions: 0,
-            arrival: spec.arrival,
+            arrival,
             admitted_at: None,
             first_token_at: None,
             completed_at: None,

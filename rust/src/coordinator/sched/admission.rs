@@ -124,13 +124,28 @@ struct SharePlan {
     fork: bool,
     /// Fresh blocks to allocate: private tail + any COW fork copy.
     new_blocks: usize,
-    /// On a miss of a prefix-tagged request: register `(hash, tokens)`
-    /// from the new table's head, pinning the run for later sharers.
-    register: Option<(u64, usize)>,
+    /// On a miss of a prefix-tagged request: register a token span of the
+    /// request's content path from the new table, pinning the run for
+    /// later sharers.
+    register: Option<RegisterPlan>,
+    /// The run is a PARTIAL (radix) match of the request's content path,
+    /// not a whole-template hit — accounted separately so hit-depth
+    /// stats can tell a conversation-turn extension from a replay.
+    partial: bool,
     /// The template's run is registered but its KV is still being
     /// computed by the registrant: this request waits (cache-aware
     /// admission) instead of paying full price for KV about to exist.
     blocked: bool,
+}
+
+/// The registration half of a [`SharePlan`]: pin `(start_tokens,
+/// cov_tokens]` of the request's content path under `hash` (`start_tokens`
+/// 0 with an empty path is the flat whole-template form).
+#[derive(Clone, Copy, Debug)]
+struct RegisterPlan {
+    hash: u64,
+    start_tokens: usize,
+    cov_tokens: usize,
 }
 
 impl Admission {
@@ -211,6 +226,7 @@ impl Admission {
             fork,
             new_blocks: total - n_run + fork as usize,
             register: None,
+            partial: false,
             blocked: false,
         })
     }
@@ -223,29 +239,47 @@ impl Admission {
         if !self.prefix_share || kv.is_degenerate() {
             return plain;
         }
-        let Some(pfx) = pool.get(id).spec.prefix else {
+        let Some(pfx) = pool.get(id).spec.prefix.as_ref() else {
             return plain;
         };
-        // a fallback victim degraded to a full-price miss: its tag is
-        // inert from then on — it never waits again, never shares, never
-        // registers. Sticky so the charge is predictable.
-        if pool.get(id).prefix_fallback {
-            return plain;
-        }
         // never cover the full prompt: the final prefill chunk must run to
         // produce the request's first output token
         let cap = pool.get(id).spec.prompt_len.saturating_sub(1);
         let bs = kv.block_size();
+        // a fallback victim demoted out of its wait: its tag covers at
+        // most the ready match it demoted to — it never waits again and
+        // never registers. Sticky so the charge is predictable; a
+        // path-less (flat) fallback stays a full-price miss forever.
+        if pool.get(id).prefix_fallback {
+            let want = pool.get(id).fallback_ready_tokens.min(cap);
+            if want < bs || pfx.path.is_empty() {
+                return plain;
+            }
+            let m = kv.lookup_path_match(&pfx.path[..(want / bs).min(pfx.path.len())]);
+            let share = m.ready_tokens.min(want);
+            if share == 0
+                || self.sharer_lifetime_need(kv, &pool.get(id).spec, share) > kv.capacity()
+            {
+                return plain;
+            }
+            return match Self::share_from_run(kv, &m.ready_run, share, cap, total, true) {
+                Some(mut p) => {
+                    p.partial = true;
+                    p
+                }
+                None => plain,
+            };
+        }
         if let Some((tokens, run)) = kv.lookup_servable(pfx.id) {
             // a hit that could never COMPLETE as a sharer — the pinned run
             // (which this sharer's own table keeps resident) plus its
             // private peak exceeds the pool — pays full price instead of
             // livelocking through an endless grow/preempt/resume cycle
-            if self.sharer_lifetime_need(kv, pool.get(id).spec, tokens) > kv.capacity() {
+            if self.sharer_lifetime_need(kv, &pool.get(id).spec, tokens) > kv.capacity() {
                 return plain;
             }
             // servable hit: share the resident head, skip its compute
-            Self::share_from_run(kv, run, tokens, cap, total, true).unwrap_or(plain)
+            Self::share_from_run(kv, &run, tokens, cap, total, true).unwrap_or(plain)
         } else if let Some((tokens, run)) = kv.lookup_prefix(pfx.id) {
             // registered but not yet computed (the fill is in flight or
             // its filler is swapped out).
@@ -264,7 +298,7 @@ impl Admission {
                 // preempted mid-fill could never ready its run and every
                 // fresh same-template arrival would wait forever). No
                 // compute skip: the fill resumes for real.
-                Self::share_from_run(kv, run, tokens, cap, total, false).unwrap_or(plain)
+                Self::share_from_run(kv, &run, tokens, cap, total, false).unwrap_or(plain)
             } else {
                 // fresh same-template arrivals WAIT for the in-flight
                 // fill instead of paying full price for KV about to
@@ -272,17 +306,75 @@ impl Admission {
                 // memory gate: a waiting head holds the queue.
                 SharePlan { blocked: true, ..plain }
             }
+        } else if !pfx.path.is_empty() {
+            // content-path miss: share the longest resident READY match
+            // from the radix tree, register the uncovered tail under this
+            // request's own hash, and wait (bounded) when a deeper
+            // ancestor's fill is still in flight.
+            let cov = pfx.len.min(cap);
+            let kb = (cov / bs).min(pfx.path.len());
+            if kb == 0 {
+                return plain; // sub-block prefixes are never cached
+            }
+            let m = kv.lookup_path_match(&pfx.path[..kb]);
+            let prefilled = pool.get(id).prefilled;
+            if m.attach_tokens > m.ready_tokens && prefilled == 0 {
+                // the wait binds to the deepest unready ancestor: its
+                // fill is in flight, so this request waits like a
+                // same-template arrival instead of paying for KV about
+                // to exist
+                return SharePlan { blocked: true, ..plain };
+            }
+            if m.ready_tokens > 0
+                && self.sharer_lifetime_need(kv, &pool.get(id).spec, m.ready_tokens)
+                    > kv.capacity()
+            {
+                return plain;
+            }
+            // the tail (ready, cov] registers only when it attaches
+            // exactly at the ready frontier (an unready sibling span
+            // there belongs to its own in-flight registrant) and covers
+            // at least one new full block
+            let can_register = m.attach_tokens == m.ready_tokens && kb > m.ready_tokens / bs;
+            let n_run = m.ready_tokens / bs;
+            if n_run == 0 && !can_register {
+                return plain;
+            }
+            let fork = can_register && cov % bs != 0;
+            SharePlan {
+                shared_head: if can_register {
+                    kv.blocks_needed(cov) - fork as usize
+                } else {
+                    n_run
+                },
+                shared_tokens: if can_register { cov - cov % bs } else { m.ready_tokens },
+                skip_tokens: if prefilled == 0 { m.ready_tokens } else { 0 },
+                fork,
+                new_blocks: total - n_run + fork as usize,
+                register: if can_register {
+                    Some(RegisterPlan {
+                        hash: pfx.id,
+                        start_tokens: m.ready_tokens,
+                        cov_tokens: cov,
+                    })
+                } else {
+                    None
+                },
+                partial: n_run > 0,
+                blocked: false,
+                run: m.ready_run,
+            }
         } else {
-            // miss: admit normally, then register the table head as the
-            // template's resident run. Content contract: the registrant
-            // prefills every COVERED token (1..=cov) into the pinned run
-            // in place — including the partial last block — and its OWN
-            // suffix tokens go into the +1 COW fork taken at admission,
-            // so the pinned partial always ends up holding exactly the
-            // prefix content sharers later fork-copy from. Nobody reads
-            // the run before the fill completes (readiness gate).
-            // Sub-block prefixes are never cached (no full block to
-            // share).
+            // flat miss: admit normally, then register the table head as
+            // the template's resident run. Content contract: the
+            // registrant prefills every COVERED token (1..=cov) into the
+            // pinned run in place — including the partial last block — and
+            // its OWN suffix tokens go into the +1 COW fork taken at
+            // admission, so the pinned partial always ends up holding
+            // exactly the prefix content sharers later fork-copy from.
+            // Nobody reads the run before the fill completes (readiness
+            // gate). Sub-block prefixes are never cached (no full block
+            // to share).
             let cov = pfx.len.min(cap);
             if cov < bs {
                 return plain;
@@ -295,7 +387,8 @@ impl Admission {
                 skip_tokens: 0,
                 fork,
                 new_blocks: total + fork as usize,
-                register: Some((pfx.id, cov)),
+                register: Some(RegisterPlan { hash: pfx.id, start_tokens: 0, cov_tokens: cov }),
+                partial: false,
                 blocked: false,
             }
         }
@@ -320,7 +413,7 @@ impl Admission {
     /// the watermark, whichever binds. The watermark only gates ADMISSION
     /// headroom, not the peak: decode growth past admission is allowed to
     /// run the pool to zero free blocks.
-    fn sharer_lifetime_need(&self, kv: &KvManager, spec: RequestSpec, cov_tokens: usize) -> usize {
+    fn sharer_lifetime_need(&self, kv: &KvManager, spec: &RequestSpec, cov_tokens: usize) -> usize {
         let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
         let cov = cov_tokens.min(spec.prompt_len.saturating_sub(1));
         let n_run = kv.blocks_needed(cov);
@@ -354,16 +447,27 @@ impl Admission {
     /// panic for a request that only ever fit WITH the cache.
     pub fn is_feasible(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> bool {
         let r = pool.get(id);
-        let spec = r.spec;
+        let spec = &r.spec;
         let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
         let lifetime = kv.blocks_needed(peak.max(1));
         if lifetime.saturating_add(self.watermark_blocks) <= kv.capacity() {
             return true; // feasible at full price, cache or no cache
         }
         if self.prefix_share && !kv.is_degenerate() && !r.prefix_fallback {
-            if let Some(pfx) = spec.prefix {
-                if let Some((tokens, _)) = kv.lookup_prefix(pfx.id) {
+            if let Some(pfx) = spec.prefix.as_ref() {
+                if let Some(tokens) = kv.lookup_prefix_tokens(pfx.id) {
                     return self.sharer_lifetime_need(kv, spec, tokens) <= kv.capacity();
+                }
+                // a READY radix match of the content path rescues too —
+                // the sharer pins exactly that run, so only the private
+                // remainder counts against the pool
+                let cap = spec.prompt_len.saturating_sub(1);
+                let kb = (pfx.len.min(cap) / kv.block_size()).min(pfx.path.len());
+                if kb > 0 {
+                    let ready = kv.lookup_path_match(&pfx.path[..kb]).ready_tokens;
+                    if ready > 0 {
+                        return self.sharer_lifetime_need(kv, spec, ready) <= kv.capacity();
+                    }
                 }
             }
         }
@@ -376,7 +480,7 @@ impl Admission {
     /// co-running request, and only then wedges the engine with no hint at
     /// the cause.
     fn panic_infeasible(&self, pool: &RequestPool, kv: &KvManager, id: usize) -> ! {
-        let spec = pool.get(id).spec;
+        let spec = &pool.get(id).spec;
         let peak = spec.prompt_len + spec.decode_len.saturating_sub(1);
         let lifetime = kv.blocks_needed(peak.max(1));
         panic!(
@@ -419,15 +523,11 @@ impl Admission {
         }
         // funds = free blocks + cold prefixes the allocator would reclaim
         // under pressure — EXCLUDING the run this admission is about to
-        // share (sharing pins it hot, so its blocks can't be funds).
-        // try_admit_one shares first, allocates second, so a checked gate
-        // can never fail to allocate below.
-        let exclude = if plan.run.is_empty() {
-            None
-        } else {
-            pool.get(id).spec.prefix.map(|p| p.id)
-        };
-        let funds = kv.available() + kv.reclaimable_excluding(exclude);
+        // share (sharing pins it hot, so its blocks can't be funds; the
+        // exclusion is run-granular because a radix match may pin only
+        // part of a chain). try_admit_one shares first, allocates second,
+        // so a checked gate can never fail to allocate below.
+        let funds = kv.available() + kv.reclaimable_excluding(&plan.run);
         if funds >= plan.new_blocks.saturating_add(self.watermark_blocks) {
             (GateVerdict::Pass, Some(plan))
         } else {
@@ -453,8 +553,18 @@ impl Admission {
     /// the full-price fallback.
     fn tick_prefix_wait(&self, pool: &mut RequestPool, kv: &KvManager, id: usize, now: f64) {
         use super::super::request::PrefixWaitState;
-        let Some(pfx) = pool.get(id).spec.prefix else { return };
-        let (fill, stall_events) = kv.prefix_fill_state(pfx.id).unwrap_or((0, 0));
+        let Some(pfx) = pool.get(id).spec.prefix.clone() else { return };
+        // an exact-hash wait watches the registrant's fill; a path wait
+        // (the hash itself is unregistered) watches progress along the
+        // content path, whose unready frontier is the ancestor being
+        // filled
+        let cap = pool.get(id).spec.prompt_len.saturating_sub(1);
+        let kb = (pfx.len.min(cap) / kv.block_size().max(1)).min(pfx.path.len());
+        let (fill, stall_events) = match kv.prefix_fill_state(pfx.id) {
+            Some(s) => s,
+            None if kb > 0 => kv.path_fill_state(&pfx.path[..kb]),
+            None => (0, 0),
+        };
         pool.note_prefix_wait_tick();
         let r = pool.get_mut(id);
         r.prefix_wait_iters += 1;
@@ -478,7 +588,11 @@ impl Admission {
             0
         };
         if stalled >= self.max_prefix_wait {
-            pool.force_prefix_fallback(id, now);
+            // demote to the deepest READY match instead of full price:
+            // the fallback plan re-shares what is already servable and
+            // only the stalled remainder is paid for
+            let ready = if kb > 0 { kv.lookup_path_match(&pfx.path[..kb]).ready_tokens } else { 0 };
+            pool.force_prefix_fallback(id, now, ready);
         }
     }
 
@@ -568,9 +682,28 @@ impl Admission {
         assert!(grown, "admission gate checked availability");
         // 3. a miss registers the head as the template's resident run,
         //    then forks the (now shared) partial block for its own tail
-        if let Some((hash, tokens)) = plan.register {
-            let n_run = kv.blocks_needed(tokens);
-            kv.register_prefix(hash, tokens, &blocks[..n_run]);
+        if let Some(reg) = plan.register {
+            let sb = reg.start_tokens / kv.block_size();
+            let n_run = kv.blocks_needed(reg.cov_tokens);
+            let path = pool
+                .get(id)
+                .spec
+                .prefix
+                .as_ref()
+                .map(|p| p.path.clone())
+                .unwrap_or_default();
+            if path.is_empty() {
+                kv.register_prefix(reg.hash, reg.cov_tokens, &blocks[..n_run]);
+            } else {
+                let kb = reg.cov_tokens / kv.block_size();
+                kv.register_path_prefix(
+                    reg.hash,
+                    &path[..kb],
+                    reg.start_tokens,
+                    reg.cov_tokens,
+                    &blocks[sb..n_run],
+                );
+            }
             if plan.fork {
                 blocks[n_run - 1] =
                     kv.fork_block(blocks[n_run - 1]).expect("admission gate checked availability");
@@ -580,8 +713,8 @@ impl Admission {
             // restores them with this admission's swap-in: the run is
             // servable immediately, not gated on a prefill it will
             // never run again
-            if pool.get(id).prefilled >= tokens {
-                kv.mark_prefix_ready(hash);
+            if pool.get(id).prefilled >= reg.cov_tokens {
+                kv.mark_prefix_ready(reg.hash);
             }
         }
         // the split goes on the request BEFORE admit() so swap-in costing
@@ -601,6 +734,7 @@ impl Admission {
             r.shared_blocks = plan.shared_head;
             r.shared_tokens = plan.shared_tokens;
         }
+        let served = plan.skip_tokens.saturating_sub(r.prefilled);
         if r.prefilled < plan.skip_tokens {
             r.prefix_skipped_tokens += plan.skip_tokens - r.prefilled;
             r.prefilled = plan.skip_tokens;
@@ -608,9 +742,18 @@ impl Admission {
         if !plan.run.is_empty() {
             r.prefix_hits += 1;
             pool.note_prefix_hit();
+            if plan.partial {
+                // partial-hit accounting: a radix match served `served`
+                // leading tokens without covering the whole template
+                pool.note_prefix_partial_hit(served);
+            }
             // LRU stamp: sharing from the run keeps it hot in reclaim order
-            if let Some(pfx) = pool.get(id).spec.prefix {
-                kv.touch_prefix(pfx.id);
+            if let Some(pfx) = pool.get(id).spec.prefix.as_ref() {
+                if plan.partial {
+                    kv.touch_path(&pfx.path[..plan.run.len().min(pfx.path.len())]);
+                } else {
+                    kv.touch_prefix(pfx.id);
+                }
             }
         }
         true
@@ -753,9 +896,9 @@ mod tests {
             prompt_len: 64,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+            prefix: Some(PrefixSpec::whole(7, 40)),
         };
-        let mut pool = RequestPool::from_specs(&[spec, spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone(), spec]);
         let mut kv = KvManager::paged(16, 16);
         let adm = Admission::default().with_prefix_share(true);
 
@@ -823,10 +966,10 @@ mod tests {
             prompt_len: 64,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 3, len: 48 }),
+            prefix: Some(PrefixSpec::whole(3, 48)),
         };
         // sharing off: the tag is inert, baseline reservation applies
-        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone()]);
         let mut kv = KvManager::paged(16, 16);
         let adm = Admission::default();
         assert_eq!(adm.blocks_required(&pool, &kv, 0), 4);
@@ -835,7 +978,7 @@ mod tests {
         assert_eq!(pool.get(0).shared_blocks, 0);
         assert_eq!(adm.blocks_required(&pool, &kv, 1), 4, "second pays full price");
         // degenerate pool: sharing on is a no-op (slots hold private KV)
-        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone()]);
         let mut kv = KvManager::new(4);
         let adm = Admission::default().with_prefix_share(true);
         assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
@@ -853,9 +996,9 @@ mod tests {
             prompt_len: 48,
             decode_len: 4,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 9, len: 32 }),
+            prefix: Some(PrefixSpec::whole(9, 32)),
         };
-        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone()]);
         let mut kv = KvManager::paged(8, 16);
         let adm = Admission::default().with_prefix_share(true);
         // registrant: exactly the prompt footprint, no fork block
@@ -879,9 +1022,9 @@ mod tests {
             prompt_len: 64,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 1, len: 48 }),
+            prefix: Some(PrefixSpec::whole(1, 48)),
         };
-        let mut pool = RequestPool::from_specs(&[spec, spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone(), spec]);
         // 7 blocks: the registrant takes 4, leaving 3 free
         let mut kv = KvManager::paged(7, 16);
         let adm = Admission::with_watermark(2).with_prefix_share(true);
@@ -907,9 +1050,9 @@ mod tests {
             prompt_len: 64,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+            prefix: Some(PrefixSpec::whole(7, 40)),
         };
-        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone()]);
         let mut kv = KvManager::paged(16, 16);
         let adm = Admission::default().with_prefix_share(true).with_max_prefix_wait(3);
         assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
@@ -943,9 +1086,9 @@ mod tests {
             prompt_len: 64,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+            prefix: Some(PrefixSpec::whole(7, 40)),
         };
-        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone()]);
         let mut kv = KvManager::paged(16, 16);
         let adm = Admission::default().with_prefix_share(true).with_max_prefix_wait(2);
         assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
@@ -969,9 +1112,9 @@ mod tests {
             prompt_len: 64,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 7, len: 40 }),
+            prefix: Some(PrefixSpec::whole(7, 40)),
         };
-        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec.clone()]);
         let mut kv = KvManager::paged(16, 16);
         let adm = Admission::default().with_prefix_share(true).with_max_prefix_wait(2);
         assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
@@ -997,10 +1140,10 @@ mod tests {
             prompt_len: 64,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 3, len: 40 }),
+            prefix: Some(PrefixSpec::whole(3, 40)),
         };
         let plain = RequestSpec { prompt_len: 32, decode_len: 4, arrival: 0.2, prefix: None };
-        let mut pool = RequestPool::from_specs(&[tpl, tpl, plain, plain]);
+        let mut pool = RequestPool::from_specs(&[tpl.clone(), tpl.clone(), plain.clone(), plain.clone()]);
         let mut kv = KvManager::paged(24, 16);
         let adm = Admission::default().with_prefix_share(true);
         // pass 1: the registrant admits; the same-template follower's
@@ -1013,7 +1156,7 @@ mod tests {
         assert!(pool.get(1).is_prefix_waiting(), "the head keeps waiting");
         assert!(pool.get(2).is_admitted() && pool.get(3).is_admitted());
         // window 0: the stalled head holds the gate absolutely (old gate)
-        let mut pool = RequestPool::from_specs(&[tpl, tpl, plain, plain]);
+        let mut pool = RequestPool::from_specs(&[tpl.clone(), tpl.clone(), plain.clone(), plain.clone()]);
         let mut kv = KvManager::paged(24, 16);
         let strict = adm.with_bypass_window(0);
         assert_eq!(strict.admit_fcfs(&mut pool, &mut kv, 0.1), 1);
@@ -1033,13 +1176,13 @@ mod tests {
             prompt_len: 144,
             decode_len: 4,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 11, len: 128 }),
+            prefix: Some(PrefixSpec::whole(11, 128)),
         };
         let follower = RequestSpec {
             prompt_len: 160,
             decode_len: 32,
             arrival: 0.1,
-            prefix: Some(PrefixSpec { id: 11, len: 128 }),
+            prefix: Some(PrefixSpec::whole(11, 128)),
         };
         let mut pool = RequestPool::from_specs(&[registrant, follower]);
         let mut kv = KvManager::paged(12, 16);
@@ -1079,7 +1222,7 @@ mod tests {
             prompt_len: 160,
             decode_len: 96, // peak 255 tokens: 8 run + 8 private > 12 blocks
             arrival: 0.2,
-            prefix: Some(PrefixSpec { id: 11, len: 128 }),
+            prefix: Some(PrefixSpec::whole(11, 128)),
         }]);
         assert!(!adm.is_feasible(&probe, &kv, 0), "run + private peak exceeds the pool");
     }
@@ -1095,7 +1238,7 @@ mod tests {
             prompt_len: 48,
             decode_len: 4,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 5, len: 40 }),
+            prefix: Some(PrefixSpec::whole(5, 40)),
         };
         // peak 64 + 96 = 160 tokens = exactly the 10-block pool: feasible
         // at full price, but as a sharer it would need the 3 pinned run
@@ -1104,7 +1247,7 @@ mod tests {
             prompt_len: 64,
             decode_len: 97,
             arrival: 0.1,
-            prefix: Some(PrefixSpec { id: 5, len: 40 }),
+            prefix: Some(PrefixSpec::whole(5, 40)),
         };
         let mut pool = RequestPool::from_specs(&[reg, follower]);
         let mut kv = KvManager::paged(10, 16);

@@ -182,7 +182,8 @@ impl StepApplier {
                     r.decoded = 1;
                     r.first_token_at = Some(done_at);
                 }
-                let (prefilled, sharing, pfx) = (r.prefilled, r.shared_blocks > 0, r.spec.prefix);
+                let (prefilled, sharing) = (r.prefilled, r.shared_blocks > 0);
+                let pfx_id = r.spec.prefix.as_ref().map(|p| p.id);
                 if prompt_done {
                     pool.stamp_token(req, done_at);
                 }
@@ -194,12 +195,12 @@ impl StepApplier {
                 // never flips a stale husk ready. Short of ready, the
                 // progress note resets waiters' bounded-wait stall clocks
                 // (a fill that keeps advancing is worth waiting for).
-                if let Some(pfx) = pfx {
-                    if sharing && !kv.is_prefix_ready(pfx.id) {
-                        kv.note_prefix_fill(pfx.id, prefilled);
-                        let covered = kv.lookup_prefix(pfx.id).map(|(tokens, _)| tokens);
+                if let Some(id) = pfx_id {
+                    if sharing && !kv.is_prefix_ready(id) {
+                        kv.note_prefix_fill(id, prefilled);
+                        let covered = kv.lookup_prefix_tokens(id);
                         if covered.is_some_and(|tokens| prefilled >= tokens) {
-                            kv.mark_prefix_ready(pfx.id);
+                            kv.mark_prefix_ready(id);
                         }
                     }
                 }
@@ -259,7 +260,7 @@ impl StepApplier {
                 {
                     let vr = pools[vp].get(vid);
                     if vr.shared_blocks > 0 {
-                        if let Some(pfx) = vr.spec.prefix {
+                        if let Some(pfx) = vr.spec.prefix.as_ref() {
                             if !kv.is_prefix_ready(pfx.id) {
                                 kv.note_prefix_filler_preempted(pfx.id);
                             }
@@ -406,7 +407,7 @@ mod tests {
             prompt_len: 40,
             decode_len: 60,
             arrival,
-            prefix: Some(PrefixSpec { id: 5, len: 32 }),
+            prefix: Some(PrefixSpec::whole(5, 32)),
         };
         let mut pool = RequestPool::from_specs(&[spec(0.0), spec(1.0)]);
         // 6 blocks: registrant takes 3 (2 pinned+shared, 1 private), the
@@ -479,7 +480,7 @@ mod tests {
             prompt_len: 40,
             decode_len,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 2, len: 32 }),
+            prefix: Some(PrefixSpec::whole(2, 32)),
         };
         let mut pool = RequestPool::from_specs(&[spec(4), spec(1)]);
         let mut kv = KvManager::paged(8, 16);
@@ -529,9 +530,9 @@ mod tests {
             prompt_len: 40,
             decode_len: 8,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id: 4, len: 32 }),
+            prefix: Some(PrefixSpec::whole(4, 32)),
         };
-        let mut pool = RequestPool::from_specs(&[spec, spec]);
+        let mut pool = RequestPool::from_specs(&[spec.clone(), spec]);
         let mut kv = KvManager::paged(5, 16);
         let adm = Admission::default().with_prefix_share(true);
         assert!(adm.try_admit_one(&mut pool, &mut kv, 0, 0.0));
@@ -573,7 +574,7 @@ mod tests {
             prompt_len: 40,
             decode_len: 8,
             arrival: 1.0,
-            prefix: Some(PrefixSpec { id: 6, len: 32 }),
+            prefix: Some(PrefixSpec::whole(6, 32)),
         };
         let mut pool = RequestPool::from_specs(&[plain, tpl]);
         let mut kv = KvManager::paged(5, 16);

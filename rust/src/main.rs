@@ -16,7 +16,8 @@
 //!       all-at-t=0 closed loop.
 //!   simulate [--requests N] [--scheduler S] [--rate R] [--budget T]
 //!            [--block-size B] [--kv-blocks K] [--pp P]
-//!            [--replicas R [--router rr|jsq|affinity] [--spill-factor F]]
+//!            [--replicas R [--router rr|jsq|affinity|affinity-hist]
+//!             [--spill-factor F]]
 //!            [--topology colocated|disagg|split [--prefill-replicas K]
 //!             [--interconnect-gbps G] [--ttft-slo S] [--tbt-slo S]]
 //!            [--preemption swap|recompute]
@@ -51,6 +52,15 @@
 //!       turns on copy-on-write prefix sharing over the paged block map
 //!       (requires `--scheduler hybrid` with a block size); prefix hits
 //!       and shared-KV occupancy land in the report and JSONL trace.
+//!       `--workload conversation` (with `--prefix-share`) swaps in
+//!       conversation-TREE traffic: a shared system prompt fans into
+//!       branch scaffolds and multi-turn sessions whose every turn
+//!       carries its accumulated content path, so the radix store shares
+//!       ancestor subtrees between requests whose template ids never
+//!       repeat — partial (ancestor-depth) hits and their skipped tokens
+//!       land in the report and JSONL. `--router affinity-hist` keeps the
+//!       legacy dispatch-history rendezvous affinity for comparison with
+//!       the digest-scored default.
 //!
 //!       **Soak mode** (`serve` cost-model path and single-engine
 //!       `simulate`): `--horizon-secs H` replaces the fixed request count
@@ -150,15 +160,18 @@ fn main() -> Result<()> {
                  \x20      [--json-out PATH]\n\
                  simulate [--requests N] [--scheduler S] [--rate R] [--budget T]\n\
                  \x20      [--block-size B] [--kv-blocks K] [--pp P]\n\
-                 \x20      [--replicas R] [--router rr|jsq|affinity] [--spill-factor F]\n\
+                 \x20      [--replicas R] [--router rr|jsq|affinity|affinity-hist]\n\
+                 \x20      [--spill-factor F]\n\
                  \x20      [--threads T]  (cluster only; 0 = one per core, default 1)\n\
                  \x20      [--topology colocated|disagg|split] [--prefill-replicas K]\n\
                  \x20      [--interconnect-gbps G] [--ttft-slo S] [--tbt-slo S]\n\
                  \x20      [--preemption swap|recompute]\n\
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
+                 \x20      [--workload unique|conversation]\n\
                  \x20      [--max-prefix-wait K] [--bypass-window W]\n\
                  \x20      [--json-out PATH]\n\
                  \x20      [--horizon-secs H] [--flush-every F] [--target-p99-tbt T]\n\
+                 \x20      [--exact-arrivals]\n\
                  \x20      [--diurnal-amp A] [--diurnal-period P]\n\
                  \x20      [--flash-every E] [--flash-dur D] [--flash-mult M]\n\
                  \x20      [--drift-amp A] [--drift-period P]  (soak mode)\n\
@@ -232,6 +245,18 @@ fn report_run(engine: &Engine, json_out: Option<&Path>) -> Result<()> {
         engine.pool.iter().map(|r| r.prefix_skipped_tokens).sum::<usize>(),
         m.peak_shared_kv_tokens(),
         m.peak_kv_blocks_in_use(),
+    );
+    // radix partial (ancestor-depth) hits: requests whose template id was
+    // never registered but whose content path matched a resident subtree
+    println!(
+        "prefix_partial_hits={} partial_hit_tokens={} mean_hit_depth_tokens={:.1}",
+        m.prefix_partial_hits,
+        m.prefix_partial_hit_tokens,
+        if m.prefix_partial_hits > 0 {
+            m.prefix_partial_hit_tokens as f64 / m.prefix_partial_hits as f64
+        } else {
+            0.0
+        },
     );
     // wall-clock throughput is the headline: idle gaps (open-loop Poisson
     // arrivals) and swap transfers belong in the denominator. Busy-time
@@ -405,7 +430,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // (PrefixOpts::population); it draws its own decode lengths, so
     // --decode only shapes the non-template path
     let specs: Vec<RequestSpec> = if prefix.share {
-        prefix.population(&mut rng, n)
+        prefix.population(&mut rng, n, block_size)
     } else {
         (0..n)
             .map(|_| RequestSpec {
@@ -517,12 +542,19 @@ struct SoakCliOpts {
     flash_mult: f64,
     drift_amp: f64,
     drift_period: f64,
+    /// Exact nonhomogeneous-Poisson arrivals by thinning instead of the
+    /// legacy per-gap rate approximation (satellite of the radix PR; the
+    /// old path stays bit-stable as the default).
+    exact_arrivals: bool,
 }
 
 impl SoakCliOpts {
     fn parse(args: &[String]) -> Result<Option<Self>> {
         let horizon: f64 = parse_flag(args, "--horizon-secs", 0.0)?;
         if horizon <= 0.0 {
+            if has_flag(args, "--exact-arrivals") {
+                sarathi::bail!("--exact-arrivals is a soak-mode flag and needs --horizon-secs > 0");
+            }
             const SOAK_ONLY: [&str; 9] = [
                 "--flush-every",
                 "--target-p99-tbt",
@@ -550,6 +582,7 @@ impl SoakCliOpts {
             flash_mult: parse_flag(args, "--flash-mult", 3.0)?,
             drift_amp: parse_flag(args, "--drift-amp", 0.0)?,
             drift_period: parse_flag(args, "--drift-period", 300.0)?,
+            exact_arrivals: has_flag(args, "--exact-arrivals"),
         };
         if o.flush_every <= 0.0 || o.flush_every > o.horizon {
             sarathi::bail!("--flush-every must be in (0, --horizon-secs]");
@@ -587,6 +620,9 @@ impl SoakCliOpts {
         }
         if prefix.share {
             w = w.with_templates(prefix.num_templates, prefix.prefix_len, 0.8);
+        }
+        if self.exact_arrivals {
+            w = w.with_exact_arrivals();
         }
         w
     }
@@ -671,17 +707,34 @@ fn run_soak_cli(
 #[derive(Clone, Copy, Debug)]
 struct PrefixOpts {
     share: bool,
+    /// `--workload conversation`: multi-turn conversation-tree traffic
+    /// whose requests carry block-granular content paths (unique template
+    /// ids — only a radix store can share their ancestor subtrees).
+    conversation: bool,
     num_templates: usize,
     prefix_len: usize,
 }
 
 impl PrefixOpts {
     fn parse(args: &[String]) -> Result<Self> {
+        let workload = flag_value(args, "--workload").unwrap_or_else(|| "unique".to_string());
+        let conversation = match workload.as_str() {
+            "unique" | "zipf" | "template" => false,
+            "conversation" => true,
+            other => sarathi::bail!("unknown workload {other} (try: unique, conversation)"),
+        };
         let opts = PrefixOpts {
             share: has_flag(args, "--prefix-share"),
+            conversation,
             num_templates: parse_flag(args, "--num-templates", 8)?,
             prefix_len: parse_flag(args, "--prefix-len", 256)?,
         };
+        if opts.conversation && !opts.share {
+            sarathi::bail!(
+                "--workload conversation carries content-path prefixes and needs \
+                 --prefix-share (radix sharing over the paged block map)"
+            );
+        }
         if opts.share && opts.num_templates == 0 {
             sarathi::bail!("--num-templates must be at least 1");
         }
@@ -691,10 +744,29 @@ impl PrefixOpts {
         Ok(opts)
     }
 
-    /// The workload: template traffic under `--prefix-share`, the classic
+    /// The workload: conversation-tree traffic under `--workload
+    /// conversation`, template traffic under `--prefix-share`, the classic
     /// Zipf(0.4) population otherwise (identical to the seed behavior).
-    fn population(&self, rng: &mut Rng, n: usize) -> Vec<RequestSpec> {
-        if self.share {
+    /// `block_size` grounds conversation content paths at the paged
+    /// store's block granularity.
+    fn population(&self, rng: &mut Rng, n: usize, block_size: usize) -> Vec<RequestSpec> {
+        if self.conversation {
+            let turns = 4;
+            let conversations = (n / turns).max(1);
+            sarathi::workload::conversation_tree_population(
+                rng,
+                conversations,
+                self.num_templates.max(1),
+                self.prefix_len,
+                (self.prefix_len / 2).max(1),
+                turns,
+                32,
+                128,
+                16,
+                64,
+                block_size.max(1),
+            )
+        } else if self.share {
             sarathi::workload::shared_prefix_population(
                 rng,
                 n,
@@ -711,7 +783,15 @@ impl PrefixOpts {
     }
 
     fn describe(&self) -> String {
-        if self.share {
+        if self.conversation {
+            format!(
+                "conversation trees ({}-token system prompt, {} branches x {} tokens, \
+                 4 turns, unique part in [32,128])",
+                self.prefix_len,
+                self.num_templates.max(1),
+                (self.prefix_len / 2).max(1),
+            )
+        } else if self.share {
             format!(
                 "{} templates x {}-token shared prefixes (Zipf 0.8 fanout), unique part \
                  in [64,512] at P:D=10",
@@ -753,7 +833,9 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     }
     let router_name = flag_value(args, "--router").unwrap_or_else(|| "rr".to_string());
     let router_kind = RouterKind::parse(&router_name)
-        .ok_or_else(|| sarathi::err!("unknown router {router_name} (try: rr, jsq, affinity)"))?;
+        .ok_or_else(|| {
+            sarathi::err!("unknown router {router_name} (try: rr, jsq, affinity, affinity-hist)")
+        })?;
     let spill_factor: f64 = parse_flag(args, "--spill-factor", 1.0)?;
     if spill_factor < 0.0 {
         sarathi::bail!("--spill-factor must be non-negative");
@@ -892,7 +974,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
     let b = d.max_batch_size();
     let mut rng = Rng::new(7);
-    let pop = prefix.population(&mut rng, n);
+    let pop = prefix.population(&mut rng, n, block_size);
     let pop = with_poisson_arrivals(&mut rng, pop, rate);
 
     // slot policies get the §4.3.1 worst-case slots; the hybrid policy gets
@@ -1002,7 +1084,7 @@ fn simulate_pipeline(
         .with_parallel(ParallelConfig::tp_pp(1, pp));
     let b = d.max_batch_size();
     let mut rng = Rng::new(7);
-    let pop = prefix.population(&mut rng, n);
+    let pop = prefix.population(&mut rng, n, block_size);
     let pop = with_poisson_arrivals(&mut rng, pop, rate);
 
     let paged = kind == SchedulerKind::Hybrid && block_size > 0;
@@ -1050,8 +1132,8 @@ fn simulate_pipeline(
     let bubbles = res.bubble_summary();
     println!(
         "makespan={:.2}s micro_batches={} utilization={:.3} preemptions={} rejections={} \
-         swap_time={:.3}s prefix_hits={} prefix_fallbacks={} prefix_wait_iters={} \
-         peak_shared_kv_tokens={}",
+         swap_time={:.3}s prefix_hits={} prefix_partial_hits={} partial_hit_tokens={} \
+         prefix_fallbacks={} prefix_wait_iters={} peak_shared_kv_tokens={}",
         res.makespan,
         res.micro_batches,
         res.utilization(),
@@ -1059,6 +1141,8 @@ fn simulate_pipeline(
         res.metrics.rejections,
         res.metrics.total_swap_time(),
         res.metrics.prefix_hits,
+        res.metrics.prefix_partial_hits,
+        res.metrics.prefix_partial_hit_tokens,
         res.metrics.prefix_fallbacks,
         res.metrics.prefix_wait_iterations,
         res.metrics.peak_shared_kv_tokens(),
@@ -1139,7 +1223,7 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         .with_parallel(ParallelConfig::tp_pp(1, pp).with_replicas(replicas));
     let b = d.max_batch_size();
     let mut rng = Rng::new(7);
-    let pop = prefix.population(&mut rng, n);
+    let pop = prefix.population(&mut rng, n, block_size);
     let pop = with_template_burst_arrivals(&mut rng, pop, rate, 6);
 
     let paged = kind == SchedulerKind::Hybrid && block_size > 0;
@@ -1210,6 +1294,15 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         res.prefix_hit_rate(),
         res.prefix_fallbacks(),
         res.load_imbalance(),
+    );
+    let partial_hits: usize =
+        res.per_replica.iter().map(|r| r.metrics.prefix_partial_hits).sum();
+    let partial_tokens: usize =
+        res.per_replica.iter().map(|r| r.metrics.prefix_partial_hit_tokens).sum();
+    println!(
+        "prefix_partial_hits={partial_hits} partial_hit_tokens={partial_tokens} \
+         mean_hit_depth_tokens={:.1}",
+        if partial_hits > 0 { partial_tokens as f64 / partial_hits as f64 } else { 0.0 },
     );
     println!(
         "per_replica peak_kv_blocks={:?} mean_outstanding_tokens={:?}",

@@ -691,15 +691,23 @@ impl ClusterSim {
                     break;
                 }
             }
+            let wants_digest = router.wants_digest();
             let views: Vec<ReplicaView> = runs[..prefill_replicas]
                 .iter()
-                .map(|run| ReplicaView { outstanding_tokens: run.outstanding_tokens() })
+                .map(|run| ReplicaView {
+                    outstanding_tokens: run.outstanding_tokens(),
+                    digest: if wants_digest {
+                        run.residency_digest()
+                    } else {
+                        Default::default()
+                    },
+                })
                 .collect();
             let ri = router.route(&specs[g], &views).min(prefill_replicas - 1);
             // the prefill-side copy: completes exactly at first-token time
             // (the final chunk's token), keeping the prefix tag so prefill
             // replicas still share/pin templates
-            let pspec = RequestSpec { decode_len: 1, ..specs[g] };
+            let pspec = RequestSpec { decode_len: 1, ..specs[g].clone() };
             let local = runs[ri].push_to(0, pspec);
             debug_assert_eq!(local, locals[ri].len());
             locals[ri].push(HandoffRole::Prefill(g));
@@ -869,6 +877,7 @@ fn deliver_handoffs(
                         .iter()
                         .map(|run| ReplicaView {
                             outstanding_tokens: run.outstanding_tokens(),
+                            ..Default::default()
                         })
                         .collect();
                     (prefill_replicas + LeastOutstandingTokens::least(&views), 0)
@@ -922,6 +931,10 @@ fn dispatch_serial(
     blank_views: &[ReplicaView],
 ) {
     let r = runs.len();
+    // digest refreshes happen only at these dispatch barriers, and only
+    // for policies that read them — round-robin / JSQ / history affinity
+    // stay bitwise-identical to their pre-digest behavior
+    let wants_digest = router.wants_digest();
     let mut heap: std::collections::BinaryHeap<EventKey> =
         std::collections::BinaryHeap::with_capacity(2 * r);
     let mut cursor = 0usize;
@@ -951,12 +964,19 @@ fn dispatch_serial(
             cursor += 1;
             let scans = track_load.then(|| {
                 runs.iter()
-                    .map(|run| ReplicaView { outstanding_tokens: run.outstanding_tokens() })
+                    .map(|run| ReplicaView {
+                        outstanding_tokens: run.outstanding_tokens(),
+                        digest: if wants_digest {
+                            run.residency_digest()
+                        } else {
+                            Default::default()
+                        },
+                    })
                     .collect::<Vec<_>>()
             });
             let views: &[ReplicaView] = scans.as_deref().unwrap_or(blank_views);
             let ri = router.route(&specs[g], views).min(r - 1);
-            let local = runs[ri].push(specs[g]);
+            let local = runs[ri].push(specs[g].clone());
             debug_assert_eq!(local, globals[ri].len());
             globals[ri].push(g);
             replica_of[g] = ri;
@@ -1031,6 +1051,7 @@ fn dispatch_parallel(
     use std::sync::{Barrier, Mutex};
 
     let r = runs.len();
+    let wants_digest = router.wants_digest();
     let workers = threads.min(r);
     let cells: Vec<Mutex<&mut PipelineRun>> = runs.iter_mut().map(Mutex::new).collect();
     let barrier = Barrier::new(workers + 1);
@@ -1094,8 +1115,16 @@ fn dispatch_parallel(
             let scans = track_load.then(|| {
                 cells
                     .iter()
-                    .map(|c| ReplicaView {
-                        outstanding_tokens: c.lock().unwrap().outstanding_tokens(),
+                    .map(|c| {
+                        let run = c.lock().unwrap();
+                        ReplicaView {
+                            outstanding_tokens: run.outstanding_tokens(),
+                            digest: if wants_digest {
+                                run.residency_digest()
+                            } else {
+                                Default::default()
+                            },
+                        }
                     })
                     .collect::<Vec<_>>()
             });
@@ -1103,7 +1132,7 @@ fn dispatch_parallel(
             let ri = router.route(&specs[g], views).min(r - 1);
             {
                 let mut run = cells[ri].lock().unwrap();
-                let local = run.push(specs[g]);
+                let local = run.push(specs[g].clone());
                 debug_assert_eq!(local, globals[ri].len());
                 if track_load {
                     for (i, view) in views.iter().enumerate() {

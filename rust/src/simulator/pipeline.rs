@@ -52,8 +52,8 @@
 //! machinery.
 
 use crate::coordinator::{
-    Batch, IterationRecord, KvManager, LatencyReport, Metrics, RequestPool, Scheduler, StageKv,
-    StepApplier, SwapCost,
+    Batch, IterationRecord, KvManager, LatencyReport, Metrics, RequestPool, ResidencyDigest,
+    Scheduler, StageKv, StepApplier, SwapCost,
 };
 use crate::costmodel::BatchShape;
 use crate::profiler::Profiler;
@@ -168,6 +168,8 @@ enum Event {
         stage_time: f64,
         swap_in: f64,
         prefix_hits: usize,
+        prefix_partial_hits: usize,
+        prefix_partial_hit_tokens: usize,
         prefix_fallbacks: usize,
         prefix_wait_iters: usize,
     },
@@ -275,8 +277,8 @@ impl PipelineSim {
         F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let mut run = PipelineRun::new(self, kv, per_stream_cap, &mut make_sched);
-        for &spec in specs {
-            run.push(spec);
+        for spec in specs {
+            run.push(spec.clone());
         }
         loop {
             if run.step() {
@@ -316,6 +318,10 @@ pub struct PipelineRun<'a, 'b> {
     /// Prefix-cache hits observed at admission, attached to the stream's
     /// next micro-batch record (same carry as swap-in).
     pending_prefix_hits: Vec<usize>,
+    /// Radix partial hits (ancestor-depth matches) and the KV tokens they
+    /// skipped, same carry.
+    pending_prefix_partial_hits: Vec<usize>,
+    pending_prefix_partial_hit_tokens: Vec<usize>,
     /// Bounded-wait fallbacks and wait ticks, same carry.
     pending_prefix_fallbacks: Vec<usize>,
     pending_wait_ticks: Vec<usize>,
@@ -389,6 +395,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             events: (0..n_streams).map(|_| Event::Schedule(0.0)).collect(),
             pending_swap_in: vec![0.0; n_streams],
             pending_prefix_hits: vec![0; n_streams],
+            pending_prefix_partial_hits: vec![0; n_streams],
+            pending_prefix_partial_hit_tokens: vec![0; n_streams],
             pending_prefix_fallbacks: vec![0; n_streams],
             pending_wait_ticks: vec![0; n_streams],
             clock: 0.0,
@@ -433,6 +441,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
     /// pin arrivals to a lane (prefill vs decode) instead of round-robin.
     pub fn push_to(&mut self, si: usize, spec: RequestSpec) -> usize {
         let local = self.result.completions.len();
+        let arrival = spec.arrival;
         self.pools[si].push(spec);
         self.global_ids[si].push(local);
         self.result.completions.push(f64::NAN);
@@ -440,7 +449,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         self.result.first_tokens.push(f64::NAN);
         self.result.prefix_fallback.push(false);
         self.result.max_tbt.push(0.0);
-        let at = spec.arrival.max(self.clock);
+        let at = arrival.max(self.clock);
         let wake_at = match &self.events[si] {
             Event::Done | Event::Stalled => Some(at),
             Event::Idle(t) if at < *t => Some(at),
@@ -467,12 +476,13 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
     pub fn push_imported(&mut self, si: usize, spec: RequestSpec, first_token_at: f64) -> usize {
         debug_assert!(spec.decode_len > 1, "a handoff without decode work is pointless");
         debug_assert!(first_token_at <= spec.arrival, "first token precedes the transfer");
+        let prompt_len = spec.prompt_len;
         let local = self.push_to(si, spec);
         let pool = &mut self.pools[si];
         let id = pool.len() - 1;
         {
             let r = pool.get_mut(id);
-            r.prefilled = spec.prompt_len;
+            r.prefilled = prompt_len;
             r.decoded = 1;
             r.imported = true;
         }
@@ -529,6 +539,14 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         self.pools.iter().all(|p| p.all_complete())
     }
 
+    /// Compact digest of this replica's READY resident prefix subtrees —
+    /// the cluster dispatcher refreshes it at routing barriers so the
+    /// digest-aware affinity policy scores ACTUAL residency instead of
+    /// guessing from dispatch history.
+    pub fn residency_digest(&self) -> ResidencyDigest {
+        self.kv.pool().residency_digest()
+    }
+
     /// Cache-aware outstanding work: prefill + decode tokens this replica
     /// still has to COMPUTE for its non-terminal requests. Queued
     /// prefix-tagged requests are discounted by their template's resident
@@ -553,9 +571,20 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 let r = pool.get(id);
                 let mut eff = r.prefilled;
                 if !r.prefix_fallback {
-                    if let Some(pfx) = r.spec.prefix {
-                        if let Some((cov, _)) = self.kv.pool().lookup_prefix(pfx.id) {
-                            eff = eff.max(cov.min(r.spec.prompt_len.saturating_sub(1)));
+                    if let Some(pfx) = r.spec.prefix.as_ref() {
+                        // whole-template coverage when the hash is
+                        // registered; otherwise the deepest radix ancestor
+                        // the request's content path can attach to (a
+                        // still-filling run counts, mirroring admission)
+                        let mut cov = self.kv.pool().lookup_prefix_tokens(pfx.id);
+                        if cov.is_none() && !pfx.path.is_empty() {
+                            let m = self.kv.pool().lookup_path_match(&pfx.path);
+                            if m.attach_tokens > 0 {
+                                cov = Some(m.attach_tokens);
+                            }
+                        }
+                        if let Some(c) = cov {
+                            eff = eff.max(c.min(r.spec.prompt_len.saturating_sub(1)));
                         }
                     }
                 }
@@ -602,6 +631,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 stage_time,
                 swap_in,
                 prefix_hits,
+                prefix_partial_hits,
+                prefix_partial_hit_tokens,
                 prefix_fallbacks,
                 prefix_wait_iters,
             } => self.process_apply(
@@ -613,6 +644,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 stage_time,
                 swap_in,
                 prefix_hits,
+                prefix_partial_hits,
+                prefix_partial_hit_tokens,
                 prefix_fallbacks,
                 prefix_wait_iters,
             ),
@@ -634,6 +667,9 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         );
         self.result.metrics.rejections += self.pools[si].take_rejected_events();
         self.pending_prefix_hits[si] += self.pools[si].take_prefix_hits();
+        self.pending_prefix_partial_hits[si] += self.pools[si].take_prefix_partial_hits();
+        self.pending_prefix_partial_hit_tokens[si] +=
+            self.pools[si].take_prefix_partial_hit_tokens();
         self.pending_prefix_fallbacks[si] += self.pools[si].take_prefix_fallbacks();
         self.pending_wait_ticks[si] += self.pools[si].take_prefix_wait_ticks();
         self.pending_swap_in[si] +=
@@ -661,6 +697,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         // a resumed victim's KV transfer delays entry to stage 0
         let t_swap_in = std::mem::take(&mut self.pending_swap_in[si]);
         let t_prefix_hits = std::mem::take(&mut self.pending_prefix_hits[si]);
+        let t_partial_hits = std::mem::take(&mut self.pending_prefix_partial_hits[si]);
+        let t_partial_tokens = std::mem::take(&mut self.pending_prefix_partial_hit_tokens[si]);
         let t_fallbacks = std::mem::take(&mut self.pending_prefix_fallbacks[si]);
         let t_wait_ticks = std::mem::take(&mut self.pending_wait_ticks[si]);
         let mut bubble_this_mb = 0.0;
@@ -707,6 +745,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             stage_time,
             swap_in: t_swap_in,
             prefix_hits: t_prefix_hits,
+            prefix_partial_hits: t_partial_hits,
+            prefix_partial_hit_tokens: t_partial_tokens,
             prefix_fallbacks: t_fallbacks,
             prefix_wait_iters: t_wait_ticks,
         };
@@ -723,6 +763,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         stage_time: f64,
         swap_in: f64,
         prefix_hits: usize,
+        prefix_partial_hits: usize,
+        prefix_partial_hit_tokens: usize,
         prefix_fallbacks: usize,
         prefix_wait_iters: usize,
     ) {
@@ -777,6 +819,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             swap_time: swap_in + swap_out,
             rejections: 0,
             prefix_hits,
+            prefix_partial_hits,
+            prefix_partial_hit_tokens,
             prefix_fallbacks,
             prefix_wait_iters,
             shared_kv_tokens: self.pools.iter().map(|p| p.shared_kv_tokens()).sum(),
@@ -820,7 +864,24 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             return StallOutcome::Wedged;
         };
         let clock = self.clock;
-        self.pools[pi].force_prefix_fallback(id, clock);
+        // demote to the deepest READY ancestor on the waiter's content
+        // path (0 = plain full-price miss) — same rule as the bounded-wait
+        // stall fallback in admission and the engine's wedge demotion
+        let ready = match self.pools[pi].get(id).spec.prefix.as_ref() {
+            Some(pfx) if !pfx.path.is_empty() => {
+                let kv = self.kv.pool();
+                let bs = kv.block_size().max(1);
+                let cap = self.pools[pi].get(id).spec.prompt_len.saturating_sub(1);
+                let kb = (pfx.len.min(cap) / bs).min(pfx.path.len());
+                if kb > 0 {
+                    kv.lookup_path_match(&pfx.path[..kb]).ready_tokens
+                } else {
+                    0
+                }
+            }
+            _ => 0,
+        };
+        self.pools[pi].force_prefix_fallback(id, clock, ready);
         for ev in self.events.iter_mut() {
             if matches!(ev, Event::Stalled) {
                 *ev = Event::Schedule(clock);
@@ -1125,7 +1186,7 @@ mod tests {
             prompt_len: 40,
             decode_len: 4,
             arrival,
-            prefix: Some(PrefixSpec { id: 1, len: 32 }),
+            prefix: Some(PrefixSpec::whole(1, 32)),
         };
         let specs = vec![
             // stream 0: a plain request whose 32-token budget chunks starve

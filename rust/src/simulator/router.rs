@@ -12,14 +12,22 @@
 //!   partition byte-for-byte on an arrival-sorted workload.
 //! * [`LeastOutstandingTokens`] — join-shortest-queue by each replica's
 //!   cache-aware outstanding work ([`ReplicaView::outstanding_tokens`]).
-//! * [`PrefixAffinity`] — rendezvous-hash the template's prefix hash to a
-//!   *home* replica so its pinned run is registered once and every
-//!   follower hits it, with a power-of-two-choices load shed to the
-//!   second-ranked replica when the home's backlog exceeds
-//!   `spill_factor ×` the second's. A shed request simply misses and
-//!   admits full-price on the alternate (registering the template there —
-//!   emergent hot-prefix replication), so shedding can never wedge a
-//!   waiter chain.
+//! * [`PrefixAffinity`] — cache-aware affinity routing. In its default
+//!   **digest** mode each [`ReplicaView`] carries a
+//!   [`ResidencyDigest`] — a bounded summary of the radix nodes actually
+//!   READY on that replica, refreshed at dispatch barriers — and the
+//!   router sends a tagged request to the replica whose digest covers the
+//!   deepest prefix of the request's content path. Rendezvous hashing is
+//!   only the cold-start tiebreak (no replica holds anything yet), and
+//!   the load shed goes to the least-outstanding replica when the
+//!   coverage home's backlog exceeds `spill_factor ×` that replica's —
+//!   the shed request misses and registers there, replicating the hot
+//!   prefix (emergent capacity for hot templates). The legacy
+//!   **history** mode ([`PrefixAffinity::history`]) keeps the pure
+//!   rendezvous home + power-of-two-choices spill to the second-ranked
+//!   replica. Either way a shed request simply misses and admits
+//!   full-price on the alternate, so shedding can never wedge a waiter
+//!   chain.
 //!
 //! Rendezvous (highest-random-weight) hashing gives the stability the
 //! prefix cache needs: adding a replica re-homes only ~1/(R+1) of the
@@ -29,8 +37,14 @@
 //!
 //! [`ClusterSim::run_routed`]: super::cluster::ClusterSim::run_routed
 
+use crate::coordinator::kv::{derived_path, ResidencyDigest};
 use crate::util::mix64;
 use crate::workload::RequestSpec;
+
+/// Blocks of synthetic content path scored for a path-less `{id, len}`
+/// template tag — generous enough to cover any digest entry a flat
+/// registration can produce (64 blocks ≫ any registered template here).
+const DERIVED_SCORE_BLOCKS: usize = 64;
 
 /// What a routing policy sees of one replica at dispatch time.
 #[derive(Clone, Copy, Debug, Default)]
@@ -40,6 +54,10 @@ pub struct ReplicaView {
     /// (queued template traffic discounted by resident prefix coverage —
     /// see `PipelineRun::outstanding_tokens`).
     pub outstanding_tokens: usize,
+    /// Bounded summary of the prefix-tree nodes READY on this replica
+    /// (refreshed at dispatch barriers when the policy
+    /// [`wants_digest`](RoutePolicy::wants_digest)); empty otherwise.
+    pub digest: ResidencyDigest,
 }
 
 /// A pluggable dispatch policy: pick the replica for one arriving request
@@ -47,6 +65,14 @@ pub struct ReplicaView {
 pub trait RoutePolicy {
     fn route(&mut self, spec: &RequestSpec, views: &[ReplicaView]) -> usize;
     fn name(&self) -> &'static str;
+
+    /// True when the policy reads [`ReplicaView::digest`] — the dispatch
+    /// barrier only pays for digest refreshes if so, and load-oblivious
+    /// policies (round-robin) stay bitwise-identical to their pre-digest
+    /// behavior.
+    fn wants_digest(&self) -> bool {
+        false
+    }
 }
 
 /// Arrival-order round-robin — the pre-router baseline.
@@ -105,29 +131,55 @@ impl RoutePolicy for LeastOutstandingTokens {
     }
 }
 
-/// Rendezvous-hash prefix affinity with a power-of-two-choices spill.
+/// Cache-aware prefix affinity with a bounded load shed.
 ///
-/// A tagged request goes to its template's home (top rendezvous rank)
-/// unless the home's outstanding work exceeds `spill_factor ×` the
-/// second-ranked replica's, in which case it sheds to the second. At the
-/// default `spill_factor = 1.0` this is classic power-of-two-choices over
-/// the template's top-2 replicas (strictly-greater comparison, ties stay
-/// home); larger factors trade balance for stickiness. Untagged requests
-/// fall through to join-shortest-queue over all replicas.
+/// **Digest mode** (default, [`PrefixAffinity::new`]): a tagged request
+/// is scored against every replica's [`ResidencyDigest`] and goes to the
+/// replica covering the deepest prefix of its content path (ties →
+/// lowest index). A path-less `{id, len}` tag is scored through its
+/// [`derived_path`] — the same synthetic chain the radix index lowers it
+/// to, so flat tags route by actual residency too. When the coverage
+/// home's outstanding work exceeds `spill_factor ×` the least-loaded
+/// replica's, the request sheds to that least-loaded replica; its
+/// full-price miss registers the template there, replicating the hot
+/// prefix. With no coverage anywhere (cold start, or every digest
+/// empty), routing falls back to the rendezvous top-2 rule below — which
+/// also makes digest mode behave exactly like history mode when digests
+/// are never populated.
+///
+/// **History mode** ([`PrefixAffinity::history`]): the template's
+/// rendezvous home (top rank of [`rendezvous_rank`]) unless the home's
+/// outstanding work exceeds `spill_factor ×` the second-ranked
+/// replica's, in which case it sheds to the second. At the default
+/// `spill_factor = 1.0` this is classic power-of-two-choices over the
+/// template's top-2 replicas (strictly-greater comparison, ties stay
+/// home); larger factors trade balance for stickiness.
+///
+/// Untagged requests fall through to join-shortest-queue over all
+/// replicas in both modes.
 #[derive(Clone, Copy, Debug)]
 pub struct PrefixAffinity {
-    /// Shed to the second-ranked replica when
-    /// `home_outstanding > spill_factor × second_outstanding`.
+    /// Shed away from the coverage/rendezvous home when its outstanding
+    /// work exceeds `spill_factor ×` the alternate's.
     pub spill_factor: f64,
+    /// Score residency digests (default); false = pure rendezvous
+    /// dispatch-history affinity.
+    pub use_digest: bool,
 }
 
 impl PrefixAffinity {
     /// Default spill factor: plain power-of-two-choices over the top-2.
     pub const DEFAULT_SPILL: f64 = 1.0;
 
+    /// Digest-scored affinity (reads [`ReplicaView::digest`]).
     pub fn new(spill_factor: f64) -> Self {
         assert!(spill_factor >= 0.0, "spill factor must be non-negative");
-        PrefixAffinity { spill_factor }
+        PrefixAffinity { spill_factor, use_digest: true }
+    }
+
+    /// Legacy rendezvous-only affinity (ignores digests).
+    pub fn history(spill_factor: f64) -> Self {
+        PrefixAffinity { use_digest: false, ..Self::new(spill_factor) }
     }
 }
 
@@ -142,9 +194,34 @@ impl RoutePolicy for PrefixAffinity {
         if views.len() <= 1 {
             return 0;
         }
-        let Some(pfx) = spec.prefix else {
+        let Some(pfx) = spec.prefix.as_ref() else {
             return LeastOutstandingTokens::least(views);
         };
+        if self.use_digest {
+            let derived;
+            let path: &[u64] = if pfx.path.is_empty() {
+                derived = derived_path(pfx.id, DERIVED_SCORE_BLOCKS);
+                &derived
+            } else {
+                &pfx.path
+            };
+            let mut home = 0usize;
+            let mut best = 0u32;
+            for (ri, v) in views.iter().enumerate() {
+                let c = v.digest.coverage(path);
+                if c > best {
+                    best = c;
+                    home = ri;
+                }
+            }
+            if best > 0 {
+                let least = LeastOutstandingTokens::least(views);
+                let h = views[home].outstanding_tokens as f64;
+                let l = views[least].outstanding_tokens as f64;
+                return if h > self.spill_factor * l { least } else { home };
+            }
+            // no resident coverage anywhere: cold-start via rendezvous
+        }
         let (home, second) = rendezvous_top2(pfx.id, views.len());
         let h = views[home].outstanding_tokens as f64;
         let s = views[second].outstanding_tokens as f64;
@@ -156,7 +233,15 @@ impl RoutePolicy for PrefixAffinity {
     }
 
     fn name(&self) -> &'static str {
-        "affinity"
+        if self.use_digest {
+            "affinity"
+        } else {
+            "affinity-hist"
+        }
+    }
+
+    fn wants_digest(&self) -> bool {
+        self.use_digest
     }
 }
 
@@ -206,8 +291,11 @@ pub enum RouterKind {
     RoundRobin,
     /// Join-shortest-queue by outstanding tokens.
     Jsq,
-    /// Rendezvous-hash prefix affinity with power-of-two spill.
+    /// Digest-scored prefix affinity with a least-loaded spill.
     Affinity,
+    /// Legacy rendezvous (dispatch-history) affinity with the
+    /// power-of-two spill — the pre-digest behavior, kept for A/B runs.
+    AffinityHistory,
 }
 
 impl RouterKind {
@@ -216,6 +304,7 @@ impl RouterKind {
             RouterKind::RoundRobin => "rr",
             RouterKind::Jsq => "jsq",
             RouterKind::Affinity => "affinity",
+            RouterKind::AffinityHistory => "affinity-hist",
         }
     }
 
@@ -225,6 +314,7 @@ impl RouterKind {
             "rr" | "round-robin" => RouterKind::RoundRobin,
             "jsq" | "least-outstanding" => RouterKind::Jsq,
             "affinity" => RouterKind::Affinity,
+            "affinity-hist" | "affinity-history" => RouterKind::AffinityHistory,
             _ => return None,
         })
     }
@@ -235,6 +325,7 @@ impl RouterKind {
             RouterKind::RoundRobin => Box::new(RoundRobin::new()),
             RouterKind::Jsq => Box::new(LeastOutstandingTokens::new()),
             RouterKind::Affinity => Box::new(PrefixAffinity::new(spill_factor)),
+            RouterKind::AffinityHistory => Box::new(PrefixAffinity::history(spill_factor)),
         }
     }
 }
@@ -245,7 +336,10 @@ mod tests {
     use crate::workload::PrefixSpec;
 
     fn views(outstanding: &[usize]) -> Vec<ReplicaView> {
-        outstanding.iter().map(|&t| ReplicaView { outstanding_tokens: t }).collect()
+        outstanding
+            .iter()
+            .map(|&t| ReplicaView { outstanding_tokens: t, ..Default::default() })
+            .collect()
     }
 
     fn tagged(id: u64) -> RequestSpec {
@@ -253,7 +347,7 @@ mod tests {
             prompt_len: 500,
             decode_len: 50,
             arrival: 0.0,
-            prefix: Some(PrefixSpec { id, len: 384 }),
+            prefix: Some(PrefixSpec::whole(id, 384)),
         }
     }
 
@@ -368,10 +462,92 @@ mod tests {
 
     #[test]
     fn router_kind_round_trips_and_builds() {
-        for k in [RouterKind::RoundRobin, RouterKind::Jsq, RouterKind::Affinity] {
+        for k in [
+            RouterKind::RoundRobin,
+            RouterKind::Jsq,
+            RouterKind::Affinity,
+            RouterKind::AffinityHistory,
+        ] {
             assert_eq!(RouterKind::parse(k.name()), Some(k));
             assert_eq!(k.build(1.5).name(), k.name());
         }
+        assert_eq!(RouterKind::parse("affinity-history"), Some(RouterKind::AffinityHistory));
         assert_eq!(RouterKind::parse("nope"), None);
+        // only digest-mode affinity asks the barrier for digests
+        assert!(RouterKind::Affinity.build(1.0).wants_digest());
+        assert!(!RouterKind::AffinityHistory.build(1.0).wants_digest());
+        assert!(!RouterKind::RoundRobin.build(1.0).wants_digest());
+        assert!(!RouterKind::Jsq.build(1.0).wants_digest());
+    }
+
+    /// Digest mode routes to the replica whose digest covers the DEEPEST
+    /// prefix of the request's content path — not the rendezvous home,
+    /// not the least-loaded.
+    #[test]
+    fn digest_coverage_beats_rendezvous_and_load() {
+        let path = vec![0xA1u64, 0xA2, 0xA3, 0xA4];
+        let spec = RequestSpec {
+            prompt_len: 200,
+            decode_len: 20,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec::with_path(77, 128, path)),
+        };
+        let mut aff = PrefixAffinity::new(4.0);
+        let mut v = views(&[10, 30, 10, 10]);
+        // replica 1 holds 3 blocks of the path ready, replica 2 only 1
+        v[1].digest = ResidencyDigest::from_entries(&[(0xA3, 96)]);
+        v[2].digest = ResidencyDigest::from_entries(&[(0xA1, 32)]);
+        assert_eq!(aff.route(&spec, &v), 1, "deepest coverage wins");
+        // an entry NOT on the path certifies nothing
+        v[3].digest = ResidencyDigest::from_entries(&[(0xFF, 128)]);
+        assert_eq!(aff.route(&spec, &v), 1);
+    }
+
+    /// The digest-mode shed: past `spill × least`, the request goes to
+    /// the least-outstanding replica (replicating the hot prefix there).
+    #[test]
+    fn digest_spill_sheds_to_least_outstanding() {
+        let path = vec![0xB1u64, 0xB2];
+        let spec = RequestSpec {
+            prompt_len: 100,
+            decode_len: 10,
+            arrival: 0.0,
+            prefix: Some(PrefixSpec::with_path(9, 64, path)),
+        };
+        let mut aff = PrefixAffinity::new(2.0);
+        let mut v = views(&[200, 100, 401]);
+        v[2].digest = ResidencyDigest::from_entries(&[(0xB2, 64)]);
+        // home=2 (only coverage), least=1: 401 > 2.0 × 100 → shed to 1
+        assert_eq!(aff.route(&spec, &v), 1, "overloaded home sheds to least");
+        v[2].outstanding_tokens = 200; // at the factor: stay home
+        assert_eq!(aff.route(&spec, &v), 2);
+    }
+
+    /// A path-less `{id, len}` tag scores through its derived path — the
+    /// same synthetic chain the radix index lowers it to — so flat tags
+    /// still route by residency.
+    #[test]
+    fn flat_tags_score_digests_via_the_derived_path() {
+        let spec = tagged(123);
+        let chain = derived_path(123, 4);
+        let mut aff = PrefixAffinity::default();
+        let mut v = views(&[50, 50, 50, 50]);
+        v[0].digest = ResidencyDigest::from_entries(&[(chain[3], 128)]);
+        assert_eq!(aff.route(&spec, &v), 0, "resident flat template attracts its traffic");
+        // history mode ignores the digest and uses the rendezvous home
+        let mut hist = PrefixAffinity::history(1.0);
+        let (home, _) = rendezvous_top2(123, 4);
+        assert_eq!(hist.route(&spec, &v), home);
+    }
+
+    /// With every digest empty, digest mode degrades to exactly the
+    /// rendezvous top-2 behavior (cold-start tiebreak).
+    #[test]
+    fn empty_digests_fall_back_to_rendezvous() {
+        let spec = tagged(42);
+        let v = views(&[5, 10, 15, 20]);
+        let mut digest = PrefixAffinity::new(1.5);
+        let mut hist = PrefixAffinity::history(1.5);
+        assert_eq!(digest.route(&spec, &v), hist.route(&spec, &v));
     }
 }

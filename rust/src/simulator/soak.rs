@@ -183,7 +183,23 @@ pub fn run_soak(
                 // same wedge demotion as Engine::run: a queued request
                 // waiting on a dead prefix fill is not real wedging
                 if let Some(id) = engine.pool.oldest_prefix_waiter() {
-                    engine.pool.force_prefix_fallback(id, engine.now);
+                    // demote to the deepest READY ancestor on the waiter's
+                    // content path (0 = plain full-price miss), mirroring
+                    // Engine::run's wedge demotion
+                    let ready = match engine.pool.get(id).spec.prefix.as_ref() {
+                        Some(pfx) if !pfx.path.is_empty() => {
+                            let bs = engine.kv.block_size().max(1);
+                            let cap = engine.pool.get(id).spec.prompt_len.saturating_sub(1);
+                            let kb = (pfx.len.min(cap) / bs).min(pfx.path.len());
+                            if kb > 0 {
+                                engine.kv.lookup_path_match(&pfx.path[..kb]).ready_tokens
+                            } else {
+                                0
+                            }
+                        }
+                        _ => 0,
+                    };
+                    engine.pool.force_prefix_fallback(id, engine.now, ready);
                     continue;
                 }
                 // genuinely drained: every generated arrival is served —

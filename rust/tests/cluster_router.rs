@@ -176,7 +176,7 @@ fn round_robin_routing_reproduces_the_static_partition_bitwise() {
             .iter()
             .enumerate()
             .filter(|(g, _)| g % replicas == ri)
-            .map(|(_, &s)| s)
+            .map(|(_, s)| s.clone())
             .collect();
         let res = sim.run_shared(&local, make_kv(), Some(8), make_sched);
         for (li, (g, _)) in

@@ -148,10 +148,18 @@ fn prefix_hits_and_shared_occupancy_land_in_the_jsonl_trace() {
         .sum();
     assert_eq!(hits, on.metrics.prefix_hits);
     // …and shared occupancy is visibly non-zero while sharers run
+    // (shared_kv_tokens is followed by the partial-hit fields now, so
+    // probe with the trailing comma, not a closing brace)
     assert!(
-        text.lines().any(|l| !l.contains("\"shared_kv_tokens\":0}")
+        text.lines().any(|l| !l.contains("\"shared_kv_tokens\":0,")
             && l.contains("\"shared_kv_tokens\":")),
         "no iteration reports shared KV occupancy"
+    );
+    // the radix partial-hit fields are part of the schema on every line
+    assert!(
+        text.lines().all(|l| l.contains("\"prefix_partial_hits\":")
+            && l.contains("\"prefix_partial_hit_tokens\":")),
+        "partial-hit fields missing from the JSONL schema"
     );
     std::fs::remove_file(&path).ok();
 }
