@@ -96,6 +96,19 @@ echo "$DOUT" | grep -E 'kv_transfers=[1-9][0-9]*' \
 grep -q '"kv_transfer_time":' "$DTRACE" || { echo "JSONL lacks kv_transfer_time"; exit 1; }
 rm -f "$DTRACE"
 
+echo "== smoke: disagg --trace-out — Perfetto timeline with bubble + transfer spans =="
+TL="$(mktemp -t disagg_timeline.XXXXXX.json)"
+TOUT="$(cargo run --release -- simulate --requests 120 --rate 2 \
+    --replicas 4 --topology disagg --prefill-replicas 1 \
+    --interconnect-gbps 200 --threads 2 --trace-out "$TL")"
+echo "$TOUT" | grep -E 'ttft decomposition \(mean over [1-9][0-9]* requests\).*kv_transfer=[0-9.]+s' \
+    || { echo "report lacks the latency decomposition"; exit 1; }
+grep -q '"traceEvents":\[' "$TL" || { echo "timeline lacks traceEvents"; exit 1; }
+grep -q '"cat":"bubble"' "$TL" || { echo "timeline has no bubble spans"; exit 1; }
+grep -q '"cat":"kv-transfer"' "$TL" || { echo "timeline has no transfer lanes"; exit 1; }
+grep -q '"cat":"batch"' "$TL" || { echo "timeline has no batch spans"; exit 1; }
+rm -f "$TL"
+
 echo "== smoke: soak mode — progress lines, controller activity, streaming JSONL =="
 STRACE="$(mktemp -t soak_trace.XXXXXX.jsonl)"
 SOUT="$(cargo run --release -- simulate --horizon-secs 40 --flush-every 5 --rate 2 \

@@ -145,6 +145,19 @@ impl<'a> Engine<'a> {
             self.metrics.prefix_wait_iterations += prefix_wait_iters;
             // idle: jump to the next arrival if one exists
             if let Some(t) = self.pool.next_arrival(self.now) {
+                if self.pool.trace.is_enabled() && t > self.now {
+                    // classify the bubble: arrived work stuck in the queue
+                    // means admission (KV blocks) is the blocker; an empty
+                    // queue is genuine open-loop idleness
+                    let class = if self.pool.next_queued(self.now).is_some() {
+                        super::trace::BubbleClass::KvStarved
+                    } else {
+                        super::trace::BubbleClass::NoWork
+                    };
+                    self.pool
+                        .trace
+                        .emit(self.now, super::trace::EventKind::Bubble { end: t, class });
+                }
                 self.now = t;
                 return true;
             }
@@ -168,12 +181,32 @@ impl<'a> Engine<'a> {
         // early, skewing every latency sample); a resumed victim's KV must
         // finish its host transfer before the batch can run
         let done_at = self.now + swap_in + outcome.elapsed;
-        let effects = self.applier.apply(
+        let batch_id = self.metrics.recorded_count() as u64;
+        if self.pool.trace.is_enabled() {
+            self.pool.trace.emit(
+                self.now,
+                super::trace::EventKind::BatchSpan {
+                    batch: batch_id,
+                    end: done_at,
+                    prefill_tokens: shape.prefill_tokens(),
+                    decode_tokens: shape.decode_tokens(),
+                    n_prefill: shape.prefill.len(),
+                    n_decode: shape.decode.len(),
+                    budget_capped: self
+                        .scheduler
+                        .token_budget()
+                        .is_some_and(|b| shape.total_tokens() >= b),
+                },
+            );
+        }
+        let effects = self.applier.apply_traced(
             std::slice::from_mut(&mut self.pool),
             0,
             &mut self.kv,
             &batch,
             done_at,
+            &[],
+            batch_id,
         );
         self.metrics.record(IterationRecord {
             started_at: self.now,

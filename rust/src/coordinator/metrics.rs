@@ -20,6 +20,12 @@ use super::pool::RequestPool;
 use crate::costmodel::{BatchShape, OpBreakdown};
 use crate::util::Summary;
 
+/// Version stamped into every JSONL record this crate emits (iteration
+/// records, transfer records, per-request breakdowns, the Chrome-trace
+/// export) so consumers stop guessing the schema by PR vintage. Bump on
+/// any field addition/removal/rename.
+pub const JSONL_SCHEMA_VERSION: u32 = 2;
+
 /// One executed iteration.
 #[derive(Clone, Debug)]
 pub struct IterationRecord {
@@ -114,7 +120,7 @@ impl IterationRecord {
     /// `"replica"` tag; `None` keeps the engine schema byte-identical.
     pub fn to_jsonl(&self, idx: usize, replica: Option<usize>) -> String {
         let core = format!(
-            "{{\"iter\":{},\"start\":{:.6},\"elapsed\":{:.6},\
+            "{{\"iter\":{},\"schema_version\":{},\"start\":{:.6},\"elapsed\":{:.6},\
              \"prefill_chunks\":{},\"prefill_tokens\":{},\"decodes\":{},\
              \"total_tokens\":{},\"kv_blocks_in_use\":{},\"kv_blocks_total\":{},\
              \"kv_frag_tokens\":{},\"active\":{},\"preemptions\":{},\
@@ -123,6 +129,7 @@ impl IterationRecord {
              \"shared_kv_tokens\":{},\"prefix_partial_hits\":{},\
              \"prefix_partial_hit_tokens\":{}",
             idx,
+            JSONL_SCHEMA_VERSION,
             self.started_at,
             self.elapsed,
             self.shape.prefill.len(),

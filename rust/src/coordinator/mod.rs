@@ -35,6 +35,7 @@ pub mod pool;
 pub mod request;
 pub mod sched;
 pub mod step;
+pub mod trace;
 
 pub use batch::{Batch, WorkItem};
 pub use control::{ControllerConfig, SloController, TickOutcome};
@@ -43,7 +44,9 @@ pub use kv::{
     derived_path, KvExport, KvManager, PathMatch, ResidencyDigest, StageKv, DEGENERATE_BLOCK,
     DIGEST_CAP,
 };
-pub use metrics::{IterationRecord, JsonlStream, LatencyReport, Metrics};
+pub use metrics::{
+    IterationRecord, JsonlStream, LatencyReport, Metrics, JSONL_SCHEMA_VERSION,
+};
 pub use pool::RequestPool;
 pub use request::{Phase, PrefixWaitState, Request, RequestId};
 pub use sched::{
@@ -51,3 +54,7 @@ pub use sched::{
     RequestLevelScheduler, SarathiScheduler, Scheduler,
 };
 pub use step::{PreemptionMode, StepApplier, StepEffects, SwapCost};
+// NOTE: trace::TraceEvent is deliberately NOT re-exported bare — the
+// pipeline simulator already exports its Fig.-5 schedule TraceEvent under
+// `crate::simulator::TraceEvent`; qualify `trace::TraceEvent` instead.
+pub use trace::{BubbleClass, EventKind, LatencyBreakdown, TraceSink};

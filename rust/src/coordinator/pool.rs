@@ -12,6 +12,7 @@
 use std::collections::VecDeque;
 
 use super::request::{Phase, Request, RequestId};
+use super::trace::{EventKind, TraceSink};
 use crate::util::Summary;
 use crate::workload::RequestSpec;
 
@@ -70,6 +71,10 @@ pub struct RequestPool {
     /// [`enable_tbt_window`](Self::enable_tbt_window); `None` costs
     /// nothing on non-soak runs).
     tbt_window: Option<Summary>,
+    /// Lifecycle event bus: every admission/completion/preemption/token
+    /// chokepoint below emits into it. Disabled (the default) it is a
+    /// single `None` check — the hot path stays allocation-free.
+    pub trace: TraceSink,
 }
 
 impl RequestPool {
@@ -100,9 +105,14 @@ impl RequestPool {
 
     pub fn push(&mut self, spec: RequestSpec) -> RequestId {
         let id = self.base + self.requests.len();
+        let arrival = spec.arrival;
         self.requests.push_back(Request::new(id, spec));
         // typical workloads push in arrival order so this is O(1) amortized
         self.enqueue_pending(id);
+        if self.trace.is_enabled() {
+            self.trace.emit(arrival, EventKind::Arrived { request: id });
+            self.trace.emit(arrival, EventKind::Queued { request: id });
+        }
         id
     }
 
@@ -126,11 +136,15 @@ impl RequestPool {
     /// disaggregation import both go through it.
     pub fn stamp_token(&mut self, id: RequestId, at: f64) {
         let base = self.base;
-        if let Some(gap) = self.requests[id - base].note_token(at) {
-            self.tbt.add(gap);
-            if let Some(w) = &mut self.tbt_window {
-                w.add(gap);
+        match self.requests[id - base].note_token(at) {
+            Some(gap) => {
+                self.tbt.add(gap);
+                if let Some(w) = &mut self.tbt_window {
+                    w.add(gap);
+                }
+                self.trace.emit(at, EventKind::TokenEmitted { request: id });
             }
+            None => self.trace.emit(at, EventKind::FirstToken { request: id }),
         }
     }
 
@@ -170,17 +184,28 @@ impl RequestPool {
         // Exception: an imported request's KV arrived over the
         // interconnect (already costed on the copy stream), so its first
         // admission here moves nothing over the host link.
-        if self.requests[slot].imported {
+        let swap_tokens = if self.requests[slot].imported {
             self.requests[slot].imported = false;
+            0
         } else {
-            self.swapped_in_tokens += self.requests[slot].private_kv_tokens();
-        }
+            let t = self.requests[slot].private_kv_tokens();
+            self.swapped_in_tokens += t;
+            t
+        };
         let r = &mut self.requests[slot];
+        let first_admission = r.admitted_at.is_none();
+        // decomposition accounting: queued stints and swap-ins that happen
+        // before the first token are TTFT components
+        if r.first_token_at.is_none() {
+            r.queue_wait += (now - r.queued_since).max(0.0);
+            r.swapped_in_tokens_pre_first += swap_tokens;
+        }
         r.admitted = true;
         r.blocks = blocks;
         if r.admitted_at.is_none() {
             r.admitted_at = Some(now);
         }
+        let (shared_tokens, private_tokens) = (r.shared_tokens, r.private_kv_tokens());
         // ids are admitted FCFS from the pending head in practice; fall
         // back to a scan for out-of-order admissions (tests).
         if self.pending.get(self.pending_head) == Some(&id) {
@@ -191,6 +216,14 @@ impl RequestPool {
         // keep `active` id-sorted so phase queries need no per-call sort
         let pos = self.active.partition_point(|&a| a < id);
         self.active.insert(pos, id);
+        if self.trace.is_enabled() {
+            let kind = if first_admission {
+                EventKind::Admitted { request: id, shared_tokens, private_tokens }
+            } else {
+                EventKind::Resumed { request: id, swap_tokens }
+            };
+            self.trace.emit(now, kind);
+        }
     }
 
     /// Mark a request complete; returns its released KV block table.
@@ -206,6 +239,7 @@ impl RequestPool {
         let pos = self.active.binary_search(&id).expect("complete of inactive request");
         self.active.remove(pos);
         self.n_terminal += 1;
+        self.trace.emit(now, EventKind::Completed { request: id });
         blocks
     }
 
@@ -227,6 +261,7 @@ impl RequestPool {
         self.n_terminal += 1;
         self.n_rejected += 1;
         self.rejected_events += 1;
+        self.trace.emit(now, EventKind::Rejected { request: id });
     }
 
     /// Total requests rejected as infeasible so far.
@@ -327,6 +362,14 @@ impl RequestPool {
         let r = &mut self.requests[id - base];
         if let Some(w) = r.prefix_wait.take() {
             r.prefix_wait_time += (now - w.since).max(0.0);
+            if self.trace.is_enabled() {
+                // the wait's start is only known retroactively: emit both
+                // edges here (the merge re-orders them by time)
+                let fallback = r.prefix_fallback;
+                let (hash, since) = (w.hash, w.since);
+                self.trace.emit(since, EventKind::PrefixWaitStart { request: id, hash });
+                self.trace.emit(now, EventKind::PrefixWaitEnd { request: id, hash, fallback });
+            }
         }
     }
 
@@ -352,12 +395,14 @@ impl RequestPool {
     /// Preempt an active request: release its block table (returned to the
     /// caller to free), keep its progress counters, and re-queue it at its
     /// original arrival position so it resumes FCFS.
-    pub fn preempt(&mut self, id: RequestId, _now: f64) -> Vec<usize> {
+    pub fn preempt(&mut self, id: RequestId, now: f64) -> Vec<usize> {
         let base = self.base;
         let r = &mut self.requests[id - base];
         debug_assert!(r.admitted && r.completed_at.is_none());
+        let evicted_tokens = r.private_kv_tokens();
         r.admitted = false;
         r.preemptions += 1;
+        r.queued_since = now;
         // the split table is gone with the blocks; a re-admission
         // re-shares from the prefix index if the run is still resident
         r.shared_blocks = 0;
@@ -366,6 +411,7 @@ impl RequestPool {
         let pos = self.active.binary_search(&id).expect("preempt of inactive request");
         self.active.remove(pos);
         self.enqueue_pending(id);
+        self.trace.emit(now, EventKind::Preempted { request: id, evicted_tokens });
         blocks
     }
 

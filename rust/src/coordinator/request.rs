@@ -110,6 +110,16 @@ pub struct Request {
     pub admitted: bool,
     /// Times this request was preempted to free KV blocks.
     pub preemptions: usize,
+    /// When the current queued stint began: arrival at first, reset to the
+    /// preemption time on eviction. Feeds the queue-wait component of the
+    /// per-request latency decomposition.
+    pub queued_since: f64,
+    /// Accumulated time spent queued without KV blocks before the first
+    /// token (includes any prefix wait; the decomposition nets that out).
+    pub queue_wait: f64,
+    /// KV tokens this request swapped back over the host link before its
+    /// first token — prices the decomposition's swap component.
+    pub swapped_in_tokens_pre_first: usize,
     pub arrival: f64,
     pub admitted_at: Option<f64>,
     pub first_token_at: Option<f64>,
@@ -152,6 +162,9 @@ impl Request {
             imported: false,
             admitted: false,
             preemptions: 0,
+            queued_since: arrival,
+            queue_wait: 0.0,
+            swapped_in_tokens_pre_first: 0,
             arrival,
             admitted_at: None,
             first_token_at: None,

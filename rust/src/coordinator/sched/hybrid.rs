@@ -176,6 +176,10 @@ impl Scheduler for HybridScheduler {
         true
     }
 
+    fn token_budget(&self) -> Option<usize> {
+        Some(self.token_budget)
+    }
+
     /// Runtime bounded-wait retarget. Clamped to ≥ 1: a zero window would
     /// demote every waiter on its first attempt, making the prefix cache
     /// inert rather than adaptive.

@@ -94,6 +94,14 @@ pub trait Scheduler {
         false
     }
 
+    /// The per-iteration fused-token budget, when this policy has one —
+    /// the trace layer marks batch spans that composed right up to it as
+    /// `budget_capped` (the chunking cap bounded the batch, not a lack of
+    /// runnable work). `None` for policies without a token budget.
+    fn token_budget(&self) -> Option<usize> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 

@@ -62,6 +62,10 @@ impl Scheduler for SarathiScheduler {
         Admission::default().with_infeasible(self.infeasible)
     }
 
+    fn token_budget(&self) -> Option<usize> {
+        Some(self.chunk_size)
+    }
+
     fn compose(&mut self, pool: &mut RequestPool, _kv: &mut KvManager, _now: f64) -> Batch {
         // every ready decode piggybacks (up to B−1 when a chunk rides along)
         let decoding: Vec<usize> = pool

@@ -169,11 +169,42 @@ impl StepApplier {
         done_at: f64,
         in_flight: &[(usize, RequestId)],
     ) -> StepEffects {
+        self.apply_traced(pools, owner, kv, batch, done_at, in_flight, 0)
+    }
+
+    /// [`apply_guarded`](Self::apply_guarded) carrying the driver's batch
+    /// id so per-chunk trace events ([`EventKind::ChunkScheduled`]) name
+    /// the iteration that ran them. The id is trace-only — state
+    /// transitions are identical for every value.
+    ///
+    /// [`EventKind::ChunkScheduled`]: super::trace::EventKind::ChunkScheduled
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_traced(
+        &self,
+        pools: &mut [RequestPool],
+        owner: usize,
+        kv: &mut KvManager,
+        batch: &Batch,
+        done_at: f64,
+        in_flight: &[(usize, RequestId)],
+        batch_id: u64,
+    ) -> StepEffects {
         let mut effects = StepEffects::default();
         // 1. progress + token stamping
         {
             let pool = &mut pools[owner];
-            for (req, _start, len) in batch.prefill_items() {
+            for (req, start, len) in batch.prefill_items() {
+                if pool.trace.is_enabled() {
+                    pool.trace.emit(
+                        done_at,
+                        super::trace::EventKind::ChunkScheduled {
+                            request: req,
+                            batch: batch_id,
+                            start,
+                            len,
+                        },
+                    );
+                }
                 let r = pool.get_mut(req);
                 r.prefilled += len;
                 let prompt_done = r.prefilled == r.spec.prompt_len;

@@ -1,0 +1,726 @@
+//! Event-sourced request tracing: the coordinator-level event bus.
+//!
+//! Every layer of the stack (pool, step applier, engine, pipeline,
+//! cluster, soak driver) emits typed lifecycle events into a per-pool
+//! [`TraceSink`]. The sink is **zero-cost when disabled** — the default
+//! sink is a `None` and every `emit` is an inlined early return — and
+//! allocation-bounded when enabled: a pre-sized ring that drops the
+//! newest events past its capacity (counting them) and is drained at
+//! flush boundaries, mirroring the soak harness's windowed telemetry.
+//!
+//! Determinism: events carry a `(time, replica, lane, seq)` key, where
+//! `seq` is the sink's own monotone counter. Per-replica event
+//! generation is sequential and independent of `--threads`, so the
+//! canonical merge ([`merge_streams`]) produces a bitwise-identical
+//! stream at every thread count (the PR-5/6 invariant, extended to the
+//! trace layer).
+//!
+//! Two exports derive from the one stream: the Chrome trace-event /
+//! Perfetto timeline ([`crate::report::timeline`]) and the per-request
+//! latency decomposition ([`LatencyBreakdown`]), which carries the
+//! measured TTFT / end-to-end latency bitwise and whose compute/decode
+//! components are conservation-checked residuals: the component re-sum
+//! reproduces the measured value bitwise except on round-to-even ties
+//! (within one ULP then — see [`LatencyBreakdown`]).
+
+use super::pool::RequestPool;
+use super::request::RequestId;
+use super::step::SwapCost;
+
+/// Why a replica/stream was idle for an interval — the bubble taxonomy
+/// of the timeline export (SARATHI §5.3's PB1/PB2/PB3 generalized to
+/// the serving stack).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BubbleClass {
+    /// Nothing to run and nothing queued: genuine idleness (open-loop
+    /// arrival gaps).
+    NoWork,
+    /// Work is queued but could not be admitted/composed — blocked on
+    /// KV blocks or admission gates.
+    KvStarved,
+    /// The iteration's token budget capped composition below the
+    /// available work.
+    BudgetCapped,
+    /// A pipeline stage waited for an upstream micro-batch (the Fig. 5
+    /// pipeline bubble).
+    BarrierWait,
+}
+
+impl BubbleClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BubbleClass::NoWork => "no-work",
+            BubbleClass::KvStarved => "kv-starved",
+            BubbleClass::BudgetCapped => "budget-capped",
+            BubbleClass::BarrierWait => "barrier-wait",
+        }
+    }
+}
+
+/// Typed per-request lifecycle events plus per-iteration batch spans,
+/// idle (bubble) intervals and KV handoff spans.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// The request entered the system (workload arrival).
+    Arrived { request: RequestId },
+    /// The request joined the admission queue (same instant as
+    /// `Arrived` today; kept distinct so deferred enqueue can diverge).
+    Queued { request: RequestId },
+    /// Retroactively emitted when a prefix wait resolves: the request
+    /// began waiting on template `hash`'s in-flight fill at this
+    /// event's time.
+    PrefixWaitStart { request: RequestId, hash: u64 },
+    /// The wait resolved — as a hit (`fallback: false`) or by
+    /// degrading to a full-price miss.
+    PrefixWaitEnd { request: RequestId, hash: u64, fallback: bool },
+    /// First admission: the request got its KV table, split into
+    /// shared (prefix-resident) and private tokens.
+    Admitted { request: RequestId, shared_tokens: usize, private_tokens: usize },
+    /// Re-admission of a preempted request; `swap_tokens` crossed the
+    /// host link (0 when a resident prefix covered everything).
+    Resumed { request: RequestId, swap_tokens: usize },
+    /// One prefill chunk `[start, start+len)` ran in batch `batch`.
+    ChunkScheduled { request: RequestId, batch: u64, start: usize, len: usize },
+    /// Evicted to free KV blocks; `evicted_tokens` of private KV moved
+    /// (or were dropped for recompute).
+    Preempted { request: RequestId, evicted_tokens: usize },
+    /// KV handoff span over the interconnect: `[at, end]` on the
+    /// `(src → dst)` fabric lane.
+    KvTransfer { request: usize, src: usize, dst: usize, end: f64 },
+    FirstToken { request: RequestId },
+    TokenEmitted { request: RequestId },
+    Completed { request: RequestId },
+    Rejected { request: RequestId },
+    /// One executed iteration: `[at, end]`, with its composition.
+    BatchSpan {
+        batch: u64,
+        end: f64,
+        prefill_tokens: usize,
+        decode_tokens: usize,
+        n_prefill: usize,
+        n_decode: usize,
+        budget_capped: bool,
+    },
+    /// Idle interval `[at, end]` on this lane, classified.
+    Bubble { end: f64, class: BubbleClass },
+}
+
+/// One event on the bus. `at` is the simulated time; `(at, replica,
+/// lane, seq)` is the canonical merge key. `lane` is the display
+/// thread: the pp stream for engine/lifecycle events, the stage index
+/// for pipeline stage spans and barrier bubbles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub at: f64,
+    pub replica: u32,
+    pub lane: u32,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+/// The enabled sink's state: a pre-sized ring of events plus the
+/// drain/leak counters the soak harness reports.
+#[derive(Clone, Debug)]
+struct SinkBuf {
+    events: Vec<TraceEvent>,
+    cap: usize,
+    replica: u32,
+    lane: u32,
+    seq: u64,
+    emitted: u64,
+    dropped: u64,
+    high_water: usize,
+}
+
+/// Default ring capacity between drains (events, not bytes).
+pub const DEFAULT_TRACE_CAP: usize = 1 << 16;
+
+/// The per-pool event bus. Disabled (the default) it is a single
+/// `None` — `emit` is an inlined early return, preserving the PR-6
+/// allocation-free hot path bit for bit. Enabled, it buffers into a
+/// pre-sized ring drained at flush boundaries.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink(Option<Box<SinkBuf>>);
+
+impl TraceSink {
+    /// The no-op sink (also `Default`).
+    pub fn disabled() -> Self {
+        TraceSink(None)
+    }
+
+    /// An enabled sink with ring capacity `cap` (events past it are
+    /// dropped newest-first and counted).
+    pub fn enabled(cap: usize) -> Self {
+        let cap = cap.max(1);
+        TraceSink(Some(Box::new(SinkBuf {
+            events: Vec::with_capacity(cap.min(DEFAULT_TRACE_CAP)),
+            cap,
+            replica: 0,
+            lane: 0,
+            seq: 0,
+            emitted: 0,
+            dropped: 0,
+            high_water: 0,
+        })))
+    }
+
+    /// Stamp every future event with this replica/lane identity.
+    pub fn set_identity(&mut self, replica: u32, lane: u32) {
+        if let Some(b) = &mut self.0 {
+            b.replica = replica;
+            b.lane = lane;
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Emit `kind` at time `at` on the sink's default lane.
+    #[inline]
+    pub fn emit(&mut self, at: f64, kind: EventKind) {
+        if let Some(b) = &mut self.0 {
+            let lane = b.lane;
+            Self::push(b, at, lane, kind);
+        }
+    }
+
+    /// Emit on an explicit lane (pipeline stage spans/bubbles).
+    #[inline]
+    pub fn emit_on(&mut self, at: f64, lane: u32, kind: EventKind) {
+        if let Some(b) = &mut self.0 {
+            Self::push(b, at, lane, kind);
+        }
+    }
+
+    fn push(b: &mut SinkBuf, at: f64, lane: u32, kind: EventKind) {
+        let seq = b.seq;
+        b.seq += 1;
+        b.emitted += 1;
+        if b.events.len() >= b.cap {
+            b.dropped += 1;
+            return;
+        }
+        b.events.push(TraceEvent { at, replica: b.replica, lane, seq, kind });
+        b.high_water = b.high_water.max(b.events.len());
+    }
+
+    /// Take the buffered events out (emission order), keeping the
+    /// counters — the flush-boundary drain.
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        match &mut self.0 {
+            Some(b) => std::mem::take(&mut b.events),
+            None => Vec::new(),
+        }
+    }
+
+    /// Drain into `out` (the cluster's merge accumulator).
+    pub fn drain_into(&mut self, out: &mut Vec<TraceEvent>) {
+        if let Some(b) = &mut self.0 {
+            out.append(&mut b.events);
+        }
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.0.as_ref().map_or(0, |b| b.events.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events ever emitted (dropped ones included).
+    pub fn emitted(&self) -> u64 {
+        self.0.as_ref().map_or(0, |b| b.emitted)
+    }
+
+    /// Events the ring dropped for want of capacity.
+    pub fn dropped(&self) -> u64 {
+        self.0.as_ref().map_or(0, |b| b.dropped)
+    }
+
+    /// Peak buffered events between drains — the soak leak detector's
+    /// trace-ring counter.
+    pub fn high_water(&self) -> usize {
+        self.0.as_ref().map_or(0, |b| b.high_water)
+    }
+}
+
+/// Canonically merge per-sink event streams into ONE deterministic
+/// stream, ordered by `(time, replica, lane, seq)`. Each sink's events
+/// are generated sequentially regardless of `--threads`, so the merged
+/// stream is bitwise identical at every thread count.
+pub fn merge_streams(streams: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = streams.into_iter().flatten().collect();
+    all.sort_by(|a, b| {
+        a.at.total_cmp(&b.at)
+            .then(a.replica.cmp(&b.replica))
+            .then(a.lane.cmp(&b.lane))
+            .then(a.seq.cmp(&b.seq))
+    });
+    all
+}
+
+/// Step one ULP toward +∞ (finite inputs; 0.0 steps to the smallest
+/// subnormal).
+fn next_up(x: f64) -> f64 {
+    if x.is_nan() || x == f64::INFINITY {
+        return x;
+    }
+    if x == 0.0 {
+        return f64::from_bits(1);
+    }
+    let bits = x.to_bits();
+    if x > 0.0 {
+        f64::from_bits(bits + 1)
+    } else {
+        f64::from_bits(bits - 1)
+    }
+}
+
+fn next_down(x: f64) -> f64 {
+    -next_up(-x)
+}
+
+/// The residual `r` such that `partial + r` reproduces `target`
+/// BITWISE whenever one exists. `target - partial` is the right answer
+/// to within one ULP; the walk fixes the rounding of the re-sum. No
+/// such `r` exists when `partial` sits exactly half an ULP(target) off
+/// target's grid: every candidate sum is a round-to-even tie and only
+/// even-parity results are representable — the fallback is then within
+/// one ULP of `target` (which is why [`LatencyBreakdown`] carries the
+/// measured totals instead of relying on the re-sum).
+fn conserved_residual(target: f64, partial: f64) -> f64 {
+    let mut r = target - partial;
+    for _ in 0..64 {
+        let s = partial + r;
+        if s.to_bits() == target.to_bits() {
+            return r;
+        }
+        r = if s < target { next_up(r) } else { next_down(r) };
+    }
+    target - partial
+}
+
+/// Per-request causal latency decomposition:
+/// `ttft = queue_wait + prefix_wait + swap + kv_transfer + compute`
+/// and `e2e = ttft + decode`, conserved against the pool-measured
+/// `first_token_at − arrival` / `completed_at − arrival`.
+///
+/// Conservation is two-layered. The breakdown CARRIES the measured
+/// totals (`ttft`, `e2e` — what [`total_ttft`](Self::total_ttft) /
+/// [`total_e2e`](Self::total_e2e) return), so reported totals are the
+/// measured latencies bitwise by construction. `compute` and `decode`
+/// are ULP-walked residuals chosen so the left-to-right component
+/// re-sum ([`resummed_ttft`](Self::resummed_ttft)) reproduces the
+/// measured value bitwise wherever IEEE-754 permits; when the wait sum
+/// sits exactly half an ULP off the target's grid every candidate sum
+/// is a round-to-even tie and the target's parity can be unreachable —
+/// the re-sum is then within one ULP (see
+/// `round_to_even_ties_cap_the_resum_error_at_one_ulp`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Request id — pool-local for an engine run, global (cluster
+    /// dispatch order) for cluster runs.
+    pub request: usize,
+    pub arrival: f64,
+    /// Measured first-token latency (`first_token_at − arrival`).
+    pub ttft: f64,
+    /// Measured end-to-end latency (`completed_at − arrival`); equals
+    /// `ttft` while the request is incomplete.
+    pub e2e: f64,
+    /// Time queued without KV blocks before the first token, net of
+    /// the prefix wait below.
+    pub queue_wait: f64,
+    /// Time blocked on an in-flight prefix fill.
+    pub prefix_wait: f64,
+    /// Host-link swap-in charge for KV this request moved back before
+    /// its first token.
+    pub swap: f64,
+    /// Interconnect KV-handoff latency (disaggregated runs; 0
+    /// elsewhere). Charged to the decode side of `e2e`, not to TTFT,
+    /// when the first token is produced prefill-side.
+    pub kv_transfer: f64,
+    /// Residual of TTFT over the waits: execution plus in-batch
+    /// contention until the first token.
+    pub compute: f64,
+    /// Residual of end-to-end latency over TTFT + kv_transfer: the
+    /// decode phase (0 for incomplete requests).
+    pub decode: f64,
+    /// Whether `completed_at` existed (decode/e2e are meaningful).
+    pub completed: bool,
+    /// Preemptions this request suffered (TBT stall attribution).
+    pub preemptions: usize,
+    /// Largest token gap (the TBT that goodput SLOs check).
+    pub max_tbt: f64,
+    /// Output tokens budgeted (normalized-latency denominator).
+    pub decode_len: usize,
+}
+
+impl LatencyBreakdown {
+    /// The conserved TTFT: the measured first-token latency, bitwise.
+    pub fn total_ttft(&self) -> f64 {
+        self.ttft
+    }
+
+    /// The conserved end-to-end latency (arrival → completion).
+    pub fn total_e2e(&self) -> f64 {
+        self.e2e
+    }
+
+    /// The component re-sum in fixed left-to-right order — bitwise
+    /// equal to [`total_ttft`](Self::total_ttft) except on
+    /// round-to-even ties, where it is within one ULP.
+    pub fn resummed_ttft(&self) -> f64 {
+        (((self.queue_wait + self.prefix_wait) + self.swap) + self.kv_transfer) + self.compute
+    }
+
+    /// Component re-sum of e2e (`resummed_ttft + decode`); same
+    /// one-ULP tie caveat as [`resummed_ttft`](Self::resummed_ttft).
+    pub fn resummed_e2e(&self) -> f64 {
+        self.resummed_ttft() + self.decode
+    }
+
+    /// Normalized latency from the conserved e2e — bitwise equal to
+    /// the report's `(completed_at − arrival) / decode_len` because
+    /// the numerators are bitwise equal.
+    pub fn normalized(&self) -> f64 {
+        self.total_e2e() / self.decode_len.max(1) as f64
+    }
+
+    /// Coarse cause for this request's worst token gap.
+    pub fn stall_cause(&self) -> &'static str {
+        if self.preemptions > 0 {
+            "preemption"
+        } else {
+            "contention"
+        }
+    }
+
+    /// Build the decomposition for one request from its pool-tracked
+    /// accumulators. `swap_cost` prices the pre-first-token swap-in
+    /// tokens; `kv_transfer` is the driver-level handoff latency
+    /// (disaggregation) and 0 elsewhere. Returns `None` for requests
+    /// that never produced a first token.
+    pub fn for_request(
+        r: &super::request::Request,
+        swap_cost: &SwapCost,
+        kv_transfer: f64,
+    ) -> Option<Self> {
+        let first = r.first_token_at?;
+        let ttft = first - r.arrival;
+        let prefix_wait = r.prefix_wait_time.min(r.queue_wait);
+        let queue_wait = (r.queue_wait - prefix_wait).max(0.0);
+        let swap = swap_cost.swap_in_time(r.swapped_in_tokens_pre_first);
+        // disaggregation stitches the first token prefill-side, so the
+        // handoff belongs to the decode phase of e2e, never to TTFT
+        let partial = ((queue_wait + prefix_wait) + swap) + 0.0;
+        let compute = conserved_residual(ttft, partial);
+        let mut bd = LatencyBreakdown {
+            request: r.id,
+            arrival: r.arrival,
+            ttft,
+            e2e: ttft,
+            queue_wait,
+            prefix_wait,
+            swap,
+            kv_transfer,
+            compute,
+            decode: 0.0,
+            completed: false,
+            preemptions: r.preemptions,
+            max_tbt: r.max_tbt,
+            decode_len: r.spec.decode_len,
+        };
+        // fold the handoff into the TTFT re-sum chain: compute was
+        // made the residual of (partial + 0.0); re-derive it against
+        // the 4-term partial including kv_transfer so resummed_ttft()
+        // still reproduces ttft (bitwise, modulo rounding ties)
+        if kv_transfer != 0.0 {
+            let partial4 = ((queue_wait + prefix_wait) + swap) + kv_transfer;
+            bd.compute = conserved_residual(ttft, partial4);
+        }
+        if let Some(done) = r.completed_at {
+            let e2e = done - r.arrival;
+            bd.e2e = e2e;
+            bd.decode = conserved_residual(e2e, bd.resummed_ttft());
+            bd.completed = true;
+        }
+        Some(bd)
+    }
+
+    /// Re-stitch a prefill-side breakdown with the disaggregation
+    /// handoff: fold `kv_transfer` into the TTFT re-sum chain
+    /// (`compute` re-derived against the measured first-token latency)
+    /// and re-derive `decode` against the DECODE-side completion — the
+    /// prefill copy's own completion is just its first token.
+    pub fn with_handoff(mut self, kv_transfer: f64, completed_at: Option<f64>) -> Self {
+        let ttft = self.ttft;
+        self.kv_transfer = kv_transfer;
+        let partial = ((self.queue_wait + self.prefix_wait) + self.swap) + self.kv_transfer;
+        self.compute = conserved_residual(ttft, partial);
+        self.completed = false;
+        self.decode = 0.0;
+        self.e2e = ttft;
+        if let Some(done) = completed_at {
+            let e2e = done - self.arrival;
+            self.e2e = e2e;
+            self.decode = conserved_residual(e2e, self.resummed_ttft());
+            self.completed = true;
+        }
+        self
+    }
+
+    /// One JSON-Lines record (`"request"`-tagged so iteration records
+    /// and transfer records coexist in the same trace).
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"request\":{{\"id\":{},\"arrival\":{:.6},\"ttft\":{:.9},\
+             \"queue_wait\":{:.9},\"prefix_wait\":{:.9},\"swap\":{:.9},\
+             \"kv_transfer\":{:.9},\"compute\":{:.9},\"decode\":{:.9},\
+             \"e2e\":{:.9},\"normalized\":{:.9},\"completed\":{},\
+             \"preemptions\":{},\"max_tbt\":{:.9},\"stall_cause\":\"{}\",\
+             \"schema_version\":{}}}}}",
+            self.request,
+            self.arrival,
+            self.total_ttft(),
+            self.queue_wait,
+            self.prefix_wait,
+            self.swap,
+            self.kv_transfer,
+            self.compute,
+            self.decode,
+            self.total_e2e(),
+            self.normalized(),
+            self.completed,
+            self.preemptions,
+            self.max_tbt,
+            self.stall_cause(),
+            crate::coordinator::metrics::JSONL_SCHEMA_VERSION,
+        )
+    }
+}
+
+/// Decompositions for every first-token request across `pools`
+/// (pool/emission order). `kv_transfer` looks up the per-request
+/// handoff latency by request id (None ⇒ 0 everywhere).
+pub fn breakdowns_from_pools(
+    pools: &[RequestPool],
+    swap_cost: &SwapCost,
+    kv_transfer: Option<&dyn Fn(RequestId) -> f64>,
+) -> Vec<LatencyBreakdown> {
+    let mut out = Vec::new();
+    for p in pools {
+        for r in p.iter() {
+            let kt = kv_transfer.map_or(0.0, |f| f(r.id));
+            if let Some(bd) = LatencyBreakdown::for_request(r, swap_cost, kt) {
+                out.push(bd);
+            }
+        }
+    }
+    out
+}
+
+/// Mean-of-components summary line for the report (over `n` requests).
+pub fn breakdown_summary(bds: &[LatencyBreakdown]) -> String {
+    if bds.is_empty() {
+        return "ttft decomposition: (no first tokens)".to_string();
+    }
+    let n = bds.len() as f64;
+    let mean = |f: &dyn Fn(&LatencyBreakdown) -> f64| bds.iter().map(|b| f(b)).sum::<f64>() / n;
+    format!(
+        "ttft decomposition (mean over {} requests): queue_wait={:.4}s prefix_wait={:.4}s \
+         swap={:.4}s kv_transfer={:.4}s compute={:.4}s | decode={:.4}s stalls(preempt={} \
+         contention={})",
+        bds.len(),
+        mean(&|b| b.queue_wait),
+        mean(&|b| b.prefix_wait),
+        mean(&|b| b.swap),
+        mean(&|b| b.kv_transfer),
+        mean(&|b| b.compute),
+        mean(&|b| b.decode),
+        bds.iter().filter(|b| b.preemptions > 0).count(),
+        bds.iter().filter(|b| b.preemptions == 0).count(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::RequestSpec;
+
+    #[test]
+    fn disabled_sink_is_inert_and_costless() {
+        let mut s = TraceSink::default();
+        assert!(!s.is_enabled());
+        s.emit(1.0, EventKind::Arrived { request: 0 });
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.emitted(), 0);
+        assert_eq!(s.high_water(), 0);
+        assert!(s.drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_sink_buffers_counts_and_drains() {
+        let mut s = TraceSink::enabled(8);
+        s.set_identity(2, 1);
+        s.emit(0.5, EventKind::Arrived { request: 3 });
+        s.emit_on(0.7, 4, EventKind::FirstToken { request: 3 });
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.emitted(), 2);
+        assert_eq!(s.high_water(), 2);
+        let evs = s.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!((evs[0].replica, evs[0].lane, evs[0].seq), (2, 1, 0));
+        assert_eq!((evs[1].replica, evs[1].lane, evs[1].seq), (2, 4, 1));
+        assert_eq!(s.len(), 0, "drain empties the ring");
+        assert_eq!(s.emitted(), 2, "counters survive the drain");
+        s.emit(1.0, EventKind::Completed { request: 3 });
+        assert_eq!(s.drain()[0].seq, 2, "seq keeps counting across drains");
+    }
+
+    #[test]
+    fn overflow_drops_newest_and_counts() {
+        let mut s = TraceSink::enabled(2);
+        for i in 0..5 {
+            s.emit(i as f64, EventKind::TokenEmitted { request: 0 });
+        }
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.emitted(), 5);
+        assert_eq!(s.dropped(), 3);
+        assert_eq!(s.high_water(), 2);
+        let evs = s.drain();
+        assert_eq!(evs[0].at, 0.0, "oldest events are the ones kept");
+        assert_eq!(evs[1].at, 1.0);
+    }
+
+    #[test]
+    fn merge_is_canonical_over_time_replica_lane_seq() {
+        let a = vec![
+            TraceEvent { at: 1.0, replica: 1, lane: 0, seq: 0, kind: EventKind::Arrived { request: 0 } },
+            TraceEvent { at: 2.0, replica: 1, lane: 0, seq: 1, kind: EventKind::Completed { request: 0 } },
+        ];
+        let b = vec![
+            TraceEvent { at: 1.0, replica: 0, lane: 0, seq: 0, kind: EventKind::Arrived { request: 1 } },
+            TraceEvent { at: 1.5, replica: 0, lane: 0, seq: 1, kind: EventKind::FirstToken { request: 1 } },
+        ];
+        let m1 = merge_streams(vec![a.clone(), b.clone()]);
+        let m2 = merge_streams(vec![b, a]);
+        assert_eq!(m1, m2, "merge order is independent of stream order");
+        assert_eq!(m1[0].replica, 0, "replica breaks the time tie");
+        assert_eq!(m1[1].replica, 1);
+    }
+
+    fn request_with(first: f64, done: Option<f64>) -> crate::coordinator::request::Request {
+        let spec = RequestSpec { prompt_len: 64, decode_len: 8, arrival: 0.125, prefix: None };
+        let mut r = crate::coordinator::request::Request::new(7, spec);
+        r.first_token_at = Some(first);
+        r.completed_at = done;
+        r.queue_wait = 0.0625;
+        r.prefix_wait_time = 0.03125;
+        r.queue_wait += r.prefix_wait_time;
+        r
+    }
+
+    #[test]
+    fn breakdown_conserves_ttft_and_e2e_bitwise() {
+        let r = request_with(1.0471975511965976, Some(3.141592653589793));
+        let bd = LatencyBreakdown::for_request(&r, &SwapCost::free(), 0.0).unwrap();
+        let ttft = r.first_token_at.unwrap() - r.arrival;
+        let e2e = r.completed_at.unwrap() - r.arrival;
+        assert_eq!(bd.total_ttft().to_bits(), ttft.to_bits());
+        assert_eq!(bd.total_e2e().to_bits(), e2e.to_bits());
+        // these magnitudes avoid the round-to-even tie, so the
+        // component re-sum reproduces the measured values bitwise too
+        assert_eq!(bd.resummed_ttft().to_bits(), ttft.to_bits());
+        assert_eq!(bd.resummed_e2e().to_bits(), e2e.to_bits());
+        let norm = e2e / r.spec.decode_len as f64;
+        assert_eq!(bd.normalized().to_bits(), norm.to_bits());
+        assert!(bd.queue_wait > 0.0 && bd.prefix_wait > 0.0);
+        assert!(bd.compute > 0.0 && bd.decode > 0.0);
+    }
+
+    #[test]
+    fn breakdown_conserves_with_kv_transfer_component() {
+        let r = request_with(0.7071067811865476, Some(2.718281828459045));
+        let bd = LatencyBreakdown::for_request(&r, &SwapCost::free(), 0.2).unwrap();
+        let ttft = r.first_token_at.unwrap() - r.arrival;
+        let e2e = r.completed_at.unwrap() - r.arrival;
+        assert_eq!(bd.total_ttft().to_bits(), ttft.to_bits());
+        assert_eq!(bd.total_e2e().to_bits(), e2e.to_bits());
+        assert_eq!(bd.resummed_ttft().to_bits(), ttft.to_bits());
+        assert_eq!(bd.resummed_e2e().to_bits(), e2e.to_bits());
+        assert_eq!(bd.kv_transfer, 0.2);
+    }
+
+    #[test]
+    fn conserved_residual_survives_awkward_magnitudes() {
+        for (target, partial) in [
+            (1e-9, 1e-9 * 0.3),
+            (12345.678901234567, 0.000012345),
+            (0.0, 0.0),
+        ] {
+            let r = conserved_residual(target, partial);
+            assert_eq!((partial + r).to_bits(), target.to_bits(), "target={target}");
+        }
+    }
+
+    #[test]
+    fn round_to_even_ties_cap_the_resum_error_at_one_ulp() {
+        // `partial` sits exactly half an ULP(target) off target's
+        // grid, so every candidate sum is a round-to-even tie landing
+        // on even parity — `target` (odd last mantissa bit) is NOT
+        // representable as fl(partial + r) for ANY r. The fallback
+        // must stay within one ULP; this is why the breakdown carries
+        // the measured totals rather than relying on the re-sum.
+        for (target, partial) in [
+            (1.0 + f64::EPSILON, f64::EPSILON / 2.0),
+            (7.903759123055942, 3.6126524462651655),
+        ] {
+            let r = conserved_residual(target, partial);
+            let resum = partial + r;
+            assert_ne!(resum.to_bits(), target.to_bits(), "tie case became reachable");
+            let ulp = next_up(target) - target;
+            assert!((resum - target).abs() <= ulp, "fallback drifted past one ULP");
+        }
+    }
+
+    #[test]
+    fn breakdown_jsonl_has_every_field_and_the_schema_version() {
+        let r = request_with(1.0, Some(2.0));
+        let bd = LatencyBreakdown::for_request(&r, &SwapCost::free(), 0.0).unwrap();
+        let line = bd.to_jsonl();
+        for field in [
+            "\"id\":7",
+            "\"ttft\":",
+            "\"queue_wait\":",
+            "\"prefix_wait\":",
+            "\"swap\":",
+            "\"kv_transfer\":",
+            "\"compute\":",
+            "\"decode\":",
+            "\"e2e\":",
+            "\"normalized\":",
+            "\"stall_cause\":\"contention\"",
+            "\"schema_version\":",
+        ] {
+            assert!(line.contains(field), "missing {field} in {line}");
+        }
+        assert!(line.starts_with("{\"request\":{\"id\":7,"));
+        assert!(line.ends_with("}}"));
+    }
+
+    #[test]
+    fn incomplete_requests_decompose_ttft_only() {
+        let r = request_with(1.0, None);
+        let bd = LatencyBreakdown::for_request(&r, &SwapCost::free(), 0.0).unwrap();
+        assert!(!bd.completed);
+        assert_eq!(bd.decode, 0.0);
+        assert_eq!(bd.total_e2e().to_bits(), bd.total_ttft().to_bits());
+        let mut r2 = r;
+        r2.first_token_at = None;
+        assert!(LatencyBreakdown::for_request(&r2, &SwapCost::free(), 0.0).is_none());
+    }
+}

@@ -23,7 +23,7 @@
 //!            [--preemption swap|recompute]
 //!            [--prefix-share [--num-templates T] [--prefix-len L]]
 //!            [--max-prefix-wait K] [--bypass-window W]
-//!            [--json-out PATH]
+//!            [--json-out PATH] [--trace-out PATH]
 //!       engine-level simulation at scale: Zipf(0.4) lengths, Poisson
 //!       arrivals, paged KV — prints throughput and TTFT/TBT/normalized
 //!       latency percentiles. With `--pp P` (P > 1) the same workload
@@ -87,6 +87,14 @@
 //! observably stalled waiting head (0 = strict FCFS).
 //! `--json-out` writes one JSON object per iteration (shape, elapsed, KV
 //! blocks in use, preemptions, swap time) — the simulator-trace idiom.
+//! `--trace-out` (simulate) turns on the lifecycle event bus and writes a
+//! Chrome-trace / Perfetto timeline: replicas as processes, pp streams and
+//! KV-transfer lanes as threads, batch spans annotated with their
+//! prefill/decode composition and idle gaps classified
+//! (no-work / kv-starved / budget-capped / barrier-wait); the report
+//! gains the conservation-checked per-request TTFT decomposition
+//! (`queue_wait + prefix_wait + swap + kv_transfer + compute`, carrying
+//! the measured TTFT bitwise with residual-checked components).
 //! Open-loop paths (`serve`, `simulate`) REJECT requests that could never
 //! fit the KV pool (terminal state + metrics counter) instead of
 //! panicking; figure-repro paths keep the loud panic.
@@ -99,7 +107,7 @@ use sarathi::config::{
 };
 use sarathi::coordinator::{
     make_scheduler, Admission, ControllerConfig, Engine, KvManager, LatencyReport, Metrics,
-    RequestPool, SwapCost,
+    RequestPool, SwapCost, TraceSink,
 };
 use sarathi::figures;
 use sarathi::simulator::{run_soak, ClusterSim, PipelineSim, RouterKind, SoakOpts, Topology};
@@ -108,6 +116,12 @@ use sarathi::util::Rng;
 use sarathi::workload::{
     with_poisson_arrivals, zipf_population, RateCurve, RequestSpec, SoakWorkload,
 };
+
+/// Event-ring capacity per sink for `--trace-out` runs: sized for the
+/// CLI-scale workloads (the ring pre-allocates at most the library
+/// default and grows on demand, so small runs stay small); overflow is
+/// dropped-and-counted, never unbounded.
+const CLI_TRACE_CAP: usize = 1 << 20;
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
@@ -169,7 +183,7 @@ fn main() -> Result<()> {
                  \x20      [--prefix-share] [--num-templates T] [--prefix-len L]\n\
                  \x20      [--workload unique|conversation]\n\
                  \x20      [--max-prefix-wait K] [--bypass-window W]\n\
-                 \x20      [--json-out PATH]\n\
+                 \x20      [--json-out PATH] [--trace-out PATH]\n\
                  \x20      [--horizon-secs H] [--flush-every F] [--target-p99-tbt T]\n\
                  \x20      [--exact-arrivals]\n\
                  \x20      [--diurnal-amp A] [--diurnal-period P]\n\
@@ -487,7 +501,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             cfg.token_budget,
         );
         let mut w = so.workload(rate, &prefix);
-        return run_soak_cli(so, &mut engine, &cfg, &mut w, None, None, json_out.as_deref());
+        return run_soak_cli(so, &mut engine, &cfg, &mut w, None, None, json_out.as_deref(), None);
     }
     engine.run();
     println!(
@@ -630,6 +644,7 @@ impl SoakCliOpts {
 
 /// Drive a configured engine through soak mode and print the report
 /// (shared by cost-model serve and single-engine simulate).
+#[allow(clippy::too_many_arguments)]
 fn run_soak_cli(
     so: &SoakCliOpts,
     engine: &mut Engine,
@@ -638,6 +653,7 @@ fn run_soak_cli(
     ttft_slo: Option<f64>,
     tbt_slo: Option<f64>,
     json_out: Option<&Path>,
+    trace_out: Option<&Path>,
 ) -> Result<()> {
     let mut opts = SoakOpts::new(so.horizon, so.flush_every);
     opts.jsonl = json_out.map(Path::to_path_buf);
@@ -697,6 +713,16 @@ fn run_soak_cli(
                 rep.jsonl_dropped
             );
         }
+    }
+    if let Some(path) = trace_out {
+        sarathi::report::timeline::write_chrome_trace(path, &rep.events)?;
+        println!(
+            "timeline: {} events (hw={} dropped={}) -> {}",
+            rep.events.len(),
+            rep.trace_high_water,
+            rep.trace_dropped,
+            path.display()
+        );
     }
     Ok(())
 }
@@ -917,6 +943,7 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     }
     let preemption = preemption_mode(args)?;
     let json_out = flag_value(args, "--json-out").map(PathBuf::from);
+    let trace_out = flag_value(args, "--trace-out").map(PathBuf::from);
     let prefix = PrefixOpts::parse(args)?;
     let wait = WaitOpts::parse(args)?;
     if prefix.share && !(kind == SchedulerKind::Hybrid && block_size > 0) {
@@ -963,11 +990,13 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
             prefix,
             wait,
             json_out,
+            trace_out,
         });
     }
     if pp > 1 {
         return simulate_pipeline(
             n, kind, rate, budget, block_size, kv_blocks, pp, preemption, prefix, wait, json_out,
+            trace_out,
         );
     }
 
@@ -1022,11 +1051,25 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
             Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
         )
         .with_swap_cost(SwapCost::for_deployment(&d, preemption));
+        if trace_out.is_some() {
+            // the soak loop drains this ring every flush window, so the
+            // footprint stays bounded even over long horizons
+            engine.pool.trace = TraceSink::enabled(CLI_TRACE_CAP);
+        }
         let mut w = so.workload(rate, &prefix);
         // SLO deadlines gate goodput only when explicitly asked for
         let ttft = flag_value(args, "--ttft-slo").is_some().then_some(ttft_slo);
         let tbt = flag_value(args, "--tbt-slo").is_some().then_some(tbt_slo);
-        return run_soak_cli(so, &mut engine, &cfg, &mut w, ttft, tbt, json_out.as_deref());
+        return run_soak_cli(
+            so,
+            &mut engine,
+            &cfg,
+            &mut w,
+            ttft,
+            tbt,
+            json_out.as_deref(),
+            trace_out.as_deref(),
+        );
     }
 
     println!(
@@ -1042,8 +1085,17 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         }
     );
     let t0 = std::time::Instant::now();
+    // the sink must be live BEFORE requests are pushed so arrival events
+    // are captured; an untraced run keeps the zero-cost disabled sink
+    let mut pool = RequestPool::new();
+    if trace_out.is_some() {
+        pool.trace = TraceSink::enabled(CLI_TRACE_CAP);
+    }
+    for s in &pop {
+        pool.push(s.clone());
+    }
     let mut engine = Engine::new(
-        RequestPool::from_specs(&pop),
+        pool,
         kv,
         make_scheduler(&cfg),
         Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
@@ -1051,6 +1103,22 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     .with_swap_cost(SwapCost::for_deployment(&d, preemption));
     engine.run();
     println!("simulated in {:.2}s wall", t0.elapsed().as_secs_f64());
+    if let Some(path) = &trace_out {
+        let events = engine.pool.trace.drain();
+        let bds = sarathi::coordinator::trace::breakdowns_from_pools(
+            std::slice::from_ref(&engine.pool),
+            &engine.applier.swap,
+            None,
+        );
+        println!("{}", sarathi::coordinator::trace::breakdown_summary(&bds));
+        sarathi::report::timeline::write_chrome_trace(path, &events)?;
+        println!(
+            "timeline: {} events ({} dropped) -> {}",
+            events.len(),
+            engine.pool.trace.dropped(),
+            path.display()
+        );
+    }
     report_run(&engine, json_out.as_deref())
 }
 
@@ -1072,6 +1140,7 @@ fn simulate_pipeline(
     prefix: PrefixOpts,
     wait: WaitOpts,
     json_out: Option<PathBuf>,
+    trace_out: Option<PathBuf>,
 ) -> Result<()> {
     use sarathi::costmodel::CostModel;
     use sarathi::profiler::Profiler;
@@ -1126,7 +1195,8 @@ fn simulate_pipeline(
     let sim = PipelineSim::new(profiler, pp)
         .with_swap_cost(SwapCost::for_deployment(&d, preemption));
     let t0 = std::time::Instant::now();
-    let res = sim.run_shared(&pop, kv, Some(b), || make_scheduler(&cfg));
+    let trace_cap = trace_out.as_ref().map(|_| CLI_TRACE_CAP);
+    let res = sim.run_shared_traced(&pop, kv, Some(b), || make_scheduler(&cfg), trace_cap);
     println!("simulated in {:.2}s wall", t0.elapsed().as_secs_f64());
 
     let bubbles = res.bubble_summary();
@@ -1153,6 +1223,11 @@ fn simulate_pipeline(
         bubbles.percentile(99.0),
         res.total_bubble,
     );
+    if let Some(path) = &trace_out {
+        println!("{}", sarathi::coordinator::trace::breakdown_summary(&res.breakdowns));
+        sarathi::report::timeline::write_chrome_trace(path, &res.events)?;
+        println!("timeline: {} events -> {}", res.events.len(), path.display());
+    }
     report_latency(&res.latency, &res.metrics, json_out.as_deref())
 }
 
@@ -1178,6 +1253,7 @@ struct SimOpts {
     prefix: PrefixOpts,
     wait: WaitOpts,
     json_out: Option<PathBuf>,
+    trace_out: Option<PathBuf>,
 }
 
 /// Cluster-mode simulate: `replicas` identical PP=`pp` LLaMA-13B replica
@@ -1210,6 +1286,7 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         prefix,
         wait,
         json_out,
+        trace_out,
     } = o;
     let model = ModelConfig::llama13b();
     if model.n_layers % pp != 0 {
@@ -1258,8 +1335,11 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         }
     );
 
-    let cluster =
+    let mut cluster =
         ClusterSim::new(d.clone()).with_swap_cost(SwapCost::for_deployment(&d, preemption));
+    if trace_out.is_some() {
+        cluster = cluster.with_trace_cap(CLI_TRACE_CAP);
+    }
     let mut router = router_kind.build(spill_factor);
     let t0 = std::time::Instant::now();
     let res = cluster.run_topology(
@@ -1309,6 +1389,10 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
         res.peak_kv_blocks_per_replica(),
         res.mean_outstanding.iter().map(|x| x.round() as i64).collect::<Vec<_>>(),
     );
+    println!(
+        "per_replica bubble_s={:?}",
+        res.replica_bubbles().iter().map(|b| (b * 1e3).round() / 1e3).collect::<Vec<_>>(),
+    );
     let lat = res.latency();
     let pct = |s: &sarathi::util::Summary| (s.percentile(50.0) * 1e3, s.percentile(99.0) * 1e3);
     let (t50, t99) = pct(&lat.ttft);
@@ -1347,6 +1431,11 @@ fn simulate_cluster(o: SimOpts) -> Result<()> {
                 times.percentile(99.0) * 1e3,
             );
         }
+    }
+    if let Some(path) = &trace_out {
+        println!("{}", sarathi::coordinator::trace::breakdown_summary(&res.breakdowns));
+        sarathi::report::timeline::write_chrome_trace(path, &res.events)?;
+        println!("timeline: {} events -> {}", res.events.len(), path.display());
     }
     if let Some(path) = json_out {
         res.write_jsonl(&path)?;

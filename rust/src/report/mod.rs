@@ -1,5 +1,10 @@
 //! Table/CSV reporting for the figure harness: aligned console tables that
 //! mirror the paper's rows, plus CSV files under out/ for plotting.
+//!
+//! [`timeline`] renders the coordinator's lifecycle event stream as a
+//! Chrome trace-event / Perfetto JSON timeline (`--trace-out`).
+
+pub mod timeline;
 
 use std::fmt::Write as _;
 use std::fs;

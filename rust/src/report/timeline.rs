@@ -1,0 +1,288 @@
+//! Chrome trace-event / Perfetto JSON export of the coordinator's
+//! lifecycle event stream (`--trace-out trace.json`).
+//!
+//! Layout follows the trace-event convention: each replica is a
+//! *process* (`pid`), each pp stream / pipeline stage is a *thread*
+//! (`tid`), and each interconnect transfer lane is an extra thread
+//! under the SOURCE replica's process (`tid = 1000 + dst`). Batch
+//! executions, bubbles and KV handoffs are complete (`"ph":"X"`) spans;
+//! request lifecycle edges are instants (`"ph":"i"`). Per-token
+//! `TokenEmitted` events are deliberately NOT exported — at one instant
+//! per generated token they dominate file size while the batch spans
+//! already show decode cadence; the decomposition consumes them
+//! upstream instead.
+//!
+//! Times are simulated seconds scaled to the format's microseconds.
+//! Open the file at <https://ui.perfetto.dev> or `chrome://tracing`.
+
+use std::path::Path;
+
+use crate::coordinator::metrics::{ensure_parent_dir, JSONL_SCHEMA_VERSION};
+use crate::coordinator::trace::{EventKind, TraceEvent};
+
+/// Transfer-lane threads live at `tid = TRANSFER_TID_BASE + dst` under
+/// the source replica's process, clear of real stream/stage lanes.
+pub const TRANSFER_TID_BASE: u64 = 1000;
+
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+/// Render `events` as one Chrome trace-event JSON document. Events
+/// should already be canonically merged ([`merge_streams`]) — the
+/// format itself is order-insensitive, but a deterministic input keeps
+/// the output byte-stable across `--threads`.
+///
+/// [`merge_streams`]: crate::coordinator::trace::merge_streams
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    use std::collections::BTreeSet;
+    use std::fmt::Write as _;
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    let mut tids: BTreeSet<(u32, u64)> = BTreeSet::new();
+    for e in events {
+        if let EventKind::KvTransfer { src, dst, .. } = &e.kind {
+            pids.insert(*src as u32);
+            tids.insert((*src as u32, TRANSFER_TID_BASE + *dst as u64));
+        } else {
+            pids.insert(e.replica);
+            tids.insert((e.replica, e.lane as u64));
+        }
+    }
+    let mut out = String::with_capacity(256 + events.len() * 128);
+    let _ = write!(
+        out,
+        "{{\"schema_version\":{JSONL_SCHEMA_VERSION},\"displayTimeUnit\":\"ms\",\
+         \"traceEvents\":["
+    );
+    let mut first = true;
+    let mut emit = |out: &mut String, first: &mut bool, obj: String| {
+        if !*first {
+            out.push(',');
+        }
+        *first = false;
+        out.push_str(&obj);
+    };
+    // process / thread naming metadata first (viewers apply it anywhere,
+    // but leading metadata keeps the file skimmable)
+    for &pid in &pids {
+        emit(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\
+                 \"args\":{{\"name\":\"replica {pid}\"}}}}"
+            ),
+        );
+    }
+    for &(pid, tid) in &tids {
+        let name = if tid >= TRANSFER_TID_BASE {
+            format!("kv-transfer \u{2192} replica {}", tid - TRANSFER_TID_BASE)
+        } else {
+            format!("stream {tid}")
+        };
+        emit(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{name}\"}}}}"
+            ),
+        );
+    }
+    for e in events {
+        let (pid, tid) = (e.replica, e.lane as u64);
+        let obj = match &e.kind {
+            EventKind::BatchSpan {
+                batch,
+                end,
+                prefill_tokens,
+                decode_tokens,
+                n_prefill,
+                n_decode,
+                budget_capped,
+            } => format!(
+                "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"name\":\"batch {batch}\",\"cat\":\"batch\",\"args\":{{\
+                 \"prefill_tokens\":{prefill_tokens},\"decode_tokens\":{decode_tokens},\
+                 \"n_prefill\":{n_prefill},\"n_decode\":{n_decode},\
+                 \"budget_capped\":{budget_capped}}}}}",
+                us(e.at),
+                us(end - e.at),
+            ),
+            EventKind::Bubble { end, class } => format!(
+                "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"name\":\"{}\",\"cat\":\"bubble\",\"args\":{{\"class\":\"{}\"}}}}",
+                us(e.at),
+                us(end - e.at),
+                class.as_str(),
+                class.as_str(),
+            ),
+            EventKind::KvTransfer { request, src, dst, end } => format!(
+                "{{\"ph\":\"X\",\"pid\":{src},\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"name\":\"kv req {request}\",\"cat\":\"kv-transfer\",\"args\":{{\
+                 \"request\":{request},\"src\":{src},\"dst\":{dst}}}}}",
+                TRANSFER_TID_BASE + *dst as u64,
+                us(e.at),
+                us(end - e.at),
+            ),
+            EventKind::Arrived { request } => lifecycle(pid, tid, e.at, "arrived", *request, ""),
+            EventKind::Queued { request } => lifecycle(pid, tid, e.at, "queued", *request, ""),
+            EventKind::PrefixWaitStart { request, hash } => lifecycle(
+                pid,
+                tid,
+                e.at,
+                "prefix-wait-start",
+                *request,
+                &format!(",\"hash\":{hash}"),
+            ),
+            EventKind::PrefixWaitEnd { request, hash, fallback } => lifecycle(
+                pid,
+                tid,
+                e.at,
+                "prefix-wait-end",
+                *request,
+                &format!(",\"hash\":{hash},\"fallback\":{fallback}"),
+            ),
+            EventKind::Admitted { request, shared_tokens, private_tokens } => lifecycle(
+                pid,
+                tid,
+                e.at,
+                "admitted",
+                *request,
+                &format!(",\"shared_tokens\":{shared_tokens},\"private_tokens\":{private_tokens}"),
+            ),
+            EventKind::Resumed { request, swap_tokens } => lifecycle(
+                pid,
+                tid,
+                e.at,
+                "resumed",
+                *request,
+                &format!(",\"swap_tokens\":{swap_tokens}"),
+            ),
+            EventKind::ChunkScheduled { request, batch, start, len } => lifecycle(
+                pid,
+                tid,
+                e.at,
+                "chunk",
+                *request,
+                &format!(",\"batch\":{batch},\"start\":{start},\"len\":{len}"),
+            ),
+            EventKind::Preempted { request, evicted_tokens } => lifecycle(
+                pid,
+                tid,
+                e.at,
+                "preempted",
+                *request,
+                &format!(",\"evicted_tokens\":{evicted_tokens}"),
+            ),
+            EventKind::FirstToken { request } => {
+                lifecycle(pid, tid, e.at, "first-token", *request, "")
+            }
+            EventKind::TokenEmitted { .. } => continue,
+            EventKind::Completed { request } => {
+                lifecycle(pid, tid, e.at, "completed", *request, "")
+            }
+            EventKind::Rejected { request } => lifecycle(pid, tid, e.at, "rejected", *request, ""),
+        };
+        emit(&mut out, &mut first, obj);
+    }
+    out.push_str("]}");
+    out
+}
+
+fn lifecycle(pid: u32, tid: u64, at: f64, name: &str, request: usize, extra: &str) -> String {
+    format!(
+        "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"s\":\"t\",\
+         \"name\":\"{name}\",\"cat\":\"lifecycle\",\"args\":{{\"request\":{request}{extra}}}}}",
+        us(at),
+    )
+}
+
+/// Write the Chrome trace for `events` to `path`.
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    ensure_parent_dir(path)?;
+    std::fs::write(path, chrome_trace_json(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trace::BubbleClass;
+
+    fn ev(at: f64, replica: u32, lane: u32, seq: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent { at, replica, lane, seq, kind }
+    }
+
+    #[test]
+    fn export_names_processes_threads_and_span_categories() {
+        let events = vec![
+            ev(
+                0.0,
+                0,
+                0,
+                0,
+                EventKind::BatchSpan {
+                    batch: 0,
+                    end: 0.5,
+                    prefill_tokens: 256,
+                    decode_tokens: 4,
+                    n_prefill: 1,
+                    n_decode: 4,
+                    budget_capped: false,
+                },
+            ),
+            ev(0.5, 0, 0, 1, EventKind::Bubble { end: 0.75, class: BubbleClass::KvStarved }),
+            ev(0.2, 1, 0, 0, EventKind::KvTransfer { request: 3, src: 1, dst: 2, end: 0.4 }),
+            ev(0.1, 0, 0, 2, EventKind::FirstToken { request: 7 }),
+            ev(0.15, 0, 0, 3, EventKind::TokenEmitted { request: 7 }),
+        ];
+        let json = chrome_trace_json(&events);
+        assert!(json.starts_with("{\"schema_version\":2,"));
+        assert!(json.contains("\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        // processes 0 and 1 named; transfer lane thread under the source
+        assert!(json.contains("\"args\":{\"name\":\"replica 0\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"replica 1\"}"));
+        assert!(json.contains(&format!("\"tid\":{}", TRANSFER_TID_BASE + 2)));
+        // spans carry their categories and annotations
+        assert!(json.contains("\"cat\":\"batch\""));
+        assert!(json.contains("\"prefill_tokens\":256"));
+        assert!(json.contains("\"cat\":\"bubble\""));
+        assert!(json.contains("\"class\":\"kv-starved\""));
+        assert!(json.contains("\"cat\":\"kv-transfer\""));
+        // batch span: ts 0, dur 0.5 s = 500000 µs
+        assert!(json.contains("\"dur\":500000.000"));
+        // lifecycle instant present; per-token events skipped
+        assert!(json.contains("\"name\":\"first-token\""));
+        assert!(!json.contains("token-emitted"));
+        // balanced braces/brackets — cheap structural sanity
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn empty_stream_is_still_a_valid_document() {
+        let json = chrome_trace_json(&[]);
+        assert_eq!(
+            json,
+            format!(
+                "{{\"schema_version\":{JSONL_SCHEMA_VERSION},\
+                 \"displayTimeUnit\":\"ms\",\"traceEvents\":[]}}"
+            )
+        );
+    }
+
+    #[test]
+    fn write_creates_parent_dirs_and_the_file() {
+        let dir = std::env::temp_dir().join("sarathi_test_timeline");
+        let path = dir.join("nested").join("trace.json");
+        let events =
+            vec![ev(1.0, 0, 0, 0, EventKind::Bubble { end: 2.0, class: BubbleClass::NoWork })];
+        write_chrome_trace(&path, &events).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"no-work\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -40,6 +40,7 @@ use super::pipeline::{PipelineResult, PipelineRun, PipelineSim, StallOutcome};
 use super::router::{LeastOutstandingTokens, ReplicaView, RoundRobin, RoutePolicy};
 use super::transfer::CopyFabric;
 use crate::config::Deployment;
+use crate::coordinator::trace as ctrace;
 use crate::coordinator::{KvExport, KvManager, Scheduler};
 use crate::costmodel::CostModel;
 use crate::profiler::Profiler;
@@ -126,6 +127,18 @@ pub struct ClusterResult {
     pub mean_outstanding: Vec<f64>,
     /// Name of the routing policy that produced this result.
     pub router: &'static str,
+    /// Canonically-merged lifecycle event stream across all replicas
+    /// (plus synthesized `KvTransfer` spans from the fabric on handoff
+    /// topologies). Empty unless the cluster ran with
+    /// [`ClusterSim::with_trace_cap`]. Request ids inside events are
+    /// stream-pool-local; `(replica, lane)` identifies the pool.
+    pub events: Vec<ctrace::TraceEvent>,
+    /// Per-request causal latency decomposition, `request` remapped to
+    /// the ORIGINAL spec index; on handoff topologies the prefill-side
+    /// decomposition is stitched with the fabric's per-request transfer
+    /// latency and the decode-side completion. Populated only when
+    /// tracing was enabled (untraced runs stay byte-identical).
+    pub breakdowns: Vec<ctrace::LatencyBreakdown>,
     /// Lazily-computed sort of `completions` — an internal memo so curve
     /// and `time_to_complete` queries stop cloning + sorting per call.
     /// Public only so external struct literals with `..Default::default()`
@@ -231,6 +244,12 @@ impl ClusterResult {
         self.per_replica.iter().map(|r| r.metrics.peak_kv_blocks_in_use()).collect()
     }
 
+    /// Total stage-idle (bubble) time per replica — the per-replica view
+    /// the simulate report prints next to utilization.
+    pub fn replica_bubbles(&self) -> Vec<f64> {
+        self.per_replica.iter().map(|r| r.total_bubble).collect()
+    }
+
     /// Load imbalance: max / mean of the per-replica mean outstanding
     /// work ([`mean_outstanding`](Self::mean_outstanding)). 1.0 is perfect
     /// balance; an idle cluster (all means zero) reports 1.0.
@@ -277,6 +296,11 @@ impl ClusterResult {
                 }
                 writeln!(out, "{}", fabric.summary_jsonl(self.makespan))?;
             }
+        }
+        // traced runs append the per-request latency decomposition;
+        // untraced runs carry no breakdowns and stay byte-identical
+        for bd in &self.breakdowns {
+            writeln!(out, "{}", bd.to_jsonl())?;
         }
         Ok(())
     }
@@ -326,6 +350,10 @@ impl PartialOrd for EventKey {
 pub struct ClusterSim {
     pub deployment: Deployment,
     pub sims: Vec<PipelineSim>,
+    /// Per-stream lifecycle-trace sink capacity; `None` (default) keeps
+    /// every pool's sink disabled — the zero-cost path, bitwise
+    /// identical to pre-trace runs.
+    pub trace_cap: Option<usize>,
 }
 
 impl ClusterSim {
@@ -335,7 +363,15 @@ impl ClusterSim {
         let sims = (0..deployment.parallel.replicas)
             .map(|_| PipelineSim::new(profiler.clone(), deployment.parallel.pp))
             .collect();
-        ClusterSim { deployment, sims }
+        ClusterSim { deployment, sims, trace_cap: None }
+    }
+
+    /// Capture lifecycle events on every replica (sink capacity `cap`
+    /// events per stream) and populate [`ClusterResult::events`] /
+    /// [`ClusterResult::breakdowns`].
+    pub fn with_trace_cap(mut self, cap: usize) -> Self {
+        self.trace_cap = Some(cap);
+        self
     }
 
     /// Price the preemption path on every replica's simulator (seed
@@ -488,6 +524,11 @@ impl ClusterSim {
         for sim in &self.sims {
             runs.push(PipelineRun::new(sim, make_kv(), per_stream_cap, &mut make_sched));
         }
+        if let Some(cap) = self.trace_cap {
+            for (ri, run) in runs.iter_mut().enumerate() {
+                run.enable_trace(ri as u32, cap);
+            }
+        }
         // per-replica: run-local result index → original spec index
         let mut globals: Vec<Vec<usize>> = vec![Vec::new(); r];
         let mut replica_of = vec![0usize; specs.len()];
@@ -543,16 +584,28 @@ impl ClusterSim {
             router: router.name(),
             ..Default::default()
         };
+        let mut event_streams: Vec<Vec<ctrace::TraceEvent>> = Vec::new();
         for (ri, run) in runs.into_iter().enumerate() {
-            let res = run.finish();
+            let mut res = run.finish();
             for (local, &g) in globals[ri].iter().enumerate() {
                 result.completions[g] = res.completions[local];
                 // NaN first token (rejected request) propagates into TTFT
                 result.ttft[g] = res.first_tokens[local] - specs[g].arrival;
                 result.max_tbt[g] = res.max_tbt[local];
             }
+            if self.trace_cap.is_some() {
+                event_streams.push(std::mem::take(&mut res.events));
+                for mut bd in std::mem::take(&mut res.breakdowns) {
+                    bd.request = globals[ri][bd.request];
+                    result.breakdowns.push(bd);
+                }
+            }
             result.makespan = result.makespan.max(res.makespan);
             result.per_replica.push(res);
+        }
+        if self.trace_cap.is_some() {
+            result.events = ctrace::merge_streams(event_streams);
+            result.breakdowns.sort_by_key(|b| b.request);
         }
         result
     }
@@ -656,6 +709,11 @@ impl ClusterSim {
             // preemption transfers join the KV handoffs on the copy stream
             run.set_overlap_swaps(true);
             runs.push(run);
+        }
+        if let Some(cap) = self.trace_cap {
+            for (ri, run) in runs.iter_mut().enumerate() {
+                run.enable_trace(ri as u32, cap);
+            }
         }
         let mut fabric = CopyFabric::for_deployment(&self.deployment, r);
         // run-local push index → role (which global request, which phase)
@@ -768,8 +826,12 @@ impl ClusterSim {
         };
         let mut rep = crate::coordinator::LatencyReport::default();
         let mut copy_busy = 0.0;
+        let mut event_streams: Vec<Vec<ctrace::TraceEvent>> = Vec::new();
+        // raw prefill-side breakdowns, stitched after the loop once every
+        // replica's max_tbt / completion data has landed in `result`
+        let mut raw_bds: Vec<(usize, Vec<ctrace::LatencyBreakdown>)> = Vec::new();
         for (ri, run) in runs.into_iter().enumerate() {
-            let res = run.finish();
+            let mut res = run.finish();
             for (local, role) in locals[ri].iter().enumerate() {
                 if let HandoffRole::Decode(g) = *role {
                     // the stitched max gap: push_imported stamped the
@@ -777,6 +839,10 @@ impl ClusterSim {
                     // shows up in the first decode gap
                     result.max_tbt[g] = res.max_tbt[local];
                 }
+            }
+            if self.trace_cap.is_some() {
+                event_streams.push(std::mem::take(&mut res.events));
+                raw_bds.push((ri, std::mem::take(&mut res.breakdowns)));
             }
             // TTFT lives on prefill pools (true arrivals), TBT on decode
             // pools (stitched gaps); normalized is rebuilt below because
@@ -798,6 +864,47 @@ impl ClusterSim {
         }
         result.latency_override = Some(rep);
         result.transfer_busy = fabric.busy_time() + copy_busy;
+        if self.trace_cap.is_some() {
+            // stitch the cross-stage decomposition: the prefill-side
+            // breakdown carries queue/prefix/swap/compute, the fabric
+            // record the wire time, the decode replica the completion
+            for (ri, bds) in raw_bds {
+                for bd in bds {
+                    if let HandoffRole::Prefill(g) = locals[ri][bd.request] {
+                        let done = result.completions[g];
+                        let mut bd = bd.with_handoff(
+                            result.kv_transfer_time[g],
+                            (!done.is_nan()).then_some(done),
+                        );
+                        bd.request = g;
+                        bd.decode_len = specs[g].decode_len;
+                        bd.max_tbt = result.max_tbt[g];
+                        result.breakdowns.push(bd);
+                    }
+                }
+            }
+            result.breakdowns.sort_by_key(|b| b.request);
+            // the fabric's transfer records become spans on the source
+            // replica's transfer lane — one synthesized stream, merged
+            // under the same canonical (time, replica, lane, seq) order
+            let mut wire: Vec<ctrace::TraceEvent> = Vec::with_capacity(fabric.records.len());
+            for (i, rec) in fabric.records.iter().enumerate() {
+                wire.push(ctrace::TraceEvent {
+                    at: rec.start,
+                    replica: rec.src as u32,
+                    lane: 0,
+                    seq: i as u64,
+                    kind: ctrace::EventKind::KvTransfer {
+                        request: rec.request,
+                        src: rec.src,
+                        dst: rec.dst,
+                        end: rec.finish,
+                    },
+                });
+            }
+            event_streams.push(wire);
+            result.events = ctrace::merge_streams(event_streams);
+        }
         result.fabric = Some(fabric);
         result
     }

@@ -55,6 +55,9 @@ use crate::coordinator::{
     Batch, IterationRecord, KvManager, LatencyReport, Metrics, RequestPool, ResidencyDigest,
     Scheduler, StageKv, StepApplier, SwapCost,
 };
+// aliased: `trace::TraceEvent` (lifecycle events) is a different type from
+// this module's Fig.-5 schedule `TraceEvent`
+use crate::coordinator::trace as ctrace;
 use crate::costmodel::BatchShape;
 use crate::profiler::Profiler;
 use crate::util::Summary;
@@ -114,6 +117,17 @@ pub struct PipelineResult {
     pub metrics: Metrics,
     /// Per-stage schedule trace (recorded when `PipelineSim::trace` is on).
     pub trace: Vec<TraceEvent>,
+    /// Canonically-merged lifecycle event stream from every per-stream
+    /// sink — empty unless [`PipelineRun::enable_trace`] was called.
+    /// Request ids inside events are stream-pool-local; the event's
+    /// `(replica, lane)` identifies the pool.
+    pub events: Vec<ctrace::TraceEvent>,
+    /// Per-request TTFT/e2e latency decomposition (always computed at
+    /// [`PipelineRun::finish`]; `request` remapped to the run-local
+    /// push-order index). Imported decode-side requests are excluded —
+    /// their TTFT belongs to the prefill replica; the cluster driver
+    /// stitches the disaggregated decomposition itself.
+    pub breakdowns: Vec<ctrace::LatencyBreakdown>,
     /// Lazily-computed sort of `completions` — an internal memo so curve
     /// queries stop cloning + sorting per call. Public only so external
     /// struct literals with `..Default::default()` keep compiling; leave
@@ -167,6 +181,10 @@ enum Event {
         started_at: f64,
         stage_time: f64,
         swap_in: f64,
+        /// Schedule-order micro-batch id, carried so the apply-side
+        /// `ChunkScheduled` events agree with the schedule-side
+        /// `BatchSpan` ids even when applies reorder.
+        batch_id: u64,
         prefix_hits: usize,
         prefix_partial_hits: usize,
         prefix_partial_hit_tokens: usize,
@@ -271,12 +289,33 @@ impl PipelineSim {
         specs: &[RequestSpec],
         kv: KvManager,
         per_stream_cap: Option<usize>,
+        make_sched: F,
+    ) -> PipelineResult
+    where
+        F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
+    {
+        self.run_shared_traced(specs, kv, per_stream_cap, make_sched, None)
+    }
+
+    /// [`run_shared`](Self::run_shared) with the lifecycle event bus on:
+    /// `trace_cap` sizes each stream's sink (replica id 0) and the
+    /// merged stream lands in [`PipelineResult::events`]. `None` keeps
+    /// every sink disabled — identical to `run_shared`.
+    pub fn run_shared_traced<'a, F>(
+        &self,
+        specs: &[RequestSpec],
+        kv: KvManager,
+        per_stream_cap: Option<usize>,
         mut make_sched: F,
+        trace_cap: Option<usize>,
     ) -> PipelineResult
     where
         F: FnMut() -> Box<dyn Scheduler + Send + 'a>,
     {
         let mut run = PipelineRun::new(self, kv, per_stream_cap, &mut make_sched);
+        if let Some(cap) = trace_cap {
+            run.enable_trace(0, cap);
+        }
         for spec in specs {
             run.push(spec.clone());
         }
@@ -424,6 +463,25 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
     /// Swap transfer time accumulated on the copy stream so far.
     pub fn copy_busy(&self) -> f64 {
         self.swap_busy
+    }
+
+    /// Turn on lifecycle tracing for every stream pool: one pre-sized
+    /// sink per stream, identified as `(replica, stream)`. Call before
+    /// the first push so arrival events are captured. No-op cost
+    /// elsewhere: pools default to a disabled sink.
+    pub fn enable_trace(&mut self, replica: u32, cap: usize) {
+        for (si, pool) in self.pools.iter_mut().enumerate() {
+            pool.trace = ctrace::TraceSink::enabled(cap);
+            pool.trace.set_identity(replica, si as u32);
+        }
+    }
+
+    /// Aggregate (high-water, dropped) across the per-stream sinks —
+    /// the soak/cluster drivers report buffer pressure from these.
+    pub fn trace_pressure(&self) -> (usize, u64) {
+        let hw = self.pools.iter().map(|p| p.trace.high_water()).max().unwrap_or(0);
+        let dropped = self.pools.iter().map(|p| p.trace.dropped()).sum();
+        (hw, dropped)
     }
 
     /// Add a request to the run (streams are filled round-robin in push
@@ -630,6 +688,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 started_at,
                 stage_time,
                 swap_in,
+                batch_id,
                 prefix_hits,
                 prefix_partial_hits,
                 prefix_partial_hit_tokens,
@@ -643,6 +702,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 started_at,
                 stage_time,
                 swap_in,
+                batch_id,
                 prefix_hits,
                 prefix_partial_hits,
                 prefix_partial_hit_tokens,
@@ -694,6 +754,8 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         let shape = batch.shape(&self.pools[si]);
         let stage_time = self.sim.profiler.predict(&shape);
         let tokens = shape.total_tokens();
+        let batch_id = self.result.micro_batches as u64;
+        let budget_capped = self.scheds[si].token_budget().is_some_and(|b| tokens >= b);
         // a resumed victim's KV transfer delays entry to stage 0
         let t_swap_in = std::mem::take(&mut self.pending_swap_in[si]);
         let t_prefix_hits = std::mem::take(&mut self.pending_prefix_hits[si]);
@@ -711,9 +773,38 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
                 if gap > 0.0 {
                     bubble_this_mb += gap;
                     self.result.total_bubble += gap;
+                    if self.pools[si].trace.is_enabled() {
+                        // a stage idling between consecutive micro-batches
+                        // is the pipeline-bubble class: waiting on the
+                        // barrier of an upstream/late micro-batch
+                        let idle_from = self.stage_free[j];
+                        self.pools[si].trace.emit_on(
+                            idle_from,
+                            j as u32,
+                            ctrace::EventKind::Bubble {
+                                end: start,
+                                class: ctrace::BubbleClass::BarrierWait,
+                            },
+                        );
+                    }
                 }
             }
             let end = start + stage_time;
+            if self.pools[si].trace.is_enabled() {
+                self.pools[si].trace.emit_on(
+                    start,
+                    j as u32,
+                    ctrace::EventKind::BatchSpan {
+                        batch: batch_id,
+                        end,
+                        prefill_tokens: shape.prefill_tokens(),
+                        decode_tokens: shape.decode_tokens(),
+                        n_prefill: shape.prefill.len(),
+                        n_decode: shape.decode.len(),
+                        budget_capped,
+                    },
+                );
+            }
             if self.sim.trace {
                 self.result.trace.push(TraceEvent {
                     micro_batch: self.result.micro_batches,
@@ -744,6 +835,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
             started_at: now,
             stage_time,
             swap_in: t_swap_in,
+            batch_id,
             prefix_hits: t_prefix_hits,
             prefix_partial_hits: t_partial_hits,
             prefix_partial_hit_tokens: t_partial_tokens,
@@ -762,6 +854,7 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         started_at: f64,
         stage_time: f64,
         swap_in: f64,
+        batch_id: u64,
         prefix_hits: usize,
         prefix_partial_hits: usize,
         prefix_partial_hit_tokens: usize,
@@ -781,13 +874,14 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         }
         // the engine-shared state transition: progress, token stamps,
         // completions, growth, cross-stream preemption
-        let effects = self.sim.applier.apply_guarded(
+        let effects = self.sim.applier.apply_traced(
             &mut self.pools,
             si,
             self.kv.pool_mut(),
             &batch,
             finish,
             &self.scratch_in_flight,
+            batch_id,
         );
         for local in &effects.finished {
             let g = self.global_ids[si][*local];
@@ -949,6 +1043,34 @@ impl<'a, 'b> PipelineRun<'a, 'b> {
         }
         self.result.copy_busy = self.swap_busy;
         self.result.latency = LatencyReport::from_pools(&self.pools);
+        // lifecycle events: drain every stream sink, canonical merge
+        if self.pools.iter().any(|p| p.trace.is_enabled()) {
+            let mut streams = Vec::with_capacity(self.pools.len());
+            for pool in &mut self.pools {
+                let mut v = Vec::new();
+                pool.trace.drain_into(&mut v);
+                streams.push(v);
+            }
+            self.result.events = ctrace::merge_streams(streams);
+        }
+        // causal latency decomposition, remapped to run-local indices;
+        // imported requests (first token stamped prefill-side, before
+        // this replica could even see the KV) are the cluster driver's
+        // to stitch — a local decomposition would go negative
+        for (si, pool) in self.pools.iter().enumerate() {
+            for r in pool.iter() {
+                if r.first_token_at.is_some_and(|t| t < r.arrival) {
+                    continue;
+                }
+                if let Some(mut bd) =
+                    ctrace::LatencyBreakdown::for_request(r, &self.sim.applier.swap, 0.0)
+                {
+                    bd.request = self.global_ids[si][r.id];
+                    self.result.breakdowns.push(bd);
+                }
+            }
+        }
+        self.result.breakdowns.sort_by_key(|b| b.request);
         self.result
     }
 }

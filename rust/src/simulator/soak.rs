@@ -128,6 +128,19 @@ pub struct SoakReport {
     /// Records evicted by the retain cap BEFORE the stream could drain
     /// them (a flush cadence too slow for the cap; the trace has a gap).
     pub jsonl_dropped: usize,
+    /// Lifecycle trace events drained from the pool's ring at flush
+    /// boundaries (0 when tracing is disabled).
+    pub trace_events_drained: usize,
+    /// Peak events the trace ring buffered between drains — the leak
+    /// detector's counter for the trace buffer (0 when disabled).
+    pub trace_high_water: usize,
+    /// Events the ring dropped for want of capacity (0 when disabled or
+    /// when `--flush-every` drains fast enough).
+    pub trace_dropped: usize,
+    /// The drained events themselves, in emission order — kept ONLY when
+    /// the caller enabled the pool's sink (a `--trace-out` run); bounded
+    /// soak runs without tracing never touch this.
+    pub events: Vec<crate::coordinator::trace::TraceEvent>,
 }
 
 impl SoakReport {
@@ -218,6 +231,15 @@ pub fn run_soak(
             s.flush()?;
             report.jsonl_records = s.written();
         }
+        // 1b. drain the lifecycle trace ring on the same cadence, so its
+        //     footprint stays bounded by one window like the records
+        if engine.pool.trace.is_enabled() {
+            report.trace_high_water =
+                report.trace_high_water.max(engine.pool.trace.high_water());
+            report.trace_dropped = engine.pool.trace.dropped() as usize;
+            engine.pool.trace.drain_into(&mut report.events);
+            report.trace_events_drained = report.events.len();
+        }
         // 2. retire terminal requests off the pool front, harvesting their
         //    latency samples into the streaming summaries
         for r in engine.pool.retire_terminal() {
@@ -266,7 +288,7 @@ pub fn run_soak(
         if opts.progress {
             println!(
                 "[soak] t={:.1}s/{:.0}s completed={} active={} retained(req={} rec={} tbt={}) \
-                 p99_tbt={:.4}s budget={}",
+                 p99_tbt={:.4}s budget={} events={} trace_hw={}",
                 engine.now,
                 opts.horizon,
                 report.completed,
@@ -276,6 +298,8 @@ pub fn run_soak(
                 engine.pool.tbt_summary().retained_samples(),
                 p99,
                 budget,
+                report.trace_events_drained,
+                report.trace_high_water,
             );
         }
         if next_flush >= opts.horizon {

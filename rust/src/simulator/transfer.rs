@@ -17,7 +17,7 @@
 //! ownership boundary; `tests/cluster_disagg.rs` asserts the books close.
 
 use crate::config::Deployment;
-use crate::coordinator::KvExport;
+use crate::coordinator::{KvExport, JSONL_SCHEMA_VERSION};
 
 /// One KV handoff on the wire: request, endpoints, size and timing.
 /// `start − ready_at` is queueing on the pair's lane; `finish − ready_at`
@@ -50,7 +50,8 @@ impl TransferRecord {
         format!(
             "{{\"transfer\":{{\"request\":{},\"src\":{},\"dst\":{},\
              \"kv_tokens\":{},\"bytes\":{:.1},\"ready_at\":{:.6},\
-             \"start\":{:.6},\"finish\":{:.6},\"kv_transfer_time\":{:.6}}}}}",
+             \"start\":{:.6},\"finish\":{:.6},\"kv_transfer_time\":{:.6},\
+             \"schema_version\":{}}}}}",
             self.request,
             self.src,
             self.dst,
@@ -60,6 +61,7 @@ impl TransferRecord {
             self.start,
             self.finish,
             self.kv_transfer_time(),
+            JSONL_SCHEMA_VERSION,
         )
     }
 }
@@ -206,11 +208,12 @@ impl CopyFabric {
     pub fn summary_jsonl(&self, makespan: f64) -> String {
         format!(
             "{{\"transfer_stream\":{{\"transfers\":{},\"bytes\":{:.1},\
-             \"busy\":{:.6},\"utilization\":{:.6}}}}}",
+             \"busy\":{:.6},\"utilization\":{:.6},\"schema_version\":{}}}}}",
             self.records.len(),
             self.total_bytes(),
             self.busy_time(),
             self.utilization(makespan),
+            JSONL_SCHEMA_VERSION,
         )
     }
 }

@@ -1,0 +1,386 @@
+//! PR-10 acceptance: event-sourced request tracing. Four claims:
+//!
+//! 1. **Conservation** — the per-request latency decomposition
+//!    (`ttft = queue_wait + prefix_wait + swap + kv_transfer + compute`,
+//!    `e2e = ttft + decode`) reproduces the measured TTFT / end-to-end
+//!    latency BITWISE on the engine, pipeline and disaggregated paths,
+//!    across 20 seeds — `to_bits`, not tolerances (the compute/decode
+//!    components are conservation-checked residuals by construction, so
+//!    any divergence is a bookkeeping bug, not float noise).
+//! 2. **Determinism** — the canonically-merged lifecycle event stream
+//!    and the breakdowns are identical at `--threads {1, 2, 4}` on both
+//!    the routed colocated cluster and the disaggregated handoff driver
+//!    (the PR-5/6 invariant extended to the trace layer).
+//! 3. **Zero-cost toggle** — enabling tracing changes NO simulation
+//!    output: completions/TTFT/TBT bitwise identical with the sink on
+//!    and off; untraced results carry no events/breakdowns so their
+//!    JSONL stays byte-identical to the pre-trace schema.
+//! 4. **Export validity** — the Chrome-trace export is one well-formed
+//!    JSON document with process/thread metadata, non-empty batch and
+//!    bubble spans, kv-transfer lanes on disagg, and the JSONL schema
+//!    version on every record (round-tripped through a file).
+
+use sarathi::config::{Deployment, GpuConfig, ModelConfig, ParallelConfig};
+use sarathi::coordinator::sched::SarathiScheduler;
+use sarathi::coordinator::trace::breakdowns_from_pools;
+use sarathi::coordinator::{
+    Engine, EventKind, KvManager, RequestPool, Scheduler, SimExecutor, TraceSink,
+};
+use sarathi::costmodel::CostModel;
+use sarathi::profiler::Profiler;
+use sarathi::report::timeline::chrome_trace_json;
+use sarathi::simulator::{ClusterResult, ClusterSim, PipelineSim, RoundRobin, Topology};
+use sarathi::util::Rng;
+use sarathi::workload::{with_poisson_arrivals, zipf_population, RequestSpec};
+
+const SEEDS: u64 = 20;
+const THREADS: [usize; 3] = [1, 2, 4];
+const TRACE_CAP: usize = 1 << 18;
+
+/// Long prompts with real decode phases (the cluster_disagg shape) at a
+/// size small enough to sweep 20 seeds x 3 thread counts.
+fn workload(seed: u64, n: usize, rate: f64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let pop = zipf_population(&mut rng, n, 0.4, 1024, 2048, 16.0);
+    with_poisson_arrivals(&mut rng, pop, rate)
+}
+
+fn deployment(replicas: usize) -> Deployment {
+    let mut gpu = GpuConfig::a6000();
+    gpu.interconnect_gbps = 200.0;
+    Deployment::new(ModelConfig::llama13b(), gpu, 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, 1).with_replicas(replicas))
+}
+
+fn run_cluster(
+    topology: Topology,
+    pop: &[RequestSpec],
+    threads: usize,
+    traced: bool,
+) -> ClusterResult {
+    let mut cluster = ClusterSim::new(deployment(4));
+    if traced {
+        cluster = cluster.with_trace_cap(TRACE_CAP);
+    }
+    let mut router = RoundRobin::default();
+    cluster.run_topology(
+        topology,
+        pop,
+        &mut router,
+        || KvManager::new(12),
+        Some(12),
+        || Box::new(SarathiScheduler::new(512, 12, 128)) as Box<dyn Scheduler + Send>,
+        threads,
+    )
+}
+
+fn disagg() -> Topology {
+    Topology::Disagg { prefill_replicas: 1 }
+}
+
+/// One ULP of a positive finite float.
+fn ulp(x: f64) -> f64 {
+    f64::from_bits(x.to_bits() + 1) - x
+}
+
+/// Assert the component re-sum reproduces `target` bitwise or, on a
+/// round-to-even tie (where no residual can), within one ULP.
+fn assert_resum_tight(resum: f64, target: f64, what: &str) {
+    if resum.to_bits() != target.to_bits() {
+        assert!(
+            (resum - target).abs() <= 2.0 * ulp(target),
+            "{what}: component re-sum {resum} drifted past 2 ULP from {target}"
+        );
+    }
+}
+
+/// Assert every breakdown in `res` reproduces the cluster's measured
+/// TTFT and end-to-end latency bitwise, with a tight component re-sum.
+fn assert_cluster_conservation(res: &ClusterResult, pop: &[RequestSpec], tag: &str) {
+    assert!(!res.breakdowns.is_empty(), "{tag}: traced run must carry breakdowns");
+    for bd in &res.breakdowns {
+        let g = bd.request;
+        let measured_ttft = res.ttft[g];
+        assert!(!measured_ttft.is_nan(), "{tag}: breakdown for a request with no first token");
+        assert_eq!(
+            bd.total_ttft().to_bits(),
+            measured_ttft.to_bits(),
+            "{tag} request {g}: decomposition does not conserve TTFT \
+             ({} vs measured {measured_ttft})",
+            bd.total_ttft(),
+        );
+        assert_resum_tight(bd.resummed_ttft(), measured_ttft, tag);
+        if bd.completed {
+            let e2e = res.completions[g] - pop[g].arrival;
+            assert_eq!(
+                bd.total_e2e().to_bits(),
+                e2e.to_bits(),
+                "{tag} request {g}: decomposition does not conserve e2e"
+            );
+            assert_resum_tight(bd.resummed_e2e(), e2e, tag);
+        }
+    }
+}
+
+#[test]
+fn engine_decomposition_conserves_bitwise_across_seeds() {
+    for seed in 1..=SEEDS {
+        let pop = workload(seed, 40, 8.0);
+        let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048);
+        let mut pool = RequestPool::new();
+        pool.trace = TraceSink::enabled(TRACE_CAP);
+        for s in &pop {
+            pool.push(s.clone());
+        }
+        let mut e = Engine::new(
+            pool,
+            KvManager::new(12),
+            Box::new(SarathiScheduler::new(512, 12, 128)),
+            Box::new(SimExecutor::new(CostModel::for_deployment(&d))),
+        );
+        e.run();
+        let bds = breakdowns_from_pools(std::slice::from_ref(&e.pool), &e.applier.swap, None);
+        assert!(!bds.is_empty(), "seed {seed}: no breakdowns");
+        for bd in &bds {
+            let r = e.pool.get(bd.request);
+            let ttft = r.first_token_at.expect("breakdown implies a first token") - r.arrival;
+            assert_eq!(
+                bd.total_ttft().to_bits(),
+                ttft.to_bits(),
+                "seed {seed} request {}: TTFT not conserved",
+                bd.request
+            );
+            assert_resum_tight(bd.resummed_ttft(), ttft, "engine");
+            if let Some(done) = r.completed_at {
+                let e2e = done - r.arrival;
+                assert_eq!(
+                    bd.total_e2e().to_bits(),
+                    e2e.to_bits(),
+                    "seed {seed} request {}: e2e not conserved",
+                    bd.request
+                );
+                assert_resum_tight(bd.resummed_e2e(), e2e, "engine");
+            }
+        }
+        // the engine's sink saw the whole lifecycle: every first token has
+        // its FirstToken event, every batch its span
+        let events = e.pool.trace.drain();
+        assert!(events.iter().any(|ev| matches!(ev.kind, EventKind::BatchSpan { .. })));
+        assert!(events.iter().any(|ev| matches!(ev.kind, EventKind::FirstToken { .. })));
+    }
+}
+
+#[test]
+fn pipeline_decomposition_conserves_bitwise_across_seeds() {
+    let d = Deployment::new(ModelConfig::llama13b(), GpuConfig::a6000(), 2048)
+        .with_parallel(ParallelConfig::tp_pp(1, 2));
+    let profiler = Profiler::build(CostModel::for_deployment(&d), d.max_seq_len, 16);
+    let sim = PipelineSim::new(profiler, 2);
+    for seed in 1..=SEEDS {
+        let pop = workload(seed, 32, 6.0);
+        let res = sim.run_shared_traced(
+            &pop,
+            KvManager::new(24),
+            Some(12),
+            || Box::new(SarathiScheduler::new(512, 12, 128)) as Box<dyn Scheduler + Send>,
+            Some(TRACE_CAP),
+        );
+        assert!(!res.breakdowns.is_empty(), "seed {seed}: no breakdowns");
+        for bd in &res.breakdowns {
+            let ttft = res.first_tokens[bd.request] - pop[bd.request].arrival;
+            assert_eq!(
+                bd.total_ttft().to_bits(),
+                ttft.to_bits(),
+                "seed {seed} request {}: pipeline TTFT not conserved",
+                bd.request
+            );
+            assert_resum_tight(bd.resummed_ttft(), ttft, "pipeline");
+            if bd.completed {
+                let e2e = res.completions[bd.request] - pop[bd.request].arrival;
+                assert_eq!(
+                    bd.total_e2e().to_bits(),
+                    e2e.to_bits(),
+                    "seed {seed} request {}: pipeline e2e not conserved",
+                    bd.request
+                );
+                assert_resum_tight(bd.resummed_e2e(), e2e, "pipeline");
+            }
+        }
+        // pp=2 stages with uneven micro-batches: barrier-wait bubbles and
+        // per-stage batch spans must both appear in the merged stream
+        assert!(res
+            .events
+            .iter()
+            .any(|ev| matches!(ev.kind, EventKind::BatchSpan { .. })));
+    }
+}
+
+#[test]
+fn disagg_decomposition_conserves_and_stitches_the_handoff() {
+    for seed in 1..=SEEDS {
+        let pop = workload(seed, 32, 2.0);
+        let res = run_cluster(disagg(), &pop, 1, true);
+        assert_cluster_conservation(&res, &pop, &format!("disagg seed {seed}"));
+        // the stitched breakdowns carry the fabric's wire time
+        let moved: Vec<_> = res.breakdowns.iter().filter(|b| b.kv_transfer > 0.0).collect();
+        assert!(!moved.is_empty(), "seed {seed}: no handoff reached a breakdown");
+        for bd in moved {
+            assert_eq!(
+                bd.kv_transfer.to_bits(),
+                res.kv_transfer_time[bd.request].to_bits(),
+                "seed {seed}: breakdown wire time diverged from the cluster books"
+            );
+        }
+    }
+}
+
+#[test]
+fn merged_event_stream_is_identical_across_thread_counts() {
+    for (tag, topology) in [("colocated", Topology::Colocated), ("disagg", disagg())] {
+        for seed in [3u64, 7, 13, 19] {
+            let pop = workload(seed, 32, 2.0);
+            let base = run_cluster(topology, &pop, THREADS[0], true);
+            assert!(!base.events.is_empty(), "{tag} seed {seed}: no events traced");
+            // conservation holds on the routed path too, not just disagg
+            assert_cluster_conservation(&base, &pop, &format!("{tag} seed {seed}"));
+            for &threads in &THREADS[1..] {
+                let other = run_cluster(topology, &pop, threads, true);
+                assert_eq!(
+                    base.events, other.events,
+                    "{tag} seed {seed}: merged event stream diverged at threads={threads}"
+                );
+                assert_eq!(
+                    base.breakdowns, other.breakdowns,
+                    "{tag} seed {seed}: breakdowns diverged at threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tracing_toggle_changes_no_simulation_output() {
+    for (tag, topology) in [("colocated", Topology::Colocated), ("disagg", disagg())] {
+        let pop = workload(42, 48, 2.0);
+        let traced = run_cluster(topology, &pop, 2, true);
+        let untraced = run_cluster(topology, &pop, 2, false);
+        for (i, (a, b)) in traced.completions.iter().zip(&untraced.completions).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag} request {i}: completion diverged");
+        }
+        for (i, (a, b)) in traced.ttft.iter().zip(&untraced.ttft).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag} request {i}: ttft diverged");
+        }
+        for (i, (a, b)) in traced.max_tbt.iter().zip(&untraced.max_tbt).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag} request {i}: max_tbt diverged");
+        }
+        // the untraced result is schema-identical to the pre-trace layout:
+        // no events, no breakdown lines in its JSONL
+        assert!(untraced.events.is_empty());
+        assert!(untraced.breakdowns.is_empty());
+        assert!(!traced.events.is_empty());
+    }
+}
+
+// ---- export validity -------------------------------------------------
+
+/// Minimal structural JSON check: balanced braces/brackets outside of
+/// strings, no trailing garbage. Not a full parser — enough to catch a
+/// malformed emitter without a serde dependency.
+fn assert_balanced_json(doc: &str, tag: &str) {
+    let (mut brace, mut bracket) = (0i64, 0i64);
+    let mut in_str = false;
+    let mut escape = false;
+    for c in doc.chars() {
+        if escape {
+            escape = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escape = true,
+            '"' => in_str = !in_str,
+            '{' if !in_str => brace += 1,
+            '}' if !in_str => brace -= 1,
+            '[' if !in_str => bracket += 1,
+            ']' if !in_str => bracket -= 1,
+            _ => {}
+        }
+        assert!(brace >= 0 && bracket >= 0, "{tag}: closer before opener");
+    }
+    assert!(!in_str, "{tag}: unterminated string");
+    assert_eq!((brace, bracket), (0, 0), "{tag}: unbalanced JSON");
+}
+
+/// Extract `"key":<integer>` from a JSON line (first occurrence).
+fn json_int_field(line: &str, key: &str) -> Option<i64> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let digits: String =
+        line[at..].chars().take_while(|c| c.is_ascii_digit() || *c == '-').collect();
+    digits.parse().ok()
+}
+
+#[test]
+fn every_jsonl_record_round_trips_with_the_schema_version() {
+    let pop = workload(5, 32, 2.0);
+    let res = run_cluster(disagg(), &pop, 1, true);
+    let path = std::env::temp_dir()
+        .join(format!("sarathi_trace_obs_{}.jsonl", std::process::id()));
+    res.write_jsonl(&path).expect("write jsonl");
+    let text = std::fs::read_to_string(&path).expect("read jsonl back");
+    let _ = std::fs::remove_file(&path);
+
+    let mut kinds = std::collections::BTreeSet::new();
+    let mut lines = 0usize;
+    for line in text.lines() {
+        lines += 1;
+        assert!(line.starts_with('{') && line.ends_with('}'), "not an object: {line}");
+        assert_balanced_json(line, "jsonl line");
+        let v = json_int_field(line, "schema_version")
+            .unwrap_or_else(|| panic!("no schema_version in {line}"));
+        assert_eq!(
+            v,
+            sarathi::coordinator::metrics::JSONL_SCHEMA_VERSION as i64,
+            "stale schema_version in {line}"
+        );
+        // record kind = the top-level tag (transfer records nest a
+        // "request" field, so substring matching would be too loose)
+        for k in ["iter", "transfer", "request", "transfer_stream"] {
+            if line.starts_with(&format!("{{\"{k}\":")) {
+                kinds.insert(k);
+            }
+        }
+    }
+    assert!(lines > 0, "empty trace");
+    // iteration records, transfer records + summary, and the traced
+    // breakdowns all coexist in one stream
+    for k in ["iter", "transfer", "request"] {
+        assert!(kinds.contains(k), "missing {k} records in the merged JSONL");
+    }
+}
+
+#[test]
+fn chrome_trace_export_is_valid_with_bubbles_and_transfer_lanes() {
+    let pop = workload(9, 32, 2.0);
+    let res = run_cluster(disagg(), &pop, 1, true);
+    let doc = chrome_trace_json(&res.events);
+    assert_balanced_json(&doc, "chrome trace");
+    assert!(doc.starts_with('{') && doc.trim_end().ends_with('}'));
+    for needle in [
+        "\"traceEvents\":[",
+        "\"displayTimeUnit\":\"ms\"",
+        "\"schema_version\":",
+        "\"ph\":\"M\"",          // process/thread name metadata
+        "\"cat\":\"batch\"",     // iteration spans
+        "\"cat\":\"bubble\"",    // classified idle intervals
+        "\"cat\":\"kv-transfer\"", // fabric lanes (disagg)
+        "\"cat\":\"lifecycle\"", // per-request instants
+        "kv-transfer \u{2192} replica", // transfer thread naming
+    ] {
+        assert!(doc.contains(needle), "chrome trace missing {needle}");
+    }
+    // batch spans annotate their composition for the timeline tooltip
+    assert!(doc.contains("\"prefill_tokens\":"));
+    assert!(doc.contains("\"decode_tokens\":"));
+    // per-token events are deliberately kept OUT of the export
+    assert!(!doc.contains("token-emitted"));
+}
